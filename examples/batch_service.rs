@@ -1,0 +1,80 @@
+//! Batching service demo: mixed-size segmentation workload through the
+//! L3 coordinator — shape-bucket batching, worker pool, backpressure,
+//! per-job latency percentiles.
+//!
+//!   make artifacts && cargo run --release --example batch_service
+
+use repro::config::Config;
+use repro::coordinator::{Engine, Service};
+use repro::fcm::FcmParams;
+use repro::image::FeatureVector;
+use repro::phantom::{generate_slice, sized_dataset, PhantomConfig};
+use repro::util::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::new();
+    cfg.service.workers = 2;
+    cfg.service.max_batch = 4;
+    let params = FcmParams::from(&cfg.fcm);
+
+    let service = Service::start(&cfg)?;
+
+    // A mixed workload: full slices (one bucket), small crops (a smaller
+    // bucket) and brFCM jobs (CPU engine) interleaved — exercises batch
+    // formation across heterogeneous queues.
+    let mut tickets = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..6u64 {
+        let s = generate_slice(&PhantomConfig {
+            slice: 80 + (i as usize * 7) % 40,
+            seed: i,
+            ..PhantomConfig::default()
+        });
+        tickets.push(("slice/device", service.submit_image(&s.image, params, Engine::Device)?));
+
+        let crop = sized_dataset(12 * 1024, i);
+        tickets.push((
+            "crop/device",
+            service.submit_image(&crop.image, params, Engine::Device)?,
+        ));
+
+        tickets.push((
+            "slice/brfcm",
+            service.submit(FeatureVector::from_image(&s.image), params, Engine::BrFcm)?,
+        ));
+    }
+
+    let mut latencies = Vec::new();
+    let mut by_kind: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for (kind, t) in tickets {
+        let r = t.wait()?;
+        let total = r.queue_wait_s + r.service_s;
+        latencies.push(total);
+        by_kind.entry(kind).or_default().push(total);
+        println!(
+            "{kind:13} job {:2} worker {} batch {:2}: wait {:6.3}s service {:6.3}s iters {:3} centers {:?}",
+            r.id, r.worker, r.batch_id, r.queue_wait_s, r.service_s, r.iterations,
+            r.centers.iter().map(|c| c.round()).collect::<Vec<_>>()
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nper-kind latency (s):");
+    for (kind, lats) in &by_kind {
+        let s = Summary::of(lats);
+        println!(
+            "  {kind:13} mean {:.3}  p95 {:.3}  max {:.3}",
+            s.mean, s.p95, s.max
+        );
+    }
+    let s = Summary::of(&latencies);
+    println!(
+        "\noverall: {} jobs in {wall:.2}s ({:.2} jobs/s), latency mean {:.3}s p95 {:.3}s",
+        latencies.len(),
+        latencies.len() as f64 / wall,
+        s.mean,
+        s.p95
+    );
+    println!("{:#?}", service.shutdown());
+    Ok(())
+}

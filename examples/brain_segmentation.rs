@@ -1,0 +1,108 @@
+//! End-to-end driver (DESIGN.md E2/E5/E6/E7): the full clinical-style
+//! pipeline of the paper on a realistic small workload —
+//!
+//!   phantom volume (4 slices, with skull) -> skull stripping -> parallel
+//!   FCM segmentation on the AOT device path -> DSC against ground truth,
+//!   with the sequential baseline run side by side and all images written
+//!   as PGMs under out/brain/.
+//!
+//! The numbers this prints are recorded in EXPERIMENTS.md (E5/E7).
+//!
+//!   make artifacts && cargo run --release --example brain_segmentation
+
+use repro::eval::{dice_per_class, Confusion};
+use repro::fcm::{canonical_relabel, FcmParams};
+use repro::image::{pgm, FeatureVector, LabelMap};
+use repro::phantom::skullstrip::{strip, StripParams};
+use repro::phantom::{generate_slice, PhantomConfig};
+use repro::report::Table;
+use repro::runtime::{FcmExecutor, Registry};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let outdir = Path::new("out/brain");
+    std::fs::create_dir_all(outdir)?;
+    let registry = Registry::open(Path::new("artifacts"))?;
+    let executor = FcmExecutor::new(&registry);
+    let params = FcmParams::default();
+
+    let mut table = Table::new([
+        "slice", "engine", "iters", "time(s)", "DSC bg", "DSC csf", "DSC gm", "DSC wm", "acc",
+    ]);
+    let mut total_device_s = 0.0;
+    let mut total_seq_s = 0.0;
+
+    for slice_idx in [91usize, 96, 101, 111] {
+        // 1. Acquire: phantom slice WITH skull + scalp (the raw input the
+        //    paper's preprocessing had to clean).
+        let s = generate_slice(&PhantomConfig {
+            slice: slice_idx,
+            with_skull: true,
+            noise_sigma: 4.0,
+            ..PhantomConfig::default()
+        });
+        pgm::write(&s.image, &outdir.join(format!("s{slice_idx}_raw.pgm")))?;
+
+        // 2. Preprocess: morphological skull stripping (paper Sec. 5.2).
+        let (stripped, _mask) = strip(&s.image, &StripParams::default());
+        pgm::write(&stripped, &outdir.join(format!("s{slice_idx}_stripped.pgm")))?;
+
+        let fv = FeatureVector::from_image(&stripped);
+
+        // 3a. Parallel FCM (device path).
+        let t0 = std::time::Instant::now();
+        let (mut dev, _stats) = executor.segment(&fv, &params)?;
+        let dev_s = t0.elapsed().as_secs_f64();
+        total_device_s += dev_s;
+        canonical_relabel(&mut dev);
+
+        // 3b. Sequential baseline.
+        let t1 = std::time::Instant::now();
+        let mut seq = repro::fcm::sequential::run(&fv.x, &fv.w, &params);
+        let seq_s = t1.elapsed().as_secs_f64();
+        total_seq_s += seq_s;
+        canonical_relabel(&mut seq);
+
+        // 4. Evaluate + write label maps.
+        for (engine, run, secs) in [("device", &dev, dev_s), ("seq", &seq, seq_s)] {
+            let d = dice_per_class(&run.labels, &s.ground_truth.labels, 4);
+            let acc = Confusion::new(&run.labels, &s.ground_truth.labels, 4).accuracy();
+            table.row([
+                format!("{slice_idx}"),
+                engine.to_string(),
+                format!("{}", run.iterations),
+                format!("{secs:.3}"),
+                format!("{:.4}", d[0]),
+                format!("{:.4}", d[1]),
+                format!("{:.4}", d[2]),
+                format!("{:.4}", d[3]),
+                format!("{acc:.4}"),
+            ]);
+            let lm = LabelMap::from_labels(stripped.width, stripped.height, run.labels.clone());
+            pgm::write(
+                &lm.to_image(4),
+                &outdir.join(format!("s{slice_idx}_{engine}.pgm")),
+            )?;
+        }
+
+        let agree = dev
+            .labels
+            .iter()
+            .zip(&seq.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        println!(
+            "slice {slice_idx}: device/seq agreement {:.2}% ({agree}/{})",
+            100.0 * agree as f64 / seq.labels.len() as f64,
+            seq.labels.len()
+        );
+    }
+
+    println!();
+    table.print();
+    println!(
+        "\ntotals: device {total_device_s:.2}s, sequential {total_seq_s:.2}s; images in {}",
+        outdir.display()
+    );
+    Ok(())
+}

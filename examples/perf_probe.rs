@@ -1,0 +1,56 @@
+//! Perf probe (EXPERIMENTS.md §Perf): per-iteration device time by bucket
+//! and artifact flavor, isolating where the device path spends its time.
+//!
+//!   cargo run --release --example perf_probe [-- sizes...]
+
+use repro::fcm::FcmParams;
+use repro::image::{pad_to, FeatureVector};
+use repro::phantom::sized_dataset;
+use repro::report::Table;
+use repro::runtime::{FcmExecutor, Registry};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::open(Path::new("artifacts"))?;
+    let params = FcmParams {
+        max_iters: 8, // fixed iteration count: measure per-iter cost
+        epsilon: 0.0, // never converge early
+        ..Default::default()
+    };
+
+    let flavors: Vec<&str> = {
+        let mut f = vec!["pallas"];
+        if reg.manifest.buckets(4, "ref").len() > 1 {
+            f.push("ref");
+        }
+        f
+    };
+
+    let mut t = Table::new(["bucket", "flavor", "compile(s)", "ms/iter", "px/us"]);
+    for kb in [20usize, 100, 250, 500, 1000] {
+        let data = sized_dataset(kb * 1024, 42);
+        let fv = FeatureVector::from_image(&data.image);
+        for flavor in &flavors {
+            let exec = FcmExecutor::with_flavor(&reg, flavor);
+            let meta = reg.manifest.bucket_for(fv.len(), 4, flavor)?.clone();
+            let padded = pad_to(&fv, meta.pixels);
+            let u0 = repro::fcm::init_membership_masked(4, &padded.w, 42);
+            // Warm (includes compile).
+            let c0 = reg.total_compile_seconds();
+            let (_, _) = exec.segment_from(&padded, u0.clone(), &params)?;
+            let compile_s = reg.total_compile_seconds() - c0;
+            // Measure.
+            let (_, stats) = exec.segment_from(&padded, u0, &params)?;
+            let ms_per_iter = stats.iterate_s * 1000.0 / stats.iterations as f64;
+            t.row([
+                format!("{}", meta.pixels),
+                flavor.to_string(),
+                format!("{compile_s:.2}"),
+                format!("{ms_per_iter:.1}"),
+                format!("{:.1}", meta.pixels as f64 / (ms_per_iter * 1000.0)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

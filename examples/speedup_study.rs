@@ -1,0 +1,25 @@
+//! Speedup study (Table 3 + Fig. 8, quick form): regenerates the paper's
+//! performance evaluation through the calibrated C2050/i5 cost model and
+//! measures this stack's own sequential-vs-device ratio alongside.
+//!
+//!   make artifacts && cargo run --release --example speedup_study
+
+use repro::config::Config;
+use repro::report::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::new();
+
+    println!("== Table 3 (quick sizes; `repro bench-table3` for all 14) ==\n");
+    let sizes = exp::table3_sizes(true);
+    exp::table3(&cfg, &sizes, 3)?.print();
+
+    println!("\n== Fig. 8 speedup curve (calibrated model) ==\n");
+    let (table, chart) = exp::fig8(&exp::fig8_sizes());
+    table.print();
+    println!("\n{chart}");
+
+    println!("== Ablation (Sec. 5.3 open questions) ==\n");
+    exp::ablation(&[100 * 1024, 200 * 1024, 500 * 1024]).print();
+    Ok(())
+}

@@ -1,0 +1,159 @@
+"""AOT lowering: jax -> HLO TEXT artifacts for the rust PJRT runtime.
+
+Emit HLO *text*, NOT ``lowered.compile()`` / ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+One artifact per (pixel-bucket, cluster-count, fuzziness) variant, plus a
+``manifest.json`` the rust ArtifactRegistry consumes. Run via
+``make artifacts`` — a no-op when inputs are unchanged (Make dependency on
+this file, model.py and kernels/*.py).
+
+Usage: python -m compile.aot --outdir ../artifacts [--buckets 16384,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Pixel-count buckets. Paper sizes: 20KB..1000KB of 1-byte pixels =>
+# 20480..1024000 pixels; runtime pads an image up to the next bucket.
+# 256 serves brFCM (grey-level histogram clustering).
+DEFAULT_BUCKETS = [256, 4096, 16384, 32768, 65536, 131072, 262144, 524288, 1048576]
+DEFAULT_CLUSTERS = [4]  # paper: WM, GM, CSF, background
+DEFAULT_M = 2.0  # paper Algorithm 1 step 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def block_for(n: int) -> int:
+    """Pick the Pallas block for a bucket.
+
+    Perf note (EXPERIMENTS.md §Perf, L1 iteration 1): interpret-mode
+    pallas lowers each grid step to a dynamic-update-slice of the FULL
+    output array, so per-iteration cost is O(n^2 / block). Scaling the
+    block with the bucket caps the grid at <=32 steps and restores linear
+    scaling. TPU realism: 32768 px is a 128 KiB f32 input slab and a
+    512 KiB membership slab — still comfortably VMEM-resident (DESIGN.md
+    section 7), so the same block policy would hold on hardware.
+
+    Iteration 2: 32 steps still copies the full output 32x per kernel;
+    n/8 (cap 128 Ki px) leaves ~8 steps. CPU-interpret artifacts trade
+    VMEM realism for wall-clock here: a 128 Ki block is a 2 MiB
+    membership slab (u in + u out + x + w ~ 5 MiB), beyond a
+    conservative TPU budget — a TPU deployment re-lowers with
+    block<=32768 (block is a lowering parameter recorded per artifact in
+    the manifest, not a code change).
+    """
+    from .kernels import fcm as K
+
+    if n <= K.DEFAULT_BLOCK:
+        return n
+    return min(262144, max(K.DEFAULT_BLOCK, n // 4))
+
+
+def lower_iteration(n: int, c: int, m: float, flavor: str = "pallas") -> str:
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((n,), f32)
+    w = jax.ShapeDtypeStruct((n,), f32)
+    u = jax.ShapeDtypeStruct((c, n), f32)
+    if flavor == "pallas":
+        fn = functools.partial(model.fcm_iteration, m=m, block=block_for(n))
+    elif flavor == "ref":
+        fn = functools.partial(model.fcm_iteration_ref, m=m)
+    else:
+        raise ValueError(f"unknown flavor {flavor!r}")
+    return to_hlo_text(jax.jit(fn).lower(x, w, u))
+
+
+def lower_block_sum(n: int) -> str:
+    a = jax.ShapeDtypeStruct((n,), jnp.float32)
+    fn = functools.partial(model.block_sum, block=block_for(n))
+    return to_hlo_text(jax.jit(fn).lower(a))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat alias for --outdir's parent use")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in DEFAULT_BUCKETS),
+        help="comma-separated pixel-count buckets",
+    )
+    ap.add_argument("--clusters", default=",".join(str(c) for c in DEFAULT_CLUSTERS))
+    ap.add_argument("--m", type=float, default=DEFAULT_M)
+    ap.add_argument(
+        "--ref-flavor",
+        action="store_true",
+        help="also emit pure-jnp `ref` artifacts for kernel A/B testing",
+    )
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    buckets = [int(b) for b in args.buckets.split(",")]
+    clusters = [int(c) for c in args.clusters.split(",")]
+
+    manifest = {"m": args.m, "artifacts": []}
+    for c in clusters:
+        for n in buckets:
+            for flavor in ["pallas"] + (["ref"] if args.ref_flavor else []):
+                name = f"fcm_iter_{flavor}_c{c}_n{n}.hlo.txt"
+                text = lower_iteration(n, c, args.m, flavor)
+                (outdir / name).write_text(text)
+                manifest["artifacts"].append(
+                    {
+                        "kind": "fcm_iteration",
+                        "flavor": flavor,
+                        "pixels": n,
+                        "clusters": c,
+                        "m": args.m,
+                        "block": block_for(n),
+                        "path": name,
+                    }
+                )
+                print(f"wrote {name} ({len(text)} chars)")
+
+    # Experiment E3: the standalone Algorithm-2 reduction demo.
+    n = 16384
+    name = f"block_sum_n{n}.hlo.txt"
+    (outdir / name).write_text(lower_block_sum(n))
+    manifest["artifacts"].append(
+        {"kind": "block_sum", "flavor": "pallas", "pixels": n, "clusters": 0,
+         "m": 0.0, "block": block_for(n), "path": name}
+    )
+    print(f"wrote {name}")
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    # Flat TSV twin for the rust loader (the offline build has no JSON dep).
+    cols = ["kind", "flavor", "pixels", "clusters", "m", "block", "path"]
+    tsv = "\t".join(cols) + "\n"
+    for a in manifest["artifacts"]:
+        tsv += "\t".join(str(a[c]) for c in cols) + "\n"
+    (outdir / "manifest.tsv").write_text(tsv)
+    # Marker file for the Makefile dependency.
+    if args.out:
+        pathlib.Path(args.out).write_text("see manifest.json\n")
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

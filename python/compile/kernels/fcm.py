@@ -1,0 +1,233 @@
+"""L1 Pallas kernels for the Fuzzy C-Means iteration.
+
+The paper (Almazrooie et al. 2016) splits one FCM iteration into:
+
+  phase A (their CUDA kernels 1-4, Section 4.2): per-pixel heavy math
+    (u^m, u^m * x) followed by a shared-memory tree reduction (their
+    Algorithm 2) producing the cluster-center numerator/denominator sums;
+  phase B (their Section 4.3 kernel): one thread per pixel recomputing
+    the membership matrix from the new centers.
+
+Hardware adaptation (DESIGN.md section 2): CUDA thread-blocks with
+shared-memory partial sums become a 1-D Pallas grid over pixel blocks.
+Each grid program reduces its VMEM-resident slab to a partial sum
+(`center_partials`); the tiny final sum over ``n/BLOCK`` partials is done
+in plain jnp inside the same lowered module — the analogue of the paper's
+single-thread "kernel 4", kept on-device so no intermediate array ever
+crosses the host boundary.
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs
+on any PJRT backend (the rust CPU client); see /opt/xla-example/README.md.
+
+Conventions
+-----------
+  x : f32[N]     pixel intensities (the 1-D feature layout of paper Fig. 4)
+  w : f32[N]     per-pixel weights; 1.0 for real pixels, 0.0 for padding.
+                 brFCM reuses the same artifact with x = histogram bin
+                 values and w = bin counts.
+  u : f32[C, N]  fuzzy membership matrix (their 3-D -> 1-D flattening,
+                 kept as [C, N] so a pixel block is contiguous per cluster)
+  v : f32[C]     cluster centers
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tolerance below which a squared distance counts as "pixel sits exactly on
+# a center" — the classic FCM singularity. Matches ref.py.
+ZERO_TOL = 1e-12
+
+# Guard for empty-cluster denominators.
+DEN_EPS = 1e-12
+
+# Default pixel-block size. 2048 f32 = 8 KiB per input slab; with C=4 the
+# membership slab is 32 KiB — comfortably inside a 16 MiB VMEM budget with
+# room for double buffering (DESIGN.md section 7).
+DEFAULT_BLOCK = 2048
+
+
+def _num_blocks(n: int, block: int) -> int:
+    if n % block != 0:
+        raise ValueError(f"pixel count {n} must be a multiple of block {block}")
+    return n // block
+
+
+# ---------------------------------------------------------------------------
+# Phase A: cluster-center partial sums (the paper's Algorithm 2 analogue)
+# ---------------------------------------------------------------------------
+
+
+def _center_partials_kernel(m: float, x_ref, w_ref, u_ref, num_ref, den_ref):
+    """Reduce one pixel block to per-cluster partial sums.
+
+    Fuses the paper's kernel 1 (elementwise u^m and u^m*x) with its
+    kernels 2-3 (tree reductions of numerator and denominator): the block
+    never leaves VMEM between the map and the reduce.
+
+    The weight enters LINEARLY (w * u^m), which is the exact weighted FCM:
+    w=0 padding contributes nothing, and brFCM bin counts weight each bin
+    by its population (folding w into u instead would square the counts).
+    """
+    x = x_ref[...]  # [B]
+    w = w_ref[...]  # [B]
+    u = u_ref[...]  # [C, B]
+    if m == 2.0:
+        um = u * u  # paper sets m=2; avoid a transcendental pow
+    else:
+        um = u**m
+    wum = w[None, :] * um
+    num_ref[...] = jnp.sum(wum * x[None, :], axis=1, keepdims=True)  # [C, 1]
+    den_ref[...] = jnp.sum(wum, axis=1, keepdims=True)  # [C, 1]
+
+
+def center_partials(x, w, u, *, m: float = 2.0, block: int = DEFAULT_BLOCK):
+    """Per-block partial sums of the center update (Equation 3).
+
+    Returns ``(num_part, den_part)`` with shape ``[C, n/block]`` each —
+    the direct analogue of Algorithm 2's output array ``B`` (one partial
+    per CUDA block), generalized to all clusters in a single pass.
+    """
+    n = x.shape[0]
+    c = u.shape[0]
+    nb = _num_blocks(n, block)
+    kernel = functools.partial(_center_partials_kernel, float(m))
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, 1), lambda i: (0, i)),
+            pl.BlockSpec((c, 1), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, nb), jnp.float32),
+            jax.ShapeDtypeStruct((c, nb), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, u)
+
+
+# ---------------------------------------------------------------------------
+# Phase B: membership update (the paper's Section 4.3 kernel)
+# ---------------------------------------------------------------------------
+
+
+def _membership_kernel(m: float, x_ref, w_ref, v_ref, u_ref, jm_ref):
+    """One grid program = one pixel block (their one-thread-one-pixel,
+    re-tiled for the VPU). Also emits the block's contribution to the
+    objective J_m (Equation 1) so convergence diagnostics are free.
+    """
+    x = x_ref[...]  # [B]
+    w = w_ref[...]  # [B]
+    v = v_ref[...]  # [C]
+    d2 = (x[None, :] - v[:, None]) ** 2  # [C, B] squared Euclidean
+    # u_ij = d_ij^(-2/(m-1)) / sum_k d_ik^(-2/(m-1))   (Equation 4)
+    p = 1.0 / (m - 1.0)
+    inv = jnp.maximum(d2, ZERO_TOL) ** (-p) if p != 1.0 else 1.0 / jnp.maximum(d2, ZERO_TOL)
+    u = inv / jnp.sum(inv, axis=0, keepdims=True)
+    # Singularity: pixel exactly on >=1 center -> split membership evenly
+    # among the zero-distance clusters.
+    zero = d2 <= ZERO_TOL
+    any_zero = jnp.any(zero, axis=0)
+    nz = jnp.maximum(jnp.sum(zero.astype(jnp.float32), axis=0), 1.0)
+    u = jnp.where(any_zero[None, :], zero.astype(jnp.float32) / nz[None, :], u)
+    if m == 2.0:
+        um = u * u
+    else:
+        um = u**m
+    # Weighted objective contribution: sum_j sum_b w_b * u^m * d2.
+    jm_ref[...] = jnp.sum(w[None, :] * um * d2, axis=(0, 1), keepdims=True)[0]
+    # Padding pixels (w=0) keep membership 0 forever (indicator mask, NOT a
+    # scale: brFCM counts must not rescale the stored membership).
+    u_ref[...] = u * (w[None, :] > 0.0).astype(jnp.float32)
+
+
+def membership(x, w, v, *, m: float = 2.0, block: int = DEFAULT_BLOCK):
+    """Membership update (Equation 4). Returns ``(u_new[C,N], jm_part[nb])``."""
+    n = x.shape[0]
+    c = v.shape[0]
+    nb = _num_blocks(n, block)
+    kernel = functools.partial(_membership_kernel, float(m))
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, n), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, v)
+
+
+# ---------------------------------------------------------------------------
+# Convergence: max |u_new - u_old| partials
+# ---------------------------------------------------------------------------
+
+
+def _delta_kernel(u_new_ref, u_old_ref, out_ref):
+    out_ref[...] = jnp.max(jnp.abs(u_new_ref[...] - u_old_ref[...]), keepdims=True)[
+        ..., 0
+    ]
+
+
+def delta_partials(u_new, u_old, *, block: int = DEFAULT_BLOCK):
+    """Per-block max-abs-difference; final max over ``n/block`` scalars is
+    left to the caller (on-device jnp) — the convergence test of paper
+    Fig. 2 without the membership-matrix host transfer."""
+    c, n = u_new.shape
+    nb = _num_blocks(n, block)
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=True,
+    )(u_new, u_old)
+
+
+# ---------------------------------------------------------------------------
+# Standalone tree reduction — faithful port of the paper's Algorithm 2,
+# kept as its own kernel for the reduction demo/tests (experiment E3).
+# ---------------------------------------------------------------------------
+
+
+def _block_sum_kernel(a_ref, out_ref):
+    out_ref[...] = jnp.sum(a_ref[...], keepdims=True)
+
+
+def block_sum(a, *, block: int = DEFAULT_BLOCK):
+    """Reduce ``f32[N]`` to ``f32[N/block]`` partial sums (Algorithm 2:
+    ``m = n / blockDim << 1``; here one Pallas program plays the role of
+    one CUDA block's shared-memory tree)."""
+    n = a.shape[0]
+    nb = _num_blocks(n, block)
+    return pl.pallas_call(
+        _block_sum_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=True,
+    )(a)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Every function here is the textbook (paper Equations 3/4) computation with
+no blocking, no Pallas, no tricks. pytest compares kernels/fcm.py against
+these — the core correctness signal of the build. The rust sequential
+baseline mirrors exactly this math, so agreement here transitively
+validates the cross-language numerics too.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ZERO_TOL = 1e-12
+DEN_EPS = 1e-12
+
+
+def centers(x, u, w=None, *, m: float = 2.0):
+    """Equation 3: v_j = sum_i w_i u_ij^m x_i / sum_i w_i u_ij^m.
+
+    ``w`` defaults to all-ones (the plain paper formulation); the weighted
+    form is the brFCM generalization (bin counts) and the padding mask.
+    The weight enters linearly (w * u^m), the exact weighted FCM.
+    """
+    um = u**m
+    if w is not None:
+        um = um * w[None, :]
+    num = jnp.sum(um * x[None, :], axis=1)
+    den = jnp.sum(um, axis=1)
+    return num / jnp.maximum(den, DEN_EPS)
+
+
+def membership(x, v, *, m: float = 2.0):
+    """Equation 4 with the standard zero-distance singularity handling."""
+    d2 = (x[None, :] - v[:, None]) ** 2
+    inv = jnp.maximum(d2, ZERO_TOL) ** (-1.0 / (m - 1.0))
+    u = inv / jnp.sum(inv, axis=0, keepdims=True)
+    zero = d2 <= ZERO_TOL
+    any_zero = jnp.any(zero, axis=0)
+    nz = jnp.maximum(jnp.sum(zero.astype(jnp.float32), axis=0), 1.0)
+    return jnp.where(any_zero[None, :], zero.astype(jnp.float32) / nz[None, :], u)
+
+
+def objective(x, u, v, w=None, *, m: float = 2.0):
+    """Equation 1: J_m = sum_i sum_j w_i u_ij^m ||x_i - v_j||^2."""
+    d2 = (x[None, :] - v[:, None]) ** 2
+    t = (u**m) * d2
+    if w is not None:
+        t = t * w[None, :]
+    return jnp.sum(t)
+
+
+def iteration(x, w, u, *, m: float = 2.0):
+    """One full FCM iteration, matching model.fcm_iteration's contract.
+
+    Returns (u_new, v, delta, jm). ``u`` holds normalized memberships with
+    w=0 rows zeroed (indicator mask); weights enter the center sums
+    linearly.
+    """
+    v = centers(x, u, w, m=m)
+    u_raw = membership(x, v, m=m)
+    jm = objective(x, u_raw, v, w, m=m)
+    u_new = u_raw * (w[None, :] > 0.0).astype(jnp.float32)
+    delta = jnp.max(jnp.abs(u_new - u))
+    return u_new, v, delta, jm
+
+
+def defuzzify(u):
+    """Maximum-membership hard assignment (paper Section 2.1, last step)."""
+    return jnp.argmax(u, axis=0).astype(jnp.int32)

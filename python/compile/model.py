@@ -1,0 +1,59 @@
+"""L2: the FCM compute graph, composed from the L1 Pallas kernels.
+
+One lowered HLO module = one full FCM iteration (paper Fig. 2, the device
+half): center update (Equation 3) via blocked partial sums, membership
+update (Equation 4), convergence delta and objective J_m — all on-device.
+Only a scalar delta crosses back to the rust host each iteration, unlike
+the paper which shipped the whole membership matrix to the CPU for the
+epsilon test (DESIGN.md section 2, last row).
+
+The rust coordinator drives the loop:
+
+    u0 = random init (host)
+    repeat: (u, v, delta, jm) = execute(artifact, x, w, u)  until delta < eps
+    labels = defuzzify(u)  (host; O(CN) argmax)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import fcm as K
+
+DEN_EPS = 1e-12
+
+
+def fcm_iteration(x, w, u, *, m: float = 2.0, block: int = K.DEFAULT_BLOCK):
+    """One FCM iteration.
+
+    Args:
+      x: f32[N] pixel intensities (1-D feature layout, paper Fig. 4).
+      w: f32[N] weights — 1/0 padding mask, or brFCM bin counts.
+      u: f32[C, N] membership matrix; padding rows pre-zeroed.
+      m: fuzziness exponent (paper: 2).
+      block: pixels per Pallas program.
+
+    Returns:
+      (u_new f32[C,N], v f32[C], delta f32[], jm f32[]).
+    """
+    num_p, den_p = K.center_partials(x, w, u, m=m, block=block)
+    # The paper's "kernel 4": final reduction of n/block partials, one
+    # scalar pair per cluster. Tiny, stays on-device in the same module.
+    v = jnp.sum(num_p, axis=1) / jnp.maximum(jnp.sum(den_p, axis=1), DEN_EPS)
+    u_new, jm_p = K.membership(x, w, v, m=m, block=block)
+    delta_p = K.delta_partials(u_new, u, block=block)
+    return u_new, v, jnp.max(delta_p), jnp.sum(jm_p)
+
+
+def fcm_iteration_ref(x, w, u, *, m: float = 2.0):
+    """Same contract, pure-jnp (no Pallas). Lowered as the `ref` artifact
+    flavor for A/B testing the kernels from rust and for the L2 perf
+    comparison in EXPERIMENTS.md."""
+    from .kernels import ref
+
+    return ref.iteration(x, w, u, m=m)
+
+
+def block_sum(a, *, block: int = K.DEFAULT_BLOCK):
+    """Standalone Algorithm-2 reduction (experiment E3 demo artifact)."""
+    return (K.block_sum(a, block=block),)

@@ -1,0 +1,262 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+#
+# Structure: each L1 kernel is compared against the pure-jnp oracle on the
+# SAME inputs with tight tolerances (the math is identical up to blocked
+# reduction order); the composed iteration gets a looser tolerance because
+# the 1/d^2 membership term amplifies fp32 center differences.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fcm, ref
+
+
+def mk_inputs(n, c, seed=0, lo=0.0, hi=255.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.uniform(lo, hi, n).astype(np.float32))
+    u = rng.uniform(0.01, 1.0, (c, n)).astype(np.float32)
+    u /= u.sum(0, keepdims=True)
+    return x, jnp.array(u)
+
+
+# ---------------------------------------------------------------------------
+# center_partials vs Equation 3
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block", [(256, 256), (2048, 512), (8192, 2048)])
+@pytest.mark.parametrize("c", [2, 4, 6])
+def test_center_partials_matches_ref(n, block, c):
+    x, u = mk_inputs(n, c)
+    num, den = fcm.center_partials(x, jnp.ones_like(x), u, block=block)
+    assert num.shape == (c, n // block)
+    v = num.sum(1) / jnp.maximum(den.sum(1), ref.DEN_EPS)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(ref.centers(x, u)), rtol=1e-5)
+
+
+def test_center_partials_m_general():
+    x, u = mk_inputs(2048, 4, seed=3)
+    num, den = fcm.center_partials(x, jnp.ones_like(x), u, m=3.0, block=512)
+    v = num.sum(1) / den.sum(1)
+    np.testing.assert_allclose(
+        np.asarray(v), np.asarray(ref.centers(x, u, m=3.0)), rtol=1e-5
+    )
+
+
+def test_center_partials_zero_membership_cluster():
+    # A cluster with all-zero membership must not produce NaN centers.
+    x, u = mk_inputs(2048, 4)
+    u = u.at[2].set(0.0)
+    num, den = fcm.center_partials(x, jnp.ones_like(x), u, block=512)
+    v = np.asarray(num.sum(1) / jnp.maximum(den.sum(1), ref.DEN_EPS))
+    assert np.isfinite(v).all()
+
+
+def test_center_partials_rejects_ragged():
+    x, u = mk_inputs(1000, 4)
+    with pytest.raises(ValueError, match="multiple"):
+        fcm.center_partials(x, jnp.ones_like(x), u, block=512)
+
+
+# ---------------------------------------------------------------------------
+# membership vs Equation 4
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block", [(256, 256), (4096, 1024)])
+@pytest.mark.parametrize("c", [2, 4])
+def test_membership_matches_ref(n, block, c):
+    x, u = mk_inputs(n, c, seed=1)
+    v = ref.centers(x, u)
+    w = jnp.ones(n, jnp.float32)
+    u_k, _ = fcm.membership(x, w, v, block=block)
+    np.testing.assert_allclose(
+        np.asarray(u_k), np.asarray(ref.membership(x, v)), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_membership_rows_sum_to_one():
+    # Constraint (2): sum_j u_ij = 1 for every real pixel.
+    x, u = mk_inputs(4096, 4, seed=2)
+    v = ref.centers(x, u)
+    u_k, _ = fcm.membership(x, jnp.ones(4096, jnp.float32), v, block=1024)
+    np.testing.assert_allclose(np.asarray(u_k).sum(0), 1.0, atol=1e-5)
+
+
+def test_membership_pixel_on_center_gets_full_membership():
+    # The FCM singularity: d_ij = 0 -> u_ij = 1, others 0.
+    n, c = 256, 4
+    v = jnp.array([10.0, 50.0, 120.0, 200.0], jnp.float32)
+    x = jnp.full((n,), 50.0, jnp.float32)  # every pixel sits ON center 1
+    u_k, _ = fcm.membership(x, jnp.ones(n, jnp.float32), v, block=n)
+    expect = np.zeros((c, n), np.float32)
+    expect[1] = 1.0
+    np.testing.assert_allclose(np.asarray(u_k), expect, atol=1e-7)
+
+
+def test_membership_pixel_on_two_centers_splits():
+    n = 256
+    v = jnp.array([7.0, 7.0, 100.0, 200.0], jnp.float32)  # duplicated center
+    x = jnp.full((n,), 7.0, jnp.float32)
+    u_k, _ = fcm.membership(x, jnp.ones(n, jnp.float32), v, block=n)
+    u_np = np.asarray(u_k)
+    np.testing.assert_allclose(u_np[0], 0.5, atol=1e-7)
+    np.testing.assert_allclose(u_np[1], 0.5, atol=1e-7)
+    np.testing.assert_allclose(u_np[2:], 0.0, atol=1e-7)
+
+
+def test_membership_padding_mask_zeroes_rows():
+    n = 2048
+    x, u = mk_inputs(n, 4)
+    v = ref.centers(x, u)
+    w = jnp.concatenate([jnp.ones(n // 2), jnp.zeros(n // 2)]).astype(jnp.float32)
+    u_k, _ = fcm.membership(x, w, v, block=512)
+    u_np = np.asarray(u_k)
+    assert (u_np[:, n // 2 :] == 0.0).all()
+    np.testing.assert_allclose(u_np[:, : n // 2].sum(0), 1.0, atol=1e-5)
+
+
+def test_membership_objective_partials_match_ref():
+    n = 4096
+    x, u = mk_inputs(n, 4, seed=5)
+    v = ref.centers(x, u)
+    w = jnp.ones(n, jnp.float32)
+    _, jm_p = fcm.membership(x, w, v, block=1024)
+    jm_ref = ref.objective(x, ref.membership(x, v), v, w)
+    np.testing.assert_allclose(float(jm_p.sum()), float(jm_ref), rtol=1e-4)
+
+
+def test_membership_m_general():
+    n = 2048
+    x, u = mk_inputs(n, 4, seed=6)
+    v = ref.centers(x, u, m=1.5)
+    u_k, _ = fcm.membership(x, jnp.ones(n, jnp.float32), v, m=1.5, block=512)
+    np.testing.assert_allclose(
+        np.asarray(u_k), np.asarray(ref.membership(x, v, m=1.5)), rtol=2e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# delta partials
+# ---------------------------------------------------------------------------
+
+
+def test_delta_partials_max_matches_ref():
+    n = 4096
+    x, u0 = mk_inputs(n, 4, seed=7)
+    _, u1 = mk_inputs(n, 4, seed=8)
+    d = fcm.delta_partials(u1, u0, block=1024)
+    assert d.shape == (4,)
+    np.testing.assert_allclose(
+        float(d.max()), float(jnp.abs(u1 - u0).max()), rtol=1e-6
+    )
+
+
+def test_delta_partials_identical_inputs_is_zero():
+    _, u = mk_inputs(2048, 4)
+    assert float(fcm.delta_partials(u, u, block=512).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# block_sum — the standalone Algorithm 2 port (experiment E3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block", [(256, 128), (16384, 2048)])
+def test_block_reduce_matches_flat_sum(n, block):
+    rng = np.random.default_rng(9)
+    a = jnp.array(rng.uniform(-1, 1, n).astype(np.float32))
+    partials = fcm.block_sum(a, block=block)
+    assert partials.shape == (n // block,)
+    np.testing.assert_allclose(float(partials.sum()), float(a.sum()), rtol=1e-4, atol=1e-4)
+
+
+def test_block_reduce_paper_shape_example():
+    # Paper section 4.2: a 1 MB input with blockDim 128 reduces
+    # "1048576/128 << 1" -> 4096 partials. Our analogue: n/block partials.
+    n, block = 1048576, 2048
+    a = jnp.ones(n, jnp.float32)
+    partials = fcm.block_sum(a, block=block)
+    assert partials.shape == (512,)
+    np.testing.assert_allclose(np.asarray(partials), float(block))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, value ranges, degenerate inputs
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 8),
+    block=st.sampled_from([128, 256, 512]),
+    c=st.integers(2, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_center_partials_hypothesis(nb, block, c, seed):
+    n = nb * block
+    x, u = mk_inputs(n, c, seed=seed)
+    num, den = fcm.center_partials(x, jnp.ones_like(x), u, block=block)
+    v = num.sum(1) / jnp.maximum(den.sum(1), ref.DEN_EPS)
+    np.testing.assert_allclose(
+        np.asarray(v), np.asarray(ref.centers(x, u)), rtol=5e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 8),
+    block=st.sampled_from([128, 256]),
+    c=st.integers(2, 5),
+    seed=st.integers(0, 2**16),
+    lo=st.floats(0.0, 10.0),
+    span=st.floats(1.0, 1000.0),
+)
+def test_membership_hypothesis(nb, block, c, seed, lo, span):
+    n = nb * block
+    x, u = mk_inputs(n, c, seed=seed, lo=lo, hi=lo + span)
+    v = ref.centers(x, u)
+    u_k, _ = fcm.membership(x, jnp.ones(n, jnp.float32), v, block=block)
+    u_np = np.asarray(u_k)
+    # Invariants: valid probabilities summing to 1 (constraint 2).
+    assert (u_np >= 0).all() and (u_np <= 1 + 1e-6).all()
+    np.testing.assert_allclose(u_np.sum(0), 1.0, atol=1e-4)
+    np.testing.assert_allclose(
+        u_np, np.asarray(ref.membership(x, v)), rtol=1e-4, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(nb=st.integers(1, 6), block=st.sampled_from([128, 512]), seed=st.integers(0, 2**16))
+def test_block_sum_hypothesis(nb, block, seed):
+    n = nb * block
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.normal(0, 100, n).astype(np.float32))
+    np.testing.assert_allclose(
+        float(fcm.block_sum(a, block=block).sum()), float(a.sum()), rtol=1e-3, atol=1e-2
+    )
+
+
+def test_center_partials_weights_enter_linearly():
+    # brFCM exactness: weighted centers equal full-FCM centers on the
+    # expanded multiset (weights are counts, NOT folded into u).
+    vals = jnp.array([10.0, 200.0, 30.0, 180.0] * 32, jnp.float32)  # n=128
+    counts = jnp.array(([3.0, 2.0, 1.0, 4.0] * 32), jnp.float32)
+    rng = np.random.default_rng(11)
+    u = rng.uniform(0.01, 1.0, (2, 128)).astype(np.float32)
+    u /= u.sum(0, keepdims=True)
+    u = jnp.array(u)
+    num, den = fcm.center_partials(vals, counts, u, block=128)
+    v = num.sum(1) / den.sum(1)
+    # Expanded: repeat each value count times with the same membership.
+    xe, ue = [], [[], []]
+    for i in range(128):
+        for _ in range(int(counts[i])):
+            xe.append(float(vals[i]))
+            ue[0].append(float(u[0, i]))
+            ue[1].append(float(u[1, i]))
+    xe = jnp.array(xe, jnp.float32)
+    ue = jnp.array(ue, jnp.float32)
+    v_ref = ref.centers(xe, ue)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=1e-5)

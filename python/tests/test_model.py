@@ -1,0 +1,147 @@
+# L2 tests: the composed FCM iteration — shapes, invariants, convergence.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def mk_state(n, c, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.uniform(0, 255, n).astype(np.float32))
+    w = jnp.ones(n, jnp.float32)
+    u = rng.uniform(0.01, 1.0, (c, n)).astype(np.float32)
+    u /= u.sum(0, keepdims=True)
+    return x, w, jnp.array(u)
+
+
+def test_iteration_shapes_and_dtypes():
+    x, w, u = mk_state(4096, 4)
+    u1, v, delta, jm = model.fcm_iteration(x, w, u, block=1024)
+    assert u1.shape == (4, 4096) and u1.dtype == jnp.float32
+    assert v.shape == (4,) and delta.shape == () and jm.shape == ()
+
+
+def test_iteration_matches_ref_loosely():
+    # Composed tolerance is looser: blocked center sums differ in fp32
+    # rounding, and the 1/d^2 term amplifies that in u (see test_kernel.py).
+    x, w, u = mk_state(8192, 4, seed=1)
+    got = model.fcm_iteration(x, w, u, block=2048)
+    want = ref.iteration(x, w, u)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-5)  # v
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-2, atol=3e-4)  # u
+    np.testing.assert_allclose(float(got[3]), float(want[3]), rtol=1e-3)  # jm
+
+
+def test_objective_decreases_monotonically():
+    # The FCM convergence theorem: J_m(u^{t+1}, v^{t+1}) <= J_m(u^t, v^t).
+    x, w, u = mk_state(4096, 4, seed=2)
+    jms = []
+    for _ in range(8):
+        u, v, delta, jm = model.fcm_iteration(x, w, u, block=1024)
+        jms.append(float(jm))
+    assert all(b <= a * (1 + 1e-5) for a, b in zip(jms, jms[1:])), jms
+
+
+def test_delta_shrinks_and_converges():
+    x, w, u = mk_state(4096, 4, seed=3)
+    deltas = []
+    for _ in range(40):
+        u, v, delta, jm = model.fcm_iteration(x, w, u, block=1024)
+        deltas.append(float(delta))
+        if deltas[-1] < 0.005:  # the paper's epsilon
+            break
+    assert deltas[-1] < 0.005, deltas[-5:]
+
+
+def test_converged_centers_recover_mixture_modes():
+    # Pixels drawn from 4 well-separated intensity modes: converged centers
+    # must land near the modes (sorted comparison; FCM is label-symmetric).
+    rng = np.random.default_rng(4)
+    modes = [20.0, 90.0, 150.0, 230.0]
+    n = 8192
+    xs = np.concatenate([rng.normal(mu, 3.0, n // 4) for mu in modes]).astype(np.float32)
+    x = jnp.array(xs)
+    w = jnp.ones(n, jnp.float32)
+    u = rng.uniform(0.01, 1.0, (4, n)).astype(np.float32)
+    u /= u.sum(0, keepdims=True)
+    u = jnp.array(u)
+    for _ in range(60):
+        u, v, delta, _ = model.fcm_iteration(x, w, u, block=2048)
+        if float(delta) < 1e-3:
+            break
+    got = np.sort(np.asarray(v))
+    np.testing.assert_allclose(got, modes, atol=2.0)
+
+
+def test_padding_pixels_do_not_move_centers():
+    # Padding to a bucket must be a no-op for the converged solution.
+    rng = np.random.default_rng(5)
+    n_real, n_pad = 3072, 1024
+    xs = rng.uniform(0, 255, n_real).astype(np.float32)
+    x_full = jnp.array(np.concatenate([xs, np.full(n_pad, 999.0, np.float32)]))
+    w = jnp.concatenate([jnp.ones(n_real), jnp.zeros(n_pad)]).astype(jnp.float32)
+    u = rng.uniform(0.01, 1.0, (4, n_real + n_pad)).astype(np.float32)
+    u /= u.sum(0, keepdims=True)
+    u[:, n_real:] = 0.0  # pre-masked init, as the rust runtime does
+    u_pad = jnp.array(u)
+
+    x_only = jnp.array(xs[:2048])  # unpadded control on a smaller slice
+    for _ in range(5):
+        u_pad, v_pad, _, _ = model.fcm_iteration(x_full, w, u_pad, block=1024)
+    # Pad rows stay exactly zero through every iteration.
+    assert (np.asarray(u_pad)[:, n_real:] == 0.0).all()
+    # And centers equal the ref iteration on the real pixels alone.
+    u_ctl = jnp.array(u[:, :n_real])
+    w_ctl = jnp.ones(n_real, jnp.float32)
+    for _ in range(5):
+        u_ctl, v_ctl, _, _ = ref.iteration(jnp.array(xs), w_ctl, u_ctl)
+    np.testing.assert_allclose(np.asarray(v_pad), np.asarray(v_ctl), rtol=5e-4, atol=5e-3)
+
+
+def test_brfcm_histogram_weighting_matches_full_fcm():
+    # brFCM substrate check: clustering the 256-bin histogram with counts
+    # as weights converges to (nearly) the same centers as full-pixel FCM.
+    rng = np.random.default_rng(6)
+    n = 65536
+    xs = np.clip(
+        np.concatenate(
+            [rng.normal(mu, 8.0, n // 4) for mu in [30, 95, 160, 220]]
+        ),
+        0,
+        255,
+    ).astype(np.uint8)
+    # Full FCM on all pixels (ref path, small shuffled subsample for speed —
+    # xs is concatenated per mode, so a prefix slice would be one mode only).
+    x_full = jnp.array(rng.permutation(xs)[:16384].astype(np.float32))
+    w_full = jnp.ones(16384, jnp.float32)
+    u = rng.uniform(0.01, 1.0, (4, 16384)).astype(np.float32)
+    u /= u.sum(0, keepdims=True)
+    u = jnp.array(u)
+    for _ in range(80):
+        u, v_full, d, _ = ref.iteration(x_full, w_full, u)
+        if float(d) < 1e-4:
+            break
+    # brFCM: 256 bins, weights = counts.
+    counts = np.bincount(xs, minlength=256).astype(np.float32)
+    x_bins = jnp.arange(256, dtype=jnp.float32)
+    ub = rng.uniform(0.01, 1.0, (4, 256)).astype(np.float32)
+    ub /= ub.sum(0, keepdims=True)
+    ub = jnp.array(ub) * jnp.array(counts > 0, jnp.float32)[None, :]
+    wb = jnp.array(counts)
+    for _ in range(200):
+        ub, v_br, d, _ = model.fcm_iteration(x_bins, wb, ub, block=256)
+        if float(d) < 1e-5:
+            break
+    np.testing.assert_allclose(
+        np.sort(np.asarray(v_br)), np.sort(np.asarray(v_full)), atol=2.5
+    )
+
+
+def test_defuzzify_picks_max_membership():
+    u = jnp.array(
+        [[0.1, 0.7, 0.2], [0.6, 0.1, 0.2], [0.2, 0.1, 0.5], [0.1, 0.1, 0.1]],
+        jnp.float32,
+    )
+    np.testing.assert_array_equal(np.asarray(ref.defuzzify(u)), [1, 0, 2])

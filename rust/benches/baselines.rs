@@ -1,0 +1,64 @@
+//! Bench: paper Table 1 frame — all methods in this repo measured on the
+//! same workload (experiment E1), plus a phase-level breakdown of the
+//! sequential baseline (the paper's Section 4 dependency analysis:
+//! center sums vs membership updates).
+//!
+//!   cargo bench --bench baselines
+
+use repro::config::Config;
+use repro::fcm::{sequential, FcmParams};
+use repro::harness::{bench, Opts};
+use repro::image::FeatureVector;
+use repro::phantom::sized_dataset;
+use repro::report::{experiments as exp, fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("REPRO_BENCH_QUICK").is_ok();
+    let runs = if quick { 3 } else { 5 };
+    let cfg = Config::new();
+
+    println!("== bench baselines (Table 1 frame) ==\n");
+    exp::table1(&cfg, runs)?.print();
+
+    // Phase breakdown: where does the sequential time go? (The paper's
+    // Section 4 argues the center-sum "sigma operations" dominate and
+    // motivate the reduction kernels.)
+    println!("\n== sequential phase breakdown (100KB) ==\n");
+    let params = FcmParams::default();
+    let data = sized_dataset(100 * 1024, 42);
+    let fv = FeatureVector::from_image(&data.image);
+    let n = fv.x.len();
+    let c = params.clusters;
+    let u = repro::fcm::init_membership(c, n, params.seed);
+    let mut centers = vec![0f32; c];
+    let mut u_new = vec![0f32; c * n];
+
+    let opts = Opts {
+        warmup: 1,
+        min_runs: runs,
+        max_runs: runs.max(10),
+        max_seconds: 5.0,
+    };
+    let b_centers = bench("centers", &opts, || {
+        sequential::update_centers(&fv.x, &fv.w, &u, c, params.m as f64, &mut centers);
+    });
+    let b_members = bench("memberships", &opts, || {
+        let _ = sequential::update_memberships(
+            &fv.x, &fv.w, &centers, params.m as f64, &u, &mut u_new,
+        );
+    });
+    let mut t = Table::new(["phase", "per-iteration(s)", "share"]);
+    let total = b_centers.mean() + b_members.mean();
+    t.row([
+        "centers (Eq. 3 sigma sums)",
+        &fmt_secs(b_centers.mean()),
+        &format!("{:.0}%", 100.0 * b_centers.mean() / total),
+    ]);
+    t.row([
+        "memberships (Eq. 4)",
+        &fmt_secs(b_members.mean()),
+        &format!("{:.0}%", 100.0 * b_members.mean() / total),
+    ]);
+    t.print();
+    Ok(())
+}

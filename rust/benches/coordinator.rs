@@ -1,0 +1,63 @@
+//! Bench: L3 coordinator throughput — workers x batch-size sweep over a
+//! homogeneous slice workload. Not a paper table (the paper has no
+//! serving layer); this is the perf gate for DESIGN.md S12 and the §Perf
+//! log in EXPERIMENTS.md.
+//!
+//!   cargo bench --bench coordinator
+
+use repro::config::Config;
+use repro::coordinator::{Engine, Service};
+use repro::fcm::FcmParams;
+use repro::phantom::{generate_slice, PhantomConfig};
+use repro::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("REPRO_BENCH_QUICK").is_ok();
+    let jobs = if quick { 8 } else { 24 };
+    // Pre-generate the workload once.
+    let slices: Vec<_> = (0..jobs)
+        .map(|i| {
+            generate_slice(&PhantomConfig {
+                slice: 70 + (i * 5) % 60,
+                seed: i as u64,
+                ..PhantomConfig::default()
+            })
+        })
+        .collect();
+    let params = FcmParams::default();
+
+    let mut t = Table::new([
+        "workers", "max_batch", "wall(s)", "jobs/s", "mean wait(s)", "mean service(s)",
+        "mean batch",
+    ]);
+    for workers in [1usize, 2, 4] {
+        for max_batch in [1usize, 8] {
+            let mut cfg = Config::new();
+            cfg.service.workers = workers;
+            cfg.service.max_batch = max_batch;
+            let service = Service::start(&cfg)?;
+            let t0 = std::time::Instant::now();
+            let tickets: Vec<_> = slices
+                .iter()
+                .map(|s| service.submit_image(&s.image, params, Engine::Device))
+                .collect::<anyhow::Result<_>>()?;
+            for ticket in tickets {
+                ticket.wait()?;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = service.shutdown();
+            t.row([
+                workers.to_string(),
+                max_batch.to_string(),
+                format!("{wall:.2}"),
+                format!("{:.2}", jobs as f64 / wall),
+                format!("{:.3}", snap.mean_queue_wait_s),
+                format!("{:.3}", snap.mean_service_s),
+                format!("{:.2}", snap.mean_batch_size),
+            ]);
+        }
+    }
+    println!("== bench coordinator: {jobs} slice jobs, device engine ==\n");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Bench: paper Fig. 8 — speedup curve with the 448-PE line, plus the
+//! ablation probing the Section 5.3 open questions (experiments E9, E10).
+//!
+//!   cargo bench --bench fig8_speedup
+
+use repro::gpu_sim::{CostModel, PAPER_TABLE3, TESLA_C2050};
+use repro::report::experiments as exp;
+
+fn main() {
+    println!("== bench fig8: speedup vs dataset size ==\n");
+    let (table, chart) = exp::fig8(&exp::fig8_sizes());
+    table.print();
+    println!("\n{chart}");
+
+    // Crossover locations (the paper's superlinear/sublinear boundaries).
+    let model = CostModel::calibrated_c2050();
+    let mut prev: Option<(usize, bool)> = None;
+    println!("crossovers of the {}-PE line:", TESLA_C2050.processors);
+    for kb in (10..=1100).step_by(2) {
+        let s = model.superlinear(kb * 1024);
+        if let Some((pkb, ps)) = prev {
+            if ps != s {
+                println!(
+                    "  {} -> {} between {pkb}KB and {kb}KB",
+                    if ps { "superlinear" } else { "sublinear" },
+                    if s { "superlinear" } else { "sublinear" },
+                );
+            }
+        }
+        prev = Some((kb, s));
+    }
+    println!("(paper: dips below 448x between ~100KB and ~360KB)\n");
+
+    println!("== ablation (E10) ==\n");
+    exp::ablation(&exp::table3_sizes(false)).print();
+
+    // Model-vs-paper error summary.
+    let mut errs = Vec::new();
+    for &(kb, seq, par) in &PAPER_TABLE3 {
+        let s = model.speedup(kb * 1024);
+        let p = seq / par;
+        errs.push(((s - p) / p).abs());
+    }
+    let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+    println!(
+        "\nmodel-vs-paper speedup error: mean {:.1}% max {:.1}%",
+        mean * 100.0,
+        errs.iter().cloned().fold(0.0, f64::max) * 100.0
+    );
+}

@@ -1,0 +1,22 @@
+//! Bench: paper Table 3 — execution time of sequential vs parallel FCM
+//! across dataset sizes 20KB..1MB (experiment E8).
+//!
+//!   cargo bench --bench table3            # full 14 sizes
+//!   REPRO_BENCH_QUICK=1 cargo bench ...   # 3 sizes, CI-friendly
+
+use repro::config::Config;
+use repro::report::experiments as exp;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("REPRO_BENCH_QUICK").is_ok();
+    let cfg = Config::new();
+    let sizes = exp::table3_sizes(quick);
+    let runs = if quick { 3 } else { 5 };
+    println!("== bench table3: {} sizes, {} runs each ==", sizes.len(), runs);
+    println!("(paper columns shown for reference; sim = calibrated C2050/i5");
+    println!(" model of the paper's testbed; our = this stack, measured)\n");
+    let t = exp::table3(&cfg, &sizes, runs)?;
+    t.print();
+    println!("\nmarkdown (for EXPERIMENTS.md):\n{}", t.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Minimal CLI argument parser (offline build: no clap).
+//!
+//! Grammar: `repro <subcommand> [--key value | --key=value | --flag] ...`
+//! A `--name` token is a flag when it is last or followed by another
+//! `--token`; otherwise it consumes the next token as its value.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.opts.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key}: expected integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// All `--set k=v` style config overrides (repeatable via
+    /// `--set-k v`? no — use `--clusters 4` handled by caller, or the
+    /// generic `--set key=value`).
+    pub fn set_overrides(&self) -> Vec<(String, String)> {
+        // single --set key=value plus direct keys the caller forwards
+        let mut out = Vec::new();
+        if let Some(kv) = self.get("set") {
+            for pair in kv.split(',') {
+                if let Some((k, v)) = pair.split_once('=') {
+                    out.push((k.trim().to_string(), v.trim().to_string()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("segment --input x.pgm --seed 7");
+        assert_eq!(a.subcommand.as_deref(), Some("segment"));
+        assert_eq!(a.get("input"), Some("x.pgm"));
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench-table3 --sizes=20KB,1MB");
+        assert_eq!(a.get("sizes"), Some("20KB,1MB"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("bench-table3 --quick");
+        assert!(a.flag("quick"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("x --quick --runs 3");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get_usize("runs", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("segment a.pgm b.pgm");
+        assert_eq!(a.positional, vec!["a.pgm", "b.pgm"]);
+    }
+
+    #[test]
+    fn set_overrides_parse() {
+        let a = parse("segment --set epsilon=0.01,m=2.5");
+        assert_eq!(
+            a.set_overrides(),
+            vec![
+                ("epsilon".to_string(), "0.01".to_string()),
+                ("m".to_string(), "2.5".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_usize_errors() {
+        let a = parse("x --runs wat --runs2");
+        // "wat" consumed as value of runs.
+        assert!(a.get_usize("runs", 1).is_err());
+    }
+}

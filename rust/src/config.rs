@@ -1,0 +1,229 @@
+//! Configuration system: layered defaults <- config file <- CLI overrides.
+//!
+//! The config file is a flat `key = value` format (INI-without-sections) —
+//! parsed in-tree because the offline build has no TOML crate. Every knob
+//! of the paper's experimental setup lives here so runs are reproducible
+//! from a checked-in file (`repro.toml` at the repo root uses only the
+//! flat subset of TOML syntax, so it is also valid TOML for humans).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// FCM algorithm parameters (paper Algorithm 1, step 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FcmConfig {
+    /// Number of clusters c. Paper: 4 (WM, GM, CSF, background).
+    pub clusters: usize,
+    /// Fuzziness exponent m. Paper: 2.
+    pub m: f32,
+    /// Convergence threshold on max |u_new - u_old|. Paper: 0.005.
+    pub epsilon: f32,
+    /// Safety cap on iterations.
+    pub max_iters: usize,
+    /// Seed for the random membership initialization (paper step 2).
+    pub seed: u64,
+}
+
+impl Default for FcmConfig {
+    fn default() -> Self {
+        FcmConfig {
+            clusters: 4,
+            m: 2.0,
+            epsilon: 0.005,
+            max_iters: 300,
+            seed: 42,
+        }
+    }
+}
+
+impl FcmConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.clusters < 2 {
+            bail!("clusters must be >= 2, got {}", self.clusters);
+        }
+        if !(self.m > 1.0) {
+            bail!("fuzziness m must be > 1, got {}", self.m);
+        }
+        if !(self.epsilon > 0.0) {
+            bail!("epsilon must be > 0, got {}", self.epsilon);
+        }
+        if self.max_iters == 0 {
+            bail!("max_iters must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Coordinator / service parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceConfig {
+    /// Worker threads, each owning compiled PJRT executables.
+    pub workers: usize,
+    /// Max jobs grouped into one batch per worker dispatch.
+    pub max_batch: usize,
+    /// Bounded queue depth before submits exert backpressure.
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            // §Perf L3: each PJRT CPU client runs its own intra-op thread
+            // pool over all cores, so extra workers contend rather than
+            // scale (measured: 1 worker 4.0 jobs/s vs 4 workers 1.1).
+            workers: 1,
+            max_batch: 8,
+            queue_depth: 64,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.max_batch == 0 || self.queue_depth == 0 {
+            bail!("service config fields must all be >= 1: {self:?}");
+        }
+        Ok(())
+    }
+}
+
+/// Top-level config.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub fcm: FcmConfig,
+    pub service: ServiceConfig,
+    /// Directory holding AOT artifacts + manifest.tsv.
+    pub artifacts_dir: String,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config {
+            fcm: FcmConfig::default(),
+            service: ServiceConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    /// Parse the flat `key = value` file format. Unknown keys are errors —
+    /// a typo'd knob must not silently fall back to a default.
+    pub fn from_str(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let kv = parse_flat(text)?;
+        for (k, v) in &kv {
+            cfg.set(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::from_str(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Apply one `key = value` override (also used for `--set k=v` CLI args).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value;
+        match key {
+            "clusters" => self.fcm.clusters = parse(key, v)?,
+            "m" => self.fcm.m = parse(key, v)?,
+            "epsilon" => self.fcm.epsilon = parse(key, v)?,
+            "max_iters" => self.fcm.max_iters = parse(key, v)?,
+            "seed" => self.fcm.seed = parse(key, v)?,
+            "workers" => self.service.workers = parse(key, v)?,
+            "max_batch" => self.service.max_batch = parse(key, v)?,
+            "queue_depth" => self.service.queue_depth = parse(key, v)?,
+            "artifacts_dir" => self.artifacts_dir = v.trim_matches('"').to_string(),
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.fcm.validate()?;
+        self.service.validate()
+    }
+}
+
+fn parse<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
+    v.parse()
+        .map_err(|_| anyhow::anyhow!("config key {key:?}: cannot parse {v:?}"))
+}
+
+/// `key = value` lines; `#` comments; blank lines ignored.
+fn parse_flat(text: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("config line {}: expected `key = value`, got {raw:?}", i + 1);
+        };
+        out.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::new();
+        assert_eq!(c.fcm.clusters, 4);
+        assert_eq!(c.fcm.m, 2.0);
+        assert_eq!(c.fcm.epsilon, 0.005);
+    }
+
+    #[test]
+    fn parses_flat_file() {
+        let c = Config::from_str("clusters = 3\nepsilon = 0.01\nworkers = 4\n").unwrap();
+        assert_eq!(c.fcm.clusters, 3);
+        assert_eq!(c.fcm.epsilon, 0.01);
+        assert_eq!(c.service.workers, 4);
+    }
+
+    #[test]
+    fn comments_and_blanks_ok() {
+        let c = Config::from_str("# top\n\nseed = 7 # trailing\n").unwrap();
+        assert_eq!(c.fcm.seed, 7);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_str("clustersz = 3\n").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(Config::from_str("clusters = many\n").is_err());
+    }
+
+    #[test]
+    fn invalid_semantics_rejected() {
+        assert!(Config::from_str("clusters = 1\n").is_err());
+        assert!(Config::from_str("m = 1.0\n").is_err());
+        assert!(Config::from_str("epsilon = 0\n").is_err());
+        assert!(Config::from_str("workers = 0\n").is_err());
+    }
+
+    #[test]
+    fn set_override() {
+        let mut c = Config::new();
+        c.set("max_iters", "50").unwrap();
+        assert_eq!(c.fcm.max_iters, 50);
+        assert!(c.set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn quoted_string_value() {
+        let mut c = Config::new();
+        c.set("artifacts_dir", "\"/tmp/a\"").unwrap();
+        assert_eq!(c.artifacts_dir, "/tmp/a");
+    }
+}

@@ -1,0 +1,91 @@
+//! Job types flowing through the segmentation service.
+
+use crate::fcm::FcmParams;
+use crate::image::FeatureVector;
+use crate::runtime::DeviceStats;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Engine used to serve a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// AOT Pallas artifact on the PJRT runtime (the paper's parallel FCM).
+    Device,
+    /// Pure-jnp AOT artifact (A/B flavor).
+    DeviceRef,
+    /// Sequential rust baseline (the paper's comparator).
+    Sequential,
+    /// brFCM histogram reduction + sequential weighted core.
+    BrFcm,
+}
+
+/// A segmentation request.
+pub struct SegmentJob {
+    pub id: u64,
+    pub features: FeatureVector,
+    pub params: FcmParams,
+    pub engine: Engine,
+    pub submitted: Instant,
+    pub respond: mpsc::Sender<anyhow::Result<JobResult>>,
+}
+
+impl SegmentJob {
+    /// Shape bucket key used by the batcher (same-bucket jobs share a
+    /// compiled executable, so grouping them avoids cache churn).
+    pub fn bucket_key(&self, buckets: &[usize]) -> usize {
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= self.features.len())
+            .unwrap_or(usize::MAX)
+    }
+}
+
+/// Completed segmentation.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    /// Hard labels (canonical: clusters relabeled by ascending center).
+    pub labels: Vec<u8>,
+    /// Converged centers, ascending.
+    pub centers: Vec<f32>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub engine: Engine,
+    /// Time spent queued before a worker picked the job up (s).
+    pub queue_wait_s: f64,
+    /// Worker service time (s).
+    pub service_s: f64,
+    /// Device-phase breakdown when engine is Device/DeviceRef.
+    pub device: Option<DeviceStats>,
+    /// Worker that served the job.
+    pub worker: usize,
+    /// Batch the job was grouped into.
+    pub batch_id: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(n: usize) -> SegmentJob {
+        let (tx, _rx) = mpsc::channel();
+        SegmentJob {
+            id: 1,
+            features: FeatureVector::from_values(vec![0.0; n]),
+            params: FcmParams::default(),
+            engine: Engine::Device,
+            submitted: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn bucket_key_picks_smallest_fitting() {
+        let buckets = [256usize, 4096, 65536];
+        assert_eq!(job(100).bucket_key(&buckets), 256);
+        assert_eq!(job(256).bucket_key(&buckets), 256);
+        assert_eq!(job(300).bucket_key(&buckets), 4096);
+        assert_eq!(job(70_000).bucket_key(&buckets), usize::MAX);
+    }
+}

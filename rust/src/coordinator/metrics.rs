@@ -1,0 +1,124 @@
+//! Service metrics: lock-free counters + time accumulators.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared metrics; all methods are thread-safe.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Microsecond accumulators (atomics hold integers).
+    queue_wait_us: AtomicU64,
+    service_us: AtomicU64,
+    iterations: AtomicU64,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_queue_wait_s: f64,
+    pub mean_service_s: f64,
+    pub mean_iterations: f64,
+    /// Jobs per batch — the batching efficiency of the coordinator.
+    pub mean_batch_size: f64,
+}
+
+impl Metrics {
+    pub fn job_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn job_completed(&self, queue_wait_s: f64, service_s: f64, iterations: usize) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.queue_wait_us
+            .fetch_add((queue_wait_s * 1e6) as u64, Ordering::Relaxed);
+        self.service_us
+            .fetch_add((service_s * 1e6) as u64, Ordering::Relaxed);
+        self.iterations
+            .fetch_add(iterations as u64, Ordering::Relaxed);
+    }
+
+    pub fn job_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn batch_formed(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let denom = completed.max(1) as f64;
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_queue_wait_s: self.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
+            mean_service_s: self.service_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
+            mean_iterations: self.iterations.load(Ordering::Relaxed) as f64 / denom,
+            mean_batch_size: completed as f64 / batches.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.job_submitted();
+        m.job_submitted();
+        m.batch_formed();
+        m.job_completed(0.5, 1.0, 10);
+        m.job_completed(1.5, 3.0, 20);
+        m.job_failed();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
+        assert!((s.mean_queue_wait_s - 1.0).abs() < 1e-3);
+        assert!((s.mean_service_s - 2.0).abs() < 1e-3);
+        assert!((s.mean_iterations - 15.0).abs() < 1e-9);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_no_nan() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_service_s, 0.0);
+        assert_eq!(s.mean_batch_size, 0.0);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::default());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.job_submitted();
+                        m.job_completed(0.001, 0.002, 5);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 8000);
+        assert_eq!(s.completed, 8000);
+        assert!((s.mean_iterations - 5.0).abs() < 1e-9);
+    }
+}

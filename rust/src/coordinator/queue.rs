@@ -1,0 +1,200 @@
+//! Bounded multi-producer multi-consumer job queue with backpressure.
+//!
+//! Built on Mutex + Condvar (the offline build has no async runtime; a
+//! thread-per-worker design with a condvar queue is also simpler to reason
+//! about for a CPU-PJRT service). `push` blocks when the queue is full —
+//! that is the service's backpressure mechanism.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue. Clone freely; all clones share the queue.
+pub struct Queue<T> {
+    inner: Arc<(Mutex<Inner<T>>, Condvar, Condvar)>,
+    cap: usize,
+}
+
+impl<T> Clone for Queue<T> {
+    fn clone(&self) -> Self {
+        Queue {
+            inner: self.inner.clone(),
+            cap: self.cap,
+        }
+    }
+}
+
+impl<T> Queue<T> {
+    pub fn bounded(cap: usize) -> Queue<T> {
+        assert!(cap > 0);
+        Queue {
+            inner: Arc::new((
+                Mutex::new(Inner {
+                    q: VecDeque::new(),
+                    closed: false,
+                }),
+                Condvar::new(), // not_empty
+                Condvar::new(), // not_full
+            )),
+            cap,
+        }
+    }
+
+    /// Blocking push. Returns Err(item) if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let (m, not_empty, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop. None when closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let (m, not_empty, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Opportunistically pop another item matching `pred` (batch forming:
+    /// a worker groups same-bucket jobs without blocking).
+    pub fn try_pop_matching<F: Fn(&T) -> bool>(&self, pred: F) -> Option<T> {
+        let (m, _, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        let pos = g.q.iter().position(|x| pred(x))?;
+        let item = g.q.remove(pos);
+        not_full.notify_one();
+        item
+    }
+
+    /// Close: pushes fail, pops drain then return None.
+    pub fn close(&self) {
+        let (m, not_empty, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        g.closed = true;
+        not_empty.notify_all();
+        not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.0.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = Queue::bounded(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Queue::bounded(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert!(q.push(8).is_err());
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Queue::bounded(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            // This push must block until the main thread pops.
+            q2.push(2).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(q.len(), 1, "push should still be blocked");
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_pop_matching_selects_and_preserves_rest() {
+        let q = Queue::bounded(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.try_pop_matching(|&x| x == 3), Some(3));
+        assert_eq!(q.try_pop_matching(|&x| x == 99), None);
+        let rest: Vec<i32> = std::iter::from_fn(|| {
+            q.close();
+            q.pop()
+        })
+        .collect();
+        assert_eq!(rest, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q = Queue::bounded(16);
+        let n = 1000;
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..2)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n / 2 {
+                        q.push(p * (n / 2) + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+}

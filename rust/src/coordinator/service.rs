@@ -1,0 +1,247 @@
+//! The segmentation service: worker pool + shape-bucket batcher.
+//!
+//! This is the L3 coordination layer (DESIGN.md S12). Shape: a bounded
+//! MPMC job queue feeds `workers` threads; each worker owns its own PJRT
+//! client + compiled-executable cache (the xla handles are not Sync), and
+//! forms batches of same-bucket jobs so consecutive executions reuse one
+//! executable — the serving-system analogue of the paper's "load kernels
+//! once, stream pixel arrays through them".
+
+use super::job::{Engine, JobResult, SegmentJob};
+use super::metrics::{Metrics, Snapshot};
+use super::queue::Queue;
+use crate::config::Config;
+use crate::fcm::{canonical_relabel, FcmParams, FcmRun};
+use crate::image::{FeatureVector, GrayImage};
+use crate::runtime::{FcmExecutor, Registry};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+pub struct Service {
+    queue: Queue<SegmentJob>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+/// Ticket for an in-flight job.
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<Result<JobResult>>,
+}
+
+impl Ticket {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped the job (shutdown?)"))?
+    }
+}
+
+impl Service {
+    /// Start workers. Fails fast if the artifacts directory is unreadable.
+    pub fn start(cfg: &Config) -> Result<Service> {
+        // Validate the manifest up front (each worker re-opens it).
+        crate::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        let queue: Queue<SegmentJob> = Queue::bounded(cfg.service.queue_depth);
+        let metrics = Arc::new(Metrics::default());
+        let batch_ids = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for w in 0..cfg.service.workers {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let batch_ids = batch_ids.clone();
+            let artifacts_dir = cfg.artifacts_dir.clone();
+            let max_batch = cfg.service.max_batch;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fcm-worker-{w}"))
+                    .spawn(move || {
+                        worker_loop(w, &artifacts_dir, queue, metrics, batch_ids, max_batch)
+                    })
+                    .expect("spawning worker"),
+            );
+        }
+        Ok(Service {
+            queue,
+            workers,
+            metrics,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit features for segmentation. Blocks if the queue is full
+    /// (backpressure). Returns a ticket to wait on.
+    pub fn submit(
+        &self,
+        features: FeatureVector,
+        params: FcmParams,
+        engine: Engine,
+    ) -> Result<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let job = SegmentJob {
+            id,
+            features,
+            params,
+            engine,
+            submitted: Instant::now(),
+            respond: tx,
+        };
+        self.metrics.job_submitted();
+        self.queue
+            .push(job)
+            .map_err(|_| anyhow!("service is shut down"))?;
+        Ok(Ticket { id, rx })
+    }
+
+    /// Convenience: submit an 8-bit image.
+    pub fn submit_image(
+        &self,
+        img: &GrayImage,
+        params: FcmParams,
+        engine: Engine,
+    ) -> Result<Ticket> {
+        self.submit(FeatureVector::from_image(img), params, engine)
+    }
+
+    /// Graceful shutdown: drain the queue, join workers, return metrics.
+    pub fn shutdown(self) -> Snapshot {
+        self.queue.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+fn worker_loop(
+    worker_id: usize,
+    artifacts_dir: &str,
+    queue: Queue<SegmentJob>,
+    metrics: Arc<Metrics>,
+    batch_ids: Arc<AtomicU64>,
+    max_batch: usize,
+) {
+    // Per-thread PJRT client + executable cache. If artifacts are missing
+    // the worker still serves CPU-only engines.
+    let registry = Registry::open(std::path::Path::new(artifacts_dir)).ok();
+    let buckets: Vec<usize> = registry
+        .as_ref()
+        .map(|r| r.manifest.buckets(4, "pallas").iter().map(|a| a.pixels).collect())
+        .unwrap_or_default();
+
+    while let Some(first) = queue.pop() {
+        // Batch formation: group queued jobs that share the bucket AND the
+        // engine/cluster parameters, so one compiled executable serves the
+        // whole batch back-to-back.
+        let key = first.bucket_key(&buckets);
+        let clusters = first.params.clusters;
+        let engine = first.engine;
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            match queue.try_pop_matching(|j| {
+                j.engine == engine
+                    && j.params.clusters == clusters
+                    && j.bucket_key(&buckets) == key
+            }) {
+                Some(j) => batch.push(j),
+                None => break,
+            }
+        }
+        let batch_id = batch_ids.fetch_add(1, Ordering::Relaxed);
+        metrics.batch_formed();
+
+        for job in batch {
+            let queue_wait_s = job.submitted.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let outcome = serve(&registry, &job);
+            let service_s = t0.elapsed().as_secs_f64();
+            match outcome {
+                Ok((run, device)) => {
+                    metrics.job_completed(queue_wait_s, service_s, run.iterations);
+                    let result = JobResult {
+                        id: job.id,
+                        labels: run.labels,
+                        centers: run.centers,
+                        iterations: run.iterations,
+                        converged: run.converged,
+                        engine: job.engine,
+                        queue_wait_s,
+                        service_s,
+                        device,
+                        worker: worker_id,
+                        batch_id,
+                    };
+                    let _ = job.respond.send(Ok(result));
+                }
+                Err(e) => {
+                    metrics.job_failed();
+                    let _ = job.respond.send(Err(e));
+                }
+            }
+        }
+    }
+}
+
+/// Execute one job on the worker's engine of choice.
+fn serve(
+    registry: &Option<Registry>,
+    job: &SegmentJob,
+) -> Result<(FcmRun, Option<crate::runtime::DeviceStats>)> {
+    match job.engine {
+        Engine::Device | Engine::DeviceRef => {
+            let reg = registry
+                .as_ref()
+                .ok_or_else(|| anyhow!("no artifacts available on this worker"))?;
+            let flavor = if job.engine == Engine::Device {
+                "pallas"
+            } else {
+                "ref"
+            };
+            let exec = FcmExecutor::with_flavor(reg, flavor);
+            let (mut run, stats) = exec.segment(&job.features, &job.params)?;
+            canonical_relabel(&mut run);
+            Ok((run, Some(stats)))
+        }
+        Engine::Sequential => {
+            let mut run =
+                crate::fcm::sequential::run(&job.features.x, &job.features.w, &job.params);
+            canonical_relabel(&mut run);
+            Ok((run, None))
+        }
+        Engine::BrFcm => {
+            // Features -> 8-bit pixels (brFCM is defined on grey levels).
+            let px: Vec<u8> = job
+                .features
+                .x
+                .iter()
+                .zip(&job.features.w)
+                .filter(|(_, &w)| w > 0.0)
+                .map(|(&x, _)| x.clamp(0.0, 255.0) as u8)
+                .collect();
+            let mut br = crate::fcm::brfcm::run_on_pixels(&px, &job.params);
+            canonical_relabel(&mut br.bin_run);
+            let br = crate::fcm::brfcm::finish(&px, br.bin_run);
+            let iterations = br.bin_run.iterations;
+            let converged = br.bin_run.converged;
+            let run = FcmRun {
+                centers: br.bin_run.centers.clone(),
+                u: br.bin_run.u.clone(),
+                labels: br.labels,
+                iterations,
+                final_delta: br.bin_run.final_delta,
+                jm_history: br.bin_run.jm_history.clone(),
+                converged,
+            };
+            Ok((run, None))
+        }
+    }
+}

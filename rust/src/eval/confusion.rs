@@ -1,0 +1,117 @@
+//! Confusion matrix + derived metrics over label maps (extends the paper's
+//! DSC-only evaluation with per-class precision/recall and overall
+//! accuracy, used by EXPERIMENTS.md and the ablation bench).
+
+/// Row = ground-truth class, column = predicted class.
+#[derive(Clone, Debug)]
+pub struct Confusion {
+    pub n_classes: usize,
+    pub counts: Vec<u64>,
+}
+
+impl Confusion {
+    pub fn new(pred: &[u8], truth: &[u8], n_classes: u8) -> Confusion {
+        assert_eq!(pred.len(), truth.len());
+        let c = n_classes as usize;
+        let mut counts = vec![0u64; c * c];
+        for (&p, &t) in pred.iter().zip(truth) {
+            counts[t as usize * c + p as usize] += 1;
+        }
+        Confusion {
+            n_classes: c,
+            counts,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, truth: usize, pred: usize) -> u64 {
+        self.counts[truth * self.n_classes + pred]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Overall pixel accuracy.
+    pub fn accuracy(&self) -> f64 {
+        let correct: u64 = (0..self.n_classes).map(|j| self.at(j, j)).sum();
+        correct as f64 / self.total().max(1) as f64
+    }
+
+    /// Per-class precision: TP / (TP + FP). 1.0 when the class is never
+    /// predicted (no false positives possible).
+    pub fn precision(&self, class: usize) -> f64 {
+        let tp = self.at(class, class);
+        let predicted: u64 = (0..self.n_classes).map(|t| self.at(t, class)).sum();
+        if predicted == 0 {
+            1.0
+        } else {
+            tp as f64 / predicted as f64
+        }
+    }
+
+    /// Per-class recall: TP / (TP + FN). 1.0 when the class is absent.
+    pub fn recall(&self, class: usize) -> f64 {
+        let tp = self.at(class, class);
+        let actual: u64 = (0..self.n_classes).map(|p| self.at(class, p)).sum();
+        if actual == 0 {
+            1.0
+        } else {
+            tp as f64 / actual as f64
+        }
+    }
+
+    /// F1 per class. Note F1 == per-class Dice on label maps — used as a
+    /// cross-check of eval::dsc in tests.
+    pub fn f1(&self, class: usize) -> f64 {
+        let p = self.precision(class);
+        let r = self.recall(class);
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        let c = Confusion::new(&[0, 1, 2], &[0, 1, 2], 3);
+        assert_eq!(c.accuracy(), 1.0);
+        for j in 0..3 {
+            assert_eq!(c.precision(j), 1.0);
+            assert_eq!(c.recall(j), 1.0);
+        }
+    }
+
+    #[test]
+    fn counts_placed_correctly() {
+        // truth=1 predicted as 0 -> counts[1][0].
+        let c = Confusion::new(&[0], &[1], 2);
+        assert_eq!(c.at(1, 0), 1);
+        assert_eq!(c.at(0, 0), 0);
+        assert_eq!(c.accuracy(), 0.0);
+    }
+
+    #[test]
+    fn f1_equals_dice() {
+        let pred = [0u8, 1, 1, 0, 1, 0, 1, 1];
+        let truth = [0u8, 1, 0, 0, 1, 1, 1, 0];
+        let c = Confusion::new(&pred, &truth, 2);
+        let d = crate::eval::dice_per_class(&pred, &truth, 2);
+        for j in 0..2 {
+            assert!((c.f1(j) - d[j]).abs() < 1e-12, "class {j}");
+        }
+    }
+
+    #[test]
+    fn absent_class_conventions() {
+        let c = Confusion::new(&[0, 0], &[0, 0], 2);
+        assert_eq!(c.precision(1), 1.0);
+        assert_eq!(c.recall(1), 1.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Dice Similarity Coefficient (paper Equation 5, Zijdenbos et al.):
+//!
+//!   DSC = 2 |PR ∩ GT| / (|PR| + |GT|)
+//!
+//! computed per tissue class against the phantom ground truth — the metric
+//! behind the paper's Fig. 7.
+
+/// DSC between two binary masks. Returns 1.0 when both masks are empty
+//  (the conventional "perfectly agreeing on absence" case).
+pub fn dice(pred: &[bool], truth: &[bool]) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "mask length mismatch");
+    let mut inter = 0usize;
+    let mut pr = 0usize;
+    let mut gt = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        pr += p as usize;
+        gt += t as usize;
+        inter += (p && t) as usize;
+    }
+    if pr + gt == 0 {
+        return 1.0;
+    }
+    2.0 * inter as f64 / (pr + gt) as f64
+}
+
+/// DSC for every class id in `0..n_classes` between two label maps.
+pub fn dice_per_class(pred: &[u8], truth: &[u8], n_classes: u8) -> Vec<f64> {
+    assert_eq!(pred.len(), truth.len());
+    let c = n_classes as usize;
+    let mut inter = vec![0usize; c];
+    let mut pr = vec![0usize; c];
+    let mut gt = vec![0usize; c];
+    for (&p, &t) in pred.iter().zip(truth) {
+        pr[p as usize] += 1;
+        gt[t as usize] += 1;
+        if p == t {
+            inter[p as usize] += 1;
+        }
+    }
+    (0..c)
+        .map(|j| {
+            if pr[j] + gt[j] == 0 {
+                1.0
+            } else {
+                2.0 * inter[j] as f64 / (pr[j] + gt[j]) as f64
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_masks_score_one() {
+        let m = [true, false, true, true];
+        assert_eq!(dice(&m, &m), 1.0);
+    }
+
+    #[test]
+    fn disjoint_masks_score_zero() {
+        assert_eq!(dice(&[true, false], &[false, true]), 0.0);
+    }
+
+    #[test]
+    fn half_overlap() {
+        // |PR|=2, |GT|=2, inter=1 -> 2*1/4 = 0.5.
+        assert_eq!(dice(&[true, true, false], &[true, false, true]), 0.5);
+    }
+
+    #[test]
+    fn empty_masks_score_one() {
+        assert_eq!(dice(&[false, false], &[false, false]), 1.0);
+    }
+
+    #[test]
+    fn per_class_matches_manual() {
+        let pred = [0u8, 0, 1, 1, 2];
+        let truth = [0u8, 1, 1, 1, 2];
+        let d = dice_per_class(&pred, &truth, 3);
+        assert!((d[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((d[1] - 2.0 * 2.0 / 5.0).abs() < 1e-12);
+        assert_eq!(d[2], 1.0);
+    }
+
+    #[test]
+    fn per_class_agrees_with_mask_dice() {
+        let pred = [0u8, 1, 2, 3, 0, 1, 2, 3, 1, 1];
+        let truth = [0u8, 1, 2, 0, 0, 2, 2, 3, 1, 0];
+        let d = dice_per_class(&pred, &truth, 4);
+        for cls in 0..4u8 {
+            let pm: Vec<bool> = pred.iter().map(|&p| p == cls).collect();
+            let tm: Vec<bool> = truth.iter().map(|&t| t == cls).collect();
+            assert!((d[cls as usize] - dice(&pm, &tm)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let _ = dice(&[true], &[true, false]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation substrate: the paper's quantitative metrics (Section 5.2.2).
+
+pub mod confusion;
+pub mod dsc;
+
+pub use confusion::Confusion;
+pub use dsc::{dice, dice_per_class};

@@ -1,0 +1,276 @@
+//! Hard-clustering baselines from the paper's introduction: K-Means [2]
+//! and an ISODATA-style variant [4] with split/merge of clusters.
+//!
+//! Used by the Table-1 comparison bench and by tests as a sanity anchor
+//! (FCM with m->1 approaches K-Means assignments).
+
+use crate::util::Rng64;
+
+#[derive(Clone, Debug)]
+pub struct KMeansRun {
+    pub centers: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Within-cluster sum of squares per iteration (monotone).
+    pub wcss_history: Vec<f64>,
+}
+
+/// Lloyd's algorithm on 1-D intensities with weights (w=0 ignored).
+pub fn run(
+    x: &[f32],
+    w: &[f32],
+    k: usize,
+    max_iters: usize,
+    tol: f32,
+    seed: u64,
+) -> KMeansRun {
+    assert!(k >= 1 && x.len() == w.len());
+    let n = x.len();
+    // k-means++-style spread init on the weighted points, deterministic.
+    let mut centers = init_centers(x, w, k, seed);
+    let mut labels = vec![0u8; n];
+    let mut wcss_history = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _ in 0..max_iters {
+        iterations += 1;
+        // Assign.
+        let mut wcss = 0f64;
+        for i in 0..n {
+            if w[i] == 0.0 {
+                continue;
+            }
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for (j, &c) in centers.iter().enumerate() {
+                let d = (x[i] - c).abs();
+                if d < best_d {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            labels[i] = best as u8;
+            wcss += w[i] as f64 * (best_d as f64) * (best_d as f64);
+        }
+        wcss_history.push(wcss);
+        // Update.
+        let mut sum = vec![0f64; k];
+        let mut cnt = vec![0f64; k];
+        for i in 0..n {
+            if w[i] == 0.0 {
+                continue;
+            }
+            sum[labels[i] as usize] += (x[i] * w[i]) as f64;
+            cnt[labels[i] as usize] += w[i] as f64;
+        }
+        let mut moved = 0f32;
+        for j in 0..k {
+            if cnt[j] > 0.0 {
+                let c_new = (sum[j] / cnt[j]) as f32;
+                moved = moved.max((c_new - centers[j]).abs());
+                centers[j] = c_new;
+            }
+        }
+        if moved < tol {
+            converged = true;
+            break;
+        }
+    }
+    KMeansRun {
+        centers,
+        labels,
+        iterations,
+        converged,
+        wcss_history,
+    }
+}
+
+/// Deterministic k-means++ seeding over the weighted points.
+fn init_centers(x: &[f32], w: &[f32], k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng64::new(seed);
+    let real: Vec<usize> = (0..x.len()).filter(|&i| w[i] > 0.0).collect();
+    assert!(!real.is_empty(), "no weighted points");
+    let mut centers = vec![x[real[rng.below(real.len() as u64) as usize]]];
+    while centers.len() < k {
+        // Choose the next center w.p. proportional to w * d^2.
+        let d2: Vec<f64> = real
+            .iter()
+            .map(|&i| {
+                let d = centers
+                    .iter()
+                    .map(|&c| (x[i] - c).abs())
+                    .fold(f32::INFINITY, f32::min) as f64;
+                w[i] as f64 * d * d
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total == 0.0 {
+            // All points coincide with centers; duplicate one.
+            centers.push(centers[0]);
+            continue;
+        }
+        let mut t = rng.next_f64() * total;
+        let mut pick = real[real.len() - 1];
+        for (ri, &i) in real.iter().enumerate() {
+            t -= d2[ri];
+            if t <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centers.push(x[pick]);
+    }
+    centers
+}
+
+/// ISODATA-style refinement: run K-Means, then split clusters whose std
+/// exceeds `split_std` and merge centers closer than `merge_dist`,
+/// re-running Lloyd's between structural changes.
+pub fn isodata(
+    x: &[f32],
+    w: &[f32],
+    k_init: usize,
+    max_iters: usize,
+    split_std: f32,
+    merge_dist: f32,
+    seed: u64,
+) -> KMeansRun {
+    let mut k = k_init;
+    let mut best = run(x, w, k, max_iters, 1e-3, seed);
+    for round in 0..4 {
+        let mut centers = best.centers.clone();
+        // Merge pass.
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut merged = Vec::with_capacity(centers.len());
+        for c in centers {
+            match merged.last() {
+                Some(&last) if (c - last) < merge_dist => {
+                    let l = merged.len() - 1;
+                    merged[l] = (last + c) / 2.0;
+                }
+                _ => merged.push(c),
+            }
+        }
+        // Split pass.
+        let mut split = Vec::new();
+        for &c in &merged {
+            let (std, cnt) = cluster_std(x, w, &best, c);
+            if std > split_std && cnt > 2.0 {
+                split.push(c - std / 2.0);
+                split.push(c + std / 2.0);
+            } else {
+                split.push(c);
+            }
+        }
+        if split.len() == k {
+            break;
+        }
+        k = split.len();
+        best = run(x, w, k, max_iters, 1e-3, seed.wrapping_add(round + 1));
+    }
+    best
+}
+
+fn cluster_std(x: &[f32], w: &[f32], run: &KMeansRun, center: f32) -> (f32, f32) {
+    // std of points assigned to the center nearest `center`.
+    let j = run
+        .centers
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            (*a - center).abs().partial_cmp(&(*b - center).abs()).unwrap()
+        })
+        .map(|(i, _)| i as u8)
+        .unwrap_or(0);
+    let mut sum = 0f64;
+    let mut sq = 0f64;
+    let mut cnt = 0f64;
+    for i in 0..x.len() {
+        if w[i] > 0.0 && run.labels[i] == j {
+            sum += (x[i] * w[i]) as f64;
+            sq += (x[i] as f64) * (x[i] as f64) * w[i] as f64;
+            cnt += w[i] as f64;
+        }
+    }
+    if cnt == 0.0 {
+        return (0.0, 0.0);
+    }
+    let mean = sum / cnt;
+    ((sq / cnt - mean * mean).max(0.0).sqrt() as f32, cnt as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn modes(n: usize, mus: &[f32], seed: u64) -> Vec<f32> {
+        let mut rng = Rng64::new(seed);
+        (0..n)
+            .map(|i| rng.gauss(mus[i % mus.len()], 2.0))
+            .collect()
+    }
+
+    #[test]
+    fn kmeans_finds_two_modes() {
+        let x = modes(2000, &[40.0, 210.0], 1);
+        let w = vec![1.0; x.len()];
+        let r = run(&x, &w, 2, 100, 1e-3, 7);
+        assert!(r.converged);
+        let mut c = r.centers.clone();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((c[0] - 40.0).abs() < 1.0 && (c[1] - 210.0).abs() < 1.0, "{c:?}");
+    }
+
+    #[test]
+    fn wcss_monotone() {
+        let x = modes(1500, &[30.0, 120.0, 220.0], 2);
+        let w = vec![1.0; x.len()];
+        let r = run(&x, &w, 3, 100, 1e-4, 3);
+        for win in r.wcss_history.windows(2) {
+            assert!(win[1] <= win[0] * (1.0 + 1e-9), "{:?}", r.wcss_history);
+        }
+    }
+
+    #[test]
+    fn weights_zero_are_ignored() {
+        let mut x = modes(500, &[50.0, 200.0], 4);
+        let mut w = vec![1.0; x.len()];
+        // Poison pixels with w = 0 far outside the data range.
+        x.extend([10_000.0; 100]);
+        w.extend([0.0; 100]);
+        let r = run(&x, &w, 2, 100, 1e-3, 5);
+        assert!(r.centers.iter().all(|&c| c < 300.0), "{:?}", r.centers);
+    }
+
+    #[test]
+    fn kmeans_deterministic_per_seed() {
+        let x = modes(800, &[60.0, 190.0], 6);
+        let w = vec![1.0; x.len()];
+        let a = run(&x, &w, 2, 50, 1e-3, 11);
+        let b = run(&x, &w, 2, 50, 1e-3, 11);
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn isodata_merges_duplicate_clusters() {
+        // One true mode, ask for 3 clusters: merge should collapse them.
+        let x = modes(1000, &[100.0], 7);
+        let w = vec![1.0; x.len()];
+        let r = isodata(&x, &w, 3, 50, 50.0, 10.0, 8);
+        assert!(r.centers.len() <= 3);
+        assert!(r.centers.iter().all(|&c| (c - 100.0).abs() < 5.0));
+    }
+
+    #[test]
+    fn isodata_splits_wide_cluster() {
+        // Two far modes, start with 1 cluster: split should find both.
+        let x = modes(2000, &[40.0, 220.0], 9);
+        let w = vec![1.0; x.len()];
+        let r = isodata(&x, &w, 1, 100, 30.0, 10.0, 10);
+        assert!(r.centers.len() >= 2, "{:?}", r.centers);
+    }
+}

@@ -1,0 +1,241 @@
+//! Fuzzy C-Means core: shared types, membership initialization,
+//! defuzzification and the objective — plus the algorithm variants:
+//!
+//! * [`sequential`] — the paper's CPU baseline (Algorithm 1, faithful to
+//!   the JIPCookbook-derived C implementation it cites).
+//! * [`brfcm`] — the data-reduction variant of Eschrich et al. used as a
+//!   comparator in the paper's Table 1 (Mahmoud et al. row).
+//! * [`kmeans`] — hard-clustering baseline from the paper's intro (Section
+//!   1 cites K-Means and ISODATA as the other segmentation clusterers).
+//! * [`spatial`] — spatial FCM (neighbourhood-modulated memberships), the
+//!   canonical noise-robust extension; motivated by experiment E11.
+//! * [`validity`] — cluster-validity indices (extension; used by the
+//!   ablation bench to sanity-check segmentation quality beyond DSC).
+//!
+//! The *parallel* FCM is not here: it is the L1/L2 AOT artifact executed by
+//! [`crate::runtime`], mirroring the paper's CPU-host / GPU-device split.
+
+pub mod brfcm;
+pub mod kmeans;
+pub mod sequential;
+pub mod spatial;
+pub mod validity;
+
+use crate::util::Rng64;
+
+/// Tolerance below which a squared distance counts as "on a center".
+/// Must match python/compile/kernels/fcm.py::ZERO_TOL.
+pub const ZERO_TOL: f64 = 1e-12;
+
+/// Guard for empty-cluster denominators; matches the kernels' DEN_EPS.
+pub const DEN_EPS: f64 = 1e-12;
+
+/// Parameters of one FCM run (defaults = paper Algorithm 1 step 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FcmParams {
+    pub clusters: usize,
+    pub m: f32,
+    pub epsilon: f32,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for FcmParams {
+    fn default() -> Self {
+        FcmParams {
+            clusters: 4,
+            m: 2.0,
+            epsilon: 0.005,
+            max_iters: 300,
+            seed: 42,
+        }
+    }
+}
+
+impl From<&crate::config::FcmConfig> for FcmParams {
+    fn from(c: &crate::config::FcmConfig) -> Self {
+        FcmParams {
+            clusters: c.clusters,
+            m: c.m,
+            epsilon: c.epsilon,
+            max_iters: c.max_iters,
+            seed: c.seed,
+        }
+    }
+}
+
+/// Result of a converged FCM run.
+#[derive(Clone, Debug)]
+pub struct FcmRun {
+    /// Final cluster centers, length = clusters.
+    pub centers: Vec<f32>,
+    /// Final membership matrix, row-major `[cluster][pixel]`, c*n.
+    pub u: Vec<f32>,
+    /// Hard labels after defuzzification, length n.
+    pub labels: Vec<u8>,
+    /// Iterations executed until `delta < epsilon` (or max_iters).
+    pub iterations: usize,
+    /// Last max |u_new - u_old|.
+    pub final_delta: f32,
+    /// Objective J_m per iteration (Equation 1) — monotone non-increasing.
+    pub jm_history: Vec<f64>,
+    pub converged: bool,
+}
+
+/// Random membership initialization (paper Algorithm 1 step 2): uniform
+/// random rows normalized so that sum_j u_ij = 1 (constraint 2).
+pub fn init_membership(clusters: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng64::new(seed);
+    let mut u = vec![0f32; clusters * n];
+    for i in 0..n {
+        let mut sum = 0f32;
+        for j in 0..clusters {
+            // Bounded away from 0 so no row starts degenerate.
+            let v = rng.uniform(0.01, 1.0);
+            u[j * n + i] = v;
+            sum += v;
+        }
+        for j in 0..clusters {
+            u[j * n + i] /= sum;
+        }
+    }
+    u
+}
+
+/// Masked init: same stream, but pixels with w=0 get all-zero membership
+/// (bucket padding; see image::feature).
+pub fn init_membership_masked(clusters: usize, w: &[f32], seed: u64) -> Vec<f32> {
+    let n = w.len();
+    let mut u = init_membership(clusters, n, seed);
+    for i in 0..n {
+        if w[i] == 0.0 {
+            for j in 0..clusters {
+                u[j * n + i] = 0.0;
+            }
+        }
+    }
+    u
+}
+
+/// Defuzzification (paper Section 2.1 final step): argmax over clusters.
+pub fn defuzzify(u: &[f32], clusters: usize, n: usize) -> Vec<u8> {
+    assert_eq!(u.len(), clusters * n);
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let mut best = 0usize;
+        let mut best_v = u[i];
+        for j in 1..clusters {
+            let v = u[j * n + i];
+            if v > best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        labels[i] = best as u8;
+    }
+    labels
+}
+
+/// Objective function J_m (Equation 1), weighted form.
+pub fn objective(x: &[f32], w: &[f32], u: &[f32], centers: &[f32], m: f32) -> f64 {
+    let n = x.len();
+    let c = centers.len();
+    let mut jm = 0f64;
+    for j in 0..c {
+        let vj = centers[j] as f64;
+        for i in 0..n {
+            let d = x[i] as f64 - vj;
+            jm += w[i] as f64 * (u[j * n + i] as f64).powf(m as f64) * d * d;
+        }
+    }
+    jm
+}
+
+/// Map cluster indices so centers are in ascending intensity order.
+///
+/// FCM labels are permutation-symmetric across runs/seeds; canonicalizing
+/// by center intensity makes segmentations comparable (background = lowest
+/// intensity = class 0, then CSF, GM, WM for T1 phantoms).
+pub fn canonical_relabel(run: &mut FcmRun) {
+    let c = run.centers.len();
+    let mut order: Vec<usize> = (0..c).collect();
+    order.sort_by(|&a, &b| run.centers[a].partial_cmp(&run.centers[b]).unwrap());
+    // rank[old_cluster] = new label
+    let mut rank = vec![0u8; c];
+    for (new, &old) in order.iter().enumerate() {
+        rank[old] = new as u8;
+    }
+    for l in run.labels.iter_mut() {
+        *l = rank[*l as usize];
+    }
+    let n = run.u.len() / c;
+    let old_u = run.u.clone();
+    let old_centers = run.centers.clone();
+    for (new, &old) in order.iter().enumerate() {
+        run.centers[new] = old_centers[old];
+        run.u[new * n..(new + 1) * n].copy_from_slice(&old_u[old * n..(old + 1) * n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_rows_sum_to_one() {
+        let (c, n) = (4, 100);
+        let u = init_membership(c, n, 1);
+        for i in 0..n {
+            let s: f32 = (0..c).map(|j| u[j * n + i]).sum();
+            assert!((s - 1.0).abs() < 1e-5, "pixel {i}: sum {s}");
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        assert_eq!(init_membership(3, 50, 9), init_membership(3, 50, 9));
+        assert_ne!(init_membership(3, 50, 9), init_membership(3, 50, 10));
+    }
+
+    #[test]
+    fn masked_init_zeroes_padding() {
+        let w = [1.0, 1.0, 0.0, 0.0];
+        let u = init_membership_masked(2, &w, 3);
+        assert_eq!(&u[2..4], &[0.0, 0.0]);
+        assert_eq!(&u[6..8], &[0.0, 0.0]);
+        assert!(u[0] > 0.0 && u[4] > 0.0);
+    }
+
+    #[test]
+    fn defuzzify_argmax() {
+        // u layout [cluster][pixel]; 2 clusters, 3 pixels.
+        let u = [0.9, 0.2, 0.5, 0.1, 0.8, 0.5];
+        assert_eq!(defuzzify(&u, 2, 3), vec![0, 1, 0]); // tie -> lowest index
+    }
+
+    #[test]
+    fn objective_zero_when_pixels_on_centers() {
+        let x = [1.0, 5.0];
+        let w = [1.0, 1.0];
+        let u = [1.0, 0.0, 0.0, 1.0];
+        let v = [1.0, 5.0];
+        assert_eq!(objective(&x, &w, &u, &v, 2.0), 0.0);
+    }
+
+    #[test]
+    fn relabel_orders_by_center() {
+        let mut run = FcmRun {
+            centers: vec![200.0, 10.0],
+            u: vec![0.9, 0.1, 0.1, 0.9],
+            labels: vec![0, 1],
+            iterations: 1,
+            final_delta: 0.0,
+            jm_history: vec![],
+            converged: true,
+        };
+        canonical_relabel(&mut run);
+        assert_eq!(run.centers, vec![10.0, 200.0]);
+        assert_eq!(run.labels, vec![1, 0]);
+        assert_eq!(run.u, vec![0.1, 0.9, 0.9, 0.1]);
+    }
+}

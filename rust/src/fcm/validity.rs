@@ -1,0 +1,88 @@
+//! Cluster-validity indices for fuzzy partitions (Bezdek): partition
+//! coefficient, partition entropy, and Xie-Beni. Extensions beyond the
+//! paper, used by the ablation bench to quantify segmentation quality
+//! without ground truth.
+
+/// Partition coefficient PC = (1/n) sum_ij u_ij^2, in (1/c, 1].
+/// 1 = crisp partition; 1/c = maximally fuzzy.
+pub fn partition_coefficient(u: &[f32], clusters: usize, n: usize) -> f64 {
+    assert_eq!(u.len(), clusters * n);
+    let s: f64 = u.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    s / n as f64
+}
+
+/// Partition entropy PE = -(1/n) sum_ij u_ij ln u_ij, in [0, ln c).
+/// 0 = crisp; ln(c) = maximally fuzzy.
+pub fn partition_entropy(u: &[f32], clusters: usize, n: usize) -> f64 {
+    assert_eq!(u.len(), clusters * n);
+    let s: f64 = u
+        .iter()
+        .map(|&v| {
+            let v = v as f64;
+            if v > 0.0 {
+                v * v.ln()
+            } else {
+                0.0
+            }
+        })
+        .sum();
+    -s / n as f64
+}
+
+/// Xie-Beni index: J_m-style compactness over separation; lower is better.
+pub fn xie_beni(x: &[f32], u: &[f32], centers: &[f32], m: f32) -> f64 {
+    let n = x.len();
+    let c = centers.len();
+    assert_eq!(u.len(), c * n);
+    let mut num = 0f64;
+    for j in 0..c {
+        let vj = centers[j] as f64;
+        for i in 0..n {
+            let d = x[i] as f64 - vj;
+            num += (u[j * n + i] as f64).powf(m as f64) * d * d;
+        }
+    }
+    let mut min_sep = f64::INFINITY;
+    for a in 0..c {
+        for b in (a + 1)..c {
+            let d = (centers[a] - centers[b]) as f64;
+            min_sep = min_sep.min(d * d);
+        }
+    }
+    num / (n as f64 * min_sep.max(1e-30))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pc_crisp_is_one() {
+        // 2 clusters, 2 pixels, crisp.
+        let u = [1.0, 0.0, 0.0, 1.0];
+        assert!((partition_coefficient(&u, 2, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pc_uniform_is_one_over_c() {
+        let u = [0.5, 0.5, 0.5, 0.5];
+        assert!((partition_coefficient(&u, 2, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pe_crisp_is_zero_and_uniform_is_ln_c() {
+        let crisp = [1.0, 0.0, 0.0, 1.0];
+        assert!(partition_entropy(&crisp, 2, 2).abs() < 1e-12);
+        let fuzzy = [0.5, 0.5, 0.5, 0.5];
+        assert!((partition_entropy(&fuzzy, 2, 2) - (2f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn xie_beni_prefers_separated_tight_clusters() {
+        let x = [0.0, 1.0, 100.0, 101.0];
+        let crisp_u = [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 1.0];
+        let good = xie_beni(&x, &crisp_u, &[0.5, 100.5], 2.0);
+        let bad = xie_beni(&x, &crisp_u, &[40.0, 60.0], 2.0);
+        assert!(good < bad, "good={good} bad={bad}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Calibrated analytic execution model of the paper's testbed.
+//!
+//! Purpose (DESIGN.md section 3, substitution 3): we have no Tesla C2050 or
+//! i5-480M, so Table 3 / Fig. 8 are regenerated through a cost model whose
+//! *structure* comes from the paper's own description (per-pixel kernels,
+//! Algorithm-2 tree reduction, host transfers, per-cluster kernel launches)
+//! and whose *rates* are calibrated against the paper's published Table 3.
+//! The model therefore reproduces the paper's curve shape — superlinear
+//! ends, mid-range dip, crossovers at ~110 KB and ~360 KB — and its
+//! components can be ablated to probe the paper's Section 5.3 "open
+//! questions" (bench `repro bench-ablation`).
+//!
+//! Components:
+//!   sequential: T = I * n * t_px_cpu * cache_penalty(working_set)
+//!   parallel:   T = transfer(n) + I * [launches + n * t_px_gpu * occ(n)
+//!                   + reduction(n)]
+//! where `occ(n)` is an empirical mid-size contention bump calibrated from
+//! the paper's own parallel column (their open question #3: the 100-360 KB
+//! region loses superlinearity). With the bump disabled the model predicts
+//! the monotone curve classical occupancy analysis would give.
+
+use super::device::{DeviceSpec, INTEL_I5_480, TESLA_C2050};
+
+/// FCM iteration arithmetic per pixel (c=4, m=2): distance, u^2 terms,
+/// membership ratio sums — about 12 flops per (pixel, cluster) for the
+/// center phase plus c^2-ish for the membership phase.
+pub fn flops_per_pixel_iter(clusters: usize) -> f64 {
+    let c = clusters as f64;
+    6.0 * c + 4.0 * c * c
+}
+
+/// The paper's Table 3, embedded for calibration + comparison output:
+/// (KB, sequential seconds, parallel seconds).
+pub const PAPER_TABLE3: [(usize, f64, f64); 14] = [
+    (20, 57.0, 0.102),
+    (40, 114.0, 0.195),
+    (60, 177.0, 0.321),
+    (80, 231.0, 0.505),
+    (100, 287.0, 0.632),
+    (120, 341.0, 0.864),
+    (140, 394.0, 0.977),
+    (160, 446.0, 0.986),
+    (180, 503.0, 1.22),
+    (200, 558.0, 1.45),
+    (300, 845.0, 2.18),
+    (500, 1420.0, 2.4),
+    (700, 1955.0, 2.9),
+    (1000, 2798.0, 4.2),
+];
+
+/// Assumed convergence iteration count baked into the per-op rates.
+/// (The paper never states its iteration count; rates below are per-pixel
+/// *per run*, i.e. I is folded in during calibration.)
+pub const CALIB_ITERS: f64 = 100.0;
+
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub gpu: DeviceSpec,
+    pub cpu: DeviceSpec,
+    /// Sequential per-pixel-per-run seconds (calibrated: their C code on
+    /// the i5 averages 2.82 s/KB across Table 3 — about 1.9 effective
+    /// MFLOP/s, i.e. ~0.01% of the i5's 23 GFLOPs peak; the paper's
+    /// superlinear speedup is largely this baseline inefficiency).
+    pub t_px_cpu: f64,
+    /// CPU cache penalty multiplier once the working set spills LLC.
+    pub cpu_cache_penalty: f64,
+    /// Parallel asymptotic per-pixel-per-run seconds (large-n plateau of
+    /// their parallel column: ~4.1e-3 s/KB).
+    pub t_px_gpu: f64,
+    /// Mid-size contention bump: amplitude (relative to t_px_gpu),
+    /// center (bytes) and log-width. Calibrated on their parallel column.
+    pub bump_amp: f64,
+    pub bump_center_bytes: f64,
+    pub bump_log_sigma: f64,
+    /// Fixed per-run overhead on the GPU (setup + final transfers).
+    pub t_fixed_gpu: f64,
+    /// Ablation toggles (bench-ablation flips these).
+    pub enable_bump: bool,
+    pub enable_cpu_cache_term: bool,
+    pub enable_transfer: bool,
+    pub enable_launch_overhead: bool,
+    /// Clusters (kernel launches per phase scale with c — Section 4.2).
+    pub clusters: usize,
+}
+
+impl CostModel {
+    /// The calibrated model of the paper's testbed.
+    pub fn calibrated_c2050() -> CostModel {
+        CostModel {
+            gpu: TESLA_C2050,
+            cpu: INTEL_I5_480,
+            // Their sequential column is near-linear at 2.83 s/KB (+-4%)
+            // => per pixel (KB = 1024 px).
+            t_px_cpu: 2.83 / 1024.0,
+            // Their data shows no LLC spill kink; keep the term as an
+            // ablation knob (what a cache-bound baseline WOULD look like).
+            cpu_cache_penalty: 0.0,
+            // 4.15e-3 s/KB asymptote of their parallel column.
+            t_px_gpu: 4.15e-3 / 1024.0,
+            bump_amp: 0.80,
+            bump_center_bytes: 190.0 * 1024.0,
+            bump_log_sigma: 0.67,
+            t_fixed_gpu: 0.018,
+            enable_bump: true,
+            enable_cpu_cache_term: true,
+            enable_transfer: true,
+            enable_launch_overhead: true,
+            clusters: 4,
+        }
+    }
+
+    /// Sequential FCM seconds for a dataset of `bytes` pixels.
+    pub fn seq_seconds(&self, bytes: usize) -> f64 {
+        let n = bytes as f64;
+        // Working set: x (4B) + u,u_new (2*c*4B) per pixel.
+        let ws = n * (4.0 + 8.0 * self.clusters as f64);
+        let mut penalty = 1.0;
+        if self.enable_cpu_cache_term {
+            // Smooth LLC spill: up to +cpu_cache_penalty when ws >> LLC.
+            let x = (ws / self.cpu.llc_bytes as f64).ln();
+            penalty += self.cpu_cache_penalty / (1.0 + (-x).exp());
+        }
+        n * self.t_px_cpu * penalty
+    }
+
+    /// Parallel FCM seconds for a dataset of `bytes` pixels.
+    pub fn par_seconds(&self, bytes: usize) -> f64 {
+        let n = bytes as f64;
+        let mut t = self.t_fixed_gpu;
+        if self.enable_transfer {
+            // x up once, memberships down each epsilon test (paper 4.3
+            // ships u back per iteration; fold into the calibrated fixed +
+            // linear terms, count the explicit initial transfer here).
+            let bytes_moved = bytes as f64 * (4.0 + 4.0 * self.clusters as f64);
+            t += bytes_moved / (self.gpu.pcie_gbs * 1e9);
+        }
+        if self.enable_launch_overhead {
+            // Per run: I iterations x (4 kernels x c clusters + 1 kernel).
+            let launches = CALIB_ITERS * (4.0 * self.clusters as f64 + 1.0);
+            t += launches * self.gpu.launch_overhead_s;
+        }
+        let mut per_px = self.t_px_gpu;
+        if self.enable_bump {
+            let z = (bytes as f64 / self.bump_center_bytes).ln() / self.bump_log_sigma;
+            per_px += self.t_px_gpu * self.bump_amp * (-0.5 * z * z).exp();
+        }
+        // Algorithm-2 reduction: logarithmic stage count, negligible per
+        // element but kept for structure (and the reduction demo).
+        let red = self.gpu.reduction_steps(bytes) as f64
+            * self.gpu.launch_overhead_s
+            * CALIB_ITERS
+            * if self.enable_launch_overhead { 1.0 } else { 0.0 };
+        t + n * per_px + red
+    }
+
+    /// Speedup (the paper's Fig. 8 series).
+    pub fn speedup(&self, bytes: usize) -> f64 {
+        self.seq_seconds(bytes) / self.par_seconds(bytes)
+    }
+
+    /// Whether the model calls `bytes` superlinear (speedup > processors).
+    pub fn superlinear(&self, bytes: usize) -> bool {
+        self.speedup(bytes) > self.gpu.processors as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_sequential_within_5pct() {
+        let m = CostModel::calibrated_c2050();
+        for &(kb, seq, _) in &PAPER_TABLE3 {
+            let got = m.seq_seconds(kb * 1024);
+            let err = (got - seq).abs() / seq;
+            assert!(err < 0.05, "{kb}KB: model {got:.0}s vs paper {seq}s");
+        }
+    }
+
+    #[test]
+    fn matches_paper_parallel_within_25pct() {
+        // The parallel column is noisier (their 30-run averages wobble);
+        // the model must stay within 25% everywhere and 15% on average.
+        let m = CostModel::calibrated_c2050();
+        let mut errs = Vec::new();
+        for &(kb, _, par) in &PAPER_TABLE3 {
+            let got = m.par_seconds(kb * 1024);
+            let err = (got - par).abs() / par;
+            assert!(err < 0.25, "{kb}KB: model {got:.3}s vs paper {par}s");
+            errs.push(err);
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean < 0.15, "mean error {mean:.3}");
+    }
+
+    #[test]
+    fn fig8_shape_superlinear_ends_dip_middle() {
+        let m = CostModel::calibrated_c2050();
+        // Superlinear at both ends (paper Fig. 8).
+        assert!(m.superlinear(20 * 1024), "20KB should be superlinear");
+        assert!(m.superlinear(40 * 1024));
+        assert!(m.superlinear(700 * 1024));
+        assert!(m.superlinear(1000 * 1024));
+        // Dip below 448 in the mid-range (open question #3).
+        assert!(!m.superlinear(160 * 1024), "160KB should dip");
+        assert!(!m.superlinear(200 * 1024));
+        assert!(!m.superlinear(300 * 1024));
+    }
+
+    #[test]
+    fn crossovers_near_paper_locations() {
+        let m = CostModel::calibrated_c2050();
+        // Lower crossover between 80 and 140 KB.
+        let lower = (80..=140)
+            .find(|kb| !m.superlinear(kb * 1024))
+            .expect("no lower crossover");
+        assert!((80..=140).contains(&lower), "lower at {lower}KB");
+        // Upper crossover between 300 and 500 KB.
+        let upper = (300..=500)
+            .find(|kb| m.superlinear(kb * 1024))
+            .expect("no upper crossover");
+        assert!((300..=500).contains(&upper), "upper at {upper}KB");
+    }
+
+    #[test]
+    fn headline_speedup_band() {
+        // Paper: up to ~674-fold at 700 KB; our model should put 700KB-1MB
+        // in the 550-700x band.
+        let m = CostModel::calibrated_c2050();
+        for kb in [700usize, 1000] {
+            let s = m.speedup(kb * 1024);
+            assert!((550.0..700.0).contains(&s), "{kb}KB speedup {s:.0}");
+        }
+    }
+
+    #[test]
+    fn ablation_disabling_bump_restores_monotone_region() {
+        let mut m = CostModel::calibrated_c2050();
+        m.enable_bump = false;
+        // Without the contention bump the mid-range is superlinear too.
+        assert!(m.superlinear(200 * 1024));
+        assert!(m.superlinear(300 * 1024));
+    }
+
+    #[test]
+    fn transfer_and_launch_terms_positive() {
+        let m = CostModel::calibrated_c2050();
+        let mut m2 = m.clone();
+        m2.enable_transfer = false;
+        m2.enable_launch_overhead = false;
+        for kb in [20usize, 200, 1000] {
+            assert!(m.par_seconds(kb * 1024) > m2.par_seconds(kb * 1024));
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Device specifications for the paper's testbed (Table 2 + Section 5.3).
+
+/// Static description of a compute device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Parallel processing elements (the paper's horizontal line in Fig. 8).
+    pub processors: u32,
+    /// Peak single-precision GFLOP/s (paper cites 1030 for the C2050 and
+    /// 23 for the i5 — their superlinearity argument, Section 5.3).
+    pub gflops_peak: f64,
+    /// Memory bandwidth GB/s.
+    pub mem_bw_gbs: f64,
+    /// Last-level cache bytes (Fermi L2 = 768 KiB; i5-480M L3 = 3 MiB).
+    pub llc_bytes: usize,
+    /// Host<->device transfer bandwidth GB/s (PCIe gen2 x16 effective).
+    pub pcie_gbs: f64,
+    /// Kernel-launch overhead, seconds.
+    pub launch_overhead_s: f64,
+    /// CUDA block size used by the paper's kernels (blockDim.x = 128,
+    /// inferred from its "1048576/128 << 1" reduction example).
+    pub block_dim: u32,
+}
+
+/// NVIDIA Tesla C2050 — the paper's GPU (Table 2).
+pub const TESLA_C2050: DeviceSpec = DeviceSpec {
+    name: "NVIDIA Tesla C2050",
+    processors: 448,
+    gflops_peak: 1030.0,
+    mem_bw_gbs: 144.0,
+    llc_bytes: 768 * 1024,
+    pcie_gbs: 6.0,
+    launch_overhead_s: 5e-6,
+    block_dim: 128,
+};
+
+/// Intel Core i5-480M — the paper's sequential CPU (Section 5.1).
+pub const INTEL_I5_480: DeviceSpec = DeviceSpec {
+    name: "Intel Core i5-480M",
+    processors: 1,
+    gflops_peak: 23.0,
+    mem_bw_gbs: 17.1,
+    llc_bytes: 3 * 1024 * 1024,
+    pcie_gbs: 0.0,
+    launch_overhead_s: 0.0,
+    block_dim: 1,
+};
+
+impl DeviceSpec {
+    /// Tree-reduction depth for n elements (Algorithm 2): ceil(log2) steps
+    /// inside a block, then a second stage over n/blockDim partials.
+    pub fn reduction_steps(&self, n: usize) -> u32 {
+        let bd = self.block_dim.max(2) as usize;
+        let in_block = (bd as f64).log2().ceil() as u32;
+        let partials = n.div_ceil(bd);
+        let final_stage = (partials.max(2) as f64).log2().ceil() as u32;
+        in_block + final_stage
+    }
+
+    /// Host->device transfer seconds for `bytes`.
+    pub fn transfer_seconds(&self, bytes: usize) -> f64 {
+        if self.pcie_gbs <= 0.0 {
+            0.0
+        } else {
+            bytes as f64 / (self.pcie_gbs * 1e9)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c2050_matches_paper_table2() {
+        assert_eq!(TESLA_C2050.processors, 448);
+        assert_eq!(TESLA_C2050.gflops_peak, 1030.0);
+        assert_eq!(INTEL_I5_480.gflops_peak, 23.0);
+    }
+
+    #[test]
+    fn reduction_depth_log() {
+        // 1M elements, blockDim 128: 7 in-block steps + 13 final-stage.
+        let steps = TESLA_C2050.reduction_steps(1 << 20);
+        assert_eq!(steps, 7 + 13);
+    }
+
+    #[test]
+    fn transfer_linear_in_bytes() {
+        let t1 = TESLA_C2050.transfer_seconds(1 << 20);
+        let t2 = TESLA_C2050.transfer_seconds(2 << 20);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert_eq!(INTEL_I5_480.transfer_seconds(1 << 20), 0.0);
+    }
+}

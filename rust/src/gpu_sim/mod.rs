@@ -1,0 +1,14 @@
+//! GPU execution-model simulator — the testbed substitute (DESIGN.md §3).
+//!
+//! We have neither a Tesla C2050 nor the paper's Intel i5; this module is
+//! the calibrated analytic model of both devices that regenerates the
+//! paper's Table 3 and Fig. 8 (and the ablations probing its Section 5.3
+//! open questions). Our *own* stack's measured wall-clock is reported
+//! separately by the benches so simulated and measured numbers are never
+//! conflated.
+
+pub mod cost;
+pub mod device;
+
+pub use cost::{CostModel, CALIB_ITERS, PAPER_TABLE3};
+pub use device::{DeviceSpec, INTEL_I5_480, TESLA_C2050};

@@ -1,0 +1,142 @@
+//! In-tree micro-benchmark harness (the offline build has no criterion).
+//!
+//! Methodology mirrors the paper's Section 5.3: wall-clock timing of the
+//! measured region only (initialization excluded), averaged over repeated
+//! runs — the paper used 30; `Opts::runs` defaults to a time-boxed
+//! adaptive count with a floor, reporting mean/std/min/median/p95.
+
+use crate::util::Summary;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Opts {
+    /// Warmup executions (excluded from stats).
+    pub warmup: usize,
+    /// Minimum measured runs.
+    pub min_runs: usize,
+    /// Maximum measured runs.
+    pub max_runs: usize,
+    /// Stop adding runs once this much time has been spent measuring.
+    pub max_seconds: f64,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            warmup: 1,
+            min_runs: 5,
+            max_runs: 30, // the paper's run count
+            max_seconds: 10.0,
+        }
+    }
+}
+
+impl Opts {
+    /// Quick preset for cheap units under test.
+    pub fn quick() -> Opts {
+        Opts {
+            warmup: 1,
+            min_runs: 3,
+            max_runs: 10,
+            max_seconds: 2.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: usize,
+    /// Per-run seconds.
+    pub seconds: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.seconds.mean
+    }
+}
+
+/// Time `f`, which performs one complete run per call.
+pub fn bench<F: FnMut()>(name: &str, opts: &Opts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.min_runs);
+    let started = Instant::now();
+    while samples.len() < opts.max_runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= opts.min_runs && started.elapsed().as_secs_f64() > opts.max_seconds {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        runs: samples.len(),
+        seconds: Summary::of(&samples),
+    }
+}
+
+/// Time a single run of `f` returning (result, seconds) — for benches where
+/// each run produces data the caller also needs.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_at_least_min() {
+        let mut count = 0;
+        let r = bench(
+            "noop",
+            &Opts {
+                warmup: 2,
+                min_runs: 4,
+                max_runs: 6,
+                max_seconds: 0.0,
+            },
+            || count += 1,
+        );
+        // 2 warmup + 4 measured (max_seconds exceeded instantly after min).
+        assert_eq!(r.runs, 4);
+        assert_eq!(count, 6);
+    }
+
+    #[test]
+    fn bench_caps_at_max_runs() {
+        let r = bench(
+            "noop",
+            &Opts {
+                warmup: 0,
+                min_runs: 1,
+                max_runs: 8,
+                max_seconds: 60.0,
+            },
+            || {},
+        );
+        assert_eq!(r.runs, 8);
+    }
+
+    #[test]
+    fn measured_time_reasonable() {
+        let r = bench("sleep", &Opts::quick(), || {
+            std::thread::sleep(std::time::Duration::from_millis(10))
+        });
+        assert!(r.seconds.min >= 0.009, "{:?}", r.seconds);
+        assert!(r.seconds.mean < 0.5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, s) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

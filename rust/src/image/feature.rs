@@ -1,0 +1,124 @@
+//! Feature-space transform (paper Fig. 4 + section 5.1): images become 1-D
+//! f32 vectors for coalesced/bucketed device access, plus the padding mask
+//! the runtime uses to fit a pixel count into an AOT shape bucket.
+
+use crate::image::GrayImage;
+
+/// A 1-D feature vector with its validity mask.
+///
+/// `x[i]` is the intensity of pixel i (row-major flattening); `w[i]` is 1.0
+/// for real pixels and 0.0 for bucket padding. The L1 kernels zero the
+/// membership of w=0 pixels so padding never influences cluster centers
+/// (tested end-to-end in python/tests/test_model.py).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureVector {
+    pub x: Vec<f32>,
+    pub w: Vec<f32>,
+    /// Number of real (unpadded) pixels.
+    pub n_real: usize,
+}
+
+impl FeatureVector {
+    /// Flatten an image to features (no padding yet).
+    pub fn from_image(img: &GrayImage) -> FeatureVector {
+        let x: Vec<f32> = img.pixels.iter().map(|&p| p as f32).collect();
+        let n_real = x.len();
+        FeatureVector {
+            x,
+            w: vec![1.0; n_real],
+            n_real,
+        }
+    }
+
+    /// Build from raw intensities (brFCM histogram path, tests).
+    pub fn from_values(x: Vec<f32>) -> FeatureVector {
+        let n_real = x.len();
+        FeatureVector {
+            x,
+            w: vec![1.0; n_real],
+            n_real,
+        }
+    }
+
+    /// Weighted features (brFCM: x = bin values, w = bin counts).
+    pub fn weighted(x: Vec<f32>, w: Vec<f32>) -> FeatureVector {
+        assert_eq!(x.len(), w.len());
+        let n_real = x.len();
+        FeatureVector { x, w, n_real }
+    }
+
+    /// Current (possibly padded) length.
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+}
+
+/// Pad a feature vector up to `bucket` pixels with w=0 entries.
+///
+/// Pad intensity is 0.0 — the value is irrelevant since w=0 pixels carry
+/// zero membership, but 0 keeps the buffer friendly to compression and
+/// debugging. Panics if the vector is already longer than the bucket.
+pub fn pad_to(fv: &FeatureVector, bucket: usize) -> FeatureVector {
+    assert!(
+        fv.len() <= bucket,
+        "cannot pad {} pixels into bucket {}",
+        fv.len(),
+        bucket
+    );
+    let mut x = fv.x.clone();
+    let mut w = fv.w.clone();
+    x.resize(bucket, 0.0);
+    w.resize(bucket, 0.0);
+    FeatureVector {
+        x,
+        w,
+        n_real: fv.n_real,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::GrayImage;
+
+    #[test]
+    fn flatten_is_row_major() {
+        let img = GrayImage::from_pixels(2, 2, vec![1, 2, 3, 4]);
+        let fv = FeatureVector::from_image(&img);
+        assert_eq!(fv.x, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(fv.n_real, 4);
+        assert!(fv.w.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn pad_appends_zero_weight() {
+        let fv = FeatureVector::from_values(vec![5.0, 6.0]);
+        let p = pad_to(&fv, 4);
+        assert_eq!(p.x, vec![5.0, 6.0, 0.0, 0.0]);
+        assert_eq!(p.w, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(p.n_real, 2);
+    }
+
+    #[test]
+    fn pad_to_same_size_is_identity() {
+        let fv = FeatureVector::from_values(vec![1.0; 8]);
+        assert_eq!(pad_to(&fv, 8), fv);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_smaller_bucket_panics() {
+        let fv = FeatureVector::from_values(vec![0.0; 10]);
+        let _ = pad_to(&fv, 8);
+    }
+
+    #[test]
+    fn weighted_keeps_counts() {
+        let fv = FeatureVector::weighted(vec![0.0, 1.0], vec![10.0, 3.0]);
+        assert_eq!(fv.w, vec![10.0, 3.0]);
+    }
+}

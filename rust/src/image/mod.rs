@@ -1,0 +1,152 @@
+//! Image substrate: grayscale images, PGM I/O, and the 2-D -> 1-D feature
+//! transform of paper Fig. 4.
+
+pub mod feature;
+pub mod pgm;
+
+pub use feature::{pad_to, FeatureVector};
+
+/// An 8-bit grayscale image (the paper's input type: intensity images).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GrayImage {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major pixels, length = width * height.
+    pub pixels: Vec<u8>,
+}
+
+impl GrayImage {
+    pub fn new(width: usize, height: usize) -> GrayImage {
+        GrayImage {
+            width,
+            height,
+            pixels: vec![0; width * height],
+        }
+    }
+
+    pub fn from_pixels(width: usize, height: usize, pixels: Vec<u8>) -> GrayImage {
+        assert_eq!(pixels.len(), width * height, "pixel buffer size mismatch");
+        GrayImage {
+            width,
+            height,
+            pixels,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.pixels.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pixels.is_empty()
+    }
+
+    /// Fig. 4's indexing: (row, col) -> row * width + col.
+    #[inline]
+    pub fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.height && col < self.width);
+        row * self.width + col
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u8 {
+        self.pixels[self.idx(row, col)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, v: u8) {
+        let i = self.idx(row, col);
+        self.pixels[i] = v;
+    }
+
+    /// Dataset size in bytes (1 byte/pixel) — the x-axis of paper Table 3.
+    pub fn size_bytes(&self) -> usize {
+        self.pixels.len()
+    }
+}
+
+/// A labeled segmentation: one class id per pixel, same layout as the image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LabelMap {
+    pub width: usize,
+    pub height: usize,
+    pub labels: Vec<u8>,
+}
+
+impl LabelMap {
+    pub fn new(width: usize, height: usize) -> LabelMap {
+        LabelMap {
+            width,
+            height,
+            labels: vec![0; width * height],
+        }
+    }
+
+    pub fn from_labels(width: usize, height: usize, labels: Vec<u8>) -> LabelMap {
+        assert_eq!(labels.len(), width * height);
+        LabelMap {
+            width,
+            height,
+            labels,
+        }
+    }
+
+    /// Binary mask for one class (the paper's per-tissue ground-truth form,
+    /// Fig. 6b-e) — input to the DSC metric.
+    pub fn mask(&self, class: u8) -> Vec<bool> {
+        self.labels.iter().map(|&l| l == class).collect()
+    }
+
+    /// Render to a viewable image: class id -> evenly spread grey level.
+    pub fn to_image(&self, n_classes: u8) -> GrayImage {
+        let scale = if n_classes <= 1 { 0 } else { 255 / (n_classes - 1) as u16 };
+        let px = self
+            .labels
+            .iter()
+            .map(|&l| (l as u16 * scale).min(255) as u8)
+            .collect();
+        GrayImage::from_pixels(self.width, self.height, px)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_is_row_major() {
+        let img = GrayImage::new(10, 4);
+        assert_eq!(img.idx(0, 0), 0);
+        assert_eq!(img.idx(1, 0), 10);
+        assert_eq!(img.idx(3, 9), 39);
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut img = GrayImage::new(5, 5);
+        img.set(2, 3, 200);
+        assert_eq!(img.get(2, 3), 200);
+        assert_eq!(img.get(3, 2), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_pixels_size_checked() {
+        let _ = GrayImage::from_pixels(4, 4, vec![0; 15]);
+    }
+
+    #[test]
+    fn label_mask() {
+        let lm = LabelMap::from_labels(2, 2, vec![0, 1, 1, 2]);
+        assert_eq!(lm.mask(1), vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn label_render_spreads_grey_levels() {
+        let lm = LabelMap::from_labels(2, 2, vec![0, 1, 2, 3]);
+        let img = lm.to_image(4);
+        assert_eq!(img.pixels, vec![0, 85, 170, 255]);
+    }
+}

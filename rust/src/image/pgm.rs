@@ -1,0 +1,163 @@
+//! PGM (portable graymap) reader/writer — P5 binary and P2 ASCII.
+//!
+//! PGM is the interchange format for every image this repo emits (segmented
+//! slices, ground-truth masks, phantoms), chosen because it is inspectable
+//! with any image viewer and needs no codec dependency.
+
+use crate::image::GrayImage;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Write binary (P5) PGM.
+pub fn write(img: &GrayImage, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write_to(img, &mut f)
+}
+
+pub fn write_to<W: Write>(img: &GrayImage, w: &mut W) -> Result<()> {
+    write!(w, "P5\n{} {}\n255\n", img.width, img.height)?;
+    w.write_all(&img.pixels)?;
+    Ok(())
+}
+
+/// Read either P5 (binary) or P2 (ASCII) PGM.
+pub fn read(path: &Path) -> Result<GrayImage> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    parse(&buf).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse(buf: &[u8]) -> Result<GrayImage> {
+    let mut pos = 0;
+    let magic = next_token(buf, &mut pos).context("missing magic")?;
+    let binary = match magic.as_str() {
+        "P5" => true,
+        "P2" => false,
+        m => bail!("unsupported PGM magic {m:?}"),
+    };
+    let width: usize = next_token(buf, &mut pos)
+        .context("missing width")?
+        .parse()
+        .context("bad width")?;
+    let height: usize = next_token(buf, &mut pos)
+        .context("missing height")?
+        .parse()
+        .context("bad height")?;
+    let maxval: usize = next_token(buf, &mut pos)
+        .context("missing maxval")?
+        .parse()
+        .context("bad maxval")?;
+    if maxval == 0 || maxval > 255 {
+        bail!("only 8-bit PGM supported (maxval {maxval})");
+    }
+    let n = width
+        .checked_mul(height)
+        .context("width*height overflow")?;
+    let rescale = |v: usize| -> u8 { ((v * 255) / maxval) as u8 };
+    let pixels: Vec<u8> = if binary {
+        // Exactly one whitespace byte separates the header from raster data.
+        let data = &buf[pos + 1..];
+        if data.len() < n {
+            bail!("P5 raster truncated: need {n} bytes, have {}", data.len());
+        }
+        data[..n].iter().map(|&b| rescale(b as usize)).collect()
+    } else {
+        let mut px = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = next_token(buf, &mut pos).context("P2 raster truncated")?;
+            px.push(rescale(t.parse::<usize>().context("bad P2 sample")?));
+        }
+        px
+    };
+    Ok(GrayImage::from_pixels(width, height, pixels))
+}
+
+/// Next whitespace-delimited token, skipping `#` comment lines.
+fn next_token(buf: &[u8], pos: &mut usize) -> Option<String> {
+    loop {
+        while *pos < buf.len() && buf[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+        if *pos < buf.len() && buf[*pos] == b'#' {
+            while *pos < buf.len() && buf[*pos] != b'\n' {
+                *pos += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    let start = *pos;
+    while *pos < buf.len() && !buf[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+    if *pos > start {
+        Some(String::from_utf8_lossy(&buf[start..*pos]).into_owned())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> GrayImage {
+        GrayImage::from_pixels(3, 2, vec![0, 128, 255, 10, 20, 30])
+    }
+
+    #[test]
+    fn p5_roundtrip_via_buffer() {
+        let img = sample();
+        let mut buf = Vec::new();
+        write_to(&img, &mut buf).unwrap();
+        assert_eq!(parse(&buf).unwrap(), img);
+    }
+
+    #[test]
+    fn p5_roundtrip_via_file() {
+        let dir = std::env::temp_dir().join(format!("pgm_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.pgm");
+        write(&sample(), &path).unwrap();
+        assert_eq!(read(&path).unwrap(), sample());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn p2_ascii_parses() {
+        let text = b"P2\n# comment\n3 2\n255\n0 128 255\n10 20 30\n";
+        assert_eq!(parse(text).unwrap(), sample());
+    }
+
+    #[test]
+    fn maxval_rescaling() {
+        let text = b"P2\n2 1\n100\n0 100\n";
+        assert_eq!(parse(text).unwrap().pixels, vec![0, 255]);
+    }
+
+    #[test]
+    fn header_comments_in_p5() {
+        let mut buf: Vec<u8> = b"P5\n# made by tests\n3 2\n255\n".to_vec();
+        buf.extend_from_slice(&sample().pixels);
+        assert_eq!(parse(&buf).unwrap(), sample());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"P6\n1 1\n255\nx").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_raster() {
+        assert!(parse(b"P5\n4 4\n255\nabc").is_err());
+    }
+
+    #[test]
+    fn rejects_16bit() {
+        assert!(parse(b"P2\n1 1\n65535\n1234\n").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! # repro — GPU-Based Fuzzy C-Means for Image Segmentation
+//!
+//! A three-layer reproduction of Almazrooie, Vadiveloo & Abdullah (2016),
+//! *"GPU-Based Fuzzy C-Means Clustering Algorithm for Image Segmentation"*:
+//!
+//! * **L1/L2** (build time, Python): Pallas kernels + a JAX iteration graph,
+//!   AOT-lowered to HLO text artifacts (`python/compile/`).
+//! * **L3** (this crate): the coordinator — PJRT runtime executing the
+//!   artifacts on the request path, plus every substrate the paper's
+//!   evaluation needs: phantom data, skull stripping, sequential/brFCM/
+//!   K-Means baselines, DSC evaluation, a calibrated GPU/CPU cost model,
+//!   and a threaded segmentation service.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod fcm;
+pub mod gpu_sim;
+pub mod harness;
+pub mod image;
+pub mod phantom;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod cli;

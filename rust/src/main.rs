@@ -1,0 +1,387 @@
+//! `repro` — launcher for the GPU-FCM reproduction.
+//!
+//! Subcommands (see DESIGN.md section 5 for the experiment mapping):
+//!   segment         segment a PGM image (or a generated phantom slice)
+//!   phantom         generate phantom slices / ground truth (Fig. 6)
+//!   serve           run the batching service on a synthetic workload
+//!   bench-table1    related-work comparison frame (E1)
+//!   bench-table3    Table 3 execution times (E8)
+//!   bench-fig5      qualitative slices as PGMs (E5)
+//!   bench-fig7      DSC table (E7)
+//!   bench-fig8      speedup curve + ASCII chart (E9)
+//!   bench-ablation  cost-model component ablation (E10)
+//!   demo-reduction  Algorithm 2 on-device demo (E3)
+//!   info            artifact + device info
+
+use anyhow::{bail, Result};
+use repro::cli::Args;
+use repro::config::Config;
+use repro::coordinator::{Engine, Service};
+use repro::fcm::{canonical_relabel, FcmParams};
+use repro::image::{pgm, FeatureVector, LabelMap};
+use repro::phantom::{self, PhantomConfig};
+use repro::report::experiments as exp;
+use repro::runtime::Registry;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::from_file(Path::new(p))?,
+        None => {
+            let default = Path::new("repro.toml");
+            if default.exists() {
+                Config::from_file(default)?
+            } else {
+                Config::new()
+            }
+        }
+    };
+    // Direct overrides for the common knobs, then generic --set k=v,...
+    for key in [
+        "clusters", "m", "epsilon", "max_iters", "seed", "workers", "max_batch",
+        "queue_depth", "artifacts_dir",
+    ] {
+        if let Some(v) = args.get(key) {
+            cfg.set(key, v)?;
+        }
+    }
+    for (k, v) in args.set_overrides() {
+        cfg.set(&k, &v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<()> {
+    let sub = args.subcommand.as_deref().unwrap_or("help");
+    match sub {
+        "segment" => segment(args),
+        "phantom" => phantom_cmd(args),
+        "serve" => serve(args),
+        "bench-table1" => {
+            let cfg = load_config(args)?;
+            let runs = args.get_usize("runs", 5)?;
+            println!("== Table 1: method comparison (this repo's measured stack) ==");
+            exp::table1(&cfg, runs)?.print();
+            Ok(())
+        }
+        "bench-table3" => {
+            let cfg = load_config(args)?;
+            let sizes = match args.get("sizes") {
+                Some(s) => exp::parse_sizes(s)?,
+                None => exp::table3_sizes(args.flag("quick")),
+            };
+            let runs = args.get_usize("runs", if args.flag("quick") { 3 } else { 5 })?;
+            println!("== Table 3: execution time, sequential vs parallel FCM ==");
+            println!("(sim = calibrated C2050/i5 model; our = this stack measured)\n");
+            exp::table3(&cfg, &sizes, runs)?.print();
+            Ok(())
+        }
+        "bench-fig5" => {
+            let cfg = load_config(args)?;
+            let out = Path::new(args.get_or("out", "out/fig5"));
+            println!("== Fig. 5: qualitative segmentations ==");
+            for line in exp::fig5(&cfg, out)? {
+                println!("{line}");
+            }
+            Ok(())
+        }
+        "bench-fig7" => {
+            let cfg = load_config(args)?;
+            println!("== Fig. 7: Dice similarity, sequential vs parallel ==");
+            exp::fig7(&cfg)?.print();
+            Ok(())
+        }
+        "bench-fig8" => {
+            let sizes = match args.get("sizes") {
+                Some(s) => exp::parse_sizes(s)?,
+                None => exp::fig8_sizes(),
+            };
+            println!("== Fig. 8: speedup over sequential (calibrated model) ==");
+            let (table, chart) = exp::fig8(&sizes);
+            table.print();
+            println!("\n{chart}");
+            Ok(())
+        }
+        "bench-ablation" => {
+            let sizes = match args.get("sizes") {
+                Some(s) => exp::parse_sizes(s)?,
+                None => exp::table3_sizes(false),
+            };
+            println!("== Ablation: cost-model components (Sec. 5.3 open questions) ==");
+            exp::ablation(&sizes).print();
+            Ok(())
+        }
+        "bench-robustness" => {
+            let cfg = load_config(args)?;
+            println!("== Extension: DSC vs noise / intensity non-uniformity ==");
+            exp::robustness(&cfg)?.print();
+            Ok(())
+        }
+        "demo-reduction" => {
+            let cfg = load_config(args)?;
+            print!("{}", exp::reduction_demo(&cfg)?);
+            Ok(())
+        }
+        "info" => info(args),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+/// `repro segment [--input x.pgm | --slice 96] [--engine device|seq|brfcm]`
+fn segment(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let params = FcmParams::from(&cfg.fcm);
+    let (img, gt) = match args.get("input") {
+        Some(p) => (pgm::read(Path::new(p))?, None),
+        None => {
+            let slice = args.get_usize("slice", 96)?;
+            let s = phantom::generate_slice(&PhantomConfig {
+                slice,
+                seed: cfg.fcm.seed,
+                with_skull: args.flag("with-skull"),
+                ..PhantomConfig::default()
+            });
+            (s.image, Some(s.ground_truth))
+        }
+    };
+    // Optional preprocessing, as in the paper (Section 5.2).
+    let img = if args.flag("skull-strip") {
+        let (stripped, _) =
+            phantom::skullstrip::strip(&img, &phantom::skullstrip::StripParams::default());
+        stripped
+    } else {
+        img
+    };
+
+    let engine = match args.get_or("engine", "device") {
+        "device" => Engine::Device,
+        "device-ref" => Engine::DeviceRef,
+        "seq" | "sequential" => Engine::Sequential,
+        "brfcm" => Engine::BrFcm,
+        "spatial" => {
+            // Spatial FCM runs outside the Engine enum (it needs 2-D
+            // structure, not a flat feature vector).
+            let t0 = std::time::Instant::now();
+            let mut run = repro::fcm::spatial::run(
+                &img,
+                &params,
+                &repro::fcm::spatial::SpatialParams::default(),
+            );
+            canonical_relabel(&mut run);
+            println!(
+                "engine=Spatial pixels={} iters={} converged={} wall={:.3}s centers={:?}",
+                img.len(), run.iterations, run.converged,
+                t0.elapsed().as_secs_f64(), run.centers
+            );
+            if let Some(gt) = gt {
+                let d = repro::eval::dice_per_class(&run.labels, &gt.labels, params.clusters as u8);
+                println!("DSC vs ground truth: {:?}", d.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>());
+            }
+            if let Some(out) = args.get("out") {
+                let lm = LabelMap::from_labels(img.width, img.height, run.labels.clone());
+                pgm::write(&lm.to_image(params.clusters as u8), Path::new(out))?;
+            }
+            return Ok(());
+        }
+        e => bail!("unknown engine {e:?}"),
+    };
+
+    if args.flag("trace") {
+        println!("[trace] phase 1: init membership (host, seed {})", params.seed);
+        println!("[trace] phase 2: transfer pixels+membership to device");
+        println!("[trace] phase 3: iterate centers->memberships->epsilon (device)");
+        println!("[trace] phase 4: defuzzify on host");
+    }
+
+    let fv = FeatureVector::from_image(&img);
+    let t0 = std::time::Instant::now();
+    let (mut run, stats) = match engine {
+        Engine::Sequential => (repro::fcm::sequential::run(&fv.x, &fv.w, &params), None),
+        Engine::BrFcm => {
+            let br = repro::fcm::brfcm::run(&img, &params);
+            let iterations = br.bin_run.iterations;
+            (
+                repro::fcm::FcmRun {
+                    centers: br.bin_run.centers.clone(),
+                    u: br.bin_run.u.clone(),
+                    labels: br.labels,
+                    iterations,
+                    final_delta: br.bin_run.final_delta,
+                    jm_history: br.bin_run.jm_history.clone(),
+                    converged: br.bin_run.converged,
+                },
+                None,
+            )
+        }
+        Engine::Device | Engine::DeviceRef => {
+            let registry = Registry::open(Path::new(&cfg.artifacts_dir))?;
+            let flavor = if engine == Engine::Device { "pallas" } else { "ref" };
+            let exec = repro::runtime::FcmExecutor::with_flavor(&registry, flavor);
+            let (run, stats) = exec.segment(&fv, &params)?;
+            (run, Some(stats))
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    canonical_relabel(&mut run);
+
+    println!(
+        "engine={engine:?} pixels={} iters={} converged={} delta={:.5} wall={wall:.3}s",
+        fv.n_real, run.iterations, run.converged, run.final_delta
+    );
+    println!("centers (ascending): {:?}", run.centers);
+    if let Some(st) = stats {
+        println!(
+            "device: bucket={} upload={:.4}s iterate={:.4}s finish={:.4}s",
+            st.bucket, st.upload_s, st.iterate_s, st.finish_s
+        );
+    }
+    if let Some(gt) = gt {
+        let d = repro::eval::dice_per_class(&run.labels, &gt.labels, params.clusters as u8);
+        println!(
+            "DSC vs ground truth: {:?}",
+            d.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>()
+        );
+    }
+    if let Some(out) = args.get("out") {
+        let lm = LabelMap::from_labels(img.width, img.height, run.labels.clone());
+        pgm::write(&lm.to_image(params.clusters as u8), Path::new(out))?;
+        println!("segmentation written to {out}");
+    }
+    Ok(())
+}
+
+/// `repro phantom --slice 96 [--ground-truth] [--with-skull] --out dir`
+fn phantom_cmd(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let slice = args.get_usize("slice", 96)?;
+    let outdir = Path::new(args.get_or("out", "out/phantom"));
+    if args.flag("ground-truth") {
+        for line in exp::fig6(&cfg, slice, outdir)? {
+            println!("{line}");
+        }
+        return Ok(());
+    }
+    std::fs::create_dir_all(outdir)?;
+    let s = phantom::generate_slice(&PhantomConfig {
+        slice,
+        seed: cfg.fcm.seed,
+        with_skull: args.flag("with-skull"),
+        ..PhantomConfig::default()
+    });
+    let p = outdir.join(format!("slice{slice}.pgm"));
+    pgm::write(&s.image, &p)?;
+    println!("{}", p.display());
+    Ok(())
+}
+
+/// `repro serve --jobs 32 [--engine device] --workers N`
+/// Drives the batching service with a synthetic multi-slice workload and
+/// prints the service metrics (the paper's pipeline as a server).
+fn serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let jobs = args.get_usize("jobs", 16)?;
+    let engine = match args.get_or("engine", "device") {
+        "device" => Engine::Device,
+        "seq" => Engine::Sequential,
+        "brfcm" => Engine::BrFcm,
+        e => bail!("unknown engine {e:?}"),
+    };
+    let params = FcmParams::from(&cfg.fcm);
+    println!(
+        "serving {jobs} jobs on {} workers (engine {engine:?}, max_batch {})",
+        cfg.service.workers, cfg.service.max_batch
+    );
+    let service = Service::start(&cfg)?;
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let s = phantom::generate_slice(&PhantomConfig {
+                slice: 70 + (i * 5) % 60,
+                seed: cfg.fcm.seed.wrapping_add(i as u64),
+                ..PhantomConfig::default()
+            });
+            service.submit_image(&s.image, params, engine)
+        })
+        .collect::<Result<_>>()?;
+    let mut total_iters = 0usize;
+    for t in tickets {
+        let r = t.wait()?;
+        total_iters += r.iterations;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = service.shutdown();
+    println!(
+        "done in {wall:.2}s  throughput {:.2} jobs/s  total iterations {total_iters}",
+        jobs as f64 / wall
+    );
+    println!("{snap:#?}");
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let registry = Registry::open(Path::new(&cfg.artifacts_dir))?;
+    println!(
+        "PJRT platform: {} ({} device(s))",
+        registry.client.platform_name(),
+        registry.client.device_count()
+    );
+    println!("artifacts in {}:", cfg.artifacts_dir);
+    let mut t =
+        repro::report::Table::new(["kind", "flavor", "pixels", "clusters", "m", "block", "path"]);
+    for a in &registry.manifest.artifacts {
+        t.row([
+            a.kind.clone(),
+            a.flavor.clone(),
+            a.pixels.to_string(),
+            a.clusters.to_string(),
+            a.m.to_string(),
+            a.block.to_string(),
+            a.path.clone(),
+        ]);
+    }
+    t.print();
+    println!("\nsimulated testbed (DESIGN.md section 3):");
+    for d in [repro::gpu_sim::TESLA_C2050, repro::gpu_sim::INTEL_I5_480] {
+        println!(
+            "  {} — {} PEs, {:.0} GFLOPs peak, {:.0} GB/s",
+            d.name, d.processors, d.gflops_peak, d.mem_bw_gbs
+        );
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+repro — GPU-Based Fuzzy C-Means (Almazrooie et al. 2016) reproduction
+
+USAGE: repro <subcommand> [options]
+
+  segment        --input x.pgm | --slice 96  [--engine device|seq|brfcm|spatial]
+                 [--skull-strip] [--out seg.pgm] [--trace]
+  phantom        --slice 96 [--ground-truth] [--with-skull] [--out dir]
+  serve          --jobs 32 [--engine device] [--workers N]
+  bench-table1   [--runs 5]
+  bench-table3   [--quick] [--sizes 20KB,100KB,1MB] [--runs 5]
+  bench-fig5     [--out out/fig5]
+  bench-fig7
+  bench-fig8     [--sizes ...]
+  bench-ablation [--sizes ...]
+  bench-robustness
+  demo-reduction
+  info
+
+COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
+        --seed N --workers N --artifacts_dir DIR --set k=v,k=v
+";

@@ -1,0 +1,168 @@
+//! Size-scaled datasets for the Table 3 / Fig. 8 sweeps.
+//!
+//! The paper's phantom slice is ~6 KB; to time larger inputs the authors
+//! "enlarged the original phantom dataset ... up to 1MB ... only on the
+//! basis to evaluate the execution time" (Section 5.3). We mirror that:
+//! a sized dataset is a mosaic of phantom slices (successive slice
+//! indices and seeds, so pixels are not literal copies) trimmed to the
+//! requested byte count. FCM is pixel-wise on intensity, so the mosaic
+//! preserves the clustering workload exactly.
+
+use super::slice_gen::{generate_slice, PhantomConfig, PhantomSlice};
+use crate::image::{GrayImage, LabelMap};
+
+/// The Table 3 dataset sizes in bytes (1 byte/pixel).
+pub const TABLE3_SIZES: [usize; 14] = [
+    20 * 1024,
+    40 * 1024,
+    60 * 1024,
+    80 * 1024,
+    100 * 1024,
+    120 * 1024,
+    140 * 1024,
+    160 * 1024,
+    180 * 1024,
+    200 * 1024,
+    300 * 1024,
+    500 * 1024,
+    700 * 1024,
+    1000 * 1024,
+];
+
+/// A dataset of exactly `bytes` pixels with ground truth.
+#[derive(Clone, Debug)]
+pub struct SizedDataset {
+    pub image: GrayImage,
+    pub ground_truth: LabelMap,
+    /// The slice indices mosaicked in.
+    pub slices_used: Vec<usize>,
+}
+
+/// Generate a dataset of exactly `bytes` pixels (1 byte each).
+///
+/// Layout: near-square mosaic of base slices; the trailing partial tile is
+/// cropped row-wise so every pixel still comes from real phantom anatomy.
+pub fn sized_dataset(bytes: usize, seed: u64) -> SizedDataset {
+    assert!(bytes > 0);
+    let base_cfg = PhantomConfig::default();
+    let tile_px = base_cfg.width * base_cfg.height; // ~39k pixels
+    let n_tiles = bytes.div_ceil(tile_px);
+
+    // Mosaic grid: as square as possible.
+    let cols = (n_tiles as f64).sqrt().ceil() as usize;
+    let rows = n_tiles.div_ceil(cols);
+
+    let mut tiles: Vec<PhantomSlice> = Vec::with_capacity(n_tiles);
+    let mut slices_used = Vec::with_capacity(n_tiles);
+    for t in 0..n_tiles {
+        // March through plausible brain slices; vary seed with tile.
+        let slice = 70 + (t * 7) % 60;
+        slices_used.push(slice);
+        tiles.push(generate_slice(&PhantomConfig {
+            slice,
+            seed: seed.wrapping_add(t as u64 * 0x9E37),
+            ..base_cfg.clone()
+        }));
+    }
+
+    let full_w = cols * base_cfg.width;
+    let full_h = rows * base_cfg.height;
+    let mut img = GrayImage::new(full_w, full_h);
+    let mut gt = LabelMap::new(full_w, full_h);
+    for (t, tile) in tiles.iter().enumerate() {
+        let tr = (t / cols) * base_cfg.height;
+        let tc = (t % cols) * base_cfg.width;
+        for r in 0..base_cfg.height {
+            for c in 0..base_cfg.width {
+                let src = r * base_cfg.width + c;
+                let dst = (tr + r) * full_w + (tc + c);
+                img.pixels[dst] = tile.image.pixels[src];
+                gt.labels[dst] = tile.ground_truth.labels[src];
+            }
+        }
+    }
+
+    // Crop to the byte count with a row-aligned window CENTERED on the
+    // mosaic: a top-anchored crop of a single tile would keep mostly
+    // background rows (above the head) and break the 4-intensity-mode
+    // structure FCM clusters; centering keeps all tissues represented at
+    // every size.
+    let total = img.pixels.len();
+    let start = ((total - bytes) / 2) / full_w * full_w;
+    img.pixels = img.pixels[start..start + bytes].to_vec();
+    gt.labels = gt.labels[start..start + bytes].to_vec();
+    // Height bookkeeping: the last row may be partial; store exact pixel
+    // count via a 1-row-high remainder convention.
+    let h = bytes / full_w;
+    let rem = bytes % full_w;
+    if rem == 0 {
+        img.height = h;
+        gt.height = h;
+    } else {
+        // Reshape to a (h*full_w + rem) vector as 1 row of `bytes` pixels
+        // if it does not divide evenly — keeps width*height == len.
+        img.width = bytes;
+        img.height = 1;
+        gt.width = bytes;
+        gt.height = 1;
+    }
+    debug_assert_eq!(img.pixels.len(), img.width * img.height);
+
+    SizedDataset {
+        image: img,
+        ground_truth: gt,
+        slices_used,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_byte_sizes() {
+        for &b in &[20 * 1024, 33_333, 100 * 1024] {
+            let d = sized_dataset(b, 1);
+            assert_eq!(d.image.size_bytes(), b);
+            assert_eq!(d.ground_truth.labels.len(), b);
+            assert_eq!(d.image.pixels.len(), d.image.width * d.image.height);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = sized_dataset(50_000, 9);
+        let b = sized_dataset(50_000, 9);
+        assert_eq!(a.image, b.image);
+    }
+
+    #[test]
+    fn different_tiles_differ() {
+        // Enlargement is not literal copying: different tiles = different
+        // slices/seeds, so the two halves of a 2-tile dataset differ.
+        let d = sized_dataset(80_000, 2);
+        assert!(d.slices_used.len() >= 2);
+        assert_ne!(d.slices_used[0], d.slices_used[1]);
+    }
+
+    #[test]
+    fn has_all_classes_at_every_size() {
+        for &b in &[20 * 1024, 200 * 1024] {
+            let d = sized_dataset(b, 3);
+            let mut seen = [0usize; 4];
+            for &l in &d.ground_truth.labels {
+                seen[l as usize] += 1;
+            }
+            for (c, &n) in seen.iter().enumerate() {
+                assert!(n > 20, "size {b}: class {c} has {n} px");
+            }
+        }
+    }
+
+    #[test]
+    fn table3_sizes_match_paper() {
+        assert_eq!(TABLE3_SIZES[0], 20 * 1024);
+        assert_eq!(TABLE3_SIZES[13], 1000 * 1024);
+        assert_eq!(TABLE3_SIZES.len(), 14);
+    }
+}

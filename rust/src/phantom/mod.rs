@@ -1,0 +1,28 @@
+//! Digital brain-phantom substrate — the stand-in for the BrainWeb MR
+//! simulator dataset the paper segments (Collins et al. [23]).
+//!
+//! Substitution rationale (DESIGN.md section 3): FCM observes only the
+//! grey-level distribution of the image — four intensity modes (background,
+//! CSF, GM, WM) with partial-volume mixing at tissue borders and MRI
+//! magnitude (Rician) noise. This generator reproduces exactly those
+//! statistics on top of a parametric slice anatomy, and emits the same
+//! per-tissue ground-truth masks the paper evaluates DSC against (Fig. 6).
+//!
+//! * [`tissue`] — tissue classes and T1-weighted intensity models
+//! * [`slice_gen`] — axial slice anatomy (nested ellipses + cortical folds)
+//! * [`skullstrip`] — morphological skull stripping (paper cites Dogdas
+//!   et al. [24] as preprocessing; we implement the same
+//!   threshold/erode/component/dilate pipeline)
+//! * [`dataset`] — size-scaled datasets for Table 3 (the paper "enlarged"
+//!   its 6KB phantom up to 1MB purely to measure execution time)
+
+pub mod dataset;
+pub mod skullstrip;
+pub mod slice_gen;
+pub mod tissue;
+pub mod volume;
+
+pub use dataset::sized_dataset;
+pub use slice_gen::{generate_slice, PhantomConfig, PhantomSlice};
+pub use tissue::Tissue;
+pub use volume::{generate_volume, PhantomVolume};

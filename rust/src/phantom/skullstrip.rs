@@ -1,0 +1,212 @@
+//! Morphological skull stripping — the paper's preprocessing step (it
+//! cites Dogdas et al. [24], a mathematical-morphology method). Pipeline:
+//!
+//!   1. threshold the image at a grey level above background/bone
+//!   2. erode to break thin scalp-brain bridges
+//!   3. keep the largest connected component (the brain)
+//!   4. dilate back and close holes
+//!   5. apply the mask (outside -> 0)
+
+use crate::image::GrayImage;
+
+/// Parameters; defaults tuned for the phantom's T1 intensity model.
+#[derive(Clone, Copy, Debug)]
+pub struct StripParams {
+    /// Grey-level threshold separating brain tissue from skull/background.
+    pub threshold: u8,
+    /// Erosion radius (iterations of 4-neighbour erosion).
+    pub erode: usize,
+    /// Dilation radius after component selection.
+    pub dilate: usize,
+}
+
+impl Default for StripParams {
+    fn default() -> Self {
+        StripParams {
+            threshold: 45,
+            erode: 3,
+            dilate: 4,
+        }
+    }
+}
+
+/// Strip the skull: returns (masked image, brain mask).
+pub fn strip(img: &GrayImage, p: &StripParams) -> (GrayImage, Vec<bool>) {
+    let mut mask: Vec<bool> = img.pixels.iter().map(|&v| v >= p.threshold).collect();
+    for _ in 0..p.erode {
+        mask = erode(&mask, img.width, img.height);
+    }
+    mask = largest_component(&mask, img.width, img.height);
+    for _ in 0..p.dilate {
+        mask = dilate(&mask, img.width, img.height);
+    }
+    let mut out = img.clone();
+    for (px, &keep) in out.pixels.iter_mut().zip(&mask) {
+        if !keep {
+            *px = 0;
+        }
+    }
+    (out, mask)
+}
+
+/// 4-neighbour erosion.
+pub fn erode(mask: &[bool], w: usize, h: usize) -> Vec<bool> {
+    let mut out = vec![false; mask.len()];
+    for r in 0..h {
+        for c in 0..w {
+            let i = r * w + c;
+            if !mask[i] {
+                continue;
+            }
+            let n = r > 0 && mask[i - w];
+            let s = r + 1 < h && mask[i + w];
+            let e = c + 1 < w && mask[i + 1];
+            let we = c > 0 && mask[i - 1];
+            out[i] = n && s && e && we;
+        }
+    }
+    out
+}
+
+/// 4-neighbour dilation.
+pub fn dilate(mask: &[bool], w: usize, h: usize) -> Vec<bool> {
+    let mut out = mask.to_vec();
+    for r in 0..h {
+        for c in 0..w {
+            let i = r * w + c;
+            if mask[i] {
+                continue;
+            }
+            let any = (r > 0 && mask[i - w])
+                || (r + 1 < h && mask[i + w])
+                || (c + 1 < w && mask[i + 1])
+                || (c > 0 && mask[i - 1]);
+            out[i] = any;
+        }
+    }
+    out
+}
+
+/// Largest 4-connected true-component (BFS flood fill).
+pub fn largest_component(mask: &[bool], w: usize, h: usize) -> Vec<bool> {
+    let mut comp = vec![0u32; mask.len()]; // 0 = unvisited/false
+    let mut sizes = vec![0usize]; // sizes[id]
+    let mut next_id = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for start in 0..mask.len() {
+        if !mask[start] || comp[start] != 0 {
+            continue;
+        }
+        next_id += 1;
+        sizes.push(0);
+        comp[start] = next_id;
+        queue.push_back(start);
+        while let Some(i) = queue.pop_front() {
+            sizes[next_id as usize] += 1;
+            let (r, c) = (i / w, i % w);
+            let mut push = |j: usize| {
+                if mask[j] && comp[j] == 0 {
+                    comp[j] = next_id;
+                    queue.push_back(j);
+                }
+            };
+            if r > 0 {
+                push(i - w);
+            }
+            if r + 1 < h {
+                push(i + w);
+            }
+            if c > 0 {
+                push(i - 1);
+            }
+            if c + 1 < w {
+                push(i + 1);
+            }
+        }
+    }
+    let best = (1..sizes.len()).max_by_key(|&id| sizes[id]).unwrap_or(0) as u32;
+    comp.iter().map(|&id| id == best && id != 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phantom::{generate_slice, PhantomConfig, Tissue};
+
+    #[test]
+    fn erode_shrinks_dilate_grows() {
+        let (w, h) = (5, 5);
+        let mut mask = vec![false; 25];
+        for r in 1..4 {
+            for c in 1..4 {
+                mask[r * w + c] = true;
+            }
+        }
+        let e = erode(&mask, w, h);
+        assert_eq!(e.iter().filter(|&&b| b).count(), 1); // only the center
+        let d = dilate(&e, w, h);
+        assert_eq!(d.iter().filter(|&&b| b).count(), 5); // center + 4-neigh
+    }
+
+    #[test]
+    fn largest_component_picks_bigger_blob() {
+        let (w, h) = (8, 3);
+        let mut mask = vec![false; 24];
+        // Blob A: 2 px at left; blob B: 4 px at right.
+        mask[0] = true;
+        mask[1] = true;
+        for c in 4..8 {
+            mask[w + c] = true;
+        }
+        let lc = largest_component(&mask, w, h);
+        assert!(!lc[0] && !lc[1]);
+        assert!((4..8).all(|c| lc[w + c]));
+    }
+
+    #[test]
+    fn empty_mask_stays_empty() {
+        let lc = largest_component(&[false; 16], 4, 4);
+        assert!(lc.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn stripping_removes_scalp_keeps_brain() {
+        let s = generate_slice(&PhantomConfig {
+            with_skull: true,
+            noise_sigma: 2.0,
+            ..PhantomConfig::default()
+        });
+        let (stripped, mask) = strip(&s.image, &StripParams::default());
+        let mut scalp_kept = 0usize;
+        let mut scalp_total = 0usize;
+        let mut wm_kept = 0usize;
+        let mut wm_total = 0usize;
+        for (i, &t) in s.tissues.iter().enumerate() {
+            match t {
+                Tissue::Scalp => {
+                    scalp_total += 1;
+                    scalp_kept += mask[i] as usize;
+                }
+                Tissue::WhiteMatter => {
+                    wm_total += 1;
+                    wm_kept += mask[i] as usize;
+                }
+                _ => {}
+            }
+        }
+        assert!(
+            (scalp_kept as f64) < 0.25 * scalp_total as f64,
+            "scalp retained: {scalp_kept}/{scalp_total}"
+        );
+        assert!(
+            (wm_kept as f64) > 0.95 * wm_total as f64,
+            "brain lost: {wm_kept}/{wm_total}"
+        );
+        // Outside-mask pixels are zeroed.
+        for (i, &keep) in mask.iter().enumerate() {
+            if !keep {
+                assert_eq!(stripped.pixels[i], 0);
+            }
+        }
+    }
+}

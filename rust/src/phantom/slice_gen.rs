@@ -1,0 +1,311 @@
+//! Axial brain-slice generator: parametric anatomy + intensity synthesis.
+//!
+//! Anatomy model (per pixel, in normalized head coordinates):
+//!   scalp ellipse > skull ellipse > brain ellipse; inside the brain a
+//!   subarachnoid CSF film, a cortical GM ribbon whose inner boundary is
+//!   perturbed by angular harmonics (gyri/sulci), a WM core, and two
+//!   ventricle ellipses of CSF near the center. The slice index z in
+//!   [0, 180] scales the anatomy like an ellipsoid cap, so "slice 96"
+//!   (near the ventricles' maximum) looks like the paper's Fig. 5/6.
+//!
+//! Intensity model: per-tissue Gaussian signal (tissue.rs), partial-volume
+//! mixing within one pixel of a boundary, optional multiplicative bias
+//! field (MRI intensity non-uniformity), then Rician scanner noise.
+
+use super::tissue::Tissue;
+use crate::image::{GrayImage, LabelMap};
+use crate::util::Rng64;
+
+/// Generator parameters. Defaults give a BrainWeb-like 181x217 slice.
+#[derive(Clone, Debug)]
+pub struct PhantomConfig {
+    pub width: usize,
+    pub height: usize,
+    /// Axial slice index, 0..=180 (paper uses 91/96/101/111).
+    pub slice: usize,
+    /// Rician noise sigma (scanner noise); BrainWeb's "3%" ~ 7 grey levels.
+    pub noise_sigma: f32,
+    /// Peak-to-peak fractional amplitude of the multiplicative bias field
+    /// (BrainWeb INU "20%" = 0.2). 0 disables.
+    pub bias_amplitude: f32,
+    /// Include skull + scalp rings (pre-stripping input).
+    pub with_skull: bool,
+    pub seed: u64,
+}
+
+impl Default for PhantomConfig {
+    fn default() -> Self {
+        PhantomConfig {
+            width: 181,
+            height: 217,
+            slice: 96,
+            noise_sigma: 4.0,
+            bias_amplitude: 0.0,
+            with_skull: false,
+            seed: 42,
+        }
+    }
+}
+
+/// A generated slice: the image plus exact ground truth.
+#[derive(Clone, Debug)]
+pub struct PhantomSlice {
+    pub image: GrayImage,
+    /// 4-class ground truth (0=BG, 1=CSF, 2=GM, 3=WM) — paper Fig. 6 form.
+    pub ground_truth: LabelMap,
+    /// Full tissue map including skull/scalp (pre-stripping truth).
+    pub tissues: Vec<Tissue>,
+}
+
+/// Ellipsoid cap scale for slice z: anatomy shrinks away from mid-brain.
+fn slice_scale(z: usize) -> f32 {
+    let t = (z as f32 - 90.0) / 95.0;
+    (1.0 - t * t).max(0.0).sqrt()
+}
+
+/// Which tissue occupies normalized coordinates (nx, ny) for this config?
+/// `fold` is the angular cortical-fold perturbation in [-1, 1].
+fn tissue_at(nx: f32, ny: f32, scale: f32, with_skull: bool, fold: f32) -> Tissue {
+    // Radii of the nested anatomy, in normalized units.
+    let r = ellipse_r(nx, ny, 0.78, 0.92); // head-space radial coordinate
+    let brain_r = 0.62 * scale;
+    let skull_r = brain_r + 0.07;
+    let scalp_r = skull_r + 0.055;
+    if r > scalp_r {
+        return Tissue::Background;
+    }
+    if r > skull_r {
+        return if with_skull { Tissue::Scalp } else { Tissue::Background };
+    }
+    if r > brain_r {
+        return if with_skull { Tissue::Skull } else { Tissue::Background };
+    }
+    // Inside the brain. Subarachnoid CSF film then cortex then WM.
+    let csf_inner = brain_r - 0.035 * scale;
+    // Cortical ribbon with folded inner boundary.
+    let gm_inner = (brain_r - (0.16 + 0.05 * fold) * scale).max(0.0);
+    // Ventricles: two CSF ellipses beside the midline, present for
+    // mid-range slices (scale near 1).
+    let vent_strength = ((scale - 0.55) / 0.45).clamp(0.0, 1.0);
+    if vent_strength > 0.0 {
+        let vw = 0.10 * vent_strength;
+        let vh = 0.22 * vent_strength;
+        for side in [-1.0f32, 1.0] {
+            let cx = side * 0.13;
+            let cy = -0.03;
+            let d = ((nx - cx) / vw).powi(2) + ((ny - cy) / vh).powi(2);
+            if d < 1.0 {
+                return Tissue::Csf;
+            }
+        }
+    }
+    if r > csf_inner {
+        Tissue::Csf
+    } else if r > gm_inner {
+        Tissue::GreyMatter
+    } else {
+        Tissue::WhiteMatter
+    }
+}
+
+/// Radial coordinate of (nx, ny) w.r.t. an ellipse with semi-axes (a, b).
+fn ellipse_r(nx: f32, ny: f32, a: f32, b: f32) -> f32 {
+    ((nx / a).powi(2) + (ny / b).powi(2)).sqrt()
+}
+
+/// Generate one axial slice.
+pub fn generate_slice(cfg: &PhantomConfig) -> PhantomSlice {
+    assert!(cfg.slice <= 180, "slice index out of range");
+    let (w, h) = (cfg.width, cfg.height);
+    let scale = slice_scale(cfg.slice);
+    let mut rng = Rng64::new(cfg.seed ^ (cfg.slice as u64) << 32);
+    let mut tissues = Vec::with_capacity(w * h);
+    let mut img = GrayImage::new(w, h);
+    let mut gt = LabelMap::new(w, h);
+
+    // Pixel size in normalized units, for the partial-volume subsampling.
+    let inv_half_w = 2.0 / w as f32;
+    let inv_half_h = 2.0 / h as f32;
+
+    for row in 0..h {
+        for col in 0..w {
+            // Normalized coordinates in [-1, 1].
+            let nx = (col as f32 + 0.5) * inv_half_w - 1.0;
+            let ny = (row as f32 + 0.5) * inv_half_h - 1.0;
+            let theta = ny.atan2(nx);
+            // Cortical folding: angular harmonics (gyri) — deterministic
+            // per slice so ground truth is exact.
+            let fold = 0.55 * (9.0 * theta).sin()
+                + 0.30 * (17.0 * theta + 1.3).sin()
+                + 0.15 * (29.0 * theta + 2.1).sin();
+
+            let t_center = tissue_at(nx, ny, scale, cfg.with_skull, fold);
+
+            // Partial-volume: sample a 2x2 subgrid; mix mean intensities.
+            let mut acc = 0.0f32;
+            for (dx, dy) in [(-0.25f32, -0.25f32), (0.25, -0.25), (-0.25, 0.25), (0.25, 0.25)] {
+                let sx = nx + dx * inv_half_w;
+                let sy = ny + dy * inv_half_h;
+                let t = tissue_at(sx, sy, scale, cfg.with_skull, fold);
+                acc += t.mean();
+            }
+            let mut signal = acc / 4.0;
+
+            // Intra-tissue variability.
+            signal += t_center.sigma() * rng.normal();
+
+            // Bias field: smooth multiplicative ramp (INU).
+            if cfg.bias_amplitude > 0.0 {
+                let bias = 1.0
+                    + cfg.bias_amplitude
+                        * 0.5
+                        * ((1.7 * nx + 0.9 * ny).sin() + 0.5 * (2.3 * ny - 0.4).cos());
+                signal *= bias;
+            }
+
+            // Rician magnitude noise.
+            let noisy = if cfg.noise_sigma > 0.0 {
+                rng.rician(signal.max(0.0), cfg.noise_sigma)
+            } else {
+                signal.max(0.0)
+            };
+
+            let idx = row * w + col;
+            img.pixels[idx] = noisy.round().clamp(0.0, 255.0) as u8;
+            gt.labels[idx] = t_center.class4();
+            tissues.push(t_center);
+        }
+    }
+
+    PhantomSlice {
+        image: img,
+        ground_truth: gt,
+        tissues,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_slice_has_all_four_classes() {
+        let s = generate_slice(&PhantomConfig::default());
+        let mut seen = [0usize; 4];
+        for &l in &s.ground_truth.labels {
+            seen[l as usize] += 1;
+        }
+        for (c, &n) in seen.iter().enumerate() {
+            assert!(n > 50, "class {c} underrepresented: {n} px");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = PhantomConfig::default();
+        assert_eq!(generate_slice(&cfg).image, generate_slice(&cfg).image);
+        let other = PhantomConfig {
+            seed: 7,
+            ..PhantomConfig::default()
+        };
+        assert_ne!(generate_slice(&cfg).image, generate_slice(&other).image);
+    }
+
+    #[test]
+    fn ground_truth_independent_of_noise() {
+        let a = generate_slice(&PhantomConfig::default());
+        let b = generate_slice(&PhantomConfig {
+            noise_sigma: 12.0,
+            seed: 99,
+            ..PhantomConfig::default()
+        });
+        assert_eq!(a.ground_truth, b.ground_truth);
+    }
+
+    #[test]
+    fn extreme_slices_shrink_brain() {
+        let mid = generate_slice(&PhantomConfig {
+            slice: 96,
+            ..PhantomConfig::default()
+        });
+        let high = generate_slice(&PhantomConfig {
+            slice: 170,
+            ..PhantomConfig::default()
+        });
+        let brain = |s: &PhantomSlice| {
+            s.ground_truth.labels.iter().filter(|&&l| l != 0).count()
+        };
+        assert!(brain(&high) < brain(&mid) / 2);
+    }
+
+    #[test]
+    fn with_skull_adds_bright_scalp_ring() {
+        let s = generate_slice(&PhantomConfig {
+            with_skull: true,
+            noise_sigma: 0.0,
+            ..PhantomConfig::default()
+        });
+        let scalp = s.tissues.iter().filter(|&&t| t == Tissue::Scalp).count();
+        let skull = s.tissues.iter().filter(|&&t| t == Tissue::Skull).count();
+        assert!(scalp > 100 && skull > 100, "scalp {scalp} skull {skull}");
+        // Scalp maps to background in the 4-class truth.
+        for (i, &t) in s.tissues.iter().enumerate() {
+            if t == Tissue::Scalp {
+                assert_eq!(s.ground_truth.labels[i], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn intensity_modes_match_tissues() {
+        // Mean observed intensity per tissue must track the model means.
+        let s = generate_slice(&PhantomConfig {
+            noise_sigma: 0.0,
+            ..PhantomConfig::default()
+        });
+        for t in Tissue::SEGMENTED {
+            let px: Vec<f64> = s
+                .tissues
+                .iter()
+                .zip(&s.image.pixels)
+                .filter(|(&tt, _)| tt == t)
+                .map(|(_, &p)| p as f64)
+                .collect();
+            if px.is_empty() {
+                continue;
+            }
+            let mean = px.iter().sum::<f64>() / px.len() as f64;
+            assert!(
+                (mean - t.mean() as f64).abs() < 12.0,
+                "{}: observed {mean:.1}, model {}",
+                t.name(),
+                t.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn ventricles_present_in_mid_slices() {
+        let s = generate_slice(&PhantomConfig::default());
+        // CSF near the image center (ventricles), not just at the rim.
+        let (w, h) = (s.image.width, s.image.height);
+        let mut center_csf = 0;
+        for row in (h * 2 / 5)..(h * 3 / 5) {
+            for col in (w * 2 / 5)..(w * 3 / 5) {
+                if s.ground_truth.labels[row * w + col] == 1 {
+                    center_csf += 1;
+                }
+            }
+        }
+        assert!(center_csf > 30, "ventricle CSF {center_csf}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_out_of_range_panics() {
+        let _ = generate_slice(&PhantomConfig {
+            slice: 999,
+            ..PhantomConfig::default()
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! Tissue classes and their T1-weighted intensity models.
+//!
+//! Mean intensities follow the ordering of T1 MRI (CSF dark, GM mid, WM
+//! bright) with values in the BrainWeb phantom's typical 8-bit range; the
+//! per-tissue sigma is intra-tissue biological variability, on top of
+//! which the generator adds Rician scanner noise.
+
+/// Tissue classes. The first four are the paper's segmentation targets
+/// (cluster count c=4); skull/scalp exist only pre-stripping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tissue {
+    Background = 0,
+    Csf = 1,
+    GreyMatter = 2,
+    WhiteMatter = 3,
+    Skull = 4,
+    Scalp = 5,
+}
+
+impl Tissue {
+    /// Ground-truth class id for the 4-class segmentation task.
+    /// Skull/scalp map to Background because DSC is evaluated after
+    /// skull stripping (paper Section 5.2).
+    pub fn class4(self) -> u8 {
+        match self {
+            Tissue::Background | Tissue::Skull | Tissue::Scalp => 0,
+            Tissue::Csf => 1,
+            Tissue::GreyMatter => 2,
+            Tissue::WhiteMatter => 3,
+        }
+    }
+
+    /// Mean T1 intensity (8-bit).
+    pub fn mean(self) -> f32 {
+        match self {
+            Tissue::Background => 2.0,
+            Tissue::Csf => 55.0,
+            Tissue::GreyMatter => 115.0,
+            Tissue::WhiteMatter => 165.0,
+            Tissue::Skull => 35.0,
+            Tissue::Scalp => 225.0,
+        }
+    }
+
+    /// Intra-tissue variability (std of the clean signal).
+    pub fn sigma(self) -> f32 {
+        match self {
+            Tissue::Background => 1.5,
+            Tissue::Csf => 4.0,
+            Tissue::GreyMatter => 5.0,
+            Tissue::WhiteMatter => 5.0,
+            Tissue::Skull => 4.0,
+            Tissue::Scalp => 6.0,
+        }
+    }
+
+    pub const SEGMENTED: [Tissue; 4] = [
+        Tissue::Background,
+        Tissue::Csf,
+        Tissue::GreyMatter,
+        Tissue::WhiteMatter,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tissue::Background => "Background",
+            Tissue::Csf => "CSF",
+            Tissue::GreyMatter => "GM",
+            Tissue::WhiteMatter => "WM",
+            Tissue::Skull => "Skull",
+            Tissue::Scalp => "Scalp",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t1_intensity_ordering() {
+        // T1: background < CSF < GM < WM.
+        assert!(Tissue::Background.mean() < Tissue::Csf.mean());
+        assert!(Tissue::Csf.mean() < Tissue::GreyMatter.mean());
+        assert!(Tissue::GreyMatter.mean() < Tissue::WhiteMatter.mean());
+    }
+
+    #[test]
+    fn class4_folds_skull_into_background() {
+        assert_eq!(Tissue::Skull.class4(), 0);
+        assert_eq!(Tissue::Scalp.class4(), 0);
+        assert_eq!(Tissue::WhiteMatter.class4(), 3);
+    }
+
+    #[test]
+    fn modes_are_separable() {
+        // Adjacent tissue means are > 4 combined sigmas apart, so the
+        // 4-mode histogram FCM clusters is well defined.
+        let ts = Tissue::SEGMENTED;
+        for w in ts.windows(2) {
+            let gap = w[1].mean() - w[0].mean();
+            let spread = 2.0 * (w[0].sigma() + w[1].sigma());
+            assert!(gap > spread, "{:?}->{:?} gap {gap} spread {spread}", w[0], w[1]);
+        }
+    }
+}

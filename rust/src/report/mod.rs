@@ -1,0 +1,148 @@
+//! Report formatting: aligned ASCII / markdown tables for the bench
+//! harnesses that regenerate the paper's tables and figures.
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Table {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Table {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as aligned plain text (right-aligned data columns, left-
+    /// aligned first column).
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    line.push_str(&format!("{:<width$}", c, width = w[i]));
+                } else {
+                    line.push_str(&format!("  {:>width$}", c, width = w[i]));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &w));
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+        }
+        out
+    }
+
+    /// Render as a GitHub-markdown table (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers
+                .iter()
+                .map(|_| "---")
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_text());
+    }
+}
+
+/// Format seconds sensibly across the paper's 0.1s..2798s range.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 0.001 {
+        format!("{s:.3}")
+    } else {
+        "<0.001".to_string()
+    }
+}
+
+/// Format a speedup factor (decimals only where they carry information).
+pub fn fmt_x(f: f64) -> String {
+    if f < 10.0 {
+        format!("{f:.2}x")
+    } else {
+        format!("{f:.0}x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_alignment() {
+        let mut t = Table::new(["size", "seq", "par"]);
+        t.row(["20KB", "57", "0.102"]);
+        t.row(["1000KB", "2798", "4.2"]);
+        let text = t.to_text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines same width.
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[0].starts_with("size"));
+        assert!(lines[3].starts_with("1000KB"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["1", "2"]);
+        let md = t.to_markdown();
+        assert_eq!(md, "| a | b |\n|---|---|\n| 1 | 2 |\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new(["a", "b"]).row(["only-one"]);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(2798.0), "2798");
+        assert_eq!(fmt_secs(4.2), "4.20");
+        assert_eq!(fmt_secs(0.102), "0.102");
+    }
+}
+
+pub mod experiments;

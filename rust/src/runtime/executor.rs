@@ -1,0 +1,183 @@
+//! The device-side FCM driver: the paper's Fig. 2 host loop, with the
+//! whole iteration (centers -> memberships -> delta) fused into ONE
+//! compiled HLO module per bucket.
+//!
+//! Contrast with the paper: their host transfers the full membership
+//! matrix back every iteration to run the epsilon test on the CPU; here
+//! the module returns (u_new, v, delta, jm) and the host reads ONLY the
+//! scalar delta (plus jm for diagnostics) from the returned tuple. The
+//! membership stays in the returned literal and is round-tripped into the
+//! next execute call without reshaping.
+
+use super::registry::Registry;
+use crate::fcm::{defuzzify, FcmParams, FcmRun};
+use crate::image::FeatureVector;
+use anyhow::{bail, Context, Result};
+
+/// Phase timings for one segmentation (seconds) — the runtime analogue of
+/// the paper's gettimeofday()/cudaEventRecord() methodology.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceStats {
+    /// Bucket the job ran in.
+    pub bucket: usize,
+    /// Host->device upload of x and w (once per job).
+    pub upload_s: f64,
+    /// Sum over iterations of execute() wall time.
+    pub iterate_s: f64,
+    /// Defuzzification + final host-side work.
+    pub finish_s: f64,
+    pub iterations: usize,
+}
+
+/// Runs FCM convergence loops against the AOT artifacts.
+pub struct FcmExecutor<'r> {
+    registry: &'r Registry,
+    /// "pallas" (default) or "ref" — selects the artifact flavor.
+    pub flavor: String,
+}
+
+impl<'r> FcmExecutor<'r> {
+    pub fn new(registry: &'r Registry) -> FcmExecutor<'r> {
+        FcmExecutor {
+            registry,
+            flavor: "pallas".to_string(),
+        }
+    }
+
+    pub fn with_flavor(registry: &'r Registry, flavor: &str) -> FcmExecutor<'r> {
+        FcmExecutor {
+            registry,
+            flavor: flavor.to_string(),
+        }
+    }
+
+    /// Segment a feature vector: pad to bucket, init membership, iterate
+    /// to convergence on-device, defuzzify on host.
+    pub fn segment(&self, fv: &FeatureVector, params: &FcmParams) -> Result<(FcmRun, DeviceStats)> {
+        let (meta, _) = self
+            .registry
+            .iteration_for(fv.len(), params.clusters, &self.flavor)?;
+        let padded = crate::image::pad_to(fv, meta.pixels);
+        let u0 = crate::fcm::init_membership_masked(params.clusters, &padded.w, params.seed);
+        self.segment_from(&padded, u0, params)
+    }
+
+    /// Drive the loop from an explicit initial membership over the already
+    /// padded features (equivalence tests share this init with the
+    /// sequential baseline).
+    pub fn segment_from(
+        &self,
+        padded: &FeatureVector,
+        u0: Vec<f32>,
+        params: &FcmParams,
+    ) -> Result<(FcmRun, DeviceStats)> {
+        let n = padded.len();
+        let c = params.clusters;
+        if u0.len() != c * n {
+            bail!("u0 length {} != c*n = {}", u0.len(), c * n);
+        }
+        let (meta, exe) = self.registry.iteration_for(n, c, &self.flavor)?;
+        if meta.pixels != n {
+            bail!(
+                "features not padded to bucket: n={n}, bucket={}",
+                meta.pixels
+            );
+        }
+        if (meta.m - params.m as f64).abs() > 1e-9 {
+            bail!(
+                "artifact baked with m={}, params ask m={}",
+                meta.m,
+                params.m
+            );
+        }
+        let mut stats = DeviceStats {
+            bucket: meta.pixels,
+            ..Default::default()
+        };
+
+        // Upload x and w once; they are loop-invariant (paper section 4.1:
+        // "all the data are transferred from host to device" before the
+        // main loop starts).
+        let t0 = std::time::Instant::now();
+        let x_lit = xla::Literal::vec1(&padded.x);
+        let w_lit = xla::Literal::vec1(&padded.w);
+        let mut u_lit = xla::Literal::vec1(&u0)
+            .reshape(&[c as i64, n as i64])
+            .context("reshaping u0")?;
+        stats.upload_s = t0.elapsed().as_secs_f64();
+
+        let mut jm_history = Vec::new();
+        let mut final_delta = f32::INFINITY;
+        let mut converged = false;
+
+        let t_iter = std::time::Instant::now();
+        for _ in 0..params.max_iters {
+            stats.iterations += 1;
+            let result = exe
+                .execute(&[&x_lit, &w_lit, &u_lit])
+                .context("device iteration")?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .context("fetching iteration outputs")?;
+            let (u_new, _v, delta, jm) = tuple
+                .to_tuple4()
+                .context("expected (u_new, v, delta, jm) tuple")?;
+            let delta = delta.get_first_element::<f32>()?;
+            let jm = jm.get_first_element::<f32>()?;
+            jm_history.push(jm as f64);
+            u_lit = u_new;
+            final_delta = delta;
+            if delta < params.epsilon {
+                converged = true;
+                break;
+            }
+        }
+        stats.iterate_s = t_iter.elapsed().as_secs_f64();
+
+        // Final state: read u back, defuzzify, compute centers for report.
+        let t_fin = std::time::Instant::now();
+        let u: Vec<f32> = u_lit.to_vec::<f32>().context("downloading membership")?;
+        let mut centers = vec![0f32; c];
+        crate::fcm::sequential::update_centers(
+            &padded.x,
+            &padded.w,
+            &u,
+            c,
+            params.m as f64,
+            &mut centers,
+        );
+        let labels_full = defuzzify(&u, c, n);
+        stats.finish_s = t_fin.elapsed().as_secs_f64();
+
+        Ok((
+            FcmRun {
+                centers,
+                u,
+                labels: labels_full[..padded.n_real.min(n)].to_vec(),
+                iterations: stats.iterations,
+                final_delta,
+                jm_history,
+                converged,
+            },
+            stats,
+        ))
+    }
+
+    /// Run the standalone Algorithm-2 reduction artifact (experiment E3).
+    pub fn block_sum(&self, a: &[f32]) -> Result<Vec<f32>> {
+        let meta = self
+            .registry
+            .manifest
+            .artifacts
+            .iter()
+            .find(|m| m.kind == "block_sum" && m.pixels == a.len())
+            .with_context(|| format!("no block_sum artifact for n={}", a.len()))?
+            .clone();
+        let exe = self.registry.executable(&meta)?;
+        let lit = xla::Literal::vec1(a);
+        let out = exe.execute(&[&lit])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: what `make artifacts` produced (manifest.tsv).
+
+use crate::util::tsv::Table;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered HLO module.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// "fcm_iteration" | "block_sum".
+    pub kind: String,
+    /// "pallas" (L1 kernels) or "ref" (pure-jnp A/B flavor).
+    pub flavor: String,
+    /// Pixel bucket N (static shape of the lowered module).
+    pub pixels: usize,
+    /// Cluster count C baked into the module.
+    pub clusters: usize,
+    /// Fuzziness m baked into the module.
+    pub m: f64,
+    /// Pallas block size (structure metadata for perf estimates).
+    pub block: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub path: String,
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let table = Table::parse(text)?;
+        let mut artifacts = Vec::with_capacity(table.rows.len());
+        for row in &table.rows {
+            artifacts.push(ArtifactMeta {
+                kind: table.get(row, "kind")?.to_string(),
+                flavor: table.get(row, "flavor")?.to_string(),
+                pixels: table.get_usize(row, "pixels")?,
+                clusters: table.get_usize(row, "clusters")?,
+                m: table.get_f64(row, "m")?,
+                block: table.get_usize(row, "block")?,
+                path: table.get(row, "path")?.to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Smallest fcm_iteration bucket that fits `n` pixels for the given
+    /// cluster count and flavor. This is the shape-bucket policy: images
+    /// are padded up to the chosen bucket (image::feature::pad_to).
+    pub fn bucket_for(&self, n: usize, clusters: usize, flavor: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == "fcm_iteration"
+                    && a.flavor == flavor
+                    && a.clusters == clusters
+                    && a.pixels >= n
+            })
+            .min_by_key(|a| a.pixels)
+            .with_context(|| {
+                format!("no fcm_iteration artifact fits n={n} c={clusters} flavor={flavor}")
+            })
+    }
+
+    /// All iteration buckets for a cluster count (ascending), for sweeps.
+    pub fn buckets(&self, clusters: usize, flavor: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == "fcm_iteration" && a.flavor == flavor && a.clusters == clusters
+            })
+            .collect();
+        v.sort_by_key(|a| a.pixels);
+        v
+    }
+
+    pub fn full_path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "kind\tflavor\tpixels\tclusters\tm\tblock\tpath\n\
+fcm_iteration\tpallas\t256\t4\t2.0\t256\ta.hlo.txt\n\
+fcm_iteration\tpallas\t4096\t4\t2.0\t2048\tb.hlo.txt\n\
+fcm_iteration\tpallas\t16384\t4\t2.0\t2048\tc.hlo.txt\n\
+block_sum\tpallas\t16384\t0\t0.0\t2048\td.hlo.txt\n";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn parses_all_rows() {
+        assert_eq!(manifest().artifacts.len(), 4);
+    }
+
+    #[test]
+    fn bucket_picks_smallest_fitting() {
+        let m = manifest();
+        assert_eq!(m.bucket_for(100, 4, "pallas").unwrap().pixels, 256);
+        assert_eq!(m.bucket_for(256, 4, "pallas").unwrap().pixels, 256);
+        assert_eq!(m.bucket_for(257, 4, "pallas").unwrap().pixels, 4096);
+        assert_eq!(m.bucket_for(16384, 4, "pallas").unwrap().pixels, 16384);
+    }
+
+    #[test]
+    fn bucket_too_large_errors() {
+        assert!(manifest().bucket_for(1 << 30, 4, "pallas").is_err());
+    }
+
+    #[test]
+    fn bucket_wrong_clusters_errors() {
+        assert!(manifest().bucket_for(100, 7, "pallas").is_err());
+    }
+
+    #[test]
+    fn buckets_sorted_ascending() {
+        let m = manifest();
+        let px: Vec<usize> = m.buckets(4, "pallas").iter().map(|a| a.pixels).collect();
+        assert_eq!(px, vec![256, 4096, 16384]);
+    }
+
+    #[test]
+    fn block_sum_not_a_bucket() {
+        // kind filter: block_sum must never be selected as iteration.
+        let m = manifest();
+        assert!(m
+            .bucket_for(10_000, 0, "pallas")
+            .is_err());
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        assert!(Manifest::parse(Path::new("/x"), "kind\tflavor\tpixels\tclusters\tm\tblock\tpath\n").is_err());
+    }
+}

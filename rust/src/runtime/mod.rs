@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT HLO artifacts and runs them on the request
+//! path. Adapted from /opt/xla-example/load_hlo (HLO *text* interchange —
+//! see DESIGN.md and python/compile/aot.py for why not serialized protos).
+
+pub mod executor;
+pub mod manifest;
+pub mod registry;
+
+pub use executor::{DeviceStats, FcmExecutor};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use registry::Registry;

@@ -1,0 +1,81 @@
+//! Artifact registry: PJRT client + lazily compiled executable cache.
+//!
+//! One registry per worker thread (the xla crate's handles wrap raw
+//! pointers and are not Sync); compilation is cached per artifact path so
+//! the convergence loop and repeated jobs reuse the compiled executable —
+//! the analogue of the paper loading its CUDA kernels once.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub struct Registry {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Compile-time bookkeeping for metrics/EXPERIMENTS.md.
+    compile_seconds: RefCell<HashMap<String, f64>>,
+}
+
+impl Registry {
+    /// CPU-PJRT registry over an artifacts directory.
+    pub fn open(artifacts_dir: &std::path::Path) -> Result<Registry> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Registry {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&meta.path) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.full_path(meta);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", meta.path))?,
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_seconds
+            .borrow_mut()
+            .insert(meta.path.clone(), dt);
+        self.cache.borrow_mut().insert(meta.path.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Executable for the smallest iteration bucket fitting n pixels.
+    pub fn iteration_for(
+        &self,
+        n: usize,
+        clusters: usize,
+        flavor: &str,
+    ) -> Result<(ArtifactMeta, Rc<xla::PjRtLoadedExecutable>)> {
+        let meta = self.manifest.bucket_for(n, clusters, flavor)?.clone();
+        let exe = self.executable(&meta)?;
+        Ok((meta, exe))
+    }
+
+    /// Total seconds spent in XLA compilation so far (excluded from the
+    /// paper's timing methodology, which measures the iteration loop only).
+    pub fn total_compile_seconds(&self) -> f64 {
+        self.compile_seconds.borrow().values().sum()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

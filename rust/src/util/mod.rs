@@ -1,0 +1,8 @@
+//! Small self-contained utilities (offline build: no external crates).
+
+pub mod rng;
+pub mod stats;
+pub mod tsv;
+
+pub use rng::Rng64;
+pub use stats::Summary;

@@ -1,0 +1,122 @@
+//! Minimal TSV reader for the artifact manifest (manifest.tsv).
+//!
+//! The offline build has no serde_json; the AOT step therefore also emits a
+//! flat tab-separated manifest with a header row, which this module parses.
+//! Deliberately strict: a malformed manifest is a build error, not data.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A parsed TSV table: header names plus rows of equal arity.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    col: HashMap<String, usize>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut lines = text
+            .lines()
+            .map(str::trim_end)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header: Vec<String> = lines
+            .next()
+            .context("empty TSV: missing header")?
+            .split('\t')
+            .map(str::to_string)
+            .collect();
+        let col: HashMap<String, usize> = header
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (h.clone(), i))
+            .collect();
+        if col.len() != header.len() {
+            bail!("duplicate column names in TSV header: {header:?}");
+        }
+        let mut rows = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            let row: Vec<String> = line.split('\t').map(str::to_string).collect();
+            if row.len() != header.len() {
+                bail!(
+                    "TSV row {} has {} fields, header has {}",
+                    lineno + 2,
+                    row.len(),
+                    header.len()
+                );
+            }
+            rows.push(row);
+        }
+        Ok(Table { header, rows, col })
+    }
+
+    /// Field accessor by column name.
+    pub fn get<'a>(&self, row: &'a [String], name: &str) -> Result<&'a str> {
+        let idx = *self
+            .col
+            .get(name)
+            .with_context(|| format!("TSV missing column {name:?}"))?;
+        Ok(&row[idx])
+    }
+
+    pub fn get_usize(&self, row: &[String], name: &str) -> Result<usize> {
+        let s = self.get(row, name)?;
+        s.parse()
+            .with_context(|| format!("column {name:?}: bad usize {s:?}"))
+    }
+
+    pub fn get_f64(&self, row: &[String], name: &str) -> Result<f64> {
+        let s = self.get(row, name)?;
+        s.parse()
+            .with_context(|| format!("column {name:?}: bad f64 {s:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "kind\tpixels\tpath\nfcm_iteration\t256\ta.hlo.txt\nblock_sum\t16384\tb.hlo.txt\n";
+
+    #[test]
+    fn parses_rows_and_columns() {
+        let t = Table::parse(SAMPLE).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.get(&t.rows[0], "kind").unwrap(), "fcm_iteration");
+        assert_eq!(t.get_usize(&t.rows[1], "pixels").unwrap(), 16384);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = format!("# comment\n\n{SAMPLE}");
+        assert_eq!(Table::parse(&text).unwrap().rows.len(), 2);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(Table::parse("a\tb\n1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_column() {
+        let t = Table::parse(SAMPLE).unwrap();
+        assert!(t.get(&t.rows[0], "nope").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Table::parse("").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_header() {
+        assert!(Table::parse("a\ta\n1\t2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_number() {
+        let t = Table::parse("n\nxyz\n").unwrap();
+        assert!(t.get_usize(&t.rows[0], "n").is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Whole-pipeline integration: phantom acquisition -> skull stripping ->
+//! segmentation -> evaluation, plus the experiment harnesses themselves.
+
+use repro::config::Config;
+use repro::eval::dice_per_class;
+use repro::fcm::{canonical_relabel, FcmParams};
+use repro::image::FeatureVector;
+use repro::phantom::skullstrip::{strip, StripParams};
+use repro::phantom::{generate_slice, sized_dataset, PhantomConfig};
+use repro::report::experiments as exp;
+
+#[test]
+fn clinical_pipeline_with_skull_stripping() {
+    // The paper's preprocessing chain (Section 5.2): raw head image ->
+    // skull strip -> 4-cluster FCM -> DSC vs ground truth.
+    let s = generate_slice(&PhantomConfig {
+        slice: 96,
+        with_skull: true,
+        ..PhantomConfig::default()
+    });
+    let (stripped, _) = strip(&s.image, &StripParams::default());
+    let fv = FeatureVector::from_image(&stripped);
+    let mut run = repro::fcm::sequential::run(&fv.x, &fv.w, &FcmParams::default());
+    canonical_relabel(&mut run);
+    let d = dice_per_class(&run.labels, &s.ground_truth.labels, 4);
+    // Stripping is imperfect at the brain rim, so thresholds are a bit
+    // looser than the skull-free case (which achieves >0.9).
+    assert!(d[0] > 0.97, "background DSC {d:?}");
+    assert!(d[2] > 0.80, "GM DSC {d:?}");
+    assert!(d[3] > 0.90, "WM DSC {d:?}");
+}
+
+#[test]
+fn without_stripping_skull_corrupts_segmentation() {
+    // Negative control: skipping the preprocessing step must hurt —
+    // validates that the stripping substrate does real work.
+    let s = generate_slice(&PhantomConfig {
+        slice: 96,
+        with_skull: true,
+        ..PhantomConfig::default()
+    });
+    let strip_run = {
+        let (stripped, _) = strip(&s.image, &StripParams::default());
+        let fv = FeatureVector::from_image(&stripped);
+        let mut r = repro::fcm::sequential::run(&fv.x, &fv.w, &FcmParams::default());
+        canonical_relabel(&mut r);
+        r
+    };
+    let raw_run = {
+        let fv = FeatureVector::from_image(&s.image);
+        let mut r = repro::fcm::sequential::run(&fv.x, &fv.w, &FcmParams::default());
+        canonical_relabel(&mut r);
+        r
+    };
+    let d_strip = dice_per_class(&strip_run.labels, &s.ground_truth.labels, 4);
+    let d_raw = dice_per_class(&raw_run.labels, &s.ground_truth.labels, 4);
+    // WM absorbs bright scalp without stripping; GM/CSF shift too.
+    let mean_strip: f64 = d_strip.iter().sum::<f64>() / 4.0;
+    let mean_raw: f64 = d_raw.iter().sum::<f64>() / 4.0;
+    assert!(
+        mean_strip > mean_raw + 0.02,
+        "stripping did not help: {mean_strip:.4} vs {mean_raw:.4}"
+    );
+}
+
+#[test]
+fn sized_datasets_segment_at_every_table3_size_head() {
+    // Head of the Table 3 sweep (full sweep lives in the benches).
+    for &bytes in &[20 * 1024usize, 60 * 1024] {
+        let d = sized_dataset(bytes, 5);
+        let fv = FeatureVector::from_image(&d.image);
+        let mut run = repro::fcm::sequential::run(&fv.x, &fv.w, &FcmParams::default());
+        canonical_relabel(&mut run);
+        let dsc = dice_per_class(&run.labels, &d.ground_truth.labels, 4);
+        for (cls, v) in dsc.iter().enumerate() {
+            assert!(*v > 0.85, "{bytes}B class {cls}: DSC {v}");
+        }
+    }
+}
+
+#[test]
+fn fig7_harness_produces_full_table() {
+    let t = exp::fig7(&Config::new()).unwrap();
+    let text = t.to_text();
+    // 4 slices x 4 regions = 16 data rows + header + separator.
+    assert_eq!(text.lines().count(), 18, "{text}");
+    // Parallel and sequential DSC agree to well under 0.5% everywhere
+    // (the paper's "statistically similar" claim).
+    for line in text.lines().skip(2) {
+        let diff: f64 = line
+            .split_whitespace()
+            .last()
+            .unwrap()
+            .parse()
+            .expect("diff column");
+        assert!(diff < 0.5, "DSC diff too large in: {line}");
+    }
+}
+
+#[test]
+fn fig5_and_fig6_write_pgms() {
+    let dir = std::env::temp_dir().join(format!("repro_fig_test_{}", std::process::id()));
+    let cfg = Config::new();
+    let wrote5 = exp::fig5(&cfg, &dir.join("fig5")).unwrap();
+    assert!(wrote5.iter().filter(|l| l.ends_with(".pgm")).count() >= 9);
+    let wrote6 = exp::fig6(&cfg, 96, &dir.join("fig6")).unwrap();
+    assert_eq!(wrote6.len(), 5); // phantom + 4 GT masks
+    for f in wrote6 {
+        let img = repro::image::pgm::read(std::path::Path::new(&f)).unwrap();
+        assert!(!img.is_empty());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn table3_harness_quick_row_shape() {
+    let cfg = Config::new();
+    let t = exp::table3(&cfg, &[20 * 1024], 2).unwrap();
+    let text = t.to_text();
+    assert!(text.contains("20KB"));
+    // Simulated columns must echo the paper's scale (57s / 0.1s).
+    let row = text.lines().nth(2).unwrap();
+    assert!(row.contains("57"), "{row}");
+}
+
+#[test]
+fn reduction_demo_verifies() {
+    let out = exp::reduction_demo(&Config::new()).unwrap();
+    assert!(out.contains("final sum"));
+}
+
+#[test]
+fn speedup_model_against_all_paper_rows() {
+    use repro::gpu_sim::{CostModel, PAPER_TABLE3};
+    let m = CostModel::calibrated_c2050();
+    // Shape assertion across the full table: ordering of speedups between
+    // the three regimes (small superlinear, mid dip, large superlinear).
+    let s = |kb: usize| m.speedup(kb * 1024);
+    assert!(s(20) > s(200), "small-end superlinearity lost");
+    assert!(s(1000) > s(200), "large-end superlinearity lost");
+    assert!(s(1000) > s(20), "large end should dominate (paper: 666 > 559)");
+    for &(kb, seq, par) in &PAPER_TABLE3 {
+        let model = s(kb);
+        let paper = seq / par;
+        assert!(
+            (model - paper).abs() / paper < 0.30,
+            "{kb}KB: model {model:.0} vs paper {paper:.0}"
+        );
+    }
+}
+
+#[test]
+fn robustness_harness_degrades_gracefully() {
+    let t = exp::robustness(&Config::new()).unwrap();
+    let text = t.to_text();
+    let rows: Vec<&str> = text.lines().skip(2).collect();
+    assert_eq!(rows.len(), 7);
+    let dsc = |row: &str| -> f64 {
+        row.split_whitespace().nth(2).unwrap().parse().unwrap()
+    };
+    // Clean image segments best; heavy noise+INU degrades but stays sane.
+    assert!(dsc(rows[0]) > 0.97, "{}", rows[0]);
+    assert!(dsc(rows[0]) >= dsc(rows[3]) - 1e-9, "noise should not help");
+    assert!(dsc(rows[6]) > 0.70, "worst case collapsed: {}", rows[6]);
+    // Device path tracks sequential within 1% at every corruption level.
+    for r in &rows {
+        let seq = dsc(r);
+        let par: f64 = r.split_whitespace().nth(3).unwrap().parse().unwrap();
+        assert!((seq - par).abs() < 0.01, "{r}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Integration tests over the PJRT runtime: the AOT device path against
+//! the sequential baseline and the pure-jnp `ref` artifact flavor.
+//!
+//! These need `make artifacts` to have run (the Makefile `test` target
+//! guarantees it).
+
+use repro::fcm::{canonical_relabel, FcmParams};
+use repro::image::{pad_to, FeatureVector};
+use repro::phantom::{generate_slice, PhantomConfig};
+use repro::runtime::{FcmExecutor, Registry};
+use std::path::Path;
+
+fn registry() -> Registry {
+    Registry::open(Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+fn slice_features() -> (FeatureVector, Vec<u8>) {
+    let s = generate_slice(&PhantomConfig::default());
+    (
+        FeatureVector::from_image(&s.image),
+        s.ground_truth.labels.clone(),
+    )
+}
+
+#[test]
+fn device_matches_sequential_labels_from_same_init() {
+    // The paper's core functional claim (Fig. 5): the parallel FCM
+    // segmentation is identical to the sequential one. Drive both paths
+    // from the same padded features and the same membership init.
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let params = FcmParams::default();
+    let (fv, _) = slice_features();
+    let meta = reg
+        .manifest
+        .bucket_for(fv.len(), params.clusters, "pallas")
+        .unwrap()
+        .clone();
+    let padded = pad_to(&fv, meta.pixels);
+    let u0 = repro::fcm::init_membership_masked(params.clusters, &padded.w, params.seed);
+
+    let (mut dev, _) = exec.segment_from(&padded, u0.clone(), &params).unwrap();
+    let mut seq = repro::fcm::sequential::run_from(&padded.x, &padded.w, u0, &params);
+    seq.labels.truncate(padded.n_real);
+
+    canonical_relabel(&mut dev);
+    canonical_relabel(&mut seq);
+    assert_eq!(dev.iterations, seq.iterations, "iteration count differs");
+    let agree = dev
+        .labels
+        .iter()
+        .zip(&seq.labels)
+        .filter(|(a, b)| a == b)
+        .count();
+    let frac = agree as f64 / seq.labels.len() as f64;
+    assert!(frac > 0.9995, "agreement only {frac}");
+    // Centers match to fp32 reduction tolerance.
+    for (a, b) in dev.centers.iter().zip(&seq.centers) {
+        assert!((a - b).abs() < 0.05, "{:?} vs {:?}", dev.centers, seq.centers);
+    }
+}
+
+#[test]
+fn pallas_flavor_matches_ref_flavor() {
+    // L1 kernels vs pure-jnp graph, both through the full AOT+PJRT path.
+    let reg = registry();
+    let params = FcmParams::default();
+    let (fv, _) = slice_features();
+    let meta = reg
+        .manifest
+        .bucket_for(fv.len(), params.clusters, "pallas")
+        .unwrap()
+        .clone();
+    let padded = pad_to(&fv, meta.pixels);
+    let u0 = repro::fcm::init_membership_masked(params.clusters, &padded.w, params.seed);
+
+    let pallas = FcmExecutor::with_flavor(&reg, "pallas");
+    let refx = FcmExecutor::with_flavor(&reg, "ref");
+    let (mut a, _) = pallas.segment_from(&padded, u0.clone(), &params).unwrap();
+    let (mut b, _) = refx.segment_from(&padded, u0, &params).unwrap();
+    canonical_relabel(&mut a);
+    canonical_relabel(&mut b);
+    assert_eq!(a.iterations, b.iterations);
+    let agree = a.labels.iter().zip(&b.labels).filter(|(x, y)| x == y).count();
+    assert!(
+        agree as f64 / a.labels.len() as f64 > 0.9995,
+        "pallas vs ref agreement {agree}/{}",
+        a.labels.len()
+    );
+}
+
+#[test]
+fn device_converges_and_recovers_tissue_centers() {
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let (fv, gt) = slice_features();
+    let (mut run, stats) = exec.segment(&fv, &FcmParams::default()).unwrap();
+    canonical_relabel(&mut run);
+    assert!(run.converged, "delta {}", run.final_delta);
+    assert!(stats.iterations < 100);
+    // Ascending centers near the tissue means (2, 55, 115, 165).
+    let expect = [2.0f32, 55.0, 115.0, 165.0];
+    for (c, e) in run.centers.iter().zip(expect) {
+        assert!((c - e).abs() < 15.0, "centers {:?}", run.centers);
+    }
+    let d = repro::eval::dice_per_class(&run.labels, &gt, 4);
+    for (cls, v) in d.iter().enumerate() {
+        assert!(*v > 0.85, "class {cls} DSC {v}");
+    }
+}
+
+#[test]
+fn objective_decreases_on_device() {
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let (fv, _) = slice_features();
+    let (run, _) = exec.segment(&fv, &FcmParams::default()).unwrap();
+    for w in run.jm_history.windows(2) {
+        assert!(w[1] <= w[0] * (1.0 + 1e-4), "J increased: {:?}", run.jm_history);
+    }
+}
+
+#[test]
+fn bucket_padding_does_not_change_result() {
+    // Segment a 4096-px crop via its natural bucket and via a forced
+    // larger bucket; converged centers must agree.
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let params = FcmParams::default();
+    let s = generate_slice(&PhantomConfig::default());
+    let crop = FeatureVector::from_values(
+        s.image.pixels[..4096].iter().map(|&p| p as f32).collect(),
+    );
+
+    let (mut small, st_small) = exec.segment(&crop, &params).unwrap();
+    assert_eq!(st_small.bucket, 4096);
+
+    let padded = pad_to(&crop, 16384);
+    let u0 = repro::fcm::init_membership_masked(params.clusters, &padded.w, params.seed);
+    let (mut big, st_big) = exec.segment_from(&padded, u0, &params).unwrap();
+    assert_eq!(st_big.bucket, 16384);
+
+    canonical_relabel(&mut small);
+    canonical_relabel(&mut big);
+    for (a, b) in small.centers.iter().zip(&big.centers) {
+        assert!((a - b).abs() < 0.5, "{:?} vs {:?}", small.centers, big.centers);
+    }
+    let agree = small
+        .labels
+        .iter()
+        .zip(&big.labels[..small.labels.len()])
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(agree as f64 / small.labels.len() as f64 > 0.995);
+}
+
+#[test]
+fn brfcm_histogram_bucket_runs_on_device() {
+    // The n=256 artifact serves brFCM: histogram bins as weighted points.
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let s = generate_slice(&PhantomConfig::default());
+    let (x, w) = repro::fcm::brfcm::reduce(&s.image.pixels);
+    let fv = FeatureVector::weighted(x, w);
+    let params = FcmParams {
+        epsilon: 1e-4,
+        ..Default::default()
+    };
+    let (mut run, stats) = exec.segment(&fv, &params).unwrap();
+    assert_eq!(stats.bucket, 256);
+    canonical_relabel(&mut run);
+    // Compare with full sequential FCM on the pixels.
+    let xf: Vec<f32> = s.image.pixels.iter().map(|&p| p as f32).collect();
+    let wf = vec![1.0; xf.len()];
+    let mut full = repro::fcm::sequential::run(&xf, &wf, &FcmParams::default());
+    canonical_relabel(&mut full);
+    for (a, b) in run.centers.iter().zip(&full.centers) {
+        assert!((a - b).abs() < 2.5, "brfcm-device {:?} vs full {:?}", run.centers, full.centers);
+    }
+}
+
+#[test]
+fn block_sum_artifact_matches_host_sum() {
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let a: Vec<f32> = (0..16384).map(|i| ((i * 37) % 101) as f32 * 0.25).collect();
+    let partials = exec.block_sum(&a).unwrap();
+    // Partial count = n / block (block policy: aot.block_for).
+    assert_eq!(partials.len(), 16384 / 4096);
+    let host: f32 = a.iter().sum();
+    let dev: f32 = partials.iter().sum();
+    assert!((host - dev).abs() / host < 1e-5, "host {host} dev {dev}");
+}
+
+#[test]
+fn missing_bucket_is_a_clean_error() {
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    // clusters=7 has no artifacts.
+    let fv = FeatureVector::from_values(vec![1.0; 256]);
+    let params = FcmParams {
+        clusters: 7,
+        ..Default::default()
+    };
+    let err = exec.segment(&fv, &params).unwrap_err();
+    assert!(format!("{err:#}").contains("no fcm_iteration artifact"), "{err:#}");
+}
+
+#[test]
+fn wrong_m_is_rejected() {
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let fv = FeatureVector::from_values(vec![1.0; 256]);
+    let padded = pad_to(&fv, 256);
+    let params = FcmParams {
+        m: 3.0, // artifacts are baked with m=2
+        ..Default::default()
+    };
+    let u0 = repro::fcm::init_membership_masked(params.clusters, &padded.w, params.seed);
+    let err = exec.segment_from(&padded, u0, &params).unwrap_err();
+    assert!(format!("{err:#}").contains("baked with m="), "{err:#}");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let reg = registry();
+    let exec = FcmExecutor::new(&reg);
+    let fv = FeatureVector::from_values(vec![10.0; 200]);
+    let params = FcmParams {
+        max_iters: 2,
+        ..Default::default()
+    };
+    let _ = exec.segment(&fv, &params).unwrap();
+    let n1 = reg.compiled_count();
+    let _ = exec.segment(&fv, &params).unwrap();
+    assert_eq!(reg.compiled_count(), n1, "second run recompiled");
+}

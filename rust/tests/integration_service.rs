@@ -1,0 +1,171 @@
+//! Integration tests over the L3 coordinator: engines, batching, failure
+//! injection, backpressure, and determinism.
+
+use repro::config::Config;
+use repro::coordinator::{Engine, Service};
+use repro::fcm::FcmParams;
+use repro::image::FeatureVector;
+use repro::phantom::{generate_slice, PhantomConfig};
+
+fn small_cfg(workers: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.service.workers = workers;
+    cfg.service.max_batch = 4;
+    cfg
+}
+
+fn crop(n: usize, seed: u64) -> FeatureVector {
+    let s = generate_slice(&PhantomConfig {
+        seed,
+        ..PhantomConfig::default()
+    });
+    FeatureVector::from_values(s.image.pixels[..n].iter().map(|&p| p as f32).collect())
+}
+
+#[test]
+fn serves_all_engines() {
+    let service = Service::start(&small_cfg(1)).unwrap();
+    let params = FcmParams::default();
+    let fv = crop(4096, 1);
+    let mut results = Vec::new();
+    for engine in [Engine::Device, Engine::DeviceRef, Engine::Sequential, Engine::BrFcm] {
+        let t = service.submit(fv.clone(), params, engine).unwrap();
+        results.push((engine, t.wait().unwrap()));
+    }
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.failed, 0);
+    // All engines should find approximately the same centers.
+    let base = &results[0].1.centers;
+    for (engine, r) in &results {
+        assert!(r.converged, "{engine:?} did not converge");
+        for (a, b) in r.centers.iter().zip(base) {
+            assert!((a - b).abs() < 4.0, "{engine:?}: {:?} vs {base:?}", r.centers);
+        }
+        // Canonical labels: ascending centers.
+        assert!(r.centers.windows(2).all(|w| w[0] <= w[1]));
+    }
+}
+
+#[test]
+fn failure_injection_bad_clusters() {
+    let service = Service::start(&small_cfg(1)).unwrap();
+    let params = FcmParams {
+        clusters: 7, // no artifact for c=7
+        ..Default::default()
+    };
+    let t = service.submit(crop(256, 2), params, Engine::Device).unwrap();
+    let err = t.wait().unwrap_err();
+    assert!(format!("{err:#}").contains("no fcm_iteration artifact"));
+    // A failed job must not poison the worker: the next job succeeds.
+    let ok = service
+        .submit(crop(256, 3), FcmParams::default(), Engine::Device)
+        .unwrap();
+    assert!(ok.wait().is_ok());
+    let snap = service.shutdown();
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn batching_groups_same_bucket_jobs() {
+    let mut cfg = small_cfg(1);
+    cfg.service.max_batch = 8;
+    let service = Service::start(&cfg).unwrap();
+    let params = FcmParams {
+        max_iters: 3,
+        ..Default::default()
+    };
+    // 8 identical-bucket jobs, 1 worker: expect far fewer batches than jobs.
+    let tickets: Vec<_> = (0..8)
+        .map(|i| service.submit(crop(4096, i), params, Engine::Device).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 8);
+    assert!(
+        snap.mean_batch_size > 1.5,
+        "batching ineffective: {:?}",
+        snap
+    );
+}
+
+#[test]
+fn mixed_buckets_still_all_served() {
+    let service = Service::start(&small_cfg(2)).unwrap();
+    let params = FcmParams {
+        max_iters: 5,
+        ..Default::default()
+    };
+    let mut tickets = Vec::new();
+    for i in 0..6u64 {
+        tickets.push(service.submit(crop(256, i), params, Engine::Device).unwrap());
+        tickets.push(service.submit(crop(4096, i), params, Engine::Device).unwrap());
+    }
+    let mut served = 0;
+    for t in tickets {
+        t.wait().unwrap();
+        served += 1;
+    }
+    assert_eq!(served, 12);
+}
+
+#[test]
+fn results_deterministic_per_seed() {
+    let service = Service::start(&small_cfg(2)).unwrap();
+    let params = FcmParams::default();
+    let a = service
+        .submit(crop(4096, 7), params, Engine::Device)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let b = service
+        .submit(crop(4096, 7), params, Engine::Device)
+        .unwrap()
+        .wait()
+        .unwrap();
+    service.shutdown();
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.centers, b.centers);
+    assert_eq!(a.iterations, b.iterations);
+}
+
+#[test]
+fn shutdown_with_queued_work_drains() {
+    let service = Service::start(&small_cfg(2)).unwrap();
+    let params = FcmParams {
+        max_iters: 2,
+        ..Default::default()
+    };
+    let tickets: Vec<_> = (0..10)
+        .map(|i| service.submit(crop(256, i), params, Engine::Sequential).unwrap())
+        .collect();
+    // Shut down immediately; queued jobs must still be served (drain).
+    let snap = service.shutdown();
+    let mut ok = 0;
+    for t in tickets {
+        if t.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, 10, "{snap:?}");
+}
+
+#[test]
+fn metrics_track_queue_and_service_time() {
+    let service = Service::start(&small_cfg(1)).unwrap();
+    let params = FcmParams::default();
+    for i in 0..4 {
+        service
+            .submit(crop(4096, i), params, Engine::Sequential)
+            .unwrap()
+            .wait()
+            .unwrap();
+    }
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 4);
+    assert!(snap.mean_service_s > 0.0);
+    assert!(snap.mean_iterations > 1.0);
+}

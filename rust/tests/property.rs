@@ -1,0 +1,258 @@
+//! Property-based tests (in-tree harness; the offline build has no
+//! proptest). Each property runs against many seeded random cases via
+//! Rng64; failures print the seed for deterministic reproduction.
+
+use repro::eval::{dice_per_class, Confusion};
+use repro::fcm::{self, FcmParams};
+use repro::image::{pgm, GrayImage};
+use repro::util::Rng64;
+
+/// Run `f` for `cases` seeds, reporting the failing seed.
+fn for_all_seeds(cases: u64, f: impl Fn(u64)) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if result.is_err() {
+            panic!("property failed for seed {seed}");
+        }
+    }
+}
+
+fn random_intensities(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    // Mixture of 2-5 modes with random spreads — realistic FCM inputs.
+    let k = 2 + (rng.below(4) as usize);
+    let mus: Vec<f32> = (0..k).map(|_| rng.uniform(5.0, 250.0)).collect();
+    (0..n)
+        .map(|_| {
+            let j = rng.below(k as u64) as usize;
+            let sigma = rng.uniform(1.0, 12.0);
+            rng.gauss(mus[j], sigma).clamp(0.0, 255.0)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sequential_membership_rows_always_sum_to_one() {
+    for_all_seeds(20, |seed| {
+        let mut rng = Rng64::new(seed);
+        let n = 200 + rng.below(2000) as usize;
+        let c = 2 + rng.below(5) as usize;
+        let x = random_intensities(&mut rng, n);
+        let w = vec![1.0; n];
+        let run = fcm::sequential::run(
+            &x,
+            &w,
+            &FcmParams {
+                clusters: c,
+                max_iters: 20,
+                seed,
+                ..Default::default()
+            },
+        );
+        for i in 0..n {
+            let s: f32 = (0..c).map(|j| run.u[j * n + i]).sum();
+            assert!((s - 1.0).abs() < 1e-3, "pixel {i} sums to {s}");
+            for j in 0..c {
+                let u = run.u[j * n + i];
+                assert!((0.0..=1.0 + 1e-5).contains(&u), "u[{j},{i}]={u}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sequential_objective_never_increases() {
+    for_all_seeds(15, |seed| {
+        let mut rng = Rng64::new(seed ^ 0xABCD);
+        let n = 500 + rng.below(1500) as usize;
+        let x = random_intensities(&mut rng, n);
+        let w = vec![1.0; n];
+        let run = fcm::sequential::run(
+            &x,
+            &w,
+            &FcmParams {
+                clusters: 3,
+                max_iters: 30,
+                seed,
+                ..Default::default()
+            },
+        );
+        for pair in run.jm_history.windows(2) {
+            assert!(pair[1] <= pair[0] * (1.0 + 1e-9), "{:?}", run.jm_history);
+        }
+    });
+}
+
+#[test]
+fn prop_labels_in_range_and_centers_in_data_hull() {
+    for_all_seeds(15, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x1234);
+        let n = 300 + rng.below(1000) as usize;
+        let c = 2 + rng.below(4) as usize;
+        let x = random_intensities(&mut rng, n);
+        let w = vec![1.0; n];
+        let run = fcm::sequential::run(
+            &x,
+            &w,
+            &FcmParams {
+                clusters: c,
+                max_iters: 40,
+                seed,
+                ..Default::default()
+            },
+        );
+        let (lo, hi) = x
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+                (l.min(v), h.max(v))
+            });
+        assert!(run.labels.iter().all(|&l| (l as usize) < c));
+        for &v in &run.centers {
+            assert!(v >= lo - 1.0 && v <= hi + 1.0, "center {v} outside [{lo},{hi}]");
+        }
+    });
+}
+
+#[test]
+fn prop_defuzzify_picks_argmax() {
+    for_all_seeds(25, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x77);
+        let n = 1 + rng.below(200) as usize;
+        let c = 2 + rng.below(5) as usize;
+        let u: Vec<f32> = (0..c * n).map(|_| rng.next_f32()).collect();
+        let labels = fcm::defuzzify(&u, c, n);
+        for i in 0..n {
+            let li = labels[i] as usize;
+            for j in 0..c {
+                assert!(u[li * n + i] >= u[j * n + i] || li == j);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_brfcm_lut_consistency_and_agreement() {
+    for_all_seeds(8, |seed| {
+        let mut rng = Rng64::new(seed ^ 0xBEEF);
+        let n = 4000 + rng.below(8000) as usize;
+        let px: Vec<u8> = random_intensities(&mut rng, n)
+            .into_iter()
+            .map(|v| v as u8)
+            .collect();
+        let br = fcm::brfcm::run_on_pixels(&px, &FcmParams { seed, ..Default::default() });
+        for (i, &p) in px.iter().enumerate() {
+            assert_eq!(br.labels[i], br.label_lut[p as usize]);
+        }
+    });
+}
+
+#[test]
+fn prop_dice_bounds_and_symmetry() {
+    for_all_seeds(30, |seed| {
+        let mut rng = Rng64::new(seed ^ 0xD1CE);
+        let n = 1 + rng.below(500) as usize;
+        let a: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+        let b: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+        let dab = dice_per_class(&a, &b, 4);
+        let dba = dice_per_class(&b, &a, 4);
+        for (x, y) in dab.iter().zip(&dba) {
+            assert!((x - y).abs() < 1e-12, "DSC not symmetric");
+            assert!((0.0..=1.0).contains(x));
+        }
+        // Self-similarity is exactly 1.
+        assert!(dice_per_class(&a, &a, 4).iter().all(|&d| d == 1.0));
+    });
+}
+
+#[test]
+fn prop_confusion_row_sums_match_truth_counts() {
+    for_all_seeds(20, |seed| {
+        let mut rng = Rng64::new(seed ^ 0xC0DE);
+        let n = 1 + rng.below(400) as usize;
+        let truth: Vec<u8> = (0..n).map(|_| rng.below(3) as u8).collect();
+        let pred: Vec<u8> = (0..n).map(|_| rng.below(3) as u8).collect();
+        let c = Confusion::new(&pred, &truth, 3);
+        for t in 0..3usize {
+            let row: u64 = (0..3).map(|p| c.at(t, p)).sum();
+            let count = truth.iter().filter(|&&l| l == t as u8).count() as u64;
+            assert_eq!(row, count);
+        }
+        assert_eq!(c.total() as usize, n);
+    });
+}
+
+#[test]
+fn prop_pgm_roundtrip_random_images() {
+    for_all_seeds(20, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x9931);
+        let w = 1 + rng.below(64) as usize;
+        let h = 1 + rng.below(64) as usize;
+        let px: Vec<u8> = (0..w * h).map(|_| rng.below(256) as u8).collect();
+        let img = GrayImage::from_pixels(w, h, px);
+        let mut buf = Vec::new();
+        pgm::write_to(&img, &mut buf).unwrap();
+        assert_eq!(pgm::parse(&buf).unwrap(), img);
+    });
+}
+
+#[test]
+fn prop_canonical_relabel_preserves_partition() {
+    for_all_seeds(15, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x5150);
+        let n = 100 + rng.below(400) as usize;
+        let x = random_intensities(&mut rng, n);
+        let w = vec![1.0; n];
+        let mut run = fcm::sequential::run(
+            &x,
+            &w,
+            &FcmParams {
+                clusters: 3,
+                max_iters: 25,
+                seed,
+                ..Default::default()
+            },
+        );
+        let before: std::collections::HashMap<u8, usize> =
+            run.labels.iter().fold(Default::default(), |mut m, &l| {
+                *m.entry(l).or_default() += 1;
+                m
+            });
+        fcm::canonical_relabel(&mut run);
+        // Partition sizes are preserved as a multiset.
+        let mut a: Vec<usize> = before.values().copied().collect();
+        let after: std::collections::HashMap<u8, usize> =
+            run.labels.iter().fold(Default::default(), |mut m, &l| {
+                *m.entry(l).or_default() += 1;
+                m
+            });
+        let mut b: Vec<usize> = after.values().copied().collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+        // Centers ascending.
+        assert!(run.centers.windows(2).all(|p| p[0] <= p[1]));
+    });
+}
+
+#[test]
+fn prop_skullstrip_mask_is_subset_of_threshold() {
+    for_all_seeds(6, |seed| {
+        let s = repro::phantom::generate_slice(&repro::phantom::PhantomConfig {
+            with_skull: true,
+            seed,
+            ..Default::default()
+        });
+        let p = repro::phantom::skullstrip::StripParams::default();
+        let (stripped, mask) = repro::phantom::skullstrip::strip(&s.image, &p);
+        assert_eq!(mask.len(), s.image.len());
+        // Everything outside the mask is black; the mask is one connected
+        // region (already covered by unit tests) of plausible brain size.
+        let kept = mask.iter().filter(|&&b| b).count();
+        assert!(kept > s.image.len() / 20, "mask too small: {kept}");
+        assert!(kept < s.image.len() / 2, "mask too large: {kept}");
+        for (i, &keep) in mask.iter().enumerate() {
+            if !keep {
+                assert_eq!(stripped.pixels[i], 0);
+            }
+        }
+    });
+}
