@@ -1,8 +1,11 @@
-//! Batching service demo: mixed-size segmentation workload through the
-//! L3 coordinator — shape-bucket batching, worker pool, backpressure,
-//! per-job latency percentiles.
+//! Batching service demo: mixed-size, mixed-engine segmentation workload
+//! through the L3 coordinator — shape-bucket batching, worker pool,
+//! backpressure, per-job latency percentiles. Device jobs are included
+//! only when AOT artifacts exist; the host engines (parallel/histogram)
+//! always run.
 //!
-//!   make artifacts && cargo run --release --example batch_service
+//!   cargo run --release --example batch_service
+//!   make artifacts && cargo run --release --example batch_service  # + device
 
 use repro::config::Config;
 use repro::coordinator::{Engine, Service};
@@ -19,9 +22,10 @@ fn main() -> anyhow::Result<()> {
 
     let service = Service::start(&cfg)?;
 
-    // A mixed workload: full slices (one bucket), small crops (a smaller
-    // bucket) and brFCM jobs (CPU engine) interleaved — exercises batch
-    // formation across heterogeneous queues.
+    // A mixed workload: full slices and small crops on the host-parallel
+    // engine, histogram fast-path jobs, and (when artifacts exist) device
+    // jobs — exercises batch formation across heterogeneous queues.
+    let device = repro::runtime::device_available(std::path::Path::new("artifacts"));
     let mut tickets = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..6u64 {
@@ -30,17 +34,26 @@ fn main() -> anyhow::Result<()> {
             seed: i,
             ..PhantomConfig::default()
         });
-        tickets.push(("slice/device", service.submit_image(&s.image, params, Engine::Device)?));
+        if device {
+            tickets.push((
+                "slice/device",
+                service.submit_image(&s.image, params, Engine::Device)?,
+            ));
+        }
+        tickets.push((
+            "slice/parallel",
+            service.submit_image(&s.image, params, Engine::Parallel)?,
+        ));
 
         let crop = sized_dataset(12 * 1024, i);
         tickets.push((
-            "crop/device",
-            service.submit_image(&crop.image, params, Engine::Device)?,
+            "crop/parallel",
+            service.submit_image(&crop.image, params, Engine::Parallel)?,
         ));
 
         tickets.push((
-            "slice/brfcm",
-            service.submit(FeatureVector::from_image(&s.image), params, Engine::BrFcm)?,
+            "slice/histogram",
+            service.submit(FeatureVector::from_image(&s.image), params, Engine::Histogram)?,
         ));
     }
 

@@ -2,16 +2,18 @@
 //! pipeline of the paper on a realistic small workload —
 //!
 //!   phantom volume (4 slices, with skull) -> skull stripping -> parallel
-//!   FCM segmentation on the AOT device path -> DSC against ground truth,
-//!   with the sequential baseline run side by side and all images written
-//!   as PGMs under out/brain/.
+//!   FCM segmentation on the fast path (AOT device when artifacts exist,
+//!   else the host-parallel engine) -> DSC against ground truth, with the
+//!   sequential baseline run side by side and all images written as PGMs
+//!   under out/brain/.
 //!
 //! The numbers this prints are recorded in EXPERIMENTS.md (E5/E7).
 //!
+//!   cargo run --release --example brain_segmentation
 //!   make artifacts && cargo run --release --example brain_segmentation
 
 use repro::eval::{dice_per_class, Confusion};
-use repro::fcm::{canonical_relabel, FcmParams};
+use repro::fcm::{canonical_relabel, engine, Backend, EngineOpts, FcmParams};
 use repro::image::{pgm, FeatureVector, LabelMap};
 use repro::phantom::skullstrip::{strip, StripParams};
 use repro::phantom::{generate_slice, PhantomConfig};
@@ -22,8 +24,13 @@ use std::path::Path;
 fn main() -> anyhow::Result<()> {
     let outdir = Path::new("out/brain");
     std::fs::create_dir_all(outdir)?;
-    let registry = Registry::open(Path::new("artifacts"))?;
-    let executor = FcmExecutor::new(&registry);
+    let registry = if repro::runtime::device_available(Path::new("artifacts")) {
+        Registry::open(Path::new("artifacts")).ok()
+    } else {
+        None
+    };
+    let fast_name = if registry.is_some() { "device" } else { "parallel" };
+    println!("fast path: {fast_name}\n");
     let params = FcmParams::default();
 
     let mut table = Table::new([
@@ -49,9 +56,16 @@ fn main() -> anyhow::Result<()> {
 
         let fv = FeatureVector::from_image(&stripped);
 
-        // 3a. Parallel FCM (device path).
+        // 3a. Parallel FCM: device path when artifacts exist, host-
+        //     parallel engine otherwise.
         let t0 = std::time::Instant::now();
-        let (mut dev, _stats) = executor.segment(&fv, &params)?;
+        let mut dev = match &registry {
+            Some(reg) => FcmExecutor::new(reg).segment(&fv, &params)?.0,
+            None => {
+                let opts = EngineOpts::with_backend(Backend::Parallel);
+                engine::run(&fv.x, &fv.w, &params, &opts)
+            }
+        };
         let dev_s = t0.elapsed().as_secs_f64();
         total_device_s += dev_s;
         canonical_relabel(&mut dev);
@@ -64,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         canonical_relabel(&mut seq);
 
         // 4. Evaluate + write label maps.
-        for (engine, run, secs) in [("device", &dev, dev_s), ("seq", &seq, seq_s)] {
+        for (engine, run, secs) in [(fast_name, &dev, dev_s), ("seq", &seq, seq_s)] {
             let d = dice_per_class(&run.labels, &s.ground_truth.labels, 4);
             let acc = Confusion::new(&run.labels, &s.ground_truth.labels, 4).accuracy();
             table.row([
@@ -92,7 +106,7 @@ fn main() -> anyhow::Result<()> {
             .filter(|(a, b)| a == b)
             .count();
         println!(
-            "slice {slice_idx}: device/seq agreement {:.2}% ({agree}/{})",
+            "slice {slice_idx}: {fast_name}/seq agreement {:.2}% ({agree}/{})",
             100.0 * agree as f64 / seq.labels.len() as f64,
             seq.labels.len()
         );
@@ -101,7 +115,7 @@ fn main() -> anyhow::Result<()> {
     println!();
     table.print();
     println!(
-        "\ntotals: device {total_device_s:.2}s, sequential {total_seq_s:.2}s; images in {}",
+        "\ntotals: {fast_name} {total_device_s:.2}s, sequential {total_seq_s:.2}s; images in {}",
         outdir.display()
     );
     Ok(())

@@ -11,6 +11,11 @@ use repro::runtime::{FcmExecutor, Registry};
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
+    if !repro::runtime::device_available(Path::new("artifacts")) {
+        println!("perf_probe needs the device path (artifacts + real xla crate); skipping");
+        println!("host-engine timings: cargo bench --bench baselines");
+        return Ok(());
+    }
     let reg = Registry::open(Path::new("artifacts"))?;
     let params = FcmParams {
         max_iters: 8, // fixed iteration count: measure per-iter cost

@@ -1,10 +1,12 @@
-//! Quickstart: segment one phantom brain slice with the device (AOT
-//! Pallas) path and compare against the sequential baseline.
+//! Quickstart: segment one phantom brain slice with every available
+//! engine — the host backends (sequential / parallel / histogram) always,
+//! plus the device (AOT Pallas) path when artifacts exist.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
+//!   make artifacts && cargo run --release --example quickstart  # + device
 
 use repro::eval::dice_per_class;
-use repro::fcm::{canonical_relabel, FcmParams};
+use repro::fcm::{canonical_relabel, engine, Backend, EngineOpts, FcmParams, FcmRun};
 use repro::image::FeatureVector;
 use repro::phantom::{generate_slice, PhantomConfig};
 use repro::runtime::{FcmExecutor, Registry};
@@ -15,44 +17,59 @@ fn main() -> anyhow::Result<()> {
     let fv = FeatureVector::from_image(&slice.image);
     let params = FcmParams::default(); // c=4, m=2, eps=0.005 (the paper's)
 
-    // 2. Parallel FCM: the AOT-lowered Pallas iteration on PJRT.
-    let registry = Registry::open(std::path::Path::new("artifacts"))?;
-    let executor = FcmExecutor::new(&registry);
-    let (mut device_run, stats) = executor.segment(&fv, &params)?;
-    canonical_relabel(&mut device_run);
-    println!(
-        "device : {} iterations, delta {:.4}, bucket {} ({}ms/iter)",
-        device_run.iterations,
-        device_run.final_delta,
-        stats.bucket,
-        (stats.iterate_s * 1000.0 / device_run.iterations as f64).round()
-    );
+    // 2. Host engines: the paper's sequential baseline and the two
+    //    host-parallel paths (all from the same seeded init).
+    let mut runs: Vec<(String, FcmRun)> = Vec::new();
+    for backend in [Backend::Sequential, Backend::Parallel, Backend::Histogram] {
+        let t0 = std::time::Instant::now();
+        let mut run = engine::run(&fv.x, &fv.w, &params, &EngineOpts::with_backend(backend));
+        let secs = t0.elapsed().as_secs_f64();
+        canonical_relabel(&mut run);
+        println!("{backend:<10}: {} iterations, {secs:.3}s", run.iterations);
+        runs.push((backend.to_string(), run));
+    }
 
-    // 3. Sequential FCM: the paper's baseline.
-    let mut seq_run = repro::fcm::sequential::run(&fv.x, &fv.w, &params);
-    canonical_relabel(&mut seq_run);
-    println!("seq    : {} iterations", seq_run.iterations);
+    // 3. Device path (optional): the AOT-lowered Pallas iteration on PJRT.
+    if repro::runtime::device_available(std::path::Path::new("artifacts")) {
+        let registry = Registry::open(std::path::Path::new("artifacts"))?;
+        let executor = FcmExecutor::new(&registry);
+        let (mut device_run, stats) = executor.segment(&fv, &params)?;
+        canonical_relabel(&mut device_run);
+        println!(
+            "device    : {} iterations, bucket {} ({}ms/iter)",
+            device_run.iterations,
+            stats.bucket,
+            (stats.iterate_s * 1000.0 / device_run.iterations as f64).round()
+        );
+        runs.push(("device".to_string(), device_run));
+    } else {
+        println!("device    : skipped (artifacts missing or stub xla linked)");
+    }
 
-    // 4. Evaluate both against ground truth (paper Fig. 7 metric).
-    for (name, run) in [("device", &device_run), ("seq", &seq_run)] {
+    // 4. Evaluate all against ground truth (paper Fig. 7 metric).
+    for (name, run) in &runs {
         let d = dice_per_class(&run.labels, &slice.ground_truth.labels, 4);
         println!(
-            "{name:7}: DSC bg={:.3} csf={:.3} gm={:.3} wm={:.3}  centers={:?}",
+            "{name:<10}: DSC bg={:.3} csf={:.3} gm={:.3} wm={:.3}  centers={:?}",
             d[0], d[1], d[2], d[3], run.centers
         );
     }
 
-    // 5. The paper's qualitative claim: parallel == sequential.
-    let agree = device_run
-        .labels
-        .iter()
-        .zip(&seq_run.labels)
-        .filter(|(a, b)| a == b)
-        .count();
-    println!(
-        "label agreement device vs seq: {agree}/{} ({:.2}%)",
-        seq_run.labels.len(),
-        100.0 * agree as f64 / seq_run.labels.len() as f64
-    );
+    // 5. The paper's qualitative claim: parallel == sequential — here for
+    //    every engine vs the sequential baseline.
+    let base = &runs[0].1;
+    for (name, run) in &runs[1..] {
+        let agree = run
+            .labels
+            .iter()
+            .zip(&base.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        println!(
+            "label agreement {name} vs sequential: {agree}/{} ({:.2}%)",
+            base.labels.len(),
+            100.0 * agree as f64 / base.labels.len() as f64
+        );
+    }
     Ok(())
 }

@@ -1,8 +1,10 @@
 //! Speedup study (Table 3 + Fig. 8, quick form): regenerates the paper's
 //! performance evaluation through the calibrated C2050/i5 cost model and
-//! measures this stack's own sequential-vs-device ratio alongside.
+//! measures this stack's own host-engine (and, with artifacts, device)
+//! ratios alongside.
 //!
-//!   make artifacts && cargo run --release --example speedup_study
+//!   cargo run --release --example speedup_study
+//!   make artifacts && cargo run --release --example speedup_study  # + device
 
 use repro::config::Config;
 use repro::report::experiments as exp;

@@ -3,7 +3,8 @@
 //! batching service, then compute the volume-level DSC — the clinical
 //! number per tissue over all voxels.
 //!
-//!   make artifacts && cargo run --release --example volume_batch
+//!   cargo run --release --example volume_batch          # host engine
+//!   make artifacts && cargo run --release --example volume_batch  # device
 
 use repro::config::Config;
 use repro::coordinator::{Engine, Service};
@@ -13,6 +14,14 @@ use repro::phantom::{generate_volume, PhantomConfig};
 fn main() -> anyhow::Result<()> {
     let cfg = Config::new();
     let params = FcmParams::from(&cfg.fcm);
+    // Device when the device path is usable, else the host-parallel
+    // engine.
+    let engine = if repro::runtime::device_available(std::path::Path::new(&cfg.artifacts_dir)) {
+        Engine::Device
+    } else {
+        Engine::Parallel
+    };
+    println!("engine: {engine:?}");
 
     // A coarse pass over the cerebrum: every 4th slice of 80..120.
     let volume = generate_volume(&PhantomConfig::default(), 80, 120, 4);
@@ -27,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let tickets: Vec<_> = volume
         .slices
         .iter()
-        .map(|s| service.submit_image(&s.image, params, Engine::Device))
+        .map(|s| service.submit_image(&s.image, params, engine))
         .collect::<anyhow::Result<_>>()?;
     let predictions: Vec<Vec<u8>> = tickets
         .into_iter()

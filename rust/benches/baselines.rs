@@ -1,30 +1,107 @@
-//! Bench: paper Table 1 frame — all methods in this repo measured on the
-//! same workload (experiment E1), plus a phase-level breakdown of the
-//! sequential baseline (the paper's Section 4 dependency analysis:
-//! center sums vs membership updates).
+//! Bench: host-engine comparison (the PR-1 perf gate) + the Table 1
+//! frame + the sequential phase breakdown.
+//!
+//! Measures the three host paths on the same phantom workloads:
+//!   * sequential — paper Algorithm 1, the Table 3 comparator,
+//!   * parallel   — fcm::engine fused iterations + chunked deterministic
+//!                  tree reductions over all cores,
+//!   * histogram  — the brFCM <=256-bin fast path,
+//! plus the device path when AOT artifacts are present.
+//!
+//! Results are written to BENCH_PR1.json at the repo root (mean/p95 per
+//! size, speedups vs sequential) so the numbers are tracked in-repo.
 //!
 //!   cargo bench --bench baselines
+//!   REPRO_BENCH_QUICK=1 cargo bench --bench baselines   # CI smoke
+//!
+//! Perf gate: histogram >= 8x over sequential on the 100KB phantom at
+//! default params (c=4, m=2); parallel bit-identical across thread
+//! counts. Both are printed as GATE lines at the end.
 
 use repro::config::Config;
-use repro::fcm::{sequential, FcmParams};
-use repro::harness::{bench, Opts};
+use repro::fcm::{engine, sequential, Backend, EngineOpts, FcmParams};
+use repro::harness::{bench, BenchResult, Opts};
 use repro::image::FeatureVector;
 use repro::phantom::sized_dataset;
-use repro::report::{experiments as exp, fmt_secs, Table};
+use repro::report::{experiments as exp, fmt_secs, fmt_x, Table};
+
+struct SizeRow {
+    bytes: usize,
+    seq: BenchResult,
+    par: BenchResult,
+    hist: BenchResult,
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("REPRO_BENCH_QUICK").is_ok();
     let runs = if quick { 3 } else { 5 };
     let cfg = Config::new();
+    let params = FcmParams::from(&cfg.fcm);
+    let threads = repro::fcm::engine::parallel::resolve_threads(cfg.engine.threads);
 
     println!("== bench baselines (Table 1 frame) ==\n");
     exp::table1(&cfg, runs)?.print();
+
+    // Host-engine sweep: the 100KB phantom is the gated size; the full
+    // run adds the 20KB and 300KB points of the Table 3 axis.
+    let sizes: Vec<usize> = if quick {
+        vec![100 * 1024]
+    } else {
+        vec![20 * 1024, 100 * 1024, 300 * 1024]
+    };
+    let opts = Opts {
+        warmup: 1,
+        min_runs: runs.min(3),
+        max_runs: runs,
+        max_seconds: 30.0,
+    };
+
+    println!("\n== host engines: sequential vs parallel vs histogram ==");
+    println!("(threads = {threads}, chunk = {}; c=4, m=2, eps=0.005)\n", cfg.engine.chunk);
+    let mut t = Table::new([
+        "size", "seq mean", "seq p95", "par mean", "par p95", "hist mean", "hist p95",
+        "par x", "hist x",
+    ]);
+    let mut rows = Vec::new();
+    for &bytes in &sizes {
+        let kb = bytes / 1024;
+        let data = sized_dataset(bytes, cfg.fcm.seed);
+        let fv = FeatureVector::from_image(&data.image);
+        let seq = bench(&format!("seq-{kb}KB"), &opts, || {
+            let _ = sequential::run(&fv.x, &fv.w, &params);
+        });
+        let par = bench(&format!("par-{kb}KB"), &opts, || {
+            let o = EngineOpts::with_backend(Backend::Parallel);
+            let _ = engine::run(&fv.x, &fv.w, &params, &o);
+        });
+        let hist = bench(&format!("hist-{kb}KB"), &opts, || {
+            let o = EngineOpts::with_backend(Backend::Histogram);
+            let _ = engine::run(&fv.x, &fv.w, &params, &o);
+        });
+        t.row([
+            format!("{kb}KB"),
+            fmt_secs(seq.mean()),
+            fmt_secs(seq.seconds.p95),
+            fmt_secs(par.mean()),
+            fmt_secs(par.seconds.p95),
+            fmt_secs(hist.mean()),
+            fmt_secs(hist.seconds.p95),
+            fmt_x(seq.mean() / par.mean()),
+            fmt_x(seq.mean() / hist.mean()),
+        ]);
+        rows.push(SizeRow {
+            bytes,
+            seq,
+            par,
+            hist,
+        });
+    }
+    t.print();
 
     // Phase breakdown: where does the sequential time go? (The paper's
     // Section 4 argues the center-sum "sigma operations" dominate and
     // motivate the reduction kernels.)
     println!("\n== sequential phase breakdown (100KB) ==\n");
-    let params = FcmParams::default();
     let data = sized_dataset(100 * 1024, 42);
     let fv = FeatureVector::from_image(&data.image);
     let n = fv.x.len();
@@ -32,33 +109,119 @@ fn main() -> anyhow::Result<()> {
     let u = repro::fcm::init_membership(c, n, params.seed);
     let mut centers = vec![0f32; c];
     let mut u_new = vec![0f32; c * n];
-
-    let opts = Opts {
+    let phase_opts = Opts {
         warmup: 1,
         min_runs: runs,
         max_runs: runs.max(10),
         max_seconds: 5.0,
     };
-    let b_centers = bench("centers", &opts, || {
+    let b_centers = bench("centers", &phase_opts, || {
         sequential::update_centers(&fv.x, &fv.w, &u, c, params.m as f64, &mut centers);
     });
-    let b_members = bench("memberships", &opts, || {
+    let b_members = bench("memberships", &phase_opts, || {
         let _ = sequential::update_memberships(
             &fv.x, &fv.w, &centers, params.m as f64, &u, &mut u_new,
         );
     });
-    let mut t = Table::new(["phase", "per-iteration(s)", "share"]);
+    let mut pt = Table::new(["phase", "per-iteration(s)", "share"]);
     let total = b_centers.mean() + b_members.mean();
-    t.row([
+    pt.row([
         "centers (Eq. 3 sigma sums)",
         &fmt_secs(b_centers.mean()),
         &format!("{:.0}%", 100.0 * b_centers.mean() / total),
     ]);
-    t.row([
+    pt.row([
         "memberships (Eq. 4)",
         &fmt_secs(b_members.mean()),
         &format!("{:.0}%", 100.0 * b_members.mean() / total),
     ]);
-    t.print();
+    pt.print();
+
+    // Determinism gate: the parallel engine must be bit-identical across
+    // thread counts (the Algorithm-2 fixed-order reduction contract).
+    let det_data = sized_dataset(60 * 1024, 7);
+    let det_fv = FeatureVector::from_image(&det_data.image);
+    let u0 = repro::fcm::init_membership(c, det_fv.x.len(), 7);
+    let opts1 = EngineOpts {
+        backend: Backend::Parallel,
+        threads: 1,
+        chunk: 4096,
+    };
+    let opts8 = EngineOpts {
+        threads: 8,
+        ..opts1
+    };
+    let r1 = engine::run_from(&det_fv.x, &det_fv.w, u0.clone(), &params, &opts1);
+    let r8 = engine::run_from(&det_fv.x, &det_fv.w, u0, &params, &opts8);
+    let deterministic = r1.centers == r8.centers && r1.u == r8.u;
+
+    // The 100KB histogram gate.
+    let gate = rows
+        .iter()
+        .find(|r| r.bytes == 100 * 1024)
+        .map(|r| r.seq.mean() / r.hist.mean())
+        .unwrap_or(0.0);
+    println!(
+        "\nGATE histogram >= 8x @100KB: {} ({gate:.1}x)",
+        if gate >= 8.0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "GATE parallel deterministic across thread counts: {}",
+        if deterministic { "PASS" } else { "FAIL" }
+    );
+
+    write_json(&rows, threads, gate, deterministic, quick)?;
+    Ok(())
+}
+
+/// Record the host-engine numbers in BENCH_PR1.json at the repo root
+/// (hand-rolled JSON: the offline build has no serde).
+fn write_json(
+    rows: &[SizeRow],
+    threads: usize,
+    gate_hist_100kb: f64,
+    deterministic: bool,
+    quick: bool,
+) -> anyhow::Result<()> {
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::Path::new(&dir).join("../BENCH_PR1.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_PR1.json"),
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"pr\": 1,\n");
+    s.push_str("  \"bench\": \"baselines\",\n");
+    s.push_str("  \"status\": \"measured\",\n");
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"params\": {\"clusters\": 4, \"m\": 2.0, \"epsilon\": 0.005, \"seed\": 42},\n");
+    s.push_str(&format!("  \"engine_threads\": {threads},\n"));
+    s.push_str(&format!(
+        "  \"gates\": {{\"histogram_speedup_100kb\": {gate_hist_100kb:.3}, \"histogram_gate_pass\": {}, \"parallel_deterministic\": {deterministic}}},\n",
+        gate_hist_100kb >= 8.0
+    ));
+    s.push_str("  \"sizes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let eng = |b: &BenchResult| {
+            format!(
+                "{{\"mean_s\": {:.6}, \"p95_s\": {:.6}, \"runs\": {}}}",
+                b.mean(),
+                b.seconds.p95,
+                b.runs
+            )
+        };
+        s.push_str(&format!(
+            "    {{\"bytes\": {}, \"sequential\": {}, \"parallel\": {}, \"histogram\": {}, \"speedup_parallel\": {:.3}, \"speedup_histogram\": {:.3}}}{}\n",
+            r.bytes,
+            eng(&r.seq),
+            eng(&r.par),
+            eng(&r.hist),
+            r.seq.mean() / r.par.mean(),
+            r.seq.mean() / r.hist.mean(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(&path, &s)?;
+    println!("\nwrote {}", path.display());
     Ok(())
 }

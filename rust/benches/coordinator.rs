@@ -1,7 +1,10 @@
 //! Bench: L3 coordinator throughput — workers x batch-size sweep over a
-//! homogeneous slice workload. Not a paper table (the paper has no
-//! serving layer); this is the perf gate for DESIGN.md S12 and the §Perf
-//! log in EXPERIMENTS.md.
+//! homogeneous slice workload, per serving engine. Not a paper table (the
+//! paper has no serving layer); this is the perf gate for DESIGN.md S12
+//! and the §Perf log in EXPERIMENTS.md.
+//!
+//! Engines swept: the host engines always (Parallel, Histogram); the
+//! device engine only when AOT artifacts are present.
 //!
 //!   cargo bench --bench coordinator
 
@@ -26,38 +29,48 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let params = FcmParams::default();
 
+    let mut engines = vec![Engine::Parallel, Engine::Histogram];
+    if repro::runtime::device_available(std::path::Path::new("artifacts")) {
+        engines.insert(0, Engine::Device);
+    } else {
+        println!("(device path unavailable — artifacts missing or stub xla linked; skipped)\n");
+    }
+
     let mut t = Table::new([
-        "workers", "max_batch", "wall(s)", "jobs/s", "mean wait(s)", "mean service(s)",
-        "mean batch",
+        "engine", "workers", "max_batch", "wall(s)", "jobs/s", "mean wait(s)",
+        "mean service(s)", "mean batch",
     ]);
-    for workers in [1usize, 2, 4] {
-        for max_batch in [1usize, 8] {
-            let mut cfg = Config::new();
-            cfg.service.workers = workers;
-            cfg.service.max_batch = max_batch;
-            let service = Service::start(&cfg)?;
-            let t0 = std::time::Instant::now();
-            let tickets: Vec<_> = slices
-                .iter()
-                .map(|s| service.submit_image(&s.image, params, Engine::Device))
-                .collect::<anyhow::Result<_>>()?;
-            for ticket in tickets {
-                ticket.wait()?;
+    for &engine in &engines {
+        for workers in [1usize, 2, 4] {
+            for max_batch in [1usize, 8] {
+                let mut cfg = Config::new();
+                cfg.service.workers = workers;
+                cfg.service.max_batch = max_batch;
+                let service = Service::start(&cfg)?;
+                let t0 = std::time::Instant::now();
+                let tickets: Vec<_> = slices
+                    .iter()
+                    .map(|s| service.submit_image(&s.image, params, engine))
+                    .collect::<anyhow::Result<_>>()?;
+                for ticket in tickets {
+                    ticket.wait()?;
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                let snap = service.shutdown();
+                t.row([
+                    format!("{engine:?}"),
+                    workers.to_string(),
+                    max_batch.to_string(),
+                    format!("{wall:.2}"),
+                    format!("{:.2}", jobs as f64 / wall),
+                    format!("{:.3}", snap.mean_queue_wait_s),
+                    format!("{:.3}", snap.mean_service_s),
+                    format!("{:.2}", snap.mean_batch_size),
+                ]);
             }
-            let wall = t0.elapsed().as_secs_f64();
-            let snap = service.shutdown();
-            t.row([
-                workers.to_string(),
-                max_batch.to_string(),
-                format!("{wall:.2}"),
-                format!("{:.2}", jobs as f64 / wall),
-                format!("{:.3}", snap.mean_queue_wait_s),
-                format!("{:.3}", snap.mean_service_s),
-                format!("{:.2}", snap.mean_batch_size),
-            ]);
         }
     }
-    println!("== bench coordinator: {jobs} slice jobs, device engine ==\n");
+    println!("== bench coordinator: {jobs} slice jobs per engine ==\n");
     t.print();
     Ok(())
 }

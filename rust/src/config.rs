@@ -54,6 +54,40 @@ impl FcmConfig {
     }
 }
 
+/// Host engine parameters (the `fcm::engine` backend selection).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Which host implementation serves CPU-engine runs:
+    /// `sequential` | `parallel` | `histogram`.
+    pub backend: crate::fcm::Backend,
+    /// Engine worker threads; 0 = all available cores. Results are
+    /// identical for every value (deterministic chunked reductions).
+    pub threads: usize,
+    /// Pixels per reduction chunk. Part of the determinism contract:
+    /// changing it changes the fp rounding of the sigma sums (within
+    /// tolerance), so it is a config knob, not an auto-tuned value.
+    pub chunk: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            backend: crate::fcm::Backend::Parallel,
+            threads: 0,
+            chunk: 4096,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.chunk == 0 {
+            bail!("engine_chunk must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// Coordinator / service parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServiceConfig {
@@ -91,6 +125,7 @@ impl ServiceConfig {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
     pub fcm: FcmConfig,
+    pub engine: EngineConfig,
     pub service: ServiceConfig,
     /// Directory holding AOT artifacts + manifest.tsv.
     pub artifacts_dir: String,
@@ -100,6 +135,7 @@ impl Config {
     pub fn new() -> Config {
         Config {
             fcm: FcmConfig::default(),
+            engine: EngineConfig::default(),
             service: ServiceConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -132,6 +168,9 @@ impl Config {
             "epsilon" => self.fcm.epsilon = parse(key, v)?,
             "max_iters" => self.fcm.max_iters = parse(key, v)?,
             "seed" => self.fcm.seed = parse(key, v)?,
+            "backend" => self.engine.backend = parse(key, v)?,
+            "engine_threads" => self.engine.threads = parse(key, v)?,
+            "engine_chunk" => self.engine.chunk = parse(key, v)?,
             "workers" => self.service.workers = parse(key, v)?,
             "max_batch" => self.service.max_batch = parse(key, v)?,
             "queue_depth" => self.service.queue_depth = parse(key, v)?,
@@ -143,6 +182,7 @@ impl Config {
 
     pub fn validate(&self) -> Result<()> {
         self.fcm.validate()?;
+        self.engine.validate()?;
         self.service.validate()
     }
 }
@@ -218,6 +258,21 @@ mod tests {
         c.set("max_iters", "50").unwrap();
         assert_eq!(c.fcm.max_iters, 50);
         assert!(c.set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn engine_keys_parse_and_validate() {
+        let c = Config::from_str("backend = histogram\nengine_threads = 4\nengine_chunk = 1024\n")
+            .unwrap();
+        assert_eq!(c.engine.backend, crate::fcm::Backend::Histogram);
+        assert_eq!(c.engine.threads, 4);
+        assert_eq!(c.engine.chunk, 1024);
+        assert!(Config::from_str("backend = cuda\n").is_err());
+        assert!(Config::from_str("engine_chunk = 0\n").is_err());
+        // Default: parallel, auto threads.
+        let d = Config::new();
+        assert_eq!(d.engine.backend, crate::fcm::Backend::Parallel);
+        assert_eq!(d.engine.threads, 0);
     }
 
     #[test]

@@ -15,8 +15,40 @@ pub enum Engine {
     DeviceRef,
     /// Sequential rust baseline (the paper's comparator).
     Sequential,
-    /// brFCM histogram reduction + sequential weighted core.
+    /// Host-parallel engine: fused iterations + deterministic chunked
+    /// tree reductions on CPU threads (fcm::engine, Backend::Parallel).
+    Parallel,
+    /// Histogram fast path for 8-bit inputs (fcm::engine,
+    /// Backend::Histogram; falls back to Parallel for non-8-bit data).
+    Histogram,
+    /// brFCM histogram reduction + sequential weighted core (legacy
+    /// comparator; prefer Engine::Histogram for serving).
     BrFcm,
+}
+
+impl Engine {
+    /// The host-engine backend this variant maps to (None for the
+    /// device and legacy variants). Single source of truth for the
+    /// Engine -> Backend mapping (serve loop, CLI).
+    pub fn host_backend(self) -> Option<crate::fcm::Backend> {
+        match self {
+            Engine::Sequential => Some(crate::fcm::Backend::Sequential),
+            Engine::Parallel => Some(crate::fcm::Backend::Parallel),
+            Engine::Histogram => Some(crate::fcm::Backend::Histogram),
+            Engine::Device | Engine::DeviceRef | Engine::BrFcm => None,
+        }
+    }
+}
+
+/// Backend -> Engine (the CLI's `auto` resolution).
+impl From<crate::fcm::Backend> for Engine {
+    fn from(b: crate::fcm::Backend) -> Engine {
+        match b {
+            crate::fcm::Backend::Sequential => Engine::Sequential,
+            crate::fcm::Backend::Parallel => Engine::Parallel,
+            crate::fcm::Backend::Histogram => Engine::Histogram,
+        }
+    }
 }
 
 /// A segmentation request.
@@ -77,6 +109,17 @@ mod tests {
             engine: Engine::Device,
             submitted: Instant::now(),
             respond: tx,
+        }
+    }
+
+    #[test]
+    fn engine_backend_mapping_roundtrips() {
+        use crate::fcm::Backend;
+        for b in [Backend::Sequential, Backend::Parallel, Backend::Histogram] {
+            assert_eq!(Engine::from(b).host_backend(), Some(b));
+        }
+        for e in [Engine::Device, Engine::DeviceRef, Engine::BrFcm] {
+            assert_eq!(e.host_backend(), None);
         }
     }
 

@@ -11,7 +11,7 @@ use super::job::{Engine, JobResult, SegmentJob};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
-use crate::fcm::{canonical_relabel, FcmParams, FcmRun};
+use crate::fcm::{canonical_relabel, engine, EngineOpts, FcmParams, FcmRun};
 use crate::image::{FeatureVector, GrayImage};
 use crate::runtime::{FcmExecutor, Registry};
 use anyhow::{anyhow, Result};
@@ -42,10 +42,21 @@ impl Ticket {
 }
 
 impl Service {
-    /// Start workers. Fails fast if the artifacts directory is unreadable.
+    /// Start workers. Device engines need the artifacts directory; when it
+    /// is missing the service still starts and serves the host engines
+    /// (Sequential / Parallel / Histogram / BrFcm) — device jobs then fail
+    /// per-job with a clear error instead of taking the service down.
     pub fn start(cfg: &Config) -> Result<Service> {
-        // Validate the manifest up front (each worker re-opens it).
-        crate::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+        // Probe the device path up front so the degraded mode is
+        // announced once, not once per worker. Same probe as the CLI:
+        // a manifest alone is not enough (the vendored xla stub reads
+        // manifests but cannot compile HLO).
+        if !crate::runtime::device_available(std::path::Path::new(&cfg.artifacts_dir)) {
+            eprintln!(
+                "[service] device path unavailable (artifacts missing or stub xla linked); \
+                 serving host engines only"
+            );
+        }
         let queue: Queue<SegmentJob> = Queue::bounded(cfg.service.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let batch_ids = Arc::new(AtomicU64::new(0));
@@ -56,11 +67,20 @@ impl Service {
             let batch_ids = batch_ids.clone();
             let artifacts_dir = cfg.artifacts_dir.clone();
             let max_batch = cfg.service.max_batch;
+            let engine_opts = EngineOpts::from(&cfg.engine);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fcm-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(w, &artifacts_dir, queue, metrics, batch_ids, max_batch)
+                        worker_loop(
+                            w,
+                            &artifacts_dir,
+                            queue,
+                            metrics,
+                            batch_ids,
+                            max_batch,
+                            engine_opts,
+                        )
                     })
                     .expect("spawning worker"),
             );
@@ -129,6 +149,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     batch_ids: Arc<AtomicU64>,
     max_batch: usize,
+    engine_opts: EngineOpts,
 ) {
     // Per-thread PJRT client + executable cache. If artifacts are missing
     // the worker still serves CPU-only engines.
@@ -162,7 +183,7 @@ fn worker_loop(
         for job in batch {
             let queue_wait_s = job.submitted.elapsed().as_secs_f64();
             let t0 = Instant::now();
-            let outcome = serve(&registry, &job);
+            let outcome = serve(&registry, &job, &engine_opts);
             let service_s = t0.elapsed().as_secs_f64();
             match outcome {
                 Ok((run, device)) => {
@@ -195,6 +216,7 @@ fn worker_loop(
 fn serve(
     registry: &Option<Registry>,
     job: &SegmentJob,
+    engine_opts: &EngineOpts,
 ) -> Result<(FcmRun, Option<crate::runtime::DeviceStats>)> {
     match job.engine {
         Engine::Device | Engine::DeviceRef => {
@@ -211,9 +233,17 @@ fn serve(
             canonical_relabel(&mut run);
             Ok((run, Some(stats)))
         }
-        Engine::Sequential => {
-            let mut run =
-                crate::fcm::sequential::run(&job.features.x, &job.features.w, &job.params);
+        Engine::Sequential | Engine::Parallel | Engine::Histogram => {
+            // Host engine: backend forced by the job variant,
+            // threads/chunk from the service config. Note the interplay
+            // with `workers`: each parallel-engine run fans out over
+            // `engine_threads` cores, so the default single-worker
+            // service already saturates the machine.
+            let opts = EngineOpts {
+                backend: job.engine.host_backend().expect("host engine variant"),
+                ..*engine_opts
+            };
+            let mut run = engine::run(&job.features.x, &job.features.w, &job.params, &opts);
             canonical_relabel(&mut run);
             Ok((run, None))
         }

@@ -1,0 +1,337 @@
+//! The fused FCM iteration: one pass over a pixel chunk computes the new
+//! memberships (Equation 4), the convergence delta, the objective J_m
+//! (Equation 1), AND the partial sigma sums for the *next* centers
+//! (Equation 3) — the host analogue of the one-HLO-module-per-iteration
+//! design in `runtime::executor` (which returns `(u_new, v, delta, jm)`
+//! from a single compiled module).
+//!
+//! Contrast with `fcm::sequential`, which walks the image twice per
+//! iteration (once for centers, once for memberships) and re-reads the
+//! membership matrix a third time for the objective. Fusing the three
+//! loops removes two full passes over the c*n membership matrix per
+//! iteration — on images that don't fit in L2 this is the dominant cost.
+//!
+//! Numerical contract: per-pixel arithmetic is **identical** to the
+//! sequential baseline (same f64 intermediates, same f32 rounding of the
+//! stored membership, same ZERO_TOL singularity split), so the only
+//! divergence from `sequential::run_from` is the summation order of the
+//! sigma reductions — bounded by f64 accumulation error over a chunk.
+
+use super::reduce::{chunk_ranges, tree_reduce};
+use crate::fcm::{DEN_EPS, ZERO_TOL};
+
+/// Partial sums produced by one fused pass over one chunk of pixels.
+#[derive(Clone, Debug)]
+pub struct PassPartial {
+    /// Center numerators: sum_i w_i u_ij^m x_i, per cluster.
+    pub num: Vec<f64>,
+    /// Center denominators: sum_i w_i u_ij^m, per cluster.
+    pub den: Vec<f64>,
+    /// Objective contribution: sum_ij w_i u_ij^m d_ij^2.
+    pub jm: f64,
+    /// max |u_new - u_old| over the chunk.
+    pub delta: f32,
+}
+
+impl PassPartial {
+    pub fn zero(c: usize) -> PassPartial {
+        PassPartial {
+            num: vec![0.0; c],
+            den: vec![0.0; c],
+            jm: 0.0,
+            delta: 0.0,
+        }
+    }
+
+    /// Monoid combine (element-wise sums, max delta) — the reduction op
+    /// fed to the fixed-order tree.
+    pub fn combine(a: &PassPartial, b: &PassPartial) -> PassPartial {
+        PassPartial {
+            num: a.num.iter().zip(&b.num).map(|(x, y)| x + y).collect(),
+            den: a.den.iter().zip(&b.den).map(|(x, y)| x + y).collect(),
+            jm: a.jm + b.jm,
+            delta: a.delta.max(b.delta),
+        }
+    }
+
+    /// Finish Equation 3: centers from the reduced sigma sums.
+    pub fn centers(&self, out: &mut [f32]) {
+        for (j, v) in out.iter_mut().enumerate() {
+            *v = (self.num[j] / self.den[j].max(DEN_EPS)) as f32;
+        }
+    }
+}
+
+/// One fused pass over pixels `[start, start+rows[0].len())`.
+///
+/// * `u_old` is the full c*n membership matrix (read-only, strided access
+///   at `j*n + i`);
+/// * `rows[j]` is this chunk's slice of cluster j's row of `u_new`
+///   (disjoint across chunks, which is how the parallel driver shares the
+///   output matrix across threads without locks);
+/// * returns the chunk's [`PassPartial`] for the fixed-order reduction.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_chunk(
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    start: usize,
+    rows: &mut [&mut [f32]],
+) -> PassPartial {
+    let c = centers.len();
+    let len = rows[0].len();
+    let p = 1.0 / (m - 1.0);
+    let fast_m2 = m == 2.0;
+    let mut part = PassPartial::zero(c);
+    let mut d2 = vec![0f64; c];
+    let mut inv = vec![0f64; c];
+
+    for k in 0..len {
+        let i = start + k;
+        let xi = x[i] as f64;
+        let mut n_zero = 0usize;
+        for j in 0..c {
+            let d = xi - centers[j] as f64;
+            d2[j] = d * d;
+            if d2[j] <= ZERO_TOL {
+                n_zero += 1;
+            }
+        }
+        let wi = if w[i] > 0.0 { 1.0f32 } else { 0.0 };
+
+        if n_zero > 0 {
+            // Singularity: split membership among zero-distance clusters
+            // (same rule as sequential::update_memberships).
+            for j in 0..c {
+                let val = if d2[j] <= ZERO_TOL {
+                    wi / n_zero as f32
+                } else {
+                    0.0
+                };
+                part.delta = part.delta.max((val - u_old[j * n + i]).abs());
+                rows[j][k] = val;
+                // Center/objective sums: d2 <= ZERO_TOL for the clusters
+                // holding membership, so jm's contribution is ~0 but kept
+                // exact for parity with objective().
+                let vf = val as f64;
+                let um = if fast_m2 { vf * vf } else { vf.powf(m) };
+                let wu = w[i] as f64 * um;
+                part.num[j] += wu * xi;
+                part.den[j] += wu;
+                part.jm += wu * d2[j];
+            }
+            continue;
+        }
+
+        let mut sum_inv = 0f64;
+        if fast_m2 {
+            for j in 0..c {
+                inv[j] = 1.0 / d2[j];
+                sum_inv += inv[j];
+            }
+        } else {
+            for j in 0..c {
+                // d^(-2/(m-1)) on squared distances = d2^(-1/(m-1)).
+                inv[j] = d2[j].powf(-p);
+                sum_inv += inv[j];
+            }
+        }
+        for j in 0..c {
+            let val = (inv[j] / sum_inv) as f32 * wi;
+            part.delta = part.delta.max((val - u_old[j * n + i]).abs());
+            rows[j][k] = val;
+            // Accumulate from the *stored f32* value, exactly like the
+            // sequential path re-reading the matrix next iteration.
+            let vf = val as f64;
+            let um = if fast_m2 { vf * vf } else { vf.powf(m) };
+            let wu = w[i] as f64 * um;
+            part.num[j] += wu * xi;
+            part.den[j] += wu;
+            part.jm += wu * d2[j];
+        }
+    }
+    part
+}
+
+/// Sigma sums of Equation 3 over one chunk of an existing membership
+/// matrix (used once at startup to get centers_0 from u_0; iterations
+/// after that get their center sums for free from the fused pass).
+#[allow(clippy::too_many_arguments)]
+pub fn centers_chunk(
+    x: &[f32],
+    w: &[f32],
+    u: &[f32],
+    n: usize,
+    c: usize,
+    m: f64,
+    start: usize,
+    len: usize,
+) -> PassPartial {
+    let fast_m2 = m == 2.0;
+    let mut part = PassPartial::zero(c);
+    for j in 0..c {
+        let row = &u[j * n + start..j * n + start + len];
+        let xs = &x[start..start + len];
+        let ws = &w[start..start + len];
+        let mut num = 0f64;
+        let mut den = 0f64;
+        if fast_m2 {
+            for ((&ui, &xi), &wi) in row.iter().zip(xs).zip(ws) {
+                let wu = wi as f64 * (ui as f64) * (ui as f64);
+                num += wu * xi as f64;
+                den += wu;
+            }
+        } else {
+            for ((&ui, &xi), &wi) in row.iter().zip(xs).zip(ws) {
+                let wu = wi as f64 * (ui as f64).powf(m);
+                num += wu * xi as f64;
+                den += wu;
+            }
+        }
+        part.num[j] = num;
+        part.den[j] = den;
+    }
+    part
+}
+
+/// Initial centers from u_0 by chunked fixed-order reduction.
+pub fn initial_centers(
+    x: &[f32],
+    w: &[f32],
+    u: &[f32],
+    c: usize,
+    m: f64,
+    chunk: usize,
+) -> Vec<f32> {
+    let n = x.len();
+    let parts: Vec<PassPartial> = chunk_ranges(n, chunk)
+        .iter()
+        .map(|&(s, l)| centers_chunk(x, w, u, n, c, m, s, l))
+        .collect();
+    let total = tree_reduce(&parts, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c));
+    let mut centers = vec![0f32; c];
+    total.centers(&mut centers);
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcm::{init_membership, sequential};
+    use crate::util::Rng64;
+
+    fn two_mode(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng64::new(seed);
+        let x = (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    rng.gauss(60.0, 3.0)
+                } else {
+                    rng.gauss(190.0, 3.0)
+                }
+            })
+            .collect();
+        (x, vec![1.0; n])
+    }
+
+    #[test]
+    fn initial_centers_match_sequential_update() {
+        let (x, w) = two_mode(3000, 1);
+        let c = 3;
+        let u = init_membership(c, x.len(), 7);
+        let mut expect = vec![0f32; c];
+        sequential::update_centers(&x, &w, &u, c, 2.0, &mut expect);
+        let got = initial_centers(&x, &w, &u, c, 2.0, 512);
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-3, "{got:?} vs {expect:?}");
+        }
+    }
+
+    #[test]
+    fn fused_chunk_memberships_match_sequential_update() {
+        let (x, w) = two_mode(1024, 2);
+        let n = x.len();
+        let c = 2;
+        let u_old = init_membership(c, n, 3);
+        let mut centers = vec![0f32; c];
+        sequential::update_centers(&x, &w, &u_old, c, 2.0, &mut centers);
+
+        // Sequential reference.
+        let mut u_seq = vec![0f32; c * n];
+        let delta_seq = sequential::update_memberships(&x, &w, &centers, 2.0, &u_old, &mut u_seq);
+
+        // Fused over the whole range as one chunk.
+        let mut u_fused = vec![0f32; c * n];
+        let (row0, row1) = u_fused.split_at_mut(n);
+        let mut rows: Vec<&mut [f32]> = vec![row0, row1];
+        let part = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
+
+        assert_eq!(u_fused, u_seq, "fused memberships differ from Eq.4");
+        assert_eq!(part.delta, delta_seq);
+        // jm partial equals objective(u_new, centers).
+        let jm_ref = crate::fcm::objective(&x, &w, &u_seq, &centers, 2.0);
+        assert!((part.jm - jm_ref).abs() / jm_ref.max(1.0) < 1e-9);
+    }
+
+    #[test]
+    fn fused_chunk_handles_singularity_like_sequential() {
+        let x = vec![100.0f32; 32];
+        let w = vec![1.0f32; 32];
+        let n = 32;
+        let c = 2;
+        let u_old = init_membership(c, n, 1);
+        let centers = vec![100.0f32, 100.0];
+        let mut u_seq = vec![0f32; c * n];
+        let d_seq = sequential::update_memberships(&x, &w, &centers, 2.0, &u_old, &mut u_seq);
+        let mut u_fused = vec![0f32; c * n];
+        let (r0, r1) = u_fused.split_at_mut(n);
+        let mut rows: Vec<&mut [f32]> = vec![r0, r1];
+        let part = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
+        assert_eq!(u_fused, u_seq);
+        assert_eq!(part.delta, d_seq);
+        assert!(u_fused.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fused_chunk_respects_padding_mask() {
+        let mut x = vec![50.0f32; 64];
+        x.extend(vec![0.0f32; 16]);
+        let mut w = vec![1.0f32; 64];
+        w.extend(vec![0.0f32; 16]);
+        let n = 80;
+        let c = 2;
+        let u_old = crate::fcm::init_membership_masked(c, &w, 5);
+        let centers = vec![40.0f32, 60.0];
+        let mut u_new = vec![0f32; c * n];
+        let (r0, r1) = u_new.split_at_mut(n);
+        let mut rows: Vec<&mut [f32]> = vec![r0, r1];
+        let _ = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
+        for j in 0..c {
+            for i in 64..n {
+                assert_eq!(u_new[j * n + i], 0.0, "padding gained membership");
+            }
+        }
+    }
+
+    #[test]
+    fn non_integer_m_uses_powf_path_consistently() {
+        let (x, w) = two_mode(512, 9);
+        let n = x.len();
+        let c = 2;
+        let m = 2.5f64;
+        let u_old = init_membership(c, n, 11);
+        let mut centers = vec![0f32; c];
+        sequential::update_centers(&x, &w, &u_old, c, m, &mut centers);
+        let mut u_seq = vec![0f32; c * n];
+        let d_seq = sequential::update_memberships(&x, &w, &centers, m, &u_old, &mut u_seq);
+        let mut u_fused = vec![0f32; c * n];
+        let (r0, r1) = u_fused.split_at_mut(n);
+        let mut rows: Vec<&mut [f32]> = vec![r0, r1];
+        let part = fused_chunk(&x, &w, &u_old, n, &centers, m, 0, &mut rows);
+        assert_eq!(u_fused, u_seq);
+        assert_eq!(part.delta, d_seq);
+    }
+}

@@ -1,0 +1,320 @@
+//! Histogram fast path — brFCM (Eschrich et al.) as an engine backend.
+//!
+//! For 8-bit grayscale inputs the feature space has at most 256 distinct
+//! values, and after the first membership update Eq. 4 makes every
+//! pixel's membership a function of its intensity alone. So the whole
+//! iteration can run over (bin value, bin weight) pairs: per-iteration
+//! cost drops from O(n*c^2) to O(256*c^2), with one O(n) binning pass up
+//! front and one O(n*c) expansion at the end. The weighted-FCM identity
+//! this relies on is proven by `sequential::tests::
+//! weighted_run_matches_expanded_run` and the brfcm module's tests.
+//!
+//! Trajectory parity with the pixel-level run: centers_1 is computed from
+//! the **full pixel-level u_0** (chunked deterministic reduction), after
+//! which centers depend only on intensities — so the center/label
+//! trajectory matches `sequential::run_from` from the same u_0 up to
+//! summation-order rounding. The only semantic difference is the
+//! *first* convergence delta, which is measured against the bin-averaged
+//! u_0 (subsequent deltas are identical, since memberships collapse onto
+//! bins after one update).
+//!
+//! Inputs that are not 8-bit-integral fall back to the parallel engine.
+
+use super::fused::{fused_chunk, initial_centers};
+use super::{parallel, EngineOpts};
+use crate::fcm::{defuzzify, FcmParams, FcmRun};
+
+/// Number of grey levels on the fast path (u8 range).
+pub const BINS: usize = 256;
+
+/// Map a feature value to its grey-level bin, if it is 8-bit-integral.
+fn quantize(v: f32) -> Option<usize> {
+    if (0.0..=255.0).contains(&v) && v.fract() == 0.0 {
+        Some(v as usize)
+    } else {
+        None
+    }
+}
+
+/// Whether the fast path applies: every *real* (w>0) feature is an
+/// integral grey level in [0, 255].
+pub fn applicable(x: &[f32], w: &[f32]) -> bool {
+    x.iter().zip(w).all(|(&xi, &wi)| wi <= 0.0 || quantize(xi).is_some())
+}
+
+/// Run histogram FCM from a fresh (seeded, masked) membership init.
+pub fn run(x: &[f32], w: &[f32], params: &FcmParams, opts: &EngineOpts) -> FcmRun {
+    let u0 = crate::fcm::init_membership_masked(params.clusters, w, params.seed);
+    run_from(x, w, u0, params, opts)
+}
+
+/// Run histogram FCM from a caller-supplied u_0 (falls back to the
+/// parallel engine when the input is not 8-bit grayscale).
+pub fn run_from(
+    x: &[f32],
+    w: &[f32],
+    u0: Vec<f32>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+) -> FcmRun {
+    if x.is_empty() || !applicable(x, w) {
+        return parallel::run_from(x, w, u0, params, opts);
+    }
+    let n = x.len();
+    let c = params.clusters;
+    assert_eq!(w.len(), n, "weights length mismatch");
+    assert_eq!(u0.len(), c * n, "membership length mismatch");
+    let m = params.m as f64;
+
+    // Bin the image: wb[v] = sum of weights at grey level v. Accumulate
+    // in f64 (order-robust), then round once to f32 for the bin loop —
+    // a <=2^-24 relative quantization that cancels in the center
+    // num/den ratio (it is an extra rounding source on top of
+    // summation order, covered by the 1e-3 equivalence tolerance).
+    let mut bin_of = vec![0usize; n];
+    let mut wb64 = [0f64; BINS];
+    for i in 0..n {
+        if w[i] > 0.0 {
+            let b = quantize(x[i]).expect("applicable() checked");
+            bin_of[i] = b;
+            wb64[b] += w[i] as f64;
+        }
+    }
+    let xb: Vec<f32> = (0..BINS).map(|v| v as f32).collect();
+    let wb: Vec<f32> = wb64.iter().map(|&v| v as f32).collect();
+
+    // centers_1 from the full pixel-level u_0 (trajectory parity).
+    let mut centers = initial_centers(x, w, &u0, c, m, opts.chunk.max(1));
+
+    // Bin-level u_0: weight-averaged membership per grey level — only the
+    // first delta reads it; empty bins stay all-zero (w=0 masking).
+    let mut u_bin = vec![0f32; c * BINS];
+    for j in 0..c {
+        let mut sums = [0f64; BINS];
+        for i in 0..n {
+            if w[i] > 0.0 {
+                sums[bin_of[i]] += w[i] as f64 * u0[j * n + i] as f64;
+            }
+        }
+        for b in 0..BINS {
+            if wb64[b] > 0.0 {
+                u_bin[j * BINS + b] = (sums[b] / wb64[b]) as f32;
+            }
+        }
+    }
+
+    // Iterate at bin granularity: one fused chunk of 256 "pixels".
+    let mut u_bin_new = vec![0f32; c * BINS];
+    let mut jm_history = Vec::new();
+    let mut final_delta = f32::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+    for it in 0..params.max_iters {
+        iterations += 1;
+        let part = {
+            let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(BINS).collect();
+            fused_chunk(&xb, &wb, &u_bin, BINS, &centers, m, 0, &mut rows)
+        };
+        std::mem::swap(&mut u_bin, &mut u_bin_new);
+        jm_history.push(part.jm);
+        final_delta = part.delta;
+        if part.delta < params.epsilon {
+            converged = true;
+            break;
+        }
+        // Skip the center update on the final capped iteration (parity
+        // with sequential::run_from; see parallel.rs).
+        if it + 1 < params.max_iters {
+            part.centers(&mut centers);
+        }
+    }
+
+    // Expand bins back to pixels: O(1) LUT per pixel.
+    let bin_labels = defuzzify(&u_bin, c, BINS);
+    let mut labels = vec![0u8; n];
+    let mut u = vec![0f32; c * n];
+    for i in 0..n {
+        if w[i] > 0.0 {
+            let b = bin_of[i];
+            labels[i] = bin_labels[b];
+            for j in 0..c {
+                u[j * n + i] = u_bin[j * BINS + b];
+            }
+        }
+    }
+
+    FcmRun {
+        centers,
+        u,
+        labels,
+        iterations,
+        final_delta,
+        jm_history,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcm::{canonical_relabel, init_membership, sequential, Backend};
+    use crate::util::Rng64;
+
+    fn synth_u8(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng64::new(seed);
+        (0..n)
+            .map(|i| {
+                let mu = [30.0, 95.0, 160.0, 220.0][i % 4];
+                (rng.gauss(mu, 6.0).clamp(0.0, 255.0) as u8) as f32
+            })
+            .collect()
+    }
+
+    fn opts() -> EngineOpts {
+        EngineOpts {
+            backend: Backend::Histogram,
+            threads: 1,
+            chunk: 4096,
+        }
+    }
+
+    #[test]
+    fn applicability_detection() {
+        assert!(applicable(&[0.0, 128.0, 255.0], &[1.0, 1.0, 1.0]));
+        assert!(!applicable(&[0.5], &[1.0]));
+        assert!(!applicable(&[-1.0], &[1.0]));
+        assert!(!applicable(&[256.0], &[1.0]));
+        // Padding (w=0) may hold anything.
+        assert!(applicable(&[777.5], &[0.0]));
+    }
+
+    #[test]
+    fn matches_sequential_from_same_init() {
+        let x = synth_u8(30_000, 1);
+        let w = vec![1.0; x.len()];
+        let params = FcmParams::default();
+        let u0 = init_membership(params.clusters, x.len(), params.seed);
+        let mut seq = sequential::run_from(&x, &w, u0.clone(), &params);
+        let mut hist = run_from(&x, &w, u0, &params, &opts());
+        canonical_relabel(&mut seq);
+        canonical_relabel(&mut hist);
+        for (a, b) in hist.centers.iter().zip(&seq.centers) {
+            assert!((a - b).abs() < 1e-3, "{:?} vs {:?}", hist.centers, seq.centers);
+        }
+        assert_eq!(hist.labels, seq.labels);
+    }
+
+    #[test]
+    fn memberships_are_intensity_functions() {
+        let x = synth_u8(5_000, 2);
+        let w = vec![1.0; x.len()];
+        let run = run(&x, &w, &FcmParams::default(), &opts());
+        let n = x.len();
+        // Any two pixels with the same grey level share memberships.
+        for i in 1..n {
+            if x[i] == x[0] {
+                for j in 0..4 {
+                    assert_eq!(run.u[j * n + i], run.u[j * n], "pixel {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jm_matches_pixel_level_objective() {
+        let x = synth_u8(8_000, 3);
+        let w = vec![1.0; x.len()];
+        let run = run(&x, &w, &FcmParams::default(), &opts());
+        // The bin-level J_m of the final pass equals the pixel-level
+        // objective of the final (expanded) state — the brFCM identity.
+        let jm_px = crate::fcm::objective(&x, &w, &run.u, &run.centers, 2.0);
+        let jm_bin = *run.jm_history.last().unwrap();
+        // run.centers are exactly the centers of the final pass, and the
+        // expanded u repeats the bin memberships, so the two sums differ
+        // only by accumulation order.
+        assert!(
+            (jm_px - jm_bin).abs() / jm_px.max(1.0) < 1e-9,
+            "pixel {jm_px} vs bin {jm_bin}"
+        );
+    }
+
+    #[test]
+    fn capped_run_returns_same_centers_as_sequential() {
+        let x = synth_u8(6_000, 9);
+        let w = vec![1.0; x.len()];
+        let params = FcmParams {
+            epsilon: 0.0,
+            max_iters: 6,
+            ..Default::default()
+        };
+        let u0 = init_membership(params.clusters, x.len(), 3);
+        let seq = sequential::run_from(&x, &w, u0.clone(), &params);
+        let hist = run_from(&x, &w, u0, &params, &opts());
+        assert!(!seq.converged && !hist.converged);
+        for (a, b) in hist.centers.iter().zip(&seq.centers) {
+            assert!((a - b).abs() < 1e-3, "{:?} vs {:?}", hist.centers, seq.centers);
+        }
+    }
+
+    #[test]
+    fn falls_back_on_non_integral_features() {
+        let mut rng = Rng64::new(4);
+        let x: Vec<f32> = (0..2_000)
+            .map(|i| if i % 2 == 0 { rng.gauss(60.5, 2.0) } else { rng.gauss(190.25, 2.0) })
+            .collect();
+        let w = vec![1.0; x.len()];
+        let params = FcmParams {
+            clusters: 2,
+            ..Default::default()
+        };
+        let u0 = init_membership(2, x.len(), 5);
+        let a = run_from(&x, &w, u0.clone(), &params, &opts());
+        let b = super::parallel::run_from(&x, &w, u0, &params, &opts());
+        assert_eq!(a.centers, b.centers, "fallback should be the parallel engine");
+    }
+
+    #[test]
+    fn padding_weights_leave_membership_zero() {
+        let mut x = synth_u8(1_000, 6);
+        x.extend(vec![0.0f32; 200]);
+        let mut w = vec![1.0f32; 1_000];
+        w.extend(vec![0.0f32; 200]);
+        let run = run(&x, &w, &FcmParams::default(), &opts());
+        let n = x.len();
+        for j in 0..4 {
+            for i in 1_000..n {
+                assert_eq!(run.u[j * n + i], 0.0);
+                assert_eq!(run.labels[i], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_bins_equal_expanded_pixels() {
+        // Weighted histogram inputs (x=grey levels, w=counts) give the
+        // same centers as the expanded image — the brFCM identity through
+        // the engine API.
+        let vals = [10.0f32, 200.0, 30.0, 180.0];
+        let counts = [50.0f32, 40.0, 30.0, 20.0];
+        let params = FcmParams {
+            clusters: 2,
+            epsilon: 1e-6,
+            max_iters: 2000,
+            ..Default::default()
+        };
+        let a = run(&vals, &counts, &params, &opts());
+        let mut expanded = Vec::new();
+        for (v, &c) in vals.iter().zip(&counts) {
+            expanded.extend(std::iter::repeat(*v).take(c as usize));
+        }
+        let wexp = vec![1.0; expanded.len()];
+        let b = run(&expanded, &wexp, &params, &opts());
+        let mut ca = a.centers.clone();
+        let mut cb = b.centers.clone();
+        ca.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        cb.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        for (p, q) in ca.iter().zip(&cb) {
+            assert!((p - q).abs() < 0.5, "{ca:?} vs {cb:?}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Host FCM engine — the selectable-backend subsystem.
+//!
+//! The paper's contribution is making FCM's two "sigma operations"
+//! parallel (per-pixel kernels + the Algorithm 2 tree reduction). The
+//! AOT/PJRT device path mirrors that on a simulated device; this module
+//! mirrors it on **CPU threads**, so the host comparator is no longer the
+//! naive twice-over-the-image loop of `fcm::sequential`:
+//!
+//! * [`Backend::Sequential`] — the unmodified paper baseline
+//!   (`fcm::sequential::run_from`), kept as the Table 3 comparator;
+//! * [`Backend::Parallel`] — fused single-pass iterations over fixed-size
+//!   chunks with deterministic tree reductions ([`parallel`]);
+//! * [`Backend::Histogram`] — the brFCM fast path for 8-bit inputs:
+//!   <= 256 weighted values per iteration ([`histogram`]; falls back to
+//!   the parallel engine for non-8-bit features).
+//!
+//! Selection is wired through `config.rs` (`backend`, `engine_threads`,
+//! `engine_chunk` keys), the CLI (`--engine`), and the coordinator's
+//! `Engine::{Parallel, Histogram}` job variants.
+
+pub mod fused;
+pub mod histogram;
+pub mod parallel;
+pub mod reduce;
+
+use crate::fcm::{FcmParams, FcmRun};
+
+/// Which host implementation serves a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Paper Algorithm 1, single-threaded (the speedup comparator).
+    Sequential,
+    /// Fused + chunked + multithreaded (deterministic across threads).
+    #[default]
+    Parallel,
+    /// brFCM histogram reduction for 8-bit inputs.
+    Histogram,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Backend, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Ok(Backend::Sequential),
+            "parallel" | "par" => Ok(Backend::Parallel),
+            "histogram" | "hist" => Ok(Backend::Histogram),
+            other => Err(format!(
+                "unknown backend {other:?} (expected sequential|parallel|histogram)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Backend::Sequential => "sequential",
+            Backend::Parallel => "parallel",
+            Backend::Histogram => "histogram",
+        })
+    }
+}
+
+/// Engine tuning knobs (see `config::EngineConfig` for the file keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineOpts {
+    pub backend: Backend,
+    /// Worker threads; 0 = all available cores. Results are identical
+    /// for every value (deterministic reductions).
+    pub threads: usize,
+    /// Pixels per reduction chunk (fixed grid; determinism contract).
+    pub chunk: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            backend: Backend::Parallel,
+            threads: 0,
+            chunk: 4096,
+        }
+    }
+}
+
+impl EngineOpts {
+    pub fn with_backend(backend: Backend) -> EngineOpts {
+        EngineOpts {
+            backend,
+            ..Default::default()
+        }
+    }
+}
+
+impl From<&crate::config::EngineConfig> for EngineOpts {
+    fn from(c: &crate::config::EngineConfig) -> EngineOpts {
+        EngineOpts {
+            backend: c.backend,
+            threads: c.threads,
+            chunk: c.chunk,
+        }
+    }
+}
+
+/// Run the selected backend from a fresh (seeded, masked) init.
+pub fn run(x: &[f32], w: &[f32], params: &FcmParams, opts: &EngineOpts) -> FcmRun {
+    let u0 = crate::fcm::init_membership_masked(params.clusters, w, params.seed);
+    run_from(x, w, u0, params, opts)
+}
+
+/// Run the selected backend from a caller-supplied initial membership.
+pub fn run_from(
+    x: &[f32],
+    w: &[f32],
+    u0: Vec<f32>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+) -> FcmRun {
+    match opts.backend {
+        Backend::Sequential => crate::fcm::sequential::run_from(x, w, u0, params),
+        Backend::Parallel => parallel::run_from(x, w, u0, params, opts),
+        Backend::Histogram => histogram::run_from(x, w, u0, params, opts),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parses_aliases_and_rejects_junk() {
+        assert_eq!("sequential".parse::<Backend>().unwrap(), Backend::Sequential);
+        assert_eq!("seq".parse::<Backend>().unwrap(), Backend::Sequential);
+        assert_eq!("Parallel".parse::<Backend>().unwrap(), Backend::Parallel);
+        assert_eq!("hist".parse::<Backend>().unwrap(), Backend::Histogram);
+        assert!("cuda".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn backend_display_roundtrips() {
+        for b in [Backend::Sequential, Backend::Parallel, Backend::Histogram] {
+            assert_eq!(b.to_string().parse::<Backend>().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn dispatch_sequential_is_the_baseline() {
+        let x: Vec<f32> = (0..500).map(|i| if i % 2 == 0 { 40.0 } else { 210.0 }).collect();
+        let w = vec![1.0; x.len()];
+        let params = FcmParams {
+            clusters: 2,
+            ..Default::default()
+        };
+        let u0 = crate::fcm::init_membership(2, x.len(), 1);
+        let opts = EngineOpts::with_backend(Backend::Sequential);
+        let a = run_from(&x, &w, u0.clone(), &params, &opts);
+        let b = crate::fcm::sequential::run_from(&x, &w, u0, &params);
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.u, b.u);
+    }
+
+    #[test]
+    fn default_opts_are_parallel_auto() {
+        let o = EngineOpts::default();
+        assert_eq!(o.backend, Backend::Parallel);
+        assert_eq!(o.threads, 0);
+        assert!(o.chunk >= 1);
+    }
+}

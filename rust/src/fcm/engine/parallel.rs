@@ -1,0 +1,320 @@
+//! Multithreaded, cache-blocked FCM — the paper's GPU decomposition
+//! (per-pixel kernels + Algorithm-2 reductions) mapped onto CPU threads.
+//!
+//! Shape of one iteration (mirrors `runtime::executor`'s fused module):
+//!
+//! 1. pixels are partitioned into **fixed-size chunks** (pure function of
+//!    n, never of thread count — `reduce::chunk_ranges`);
+//! 2. each chunk runs the fused pass ([`super::fused::fused_chunk`]):
+//!    new memberships written into that chunk's disjoint slice of the
+//!    output matrix, sigma partial sums returned;
+//! 3. partials are combined **pairwise in chunk order**
+//!    ([`super::reduce::tree_reduce`]) — delta, J_m, and the next centers
+//!    come out of one deterministic reduction.
+//!
+//! Because the chunk grid and reduction tree are independent of the
+//! worker count, results are **bit-identical for any `threads`** — the
+//! property the thread-invariance test pins down. Only safe Rust is used:
+//! the membership matrix is pre-split into per-chunk row slices, so
+//! threads never share a mutable byte.
+
+use super::fused::{fused_chunk, initial_centers, PassPartial};
+use super::reduce::{chunk_ranges, tree_reduce};
+use super::EngineOpts;
+use crate::fcm::{defuzzify, FcmParams, FcmRun};
+
+/// Resolve a thread-count request: 0 means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Run parallel FCM from a fresh (seeded, masked) membership init.
+pub fn run(x: &[f32], w: &[f32], params: &FcmParams, opts: &EngineOpts) -> FcmRun {
+    let u0 = crate::fcm::init_membership_masked(params.clusters, w, params.seed);
+    run_from(x, w, u0, params, opts)
+}
+
+/// Run parallel FCM from a caller-supplied initial membership (the
+/// equivalence suite drives this and `sequential::run_from` from the same
+/// u0).
+pub fn run_from(
+    x: &[f32],
+    w: &[f32],
+    mut u: Vec<f32>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+) -> FcmRun {
+    let n = x.len();
+    let c = params.clusters;
+    assert_eq!(w.len(), n, "weights length mismatch");
+    assert_eq!(u.len(), c * n, "membership length mismatch");
+    let m = params.m as f64;
+    let chunk = opts.chunk.max(1);
+    let threads = resolve_threads(opts.threads);
+
+    if n == 0 {
+        return FcmRun {
+            centers: vec![0.0; c],
+            u,
+            labels: Vec::new(),
+            iterations: 0,
+            final_delta: 0.0,
+            jm_history: Vec::new(),
+            converged: true,
+        };
+    }
+
+    // centers_1 = Eq.3 over u_0 (after this, every fused pass hands back
+    // the next centers' sigma sums for free).
+    let mut centers = initial_centers(x, w, &u, c, m, chunk);
+
+    let ranges = chunk_ranges(n, chunk);
+    let mut u_new = vec![0f32; c * n];
+    let mut jm_history = Vec::new();
+    let mut final_delta = f32::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for it in 0..params.max_iters {
+        iterations += 1;
+        let total = fused_pass(x, w, &u, n, &centers, m, &ranges, &mut u_new, threads);
+        std::mem::swap(&mut u, &mut u_new);
+        jm_history.push(total.jm);
+        final_delta = total.delta;
+        if total.delta < params.epsilon {
+            converged = true;
+            break;
+        }
+        // Next iteration's centers come straight from the pass — but not
+        // on the final (max_iters-capped) iteration: the returned centers
+        // must be the ones the last membership update used, exactly as
+        // sequential::run_from returns them.
+        if it + 1 < params.max_iters {
+            total.centers(&mut centers);
+        }
+    }
+
+    let labels = defuzzify(&u, c, n);
+    FcmRun {
+        centers,
+        u,
+        labels,
+        iterations,
+        final_delta,
+        jm_history,
+        converged,
+    }
+}
+
+/// One chunk's work unit: (chunk index, start pixel, per-cluster output
+/// row slices).
+type ChunkTask<'a> = (usize, usize, Vec<&'a mut [f32]>);
+
+/// One fused pass over all chunks, fanned out over `threads` workers.
+#[allow(clippy::too_many_arguments)]
+fn fused_pass(
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    ranges: &[(usize, usize)],
+    u_new: &mut [f32],
+    threads: usize,
+) -> PassPartial {
+    let c = centers.len();
+    let n_chunks = ranges.len();
+
+    // Pre-split the output matrix into per-chunk row slices: chunk k owns
+    // u_new[j*n + start_k .. j*n + start_k + len_k] for every cluster j.
+    // All mutable borrows are disjoint, so no locks and no unsafe.
+    let mut chunk_rows: Vec<Vec<&mut [f32]>> =
+        (0..n_chunks).map(|_| Vec::with_capacity(c)).collect();
+    for row in u_new.chunks_mut(n) {
+        let mut rest = row;
+        for (k, &(_, len)) in ranges.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(len);
+            chunk_rows[k].push(head);
+            rest = tail;
+        }
+    }
+
+    // Static round-robin assignment: chunk k -> worker k % threads. The
+    // assignment affects only wall-clock, never results (each chunk's
+    // output is position-keyed).
+    let workers = threads.min(n_chunks).max(1);
+    let mut per_worker: Vec<Vec<ChunkTask>> = (0..workers).map(|_| Vec::new()).collect();
+    for (k, rows) in chunk_rows.into_iter().enumerate() {
+        per_worker[k % workers].push((k, ranges[k].0, rows));
+    }
+
+    let mut parts: Vec<(usize, PassPartial)> = if workers == 1 {
+        // Inline fast path: no spawn overhead for single-threaded runs.
+        per_worker
+            .remove(0)
+            .into_iter()
+            .map(|(k, start, mut rows)| {
+                (k, fused_chunk(x, w, u_old, n, centers, m, start, &mut rows))
+            })
+            .collect()
+    } else {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = per_worker
+                .into_iter()
+                .map(|tasks| {
+                    s.spawn(move || {
+                        tasks
+                            .into_iter()
+                            .map(|(k, start, mut rows)| {
+                                (k, fused_chunk(x, w, u_old, n, centers, m, start, &mut rows))
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("engine worker panicked"))
+                .collect()
+        })
+    };
+
+    // Fixed-order reduction: sort by chunk index, reduce pairwise.
+    parts.sort_by_key(|&(k, _)| k);
+    let ordered: Vec<PassPartial> = parts.into_iter().map(|(_, p)| p).collect();
+    tree_reduce(&ordered, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcm::{canonical_relabel, init_membership, sequential};
+    use crate::util::Rng64;
+
+    fn four_mode(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng64::new(seed);
+        let x = (0..n)
+            .map(|i| {
+                let mu = [25.0, 95.0, 160.0, 225.0][i % 4];
+                rng.gauss(mu, 5.0).clamp(0.0, 255.0)
+            })
+            .collect();
+        (x, vec![1.0; n])
+    }
+
+    fn opts(threads: usize) -> EngineOpts {
+        EngineOpts {
+            backend: super::super::Backend::Parallel,
+            threads,
+            chunk: 1024,
+        }
+    }
+
+    #[test]
+    fn matches_sequential_from_same_init() {
+        let (x, w) = four_mode(20_000, 1);
+        let params = FcmParams::default();
+        let u0 = init_membership(params.clusters, x.len(), params.seed);
+        let mut seq = sequential::run_from(&x, &w, u0.clone(), &params);
+        let mut par = run_from(&x, &w, u0, &params, &opts(4));
+        canonical_relabel(&mut seq);
+        canonical_relabel(&mut par);
+        for (a, b) in par.centers.iter().zip(&seq.centers) {
+            assert!((a - b).abs() < 1e-3, "{:?} vs {:?}", par.centers, seq.centers);
+        }
+        assert_eq!(par.labels, seq.labels, "labels diverged");
+        assert!(par.converged && seq.converged);
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let (x, w) = four_mode(30_000, 2);
+        let params = FcmParams::default();
+        let u0 = init_membership(params.clusters, x.len(), 9);
+        let r1 = run_from(&x, &w, u0.clone(), &params, &opts(1));
+        let r2 = run_from(&x, &w, u0.clone(), &params, &opts(2));
+        let r8 = run_from(&x, &w, u0, &params, &opts(8));
+        assert_eq!(r1.centers, r2.centers);
+        assert_eq!(r2.centers, r8.centers);
+        assert_eq!(r1.u, r2.u);
+        assert_eq!(r2.u, r8.u);
+        assert_eq!(r1.labels, r8.labels);
+        assert_eq!(r1.iterations, r8.iterations);
+        assert_eq!(r1.jm_history, r8.jm_history);
+    }
+
+    #[test]
+    fn jm_monotone_nonincreasing() {
+        let (x, w) = four_mode(8_000, 3);
+        let run = run(&x, &w, &FcmParams::default(), &opts(0));
+        for win in run.jm_history.windows(2) {
+            assert!(win[1] <= win[0] * (1.0 + 1e-9), "J increased: {:?}", run.jm_history);
+        }
+    }
+
+    #[test]
+    fn padding_stays_zero_membership() {
+        let (mut x, mut w) = four_mode(2_000, 4);
+        x.extend(vec![123.0f32; 500]);
+        w.extend(vec![0.0f32; 500]);
+        let run = run(&x, &w, &FcmParams::default(), &opts(3));
+        let n = x.len();
+        for j in 0..4 {
+            for i in 2_000..n {
+                assert_eq!(run.u[j * n + i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_last_chunk_and_tiny_inputs() {
+        // n smaller than one chunk, and n not divisible by chunk.
+        for n in [5usize, 1023, 1025] {
+            let (x, w) = four_mode(n, 5);
+            let params = FcmParams {
+                clusters: 2,
+                max_iters: 50,
+                ..Default::default()
+            };
+            let u0 = init_membership(2, n, 3);
+            let a = run_from(&x, &w, u0.clone(), &params, &opts(1));
+            let b = run_from(&x, &w, u0, &params, &opts(4));
+            assert_eq!(a.centers, b.centers, "n={n}");
+        }
+    }
+
+    #[test]
+    fn capped_run_returns_same_centers_as_sequential() {
+        // max_iters hit with epsilon unreachable: both paths must return
+        // the centers the LAST membership update used (no extra update).
+        let (x, w) = four_mode(4_000, 6);
+        let params = FcmParams {
+            clusters: 4,
+            epsilon: 0.0,
+            max_iters: 7,
+            ..Default::default()
+        };
+        let u0 = init_membership(4, x.len(), 2);
+        let seq = sequential::run_from(&x, &w, u0.clone(), &params);
+        let par = run_from(&x, &w, u0, &params, &opts(3));
+        assert!(!seq.converged && !par.converged);
+        assert_eq!(par.iterations, seq.iterations);
+        for (a, b) in par.centers.iter().zip(&seq.centers) {
+            assert!((a - b).abs() < 1e-3, "{:?} vs {:?}", par.centers, seq.centers);
+        }
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let run = run(&[], &[], &FcmParams::default(), &opts(2));
+        assert!(run.converged);
+        assert!(run.labels.is_empty());
+    }
+}

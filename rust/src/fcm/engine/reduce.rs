@@ -1,0 +1,110 @@
+//! Deterministic chunked tree reduction — the host analogue of the
+//! paper's Algorithm 2 (shared-memory block reduction).
+//!
+//! The paper reduces an n-vector to n/blockDim partials inside each CUDA
+//! block, then finishes on a fixed tree. The property that matters for a
+//! *host* engine is determinism: floating-point addition is not
+//! associative, so a work-stealing sum's result depends on thread timing.
+//! Here partial results are produced per fixed-size chunk and combined
+//! **pairwise in chunk-index order**, so the reduction tree is a pure
+//! function of (input, chunk size) — bit-identical for 1, 2, or 64
+//! threads. `engine::parallel` relies on this for its thread-count
+//! invariance guarantee.
+
+/// Pairwise tree reduction in fixed left-to-right order.
+///
+/// `combine` must be a pure function; it is applied along a binary tree
+/// whose shape depends only on `items.len()`, never on thread count or
+/// timing. Returns `None` on an empty input.
+pub fn tree_reduce<T: Clone, F: Fn(&T, &T) -> T>(items: &[T], combine: F) -> Option<T> {
+    if items.is_empty() {
+        return None;
+    }
+    let mut level: Vec<T> = items.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            next.push(if pair.len() == 2 {
+                combine(&pair[0], &pair[1])
+            } else {
+                pair[0].clone()
+            });
+        }
+        level = next;
+    }
+    level.pop()
+}
+
+/// Tree-sum of f64 values (convenience for tests and small reductions).
+pub fn tree_sum(xs: &[f64]) -> f64 {
+    tree_reduce(xs, |a, b| a + b).unwrap_or(0.0)
+}
+
+/// Split `n` items into fixed-size chunks of `chunk` (last one ragged).
+/// Returns (start, len) pairs; the chunk grid is a pure function of
+/// (n, chunk), which is what makes the whole reduction deterministic.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<(usize, usize)> {
+    assert!(chunk > 0, "chunk size must be >= 1");
+    (0..n.div_ceil(chunk))
+        .map(|k| {
+            let start = k * chunk;
+            (start, chunk.min(n - start))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_reduce_fixed_shape() {
+        // Record the combination order with strings: 5 leaves reduce as
+        // ((ab)(cd))e — pairwise by level, left to right.
+        let items: Vec<String> = ["a", "b", "c", "d", "e"].iter().map(|s| s.to_string()).collect();
+        let out = tree_reduce(&items, |x, y| format!("({x}{y})")).unwrap();
+        assert_eq!(out, "(((ab)(cd))e)");
+    }
+
+    #[test]
+    fn tree_reduce_empty_and_single() {
+        assert_eq!(tree_reduce::<f64, _>(&[], |a, b| a + b), None);
+        assert_eq!(tree_reduce(&[7.0], |a, b| a + b), Some(7.0));
+    }
+
+    #[test]
+    fn tree_sum_is_deterministic_and_close_to_serial() {
+        // Ill-conditioned sum: serial and tree orders differ in the last
+        // bits but the tree order is reproducible.
+        let xs: Vec<f64> = (0..10_001)
+            .map(|i| if i % 2 == 0 { 1e16 } else { -1e16 + (i as f64) })
+            .collect();
+        let a = tree_sum(&xs);
+        let b = tree_sum(&xs);
+        assert_eq!(a.to_bits(), b.to_bits(), "tree sum not reproducible");
+        let serial: f64 = xs.iter().sum();
+        assert!((a - serial).abs() / serial.abs().max(1.0) < 1e-6);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, chunk) in [(0usize, 4usize), (1, 4), (4, 4), (5, 4), (4096, 1024), (1000, 333)] {
+            let ranges = chunk_ranges(n, chunk);
+            let total: usize = ranges.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, n, "n={n} chunk={chunk}");
+            let mut expect_start = 0;
+            for &(s, l) in &ranges {
+                assert_eq!(s, expect_start);
+                assert!((1..=chunk).contains(&l));
+                expect_start += l;
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_grid_independent_of_thread_count() {
+        // The grid depends only on (n, chunk): trivially true by
+        // construction, pinned here as the determinism contract.
+        assert_eq!(chunk_ranges(10_000, 4096), vec![(0, 4096), (4096, 4096), (8192, 1808)]);
+    }
+}

@@ -11,15 +11,22 @@
 //!   canonical noise-robust extension; motivated by experiment E11.
 //! * [`validity`] — cluster-validity indices (extension; used by the
 //!   ablation bench to sanity-check segmentation quality beyond DSC).
+//! * [`engine`] — the host-parallel engine: fused iterations, chunked
+//!   deterministic tree reductions (Algorithm 2 on CPU threads), and the
+//!   brFCM histogram fast path, behind a selectable [`Backend`].
 //!
-//! The *parallel* FCM is not here: it is the L1/L2 AOT artifact executed by
-//! [`crate::runtime`], mirroring the paper's CPU-host / GPU-device split.
+//! The *device-parallel* FCM is not here: it is the L1/L2 AOT artifact
+//! executed by [`crate::runtime`], mirroring the paper's CPU-host /
+//! GPU-device split. [`engine`] is its host-side analogue.
 
 pub mod brfcm;
+pub mod engine;
 pub mod kmeans;
 pub mod sequential;
 pub mod spatial;
 pub mod validity;
+
+pub use engine::{Backend, EngineOpts};
 
 use crate::util::Rng64;
 
@@ -137,15 +144,27 @@ pub fn defuzzify(u: &[f32], clusters: usize, n: usize) -> Vec<u8> {
 }
 
 /// Objective function J_m (Equation 1), weighted form.
+///
+/// m == 2 (the paper's default) takes a mul fast path instead of a
+/// per-element `powf` — same branch structure as `update_centers`.
 pub fn objective(x: &[f32], w: &[f32], u: &[f32], centers: &[f32], m: f32) -> f64 {
     let n = x.len();
     let c = centers.len();
     let mut jm = 0f64;
     for j in 0..c {
         let vj = centers[j] as f64;
-        for i in 0..n {
-            let d = x[i] as f64 - vj;
-            jm += w[i] as f64 * (u[j * n + i] as f64).powf(m as f64) * d * d;
+        let row = &u[j * n..(j + 1) * n];
+        if m == 2.0 {
+            for i in 0..n {
+                let d = x[i] as f64 - vj;
+                let ui = row[i] as f64;
+                jm += w[i] as f64 * ui * ui * d * d;
+            }
+        } else {
+            for i in 0..n {
+                let d = x[i] as f64 - vj;
+                jm += w[i] as f64 * (row[i] as f64).powf(m as f64) * d * d;
+            }
         }
     }
     jm
@@ -158,6 +177,9 @@ pub fn objective(x: &[f32], w: &[f32], u: &[f32], centers: &[f32], m: f32) -> f6
 /// intensity = class 0, then CSF, GM, WM for T1 phantoms).
 pub fn canonical_relabel(run: &mut FcmRun) {
     let c = run.centers.len();
+    if c == 0 {
+        return;
+    }
     let mut order: Vec<usize> = (0..c).collect();
     order.sort_by(|&a, &b| run.centers[a].partial_cmp(&run.centers[b]).unwrap());
     // rank[old_cluster] = new label
@@ -168,12 +190,32 @@ pub fn canonical_relabel(run: &mut FcmRun) {
     for l in run.labels.iter_mut() {
         *l = rank[*l as usize];
     }
+    // Permute rows in place by following permutation cycles (row new takes
+    // row order[new]), with a single n-length scratch row instead of a
+    // clone of the whole c*n matrix.
     let n = run.u.len() / c;
-    let old_u = run.u.clone();
-    let old_centers = run.centers.clone();
-    for (new, &old) in order.iter().enumerate() {
-        run.centers[new] = old_centers[old];
-        run.u[new * n..(new + 1) * n].copy_from_slice(&old_u[old * n..(old + 1) * n]);
+    let mut tmp_row = vec![0f32; n];
+    let mut visited = vec![false; c];
+    for start in 0..c {
+        if visited[start] || order[start] == start {
+            visited[start] = true;
+            continue;
+        }
+        tmp_row.copy_from_slice(&run.u[start * n..(start + 1) * n]);
+        let tmp_center = run.centers[start];
+        let mut new = start;
+        loop {
+            visited[new] = true;
+            let old = order[new];
+            if old == start {
+                run.u[new * n..(new + 1) * n].copy_from_slice(&tmp_row);
+                run.centers[new] = tmp_center;
+                break;
+            }
+            run.u.copy_within(old * n..(old + 1) * n, new * n);
+            run.centers[new] = run.centers[old];
+            new = old;
+        }
     }
 }
 
@@ -237,5 +279,72 @@ mod tests {
         assert_eq!(run.centers, vec![10.0, 200.0]);
         assert_eq!(run.labels, vec![1, 0]);
         assert_eq!(run.u, vec![0.1, 0.9, 0.9, 0.1]);
+    }
+
+    #[test]
+    fn relabel_three_cycle_permutation() {
+        // centers [30, 10, 20] -> ascending is a 3-cycle (0->2, 1->0,
+        // 2->1); exercises the in-place cycle walk.
+        let mut run = FcmRun {
+            centers: vec![30.0, 10.0, 20.0],
+            u: vec![
+                0.7, 0.6, // cluster 0 (center 30)
+                0.1, 0.2, // cluster 1 (center 10)
+                0.2, 0.2, // cluster 2 (center 20)
+            ],
+            labels: vec![0, 1],
+            iterations: 1,
+            final_delta: 0.0,
+            jm_history: vec![],
+            converged: true,
+        };
+        canonical_relabel(&mut run);
+        assert_eq!(run.centers, vec![10.0, 20.0, 30.0]);
+        assert_eq!(run.u, vec![0.1, 0.2, 0.2, 0.2, 0.7, 0.6]);
+        assert_eq!(run.labels, vec![2, 0]);
+    }
+
+    #[test]
+    fn relabel_identity_and_empty_are_noops() {
+        let mut run = FcmRun {
+            centers: vec![1.0, 2.0],
+            u: vec![0.9, 0.1, 0.1, 0.9],
+            labels: vec![0, 1],
+            iterations: 1,
+            final_delta: 0.0,
+            jm_history: vec![],
+            converged: true,
+        };
+        let before = run.u.clone();
+        canonical_relabel(&mut run);
+        assert_eq!(run.u, before);
+        let mut empty = FcmRun {
+            centers: vec![],
+            u: vec![],
+            labels: vec![],
+            iterations: 0,
+            final_delta: 0.0,
+            jm_history: vec![],
+            converged: false,
+        };
+        canonical_relabel(&mut empty); // must not panic
+    }
+
+    #[test]
+    fn objective_m2_fast_path_matches_powf() {
+        let x: Vec<f32> = (0..50).map(|i| i as f32 * 3.0).collect();
+        let w = vec![1.0; 50];
+        let u = init_membership(3, 50, 2);
+        let v = [10.0f32, 70.0, 130.0];
+        let fast = objective(&x, &w, &u, &v, 2.0);
+        // Reference with explicit powf.
+        let mut slow = 0f64;
+        for j in 0..3 {
+            for i in 0..50 {
+                let d = x[i] as f64 - v[j] as f64;
+                slow += (u[j * 50 + i] as f64).powf(2.0) * d * d;
+            }
+        }
+        assert!((fast - slow).abs() / slow < 1e-12, "{fast} vs {slow}");
     }
 }

@@ -131,10 +131,19 @@ pub fn update_memberships(
             continue;
         }
         let mut sum_inv = 0f64;
-        for j in 0..c {
-            // d^(-2/(m-1)) on squared distances = d2^(-1/(m-1)).
-            inv[j] = if p == 1.0 { 1.0 / d2[j] } else { d2[j].powf(-p) };
-            sum_inv += inv[j];
+        if p == 1.0 {
+            // m == 2 fast path (the paper's default): plain reciprocal,
+            // no per-element powf — mirrors update_centers' m==2 branch.
+            for j in 0..c {
+                inv[j] = 1.0 / d2[j];
+                sum_inv += inv[j];
+            }
+        } else {
+            for j in 0..c {
+                // d^(-2/(m-1)) on squared distances = d2^(-1/(m-1)).
+                inv[j] = d2[j].powf(-p);
+                sum_inv += inv[j];
+            }
         }
         for j in 0..c {
             let val = (inv[j] / sum_inv) as f32 * wi;

@@ -46,8 +46,8 @@ fn load_config(args: &Args) -> Result<Config> {
     };
     // Direct overrides for the common knobs, then generic --set k=v,...
     for key in [
-        "clusters", "m", "epsilon", "max_iters", "seed", "workers", "max_batch",
-        "queue_depth", "artifacts_dir",
+        "clusters", "m", "epsilon", "max_iters", "seed", "backend", "engine_threads",
+        "engine_chunk", "workers", "max_batch", "queue_depth", "artifacts_dir",
     ] {
         if let Some(v) = args.get(key) {
             cfg.set(key, v)?;
@@ -58,6 +58,38 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Whether the device engines are usable (artifacts present AND a real
+/// xla crate linked — not the vendored stub).
+fn artifacts_available(cfg: &Config) -> bool {
+    repro::runtime::device_available(Path::new(&cfg.artifacts_dir))
+}
+
+/// Resolve an `--engine` name. `auto` (the default) picks the device path
+/// when it is usable, else the host backend from the config (`backend =`
+/// key; default `parallel`). Host names/aliases are whatever
+/// `Backend::from_str` accepts — one source of truth.
+fn resolve_engine(name: &str, cfg: &Config) -> Result<Engine> {
+    Ok(match name {
+        "auto" => {
+            if artifacts_available(cfg) {
+                Engine::Device
+            } else {
+                Engine::from(cfg.engine.backend)
+            }
+        }
+        "device" => Engine::Device,
+        "device-ref" => Engine::DeviceRef,
+        "brfcm" => Engine::BrFcm,
+        host => match host.parse::<repro::fcm::Backend>() {
+            Ok(b) => Engine::from(b),
+            Err(_) => bail!(
+                "unknown engine {host:?} (auto|device|device-ref|brfcm or a host \
+                 backend: sequential|parallel|histogram)"
+            ),
+        },
+    })
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -165,11 +197,7 @@ fn segment(args: &Args) -> Result<()> {
         img
     };
 
-    let engine = match args.get_or("engine", "device") {
-        "device" => Engine::Device,
-        "device-ref" => Engine::DeviceRef,
-        "seq" | "sequential" => Engine::Sequential,
-        "brfcm" => Engine::BrFcm,
+    let engine = match args.get_or("engine", "auto") {
         "spatial" => {
             // Spatial FCM runs outside the Engine enum (it needs 2-D
             // structure, not a flat feature vector).
@@ -195,7 +223,7 @@ fn segment(args: &Args) -> Result<()> {
             }
             return Ok(());
         }
-        e => bail!("unknown engine {e:?}"),
+        name => resolve_engine(name, &cfg)?,
     };
 
     if args.flag("trace") {
@@ -208,7 +236,13 @@ fn segment(args: &Args) -> Result<()> {
     let fv = FeatureVector::from_image(&img);
     let t0 = std::time::Instant::now();
     let (mut run, stats) = match engine {
-        Engine::Sequential => (repro::fcm::sequential::run(&fv.x, &fv.w, &params), None),
+        Engine::Sequential | Engine::Parallel | Engine::Histogram => {
+            let opts = repro::fcm::EngineOpts {
+                backend: engine.host_backend().expect("host engine variant"),
+                ..repro::fcm::EngineOpts::from(&cfg.engine)
+            };
+            (repro::fcm::engine::run(&fv.x, &fv.w, &params, &opts), None)
+        }
         Engine::BrFcm => {
             let br = repro::fcm::brfcm::run(&img, &params);
             let iterations = br.bin_run.iterations;
@@ -292,12 +326,7 @@ fn phantom_cmd(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let jobs = args.get_usize("jobs", 16)?;
-    let engine = match args.get_or("engine", "device") {
-        "device" => Engine::Device,
-        "seq" => Engine::Sequential,
-        "brfcm" => Engine::BrFcm,
-        e => bail!("unknown engine {e:?}"),
-    };
+    let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
     let params = FcmParams::from(&cfg.fcm);
     println!(
         "serving {jobs} jobs on {} workers (engine {engine:?}, max_batch {})",
@@ -368,10 +397,12 @@ repro — GPU-Based Fuzzy C-Means (Almazrooie et al. 2016) reproduction
 
 USAGE: repro <subcommand> [options]
 
-  segment        --input x.pgm | --slice 96  [--engine device|seq|brfcm|spatial]
+  segment        --input x.pgm | --slice 96
+                 [--engine auto|device|device-ref|seq|parallel|histogram|brfcm|spatial]
                  [--skull-strip] [--out seg.pgm] [--trace]
   phantom        --slice 96 [--ground-truth] [--with-skull] [--out dir]
-  serve          --jobs 32 [--engine device] [--workers N]
+  serve          --jobs 32 [--engine auto|device|seq|parallel|histogram|brfcm]
+                 [--workers N]
   bench-table1   [--runs 5]
   bench-table3   [--quick] [--sizes 20KB,100KB,1MB] [--runs 5]
   bench-fig5     [--out out/fig5]
@@ -384,4 +415,10 @@ USAGE: repro <subcommand> [options]
 
 COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         --seed N --workers N --artifacts_dir DIR --set k=v,k=v
+        --backend sequential|parallel|histogram  --engine_threads N
+        --engine_chunk N   (host-engine knobs; see README 'Backends')
+
+--engine auto (default) = device path when artifacts exist, else the
+config's host backend. Host engines are deterministic across thread
+counts (chunked fixed-order reductions).
 ";

@@ -9,3 +9,32 @@ pub mod registry;
 pub use executor::{DeviceStats, FcmExecutor};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use registry::Registry;
+
+/// Whether the device path is actually usable: the manifest loads AND
+/// the linked xla crate can parse the first artifact. A bare
+/// manifest-exists check is not enough — the vendored offline xla stub
+/// reads manifests fine but cannot parse HLO, so stub builds with
+/// artifacts present must still route to the host engines (CLI `auto`,
+/// examples, and the device-gated tests all call this).
+pub fn device_available(artifacts_dir: &std::path::Path) -> bool {
+    let Ok(manifest) = Manifest::load(artifacts_dir) else {
+        return false;
+    };
+    let Some(first) = manifest.artifacts.first() else {
+        return false;
+    };
+    let path = manifest.full_path(first);
+    path.to_str()
+        .map(|p| xla::HloModuleProto::from_text_file(p).is_ok())
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn device_available_false_without_artifacts() {
+        assert!(!super::device_available(std::path::Path::new(
+            "/nonexistent/artifacts"
+        )));
+    }
+}

@@ -1,0 +1,17 @@
+//! Shared integration-test helpers (a directory module, so cargo does
+//! not compile it as its own test crate).
+
+/// Whether device-path tests can run: artifacts present AND a real xla
+/// crate linked (the vendored offline stub parses manifests but cannot
+/// compile HLO). Prints the skip reason so `cargo test -q` output shows
+/// why a device test was a no-op.
+pub fn device_ready() -> bool {
+    let ok = repro::runtime::device_available(std::path::Path::new("artifacts"));
+    if !ok {
+        eprintln!(
+            "skipping device test: device path unavailable \
+             (run `make artifacts` and link the real xla crate)"
+        );
+    }
+    ok
+}

@@ -1,0 +1,195 @@
+//! Equivalence suite for the host engine backends: the parallel and
+//! histogram engines must reproduce the sequential baseline from
+//! identical initial memberships (centers within 1e-3, identical labels
+//! after canonical relabeling, DSC >= 0.999), and the parallel engine
+//! must be bit-identical across thread counts.
+
+use repro::config::Config;
+use repro::coordinator::{Engine, Service};
+use repro::eval::dice_per_class;
+use repro::fcm::{
+    canonical_relabel, engine, init_membership, sequential, Backend, EngineOpts, FcmParams,
+};
+use repro::image::FeatureVector;
+use repro::phantom::{generate_slice, PhantomConfig};
+
+fn slice_features(seed: u64) -> FeatureVector {
+    let s = generate_slice(&PhantomConfig {
+        seed,
+        ..PhantomConfig::default()
+    });
+    FeatureVector::from_image(&s.image)
+}
+
+fn opts(backend: Backend, threads: usize) -> EngineOpts {
+    EngineOpts {
+        backend,
+        threads,
+        chunk: 4096,
+    }
+}
+
+/// centers within 1e-3, identical labels, mean DSC >= 0.999.
+fn assert_equivalent(name: &str, a: &repro::fcm::FcmRun, b: &repro::fcm::FcmRun, clusters: u8) {
+    for (x, y) in a.centers.iter().zip(&b.centers) {
+        assert!((x - y).abs() < 1e-3, "{name}: centers {:?} vs {:?}", a.centers, b.centers);
+    }
+    let dsc = dice_per_class(&a.labels, &b.labels, clusters);
+    let mean = dsc.iter().sum::<f64>() / clusters as f64;
+    assert!(mean >= 0.999, "{name}: DSC {dsc:?}");
+    assert_eq!(a.labels, b.labels, "{name}: labels diverged");
+}
+
+#[test]
+fn parallel_engine_matches_sequential_on_phantom() {
+    let fv = slice_features(1);
+    let params = FcmParams::default();
+    let u0 = init_membership(params.clusters, fv.x.len(), params.seed);
+    let mut seq = sequential::run_from(&fv.x, &fv.w, u0.clone(), &params);
+    let mut par = engine::run_from(&fv.x, &fv.w, u0, &params, &opts(Backend::Parallel, 0));
+    canonical_relabel(&mut seq);
+    canonical_relabel(&mut par);
+    assert!(seq.converged && par.converged);
+    assert_equivalent("parallel", &par, &seq, 4);
+}
+
+#[test]
+fn histogram_engine_matches_sequential_on_phantom() {
+    let fv = slice_features(2);
+    let params = FcmParams::default();
+    let u0 = init_membership(params.clusters, fv.x.len(), params.seed);
+    let mut seq = sequential::run_from(&fv.x, &fv.w, u0.clone(), &params);
+    let mut hist = engine::run_from(&fv.x, &fv.w, u0, &params, &opts(Backend::Histogram, 1));
+    canonical_relabel(&mut seq);
+    canonical_relabel(&mut hist);
+    assert!(seq.converged && hist.converged);
+    assert_equivalent("histogram", &hist, &seq, 4);
+}
+
+#[test]
+fn parallel_bit_identical_for_1_2_8_workers() {
+    let fv = slice_features(3);
+    let params = FcmParams::default();
+    let u0 = init_membership(params.clusters, fv.x.len(), 11);
+    let runs: Vec<_> = [1usize, 2, 8]
+        .iter()
+        .map(|&t| engine::run_from(&fv.x, &fv.w, u0.clone(), &params, &opts(Backend::Parallel, t)))
+        .collect();
+    for r in &runs[1..] {
+        // Bit-identical: compare the raw f32 bit patterns, not with an
+        // epsilon — this is the deterministic-reduction contract.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&runs[0].centers), bits(&r.centers), "centers differ");
+        assert_eq!(bits(&runs[0].u), bits(&r.u), "memberships differ");
+        assert_eq!(runs[0].labels, r.labels);
+        assert_eq!(runs[0].iterations, r.iterations);
+        assert_eq!(runs[0].jm_history, r.jm_history);
+    }
+}
+
+#[test]
+fn chunk_size_changes_stay_within_tolerance() {
+    // Chunking changes summation order (fp rounding), not semantics.
+    let fv = slice_features(4);
+    let params = FcmParams::default();
+    let u0 = init_membership(params.clusters, fv.x.len(), 5);
+    let mut a = engine::run_from(
+        &fv.x,
+        &fv.w,
+        u0.clone(),
+        &params,
+        &EngineOpts {
+            backend: Backend::Parallel,
+            threads: 2,
+            chunk: 1024,
+        },
+    );
+    let mut b = engine::run_from(
+        &fv.x,
+        &fv.w,
+        u0,
+        &params,
+        &EngineOpts {
+            backend: Backend::Parallel,
+            threads: 2,
+            chunk: 16384,
+        },
+    );
+    canonical_relabel(&mut a);
+    canonical_relabel(&mut b);
+    assert_equivalent("chunk-size", &a, &b, 4);
+}
+
+#[test]
+fn engines_agree_through_the_service() {
+    // Route Parallel and Histogram jobs through the coordinator and check
+    // they converge to the sequential ticket's centers.
+    let mut cfg = Config::new();
+    cfg.service.workers = 2;
+    let service = Service::start(&cfg).unwrap();
+    let params = FcmParams::default();
+    let fv = slice_features(6);
+    let mut results = Vec::new();
+    for eng in [Engine::Sequential, Engine::Parallel, Engine::Histogram] {
+        let t = service.submit(fv.clone(), params, eng).unwrap();
+        results.push((eng, t.wait().unwrap()));
+    }
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.failed, 0);
+    let base = &results[0].1;
+    for (eng, r) in &results {
+        assert!(r.converged, "{eng:?} did not converge");
+        // Canonical labels: ascending centers.
+        assert!(r.centers.windows(2).all(|w| w[0] <= w[1]), "{eng:?}");
+        for (a, b) in r.centers.iter().zip(&base.centers) {
+            assert!((a - b).abs() < 0.1, "{eng:?}: {:?} vs {:?}", r.centers, base.centers);
+        }
+        let agree = r.labels.iter().zip(&base.labels).filter(|(a, b)| a == b).count();
+        assert!(
+            agree as f64 / base.labels.len() as f64 > 0.999,
+            "{eng:?} agreement {agree}/{}",
+            base.labels.len()
+        );
+    }
+}
+
+#[test]
+fn histogram_weighted_features_match_brfcm_module() {
+    // The engine's histogram backend and the legacy brfcm module are the
+    // same math; pin them against each other on a real slice.
+    let s = generate_slice(&PhantomConfig {
+        seed: 7,
+        ..PhantomConfig::default()
+    });
+    let params = FcmParams::default();
+    let mut br = repro::fcm::brfcm::run_on_pixels(&s.image.pixels, &params);
+    canonical_relabel(&mut br.bin_run);
+    let br = repro::fcm::brfcm::finish(&s.image.pixels, br.bin_run);
+
+    let fv = FeatureVector::from_image(&s.image);
+    let mut hist = engine::run(&fv.x, &fv.w, &params, &opts(Backend::Histogram, 1));
+    canonical_relabel(&mut hist);
+
+    for (a, b) in hist.centers.iter().zip(&br.bin_run.centers) {
+        assert!((a - b).abs() < 0.5, "{:?} vs {:?}", hist.centers, br.bin_run.centers);
+    }
+    let agree = hist.labels.iter().zip(&br.labels).filter(|(x, y)| x == y).count();
+    assert!(agree as f64 / br.labels.len() as f64 > 0.999);
+}
+
+#[test]
+fn masked_padding_preserved_by_all_backends() {
+    let fv = slice_features(8);
+    let padded = repro::image::pad_to(&fv, fv.len() + 1000);
+    let params = FcmParams::default();
+    let n = padded.len();
+    for backend in [Backend::Sequential, Backend::Parallel, Backend::Histogram] {
+        let run = engine::run(&padded.x, &padded.w, &params, &opts(backend, 2));
+        for j in 0..params.clusters {
+            for i in fv.len()..n {
+                assert_eq!(run.u[j * n + i], 0.0, "{backend} leaked into padding");
+            }
+        }
+    }
+}

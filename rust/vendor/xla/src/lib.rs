@@ -1,0 +1,208 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps libxla's PJRT C API (CPU client, HLO-text parsing,
+//! compiled executables). This build environment has neither the shared
+//! library nor crates.io access, so this stub provides the exact API
+//! surface `repro::runtime` consumes and fails *at artifact load time*
+//! with a recognizable error. Everything downstream already treats the
+//! device path as optional (workers fall back to host engines; benches
+//! print `-` columns), so the stub turns "cannot link" into "device rows
+//! unavailable".
+//!
+//! The [`Literal`] type is fully functional (vec1/reshape/to_vec) because
+//! tests and host-side staging use it; only HLO parsing/compilation is
+//! stubbed.
+
+use std::fmt;
+
+/// Error type for stubbed operations. Implements `std::error::Error` so it
+/// converts into `anyhow::Error` through `?`/`.context(..)`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla PJRT runtime unavailable (offline stub build — link the real `xla` crate to enable the device path)"
+    ))
+}
+
+/// Marker trait for element types a [`Literal`] can hold. Only f32 is used
+/// by this repository; the trait keeps the generic call sites compiling.
+pub trait Element: Copy + 'static {
+    fn from_f32(v: f32) -> Self;
+    fn into_f32(self) -> f32;
+}
+
+impl Element for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    fn into_f32(self) -> f32 {
+        self
+    }
+}
+
+impl Element for f64 {
+    fn from_f32(v: f32) -> f64 {
+        v as f64
+    }
+    fn into_f32(self) -> f32 {
+        self as f32
+    }
+}
+
+/// A host literal: flat f32 storage plus dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal {
+            data: v.to_vec(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Reshape; errors if the element count changes.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal {
+            data: self.data,
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        self.data
+            .first()
+            .map(|&v| T::from_f32(v))
+            .ok_or_else(|| Error("get_first_element on empty literal".into()))
+    }
+
+    /// Stub literals are never tuples: executables never run.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("to_tuple1"))
+    }
+
+    pub fn to_tuple4(self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable("to_tuple4"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from artifacts).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("parsing HLO text"))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. The stub client constructs (so `Registry::open`
+/// gets as far as the manifest check) but cannot compile.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (xla stub — device path disabled)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling HLO module"))
+    }
+}
+
+/// Device buffer returned by an execution (stub: unreachable in practice).
+#[derive(Debug)]
+pub struct PjRtBuffer(Literal);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.0.clone())
+    }
+}
+
+/// Compiled executable (stub: cannot be constructed, so `execute` is only
+/// here to satisfy the call sites' types).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap().len(), 4);
+        assert!(Literal::vec1(&[1.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto(()));
+        let err = c.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("offline stub"));
+    }
+
+    #[test]
+    fn hlo_parsing_reports_stub() {
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("xla PJRT runtime unavailable"));
+    }
+}
