@@ -1,7 +1,10 @@
 //! Batching service demo: mixed-size, mixed-engine segmentation workload
-//! through the L3 coordinator — shape-bucket batching, worker pool,
-//! backpressure, per-job latency percentiles. Device jobs are included
-//! only when AOT artifacts exist; the host engines (parallel/histogram)
+//! through the L3 coordinator — shape-bucket batching, true batched
+//! execution (a formed batch runs as ONE `segment_batch` engine
+//! invocation; parallel batches interleave all images through one pool
+//! pass per iteration), backpressure, per-job latency percentiles, and
+//! per-engine batching-efficiency metrics. Device jobs are included only
+//! when AOT artifacts exist; the host engines (parallel/histogram)
 //! always run.
 //!
 //!   cargo run --release --example batch_service
@@ -18,13 +21,16 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = Config::new();
     cfg.service.workers = 2;
     cfg.service.max_batch = 4;
+    cfg.service.batch_execute = true; // the default; spelled out for the demo
     let params = FcmParams::from(&cfg.fcm);
 
     let service = Service::start(&cfg)?;
 
     // A mixed workload: full slices and small crops on the host-parallel
     // engine, histogram fast-path jobs, and (when artifacts exist) device
-    // jobs — exercises batch formation across heterogeneous queues.
+    // jobs. Same-shape same-engine jobs co-batch (all full slices share
+    // one shape key, all crops another); nothing co-batches across
+    // engines — watch the batch ids in the output.
     let device = repro::runtime::device_available(std::path::Path::new("artifacts"));
     let mut tickets = Vec::new();
     let t0 = std::time::Instant::now();
@@ -88,6 +94,15 @@ fn main() -> anyhow::Result<()> {
         s.mean,
         s.p95
     );
-    println!("{:#?}", service.shutdown());
+
+    let snap = service.shutdown();
+    println!("\nbatching efficiency (one engine invocation per batch):");
+    for e in &snap.per_engine {
+        println!(
+            "  {:10} batches {:2}  jobs {:2}  mean batch size {:.2}  mean batch latency {:.3}s",
+            e.engine, e.batches, e.jobs, e.mean_batch_size, e.mean_batch_latency_s
+        );
+    }
+    println!("\n{snap:#?}");
     Ok(())
 }

@@ -1,7 +1,13 @@
-//! Bench: L3 coordinator throughput — workers x batch-size sweep over a
-//! homogeneous slice workload, per serving engine. Not a paper table (the
-//! paper has no serving layer); this is the perf gate for DESIGN.md S12
-//! and the §Perf log in EXPERIMENTS.md.
+//! Bench: L3 coordinator throughput — workers x batch-size x batched-vs-
+//! looped execution sweep over a homogeneous slice workload, per serving
+//! engine. Not a paper table (the paper has no serving layer); this is
+//! the perf gate for DESIGN.md S12 and the §Perf log in EXPERIMENTS.md.
+//!
+//! The `batched` column is the tentpole A/B: `true` executes each formed
+//! batch through ONE `segment_batch` engine invocation (the parallel
+//! engine interleaves all images through one pool pass per iteration);
+//! `false` loops `segment` per job inside the worker. Results are
+//! bit-identical either way — only throughput and batch latency move.
 //!
 //! Engines swept: the host engines always (Parallel, Histogram); the
 //! device engine only when AOT artifacts are present.
@@ -17,7 +23,8 @@ use repro::report::Table;
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("REPRO_BENCH_QUICK").is_ok();
     let jobs = if quick { 8 } else { 24 };
-    // Pre-generate the workload once.
+    // Pre-generate the workload once. Same-shape slices: every job lands
+    // in one shape bucket, so max_batch is the only batching limit.
     let slices: Vec<_> = (0..jobs)
         .map(|i| {
             generate_slice(&PhantomConfig {
@@ -37,36 +44,53 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut t = Table::new([
-        "engine", "workers", "max_batch", "wall(s)", "jobs/s", "mean wait(s)",
-        "mean service(s)", "mean batch",
+        "engine",
+        "workers",
+        "max_batch",
+        "batched",
+        "wall(s)",
+        "jobs/s",
+        "mean wait(s)",
+        "mean batch",
+        "batch lat(s)",
     ]);
     for &engine in &engines {
         for workers in [1usize, 2, 4] {
             for max_batch in [1usize, 8] {
-                let mut cfg = Config::new();
-                cfg.service.workers = workers;
-                cfg.service.max_batch = max_batch;
-                let service = Service::start(&cfg)?;
-                let t0 = std::time::Instant::now();
-                let tickets: Vec<_> = slices
-                    .iter()
-                    .map(|s| service.submit_image(&s.image, params, engine))
-                    .collect::<anyhow::Result<_>>()?;
-                for ticket in tickets {
-                    ticket.wait()?;
+                // batch_execute only matters for multi-job batches.
+                let modes: &[bool] = if max_batch > 1 { &[true, false] } else { &[true] };
+                for &batch_execute in modes {
+                    let mut cfg = Config::new();
+                    cfg.service.workers = workers;
+                    cfg.service.max_batch = max_batch;
+                    cfg.service.batch_execute = batch_execute;
+                    let service = Service::start(&cfg)?;
+                    let t0 = std::time::Instant::now();
+                    let tickets: Vec<_> = slices
+                        .iter()
+                        .map(|s| service.submit_image(&s.image, params, engine))
+                        .collect::<anyhow::Result<_>>()?;
+                    for ticket in tickets {
+                        ticket.wait()?;
+                    }
+                    let wall = t0.elapsed().as_secs_f64();
+                    let snap = service.shutdown();
+                    let (batch_size, batch_lat) = snap
+                        .engine_stats(engine)
+                        .map(|e| (e.mean_batch_size, e.mean_batch_latency_s))
+                        .unwrap_or((0.0, 0.0));
+                    t.row([
+                        format!("{engine:?}"),
+                        workers.to_string(),
+                        max_batch.to_string(),
+                        batch_execute.to_string(),
+                        format!("{wall:.2}"),
+                        format!("{:.2}", jobs as f64 / wall),
+                        format!("{:.3}", snap.mean_queue_wait_s),
+                        format!("{batch_size:.2}"),
+                        format!("{batch_lat:.3}"),
+                    ]);
                 }
-                let wall = t0.elapsed().as_secs_f64();
-                let snap = service.shutdown();
-                t.row([
-                    format!("{engine:?}"),
-                    workers.to_string(),
-                    max_batch.to_string(),
-                    format!("{wall:.2}"),
-                    format!("{:.2}", jobs as f64 / wall),
-                    format!("{:.3}", snap.mean_queue_wait_s),
-                    format!("{:.3}", snap.mean_service_s),
-                    format!("{:.2}", snap.mean_batch_size),
-                ]);
             }
         }
     }

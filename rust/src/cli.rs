@@ -59,15 +59,26 @@ impl Args {
         }
     }
 
+    /// Boolean option: `--key true|false|1|0|yes|no` (absent -> default).
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                other => bail!("--{key}: expected a boolean, got {other:?}"),
+            },
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
-    /// All `--set k=v` style config overrides (repeatable via
-    /// `--set-k v`? no — use `--clusters 4` handled by caller, or the
-    /// generic `--set key=value`).
+    /// The generic `--set key=value[,key=value]` config overrides
+    /// (direct `--clusters 4`-style keys are forwarded by the caller
+    /// from `config::KEYS`).
     pub fn set_overrides(&self) -> Vec<(String, String)> {
-        // single --set key=value plus direct keys the caller forwards
         let mut out = Vec::new();
         if let Some(kv) = self.get("set") {
             for pair in kv.split(',') {
@@ -132,6 +143,15 @@ mod tests {
                 ("m".to_string(), "2.5".to_string())
             ]
         );
+    }
+
+    #[test]
+    fn get_bool_accepts_common_spellings() {
+        let a = parse("serve --batch false --verbose 1");
+        assert!(!a.get_bool("batch", true).unwrap());
+        assert!(a.get_bool("verbose", false).unwrap());
+        assert!(a.get_bool("absent", true).unwrap());
+        assert!(parse("serve --batch maybe").get_bool("batch", true).is_err());
     }
 
     #[test]

@@ -97,6 +97,11 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Bounded queue depth before submits exert backpressure.
     pub queue_depth: usize,
+    /// Execute a formed batch through one `segment_batch` engine
+    /// invocation (true, default) instead of a per-job loop (false —
+    /// the A/B lever for the coordinator bench). Results are identical
+    /// either way.
+    pub batch_execute: bool,
 }
 
 impl Default for ServiceConfig {
@@ -108,6 +113,7 @@ impl Default for ServiceConfig {
             workers: 1,
             max_batch: 8,
             queue_depth: 64,
+            batch_execute: true,
         }
     }
 }
@@ -120,6 +126,25 @@ impl ServiceConfig {
         Ok(())
     }
 }
+
+/// Every key `Config::set` accepts — the CLI forwards matching `--key
+/// value` arguments through this list, so adding a knob here is all
+/// the wiring a new config field needs.
+pub const KEYS: &[&str] = &[
+    "clusters",
+    "m",
+    "epsilon",
+    "max_iters",
+    "seed",
+    "backend",
+    "engine_threads",
+    "engine_chunk",
+    "workers",
+    "max_batch",
+    "queue_depth",
+    "batch_execute",
+    "artifacts_dir",
+];
 
 /// Top-level config.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -160,6 +185,8 @@ impl Config {
     }
 
     /// Apply one `key = value` override (also used for `--set k=v` CLI args).
+    /// Keep the match arms in sync with [`KEYS`] — a key missing from the
+    /// list is never forwarded from direct `--key value` CLI arguments.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value;
         match key {
@@ -174,6 +201,7 @@ impl Config {
             "workers" => self.service.workers = parse(key, v)?,
             "max_batch" => self.service.max_batch = parse(key, v)?,
             "queue_depth" => self.service.queue_depth = parse(key, v)?,
+            "batch_execute" => self.service.batch_execute = parse(key, v)?,
             "artifacts_dir" => self.artifacts_dir = v.trim_matches('"').to_string(),
             _ => bail!("unknown config key {key:?}"),
         }
@@ -273,6 +301,32 @@ mod tests {
         let d = Config::new();
         assert_eq!(d.engine.backend, crate::fcm::Backend::Parallel);
         assert_eq!(d.engine.threads, 0);
+    }
+
+    #[test]
+    fn batch_execute_parses_and_defaults_on() {
+        assert!(Config::new().service.batch_execute);
+        let c = Config::from_str("batch_execute = false\n").unwrap();
+        assert!(!c.service.batch_execute);
+        assert!(Config::from_str("batch_execute = maybe\n").is_err());
+    }
+
+    #[test]
+    fn keys_list_entries_all_settable() {
+        // One direction of the KEYS <-> Config::set sync contract; the
+        // converse (every match arm listed in KEYS) is a doc'd invariant
+        // on `set` that a string match can't enumerate.
+        let mut c = Config::new();
+        for key in KEYS {
+            let probe = match *key {
+                "backend" => "parallel",
+                "artifacts_dir" => "x",
+                "m" | "epsilon" => "2.0",
+                "batch_execute" => "true",
+                _ => "3",
+            };
+            c.set(key, probe).unwrap_or_else(|e| panic!("key {key}: {e}"));
+        }
     }
 
     #[test]

@@ -1,0 +1,421 @@
+//! Unified engine dispatch: every serving engine behind one trait.
+//!
+//! Before this module the worker loop (and `main.rs`) matched on
+//! [`Engine`] inline, with brFCM special-cased twice; adding an engine
+//! meant touching every call site. [`FcmBackend`] is now the single
+//! seam: `segment` serves one job, `segment_batch` serves a formed
+//! batch in one engine invocation (the parallel backend routes it to
+//! `fcm::engine::batch`, so an N-image batch is one interleaved engine
+//! pass, not a `for` loop).
+//!
+//! Contract shared by all implementations:
+//!
+//! * labels are canonical (clusters relabeled by ascending center) and
+//!   **index-aligned with the submitted features** — on the host
+//!   backends, masked (w = 0) positions keep the sentinel label 0 (the
+//!   device runtime buckets/pads internally, so it is normally handed
+//!   unmasked features);
+//! * `segment_batch(batch)` returns exactly the results of
+//!   `segment(job)` per job, in order (the batched path may not change
+//!   results — pinned by the service batching tests).
+
+use super::job::Engine;
+use crate::fcm::engine::batch::BatchInput;
+use crate::fcm::{canonical_relabel, engine, Backend, EngineOpts, FcmParams, FcmRun};
+use crate::image::FeatureVector;
+use crate::runtime::{DeviceStats, FcmExecutor, Registry};
+use anyhow::{anyhow, Result};
+
+/// One served segmentation: the run plus device-phase stats when the
+/// backend executes on the PJRT runtime.
+pub struct BackendRun {
+    pub run: FcmRun,
+    pub device: Option<DeviceStats>,
+}
+
+/// A serving engine. See the module docs for the result contract.
+pub trait FcmBackend {
+    /// The [`Engine`] variant this backend serves (metrics key).
+    fn engine(&self) -> Engine;
+
+    /// Segment one feature vector.
+    fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun>;
+
+    /// Segment a batch in one call. The default loops over `segment`;
+    /// backends with a true batched path override it.
+    fn segment_batch(
+        &self,
+        features: &[&FeatureVector],
+        params: &FcmParams,
+    ) -> Vec<Result<BackendRun>> {
+        features.iter().map(|f| self.segment(f, params)).collect()
+    }
+}
+
+/// Resolve the backend serving an [`Engine`] variant. Device variants
+/// need the worker's registry; without one they fail here (per-job,
+/// never taking the worker down).
+pub fn backend_for<'r>(
+    engine: Engine,
+    registry: Option<&'r Registry>,
+    opts: &EngineOpts,
+) -> Result<Box<dyn FcmBackend + 'r>> {
+    Ok(match engine {
+        Engine::Device | Engine::DeviceRef => {
+            let registry =
+                registry.ok_or_else(|| anyhow!("no artifacts available on this worker"))?;
+            Box::new(DeviceBackend { registry, engine })
+        }
+        Engine::Sequential => Box::new(SequentialBackend::new(opts)),
+        Engine::Parallel => Box::new(ParallelBackend::new(opts)),
+        Engine::Histogram => Box::new(HistogramBackend::new(opts)),
+        Engine::BrFcm => Box::new(BrFcmBackend),
+    })
+}
+
+/// Host-engine segment shared by the three `fcm::engine` backends.
+fn host_segment(opts: &EngineOpts, features: &FeatureVector, params: &FcmParams) -> BackendRun {
+    let mut run = engine::run(&features.x, &features.w, params, opts);
+    finish_host_run(&mut run, features);
+    BackendRun { run, device: None }
+}
+
+/// Canonicalize a host run and re-pin the sentinel: masked (w = 0)
+/// positions carry all-zero membership, so `defuzzify` gave them raw
+/// label 0 — but `canonical_relabel` just remapped 0 to whatever rank
+/// the original cluster 0 sorted to. Restore the documented contract.
+fn finish_host_run(run: &mut FcmRun, features: &FeatureVector) {
+    canonical_relabel(run);
+    for (l, &w) in run.labels.iter_mut().zip(&features.w) {
+        if w <= 0.0 {
+            *l = 0;
+        }
+    }
+}
+
+/// Paper Algorithm 1, single-threaded (the speedup comparator).
+pub struct SequentialBackend {
+    opts: EngineOpts,
+}
+
+impl SequentialBackend {
+    pub fn new(opts: &EngineOpts) -> SequentialBackend {
+        SequentialBackend {
+            opts: EngineOpts {
+                backend: Backend::Sequential,
+                ..*opts
+            },
+        }
+    }
+}
+
+impl FcmBackend for SequentialBackend {
+    fn engine(&self) -> Engine {
+        Engine::Sequential
+    }
+
+    fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun> {
+        Ok(host_segment(&self.opts, features, params))
+    }
+}
+
+/// Host-parallel engine on the persistent pool; batches run through the
+/// true multi-image path.
+pub struct ParallelBackend {
+    opts: EngineOpts,
+}
+
+impl ParallelBackend {
+    pub fn new(opts: &EngineOpts) -> ParallelBackend {
+        ParallelBackend {
+            opts: EngineOpts {
+                backend: Backend::Parallel,
+                ..*opts
+            },
+        }
+    }
+}
+
+impl FcmBackend for ParallelBackend {
+    fn engine(&self) -> Engine {
+        Engine::Parallel
+    }
+
+    fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun> {
+        Ok(host_segment(&self.opts, features, params))
+    }
+
+    fn segment_batch(
+        &self,
+        features: &[&FeatureVector],
+        params: &FcmParams,
+    ) -> Vec<Result<BackendRun>> {
+        let inputs: Vec<BatchInput> = features
+            .iter()
+            .map(|f| (f.x.as_slice(), f.w.as_slice()))
+            .collect();
+        // engine::run_batch owns the "which backend truly batches"
+        // decision (Parallel interleaves through one pool pass per
+        // iteration; see fcm::engine::batch).
+        engine::run_batch(&inputs, params, &self.opts)
+            .into_iter()
+            .zip(features)
+            .map(|(mut run, f)| {
+                finish_host_run(&mut run, f);
+                Ok(BackendRun { run, device: None })
+            })
+            .collect()
+    }
+}
+
+/// brFCM histogram fast path for 8-bit inputs (falls back to the
+/// parallel engine for non-8-bit features).
+pub struct HistogramBackend {
+    opts: EngineOpts,
+}
+
+impl HistogramBackend {
+    pub fn new(opts: &EngineOpts) -> HistogramBackend {
+        HistogramBackend {
+            opts: EngineOpts {
+                backend: Backend::Histogram,
+                ..*opts
+            },
+        }
+    }
+}
+
+impl FcmBackend for HistogramBackend {
+    fn engine(&self) -> Engine {
+        Engine::Histogram
+    }
+
+    fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun> {
+        Ok(host_segment(&self.opts, features, params))
+    }
+}
+
+/// Legacy brFCM comparator (Eschrich et al. via `fcm::brfcm`): bin-level
+/// weighted FCM + label LUT expansion.
+pub struct BrFcmBackend;
+
+impl FcmBackend for BrFcmBackend {
+    fn engine(&self) -> Engine {
+        Engine::BrFcm
+    }
+
+    fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun> {
+        // brFCM is defined on grey levels. Masked (w = 0) positions are
+        // excluded from the histogram and keep the sentinel label 0, so
+        // the returned labels stay index-aligned with the submitted
+        // features — the old serve loop dropped masked positions from
+        // the pixel vector, silently shifting every label after them.
+        let px: Vec<u8> = features
+            .x
+            .iter()
+            .zip(&features.w)
+            .filter(|&(_, &w)| w > 0.0)
+            .map(|(&x, _)| x.clamp(0.0, 255.0) as u8)
+            .collect();
+        let mut br = crate::fcm::brfcm::run_on_pixels(&px, params);
+        canonical_relabel(&mut br.bin_run);
+        let br = crate::fcm::brfcm::finish(&px, br.bin_run);
+        let mut labels = vec![0u8; features.len()];
+        for (i, (&x, &w)) in features.x.iter().zip(&features.w).enumerate() {
+            if w > 0.0 {
+                labels[i] = br.label_lut[x.clamp(0.0, 255.0) as u8 as usize];
+            }
+        }
+        let run = FcmRun {
+            centers: br.bin_run.centers.clone(),
+            // Bin-level membership (c * 256), as brFCM computes it.
+            u: br.bin_run.u.clone(),
+            labels,
+            iterations: br.bin_run.iterations,
+            final_delta: br.bin_run.final_delta,
+            jm_history: br.bin_run.jm_history.clone(),
+            converged: br.bin_run.converged,
+        };
+        Ok(BackendRun { run, device: None })
+    }
+}
+
+/// AOT artifact on the PJRT runtime ("pallas" flavor for
+/// [`Engine::Device`], "ref" for [`Engine::DeviceRef`]).
+pub struct DeviceBackend<'r> {
+    registry: &'r Registry,
+    engine: Engine,
+}
+
+impl DeviceBackend<'_> {
+    fn flavor(&self) -> &'static str {
+        if self.engine == Engine::Device {
+            "pallas"
+        } else {
+            "ref"
+        }
+    }
+}
+
+impl FcmBackend for DeviceBackend<'_> {
+    fn engine(&self) -> Engine {
+        self.engine
+    }
+
+    fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun> {
+        let exec = FcmExecutor::with_flavor(self.registry, self.flavor());
+        let (mut run, stats) = exec.segment(features, params)?;
+        canonical_relabel(&mut run);
+        Ok(BackendRun {
+            run,
+            device: Some(stats),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::pad_to;
+
+    fn synth_features(n: usize, seed: u64) -> FeatureVector {
+        let mut rng = crate::util::Rng64::new(seed);
+        FeatureVector::from_values(
+            (0..n)
+                .map(|i| {
+                    let mu = [30.0, 95.0, 160.0, 220.0][i % 4];
+                    (rng.gauss(mu, 6.0).clamp(0.0, 255.0) as u8) as f32
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn backend_for_resolves_host_engines_without_registry() {
+        let opts = EngineOpts::default();
+        for engine in [
+            Engine::Sequential,
+            Engine::Parallel,
+            Engine::Histogram,
+            Engine::BrFcm,
+        ] {
+            let b = backend_for(engine, None, &opts).unwrap();
+            assert_eq!(b.engine(), engine);
+        }
+        assert!(backend_for(Engine::Device, None, &opts).is_err());
+        assert!(backend_for(Engine::DeviceRef, None, &opts).is_err());
+    }
+
+    #[test]
+    fn parallel_batch_equals_per_job_segments() {
+        let fvs: Vec<FeatureVector> = (0..3).map(|s| synth_features(4_000, s)).collect();
+        let refs: Vec<&FeatureVector> = fvs.iter().collect();
+        let params = FcmParams::default();
+        let backend = ParallelBackend::new(&EngineOpts::default());
+        let batched = backend.segment_batch(&refs, &params);
+        for (out, fv) in batched.into_iter().zip(&fvs) {
+            let batched = out.unwrap();
+            let solo = backend.segment(fv, &params).unwrap();
+            assert_eq!(batched.run.labels, solo.run.labels);
+            assert_eq!(batched.run.centers, solo.run.centers);
+            assert_eq!(batched.run.u, solo.run.u);
+            assert_eq!(batched.run.iterations, solo.run.iterations);
+        }
+    }
+
+    #[test]
+    fn brfcm_labels_align_with_padded_features() {
+        let fv = synth_features(5_000, 1);
+        let padded = pad_to(&fv, 8_192);
+        let backend = BrFcmBackend;
+        let params = FcmParams::default();
+        let full = backend.segment(&fv, &params).unwrap();
+        let pad = backend.segment(&padded, &params).unwrap();
+        assert_eq!(pad.run.labels.len(), 8_192, "labels must cover the padded vec");
+        assert_eq!(
+            &pad.run.labels[..5_000],
+            &full.run.labels[..],
+            "real-pixel labels must not shift under padding"
+        );
+        assert!(
+            pad.run.labels[5_000..].iter().all(|&l| l == 0),
+            "masked positions keep the sentinel label"
+        );
+        assert_eq!(pad.run.centers, full.run.centers);
+    }
+
+    #[test]
+    fn host_backends_keep_sentinel_label_on_masked_positions() {
+        let fv = synth_features(3_000, 9);
+        let padded = pad_to(&fv, 4_096);
+        let params = FcmParams::default();
+        let opts = EngineOpts::default();
+        let backends: Vec<Box<dyn FcmBackend>> = vec![
+            Box::new(SequentialBackend::new(&opts)),
+            Box::new(ParallelBackend::new(&opts)),
+            Box::new(HistogramBackend::new(&opts)),
+        ];
+        for b in &backends {
+            let full = b.segment(&fv, &params).unwrap();
+            let masked = b.segment(&padded, &params).unwrap();
+            let engine = b.engine();
+            assert_eq!(masked.run.labels.len(), 4_096, "{engine:?}");
+            assert_eq!(
+                &masked.run.labels[..3_000],
+                &full.run.labels[..],
+                "{engine:?}: real-pixel labels shifted under padding"
+            );
+            assert!(
+                masked.run.labels[3_000..].iter().all(|&l| l == 0),
+                "{engine:?}: masked positions must keep the sentinel label"
+            );
+        }
+        // The batched parallel path honors the same contract.
+        let refs = [&padded, &padded];
+        let outs = ParallelBackend::new(&opts).segment_batch(&refs, &params);
+        for out in outs {
+            let r = out.unwrap();
+            assert!(r.run.labels[3_000..].iter().all(|&l| l == 0));
+        }
+    }
+
+    #[test]
+    fn brfcm_matches_histogram_engine_labels() {
+        // Same-grounds check: brFCM and the histogram engine both reduce
+        // to grey levels; their hard labels should agree almost
+        // everywhere on a well-separated image.
+        let fv = synth_features(20_000, 2);
+        let params = FcmParams::default();
+        let br = BrFcmBackend.segment(&fv, &params).unwrap();
+        let hist = HistogramBackend::new(&EngineOpts::default())
+            .segment(&fv, &params)
+            .unwrap();
+        let agree = br
+            .run
+            .labels
+            .iter()
+            .zip(&hist.run.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(
+            agree as f64 / fv.len() as f64 > 0.99,
+            "agreement only {agree}/{}",
+            fv.len()
+        );
+    }
+
+    #[test]
+    fn default_batch_loops_per_job() {
+        let fvs: Vec<FeatureVector> = (0..2).map(|s| synth_features(2_000, s + 5)).collect();
+        let refs: Vec<&FeatureVector> = fvs.iter().collect();
+        let params = FcmParams::default();
+        let backend = HistogramBackend::new(&EngineOpts::default());
+        let outs = backend.segment_batch(&refs, &params);
+        assert_eq!(outs.len(), 2);
+        for (out, fv) in outs.into_iter().zip(&fvs) {
+            let b = out.unwrap();
+            let solo = backend.segment(fv, &params).unwrap();
+            assert_eq!(b.run.labels, solo.run.labels);
+        }
+    }
+}

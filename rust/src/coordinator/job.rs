@@ -27,6 +27,40 @@ pub enum Engine {
 }
 
 impl Engine {
+    /// Every variant, in [`Engine::index`] order (metrics tables, sweeps).
+    pub const ALL: [Engine; 6] = [
+        Engine::Device,
+        Engine::DeviceRef,
+        Engine::Sequential,
+        Engine::Parallel,
+        Engine::Histogram,
+        Engine::BrFcm,
+    ];
+
+    /// Dense index into per-engine counter arrays (`Engine::ALL` order).
+    pub fn index(self) -> usize {
+        match self {
+            Engine::Device => 0,
+            Engine::DeviceRef => 1,
+            Engine::Sequential => 2,
+            Engine::Parallel => 3,
+            Engine::Histogram => 4,
+            Engine::BrFcm => 5,
+        }
+    }
+
+    /// CLI-facing name (matches `main::resolve_engine`'s vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Device => "device",
+            Engine::DeviceRef => "device-ref",
+            Engine::Sequential => "sequential",
+            Engine::Parallel => "parallel",
+            Engine::Histogram => "histogram",
+            Engine::BrFcm => "brfcm",
+        }
+    }
+
     /// The host-engine backend this variant maps to (None for the
     /// device and legacy variants). Single source of truth for the
     /// Engine -> Backend mapping (serve loop, CLI).
@@ -86,7 +120,8 @@ pub struct JobResult {
     pub engine: Engine,
     /// Time spent queued before a worker picked the job up (s).
     pub queue_wait_s: f64,
-    /// Worker service time (s).
+    /// Worker service time (s). Jobs served through one batched engine
+    /// invocation share the batch wall time evenly.
     pub service_s: f64,
     /// Device-phase breakdown when engine is Device/DeviceRef.
     pub device: Option<DeviceStats>,
@@ -121,6 +156,18 @@ mod tests {
         for e in [Engine::Device, Engine::DeviceRef, Engine::BrFcm] {
             assert_eq!(e.host_backend(), None);
         }
+    }
+
+    #[test]
+    fn engine_index_matches_all_order() {
+        for (i, e) in Engine::ALL.iter().enumerate() {
+            assert_eq!(e.index(), i);
+        }
+        // Names are unique (they key metrics rows).
+        let mut names: Vec<&str> = Engine::ALL.iter().map(|e| e.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), Engine::ALL.len());
     }
 
     #[test]

@@ -1,6 +1,16 @@
 //! Service metrics: lock-free counters + time accumulators.
 
+use super::job::Engine;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-engine batch accounting (one slot per [`Engine::ALL`] entry).
+#[derive(Debug, Default)]
+struct EngineCounters {
+    batches: AtomicU64,
+    jobs: AtomicU64,
+    /// Batch wall-time accumulator (microseconds).
+    batch_us: AtomicU64,
+}
 
 /// Shared metrics; all methods are thread-safe.
 #[derive(Debug, Default)]
@@ -13,6 +23,20 @@ pub struct Metrics {
     queue_wait_us: AtomicU64,
     service_us: AtomicU64,
     iterations: AtomicU64,
+    per_engine: [EngineCounters; Engine::ALL.len()],
+}
+
+/// Batching efficiency of one engine, from a [`Snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineBatchStats {
+    /// `Engine::name()` of the engine the row describes.
+    pub engine: &'static str,
+    pub batches: u64,
+    pub jobs: u64,
+    /// Jobs per executed batch for this engine.
+    pub mean_batch_size: f64,
+    /// Mean wall time of one batch execution (s).
+    pub mean_batch_latency_s: f64,
 }
 
 /// A point-in-time copy for reporting.
@@ -27,6 +51,15 @@ pub struct Snapshot {
     pub mean_iterations: f64,
     /// Jobs per batch — the batching efficiency of the coordinator.
     pub mean_batch_size: f64,
+    /// Per-engine batch size/latency (engines that served >= 1 batch).
+    pub per_engine: Vec<EngineBatchStats>,
+}
+
+impl Snapshot {
+    /// Batch stats for one engine, if it served any batches.
+    pub fn engine_stats(&self, engine: Engine) -> Option<&EngineBatchStats> {
+        self.per_engine.iter().find(|s| s.engine == engine.name())
+    }
 }
 
 impl Metrics {
@@ -52,10 +85,39 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one executed batch: which engine served it, how many jobs
+    /// it carried, and its wall time.
+    pub fn batch_served(&self, engine: Engine, jobs: usize, batch_s: f64) {
+        let e = &self.per_engine[engine.index()];
+        e.batches.fetch_add(1, Ordering::Relaxed);
+        e.jobs.fetch_add(jobs as u64, Ordering::Relaxed);
+        e.batch_us
+            .fetch_add((batch_s * 1e6) as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let denom = completed.max(1) as f64;
+        let per_engine = Engine::ALL
+            .iter()
+            .filter_map(|&engine| {
+                let e = &self.per_engine[engine.index()];
+                let b = e.batches.load(Ordering::Relaxed);
+                if b == 0 {
+                    return None;
+                }
+                Some(EngineBatchStats {
+                    engine: engine.name(),
+                    batches: b,
+                    jobs: e.jobs.load(Ordering::Relaxed),
+                    mean_batch_size: e.jobs.load(Ordering::Relaxed) as f64 / b as f64,
+                    mean_batch_latency_s: e.batch_us.load(Ordering::Relaxed) as f64
+                        / 1e6
+                        / b as f64,
+                })
+            })
+            .collect();
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
@@ -65,6 +127,7 @@ impl Metrics {
             mean_service_s: self.service_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
             mean_iterations: self.iterations.load(Ordering::Relaxed) as f64 / denom,
             mean_batch_size: completed as f64 / batches.max(1) as f64,
+            per_engine,
         }
     }
 }
@@ -97,6 +160,25 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.mean_service_s, 0.0);
         assert_eq!(s.mean_batch_size, 0.0);
+        assert!(s.per_engine.is_empty());
+    }
+
+    #[test]
+    fn per_engine_batch_stats() {
+        let m = Metrics::default();
+        m.batch_served(Engine::Parallel, 4, 0.2);
+        m.batch_served(Engine::Parallel, 2, 0.4);
+        m.batch_served(Engine::Histogram, 1, 0.1);
+        let s = m.snapshot();
+        assert_eq!(s.per_engine.len(), 2);
+        let par = s.engine_stats(Engine::Parallel).unwrap();
+        assert_eq!(par.batches, 2);
+        assert_eq!(par.jobs, 6);
+        assert!((par.mean_batch_size - 3.0).abs() < 1e-9);
+        assert!((par.mean_batch_latency_s - 0.3).abs() < 1e-3);
+        let hist = s.engine_stats(Engine::Histogram).unwrap();
+        assert_eq!(hist.jobs, 1);
+        assert!(s.engine_stats(Engine::Device).is_none());
     }
 
     #[test]
@@ -109,6 +191,7 @@ mod tests {
                     for _ in 0..1000 {
                         m.job_submitted();
                         m.job_completed(0.001, 0.002, 5);
+                        m.batch_served(Engine::Sequential, 1, 0.001);
                     }
                 })
             })
@@ -120,5 +203,6 @@ mod tests {
         assert_eq!(s.submitted, 8000);
         assert_eq!(s.completed, 8000);
         assert!((s.mean_iterations - 5.0).abs() < 1e-9);
+        assert_eq!(s.engine_stats(Engine::Sequential).unwrap().jobs, 8000);
     }
 }

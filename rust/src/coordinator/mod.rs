@@ -1,13 +1,16 @@
 //! L3 coordinator — the paper's system contribution recast as a serving
-//! layer: bounded job queue, shape-bucket batcher, worker pool over PJRT
-//! executables, and service metrics. See DESIGN.md section 1 (L3) and S12.
+//! layer: bounded job queue, shape-bucket batcher, worker pool over a
+//! unified engine trait ([`backend::FcmBackend`]), and service metrics.
+//! See DESIGN.md section 1 (L3) and S12.
 
+pub mod backend;
 pub mod job;
 pub mod metrics;
 pub mod queue;
 pub mod service;
 
+pub use backend::{backend_for, BackendRun, FcmBackend};
 pub use job::{Engine, JobResult, SegmentJob};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{EngineBatchStats, Metrics, Snapshot};
 pub use queue::Queue;
 pub use service::{Service, Ticket};

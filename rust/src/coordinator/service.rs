@@ -2,18 +2,28 @@
 //!
 //! This is the L3 coordination layer (DESIGN.md S12). Shape: a bounded
 //! MPMC job queue feeds `workers` threads; each worker owns its own PJRT
-//! client + compiled-executable cache (the xla handles are not Sync), and
-//! forms batches of same-bucket jobs so consecutive executions reuse one
-//! executable — the serving-system analogue of the paper's "load kernels
-//! once, stream pixel arrays through them".
+//! client + compiled-executable cache (the xla handles are not Sync),
+//! forms batches of compatible jobs ([`form_batch`]), and executes each
+//! batch through ONE [`FcmBackend::segment_batch`] call — the
+//! serving-system analogue of the paper's "load kernels once, stream
+//! pixel arrays through them". Host-parallel batches hit the true
+//! multi-image engine path (`fcm::engine::batch`); host single jobs run
+//! on the persistent engine pool either way.
+//!
+//! Batch compatibility = same [`Engine`], identical [`FcmParams`], and
+//! the same shape key (manifest bucket for device jobs — derived from
+//! the job's cluster count and flavor — exact feature length for host
+//! jobs), so one engine invocation is always semantically valid for the
+//! whole batch.
 
+use super::backend::{backend_for, BackendRun};
 use super::job::{Engine, JobResult, SegmentJob};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
-use crate::fcm::{canonical_relabel, engine, EngineOpts, FcmParams, FcmRun};
+use crate::fcm::{EngineOpts, FcmParams};
 use crate::image::{FeatureVector, GrayImage};
-use crate::runtime::{FcmExecutor, Registry};
+use crate::runtime::Registry;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -67,6 +77,7 @@ impl Service {
             let batch_ids = batch_ids.clone();
             let artifacts_dir = cfg.artifacts_dir.clone();
             let max_batch = cfg.service.max_batch;
+            let batch_execute = cfg.service.batch_execute;
             let engine_opts = EngineOpts::from(&cfg.engine);
             workers.push(
                 std::thread::Builder::new()
@@ -79,6 +90,7 @@ impl Service {
                             metrics,
                             batch_ids,
                             max_batch,
+                            batch_execute,
                             engine_opts,
                         )
                     })
@@ -142,6 +154,64 @@ impl Service {
     }
 }
 
+/// Shape key used for batch compatibility. Device jobs map to the
+/// smallest manifest bucket that fits — the bucket list is derived from
+/// the job's own cluster count and artifact flavor, so c=2 and c=4 jobs
+/// (or pallas and ref jobs) can never collapse onto one key. Host jobs
+/// key on their exact feature length: equal-length inputs are exactly
+/// what the batched engine pass wants.
+fn shape_key(job: &SegmentJob, device_buckets: &[usize]) -> usize {
+    match job.engine {
+        Engine::Device | Engine::DeviceRef => job.bucket_key(device_buckets),
+        _ => job.features.len(),
+    }
+}
+
+/// Manifest bucket list for a device job (empty for host engines or
+/// when no registry is available).
+fn device_buckets(job: &SegmentJob, registry: Option<&Registry>) -> Vec<usize> {
+    let flavor = match job.engine {
+        Engine::Device => "pallas",
+        Engine::DeviceRef => "ref",
+        _ => return Vec::new(),
+    };
+    registry
+        .map(|r| {
+            r.manifest
+                .buckets(job.params.clusters, flavor)
+                .iter()
+                .map(|a| a.pixels)
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Form one batch around `first`: opportunistically pop queued jobs with
+/// the same engine, identical params, and the same shape key, up to
+/// `max_batch`. Never blocks.
+fn form_batch(
+    queue: &Queue<SegmentJob>,
+    first: SegmentJob,
+    max_batch: usize,
+    registry: Option<&Registry>,
+) -> Vec<SegmentJob> {
+    let buckets = device_buckets(&first, registry);
+    let key = shape_key(&first, &buckets);
+    let engine = first.engine;
+    let params = first.params;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        match queue.try_pop_matching(|j| {
+            j.engine == engine && j.params == params && shape_key(j, &buckets) == key
+        }) {
+            Some(j) => batch.push(j),
+            None => break,
+        }
+    }
+    batch
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     artifacts_dir: &str,
@@ -149,44 +219,70 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     batch_ids: Arc<AtomicU64>,
     max_batch: usize,
+    batch_execute: bool,
     engine_opts: EngineOpts,
 ) {
     // Per-thread PJRT client + executable cache. If artifacts are missing
     // the worker still serves CPU-only engines.
     let registry = Registry::open(std::path::Path::new(artifacts_dir)).ok();
-    let buckets: Vec<usize> = registry
-        .as_ref()
-        .map(|r| r.manifest.buckets(4, "pallas").iter().map(|a| a.pixels).collect())
-        .unwrap_or_default();
 
     while let Some(first) = queue.pop() {
-        // Batch formation: group queued jobs that share the bucket AND the
-        // engine/cluster parameters, so one compiled executable serves the
-        // whole batch back-to-back.
-        let key = first.bucket_key(&buckets);
-        let clusters = first.params.clusters;
-        let engine = first.engine;
-        let mut batch = vec![first];
-        while batch.len() < max_batch {
-            match queue.try_pop_matching(|j| {
-                j.engine == engine
-                    && j.params.clusters == clusters
-                    && j.bucket_key(&buckets) == key
-            }) {
-                Some(j) => batch.push(j),
-                None => break,
-            }
-        }
+        let batch = form_batch(&queue, first, max_batch, registry.as_ref());
+        let engine = batch[0].engine;
+        let params = batch[0].params;
         let batch_id = batch_ids.fetch_add(1, Ordering::Relaxed);
         metrics.batch_formed();
 
-        for job in batch {
-            let queue_wait_s = job.submitted.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            let outcome = serve(&registry, &job, &engine_opts);
-            let service_s = t0.elapsed().as_secs_f64();
+        // Per job: (outcome, service_s, queue_wait_s). A batched call
+        // starts every job at once, so waits end at the invocation and
+        // the batch wall time is shared evenly; the per-job loop keeps
+        // the old accounting (a job's wait runs until ITS serve starts,
+        // so time spent behind batchmates stays queue wait, not a gap).
+        let wait_of = |j: &SegmentJob| j.submitted.elapsed().as_secs_f64();
+        let served: Vec<(Result<BackendRun>, f64, f64)> =
+            match backend_for(engine, registry.as_ref(), &engine_opts) {
+                Err(e) => {
+                    // No backend (device job, no artifacts): fail each
+                    // job; nothing executed, so no batch_served sample.
+                    let msg = format!("{e:#}");
+                    batch
+                        .iter()
+                        .map(|j| (Err(anyhow!(msg.clone())), 0.0, wait_of(j)))
+                        .collect()
+                }
+                Ok(backend) => {
+                    if batch_execute && batch.len() > 1 {
+                        let waits: Vec<f64> = batch.iter().map(&wait_of).collect();
+                        let features: Vec<&FeatureVector> =
+                            batch.iter().map(|j| &j.features).collect();
+                        let t0 = Instant::now();
+                        let outs = backend.segment_batch(&features, &params);
+                        let share = t0.elapsed().as_secs_f64() / outs.len().max(1) as f64;
+                        metrics.batch_served(engine, batch.len(), t0.elapsed().as_secs_f64());
+                        outs.into_iter()
+                            .zip(waits)
+                            .map(|(o, wait)| (o, share, wait))
+                            .collect()
+                    } else {
+                        let t0 = Instant::now();
+                        let outs: Vec<(Result<BackendRun>, f64, f64)> = batch
+                            .iter()
+                            .map(|j| {
+                                let wait = wait_of(j);
+                                let t1 = Instant::now();
+                                let o = backend.segment(&j.features, &params);
+                                (o, t1.elapsed().as_secs_f64(), wait)
+                            })
+                            .collect();
+                        metrics.batch_served(engine, batch.len(), t0.elapsed().as_secs_f64());
+                        outs
+                    }
+                }
+            };
+
+        for (job, (outcome, service_s, queue_wait_s)) in batch.into_iter().zip(served) {
             match outcome {
-                Ok((run, device)) => {
+                Ok(BackendRun { run, device }) => {
                     metrics.job_completed(queue_wait_s, service_s, run.iterations);
                     let result = JobResult {
                         id: job.id,
@@ -212,66 +308,86 @@ fn worker_loop(
     }
 }
 
-/// Execute one job on the worker's engine of choice.
-fn serve(
-    registry: &Option<Registry>,
-    job: &SegmentJob,
-    engine_opts: &EngineOpts,
-) -> Result<(FcmRun, Option<crate::runtime::DeviceStats>)> {
-    match job.engine {
-        Engine::Device | Engine::DeviceRef => {
-            let reg = registry
-                .as_ref()
-                .ok_or_else(|| anyhow!("no artifacts available on this worker"))?;
-            let flavor = if job.engine == Engine::Device {
-                "pallas"
-            } else {
-                "ref"
-            };
-            let exec = FcmExecutor::with_flavor(reg, flavor);
-            let (mut run, stats) = exec.segment(&job.features, &job.params)?;
-            canonical_relabel(&mut run);
-            Ok((run, Some(stats)))
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(engine: Engine, n: usize, params: FcmParams) -> SegmentJob {
+        let (tx, _rx) = mpsc::channel();
+        SegmentJob {
+            id: 0,
+            features: FeatureVector::from_values(vec![0.0; n]),
+            params,
+            engine,
+            submitted: Instant::now(),
+            respond: tx,
         }
-        Engine::Sequential | Engine::Parallel | Engine::Histogram => {
-            // Host engine: backend forced by the job variant,
-            // threads/chunk from the service config. Note the interplay
-            // with `workers`: each parallel-engine run fans out over
-            // `engine_threads` cores, so the default single-worker
-            // service already saturates the machine.
-            let opts = EngineOpts {
-                backend: job.engine.host_backend().expect("host engine variant"),
-                ..*engine_opts
-            };
-            let mut run = engine::run(&job.features.x, &job.features.w, &job.params, &opts);
-            canonical_relabel(&mut run);
-            Ok((run, None))
+    }
+
+    #[test]
+    fn form_batch_groups_same_shape_same_params() {
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        for _ in 0..3 {
+            assert!(q.push(job(Engine::Parallel, 100, FcmParams::default())).is_ok());
         }
-        Engine::BrFcm => {
-            // Features -> 8-bit pixels (brFCM is defined on grey levels).
-            let px: Vec<u8> = job
-                .features
-                .x
-                .iter()
-                .zip(&job.features.w)
-                .filter(|(_, &w)| w > 0.0)
-                .map(|(&x, _)| x.clamp(0.0, 255.0) as u8)
-                .collect();
-            let mut br = crate::fcm::brfcm::run_on_pixels(&px, &job.params);
-            canonical_relabel(&mut br.bin_run);
-            let br = crate::fcm::brfcm::finish(&px, br.bin_run);
-            let iterations = br.bin_run.iterations;
-            let converged = br.bin_run.converged;
-            let run = FcmRun {
-                centers: br.bin_run.centers.clone(),
-                u: br.bin_run.u.clone(),
-                labels: br.labels,
-                iterations,
-                final_delta: br.bin_run.final_delta,
-                jm_history: br.bin_run.jm_history.clone(),
-                converged,
-            };
-            Ok((run, None))
+        let first = job(Engine::Parallel, 100, FcmParams::default());
+        let batch = form_batch(&q, first, 8, None);
+        assert_eq!(batch.len(), 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn form_batch_respects_max_batch() {
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        for _ in 0..5 {
+            assert!(q.push(job(Engine::Parallel, 64, FcmParams::default())).is_ok());
         }
+        let batch = form_batch(&q, job(Engine::Parallel, 64, FcmParams::default()), 3, None);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn mixed_engines_do_not_cobatch() {
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        assert!(q.push(job(Engine::Histogram, 100, FcmParams::default())).is_ok());
+        assert!(q.push(job(Engine::Parallel, 100, FcmParams::default())).is_ok());
+        let batch = form_batch(&q, job(Engine::Parallel, 100, FcmParams::default()), 8, None);
+        assert_eq!(batch.len(), 2, "only the parallel job joins");
+        assert!(batch.iter().all(|j| j.engine == Engine::Parallel));
+        assert_eq!(q.len(), 1, "the histogram job stays queued");
+    }
+
+    #[test]
+    fn mixed_params_do_not_cobatch() {
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        let strict = FcmParams {
+            epsilon: 1e-6,
+            ..Default::default()
+        };
+        assert!(q.push(job(Engine::Parallel, 100, strict)).is_ok());
+        let batch = form_batch(&q, job(Engine::Parallel, 100, FcmParams::default()), 8, None);
+        assert_eq!(batch.len(), 1, "different epsilon must not share a batch");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn host_jobs_key_on_exact_length() {
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        assert!(q.push(job(Engine::Parallel, 128, FcmParams::default())).is_ok());
+        assert!(q.push(job(Engine::Parallel, 100, FcmParams::default())).is_ok());
+        let batch = form_batch(&q, job(Engine::Parallel, 100, FcmParams::default()), 8, None);
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|j| j.features.len() == 100));
+    }
+
+    #[test]
+    fn device_jobs_without_registry_share_the_overflow_key() {
+        // No registry: every device job keys to usize::MAX. They will all
+        // fail per-job anyway (no artifacts), batched or not.
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        assert!(q.push(job(Engine::Device, 4096, FcmParams::default())).is_ok());
+        let batch = form_batch(&q, job(Engine::Device, 256, FcmParams::default()), 8, None);
+        assert_eq!(batch.len(), 2);
     }
 }

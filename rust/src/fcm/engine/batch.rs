@@ -1,0 +1,350 @@
+//! True multi-image batched execution — N images through one pool pass
+//! per iteration.
+//!
+//! The serving layer forms batches of same-bucket jobs, but until this
+//! module existed it then executed them one at a time: N images cost N
+//! engine invocations and N*iters pool passes. `run_batch` instead
+//! interleaves the images' fused iterations: every iteration builds ONE
+//! task list holding every active image's chunk grid and executes it as
+//! ONE [`Pool::run`] pass — the host analogue of streaming a batch of
+//! pixel arrays through an already-loaded kernel.
+//!
+//! Convergence state is **per image**: each image keeps its own
+//! centers, delta, J_m history and iteration count, and drops out of
+//! subsequent passes the moment it converges (or hits `max_iters`)
+//! while the rest of the batch keeps running.
+//!
+//! Determinism contract: for every image the chunk grid, the fused
+//! per-chunk arithmetic, and the chunk-ordered tree reduction are
+//! exactly those of a solo [`super::parallel::run_from`] — the batch
+//! only changes which lane executes a chunk, never what is computed or
+//! in which order it is reduced. Results are therefore **bit-identical**
+//! to per-image runs, for every thread count and every batch
+//! composition (pinned by `tests/engine_batch.rs`).
+
+use super::fused::{fused_chunk, initial_centers, PassPartial};
+use super::parallel::split_chunk_rows;
+use super::pool::Pool;
+use super::reduce::{chunk_ranges, tree_reduce};
+use super::EngineOpts;
+use crate::fcm::{defuzzify, FcmParams, FcmRun};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One image's features: (intensities, weights). Lengths must match
+/// within an image; images in a batch may have different lengths
+/// (the service only co-batches same-bucket jobs, but the engine does
+/// not require it).
+pub type BatchInput<'a> = (&'a [f32], &'a [f32]);
+
+/// Per-image iteration state.
+struct ImageState {
+    u: Vec<f32>,
+    u_new: Vec<f32>,
+    centers: Vec<f32>,
+    ranges: Vec<(usize, usize)>,
+    jm_history: Vec<f64>,
+    final_delta: f32,
+    iterations: usize,
+    converged: bool,
+    /// Still participating in passes.
+    active: bool,
+}
+
+/// Run a batch from fresh (seeded, masked) membership inits — the
+/// batched equivalent of calling [`super::run`] per image.
+pub fn run_batch(inputs: &[BatchInput], params: &FcmParams, opts: &EngineOpts) -> Vec<FcmRun> {
+    let u0s = inputs
+        .iter()
+        .map(|&(_, w)| crate::fcm::init_membership_masked(params.clusters, w, params.seed))
+        .collect();
+    run_batch_from(inputs, u0s, params, opts)
+}
+
+/// Run a batch from caller-supplied initial memberships (one per image).
+pub fn run_batch_from(
+    inputs: &[BatchInput],
+    u0s: Vec<Vec<f32>>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+) -> Vec<FcmRun> {
+    assert_eq!(inputs.len(), u0s.len(), "one u0 per image");
+    let c = params.clusters;
+    let m = params.m as f64;
+    let chunk = opts.chunk.max(1);
+    if inputs.is_empty() {
+        return Vec::new();
+    }
+    let pool = super::pool::global(opts.threads);
+
+    let mut states: Vec<ImageState> = inputs
+        .iter()
+        .zip(u0s)
+        .map(|(&(x, w), u0)| {
+            let n = x.len();
+            assert_eq!(w.len(), n, "weights length mismatch");
+            assert_eq!(u0.len(), c * n, "membership length mismatch");
+            ImageState {
+                centers: if n == 0 {
+                    vec![0.0; c]
+                } else {
+                    initial_centers(x, w, &u0, c, m, chunk)
+                },
+                u: u0,
+                u_new: vec![0f32; c * n],
+                ranges: chunk_ranges(n, chunk),
+                jm_history: Vec::new(),
+                final_delta: if n == 0 { 0.0 } else { f32::INFINITY },
+                iterations: 0,
+                converged: n == 0,
+                active: n > 0,
+            }
+        })
+        .collect();
+
+    for it in 0..params.max_iters {
+        if !states.iter().any(|s| s.active) {
+            break;
+        }
+        let totals = batch_pass(&pool, inputs, &mut states, c, m);
+        for (i, total) in totals {
+            let st = &mut states[i];
+            std::mem::swap(&mut st.u, &mut st.u_new);
+            st.iterations += 1;
+            st.jm_history.push(total.jm);
+            st.final_delta = total.delta;
+            if total.delta < params.epsilon {
+                st.converged = true;
+                st.active = false;
+            } else if it + 1 >= params.max_iters {
+                // Capped: freeze without the center update, so the
+                // returned centers are the ones the last membership
+                // update used (parity with the solo run).
+                st.active = false;
+            } else {
+                total.centers(&mut st.centers);
+            }
+        }
+    }
+
+    states
+        .into_iter()
+        .zip(inputs)
+        .map(|(st, &(x, _))| {
+            let n = x.len();
+            FcmRun {
+                labels: if n == 0 { Vec::new() } else { defuzzify(&st.u, c, n) },
+                centers: st.centers,
+                u: st.u,
+                iterations: st.iterations,
+                final_delta: st.final_delta,
+                jm_history: st.jm_history,
+                converged: st.converged,
+            }
+        })
+        .collect()
+}
+
+/// One interleaved fused pass: every active image's chunks through one
+/// `Pool::run`. Returns the per-image reduced totals (image index,
+/// chunk-ordered tree reduction), ascending by image.
+fn batch_pass(
+    pool: &Pool,
+    inputs: &[BatchInput],
+    states: &mut [ImageState],
+    c: usize,
+    m: f64,
+) -> Vec<(usize, PassPartial)> {
+    /// One (image, chunk) work unit.
+    struct BatchTask<'a> {
+        img: usize,
+        chunk: usize,
+        start: usize,
+        n: usize,
+        x: &'a [f32],
+        w: &'a [f32],
+        u_old: &'a [f32],
+        centers: &'a [f32],
+        rows: Vec<&'a mut [f32]>,
+    }
+
+    let mut tasks: Vec<BatchTask> = Vec::new();
+    for (i, st) in states.iter_mut().enumerate() {
+        if !st.active {
+            continue;
+        }
+        let (x, w) = inputs[i];
+        let n = x.len();
+        let ImageState {
+            u, u_new, centers, ranges, ..
+        } = st;
+        for (k, rows) in split_chunk_rows(u_new, n, ranges).into_iter().enumerate() {
+            tasks.push(BatchTask {
+                img: i,
+                chunk: k,
+                start: ranges[k].0,
+                n,
+                x,
+                w,
+                u_old: u,
+                centers,
+                rows,
+            });
+        }
+    }
+
+    // Static assignment in (image, chunk) build order: task t -> lane
+    // t % lanes. Position-keyed outputs make the mapping irrelevant to
+    // results (see parallel::fused_pass).
+    let lanes = pool.lanes().min(tasks.len()).max(1);
+    let mut per_lane: Vec<Vec<BatchTask>> = (0..lanes).map(|_| Vec::new()).collect();
+    for (t, task) in tasks.into_iter().enumerate() {
+        per_lane[t % lanes].push(task);
+    }
+    type LaneOut = Vec<(usize, usize, PassPartial)>;
+    let slots: Vec<Mutex<(Vec<BatchTask>, LaneOut)>> = per_lane
+        .into_iter()
+        .map(|tasks| Mutex::new((tasks, Vec::new())))
+        .collect();
+    pool.run(|lane| {
+        if lane >= slots.len() {
+            return;
+        }
+        let mut slot = slots[lane].lock().unwrap();
+        let (tasks, out) = &mut *slot;
+        for t in tasks.iter_mut() {
+            let part = fused_chunk(t.x, t.w, t.u_old, t.n, t.centers, m, t.start, &mut t.rows);
+            out.push((t.img, t.chunk, part));
+        }
+    });
+
+    // Per-image fixed-order reduction — identical tree to a solo run.
+    let mut by_img: BTreeMap<usize, Vec<(usize, PassPartial)>> = BTreeMap::new();
+    for (img, k, part) in slots.into_iter().flat_map(|s| s.into_inner().unwrap().1) {
+        by_img.entry(img).or_default().push((k, part));
+    }
+    by_img
+        .into_iter()
+        .map(|(img, mut parts)| {
+            parts.sort_by_key(|&(k, _)| k);
+            let ordered: Vec<PassPartial> = parts.into_iter().map(|(_, p)| p).collect();
+            let total =
+                tree_reduce(&ordered, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c));
+            (img, total)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcm::{init_membership, Backend};
+    use crate::util::Rng64;
+
+    fn modes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng64::new(seed);
+        let x = (0..n)
+            .map(|i| {
+                let mu = [25.0, 95.0, 160.0, 225.0][i % 4];
+                rng.gauss(mu, 5.0).clamp(0.0, 255.0)
+            })
+            .collect();
+        (x, vec![1.0; n])
+    }
+
+    fn opts(threads: usize) -> EngineOpts {
+        EngineOpts {
+            backend: Backend::Parallel,
+            threads,
+            chunk: 1024,
+        }
+    }
+
+    #[test]
+    fn batch_matches_solo_runs_bitwise() {
+        let imgs: Vec<(Vec<f32>, Vec<f32>)> = (0..4).map(|s| modes(6_000, s)).collect();
+        let inputs: Vec<BatchInput> = imgs.iter().map(|(x, w)| (&x[..], &w[..])).collect();
+        let params = FcmParams::default();
+        let batch = run_batch(&inputs, &params, &opts(4));
+        assert_eq!(batch.len(), 4);
+        for (run, &(x, w)) in batch.iter().zip(&inputs) {
+            let solo = super::super::parallel::run(x, w, &params, &opts(4));
+            assert_eq!(run.centers, solo.centers);
+            assert_eq!(run.u, solo.u);
+            assert_eq!(run.labels, solo.labels);
+            assert_eq!(run.iterations, solo.iterations);
+            assert_eq!(run.jm_history, solo.jm_history);
+            assert_eq!(run.converged, solo.converged);
+        }
+    }
+
+    #[test]
+    fn ragged_batch_and_empty_images() {
+        let (x1, w1) = modes(3_000, 1);
+        let (x2, w2) = modes(500, 2);
+        let empty: (Vec<f32>, Vec<f32>) = (Vec::new(), Vec::new());
+        let inputs: Vec<BatchInput> = vec![
+            (&x1[..], &w1[..]),
+            (&empty.0[..], &empty.1[..]),
+            (&x2[..], &w2[..]),
+        ];
+        let params = FcmParams {
+            clusters: 2,
+            ..Default::default()
+        };
+        let batch = run_batch(&inputs, &params, &opts(3));
+        assert!(batch[1].converged);
+        assert!(batch[1].labels.is_empty());
+        assert_eq!(batch[1].iterations, 0);
+        for (i, &(x, w)) in inputs.iter().enumerate() {
+            let solo = super::super::parallel::run(x, w, &params, &opts(3));
+            assert_eq!(batch[i].centers, solo.centers, "image {i}");
+            assert_eq!(batch[i].labels, solo.labels, "image {i}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        assert!(run_batch(&[], &FcmParams::default(), &opts(2)).is_empty());
+    }
+
+    #[test]
+    fn capped_batch_freezes_like_solo_runs() {
+        let imgs: Vec<(Vec<f32>, Vec<f32>)> = (0..3).map(|s| modes(2_000, s + 10)).collect();
+        let inputs: Vec<BatchInput> = imgs.iter().map(|(x, w)| (&x[..], &w[..])).collect();
+        let params = FcmParams {
+            epsilon: 0.0,
+            max_iters: 5,
+            ..Default::default()
+        };
+        let batch = run_batch(&inputs, &params, &opts(2));
+        for (run, &(x, w)) in batch.iter().zip(&inputs) {
+            assert!(!run.converged);
+            assert_eq!(run.iterations, 5);
+            let solo = super::super::parallel::run(x, w, &params, &opts(2));
+            assert_eq!(run.centers, solo.centers);
+            assert_eq!(run.u, solo.u);
+        }
+    }
+
+    #[test]
+    fn explicit_u0s_flow_through() {
+        let (x, w) = modes(1_500, 3);
+        let params = FcmParams {
+            clusters: 3,
+            ..Default::default()
+        };
+        let u0a = init_membership(3, x.len(), 1);
+        let u0b = init_membership(3, x.len(), 2);
+        let inputs: Vec<BatchInput> = vec![(&x[..], &w[..]), (&x[..], &w[..])];
+        let batch = run_batch_from(&inputs, vec![u0a.clone(), u0b.clone()], &params, &opts(2));
+        let solo_a = super::super::parallel::run_from(&x, &w, u0a, &params, &opts(2));
+        let solo_b = super::super::parallel::run_from(&x, &w, u0b, &params, &opts(2));
+        assert_eq!(batch[0].u, solo_a.u);
+        assert_eq!(batch[1].u, solo_b.u);
+        // Different inits usually take different trajectories — the two
+        // batch slots must not bleed into each other.
+        assert_eq!(batch[0].jm_history, solo_a.jm_history);
+        assert_eq!(batch[1].jm_history, solo_b.jm_history);
+    }
+}

@@ -17,10 +17,21 @@
 //! Selection is wired through `config.rs` (`backend`, `engine_threads`,
 //! `engine_chunk` keys), the CLI (`--engine`), and the coordinator's
 //! `Engine::{Parallel, Histogram}` job variants.
+//!
+//! Two execution substrates sit under the backends:
+//!
+//! * [`pool`] — the persistent worker pool: OS threads are spawned once
+//!   per lane count and reused across iterations, runs, and service
+//!   workers (zero spawns after construction);
+//! * [`batch`] — true multi-image execution: N images interleaved
+//!   through one pool pass per iteration, per-image convergence,
+//!   results bit-identical to per-image runs.
 
+pub mod batch;
 pub mod fused;
 pub mod histogram;
 pub mod parallel;
+pub mod pool;
 pub mod reduce;
 
 use crate::fcm::{FcmParams, FcmRun};
@@ -106,6 +117,25 @@ impl From<&crate::config::EngineConfig> for EngineOpts {
 pub fn run(x: &[f32], w: &[f32], params: &FcmParams, opts: &EngineOpts) -> FcmRun {
     let u0 = crate::fcm::init_membership_masked(params.clusters, w, params.seed);
     run_from(x, w, u0, params, opts)
+}
+
+/// Run the selected backend over a batch of images in one engine
+/// invocation. The parallel backend interleaves all images through one
+/// pool pass per iteration ([`batch::run_batch`]); the other backends
+/// have no cross-image fusion to exploit and loop per image. Either
+/// way, results are identical to calling [`run`] once per image.
+pub fn run_batch(
+    inputs: &[batch::BatchInput],
+    params: &FcmParams,
+    opts: &EngineOpts,
+) -> Vec<FcmRun> {
+    match opts.backend {
+        Backend::Parallel => batch::run_batch(inputs, params, opts),
+        Backend::Sequential | Backend::Histogram => inputs
+            .iter()
+            .map(|&(x, w)| run(x, w, params, opts))
+            .collect(),
+    }
 }
 
 /// Run the selected backend from a caller-supplied initial membership.

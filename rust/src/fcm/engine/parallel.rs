@@ -12,27 +12,25 @@
 //!    ([`super::reduce::tree_reduce`]) — delta, J_m, and the next centers
 //!    come out of one deterministic reduction.
 //!
+//! Chunks are dispatched onto the **persistent pool** ([`super::pool`]):
+//! chunk `k` goes to lane `k % lanes`, statically, and one
+//! [`Pool::run`] pass executes the whole iteration — zero thread spawns
+//! after the pool is built (PR 1 spawned a scope per iteration).
+//!
 //! Because the chunk grid and reduction tree are independent of the
-//! worker count, results are **bit-identical for any `threads`** — the
-//! property the thread-invariance test pins down. Only safe Rust is used:
-//! the membership matrix is pre-split into per-chunk row slices, so
-//! threads never share a mutable byte.
+//! lane count, results are **bit-identical for any `threads`** — the
+//! property the thread-invariance test pins down. The membership matrix
+//! is pre-split into per-chunk row slices behind per-lane mutexes, so
+//! lanes never share a mutable byte.
 
 use super::fused::{fused_chunk, initial_centers, PassPartial};
+use super::pool::Pool;
 use super::reduce::{chunk_ranges, tree_reduce};
 use super::EngineOpts;
 use crate::fcm::{defuzzify, FcmParams, FcmRun};
+use std::sync::Mutex;
 
-/// Resolve a thread-count request: 0 means "all available cores".
-pub fn resolve_threads(requested: usize) -> usize {
-    if requested > 0 {
-        requested
-    } else {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-    }
-}
+pub use super::pool::resolve_threads;
 
 /// Run parallel FCM from a fresh (seeded, masked) membership init.
 pub fn run(x: &[f32], w: &[f32], params: &FcmParams, opts: &EngineOpts) -> FcmRun {
@@ -42,8 +40,22 @@ pub fn run(x: &[f32], w: &[f32], params: &FcmParams, opts: &EngineOpts) -> FcmRu
 
 /// Run parallel FCM from a caller-supplied initial membership (the
 /// equivalence suite drives this and `sequential::run_from` from the same
-/// u0).
+/// u0). Dispatches onto the process-wide pool for `opts.threads`.
 pub fn run_from(
+    x: &[f32],
+    w: &[f32],
+    u: Vec<f32>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+) -> FcmRun {
+    let pool = super::pool::global(opts.threads);
+    run_from_on(&pool, x, w, u, params, opts)
+}
+
+/// Run parallel FCM on an explicit pool (the batch layer and tests pass
+/// their own; `run_from` passes the global one).
+pub fn run_from_on(
+    pool: &Pool,
     x: &[f32],
     w: &[f32],
     mut u: Vec<f32>,
@@ -56,7 +68,6 @@ pub fn run_from(
     assert_eq!(u.len(), c * n, "membership length mismatch");
     let m = params.m as f64;
     let chunk = opts.chunk.max(1);
-    let threads = resolve_threads(opts.threads);
 
     if n == 0 {
         return FcmRun {
@@ -83,7 +94,7 @@ pub fn run_from(
 
     for it in 0..params.max_iters {
         iterations += 1;
-        let total = fused_pass(x, w, &u, n, &centers, m, &ranges, &mut u_new, threads);
+        let total = fused_pass(pool, x, w, &u, n, &centers, m, &ranges, &mut u_new);
         std::mem::swap(&mut u, &mut u_new);
         jm_history.push(total.jm);
         final_delta = total.delta;
@@ -116,27 +127,18 @@ pub fn run_from(
 /// row slices).
 type ChunkTask<'a> = (usize, usize, Vec<&'a mut [f32]>);
 
-/// One fused pass over all chunks, fanned out over `threads` workers.
-#[allow(clippy::too_many_arguments)]
-fn fused_pass(
-    x: &[f32],
-    w: &[f32],
-    u_old: &[f32],
+/// Split the output matrix into per-chunk row slices: chunk k owns
+/// `u_new[j*n + start_k .. j*n + start_k + len_k]` for every cluster j.
+/// All mutable borrows are disjoint, so no locks and no unsafe. Shared
+/// with the batch layer, which pre-splits every image the same way.
+pub(super) fn split_chunk_rows<'a>(
+    u_new: &'a mut [f32],
     n: usize,
-    centers: &[f32],
-    m: f64,
     ranges: &[(usize, usize)],
-    u_new: &mut [f32],
-    threads: usize,
-) -> PassPartial {
-    let c = centers.len();
-    let n_chunks = ranges.len();
-
-    // Pre-split the output matrix into per-chunk row slices: chunk k owns
-    // u_new[j*n + start_k .. j*n + start_k + len_k] for every cluster j.
-    // All mutable borrows are disjoint, so no locks and no unsafe.
+) -> Vec<Vec<&'a mut [f32]>> {
+    let c = if n == 0 { 0 } else { u_new.len() / n };
     let mut chunk_rows: Vec<Vec<&mut [f32]>> =
-        (0..n_chunks).map(|_| Vec::with_capacity(c)).collect();
+        (0..ranges.len()).map(|_| Vec::with_capacity(c)).collect();
     for row in u_new.chunks_mut(n) {
         let mut rest = row;
         for (k, &(_, len)) in ranges.iter().enumerate() {
@@ -145,48 +147,57 @@ fn fused_pass(
             rest = tail;
         }
     }
+    chunk_rows
+}
 
-    // Static round-robin assignment: chunk k -> worker k % threads. The
-    // assignment affects only wall-clock, never results (each chunk's
-    // output is position-keyed).
-    let workers = threads.min(n_chunks).max(1);
-    let mut per_worker: Vec<Vec<ChunkTask>> = (0..workers).map(|_| Vec::new()).collect();
+/// One fused pass over all chunks, dispatched onto the pool.
+#[allow(clippy::too_many_arguments)]
+fn fused_pass(
+    pool: &Pool,
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    ranges: &[(usize, usize)],
+    u_new: &mut [f32],
+) -> PassPartial {
+    let c = centers.len();
+    let chunk_rows = split_chunk_rows(u_new, n, ranges);
+
+    // Static assignment: chunk k -> lane k % lanes (work-stealing-free;
+    // see pool.rs). The mapping affects only wall-clock, never results —
+    // each chunk's output is position-keyed.
+    let lanes = pool.lanes().min(ranges.len()).max(1);
+    let mut per_lane: Vec<Vec<ChunkTask>> = (0..lanes).map(|_| Vec::new()).collect();
     for (k, rows) in chunk_rows.into_iter().enumerate() {
-        per_worker[k % workers].push((k, ranges[k].0, rows));
+        per_lane[k % lanes].push((k, ranges[k].0, rows));
     }
 
-    let mut parts: Vec<(usize, PassPartial)> = if workers == 1 {
-        // Inline fast path: no spawn overhead for single-threaded runs.
-        per_worker
-            .remove(0)
-            .into_iter()
-            .map(|(k, start, mut rows)| {
-                (k, fused_chunk(x, w, u_old, n, centers, m, start, &mut rows))
-            })
-            .collect()
-    } else {
-        std::thread::scope(|s| {
-            let handles: Vec<_> = per_worker
-                .into_iter()
-                .map(|tasks| {
-                    s.spawn(move || {
-                        tasks
-                            .into_iter()
-                            .map(|(k, start, mut rows)| {
-                                (k, fused_chunk(x, w, u_old, n, centers, m, start, &mut rows))
-                            })
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .flat_map(|h| h.join().expect("engine worker panicked"))
-                .collect()
-        })
-    };
+    // Each lane owns a (tasks in, partials out) slot behind a mutex it
+    // alone locks during the pass; the mutexes exist to hand `&mut`
+    // access through the `Fn` closure, not for contention.
+    let slots: Vec<Mutex<(Vec<ChunkTask>, Vec<(usize, PassPartial)>)>> = per_lane
+        .into_iter()
+        .map(|tasks| Mutex::new((tasks, Vec::new())))
+        .collect();
+    pool.run(|lane| {
+        if lane >= slots.len() {
+            return;
+        }
+        let mut slot = slots[lane].lock().unwrap();
+        let (tasks, out) = &mut *slot;
+        for (k, start, rows) in tasks.iter_mut() {
+            out.push((*k, fused_chunk(x, w, u_old, n, centers, m, *start, rows)));
+        }
+    });
 
     // Fixed-order reduction: sort by chunk index, reduce pairwise.
+    let mut parts: Vec<(usize, PassPartial)> = slots
+        .into_iter()
+        .flat_map(|s| s.into_inner().unwrap().1)
+        .collect();
     parts.sort_by_key(|&(k, _)| k);
     let ordered: Vec<PassPartial> = parts.into_iter().map(|(_, p)| p).collect();
     tree_reduce(&ordered, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c))
@@ -248,6 +259,19 @@ mod tests {
         assert_eq!(r1.labels, r8.labels);
         assert_eq!(r1.iterations, r8.iterations);
         assert_eq!(r1.jm_history, r8.jm_history);
+    }
+
+    #[test]
+    fn explicit_pool_matches_global_pool() {
+        let (x, w) = four_mode(10_000, 7);
+        let params = FcmParams::default();
+        let u0 = init_membership(params.clusters, x.len(), 4);
+        let pool = Pool::new(3);
+        let a = run_from_on(&pool, &x, &w, u0.clone(), &params, &opts(3));
+        let b = run_from(&x, &w, u0, &params, &opts(3));
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.jm_history, b.jm_history);
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Persistent worker pool — the engine's thread substrate.
+//!
+//! PR 1's `engine::parallel` spawned a fresh set of scoped threads for
+//! every iteration; on a converging run that is hundreds of
+//! spawn/join cycles per image, the exact opposite of the paper's
+//! "load kernels once, stream pixel arrays through them" design. This
+//! module keeps one set of OS threads alive for the life of the
+//! process and hands them one *pass* at a time:
+//!
+//! * [`Pool::new`] spawns `lanes - 1` background workers once (the
+//!   calling thread is lane 0, so `threads = 1` never spawns and runs
+//!   fully inline);
+//! * [`Pool::run`] publishes a borrowed task closure to every lane and
+//!   blocks until all lanes finish — a scoped fork/join with no spawns;
+//! * [`global`] memoizes one pool per resolved lane count, so every
+//!   run (and every service worker) with the same `engine_threads`
+//!   shares the same threads.
+//!
+//! Scheduling is **work-stealing-free**: the pool never reassigns
+//! work between lanes; callers hand each lane a statically-determined
+//! task list (chunk `k` -> lane `k % lanes` in `parallel`/`batch`).
+//! That keeps the execution schedule — like the chunk grid and the
+//! reduction tree — a pure function of the input, which is the
+//! engine's determinism contract.
+//!
+//! Safety: `run` erases the lifetime of the task closure so the
+//! long-lived workers can call it (the one `unsafe` in the engine).
+//! This is sound because `run` blocks until every lane has finished
+//! the pass before returning, so workers never touch the closure (or
+//! anything it borrows) after the caller's frame is gone — the same
+//! argument `std::thread::scope` makes, with the spawns hoisted out.
+//!
+//! Spawn accounting: every OS thread the pool creates increments a
+//! per-pool counter ([`Pool::spawn_count`]). The engine's contract —
+//! zero thread spawns after pool construction — is pinned by a test in
+//! `tests/engine_batch.rs` that runs the parallel engine repeatedly and
+//! asserts the counter never moves.
+
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Resolve a lane-count request: 0 means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// A lifetime-erased pass closure; see the module docs for why this is
+/// sound. Workers call it with their lane index.
+type Task = &'static (dyn Fn(usize) + Sync);
+
+struct State {
+    /// Bumped once per pass; workers run when it moves past what they
+    /// last served.
+    epoch: u64,
+    /// The current pass, valid only while `run` is blocked in the
+    /// `pending` handshake below.
+    task: Option<Task>,
+    /// Background lanes that have not yet finished the current pass.
+    pending: usize,
+    /// A background lane panicked during the current pass.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signals workers: new epoch or shutdown.
+    work: Condvar,
+    /// Signals the dispatcher: `pending` reached zero.
+    done: Condvar,
+}
+
+/// Persistent fork/join pool. Construct once (or use [`global`]);
+/// [`Pool::run`] never spawns.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes passes: concurrent callers (service workers sharing
+    /// the global pool) queue here instead of oversubscribing cores.
+    dispatch: Mutex<()>,
+    lanes: usize,
+    spawns: AtomicUsize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Build a pool with `resolve_threads(threads)` lanes. Lane 0 is the
+    /// thread that calls [`Pool::run`]; the other `lanes - 1` are OS
+    /// threads spawned here — and only here.
+    pub fn new(threads: usize) -> Pool {
+        let lanes = resolve_threads(threads);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                task: None,
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let spawns = AtomicUsize::new(0);
+        let mut handles = Vec::with_capacity(lanes.saturating_sub(1));
+        for lane in 1..lanes {
+            let shared = shared.clone();
+            spawns.fetch_add(1, Ordering::Relaxed);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fcm-pool-{lane}"))
+                    .spawn(move || worker(&shared, lane))
+                    .expect("spawning pool worker"),
+            );
+        }
+        Pool {
+            shared,
+            dispatch: Mutex::new(()),
+            lanes,
+            spawns,
+            handles,
+        }
+    }
+
+    /// Total lanes, including the caller's (lane 0).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// OS threads this pool has spawned so far. Fixed at `lanes - 1`
+    /// after construction — asserted by the engine's no-spawn test.
+    pub fn spawn_count(&self) -> usize {
+        self.spawns.load(Ordering::Relaxed)
+    }
+
+    /// Run one pass: `f(lane)` is called exactly once per lane
+    /// (0..lanes), concurrently, and `run` returns when all calls have
+    /// finished. Panics in any lane are re-raised here after the
+    /// handshake completes.
+    pub fn run<F: Fn(usize) + Sync>(&self, f: F) {
+        if self.lanes == 1 {
+            // Inline fast path: nothing to synchronize with.
+            f(0);
+            return;
+        }
+        let pass = self.dispatch.lock().unwrap();
+        let task: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: workers dereference `task` only between the epoch bump
+        // below and the pending == 0 handshake we block on before
+        // returning, and `f` outlives this call frame. (The transmute
+        // only extends the reference lifetime to 'static; source and
+        // target are both fat `&dyn` pointers of identical layout.)
+        let task: Task = unsafe { std::mem::transmute(task) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.task = Some(task);
+            st.epoch += 1;
+            st.pending = self.lanes - 1;
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // The dispatcher is lane 0 — it works instead of idling.
+        let caller = std::panic::catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.task = None;
+        let worker_panicked = st.panicked;
+        drop(st);
+        // Release the dispatch lock BEFORE re-raising: unwinding with it
+        // held would poison the mutex and brick the (memoized, process-
+        // lifetime) pool for every later caller.
+        drop(pass);
+        match caller {
+            Err(p) => std::panic::resume_unwind(p),
+            Ok(()) if worker_panicked => panic!("engine pool worker panicked"),
+            Ok(()) => {}
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(shared: &Shared, lane: usize) {
+    let mut served = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != served {
+                    served = st.epoch;
+                    break st.task.expect("task published with epoch");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(|| task(lane))).is_ok();
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked = true;
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// One pool per resolved lane count, built on first use and kept for
+/// the life of the process. `EngineOpts::threads` maps here, so every
+/// run with the same `engine_threads` config shares one set of OS
+/// threads — across iterations, runs, and service workers.
+pub fn global(threads: usize) -> Arc<Pool> {
+    static POOLS: OnceLock<Mutex<HashMap<usize, Arc<Pool>>>> = OnceLock::new();
+    let lanes = resolve_threads(threads);
+    let mut map = POOLS.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    map.entry(lanes)
+        .or_insert_with(|| Arc::new(Pool::new(lanes)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_lane_runs_exactly_once_per_pass() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(|lane| {
+                hits[lane].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (lane, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 50, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn single_lane_runs_inline_without_spawns() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.spawn_count(), 0);
+        let caller = std::thread::current().id();
+        pool.run(|lane| {
+            assert_eq!(lane, 0);
+            assert_eq!(std::thread::current().id(), caller);
+        });
+        assert_eq!(pool.spawn_count(), 0);
+    }
+
+    #[test]
+    fn spawns_happen_only_at_construction() {
+        let pool = Pool::new(3);
+        let base = pool.spawn_count();
+        assert_eq!(base, 2);
+        for _ in 0..200 {
+            pool.run(|_| {});
+        }
+        assert_eq!(pool.spawn_count(), base, "run() must never spawn");
+    }
+
+    #[test]
+    fn passes_see_borrowed_state() {
+        // The lifetime-erasure soundness story in practice: lanes write
+        // into disjoint slices of a stack-owned buffer.
+        let pool = Pool::new(4);
+        let mut out = vec![0usize; 4];
+        {
+            let slots: Vec<Mutex<&mut usize>> = out.iter_mut().map(Mutex::new).collect();
+            pool.run(|lane| {
+                **slots[lane].lock().unwrap() = lane + 1;
+            });
+        }
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(|lane| {
+                if lane == 1 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the dispatcher");
+        // The pool still serves passes afterwards.
+        let count = AtomicU64::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize_cleanly() {
+        let pool = Arc::new(Pool::new(3));
+        let total = Arc::new(AtomicU64::new(0));
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        pool.run(|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 3);
+    }
+
+    #[test]
+    fn global_pools_are_memoized_per_lane_count() {
+        let a = global(3);
+        let b = global(3);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.lanes(), 3);
+        let c = global(2);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_all_cores() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(7), 7);
+    }
+}

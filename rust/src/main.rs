@@ -44,11 +44,8 @@ fn load_config(args: &Args) -> Result<Config> {
             }
         }
     };
-    // Direct overrides for the common knobs, then generic --set k=v,...
-    for key in [
-        "clusters", "m", "epsilon", "max_iters", "seed", "backend", "engine_threads",
-        "engine_chunk", "workers", "max_batch", "queue_depth", "artifacts_dir",
-    ] {
+    // Direct overrides for every config knob, then generic --set k=v,...
+    for key in repro::config::KEYS {
         if let Some(v) = args.get(key) {
             cfg.set(key, v)?;
         }
@@ -233,42 +230,18 @@ fn segment(args: &Args) -> Result<()> {
         println!("[trace] phase 4: defuzzify on host");
     }
 
+    // All engines dispatch through the FcmBackend trait — the same seam
+    // the service workers use (labels come back canonical).
     let fv = FeatureVector::from_image(&img);
-    let t0 = std::time::Instant::now();
-    let (mut run, stats) = match engine {
-        Engine::Sequential | Engine::Parallel | Engine::Histogram => {
-            let opts = repro::fcm::EngineOpts {
-                backend: engine.host_backend().expect("host engine variant"),
-                ..repro::fcm::EngineOpts::from(&cfg.engine)
-            };
-            (repro::fcm::engine::run(&fv.x, &fv.w, &params, &opts), None)
-        }
-        Engine::BrFcm => {
-            let br = repro::fcm::brfcm::run(&img, &params);
-            let iterations = br.bin_run.iterations;
-            (
-                repro::fcm::FcmRun {
-                    centers: br.bin_run.centers.clone(),
-                    u: br.bin_run.u.clone(),
-                    labels: br.labels,
-                    iterations,
-                    final_delta: br.bin_run.final_delta,
-                    jm_history: br.bin_run.jm_history.clone(),
-                    converged: br.bin_run.converged,
-                },
-                None,
-            )
-        }
-        Engine::Device | Engine::DeviceRef => {
-            let registry = Registry::open(Path::new(&cfg.artifacts_dir))?;
-            let flavor = if engine == Engine::Device { "pallas" } else { "ref" };
-            let exec = repro::runtime::FcmExecutor::with_flavor(&registry, flavor);
-            let (run, stats) = exec.segment(&fv, &params)?;
-            (run, Some(stats))
-        }
+    let registry = match engine {
+        Engine::Device | Engine::DeviceRef => Some(Registry::open(Path::new(&cfg.artifacts_dir))?),
+        _ => None,
     };
+    let opts = repro::fcm::EngineOpts::from(&cfg.engine);
+    let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
+    let t0 = std::time::Instant::now();
+    let repro::coordinator::BackendRun { run, device: stats } = backend.segment(&fv, &params)?;
     let wall = t0.elapsed().as_secs_f64();
-    canonical_relabel(&mut run);
 
     println!(
         "engine={engine:?} pixels={} iters={} converged={} delta={:.5} wall={wall:.3}s",
@@ -324,13 +297,16 @@ fn phantom_cmd(args: &Args) -> Result<()> {
 /// Drives the batching service with a synthetic multi-slice workload and
 /// prints the service metrics (the paper's pipeline as a server).
 fn serve(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    // `--batch false` disables the one-invocation batched execution
+    // (shorthand for `batch_execute = false`; the A/B lever).
+    cfg.service.batch_execute = args.get_bool("batch", cfg.service.batch_execute)?;
     let jobs = args.get_usize("jobs", 16)?;
     let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
     let params = FcmParams::from(&cfg.fcm);
     println!(
-        "serving {jobs} jobs on {} workers (engine {engine:?}, max_batch {})",
-        cfg.service.workers, cfg.service.max_batch
+        "serving {jobs} jobs on {} workers (engine {engine:?}, max_batch {}, batched exec {})",
+        cfg.service.workers, cfg.service.max_batch, cfg.service.batch_execute
     );
     let service = Service::start(&cfg)?;
     let t0 = std::time::Instant::now();
@@ -355,6 +331,12 @@ fn serve(args: &Args) -> Result<()> {
         "done in {wall:.2}s  throughput {:.2} jobs/s  total iterations {total_iters}",
         jobs as f64 / wall
     );
+    for e in &snap.per_engine {
+        println!(
+            "engine {:10} batches {:3}  mean batch size {:.2}  mean batch latency {:.3}s",
+            e.engine, e.batches, e.mean_batch_size, e.mean_batch_latency_s
+        );
+    }
     println!("{snap:#?}");
     Ok(())
 }
@@ -402,7 +384,7 @@ USAGE: repro <subcommand> [options]
                  [--skull-strip] [--out seg.pgm] [--trace]
   phantom        --slice 96 [--ground-truth] [--with-skull] [--out dir]
   serve          --jobs 32 [--engine auto|device|seq|parallel|histogram|brfcm]
-                 [--workers N]
+                 [--workers N] [--batch true|false]
   bench-table1   [--runs 5]
   bench-table3   [--quick] [--sizes 20KB,100KB,1MB] [--runs 5]
   bench-fig5     [--out out/fig5]
@@ -416,9 +398,12 @@ USAGE: repro <subcommand> [options]
 COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         --seed N --workers N --artifacts_dir DIR --set k=v,k=v
         --backend sequential|parallel|histogram  --engine_threads N
-        --engine_chunk N   (host-engine knobs; see README 'Backends')
+        --engine_chunk N --batch_execute true|false
+        (host-engine + service knobs; see README 'Architecture')
 
 --engine auto (default) = device path when artifacts exist, else the
 config's host backend. Host engines are deterministic across thread
-counts (chunked fixed-order reductions).
+counts (chunked fixed-order reductions) and run on a persistent worker
+pool sized by --engine_threads; service batches execute as ONE engine
+invocation (disable with --batch_execute false).
 ";

@@ -1,0 +1,153 @@
+//! Integration tests for the persistent pool + batched multi-image
+//! engine path (PR 2's tentpole contracts):
+//!
+//! * `engine::parallel` performs ZERO thread spawns after pool
+//!   construction — the pool's spawn counter never moves across runs;
+//! * `engine::batch::run_batch` is bit-identical to per-image
+//!   `engine::run` for every thread count and batch composition.
+
+use repro::fcm::engine::{batch, parallel, pool};
+use repro::fcm::{Backend, EngineOpts, FcmParams};
+use repro::util::Rng64;
+
+fn synth(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng64::new(seed);
+    let x = (0..n)
+        .map(|i| {
+            let mu = [25.0, 95.0, 160.0, 225.0][i % 4];
+            rng.gauss(mu, 5.0).clamp(0.0, 255.0)
+        })
+        .collect();
+    (x, vec![1.0; n])
+}
+
+fn opts(threads: usize) -> EngineOpts {
+    EngineOpts {
+        backend: Backend::Parallel,
+        threads,
+        chunk: 2048,
+    }
+}
+
+#[test]
+fn parallel_engine_never_spawns_after_pool_construction() {
+    // Use a lane count no other test touches so the global pool is ours.
+    let threads = 5;
+    let pool = pool::global(threads);
+    let base = pool.spawn_count();
+    assert_eq!(base, threads - 1, "lanes - 1 OS threads at construction");
+
+    let (x, w) = synth(20_000, 1);
+    let params = FcmParams::default();
+    for seed in 0..3 {
+        let u0 = repro::fcm::init_membership(params.clusters, x.len(), seed);
+        let run = parallel::run_from(&x, &w, u0, &params, &opts(threads));
+        assert!(run.iterations > 1, "want a multi-iteration run");
+    }
+    assert_eq!(
+        pool.spawn_count(),
+        base,
+        "parallel engine must dispatch onto the persistent pool, never spawn"
+    );
+}
+
+#[test]
+fn batched_runs_never_spawn_either() {
+    let threads = 5;
+    let pool = pool::global(threads);
+    let base = pool.spawn_count();
+    let imgs: Vec<(Vec<f32>, Vec<f32>)> = (0..3).map(|s| synth(4_000, s + 50)).collect();
+    let inputs: Vec<batch::BatchInput> = imgs.iter().map(|(x, w)| (&x[..], &w[..])).collect();
+    let runs = batch::run_batch(&inputs, &FcmParams::default(), &opts(threads));
+    assert_eq!(runs.len(), 3);
+    assert_eq!(pool.spawn_count(), base);
+}
+
+#[test]
+fn run_batch_bit_identical_to_solo_runs_for_every_thread_count() {
+    let imgs: Vec<(Vec<f32>, Vec<f32>)> = (0..4).map(|s| synth(8_000, s + 10)).collect();
+    let inputs: Vec<batch::BatchInput> = imgs.iter().map(|(x, w)| (&x[..], &w[..])).collect();
+    let params = FcmParams::default();
+    for threads in [1usize, 2, 8] {
+        let batched = batch::run_batch(&inputs, &params, &opts(threads));
+        for (i, (run, &(x, w))) in batched.iter().zip(&inputs).enumerate() {
+            let solo = parallel::run(x, w, &params, &opts(threads));
+            assert_eq!(run.centers, solo.centers, "threads={threads} image={i}");
+            assert_eq!(run.u, solo.u, "threads={threads} image={i}");
+            assert_eq!(run.labels, solo.labels, "threads={threads} image={i}");
+            assert_eq!(run.iterations, solo.iterations, "threads={threads} image={i}");
+            assert_eq!(run.jm_history, solo.jm_history, "threads={threads} image={i}");
+        }
+    }
+}
+
+#[test]
+fn run_batch_is_thread_count_invariant() {
+    let imgs: Vec<(Vec<f32>, Vec<f32>)> = (0..3).map(|s| synth(6_000, s + 30)).collect();
+    let inputs: Vec<batch::BatchInput> = imgs.iter().map(|(x, w)| (&x[..], &w[..])).collect();
+    let params = FcmParams::default();
+    let r1 = batch::run_batch(&inputs, &params, &opts(1));
+    let r4 = batch::run_batch(&inputs, &params, &opts(4));
+    for (a, b) in r1.iter().zip(&r4) {
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.jm_history, b.jm_history);
+    }
+}
+
+#[test]
+fn early_convergers_freeze_while_batch_continues() {
+    // A uniform image converges almost immediately; a 4-mode image takes
+    // many iterations. Batched together, each must report exactly its
+    // solo iteration count.
+    let uniform: (Vec<f32>, Vec<f32>) = (vec![128.0; 4_000], vec![1.0; 4_000]);
+    let (hx, hw) = synth(8_000, 77);
+    let params = FcmParams {
+        clusters: 2,
+        ..Default::default()
+    };
+    let inputs: Vec<batch::BatchInput> =
+        vec![(&uniform.0[..], &uniform.1[..]), (&hx[..], &hw[..])];
+    let batched = batch::run_batch(&inputs, &params, &opts(2));
+    let solo_uniform = parallel::run(&uniform.0, &uniform.1, &params, &opts(2));
+    let solo_hard = parallel::run(&hx, &hw, &params, &opts(2));
+    assert_eq!(batched[0].iterations, solo_uniform.iterations);
+    assert_eq!(batched[1].iterations, solo_hard.iterations);
+    assert!(
+        batched[0].iterations < batched[1].iterations,
+        "test premise: the uniform image converges first ({} vs {})",
+        batched[0].iterations,
+        batched[1].iterations
+    );
+    assert_eq!(batched[0].centers, solo_uniform.centers);
+    assert_eq!(batched[1].centers, solo_hard.centers);
+}
+
+#[test]
+fn engine_level_dispatch_batches_every_backend() {
+    // engine::run_batch must equal per-image engine::run for every host
+    // backend (parallel takes the interleaved path, the others loop).
+    let imgs: Vec<(Vec<f32>, Vec<f32>)> = (0..2)
+        .map(|s| {
+            let (x, w) = synth(3_000, s + 90);
+            // Integral grey levels so the histogram fast path applies.
+            (x.into_iter().map(|v| v.round()).collect(), w)
+        })
+        .collect();
+    let inputs: Vec<batch::BatchInput> = imgs.iter().map(|(x, w)| (&x[..], &w[..])).collect();
+    let params = FcmParams::default();
+    for backend in [Backend::Sequential, Backend::Parallel, Backend::Histogram] {
+        let o = EngineOpts {
+            backend,
+            threads: 2,
+            chunk: 2048,
+        };
+        let batched = repro::fcm::engine::run_batch(&inputs, &params, &o);
+        for (run, &(x, w)) in batched.iter().zip(&inputs) {
+            let solo = repro::fcm::engine::run(x, w, &params, &o);
+            assert_eq!(run.labels, solo.labels, "{backend:?}");
+            assert_eq!(run.centers, solo.centers, "{backend:?}");
+            assert_eq!(run.iterations, solo.iterations, "{backend:?}");
+        }
+    }
+}

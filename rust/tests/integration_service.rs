@@ -2,12 +2,27 @@
 //! injection, backpressure, and determinism.
 
 use repro::config::Config;
-use repro::coordinator::{Engine, Service};
+use repro::coordinator::{Engine, Service, Ticket};
 use repro::fcm::FcmParams;
 use repro::image::FeatureVector;
 use repro::phantom::{generate_slice, PhantomConfig};
 
 mod common;
+
+/// A long job that keeps the single worker busy while the caller
+/// enqueues the jobs whose batching behavior is under test (uses the
+/// Sequential engine and an odd shape, so it never co-batches with
+/// them).
+fn submit_blocker(service: &Service) -> Ticket {
+    let params = FcmParams {
+        epsilon: 0.0,
+        max_iters: 40,
+        ..Default::default()
+    };
+    service
+        .submit(crop(30_001, 999), params, Engine::Sequential)
+        .unwrap()
+}
 
 fn small_cfg(workers: usize) -> Config {
     let mut cfg = Config::new();
@@ -147,6 +162,170 @@ fn results_deterministic_per_seed() {
     assert_eq!(a.labels, b.labels);
     assert_eq!(a.centers, b.centers);
     assert_eq!(a.iterations, b.iterations);
+}
+
+#[test]
+fn same_shape_host_jobs_execute_as_one_batch() {
+    // 1 worker, busy on a blocker while 4 same-shape parallel jobs
+    // queue: they must come back with ONE shared batch_id, and — the
+    // tentpole acceptance criterion — results bit-identical to four
+    // independent engine runs.
+    let mut cfg = small_cfg(1);
+    cfg.service.max_batch = 8;
+    let service = Service::start(&cfg).unwrap();
+    let blocker = submit_blocker(&service);
+    let params = FcmParams::default();
+    let fvs: Vec<FeatureVector> = (0..4).map(|i| crop(4096, i)).collect();
+    let tickets: Vec<_> = fvs
+        .iter()
+        .map(|fv| service.submit(fv.clone(), params, Engine::Parallel).unwrap())
+        .collect();
+    let results: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    blocker.wait().unwrap();
+    let snap = service.shutdown();
+
+    let batch_id = results[0].batch_id;
+    assert!(
+        results.iter().all(|r| r.batch_id == batch_id),
+        "same-shape jobs must share one batch: {:?}",
+        results.iter().map(|r| r.batch_id).collect::<Vec<_>>()
+    );
+    let par = snap.engine_stats(Engine::Parallel).unwrap();
+    assert_eq!(par.batches, 1, "one segment_batch invocation");
+    assert_eq!(par.jobs, 4);
+
+    let opts = repro::fcm::EngineOpts::default();
+    for (r, fv) in results.iter().zip(&fvs) {
+        let mut solo = repro::fcm::engine::run(&fv.x, &fv.w, &params, &opts);
+        repro::fcm::canonical_relabel(&mut solo);
+        assert_eq!(r.labels, solo.labels, "batched result diverged from solo run");
+        assert_eq!(r.centers, solo.centers);
+        assert_eq!(r.iterations, solo.iterations);
+    }
+}
+
+#[test]
+fn mixed_engine_jobs_do_not_cobatch() {
+    let mut cfg = small_cfg(1);
+    cfg.service.max_batch = 8;
+    let service = Service::start(&cfg).unwrap();
+    let blocker = submit_blocker(&service);
+    let params = FcmParams::default();
+    let mut tickets = Vec::new();
+    for i in 0..2 {
+        tickets.push((Engine::Parallel, service.submit(crop(4096, i), params, Engine::Parallel).unwrap()));
+        tickets.push((Engine::Histogram, service.submit(crop(4096, i), params, Engine::Histogram).unwrap()));
+    }
+    let results: Vec<_> = tickets
+        .into_iter()
+        .map(|(e, t)| (e, t.wait().unwrap()))
+        .collect();
+    blocker.wait().unwrap();
+    service.shutdown();
+    let parallel_ids: Vec<u64> = results
+        .iter()
+        .filter(|(e, _)| *e == Engine::Parallel)
+        .map(|(_, r)| r.batch_id)
+        .collect();
+    let histogram_ids: Vec<u64> = results
+        .iter()
+        .filter(|(e, _)| *e == Engine::Histogram)
+        .map(|(_, r)| r.batch_id)
+        .collect();
+    assert_eq!(parallel_ids[0], parallel_ids[1], "same engine co-batches");
+    assert_eq!(histogram_ids[0], histogram_ids[1], "same engine co-batches");
+    assert_ne!(
+        parallel_ids[0], histogram_ids[0],
+        "different engines must never share a batch"
+    );
+}
+
+#[test]
+fn batched_results_identical_across_engine_thread_counts() {
+    let params = FcmParams::default();
+    let fvs: Vec<FeatureVector> = (0..3).map(|i| crop(4096, i + 20)).collect();
+    let mut per_threads = Vec::new();
+    for threads in [1usize, 3] {
+        let mut cfg = small_cfg(1);
+        cfg.service.max_batch = 8;
+        cfg.engine.threads = threads;
+        let service = Service::start(&cfg).unwrap();
+        let blocker = submit_blocker(&service);
+        let tickets: Vec<_> = fvs
+            .iter()
+            .map(|fv| service.submit(fv.clone(), params, Engine::Parallel).unwrap())
+            .collect();
+        let results: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        blocker.wait().unwrap();
+        service.shutdown();
+        per_threads.push(results);
+    }
+    for (a, b) in per_threads[0].iter().zip(&per_threads[1]) {
+        assert_eq!(a.labels, b.labels, "thread count changed batched labels");
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.iterations, b.iterations);
+    }
+}
+
+#[test]
+fn brfcm_labels_stay_aligned_under_masking() {
+    // The old serve loop dropped masked pixels from the brFCM pixel
+    // vector, shifting every label after the first masked position.
+    // Labels must stay index-aligned: sentinel 0 where w = 0, unshifted
+    // elsewhere.
+    let service = Service::start(&small_cfg(1)).unwrap();
+    let params = FcmParams::default();
+    let fv = crop(5_000, 3);
+    let padded = repro::image::pad_to(&fv, 6_000);
+    let full = service
+        .submit(fv, params, Engine::BrFcm)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let masked = service
+        .submit(padded, params, Engine::BrFcm)
+        .unwrap()
+        .wait()
+        .unwrap();
+    service.shutdown();
+    assert_eq!(masked.labels.len(), 6_000, "labels must cover the submitted vec");
+    assert_eq!(
+        &masked.labels[..5_000],
+        &full.labels[..],
+        "masked submission shifted real-pixel labels"
+    );
+    assert!(
+        masked.labels[5_000..].iter().all(|&l| l == 0),
+        "masked positions must keep the sentinel label"
+    );
+}
+
+#[test]
+fn batch_execute_off_matches_batched_results() {
+    let params = FcmParams::default();
+    let fvs: Vec<FeatureVector> = (0..3).map(|i| crop(4096, i + 40)).collect();
+    let run_with = |batch_execute: bool| {
+        let mut cfg = small_cfg(1);
+        cfg.service.max_batch = 8;
+        cfg.service.batch_execute = batch_execute;
+        let service = Service::start(&cfg).unwrap();
+        let blocker = submit_blocker(&service);
+        let tickets: Vec<_> = fvs
+            .iter()
+            .map(|fv| service.submit(fv.clone(), params, Engine::Parallel).unwrap())
+            .collect();
+        let results: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        blocker.wait().unwrap();
+        service.shutdown();
+        results
+    };
+    let batched = run_with(true);
+    let looped = run_with(false);
+    for (a, b) in batched.iter().zip(&looped) {
+        assert_eq!(a.labels, b.labels, "batched execution changed results");
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(a.iterations, b.iterations);
+    }
 }
 
 #[test]
