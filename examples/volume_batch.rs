@@ -1,58 +1,98 @@
-//! Volume workflow: segment a whole phantom volume (a stack of axial
-//! slices, the form the paper's BrainWeb dataset ships in) through the
-//! batching service, then compute the volume-level DSC — the clinical
-//! number per tissue over all voxels.
+//! Volume workflow: the same phantom volume segmented two ways through
+//! the service, with wall time and volume-level DSC for each —
 //!
-//!   cargo run --release --example volume_batch          # host engine
-//!   make artifacts && cargo run --release --example volume_batch  # device
+//!   1. **2-D slice loop** — every axial slice submitted as its own job
+//!      (the pre-PR-3 path: the batcher groups them, but each slice is
+//!      an independent 2-D FCM run);
+//!   2. **true 3-D** — ONE volume job served by the slab-decomposed
+//!      volumetric engine (`FcmBackend::segment_volume`), plus the 3-D
+//!      histogram path whose per-iteration cost is independent of voxel
+//!      count.
+//!
+//!   cargo run --release --example volume_batch
+//!   REPRO_VOLUME_QUICK=1 cargo run --release --example volume_batch  # CI smoke
+//!
+//! Host-only by design (the volumetric paths are host engines), so it
+//! needs no AOT artifacts; see `segment-volume --engine device` for the
+//! per-slice device fallback.
 
 use repro::config::Config;
 use repro::coordinator::{Engine, Service};
+use repro::eval::dice_per_class;
 use repro::fcm::FcmParams;
 use repro::phantom::{generate_volume, PhantomConfig};
 
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("REPRO_VOLUME_QUICK").is_ok();
     let cfg = Config::new();
     let params = FcmParams::from(&cfg.fcm);
-    // Device when the device path is usable, else the host-parallel
-    // engine.
-    let engine = if repro::runtime::device_available(std::path::Path::new(&cfg.artifacts_dir)) {
-        Engine::Device
-    } else {
-        Engine::Parallel
-    };
-    println!("engine: {engine:?}");
 
-    // A coarse pass over the cerebrum: every 4th slice of 80..120.
-    let volume = generate_volume(&PhantomConfig::default(), 80, 120, 4);
+    // The cerebrum block of the phantom: 40 consecutive slices (quick
+    // mode: 8) — the clinical object, not a slice cut out of it.
+    let depth = if quick { 8 } else { 40 };
+    let volume = generate_volume(&PhantomConfig::default(), 80, 80 + depth, 1);
+    let vol = volume.to_voxel_volume();
+    let truth = volume.ground_truth_labels();
     println!(
-        "volume: {} slices, {} voxels",
-        volume.slices.len(),
-        volume.voxels()
+        "volume: {}x{}x{} = {} voxels",
+        vol.width,
+        vol.height,
+        vol.depth,
+        vol.len()
     );
 
     let service = Service::start(&cfg)?;
+    let mean_tissue = |d: &[f64]| (d[1] + d[2] + d[3]) / 3.0;
+
+    // --- 1. 2-D slice loop: one job per axial slice. -------------------
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = volume
         .slices
         .iter()
-        .map(|s| service.submit_image(&s.image, params, engine))
+        .map(|s| service.submit_image(&s.image, params, Engine::Parallel))
         .collect::<anyhow::Result<_>>()?;
     let predictions: Vec<Vec<u8>> = tickets
         .into_iter()
         .map(|t| t.wait().map(|r| r.labels))
         .collect::<anyhow::Result<_>>()?;
-    let wall = t0.elapsed().as_secs_f64();
+    let wall_2d = t0.elapsed().as_secs_f64();
+    let dsc_2d = volume.volume_dice(&predictions, 4);
 
-    let d = volume.volume_dice(&predictions, 4);
+    // --- 2. true 3-D: one volume job, slab-parallel engine. ------------
+    let t0 = std::time::Instant::now();
+    let r3d = service
+        .submit_volume(vol.clone(), params, Engine::Parallel)?
+        .wait()?;
+    let wall_3d = t0.elapsed().as_secs_f64();
+    let dsc_3d = dice_per_class(&r3d.labels, &truth, 4);
+
+    // --- 3. true 3-D, histogram path (O(256·c²) per iteration). --------
+    let t0 = std::time::Instant::now();
+    let rh = service
+        .submit_volume(vol.clone(), params, Engine::Histogram)?
+        .wait()?;
+    let wall_h = t0.elapsed().as_secs_f64();
+    let dsc_h = dice_per_class(&rh.labels, &truth, 4);
+
+    println!("\npath            wall(s)   kvox/s   mean tissue DSC (CSF/GM/WM)");
+    for (name, wall, dsc) in [
+        ("2-D slice loop", wall_2d, &dsc_2d),
+        ("3-D slab-parallel", wall_3d, &dsc_3d),
+        ("3-D histogram", wall_h, &dsc_h),
+    ] {
+        println!(
+            "{name:16} {wall:8.2} {:8.0}   {:.4}  (BG {:.4} CSF {:.4} GM {:.4} WM {:.4})",
+            vol.len() as f64 / wall / 1000.0,
+            mean_tissue(dsc),
+            dsc[0],
+            dsc[1],
+            dsc[2],
+            dsc[3]
+        );
+    }
     println!(
-        "segmented in {wall:.2}s ({:.1} slices/s, {:.0} kvox/s)",
-        volume.slices.len() as f64 / wall,
-        volume.voxels() as f64 / wall / 1000.0
-    );
-    println!(
-        "volume DSC: background {:.4}  CSF {:.4}  GM {:.4}  WM {:.4}",
-        d[0], d[1], d[2], d[3]
+        "\n3-D iterations: slab {} / histogram {} (converged: {} / {})",
+        r3d.iterations, rh.iterations, r3d.converged, rh.converged
     );
     println!("{:#?}", service.shutdown());
     Ok(())

@@ -1,0 +1,222 @@
+//! Bench: volumetric FCM — the PR-3 size sweep.
+//!
+//! Sweeps volume sizes (slices x resolution) over the three host volume
+//! paths:
+//!   * slice-loop — one independent 2-D parallel-engine run per axial
+//!     slice (the pre-PR-3 workflow);
+//!   * slab      — the true-3D slab-decomposed engine (one fused pass
+//!     over the whole volume per iteration);
+//!   * hist3d    — the 3-D histogram path: one 256-bin volume histogram,
+//!     per-iteration cost independent of voxel count.
+//!
+//! Results (mean/p95, per-voxel throughput, per-iteration time) go to
+//! BENCH_PR3.json at the repo root.
+//!
+//!   cargo bench --bench volume
+//!   REPRO_BENCH_QUICK=1 cargo bench --bench volume   # CI smoke
+//!
+//! Gates:
+//!   * hist3d `work_per_iter` == 256 at EVERY size (the voxel-count-
+//!     independence claim, asserted on the engine's work counter);
+//!   * slab results bit-identical across thread counts.
+
+use repro::fcm::engine::volume::{run_volume, VolumeOpts, BINS};
+use repro::fcm::{engine, Backend, EngineOpts, FcmParams};
+use repro::harness::{bench, BenchResult, Opts};
+use repro::image::{FeatureVector, VoxelVolume};
+use repro::phantom::{generate_volume, PhantomConfig};
+use repro::report::{fmt_secs, Table};
+
+struct SizeRow {
+    width: usize,
+    height: usize,
+    depth: usize,
+    voxels: usize,
+    slice_loop: BenchResult,
+    slab: BenchResult,
+    hist: BenchResult,
+    slab_iters: usize,
+    hist_iters: usize,
+    hist_work_per_iter: usize,
+}
+
+fn make_volume(width: usize, height: usize, depth: usize) -> VoxelVolume {
+    generate_volume(
+        &PhantomConfig {
+            width,
+            height,
+            ..PhantomConfig::default()
+        },
+        80,
+        80 + depth,
+        1,
+    )
+    .to_voxel_volume()
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("REPRO_BENCH_QUICK").is_ok();
+    let params = FcmParams::default();
+    let sizes: Vec<(usize, usize, usize)> = if quick {
+        vec![(91, 109, 10)]
+    } else {
+        vec![(91, 109, 10), (181, 217, 10), (181, 217, 30)]
+    };
+    let opts = Opts {
+        warmup: 1,
+        min_runs: 3,
+        max_runs: if quick { 3 } else { 5 },
+        max_seconds: 60.0,
+    };
+
+    println!("== volume paths: slice-loop vs slab-parallel vs 3-D histogram ==\n");
+    let mut t = Table::new([
+        "volume", "voxels", "loop mean", "slab mean", "hist mean", "slab x", "hist x",
+        "hist s/iter",
+    ]);
+    let mut rows = Vec::new();
+    for &(w, h, d) in &sizes {
+        let vol = make_volume(w, h, d);
+        let name = format!("{w}x{h}x{d}");
+
+        // Path metadata from one untimed run each.
+        let slab_run = run_volume(&vol, &params, &VolumeOpts::with_backend(Backend::Parallel));
+        let hist_run = run_volume(&vol, &params, &VolumeOpts::with_backend(Backend::Histogram));
+
+        let slice_loop = bench(&format!("loop-{name}"), &opts, || {
+            let o = EngineOpts::with_backend(Backend::Parallel);
+            for z in 0..vol.depth {
+                let fv = FeatureVector::from_image(&vol.slice(z));
+                let _ = engine::run(&fv.x, &fv.w, &params, &o);
+            }
+        });
+        let slab = bench(&format!("slab-{name}"), &opts, || {
+            let _ = run_volume(&vol, &params, &VolumeOpts::with_backend(Backend::Parallel));
+        });
+        let hist = bench(&format!("hist-{name}"), &opts, || {
+            let _ = run_volume(&vol, &params, &VolumeOpts::with_backend(Backend::Histogram));
+        });
+
+        t.row([
+            name,
+            vol.len().to_string(),
+            fmt_secs(slice_loop.mean()),
+            fmt_secs(slab.mean()),
+            fmt_secs(hist.mean()),
+            format!("{:.2}x", slice_loop.mean() / slab.mean()),
+            format!("{:.2}x", slice_loop.mean() / hist.mean()),
+            fmt_secs(hist.mean() / hist_run.run.iterations.max(1) as f64),
+        ]);
+        rows.push(SizeRow {
+            width: w,
+            height: h,
+            depth: d,
+            voxels: vol.len(),
+            slice_loop,
+            slab,
+            hist,
+            slab_iters: slab_run.run.iterations,
+            hist_iters: hist_run.run.iterations,
+            hist_work_per_iter: hist_run.work_per_iter,
+        });
+    }
+    t.print();
+
+    // Gate 1: the histogram path's per-iteration work is 256 bins at
+    // every size — by counter, not by clock.
+    let work_gate = rows.iter().all(|r| r.hist_work_per_iter == BINS);
+    println!(
+        "\nGATE hist3d work/iter == {BINS} at every size: {}",
+        if work_gate { "PASS" } else { "FAIL" }
+    );
+    // Informational: per-iteration wall time across the sweep (should
+    // stay near-flat while voxel counts grow ~8x; timing, so not a hard
+    // gate on shared runners).
+    if rows.len() > 1 {
+        let per_iter = |r: &SizeRow| r.hist.mean() / r.hist_iters.max(1) as f64;
+        let lo = per_iter(&rows[0]);
+        let hi = per_iter(rows.last().unwrap());
+        let vox_growth = rows.last().unwrap().voxels as f64 / rows[0].voxels as f64;
+        println!(
+            "      hist3d s/iter {:.2e} -> {:.2e} ({:.1}x) while voxels grew {vox_growth:.1}x",
+            lo,
+            hi,
+            hi / lo
+        );
+    }
+
+    // Gate 2: slab path bit-identical across thread counts.
+    let det_vol = make_volume(61, 73, 6);
+    let r1 = run_volume(
+        &det_vol,
+        &params,
+        &VolumeOpts {
+            backend: Backend::Parallel,
+            threads: 1,
+            slab_slices: 2,
+        },
+    );
+    let r8 = run_volume(
+        &det_vol,
+        &params,
+        &VolumeOpts {
+            backend: Backend::Parallel,
+            threads: 8,
+            slab_slices: 2,
+        },
+    );
+    let deterministic = r1.run.centers == r8.run.centers && r1.run.u == r8.run.u;
+    println!(
+        "GATE slab path deterministic across thread counts: {}",
+        if deterministic { "PASS" } else { "FAIL" }
+    );
+
+    write_json(&rows, work_gate, deterministic, quick)?;
+    Ok(())
+}
+
+/// Record the sweep in BENCH_PR3.json at the repo root (hand-rolled
+/// JSON: the offline build has no serde).
+fn write_json(rows: &[SizeRow], work_gate: bool, deterministic: bool, quick: bool) -> anyhow::Result<()> {
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::Path::new(&dir).join("../BENCH_PR3.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_PR3.json"),
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"pr\": 3,\n");
+    s.push_str("  \"bench\": \"volume\",\n");
+    s.push_str("  \"status\": \"measured\",\n");
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"params\": {\"clusters\": 4, \"m\": 2.0, \"epsilon\": 0.005, \"seed\": 42},\n");
+    s.push_str(&format!(
+        "  \"gates\": {{\"hist3d_work_per_iter_256\": {work_gate}, \"slab_deterministic\": {deterministic}}},\n"
+    ));
+    s.push_str("  \"sizes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let path_json = |b: &BenchResult, iters: usize| {
+            format!(
+                "{{\"mean_s\": {:.6}, \"p95_s\": {:.6}, \"runs\": {}, \"mvox_per_s\": {:.3}, \"iters\": {iters}}}",
+                b.mean(),
+                b.seconds.p95,
+                b.runs,
+                r.voxels as f64 / b.mean() / 1e6
+            )
+        };
+        s.push_str(&format!(
+            "    {{\"shape\": [{}, {}, {}], \"voxels\": {}, \"slice_loop\": {}, \"slab\": {}, \"hist3d\": {}}}{}\n",
+            r.width,
+            r.height,
+            r.depth,
+            r.voxels,
+            path_json(&r.slice_loop, 0),
+            path_json(&r.slab, r.slab_iters),
+            path_json(&r.hist, r.hist_iters),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(&path, &s)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

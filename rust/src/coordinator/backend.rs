@@ -21,8 +21,9 @@
 
 use super::job::Engine;
 use crate::fcm::engine::batch::BatchInput;
-use crate::fcm::{canonical_relabel, engine, Backend, EngineOpts, FcmParams, FcmRun};
-use crate::image::FeatureVector;
+use crate::fcm::engine::volume::{VolumeOpts, VolumeRun};
+use crate::fcm::{canonical_relabel, engine, spatial, Backend, EngineOpts, FcmParams, FcmRun};
+use crate::image::{FeatureVector, VoxelVolume};
 use crate::runtime::{DeviceStats, FcmExecutor, Registry};
 use anyhow::{anyhow, Result};
 
@@ -31,6 +32,42 @@ use anyhow::{anyhow, Result};
 pub struct BackendRun {
     pub run: FcmRun,
     pub device: Option<DeviceStats>,
+}
+
+/// One served volumetric segmentation.
+#[derive(Clone, Debug)]
+pub struct VolumeOutcome {
+    /// One canonical label per voxel, z-major — same layout as the
+    /// submitted [`VoxelVolume`].
+    pub labels: Vec<u8>,
+    /// Converged centers, ascending. On the slice-loop path (which runs
+    /// one independent FCM per slice) this is the mean of the per-slice
+    /// centers — representative, not a single converged solution.
+    pub centers: Vec<f32>,
+    /// Total FCM iterations executed (summed over slices on the
+    /// slice-loop path).
+    pub iterations: usize,
+    pub converged: bool,
+    /// Whether a true volumetric engine pass served the job (false =
+    /// the per-slice fallback).
+    pub true_3d: bool,
+    /// Elements the engine touches per iteration: voxels for the slab
+    /// path, 256 for the 3-D histogram path, the slice area for the
+    /// slice loop.
+    pub work_per_iter: usize,
+}
+
+/// Canonicalize an engine-level volumetric run into a served outcome.
+fn finish_volume_run(mut vr: VolumeRun) -> VolumeOutcome {
+    canonical_relabel(&mut vr.run);
+    VolumeOutcome {
+        labels: vr.run.labels,
+        centers: vr.run.centers,
+        iterations: vr.run.iterations,
+        converged: vr.run.converged,
+        true_3d: true,
+        work_per_iter: vr.work_per_iter,
+    }
 }
 
 /// A serving engine. See the module docs for the result contract.
@@ -49,6 +86,44 @@ pub trait FcmBackend {
         params: &FcmParams,
     ) -> Vec<Result<BackendRun>> {
         features.iter().map(|f| self.segment(f, params)).collect()
+    }
+
+    /// Segment a voxel volume. The default flattens to one
+    /// [`FcmBackend::segment_batch`] call over the axial slices — every
+    /// backend can serve volumes, slice-wise at worst. Parallel,
+    /// Histogram, and Spatial override with the true-3D engine paths
+    /// (slab decomposition / volume histogram / 3-D regularization).
+    fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
+        let fvs: Vec<FeatureVector> = (0..vol.depth)
+            .map(|z| FeatureVector::from_image(&vol.slice(z)))
+            .collect();
+        let refs: Vec<&FeatureVector> = fvs.iter().collect();
+        let mut labels = Vec::with_capacity(vol.len());
+        let mut centers = vec![0f32; params.clusters];
+        let mut iterations = 0usize;
+        let mut converged = true;
+        let mut served = 0usize;
+        for out in self.segment_batch(&refs, params) {
+            let BackendRun { run, .. } = out?;
+            labels.extend_from_slice(&run.labels);
+            for (c, v) in centers.iter_mut().zip(&run.centers) {
+                *c += v;
+            }
+            iterations += run.iterations;
+            converged &= run.converged;
+            served += 1;
+        }
+        for c in centers.iter_mut() {
+            *c /= served.max(1) as f32;
+        }
+        Ok(VolumeOutcome {
+            labels,
+            centers,
+            iterations,
+            converged,
+            true_3d: false,
+            work_per_iter: vol.slice_area(),
+        })
     }
 }
 
@@ -70,7 +145,19 @@ pub fn backend_for<'r>(
         Engine::Parallel => Box::new(ParallelBackend::new(opts)),
         Engine::Histogram => Box::new(HistogramBackend::new(opts)),
         Engine::BrFcm => Box::new(BrFcmBackend),
+        Engine::Spatial => Box::new(SpatialBackend::new(opts)),
     })
+}
+
+/// Volumetric engine options shared by the host backends: carry the
+/// engine thread count over, keep the default slab size (results are
+/// slab-invariant; see `fcm::engine::volume`).
+fn volume_opts(opts: &EngineOpts, backend: Backend) -> VolumeOpts {
+    VolumeOpts {
+        backend,
+        threads: opts.threads,
+        ..VolumeOpts::default()
+    }
 }
 
 /// Host-engine segment shared by the three `fcm::engine` backends.
@@ -166,6 +253,16 @@ impl FcmBackend for ParallelBackend {
             })
             .collect()
     }
+
+    /// True-3D path: slab-decomposed volumetric FCM on the persistent
+    /// pool (bit-identical across thread counts and slab sizes).
+    fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
+        Ok(finish_volume_run(engine::volume::run_volume(
+            vol,
+            params,
+            &volume_opts(&self.opts, Backend::Parallel),
+        )))
+    }
 }
 
 /// brFCM histogram fast path for 8-bit inputs (falls back to the
@@ -192,6 +289,71 @@ impl FcmBackend for HistogramBackend {
 
     fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun> {
         Ok(host_segment(&self.opts, features, params))
+    }
+
+    /// True-3D path: one 256-bin histogram over the whole volume —
+    /// per-iteration cost independent of voxel count.
+    fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
+        Ok(finish_volume_run(engine::volume::run_volume(
+            vol,
+            params,
+            &volume_opts(&self.opts, Backend::Histogram),
+        )))
+    }
+}
+
+/// Spatial FCM: host-parallel phase 1, then neighbourhood-modulated
+/// iterations — 2-D (the feature's `shape` grid) for slice jobs, the
+/// 3x3x3 voxel window for volume jobs. With spatial exponent `q = 0`
+/// both paths reproduce the plain parallel engine bit-for-bit.
+pub struct SpatialBackend {
+    opts: EngineOpts,
+    sp: spatial::SpatialParams,
+}
+
+impl SpatialBackend {
+    pub fn new(opts: &EngineOpts) -> SpatialBackend {
+        SpatialBackend::with_params(opts, spatial::SpatialParams::default())
+    }
+
+    pub fn with_params(opts: &EngineOpts, sp: spatial::SpatialParams) -> SpatialBackend {
+        SpatialBackend {
+            opts: EngineOpts {
+                backend: Backend::Parallel,
+                ..*opts
+            },
+            sp,
+        }
+    }
+}
+
+impl FcmBackend for SpatialBackend {
+    fn engine(&self) -> Engine {
+        Engine::Spatial
+    }
+
+    fn segment(&self, features: &FeatureVector, params: &FcmParams) -> Result<BackendRun> {
+        let mut run = spatial::run_features(
+            &features.x,
+            &features.w,
+            features.shape,
+            params,
+            &self.sp,
+            &self.opts,
+        );
+        finish_host_run(&mut run, features);
+        Ok(BackendRun { run, device: None })
+    }
+
+    /// True-3D path: 26-neighbour spatial regularization after a
+    /// slab-parallel volumetric phase 1.
+    fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
+        Ok(finish_volume_run(spatial::run_volume(
+            vol,
+            params,
+            &self.sp,
+            &volume_opts(&self.opts, Backend::Parallel),
+        )))
     }
 }
 
@@ -298,6 +460,7 @@ mod tests {
             Engine::Parallel,
             Engine::Histogram,
             Engine::BrFcm,
+            Engine::Spatial,
         ] {
             let b = backend_for(engine, None, &opts).unwrap();
             assert_eq!(b.engine(), engine);
@@ -417,5 +580,103 @@ mod tests {
             let solo = backend.segment(fv, &params).unwrap();
             assert_eq!(b.run.labels, solo.run.labels);
         }
+    }
+
+    fn synth_volume(depth: usize) -> VoxelVolume {
+        let pv = crate::phantom::generate_volume(
+            &crate::phantom::PhantomConfig {
+                width: 45,
+                height: 55,
+                ..Default::default()
+            },
+            92,
+            92 + depth,
+            1,
+        );
+        pv.to_voxel_volume()
+    }
+
+    #[test]
+    fn spatial_backend_q_zero_matches_parallel_backend_bitwise() {
+        // The satellite contract: q = 0 turns the spatial term into the
+        // identity, and the backend must then BE the parallel engine —
+        // same run, bit for bit, through the same serving seam.
+        let s = crate::phantom::generate_slice(&crate::phantom::PhantomConfig::default());
+        let fv = FeatureVector::from_image(&s.image);
+        let params = FcmParams::default();
+        let opts = EngineOpts::default();
+        let spatial_q0 = SpatialBackend::with_params(
+            &opts,
+            spatial::SpatialParams {
+                q: 0.0,
+                ..Default::default()
+            },
+        );
+        let a = spatial_q0.segment(&fv, &params).unwrap();
+        let b = ParallelBackend::new(&opts).segment(&fv, &params).unwrap();
+        assert_eq!(a.run.labels, b.run.labels);
+        assert_eq!(a.run.centers, b.run.centers);
+        assert_eq!(a.run.u, b.run.u);
+        assert_eq!(a.run.iterations, b.run.iterations);
+        assert_eq!(a.run.jm_history, b.run.jm_history);
+    }
+
+    #[test]
+    fn parallel_volume_override_is_the_slab_engine() {
+        let vol = synth_volume(4);
+        let params = FcmParams::default();
+        let opts = EngineOpts::default();
+        let out = ParallelBackend::new(&opts).segment_volume(&vol, &params).unwrap();
+        assert!(out.true_3d);
+        assert_eq!(out.work_per_iter, vol.len());
+        assert_eq!(out.labels.len(), vol.len());
+        let mut vr = engine::volume::run_volume(
+            &vol,
+            &params,
+            &volume_opts(&opts, Backend::Parallel),
+        );
+        canonical_relabel(&mut vr.run);
+        assert_eq!(out.labels, vr.run.labels);
+        assert_eq!(out.centers, vr.run.centers);
+        // Centers come back ascending (canonical).
+        for pair in out.centers.windows(2) {
+            assert!(pair[0] <= pair[1]);
+        }
+    }
+
+    #[test]
+    fn histogram_volume_override_has_constant_iteration_work() {
+        let vol = synth_volume(3);
+        let params = FcmParams::default();
+        let out = HistogramBackend::new(&EngineOpts::default())
+            .segment_volume(&vol, &params)
+            .unwrap();
+        assert!(out.true_3d);
+        assert_eq!(out.work_per_iter, crate::fcm::engine::volume::BINS);
+        assert_eq!(out.labels.len(), vol.len());
+    }
+
+    #[test]
+    fn default_volume_path_is_the_slice_loop() {
+        // SequentialBackend has no 3-D override: the default must
+        // flatten to per-slice runs whose stitched labels match running
+        // each slice through `segment` by hand.
+        let vol = synth_volume(3);
+        let params = FcmParams::default();
+        let backend = SequentialBackend::new(&EngineOpts::default());
+        let out = backend.segment_volume(&vol, &params).unwrap();
+        assert!(!out.true_3d);
+        assert_eq!(out.work_per_iter, vol.slice_area());
+        assert_eq!(out.labels.len(), vol.len());
+        let mut expect = Vec::new();
+        let mut iters = 0;
+        for z in 0..vol.depth {
+            let fv = FeatureVector::from_image(&vol.slice(z));
+            let r = backend.segment(&fv, &params).unwrap();
+            expect.extend_from_slice(&r.run.labels);
+            iters += r.run.iterations;
+        }
+        assert_eq!(out.labels, expect);
+        assert_eq!(out.iterations, iters);
     }
 }

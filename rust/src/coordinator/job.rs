@@ -24,17 +24,22 @@ pub enum Engine {
     /// brFCM histogram reduction + sequential weighted core (legacy
     /// comparator; prefer Engine::Histogram for serving).
     BrFcm,
+    /// Spatial FCM (neighbourhood-modulated memberships): host-parallel
+    /// phase 1, then spatial iterations on the feature's 2-D shape (or
+    /// the 3x3x3 voxel window for volume jobs). The noise-robust engine.
+    Spatial,
 }
 
 impl Engine {
     /// Every variant, in [`Engine::index`] order (metrics tables, sweeps).
-    pub const ALL: [Engine; 6] = [
+    pub const ALL: [Engine; 7] = [
         Engine::Device,
         Engine::DeviceRef,
         Engine::Sequential,
         Engine::Parallel,
         Engine::Histogram,
         Engine::BrFcm,
+        Engine::Spatial,
     ];
 
     /// Dense index into per-engine counter arrays (`Engine::ALL` order).
@@ -46,6 +51,7 @@ impl Engine {
             Engine::Parallel => 3,
             Engine::Histogram => 4,
             Engine::BrFcm => 5,
+            Engine::Spatial => 6,
         }
     }
 
@@ -58,6 +64,7 @@ impl Engine {
             Engine::Parallel => "parallel",
             Engine::Histogram => "histogram",
             Engine::BrFcm => "brfcm",
+            Engine::Spatial => "spatial",
         }
     }
 
@@ -69,7 +76,7 @@ impl Engine {
             Engine::Sequential => Some(crate::fcm::Backend::Sequential),
             Engine::Parallel => Some(crate::fcm::Backend::Parallel),
             Engine::Histogram => Some(crate::fcm::Backend::Histogram),
-            Engine::Device | Engine::DeviceRef | Engine::BrFcm => None,
+            Engine::Device | Engine::DeviceRef | Engine::BrFcm | Engine::Spatial => None,
         }
     }
 }
@@ -85,10 +92,15 @@ impl From<crate::fcm::Backend> for Engine {
     }
 }
 
-/// A segmentation request.
+/// A segmentation request. Slice jobs carry `features`; volume jobs
+/// carry `volume` (and an empty feature vector) and are served through
+/// [`crate::coordinator::FcmBackend::segment_volume`] as singleton
+/// batches — a volume is already the heavyweight unit of work.
 pub struct SegmentJob {
     pub id: u64,
     pub features: FeatureVector,
+    /// Present on volume jobs (`Service::submit_volume`).
+    pub volume: Option<crate::image::VoxelVolume>,
     pub params: FcmParams,
     pub engine: Engine,
     pub submitted: Instant,
@@ -140,6 +152,7 @@ mod tests {
         SegmentJob {
             id: 1,
             features: FeatureVector::from_values(vec![0.0; n]),
+            volume: None,
             params: FcmParams::default(),
             engine: Engine::Device,
             submitted: Instant::now(),
@@ -153,7 +166,7 @@ mod tests {
         for b in [Backend::Sequential, Backend::Parallel, Backend::Histogram] {
             assert_eq!(Engine::from(b).host_backend(), Some(b));
         }
-        for e in [Engine::Device, Engine::DeviceRef, Engine::BrFcm] {
+        for e in [Engine::Device, Engine::DeviceRef, Engine::BrFcm, Engine::Spatial] {
             assert_eq!(e.host_backend(), None);
         }
     }

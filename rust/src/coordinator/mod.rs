@@ -9,7 +9,7 @@ pub mod metrics;
 pub mod queue;
 pub mod service;
 
-pub use backend::{backend_for, BackendRun, FcmBackend};
+pub use backend::{backend_for, BackendRun, FcmBackend, VolumeOutcome};
 pub use job::{Engine, JobResult, SegmentJob};
 pub use metrics::{EngineBatchStats, Metrics, Snapshot};
 pub use queue::Queue;

@@ -3,12 +3,20 @@
 //! This is the L3 coordination layer (DESIGN.md S12). Shape: a bounded
 //! MPMC job queue feeds `workers` threads; each worker owns its own PJRT
 //! client + compiled-executable cache (the xla handles are not Sync),
-//! forms batches of compatible jobs ([`form_batch`]), and executes each
-//! batch through ONE [`FcmBackend::segment_batch`] call — the
+//! forms batches of compatible jobs (`form_batch`), and executes each
+//! batch through ONE [`crate::coordinator::FcmBackend::segment_batch`]
+//! call — the
 //! serving-system analogue of the paper's "load kernels once, stream
 //! pixel arrays through them". Host-parallel batches hit the true
 //! multi-image engine path (`fcm::engine::batch`); host single jobs run
 //! on the persistent engine pool either way.
+//!
+//! Volume jobs ([`Service::submit_volume`]) ride the same queue as a
+//! heavyweight job class: each one forms a **singleton batch** (a
+//! ~40-slice volume already saturates the engine pool on its own) and
+//! executes through [`crate::coordinator::FcmBackend::segment_volume`]
+//! — the true-3D slab / histogram / spatial paths on the host backends,
+//! the per-slice fallback everywhere else.
 //!
 //! Batch compatibility = same [`Engine`], identical [`FcmParams`], and
 //! the same shape key (manifest bucket for device jobs — derived from
@@ -22,7 +30,7 @@ use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
 use crate::fcm::{EngineOpts, FcmParams};
-use crate::image::{FeatureVector, GrayImage};
+use crate::image::{FeatureVector, GrayImage, VoxelVolume};
 use crate::runtime::Registry;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -118,6 +126,7 @@ impl Service {
         let job = SegmentJob {
             id,
             features,
+            volume: None,
             params,
             engine,
             submitted: Instant::now(),
@@ -138,6 +147,33 @@ impl Service {
         engine: Engine,
     ) -> Result<Ticket> {
         self.submit(FeatureVector::from_image(img), params, engine)
+    }
+
+    /// Submit a voxel volume for 3-D segmentation. The result's `labels`
+    /// cover every voxel, z-major. Served as a singleton batch through
+    /// `FcmBackend::segment_volume` (see module docs).
+    pub fn submit_volume(
+        &self,
+        vol: VoxelVolume,
+        params: FcmParams,
+        engine: Engine,
+    ) -> Result<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let job = SegmentJob {
+            id,
+            features: FeatureVector::from_values(Vec::new()),
+            volume: Some(vol),
+            params,
+            engine,
+            submitted: Instant::now(),
+            respond: tx,
+        };
+        self.metrics.job_submitted();
+        self.queue
+            .push(job)
+            .map_err(|_| anyhow!("service is shut down"))?;
+        Ok(Ticket { id, rx })
     }
 
     /// Graceful shutdown: drain the queue, join workers, return metrics.
@@ -195,6 +231,10 @@ fn form_batch(
     max_batch: usize,
     registry: Option<&Registry>,
 ) -> Vec<SegmentJob> {
+    // Volume jobs are singleton batches (module docs).
+    if first.volume.is_some() {
+        return vec![first];
+    }
     let buckets = device_buckets(&first, registry);
     let key = shape_key(&first, &buckets);
     let engine = first.engine;
@@ -202,13 +242,59 @@ fn form_batch(
     let mut batch = vec![first];
     while batch.len() < max_batch {
         match queue.try_pop_matching(|j| {
-            j.engine == engine && j.params == params && shape_key(j, &buckets) == key
+            j.volume.is_none()
+                && j.engine == engine
+                && j.params == params
+                && shape_key(j, &buckets) == key
         }) {
             Some(j) => batch.push(j),
             None => break,
         }
     }
     batch
+}
+
+/// Serve one volume job through `FcmBackend::segment_volume`.
+fn serve_volume_job(
+    worker_id: usize,
+    job: SegmentJob,
+    registry: Option<&Registry>,
+    engine_opts: &EngineOpts,
+    metrics: &Metrics,
+    batch_id: u64,
+) {
+    let vol = job.volume.as_ref().expect("volume job");
+    let queue_wait_s = job.submitted.elapsed().as_secs_f64();
+    let outcome = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
+        let t0 = Instant::now();
+        let out = backend.segment_volume(vol, &job.params)?;
+        let wall = t0.elapsed().as_secs_f64();
+        metrics.batch_served(job.engine, 1, wall);
+        Ok((out, wall))
+    });
+    match outcome {
+        Ok((out, service_s)) => {
+            metrics.job_completed(queue_wait_s, service_s, out.iterations);
+            let result = JobResult {
+                id: job.id,
+                labels: out.labels,
+                centers: out.centers,
+                iterations: out.iterations,
+                converged: out.converged,
+                engine: job.engine,
+                queue_wait_s,
+                service_s,
+                device: None,
+                worker: worker_id,
+                batch_id,
+            };
+            let _ = job.respond.send(Ok(result));
+        }
+        Err(e) => {
+            metrics.job_failed();
+            let _ = job.respond.send(Err(e));
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -227,11 +313,25 @@ fn worker_loop(
     let registry = Registry::open(std::path::Path::new(artifacts_dir)).ok();
 
     while let Some(first) = queue.pop() {
-        let batch = form_batch(&queue, first, max_batch, registry.as_ref());
+        let mut batch = form_batch(&queue, first, max_batch, registry.as_ref());
         let engine = batch[0].engine;
         let params = batch[0].params;
         let batch_id = batch_ids.fetch_add(1, Ordering::Relaxed);
         metrics.batch_formed();
+
+        // Volume jobs arrive as singleton batches; serve and move on.
+        if batch[0].volume.is_some() {
+            let job = batch.pop().expect("singleton volume batch");
+            serve_volume_job(
+                worker_id,
+                job,
+                registry.as_ref(),
+                &engine_opts,
+                &metrics,
+                batch_id,
+            );
+            continue;
+        }
 
         // Per job: (outcome, service_s, queue_wait_s). A batched call
         // starts every job at once, so waits end at the invocation and
@@ -317,6 +417,20 @@ mod tests {
         SegmentJob {
             id: 0,
             features: FeatureVector::from_values(vec![0.0; n]),
+            volume: None,
+            params,
+            engine,
+            submitted: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    fn volume_job(engine: Engine, params: FcmParams) -> SegmentJob {
+        let (tx, _rx) = mpsc::channel();
+        SegmentJob {
+            id: 0,
+            features: FeatureVector::from_values(Vec::new()),
+            volume: Some(VoxelVolume::new(4, 4, 2)),
             params,
             engine,
             submitted: Instant::now(),
@@ -379,6 +493,29 @@ mod tests {
         let batch = form_batch(&q, job(Engine::Parallel, 100, FcmParams::default()), 8, None);
         assert_eq!(batch.len(), 2);
         assert!(batch.iter().all(|j| j.features.len() == 100));
+    }
+
+    #[test]
+    fn volume_jobs_form_singleton_batches() {
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        // A compatible slice job AND another volume job sit in the
+        // queue; neither may join a volume batch.
+        assert!(q.push(job(Engine::Parallel, 0, FcmParams::default())).is_ok());
+        assert!(q.push(volume_job(Engine::Parallel, FcmParams::default())).is_ok());
+        let batch = form_batch(
+            &q,
+            volume_job(Engine::Parallel, FcmParams::default()),
+            8,
+            None,
+        );
+        assert_eq!(batch.len(), 1);
+        assert!(batch[0].volume.is_some());
+        assert_eq!(q.len(), 2, "queued jobs stay put");
+        // And a slice batch never swallows a queued volume job.
+        let batch = form_batch(&q, job(Engine::Parallel, 0, FcmParams::default()), 8, None);
+        assert_eq!(batch.len(), 2, "first + the queued slice job");
+        assert!(batch.iter().all(|j| j.volume.is_none()));
+        assert_eq!(q.len(), 1, "the volume job stays queued");
     }
 
     #[test]

@@ -25,16 +25,28 @@ pub fn dice(pred: &[bool], truth: &[bool]) -> f64 {
 
 /// DSC for every class id in `0..n_classes` between two label maps.
 pub fn dice_per_class(pred: &[u8], truth: &[u8], n_classes: u8) -> Vec<f64> {
-    assert_eq!(pred.len(), truth.len());
+    dice_per_class_stacked(&[pred], &[truth], n_classes)
+}
+
+/// DSC per class over a *stack* of label-map pairs, pooling the counts
+/// across every pair — the volume-level metric: per-tissue Dice over
+/// ALL voxels of a slice stack (or, with one pair, a whole flattened
+/// volume). This is the clinically reported number; per-slice DSC is
+/// noisier where regions get small (e.g. the brain apex).
+pub fn dice_per_class_stacked(pred: &[&[u8]], truth: &[&[u8]], n_classes: u8) -> Vec<f64> {
+    assert_eq!(pred.len(), truth.len(), "stack length mismatch");
     let c = n_classes as usize;
     let mut inter = vec![0usize; c];
     let mut pr = vec![0usize; c];
     let mut gt = vec![0usize; c];
-    for (&p, &t) in pred.iter().zip(truth) {
-        pr[p as usize] += 1;
-        gt[t as usize] += 1;
-        if p == t {
-            inter[p as usize] += 1;
+    for (ps, ts) in pred.iter().zip(truth) {
+        assert_eq!(ps.len(), ts.len(), "label map length mismatch");
+        for (&p, &t) in ps.iter().zip(ts.iter()) {
+            pr[p as usize] += 1;
+            gt[t as usize] += 1;
+            if p == t {
+                inter[p as usize] += 1;
+            }
         }
     }
     (0..c)
@@ -100,5 +112,32 @@ mod tests {
     #[should_panic]
     fn mismatched_lengths_panic() {
         let _ = dice(&[true], &[true, false]);
+    }
+
+    #[test]
+    fn stacked_equals_concatenated() {
+        let p1 = [0u8, 1, 2, 1];
+        let t1 = [0u8, 1, 1, 1];
+        let p2 = [2u8, 2, 0];
+        let t2 = [2u8, 0, 0];
+        let stacked = dice_per_class_stacked(&[&p1, &p2], &[&t1, &t2], 3);
+        let mut pc: Vec<u8> = p1.to_vec();
+        pc.extend_from_slice(&p2);
+        let mut tc: Vec<u8> = t1.to_vec();
+        tc.extend_from_slice(&t2);
+        assert_eq!(stacked, dice_per_class(&pc, &tc, 3));
+    }
+
+    #[test]
+    fn stacked_empty_stack_scores_one() {
+        assert_eq!(dice_per_class_stacked(&[], &[], 2), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stacked_mismatched_pair_panics() {
+        let p = [0u8, 1];
+        let t = [0u8];
+        let _ = dice_per_class_stacked(&[&p], &[&t], 2);
     }
 }

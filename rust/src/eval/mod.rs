@@ -4,4 +4,4 @@ pub mod confusion;
 pub mod dsc;
 
 pub use confusion::Confusion;
-pub use dsc::{dice, dice_per_class};
+pub use dsc::{dice, dice_per_class, dice_per_class_stacked};

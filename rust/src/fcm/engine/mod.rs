@@ -25,7 +25,10 @@
 //!   workers (zero spawns after construction);
 //! * [`batch`] — true multi-image execution: N images interleaved
 //!   through one pool pass per iteration, per-image convergence,
-//!   results bit-identical to per-image runs.
+//!   results bit-identical to per-image runs;
+//! * [`volume`] — volumetric (3-D) FCM: Z-slab decomposition onto the
+//!   same pool with per-slice fixed-order reductions, plus the 3-D
+//!   histogram fast path (O(256·c²) per iteration for any voxel count).
 
 pub mod batch;
 pub mod fused;
@@ -33,6 +36,7 @@ pub mod histogram;
 pub mod parallel;
 pub mod pool;
 pub mod reduce;
+pub mod volume;
 
 use crate::fcm::{FcmParams, FcmRun};
 

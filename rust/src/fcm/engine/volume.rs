@@ -1,0 +1,525 @@
+//! Volumetric (3-D) FCM — slab-decomposed execution on the persistent
+//! pool, plus the 3-D histogram fast path.
+//!
+//! A [`crate::image::VoxelVolume`] is one contiguous z-major field, so
+//! intensity FCM over it is the same mathematics as over an image — at
+//! ~40x the per-job scale of a slice. This module maps that workload
+//! onto the PR 1/2 machinery:
+//!
+//! * **Partial granularity is the axial slice.** Every iteration
+//!   computes one [`PassPartial`] per slice (the fused membership +
+//!   delta + J_m + next-center sigma pass of [`super::fused`]) and
+//!   reduces the `depth` partials pairwise **in z order** — the same
+//!   fixed-order tree as the 2-D engine, keyed on slice index.
+//! * **Dispatch granularity is the slab.** Slices are grouped into
+//!   slabs of `slab_slices` consecutive slices ([`slab_ranges`]); slab
+//!   `s` runs on lane `s % lanes` of the persistent pool. Slabs keep
+//!   each lane walking contiguous memory, but they are *scheduling
+//!   only*: partials are produced per slice and reduced in z order
+//!   regardless of how slices were grouped, so results are
+//!   **bit-identical for every `slab_slices` and every thread count**
+//!   (and identical to [`super::parallel::run_from`] with
+//!   `chunk = width * height` — pinned by tests).
+//! * **The 3-D histogram path** generalizes brFCM to volumes: voxels
+//!   are 8-bit, so one 256-bin grey-level histogram over the *whole
+//!   volume* (exact integer counts — order-independent) turns an
+//!   iteration into 256 weighted bin updates. Per-iteration cost is
+//!   O(256·c²) regardless of voxel count; [`VolumeRun::work_per_iter`]
+//!   records it (256 vs `n` for the slab path) so the claim is
+//!   assertable, not just timed.
+//!
+//! Memory note: the slab path returns the full voxel-level membership
+//! matrix (`c·n` f32). The histogram path keeps `run.u` at **bin level**
+//! (`c·256`, like `fcm::brfcm`) — expanding it to voxels would cost
+//! ~0.1 GB on a full 181x217x181 BrainWeb volume for data that is a pure
+//! function of grey level; labels are expanded through a 256-entry LUT.
+
+use super::fused::{fused_chunk, initial_centers, PassPartial};
+use super::pool::Pool;
+use super::reduce::{chunk_ranges, tree_reduce};
+use super::Backend;
+use crate::fcm::{defuzzify, init_membership_masked, FcmParams, FcmRun};
+use crate::image::VoxelVolume;
+use std::sync::Mutex;
+
+/// Grey levels on the 3-D histogram path (u8 voxels).
+pub const BINS: usize = 256;
+
+/// Volumetric engine knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VolumeOpts {
+    /// `Parallel` = slab-decomposed voxel path, `Histogram` = 3-D
+    /// histogram path, `Sequential` = the flat single-threaded baseline.
+    pub backend: Backend,
+    /// Pool lanes; 0 = all cores. Results identical for every value.
+    pub threads: usize,
+    /// Slices per dispatch slab. Scheduling granularity only — results
+    /// are identical for every value (see module docs).
+    pub slab_slices: usize,
+}
+
+impl Default for VolumeOpts {
+    fn default() -> Self {
+        VolumeOpts {
+            backend: Backend::Parallel,
+            threads: 0,
+            slab_slices: 4,
+        }
+    }
+}
+
+impl VolumeOpts {
+    pub fn with_backend(backend: Backend) -> VolumeOpts {
+        VolumeOpts {
+            backend,
+            ..Default::default()
+        }
+    }
+}
+
+/// A finished volumetric run.
+#[derive(Clone, Debug)]
+pub struct VolumeRun {
+    /// The run over the flattened volume. `labels` has one entry per
+    /// voxel (z-major). On the histogram path `u` is bin-level (c·256);
+    /// on the slab/sequential paths it is voxel-level (c·n).
+    pub run: FcmRun,
+    /// Elements the fused update touches per iteration: `n` voxels on
+    /// the slab and sequential paths, [`BINS`] on the histogram path —
+    /// the counter behind "per-iteration cost independent of voxel
+    /// count".
+    pub work_per_iter: usize,
+}
+
+/// Slab grid: (first slice, slice count) pairs — a pure function of
+/// (depth, slab_slices), like the 2-D engine's chunk grid.
+pub fn slab_ranges(depth: usize, slab_slices: usize) -> Vec<(usize, usize)> {
+    chunk_ranges(depth, slab_slices.max(1))
+}
+
+/// Run volumetric FCM from a fresh (seeded) membership init.
+pub fn run_volume(vol: &VoxelVolume, params: &FcmParams, opts: &VolumeOpts) -> VolumeRun {
+    let w = vec![1.0f32; vol.len()];
+    let u0 = init_membership_masked(params.clusters, &w, params.seed);
+    run_volume_from(vol, u0, params, opts)
+}
+
+/// Run volumetric FCM from a caller-supplied voxel-level initial
+/// membership (c·n). All three backends consume the same u0, so their
+/// trajectories are comparable.
+pub fn run_volume_from(
+    vol: &VoxelVolume,
+    u0: Vec<f32>,
+    params: &FcmParams,
+    opts: &VolumeOpts,
+) -> VolumeRun {
+    let n = vol.len();
+    let c = params.clusters;
+    assert_eq!(u0.len(), c * n, "membership length mismatch");
+    if n == 0 {
+        return VolumeRun {
+            run: FcmRun {
+                centers: vec![0.0; c],
+                u: u0,
+                labels: Vec::new(),
+                iterations: 0,
+                final_delta: 0.0,
+                jm_history: Vec::new(),
+                converged: true,
+            },
+            work_per_iter: 0,
+        };
+    }
+    match opts.backend {
+        Backend::Histogram => run_histogram(vol, u0, params, opts),
+        Backend::Parallel => run_slab(vol, u0, params, opts),
+        Backend::Sequential => {
+            let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
+            let w = vec![1.0f32; n];
+            VolumeRun {
+                run: crate::fcm::sequential::run_from(&x, &w, u0, params),
+                work_per_iter: n,
+            }
+        }
+    }
+}
+
+/// The slab-decomposed voxel path (see module docs).
+fn run_slab(
+    vol: &VoxelVolume,
+    mut u: Vec<f32>,
+    params: &FcmParams,
+    opts: &VolumeOpts,
+) -> VolumeRun {
+    let n = vol.len();
+    let c = params.clusters;
+    let m = params.m as f64;
+    let area = vol.slice_area();
+    let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
+    let w = vec![1.0f32; n];
+    let pool = super::pool::global(opts.threads);
+
+    // centers_1 from u_0 over the same per-slice grid the iterations use.
+    let mut centers = initial_centers(&x, &w, &u, c, m, area);
+
+    // One (start, len) range per axial slice — the partial grid.
+    let slices = chunk_ranges(n, area);
+    let mut u_new = vec![0f32; c * n];
+    let mut jm_history = Vec::new();
+    let mut final_delta = f32::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for it in 0..params.max_iters {
+        iterations += 1;
+        let total = slab_pass(
+            &pool,
+            &x,
+            &w,
+            &u,
+            n,
+            &centers,
+            m,
+            &slices,
+            opts.slab_slices.max(1),
+            &mut u_new,
+        );
+        std::mem::swap(&mut u, &mut u_new);
+        jm_history.push(total.jm);
+        final_delta = total.delta;
+        if total.delta < params.epsilon {
+            converged = true;
+            break;
+        }
+        // Skip the center update on the final capped iteration (parity
+        // with the 2-D engines; see parallel.rs).
+        if it + 1 < params.max_iters {
+            total.centers(&mut centers);
+        }
+    }
+
+    let labels = defuzzify(&u, c, n);
+    VolumeRun {
+        run: FcmRun {
+            centers,
+            u,
+            labels,
+            iterations,
+            final_delta,
+            jm_history,
+            converged,
+        },
+        work_per_iter: n,
+    }
+}
+
+/// One slice's work unit: (slice index, start voxel, per-cluster output
+/// row slices).
+type SliceTask<'a> = (usize, usize, Vec<&'a mut [f32]>);
+
+/// One fused pass over all slices, slab-grouped onto the pool.
+#[allow(clippy::too_many_arguments)]
+fn slab_pass(
+    pool: &Pool,
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    slices: &[(usize, usize)],
+    slab_slices: usize,
+    u_new: &mut [f32],
+) -> PassPartial {
+    let c = centers.len();
+    let slice_rows = super::parallel::split_chunk_rows(u_new, n, slices);
+
+    // Slab s (slices [s*slab_slices, ...)) -> lane s % lanes. The
+    // mapping affects only which lane touches which memory — partials
+    // are keyed by slice index, so results never depend on it.
+    let n_slabs = slices.len().div_ceil(slab_slices);
+    let lanes = pool.lanes().min(n_slabs).max(1);
+    let mut per_lane: Vec<Vec<SliceTask>> = (0..lanes).map(|_| Vec::new()).collect();
+    for (z, rows) in slice_rows.into_iter().enumerate() {
+        per_lane[(z / slab_slices) % lanes].push((z, slices[z].0, rows));
+    }
+
+    let slots: Vec<Mutex<(Vec<SliceTask>, Vec<(usize, PassPartial)>)>> = per_lane
+        .into_iter()
+        .map(|tasks| Mutex::new((tasks, Vec::new())))
+        .collect();
+    pool.run(|lane| {
+        if lane >= slots.len() {
+            return;
+        }
+        let mut slot = slots[lane].lock().unwrap();
+        let (tasks, out) = &mut *slot;
+        for (z, start, rows) in tasks.iter_mut() {
+            out.push((*z, fused_chunk(x, w, u_old, n, centers, m, *start, rows)));
+        }
+    });
+
+    // Fixed z-order reduction, independent of slab and lane grouping.
+    let mut parts: Vec<(usize, PassPartial)> = slots
+        .into_iter()
+        .flat_map(|s| s.into_inner().unwrap().1)
+        .collect();
+    parts.sort_by_key(|&(z, _)| z);
+    let ordered: Vec<PassPartial> = parts.into_iter().map(|(_, p)| p).collect();
+    tree_reduce(&ordered, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c))
+}
+
+/// The 3-D histogram path: brFCM over the whole volume's grey-level
+/// histogram. Mirrors `engine::histogram` (centers_1 from the full
+/// voxel-level u_0, bin-averaged u_0 for the first delta), with exact
+/// integer bin counts — voxels are u8 by construction, so there is no
+/// applicability check and no fallback.
+fn run_histogram(
+    vol: &VoxelVolume,
+    u0: Vec<f32>,
+    params: &FcmParams,
+    // Threads/slab knobs are irrelevant at 256 bins; kept for signature
+    // symmetry with the slab path.
+    _opts: &VolumeOpts,
+) -> VolumeRun {
+    let n = vol.len();
+    let c = params.clusters;
+    let m = params.m as f64;
+    let area = vol.slice_area();
+
+    // Exact integer counts: order-independent by construction.
+    let mut counts = [0u64; BINS];
+    for &v in &vol.voxels {
+        counts[v as usize] += 1;
+    }
+    let xb: Vec<f32> = (0..BINS).map(|v| v as f32).collect();
+    // One f64 -> f32 rounding per bin, as in the 2-D histogram engine
+    // (exact up to 2^24 voxels per grey level).
+    let wb: Vec<f32> = counts.iter().map(|&v| v as f32).collect();
+
+    // centers_1 from the full voxel-level u_0 (trajectory parity with
+    // the slab path), over the same per-slice grid.
+    let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
+    let w = vec![1.0f32; n];
+    let mut centers = initial_centers(&x, &w, &u0, c, m, area);
+
+    // Bin-level u_0: count-averaged membership per grey level; only the
+    // first delta reads it.
+    let mut u_bin = vec![0f32; c * BINS];
+    for j in 0..c {
+        let mut sums = [0f64; BINS];
+        let row = &u0[j * n..(j + 1) * n];
+        for (&v, &ui) in vol.voxels.iter().zip(row) {
+            sums[v as usize] += ui as f64;
+        }
+        for b in 0..BINS {
+            if counts[b] > 0 {
+                u_bin[j * BINS + b] = (sums[b] / counts[b] as f64) as f32;
+            }
+        }
+    }
+    drop(u0);
+
+    // Iterate at bin granularity: one fused chunk of 256 "voxels".
+    let mut u_bin_new = vec![0f32; c * BINS];
+    let mut jm_history = Vec::new();
+    let mut final_delta = f32::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+    for it in 0..params.max_iters {
+        iterations += 1;
+        let part = {
+            let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(BINS).collect();
+            fused_chunk(&xb, &wb, &u_bin, BINS, &centers, m, 0, &mut rows)
+        };
+        std::mem::swap(&mut u_bin, &mut u_bin_new);
+        jm_history.push(part.jm);
+        final_delta = part.delta;
+        if part.delta < params.epsilon {
+            converged = true;
+            break;
+        }
+        if it + 1 < params.max_iters {
+            part.centers(&mut centers);
+        }
+    }
+
+    // Labels through a 256-entry LUT; u stays bin-level (module docs).
+    let bin_labels = defuzzify(&u_bin, c, BINS);
+    let labels: Vec<u8> = vol.voxels.iter().map(|&v| bin_labels[v as usize]).collect();
+
+    VolumeRun {
+        run: FcmRun {
+            centers,
+            u: u_bin,
+            labels,
+            iterations,
+            final_delta,
+            jm_history,
+            converged,
+        },
+        work_per_iter: BINS,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcm::{init_membership, EngineOpts};
+    use crate::phantom::{generate_volume, PhantomConfig};
+
+    fn small_volume(depth: usize) -> VoxelVolume {
+        let pv = generate_volume(
+            &PhantomConfig {
+                width: 61,
+                height: 73,
+                ..PhantomConfig::default()
+            },
+            90,
+            90 + depth,
+            1,
+        );
+        pv.to_voxel_volume()
+    }
+
+    fn vopts(threads: usize, slab: usize) -> VolumeOpts {
+        VolumeOpts {
+            backend: Backend::Parallel,
+            threads,
+            slab_slices: slab,
+        }
+    }
+
+    #[test]
+    fn slab_grid_covers_depth() {
+        assert_eq!(slab_ranges(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(slab_ranges(3, 0), vec![(0, 1), (1, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn voxel_path_matches_parallel_engine_bitwise() {
+        // The slab path with any slab size is the 2-D parallel engine
+        // with chunk = slice area: same partial grid, same z-order tree.
+        let vol = small_volume(5);
+        let n = vol.len();
+        let params = FcmParams {
+            max_iters: 40,
+            ..FcmParams::default()
+        };
+        let u0 = init_membership(params.clusters, n, 7);
+        let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
+        let w = vec![1.0f32; n];
+        let flat = super::super::parallel::run_from(
+            &x,
+            &w,
+            u0.clone(),
+            &params,
+            &EngineOpts {
+                backend: Backend::Parallel,
+                threads: 2,
+                chunk: vol.slice_area(),
+            },
+        );
+        let vr = run_volume_from(&vol, u0, &params, &vopts(3, 2));
+        assert_eq!(vr.run.centers, flat.centers);
+        assert_eq!(vr.run.u, flat.u);
+        assert_eq!(vr.run.labels, flat.labels);
+        assert_eq!(vr.run.jm_history, flat.jm_history);
+        assert_eq!(vr.work_per_iter, n);
+    }
+
+    #[test]
+    fn bit_identical_across_threads_and_slab_sizes() {
+        let vol = small_volume(6);
+        let params = FcmParams {
+            max_iters: 25,
+            ..FcmParams::default()
+        };
+        let u0 = init_membership(params.clusters, vol.len(), 3);
+        let reference = run_volume_from(&vol, u0.clone(), &params, &vopts(1, 1));
+        for threads in [2, 8] {
+            for slab in [1, 3, 8] {
+                let r = run_volume_from(&vol, u0.clone(), &params, &vopts(threads, slab));
+                assert_eq!(r.run.centers, reference.run.centers, "t={threads} slab={slab}");
+                assert_eq!(r.run.u, reference.run.u, "t={threads} slab={slab}");
+                assert_eq!(r.run.labels, reference.run.labels, "t={threads} slab={slab}");
+                assert_eq!(
+                    r.run.jm_history, reference.run.jm_history,
+                    "t={threads} slab={slab}"
+                );
+                assert_eq!(r.run.iterations, reference.run.iterations);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_path_work_counter_is_size_independent() {
+        let small = small_volume(2);
+        let big = small_volume(8);
+        let params = FcmParams::default();
+        let o = VolumeOpts::with_backend(Backend::Histogram);
+        let a = run_volume(&small, &params, &o);
+        let b = run_volume(&big, &params, &o);
+        assert_eq!(a.work_per_iter, BINS);
+        assert_eq!(b.work_per_iter, BINS);
+        assert_eq!(b.run.u.len(), params.clusters * BINS, "u stays bin-level");
+        assert_eq!(b.run.labels.len(), big.len(), "labels cover every voxel");
+    }
+
+    #[test]
+    fn histogram_path_agrees_with_slab_path() {
+        let vol = small_volume(4);
+        let params = FcmParams::default();
+        let u0 = init_membership(params.clusters, vol.len(), 11);
+        let mut slab = run_volume_from(&vol, u0.clone(), &params, &vopts(0, 4));
+        let mut hist =
+            run_volume_from(&vol, u0, &params, &VolumeOpts::with_backend(Backend::Histogram));
+        crate::fcm::canonical_relabel(&mut slab.run);
+        crate::fcm::canonical_relabel(&mut hist.run);
+        for (a, b) in hist.run.centers.iter().zip(&slab.run.centers) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "{:?} vs {:?}",
+                hist.run.centers,
+                slab.run.centers
+            );
+        }
+        let agree = hist
+            .run
+            .labels
+            .iter()
+            .zip(&slab.run.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(
+            agree as f64 / vol.len() as f64 > 0.995,
+            "agreement only {agree}/{}",
+            vol.len()
+        );
+    }
+
+    #[test]
+    fn sequential_dispatch_is_the_flat_baseline() {
+        let vol = small_volume(2);
+        let params = FcmParams {
+            max_iters: 15,
+            ..FcmParams::default()
+        };
+        let u0 = init_membership(params.clusters, vol.len(), 5);
+        let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
+        let w = vec![1.0f32; vol.len()];
+        let seq = crate::fcm::sequential::run_from(&x, &w, u0.clone(), &params);
+        let vr = run_volume_from(&vol, u0, &params, &VolumeOpts::with_backend(Backend::Sequential));
+        assert_eq!(vr.run.centers, seq.centers);
+        assert_eq!(vr.run.u, seq.u);
+    }
+
+    #[test]
+    fn empty_volume_is_a_noop() {
+        let vol = VoxelVolume::new(0, 0, 0);
+        let vr = run_volume(&vol, &FcmParams::default(), &VolumeOpts::default());
+        assert!(vr.run.converged);
+        assert!(vr.run.labels.is_empty());
+        assert_eq!(vr.work_per_iter, 0);
+    }
+}

@@ -8,7 +8,9 @@
 //! * [`kmeans`] — hard-clustering baseline from the paper's intro (Section
 //!   1 cites K-Means and ISODATA as the other segmentation clusterers).
 //! * [`spatial`] — spatial FCM (neighbourhood-modulated memberships), the
-//!   canonical noise-robust extension; motivated by experiment E11.
+//!   canonical noise-robust extension; motivated by experiment E11. Now
+//!   a selectable serving engine (`Engine::Spatial`), with a 3-D
+//!   (26-neighbour) variant for voxel volumes.
 //! * [`validity`] — cluster-validity indices (extension; used by the
 //!   ablation bench to sanity-check segmentation quality beyond DSC).
 //! * [`engine`] — the host-parallel engine: fused iterations, chunked

@@ -12,9 +12,24 @@
 //!
 //!   u'_ij = (u_ij^p · h_ij^q) / Σ_k (u_ik^p · h_ik^q),
 //!   h_ij  = Σ_{r ∈ window(i)} u_rj
+//!
+//! Three entry points:
+//!
+//! * [`run`] — the original sequential 2-D reference (phase 1 =
+//!   `fcm::sequential`), kept as-is;
+//! * [`run_features`] — the serving-path variant behind
+//!   `coordinator::backend::SpatialBackend`: phase 1 runs on the
+//!   host-parallel engine, and `q = 0` returns that run **bit-for-bit**
+//!   (the spatial term is then identically 1, so no extra iterations
+//!   may execute — the equivalence the backend tests pin);
+//! * [`run_volume`] — the 3-D generalization motivated by 3DPIFCM
+//!   (arXiv:2002.01985): the window is the 3x3x3 (26-neighbour) voxel
+//!   box, computed with a separable three-pass filter, after a slab-
+//!   parallel volumetric phase 1.
 
-use super::{defuzzify, FcmParams, FcmRun};
-use crate::image::GrayImage;
+use super::engine::volume::{VolumeOpts, VolumeRun};
+use super::{defuzzify, Backend, EngineOpts, FcmParams, FcmRun};
+use crate::image::{GrayImage, VoxelVolume};
 
 /// Spatial modulation parameters.
 #[derive(Clone, Copy, Debug)]
@@ -46,19 +61,118 @@ impl Default for SpatialParams {
 /// the modes — modulating from a random init lets the dominant
 /// background region capture multiple clusters on clean images.
 pub fn run(img: &GrayImage, params: &FcmParams, sp: &SpatialParams) -> FcmRun {
-    let n = img.len();
-    let c = params.clusters;
     let x: Vec<f32> = img.pixels.iter().map(|&p| p as f32).collect();
-    let w = vec![1.0f32; n];
+    let w = vec![1.0f32; img.len()];
 
-    // Phase 1: plain FCM (the paper's Algorithm 1).
+    // Phase 1: plain FCM (the paper's Algorithm 1); phase 2 is the
+    // shared modulation loop.
     let plain = super::sequential::run(&x, &w, params);
+    spatial_iterations(&x, &w, plain, params, sp, |u_new, c, h| {
+        spatial_function(u_new, img.width, img.height, c, sp.radius, h)
+    })
+}
+
+/// Spatial FCM over a flat feature vector — the `FcmBackend` seam.
+///
+/// Phase 1 is the **host-parallel engine** from the standard seeded,
+/// masked init (exactly the run `ParallelBackend::segment` performs,
+/// same `EngineOpts`), so with `sp.q == 0` the result is bit-for-bit
+/// the parallel engine's. With `q > 0`, spatial iterations continue on
+/// the `shape` grid; a vector with no usable shape (raw values, or a
+/// padded vector whose grid no longer covers it) falls back to a 1-D
+/// window along the vector.
+pub fn run_features(
+    x: &[f32],
+    w: &[f32],
+    shape: Option<(usize, usize)>,
+    params: &FcmParams,
+    sp: &SpatialParams,
+    opts: &EngineOpts,
+) -> FcmRun {
+    let u0 = super::init_membership_masked(params.clusters, w, params.seed);
+    let plain = super::engine::parallel::run_from(x, w, u0, params, opts);
+    if sp.q == 0.0 || x.is_empty() {
+        return plain;
+    }
+    let (gw, gh) = match shape {
+        Some((gw, gh)) if gw * gh == x.len() => (gw, gh),
+        _ => (x.len(), 1),
+    };
+    spatial_iterations(x, w, plain, params, sp, |u_new, c, h| {
+        spatial_function(u_new, gw, gh, c, sp.radius, h)
+    })
+}
+
+/// 3-D spatial FCM over a voxel volume: slab-parallel volumetric FCM to
+/// convergence, then spatial iterations with the (2r+1)^3 voxel window
+/// (r = 1 -> the 26-neighbourhood). `q = 0` returns the plain
+/// volumetric run bit-for-bit, mirroring [`run_features`].
+pub fn run_volume(
+    vol: &VoxelVolume,
+    params: &FcmParams,
+    sp: &SpatialParams,
+    vopts: &VolumeOpts,
+) -> VolumeRun {
+    let plain = super::engine::volume::run_volume(
+        vol,
+        params,
+        &VolumeOpts {
+            backend: Backend::Parallel,
+            ..*vopts
+        },
+    );
+    if sp.q == 0.0 || vol.is_empty() {
+        return plain;
+    }
+    let n = vol.len();
+    let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
+    let w = vec![1.0f32; n];
+    // Separable-filter scratch, allocated once for the whole phase-2
+    // loop (two n-length buffers ~ 57 MB on a full BrainWeb volume).
+    let mut tmp1 = vec![0f32; n];
+    let mut tmp2 = vec![0f32; n];
+    let run = spatial_iterations(&x, &w, plain.run, params, sp, |u_new, c, h| {
+        spatial_function_3d(
+            u_new,
+            vol.width,
+            vol.height,
+            vol.depth,
+            c,
+            sp.radius,
+            h,
+            &mut tmp1,
+            &mut tmp2,
+        );
+    });
+    VolumeRun {
+        run,
+        work_per_iter: n,
+    }
+}
+
+/// Phase 2 shared by [`run`], [`run_features`] and [`run_volume`]:
+/// continue from a converged plain run with the spatial modulation
+/// active until re-convergence. `spatial_fn(u_new, c, h)` fills `h`
+/// with the box-filtered memberships of `u_new` — the only dimensional
+/// part.
+fn spatial_iterations<F>(
+    x: &[f32],
+    w: &[f32],
+    plain: FcmRun,
+    params: &FcmParams,
+    sp: &SpatialParams,
+    mut spatial_fn: F,
+) -> FcmRun
+where
+    F: FnMut(&[f32], usize, &mut [f32]),
+{
+    let n = x.len();
+    let c = params.clusters;
+    let m = params.m as f64;
     let mut u = plain.u;
     let mut centers = plain.centers;
     let mut u_new = vec![0f32; c * n];
     let mut h = vec![0f32; c * n];
-    let m = params.m as f64;
-
     let mut jm_history = plain.jm_history;
     let mut final_delta = plain.final_delta;
     let mut iterations = plain.iterations;
@@ -66,11 +180,9 @@ pub fn run(img: &GrayImage, params: &FcmParams, sp: &SpatialParams) -> FcmRun {
 
     for _ in 0..params.max_iters {
         iterations += 1;
-        super::sequential::update_centers(&x, &w, &u, c, m, &mut centers);
-        super::sequential::update_memberships(&x, &w, &centers, m, &u, &mut u_new);
-        // Spatial modulation: h = box-filtered memberships, then
-        // u <- u^p h^q renormalized per pixel.
-        spatial_function(&u_new, img.width, img.height, c, sp.radius, &mut h);
+        super::sequential::update_centers(x, w, &u, c, m, &mut centers);
+        super::sequential::update_memberships(x, w, &centers, m, &u, &mut u_new);
+        spatial_fn(&u_new, c, &mut h);
         let mut delta = 0f32;
         for i in 0..n {
             let mut sum = 0f32;
@@ -89,7 +201,7 @@ pub fn run(img: &GrayImage, params: &FcmParams, sp: &SpatialParams) -> FcmRun {
             }
         }
         std::mem::swap(&mut u, &mut u_new);
-        jm_history.push(super::objective(&x, &w, &u, &centers, params.m));
+        jm_history.push(super::objective(x, w, &u, &centers, params.m));
         final_delta = delta;
         if delta < params.epsilon {
             converged = true;
@@ -144,6 +256,73 @@ fn spatial_function(u: &[f32], w: usize, hgt: usize, c: usize, radius: usize, ou
     }
 }
 
+/// 3-D spatial function: h_ij = sum of u_rj over the (2r+1)^3 voxel box
+/// around voxel i (r = 1 -> the 26-neighbourhood plus the voxel itself),
+/// as three separable passes — O(n·(2r+1)) per cluster per pass instead
+/// of O(n·(2r+1)³). `tmp1`/`tmp2` are n-length caller-owned scratch so
+/// the phase-2 loop does not reallocate them every iteration.
+#[allow(clippy::too_many_arguments)]
+fn spatial_function_3d(
+    u: &[f32],
+    w: usize,
+    hgt: usize,
+    dep: usize,
+    c: usize,
+    radius: usize,
+    out: &mut [f32],
+    tmp1: &mut [f32],
+    tmp2: &mut [f32],
+) {
+    let area = w * hgt;
+    let n = area * dep;
+    assert!(tmp1.len() >= n && tmp2.len() >= n, "scratch too small");
+    for j in 0..c {
+        let row = &u[j * n..(j + 1) * n];
+        // Pass 1: along x (columns).
+        for z in 0..dep {
+            for r in 0..hgt {
+                let base = z * area + r * w;
+                for col in 0..w {
+                    let lo = col.saturating_sub(radius);
+                    let hi = (col + radius).min(w - 1);
+                    let mut s = 0f32;
+                    for cc in lo..=hi {
+                        s += row[base + cc];
+                    }
+                    tmp1[base + col] = s;
+                }
+            }
+        }
+        // Pass 2: along y (rows).
+        for z in 0..dep {
+            for r in 0..hgt {
+                let lo = r.saturating_sub(radius);
+                let hi = (r + radius).min(hgt - 1);
+                for col in 0..w {
+                    let mut s = 0f32;
+                    for rr in lo..=hi {
+                        s += tmp1[z * area + rr * w + col];
+                    }
+                    tmp2[z * area + r * w + col] = s;
+                }
+            }
+        }
+        // Pass 3: along z (slices).
+        let orow = &mut out[j * n..(j + 1) * n];
+        for z in 0..dep {
+            let lo = z.saturating_sub(radius);
+            let hi = (z + radius).min(dep - 1);
+            for i in 0..area {
+                let mut s = 0f32;
+                for zz in lo..=hi {
+                    s += tmp2[zz * area + i];
+                }
+                orow[z * area + i] = s;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +340,90 @@ mod tests {
         spatial_function(&u, w, h, c, 1, &mut out);
         assert_eq!(out[1 * w + 1], 9.0); // interior: full 3x3
         assert_eq!(out[0], 4.0); // corner: 2x2
+    }
+
+    #[test]
+    fn spatial_function_3d_uniform_field() {
+        // Uniform memberships: interior h = 3^3 window volume.
+        let (w, h, d) = (5, 4, 4);
+        let c = 2;
+        let n = w * h * d;
+        let u = vec![1.0f32; c * n];
+        let mut out = vec![0f32; c * n];
+        let (mut t1, mut t2) = (vec![0f32; n], vec![0f32; n]);
+        spatial_function_3d(&u, w, h, d, c, 1, &mut out, &mut t1, &mut t2);
+        let interior = w * h + w + 1; // (z=1, y=1, x=1)
+        assert_eq!(out[interior], 27.0); // full 3x3x3 (26 neighbours + self)
+        assert_eq!(out[0], 8.0); // corner: 2x2x2
+        // Cluster 1's field is identical (uniform input).
+        assert_eq!(out[n + interior], 27.0);
+    }
+
+    #[test]
+    fn spatial_function_3d_single_slice_matches_2d() {
+        // depth = 1: the z pass is the identity, so 3-D == 2-D.
+        let (w, h) = (7, 6);
+        let c = 2;
+        let n = w * h;
+        let u: Vec<f32> = (0..c * n).map(|i| (i % 13) as f32 / 13.0).collect();
+        let mut out2 = vec![0f32; c * n];
+        let mut out3 = vec![0f32; c * n];
+        let (mut t1, mut t2) = (vec![0f32; n], vec![0f32; n]);
+        spatial_function(&u, w, h, c, 1, &mut out2);
+        spatial_function_3d(&u, w, h, 1, c, 1, &mut out3, &mut t1, &mut t2);
+        assert_eq!(out2, out3);
+    }
+
+    #[test]
+    fn run_features_q_zero_is_the_parallel_engine_bitwise() {
+        let s = generate_slice(&PhantomConfig::default());
+        let fv = crate::image::FeatureVector::from_image(&s.image);
+        let params = FcmParams::default();
+        let opts = EngineOpts::default();
+        let spat = run_features(
+            &fv.x,
+            &fv.w,
+            fv.shape,
+            &params,
+            &SpatialParams {
+                q: 0.0,
+                ..Default::default()
+            },
+            &opts,
+        );
+        let plain = crate::fcm::engine::run(&fv.x, &fv.w, &params, &opts);
+        assert_eq!(spat.centers, plain.centers);
+        assert_eq!(spat.u, plain.u);
+        assert_eq!(spat.labels, plain.labels);
+        assert_eq!(spat.iterations, plain.iterations);
+        assert_eq!(spat.jm_history, plain.jm_history);
+    }
+
+    #[test]
+    fn run_features_matches_reference_labels_on_clean_slice() {
+        // The engine-phase-1 variant and the sequential reference land on
+        // the same segmentation (trajectories differ only by summation
+        // order in phase 1).
+        let s = generate_slice(&PhantomConfig::default());
+        let fv = crate::image::FeatureVector::from_image(&s.image);
+        let params = FcmParams::default();
+        let mut a = run_features(
+            &fv.x,
+            &fv.w,
+            fv.shape,
+            &params,
+            &SpatialParams::default(),
+            &EngineOpts::default(),
+        );
+        let mut b = run(&s.image, &params, &SpatialParams::default());
+        canonical_relabel(&mut a);
+        canonical_relabel(&mut b);
+        let agree = a.labels.iter().zip(&b.labels).filter(|(x, y)| x == y).count();
+        assert!(
+            agree as f64 / a.labels.len() as f64 > 0.995,
+            "agreement only {agree}/{}",
+            a.labels.len()
+        );
     }
 
     #[test]

@@ -16,6 +16,12 @@ pub struct FeatureVector {
     pub w: Vec<f32>,
     /// Number of real (unpadded) pixels.
     pub n_real: usize,
+    /// 2-D grid shape `(width, height)` of the *real* pixels when the
+    /// vector came from an image (row-major, covering `x[..n_real]`).
+    /// `None` for raw value vectors. Engines that need spatial structure
+    /// (the spatial backend's neighbourhood window) read this; plain
+    /// intensity FCM ignores it.
+    pub shape: Option<(usize, usize)>,
 }
 
 impl FeatureVector {
@@ -27,6 +33,7 @@ impl FeatureVector {
             x,
             w: vec![1.0; n_real],
             n_real,
+            shape: Some((img.width, img.height)),
         }
     }
 
@@ -37,6 +44,7 @@ impl FeatureVector {
             x,
             w: vec![1.0; n_real],
             n_real,
+            shape: None,
         }
     }
 
@@ -44,7 +52,12 @@ impl FeatureVector {
     pub fn weighted(x: Vec<f32>, w: Vec<f32>) -> FeatureVector {
         assert_eq!(x.len(), w.len());
         let n_real = x.len();
-        FeatureVector { x, w, n_real }
+        FeatureVector {
+            x,
+            w,
+            n_real,
+            shape: None,
+        }
     }
 
     /// Current (possibly padded) length.
@@ -77,6 +90,8 @@ pub fn pad_to(fv: &FeatureVector, bucket: usize) -> FeatureVector {
         x,
         w,
         n_real: fv.n_real,
+        // Still describes the real region (padding appends after it).
+        shape: fv.shape,
     }
 }
 
@@ -92,6 +107,8 @@ mod tests {
         assert_eq!(fv.x, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(fv.n_real, 4);
         assert!(fv.w.iter().all(|&w| w == 1.0));
+        assert_eq!(fv.shape, Some((2, 2)));
+        assert_eq!(FeatureVector::from_values(vec![1.0]).shape, None);
     }
 
     #[test]

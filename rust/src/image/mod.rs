@@ -1,10 +1,12 @@
-//! Image substrate: grayscale images, PGM I/O, and the 2-D -> 1-D feature
-//! transform of paper Fig. 4.
+//! Image substrate: grayscale images, PGM I/O, voxel volumes, and the
+//! 2-D -> 1-D feature transform of paper Fig. 4.
 
 pub mod feature;
 pub mod pgm;
+pub mod volume;
 
 pub use feature::{pad_to, FeatureVector};
+pub use volume::VoxelVolume;
 
 /// An 8-bit grayscale image (the paper's input type: intensity images).
 #[derive(Clone, Debug, PartialEq)]

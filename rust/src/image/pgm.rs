@@ -76,8 +76,9 @@ pub fn parse(buf: &[u8]) -> Result<GrayImage> {
     Ok(GrayImage::from_pixels(width, height, pixels))
 }
 
-/// Next whitespace-delimited token, skipping `#` comment lines.
-fn next_token(buf: &[u8], pos: &mut usize) -> Option<String> {
+/// Next whitespace-delimited token, skipping `#` comment lines (shared
+/// with the RVOL volume header parser, which uses the same framing).
+pub(crate) fn next_token(buf: &[u8], pos: &mut usize) -> Option<String> {
     loop {
         while *pos < buf.len() && buf[*pos].is_ascii_whitespace() {
             *pos += 1;

@@ -1,0 +1,371 @@
+//! Voxel volumes — the 3-D analogue of [`GrayImage`].
+//!
+//! The clinical object behind the paper's evaluation is not a slice but
+//! the BrainWeb *volume* (181x217x181 voxels); the paper cuts individual
+//! axial slices out of it. [`VoxelVolume`] stores the whole field
+//! contiguously (z-major: slice z occupies `[z*W*H, (z+1)*W*H)`, each
+//! slice row-major exactly like [`GrayImage`]), which is what the 3-D
+//! engine (`fcm::engine::volume`) iterates over and what the slab
+//! decomposition partitions.
+//!
+//! Two interchange formats, both codec-free:
+//!
+//! * **PGM stack** — one P5 file per axial slice in a directory
+//!   (`slice_0000.pgm`, ...), viewable with any image tool;
+//! * **RVOL raw volume** — a single file with a tiny ASCII header
+//!   (`RVOL\n<width> <height> <depth>\n255\n`) followed by the raw
+//!   z-major bytes — the same header style as PGM, extended by a depth
+//!   field.
+
+use crate::image::{pgm, GrayImage};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// An 8-bit voxel field with shape (width, height, depth), z-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VoxelVolume {
+    pub width: usize,
+    pub height: usize,
+    pub depth: usize,
+    /// Contiguous voxels, length = width * height * depth.
+    pub voxels: Vec<u8>,
+}
+
+impl VoxelVolume {
+    pub fn new(width: usize, height: usize, depth: usize) -> VoxelVolume {
+        VoxelVolume {
+            width,
+            height,
+            depth,
+            voxels: vec![0; width * height * depth],
+        }
+    }
+
+    pub fn from_voxels(
+        width: usize,
+        height: usize,
+        depth: usize,
+        voxels: Vec<u8>,
+    ) -> VoxelVolume {
+        assert_eq!(voxels.len(), width * height * depth, "voxel buffer size mismatch");
+        VoxelVolume {
+            width,
+            height,
+            depth,
+            voxels,
+        }
+    }
+
+    /// Stack same-shaped slices into a volume (first slice = z 0).
+    /// Accepts any iterator of slice references so callers holding
+    /// slices inside larger structs (e.g. `PhantomVolume`) stack them
+    /// without cloning. Panics on zero slices or a shape mismatch.
+    pub fn from_slices<'a, I>(slices: I) -> VoxelVolume
+    where
+        I: IntoIterator<Item = &'a GrayImage>,
+    {
+        let mut iter = slices.into_iter();
+        let first = iter.next().expect("cannot stack zero slices");
+        let (w, h) = (first.width, first.height);
+        let mut voxels = Vec::with_capacity((iter.size_hint().0 + 1) * w * h);
+        voxels.extend_from_slice(&first.pixels);
+        let mut depth = 1;
+        for s in iter {
+            assert_eq!((s.width, s.height), (w, h), "slice shape mismatch");
+            voxels.extend_from_slice(&s.pixels);
+            depth += 1;
+        }
+        VoxelVolume {
+            width: w,
+            height: h,
+            depth,
+            voxels,
+        }
+    }
+
+    /// Render a label field (one class id per voxel) as a viewable
+    /// volume: class id -> evenly spread grey level (the 3-D analogue of
+    /// `LabelMap::to_image`).
+    pub fn from_labels(
+        width: usize,
+        height: usize,
+        depth: usize,
+        labels: &[u8],
+        n_classes: u8,
+    ) -> VoxelVolume {
+        assert_eq!(labels.len(), width * height * depth);
+        let scale = if n_classes <= 1 { 0 } else { 255 / (n_classes - 1) as u16 };
+        let voxels = labels.iter().map(|&l| (l as u16 * scale).min(255) as u8).collect();
+        VoxelVolume {
+            width,
+            height,
+            depth,
+            voxels,
+        }
+    }
+
+    /// Total voxels.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.voxels.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.voxels.is_empty()
+    }
+
+    /// Voxels per axial slice.
+    #[inline]
+    pub fn slice_area(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// z-major indexing: (z, row, col) -> z*W*H + row*W + col.
+    #[inline]
+    pub fn idx(&self, z: usize, row: usize, col: usize) -> usize {
+        debug_assert!(z < self.depth && row < self.height && col < self.width);
+        (z * self.height + row) * self.width + col
+    }
+
+    #[inline]
+    pub fn get(&self, z: usize, row: usize, col: usize) -> u8 {
+        self.voxels[self.idx(z, row, col)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, z: usize, row: usize, col: usize, v: u8) {
+        let i = self.idx(z, row, col);
+        self.voxels[i] = v;
+    }
+
+    /// Copy axial slice z out as an image.
+    pub fn slice(&self, z: usize) -> GrayImage {
+        let a = self.slice_area();
+        GrayImage::from_pixels(self.width, self.height, self.voxels[z * a..(z + 1) * a].to_vec())
+    }
+
+    /// Dataset size in bytes (1 byte/voxel).
+    pub fn size_bytes(&self) -> usize {
+        self.voxels.len()
+    }
+}
+
+/// Write a volume as one P5 PGM per slice (`slice_0000.pgm`, ...) under
+/// `dir` (created if missing). Returns the written paths in z order.
+pub fn save_pgm_stack(vol: &VoxelVolume, dir: &Path) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let mut paths = Vec::with_capacity(vol.depth);
+    for z in 0..vol.depth {
+        let p = dir.join(format!("slice_{z:04}.pgm"));
+        pgm::write(&vol.slice(z), &p)?;
+        paths.push(p);
+    }
+    Ok(paths)
+}
+
+/// Read every `*.pgm` under `dir` and stack them in z order. Ordering
+/// is by the trailing number in the file stem when one exists (so
+/// `slice_2.pgm` precedes `slice_10.pgm` even without zero-padding),
+/// with plain name order as the fallback; `save_pgm_stack`'s
+/// zero-padded names round-trip either way. All slices must share one
+/// shape.
+pub fn load_pgm_stack(dir: &Path) -> Result<VoxelVolume> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|e| e == "pgm").unwrap_or(false))
+        .collect();
+    if paths.is_empty() {
+        bail!("no .pgm slices in {}", dir.display());
+    }
+    paths.sort_by_cached_key(|p| {
+        let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+        let digits: String = stem
+            .chars()
+            .rev()
+            .take_while(|c| c.is_ascii_digit())
+            .collect::<Vec<char>>()
+            .into_iter()
+            .rev()
+            .collect();
+        // Numbered stems first, by number; un-numbered after, by name.
+        (digits.is_empty(), digits.parse::<u64>().unwrap_or(0), p.clone())
+    });
+    let mut slices = Vec::with_capacity(paths.len());
+    for p in &paths {
+        slices.push(pgm::read(p)?);
+    }
+    let (w, h) = (slices[0].width, slices[0].height);
+    for (p, s) in paths.iter().zip(&slices) {
+        if (s.width, s.height) != (w, h) {
+            bail!(
+                "slice {} is {}x{}, expected {w}x{h}",
+                p.display(),
+                s.width,
+                s.height
+            );
+        }
+    }
+    Ok(VoxelVolume::from_slices(&slices))
+}
+
+/// Write the RVOL raw-volume format.
+pub fn save_raw(vol: &VoxelVolume, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write_raw_to(vol, &mut f)
+}
+
+pub fn write_raw_to<W: Write>(vol: &VoxelVolume, w: &mut W) -> Result<()> {
+    write!(w, "RVOL\n{} {} {}\n255\n", vol.width, vol.height, vol.depth)?;
+    w.write_all(&vol.voxels)?;
+    Ok(())
+}
+
+/// Read the RVOL raw-volume format.
+pub fn load_raw(path: &Path) -> Result<VoxelVolume> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    parse_raw(&buf).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse_raw(buf: &[u8]) -> Result<VoxelVolume> {
+    let mut pos = 0;
+    let magic = pgm::next_token(buf, &mut pos).context("missing magic")?;
+    if magic != "RVOL" {
+        bail!("unsupported volume magic {magic:?} (expected RVOL)");
+    }
+    let dim = |name: &str, pos: &mut usize| -> Result<usize> {
+        pgm::next_token(buf, pos)
+            .with_context(|| format!("missing {name}"))?
+            .parse()
+            .with_context(|| format!("bad {name}"))
+    };
+    let width = dim("width", &mut pos)?;
+    let height = dim("height", &mut pos)?;
+    let depth = dim("depth", &mut pos)?;
+    let maxval: usize = dim("maxval", &mut pos)?;
+    if maxval != 255 {
+        bail!("only 8-bit RVOL supported (maxval {maxval})");
+    }
+    let n = width
+        .checked_mul(height)
+        .and_then(|a| a.checked_mul(depth))
+        .context("shape overflow")?;
+    // Exactly one whitespace byte separates the header from the raster,
+    // same framing rule as P5 PGM. `get` (not slicing) so a buffer that
+    // ends at the header is a parse error, not a panic.
+    let data = buf.get(pos + 1..).unwrap_or(&[]);
+    if data.len() < n {
+        bail!("RVOL raster truncated: need {n} bytes, have {}", data.len());
+    }
+    Ok(VoxelVolume::from_voxels(width, height, depth, data[..n].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> VoxelVolume {
+        // 3x2x2: two distinct slices.
+        VoxelVolume::from_voxels(3, 2, 2, vec![0, 10, 20, 30, 40, 50, 100, 110, 120, 130, 140, 150])
+    }
+
+    #[test]
+    fn indexing_is_z_major_row_major() {
+        let v = sample();
+        assert_eq!(v.idx(0, 0, 0), 0);
+        assert_eq!(v.idx(0, 1, 2), 5);
+        assert_eq!(v.idx(1, 0, 0), 6);
+        assert_eq!(v.get(1, 1, 1), 140);
+        assert_eq!(v.slice_area(), 6);
+        assert_eq!(v.len(), 12);
+    }
+
+    #[test]
+    fn slice_extraction_and_restacking_roundtrip() {
+        let v = sample();
+        let slices: Vec<GrayImage> = (0..v.depth).map(|z| v.slice(z)).collect();
+        assert_eq!(slices[0].pixels, &v.voxels[..6]);
+        assert_eq!(VoxelVolume::from_slices(&slices), v);
+    }
+
+    #[test]
+    fn raw_roundtrip_via_buffer() {
+        let v = sample();
+        let mut buf = Vec::new();
+        write_raw_to(&v, &mut buf).unwrap();
+        assert_eq!(parse_raw(&buf).unwrap(), v);
+    }
+
+    #[test]
+    fn raw_rejects_bad_magic_and_truncation() {
+        assert!(parse_raw(b"P5\n1 1 1\n255\nx").is_err());
+        assert!(parse_raw(b"RVOL\n4 4 4\n255\nabc").is_err());
+        assert!(parse_raw(b"RVOL\n1 1 1\n65535\nx").is_err());
+        // Buffer ending exactly at the header: error, not a panic.
+        assert!(parse_raw(b"RVOL\n1 1 1\n255").is_err());
+    }
+
+    #[test]
+    fn file_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("rvol_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let v = sample();
+        let raw = dir.join("v.rvol");
+        save_raw(&v, &raw).unwrap();
+        assert_eq!(load_raw(&raw).unwrap(), v);
+        let stack = dir.join("stack");
+        let paths = save_pgm_stack(&v, &stack).unwrap();
+        assert_eq!(paths.len(), 2);
+        assert_eq!(load_pgm_stack(&stack).unwrap(), v);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_stack_orders_unpadded_numeric_names_by_number() {
+        // slice_2 must precede slice_10 even though "10" < "2" lexically.
+        let dir = std::env::temp_dir().join(format!("rvol_nat_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (z, name) in [(1u8, "slice_1.pgm"), (2, "slice_2.pgm"), (10, "slice_10.pgm")] {
+            let img = GrayImage::from_pixels(2, 1, vec![z, z]);
+            pgm::write(&img, &dir.join(name)).unwrap();
+        }
+        let v = load_pgm_stack(&dir).unwrap();
+        assert_eq!(v.depth, 3);
+        assert_eq!(v.voxels, vec![1, 1, 2, 2, 10, 10]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_stack_rejects_mixed_shapes() {
+        let dir = std::env::temp_dir().join(format!("rvol_mixed_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        pgm::write(&GrayImage::new(3, 2), &dir.join("slice_0000.pgm")).unwrap();
+        pgm::write(&GrayImage::new(2, 2), &dir.join("slice_0001.pgm")).unwrap();
+        assert!(load_pgm_stack(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn label_rendering_spreads_grey_levels() {
+        let v = VoxelVolume::from_labels(2, 1, 2, &[0, 1, 2, 3], 4);
+        assert_eq!(v.voxels, vec![0, 85, 170, 255]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_voxels_size_checked() {
+        let _ = VoxelVolume::from_voxels(2, 2, 2, vec![0; 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mixed_shape_stack_panics() {
+        let _ = VoxelVolume::from_slices(&[GrayImage::new(2, 2), GrayImage::new(3, 2)]);
+    }
+}

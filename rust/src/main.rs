@@ -2,6 +2,7 @@
 //!
 //! Subcommands (see DESIGN.md section 5 for the experiment mapping):
 //!   segment         segment a PGM image (or a generated phantom slice)
+//!   segment-volume  segment a voxel volume (RVOL / PGM stack / phantom)
 //!   phantom         generate phantom slices / ground truth (Fig. 6)
 //!   serve           run the batching service on a synthetic workload
 //!   bench-table1    related-work comparison frame (E1)
@@ -17,8 +18,8 @@ use anyhow::{bail, Result};
 use repro::cli::Args;
 use repro::config::Config;
 use repro::coordinator::{Engine, Service};
-use repro::fcm::{canonical_relabel, FcmParams};
-use repro::image::{pgm, FeatureVector, LabelMap};
+use repro::fcm::FcmParams;
+use repro::image::{pgm, volume, FeatureVector, LabelMap, VoxelVolume};
 use repro::phantom::{self, PhantomConfig};
 use repro::report::experiments as exp;
 use repro::runtime::Registry;
@@ -79,10 +80,11 @@ fn resolve_engine(name: &str, cfg: &Config) -> Result<Engine> {
         "device" => Engine::Device,
         "device-ref" => Engine::DeviceRef,
         "brfcm" => Engine::BrFcm,
+        "spatial" => Engine::Spatial,
         host => match host.parse::<repro::fcm::Backend>() {
             Ok(b) => Engine::from(b),
             Err(_) => bail!(
-                "unknown engine {host:?} (auto|device|device-ref|brfcm or a host \
+                "unknown engine {host:?} (auto|device|device-ref|brfcm|spatial or a host \
                  backend: sequential|parallel|histogram)"
             ),
         },
@@ -93,6 +95,7 @@ fn run(args: &Args) -> Result<()> {
     let sub = args.subcommand.as_deref().unwrap_or("help");
     match sub {
         "segment" => segment(args),
+        "segment-volume" => segment_volume(args),
         "phantom" => phantom_cmd(args),
         "serve" => serve(args),
         "bench-table1" => {
@@ -194,34 +197,10 @@ fn segment(args: &Args) -> Result<()> {
         img
     };
 
-    let engine = match args.get_or("engine", "auto") {
-        "spatial" => {
-            // Spatial FCM runs outside the Engine enum (it needs 2-D
-            // structure, not a flat feature vector).
-            let t0 = std::time::Instant::now();
-            let mut run = repro::fcm::spatial::run(
-                &img,
-                &params,
-                &repro::fcm::spatial::SpatialParams::default(),
-            );
-            canonical_relabel(&mut run);
-            println!(
-                "engine=Spatial pixels={} iters={} converged={} wall={:.3}s centers={:?}",
-                img.len(), run.iterations, run.converged,
-                t0.elapsed().as_secs_f64(), run.centers
-            );
-            if let Some(gt) = gt {
-                let d = repro::eval::dice_per_class(&run.labels, &gt.labels, params.clusters as u8);
-                println!("DSC vs ground truth: {:?}", d.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>());
-            }
-            if let Some(out) = args.get("out") {
-                let lm = LabelMap::from_labels(img.width, img.height, run.labels.clone());
-                pgm::write(&lm.to_image(params.clusters as u8), Path::new(out))?;
-            }
-            return Ok(());
-        }
-        name => resolve_engine(name, &cfg)?,
-    };
+    // Spatial FCM is a first-class Engine since PR 3: the feature
+    // vector carries its 2-D shape, so it dispatches through the same
+    // FcmBackend seam as every other engine.
+    let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
 
     if args.flag("trace") {
         println!("[trace] phase 1: init membership (host, seed {})", params.seed);
@@ -265,6 +244,114 @@ fn segment(args: &Args) -> Result<()> {
         let lm = LabelMap::from_labels(img.width, img.height, run.labels.clone());
         pgm::write(&lm.to_image(params.clusters as u8), Path::new(out))?;
         println!("segmentation written to {out}");
+    }
+    Ok(())
+}
+
+/// `repro segment-volume [--input-raw v.rvol | --input-dir slices/ |
+/// --slices 41 --start 80 --step 1 --noise 4] [--engine ...]
+/// [--out-raw seg.rvol] [--out-dir segdir]`
+///
+/// Segments a whole voxel volume through `FcmBackend::segment_volume`:
+/// true-3D on the parallel (slab-decomposed), histogram (256-bin,
+/// voxel-count-independent iterations), and spatial (26-neighbour
+/// regularization) engines; per-slice fallback on the others. Phantom
+/// inputs also report the volume-level per-tissue DSC.
+fn segment_volume(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let params = FcmParams::from(&cfg.fcm);
+    let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
+
+    let (vol, truth): (VoxelVolume, Option<Vec<u8>>) = if let Some(p) = args.get("input-raw") {
+        (volume::load_raw(Path::new(p))?, None)
+    } else if let Some(d) = args.get("input-dir") {
+        (volume::load_pgm_stack(Path::new(d))?, None)
+    } else {
+        let start = args.get_usize("start", 80)?;
+        let slices = args.get_usize("slices", 41)?;
+        let step = args.get_usize("step", 1)?;
+        if slices == 0 || step == 0 {
+            bail!("--slices and --step must be >= 1");
+        }
+        // Exclusive end just past the LAST generated index, so e.g.
+        // start 80, 26 slices, step 4 (last index 180) stays valid.
+        let end = start + (slices - 1) * step + 1;
+        if end > 181 {
+            bail!(
+                "phantom range out of bounds: start {start} + {slices} slices * step {step} \
+                 runs past the 181-slice axis (last index {})",
+                end - 1
+            );
+        }
+        let noise: f32 = match args.get("noise") {
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--noise: bad float {v:?}"))?,
+            None => PhantomConfig::default().noise_sigma,
+        };
+        let pv = phantom::generate_volume(
+            &PhantomConfig {
+                noise_sigma: noise,
+                seed: cfg.fcm.seed,
+                ..PhantomConfig::default()
+            },
+            start,
+            end,
+            step,
+        );
+        let truth = pv.ground_truth_labels();
+        (pv.to_voxel_volume(), Some(truth))
+    };
+
+    println!(
+        "volume {}x{}x{} = {} voxels ({} KB)",
+        vol.width,
+        vol.height,
+        vol.depth,
+        vol.len(),
+        vol.size_bytes() / 1024
+    );
+
+    let registry = match engine {
+        Engine::Device | Engine::DeviceRef => Some(Registry::open(Path::new(&cfg.artifacts_dir))?),
+        _ => None,
+    };
+    let opts = repro::fcm::EngineOpts::from(&cfg.engine);
+    let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
+    let t0 = std::time::Instant::now();
+    let out = backend.segment_volume(&vol, &params)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "engine={engine:?} path={} work/iter={} iters={} converged={} wall={wall:.3}s ({:.0} kvox/s)",
+        if out.true_3d { "true-3d" } else { "slice-loop" },
+        out.work_per_iter,
+        out.iterations,
+        out.converged,
+        vol.len() as f64 / wall / 1000.0
+    );
+    println!("centers (ascending): {:?}", out.centers);
+    if let Some(truth) = truth {
+        let d = repro::eval::dice_per_class(&out.labels, &truth, params.clusters as u8);
+        println!(
+            "volume DSC vs ground truth: {:?}",
+            d.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>()
+        );
+    }
+    let seg = || {
+        VoxelVolume::from_labels(
+            vol.width,
+            vol.height,
+            vol.depth,
+            &out.labels,
+            params.clusters as u8,
+        )
+    };
+    if let Some(p) = args.get("out-raw") {
+        volume::save_raw(&seg(), Path::new(p))?;
+        println!("segmentation written to {p}");
+    }
+    if let Some(d) = args.get("out-dir") {
+        let paths = volume::save_pgm_stack(&seg(), Path::new(d))?;
+        println!("segmentation written to {d} ({} slices)", paths.len());
     }
     Ok(())
 }
@@ -382,8 +469,12 @@ USAGE: repro <subcommand> [options]
   segment        --input x.pgm | --slice 96
                  [--engine auto|device|device-ref|seq|parallel|histogram|brfcm|spatial]
                  [--skull-strip] [--out seg.pgm] [--trace]
+  segment-volume --input-raw v.rvol | --input-dir slices/ |
+                 --slices 41 --start 80 --step 1 --noise 4  (phantom volume)
+                 [--engine auto|parallel|histogram|spatial|seq|...]
+                 [--out-raw seg.rvol] [--out-dir segdir]
   phantom        --slice 96 [--ground-truth] [--with-skull] [--out dir]
-  serve          --jobs 32 [--engine auto|device|seq|parallel|histogram|brfcm]
+  serve          --jobs 32 [--engine auto|device|seq|parallel|histogram|brfcm|spatial]
                  [--workers N] [--batch true|false]
   bench-table1   [--runs 5]
   bench-table3   [--quick] [--sizes 20KB,100KB,1MB] [--runs 5]
@@ -406,4 +497,10 @@ config's host backend. Host engines are deterministic across thread
 counts (chunked fixed-order reductions) and run on a persistent worker
 pool sized by --engine_threads; service batches execute as ONE engine
 invocation (disable with --batch_execute false).
+
+segment-volume serves true-3D paths on parallel (Z-slab decomposition,
+bit-identical for any thread count / slab size), histogram (one 256-bin
+volume histogram; per-iteration cost independent of voxel count), and
+spatial (3x3x3 neighbourhood regularization — the noise-robust engine);
+other engines fall back to a per-slice loop. See README 'Volumes'.
 ";

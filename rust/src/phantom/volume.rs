@@ -6,6 +6,7 @@
 //! have a realistic substrate.
 
 use super::slice_gen::{generate_slice, PhantomConfig, PhantomSlice};
+use crate::image::VoxelVolume;
 
 /// A stack of axial slices with shared acquisition parameters.
 #[derive(Clone, Debug)]
@@ -49,18 +50,35 @@ impl PhantomVolume {
     }
 
     /// Volume-level DSC: per-class Dice over ALL voxels of the stack
-    /// (the clinically reported number; per-slice DSC is noisier at the
-    /// brain apex where regions are small).
+    /// (delegates to [`crate::eval::dice_per_class_stacked`], which
+    /// pools the counts without concatenating the maps).
     pub fn volume_dice(&self, predictions: &[Vec<u8>], n_classes: u8) -> Vec<f64> {
         assert_eq!(predictions.len(), self.slices.len());
-        let mut pred_all = Vec::with_capacity(self.voxels());
-        let mut truth_all = Vec::with_capacity(self.voxels());
-        for (s, p) in self.slices.iter().zip(predictions) {
-            assert_eq!(p.len(), s.ground_truth.labels.len());
-            pred_all.extend_from_slice(p);
-            truth_all.extend_from_slice(&s.ground_truth.labels);
+        let pred: Vec<&[u8]> = predictions.iter().map(|p| p.as_slice()).collect();
+        let truth: Vec<&[u8]> = self
+            .slices
+            .iter()
+            .map(|s| s.ground_truth.labels.as_slice())
+            .collect();
+        crate::eval::dice_per_class_stacked(&pred, &truth, n_classes)
+    }
+
+    /// Stack the slice images into a contiguous [`VoxelVolume`] — the
+    /// input form of the 3-D engine and the volume serving path. One
+    /// copy straight into the contiguous field (no per-slice clones).
+    pub fn to_voxel_volume(&self) -> VoxelVolume {
+        VoxelVolume::from_slices(self.slices.iter().map(|s| &s.image))
+    }
+
+    /// Flattened ground-truth labels, z-major — index-aligned with
+    /// [`PhantomVolume::to_voxel_volume`]'s voxels (volume-level DSC
+    /// against a 3-D segmentation).
+    pub fn ground_truth_labels(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.voxels());
+        for s in &self.slices {
+            out.extend_from_slice(&s.ground_truth.labels);
         }
-        crate::eval::dice_per_class(&pred_all, &truth_all, n_classes)
+        out
     }
 }
 
@@ -114,6 +132,22 @@ mod tests {
         for (cls, v) in d.iter().enumerate() {
             assert!(*v > 0.9, "class {cls}: volume DSC {v}");
         }
+    }
+
+    #[test]
+    fn voxel_volume_conversion_aligns_with_ground_truth() {
+        let v = generate_volume(&PhantomConfig::default(), 95, 101, 3);
+        let vol = v.to_voxel_volume();
+        assert_eq!((vol.width, vol.height, vol.depth), (181, 217, 2));
+        assert_eq!(vol.len(), v.voxels());
+        // Slice z of the voxel field is exactly slice z of the stack.
+        assert_eq!(vol.slice(1).pixels, v.slices[1].image.pixels);
+        let truth = v.ground_truth_labels();
+        assert_eq!(truth.len(), vol.len());
+        assert_eq!(&truth[..vol.slice_area()], &v.slices[0].ground_truth.labels[..]);
+        // Ground truth against itself scores 1.0 through the flat path.
+        let d = crate::eval::dice_per_class(&truth, &truth, 4);
+        assert!(d.iter().all(|&x| x == 1.0));
     }
 
     #[test]

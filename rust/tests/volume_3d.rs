@@ -1,0 +1,210 @@
+//! Integration suite for the volumetric subsystem (PR 3):
+//!
+//! * the acceptance gates — a >= 40-slice phantom volume segments
+//!   bit-identically across 1/2/8 threads, and the 3-D histogram path's
+//!   per-iteration work is 256 bins regardless of voxel count;
+//! * 3-D spatial regularization's noise robustness at the E11 collapse
+//!   point (phantom noise sigma = 12);
+//! * volume jobs end-to-end through the service (true-3D on the host
+//!   backends, labels aligned with the submitted voxel field).
+
+use repro::config::Config;
+use repro::coordinator::{backend_for, Engine, Service};
+use repro::eval::dice_per_class;
+use repro::fcm::engine::volume::{run_volume, VolumeOpts, BINS};
+use repro::fcm::{canonical_relabel, spatial, Backend, EngineOpts, FcmParams};
+use repro::phantom::{generate_volume, PhantomConfig, PhantomVolume};
+
+fn phantom_volume(width: usize, height: usize, start: usize, depth: usize, noise: f32) -> PhantomVolume {
+    generate_volume(
+        &PhantomConfig {
+            width,
+            height,
+            noise_sigma: noise,
+            ..PhantomConfig::default()
+        },
+        start,
+        start + depth,
+        1,
+    )
+}
+
+#[test]
+fn forty_slice_volume_bit_identical_across_threads() {
+    // Acceptance gate: >= 40 slices, 3-D segmentation identical to the
+    // last bit for 1, 2, and 8 threads (and across slab sizes).
+    let vol = phantom_volume(61, 73, 75, 41, 4.0).to_voxel_volume();
+    assert!(vol.depth >= 40);
+    let params = FcmParams {
+        epsilon: 0.0, // run exactly max_iters everywhere
+        max_iters: 10,
+        ..FcmParams::default()
+    };
+    let reference = run_volume(
+        &vol,
+        &params,
+        &VolumeOpts {
+            backend: Backend::Parallel,
+            threads: 1,
+            slab_slices: 4,
+        },
+    );
+    assert_eq!(reference.run.iterations, 10);
+    for (threads, slab) in [(2, 4), (8, 4), (8, 1), (8, 16)] {
+        let r = run_volume(
+            &vol,
+            &params,
+            &VolumeOpts {
+                backend: Backend::Parallel,
+                threads,
+                slab_slices: slab,
+            },
+        );
+        assert_eq!(r.run.centers, reference.run.centers, "t={threads} slab={slab}");
+        assert_eq!(r.run.u, reference.run.u, "t={threads} slab={slab}");
+        assert_eq!(r.run.labels, reference.run.labels, "t={threads} slab={slab}");
+        assert_eq!(r.run.jm_history, reference.run.jm_history, "t={threads} slab={slab}");
+    }
+}
+
+#[test]
+fn histogram_iteration_work_independent_of_voxel_count() {
+    // Acceptance gate: the 3-D histogram path's per-iteration work is
+    // the 256-bin table for a 2-slice and a 41-slice volume alike.
+    let params = FcmParams::default();
+    let small = phantom_volume(61, 73, 90, 2, 4.0).to_voxel_volume();
+    let large = phantom_volume(61, 73, 75, 41, 4.0).to_voxel_volume();
+    assert!(large.len() > 20 * small.len());
+    let o = VolumeOpts::with_backend(Backend::Histogram);
+    let a = run_volume(&small, &params, &o);
+    let b = run_volume(&large, &params, &o);
+    assert_eq!(a.work_per_iter, BINS);
+    assert_eq!(b.work_per_iter, BINS);
+    // The expansion is still per-voxel: labels cover the field.
+    assert_eq!(b.run.labels.len(), large.len());
+    assert!(b.run.iterations > 0);
+}
+
+#[test]
+fn spatial_3d_rescues_sigma12_noise() {
+    // E11's collapse case (fcm/spatial.rs): plain intensity FCM falls
+    // apart at sigma = 12. The 3-D spatial engine must do at least as
+    // well on mean CSF/GM/WM DSC — in practice clearly better, since the
+    // 26-neighbour window averages noise over adjacent slices too.
+    let pv = phantom_volume(121, 145, 93, 6, 12.0);
+    let vol = pv.to_voxel_volume();
+    let truth = pv.ground_truth_labels();
+    let params = FcmParams::default();
+    let vopts = VolumeOpts::default();
+
+    let mut plain = run_volume(&vol, &params, &vopts);
+    canonical_relabel(&mut plain.run);
+    let mut spat = spatial::run_volume(&vol, &params, &spatial::SpatialParams::default(), &vopts);
+    canonical_relabel(&mut spat.run);
+
+    let mean_tissue = |labels: &[u8]| {
+        let d = dice_per_class(labels, &truth, 4);
+        (d[1] + d[2] + d[3]) / 3.0
+    };
+    let d_plain = mean_tissue(&plain.run.labels);
+    let d_spat = mean_tissue(&spat.run.labels);
+    assert!(
+        d_spat + 1e-9 >= d_plain,
+        "3-D spatial mean tissue DSC {d_spat:.4} must not trail plain {d_plain:.4}"
+    );
+    // And it must actually rescue a meaningful share, as 2-D spatial
+    // does on single slices (fcm::spatial::tests).
+    assert!(
+        d_spat > d_plain + 0.02,
+        "3-D spatial {d_spat:.4} vs plain {d_plain:.4}: no rescue"
+    );
+}
+
+#[test]
+fn spatial_volume_q_zero_is_plain_volumetric_fcm_bitwise() {
+    let vol = phantom_volume(45, 55, 92, 4, 4.0).to_voxel_volume();
+    let params = FcmParams::default();
+    let vopts = VolumeOpts::default();
+    let plain = run_volume(&vol, &params, &vopts);
+    let spat = spatial::run_volume(
+        &vol,
+        &params,
+        &spatial::SpatialParams {
+            q: 0.0,
+            ..Default::default()
+        },
+        &vopts,
+    );
+    assert_eq!(spat.run.centers, plain.run.centers);
+    assert_eq!(spat.run.u, plain.run.u);
+    assert_eq!(spat.run.labels, plain.run.labels);
+    assert_eq!(spat.run.iterations, plain.run.iterations);
+}
+
+#[test]
+fn service_volume_jobs_match_direct_backend_calls() {
+    let pv = phantom_volume(45, 55, 92, 3, 4.0);
+    let vol = pv.to_voxel_volume();
+    let truth = pv.ground_truth_labels();
+    let cfg = Config::new();
+    let params = FcmParams::from(&cfg.fcm);
+    let service = Service::start(&cfg).unwrap();
+    let opts = EngineOpts::from(&cfg.engine);
+
+    for engine in [Engine::Parallel, Engine::Histogram, Engine::Spatial] {
+        let r = service
+            .submit_volume(vol.clone(), params, engine)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.engine, engine);
+        assert_eq!(r.labels.len(), vol.len(), "{engine:?}");
+        let direct = backend_for(engine, None, &opts)
+            .unwrap()
+            .segment_volume(&vol, &params)
+            .unwrap();
+        assert!(direct.true_3d, "{engine:?} must serve the true-3D path");
+        assert_eq!(r.labels, direct.labels, "{engine:?}");
+        assert_eq!(r.centers, direct.centers, "{engine:?}");
+        assert_eq!(r.iterations, direct.iterations, "{engine:?}");
+        // Sanity: the segmentation is anatomically plausible.
+        let d = dice_per_class(&r.labels, &truth, 4);
+        assert!(d[0] > 0.9, "{engine:?}: background DSC {:.3}", d[0]);
+    }
+
+    // The slice-loop fallback also serves volumes (sequential engine).
+    let r = service
+        .submit_volume(vol.clone(), params, Engine::Sequential)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.labels.len(), vol.len());
+
+    let snap = service.shutdown();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, 4);
+    // Each volume job executed as its own singleton batch.
+    assert!(snap.engine_stats(Engine::Parallel).unwrap().mean_batch_size <= 1.0 + 1e-9);
+}
+
+#[test]
+fn volume_roundtrips_through_rvol_and_pgm_stack() {
+    // The I/O formats preserve the exact field the engines consume.
+    let vol = phantom_volume(33, 41, 95, 3, 4.0).to_voxel_volume();
+    let dir = std::env::temp_dir().join(format!("vol3d_io_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let raw = dir.join("v.rvol");
+    repro::image::volume::save_raw(&vol, &raw).unwrap();
+    let vol2 = repro::image::volume::load_raw(&raw).unwrap();
+    assert_eq!(vol, vol2);
+    let stack = dir.join("slices");
+    repro::image::volume::save_pgm_stack(&vol, &stack).unwrap();
+    let vol3 = repro::image::volume::load_pgm_stack(&stack).unwrap();
+    assert_eq!(vol, vol3);
+    // Identical inputs -> identical segmentations.
+    let params = FcmParams::default();
+    let a = run_volume(&vol, &params, &VolumeOpts::default());
+    let b = run_volume(&vol3, &params, &VolumeOpts::default());
+    assert_eq!(a.run.labels, b.run.labels);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
