@@ -1,0 +1,242 @@
+//! Bench: out-of-core streaming execution — the PR-4 size sweep.
+//!
+//! Sweeps volume sizes over three ways of serving an RVOL file:
+//!   * mem-hist    — materialize the file, run the in-memory 3-D
+//!     histogram engine (the pre-PR-4 workflow);
+//!   * stream-hist — the truly out-of-core histogram path: two
+//!     streaming sweeps + bin-level iterations, resident memory
+//!     bounded by the tile;
+//!   * stream-slab — the tile-recompute slab path (re-reads the file
+//!     once per iteration; the price of out-of-core voxel-level FCM).
+//!
+//! Results (mean/p95, per-voxel throughput, peak resident bytes) go to
+//! BENCH_PR4.json at the repo root.
+//!
+//!   cargo bench --bench streaming
+//!   REPRO_BENCH_QUICK=1 cargo bench --bench streaming   # CI smoke
+//!
+//! Gates (on counters and bytes, not clocks):
+//!   * streamed labels byte-identical to the in-memory path at EVERY
+//!     size, for both streamed engines;
+//!   * stream-hist peak resident bytes identical across depths at a
+//!     fixed tile (bounded by the tile, not the volume).
+
+use repro::fcm::engine::stream::{run_streamed, StreamOpts, StreamRun};
+use repro::fcm::engine::volume::{run_volume, VolumeOpts};
+use repro::fcm::{canonical_relabel, Backend, FcmParams};
+use repro::harness::{bench, BenchResult, Opts};
+use repro::image::volume::stream::RvolReader;
+use repro::image::{volume, VoxelVolume};
+use repro::phantom::{generate_volume, PhantomConfig};
+use repro::report::{fmt_secs, Table};
+use std::path::{Path, PathBuf};
+
+struct SizeRow {
+    width: usize,
+    height: usize,
+    depth: usize,
+    voxels: usize,
+    mem_hist: BenchResult,
+    stream_hist: BenchResult,
+    stream_slab: BenchResult,
+    hist_peak_bytes: usize,
+    slab_peak_bytes: usize,
+    identical: bool,
+}
+
+fn make_rvol(dir: &Path, width: usize, height: usize, depth: usize) -> (PathBuf, VoxelVolume) {
+    let start = 90usize.min(181 - depth);
+    let vol = generate_volume(
+        &PhantomConfig {
+            width,
+            height,
+            ..PhantomConfig::default()
+        },
+        start,
+        start + depth,
+        1,
+    )
+    .to_voxel_volume();
+    let path = dir.join(format!("bench_{width}x{height}x{depth}.rvol"));
+    volume::save_raw(&vol, &path).unwrap();
+    (path, vol)
+}
+
+fn stream_once(
+    path: &Path,
+    params: &FcmParams,
+    backend: Backend,
+    tile: usize,
+) -> (Vec<u8>, StreamRun) {
+    let mut src = RvolReader::open(path).unwrap();
+    let mut sink = Vec::new();
+    let run = run_streamed(
+        &mut src,
+        &mut sink,
+        params,
+        &StreamOpts {
+            backend,
+            threads: 0,
+            tile_slices: tile,
+        },
+    )
+    .unwrap();
+    (sink, run)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("REPRO_BENCH_QUICK").is_ok();
+    let params = FcmParams::default();
+    let tile = 4usize;
+    let sizes: Vec<(usize, usize, usize)> = if quick {
+        vec![(91, 109, 10)]
+    } else {
+        vec![(91, 109, 10), (181, 217, 10), (181, 217, 40)]
+    };
+    let opts = Opts {
+        warmup: 1,
+        min_runs: 3,
+        max_runs: if quick { 3 } else { 5 },
+        max_seconds: 60.0,
+    };
+    let dir = std::env::temp_dir().join(format!("stream_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    println!("== out-of-core streaming: materialize+hist vs stream-hist vs stream-slab ==\n");
+    let mut t = Table::new([
+        "volume",
+        "voxels",
+        "mem-hist",
+        "stream-hist",
+        "stream-slab",
+        "hist peak KB",
+        "slab peak KB",
+        "identical",
+    ]);
+    let mut rows = Vec::new();
+    for &(w, h, d) in &sizes {
+        let (path, vol) = make_rvol(&dir, w, h, d);
+        let name = format!("{w}x{h}x{d}");
+
+        // Equivalence + metadata from one untimed run each.
+        let mut mem = run_volume(&vol, &params, &VolumeOpts::with_backend(Backend::Histogram));
+        canonical_relabel(&mut mem.run);
+        let (hist_labels, hist_run) = stream_once(&path, &params, Backend::Histogram, tile);
+        let (slab_labels, slab_run) = stream_once(&path, &params, Backend::Parallel, tile);
+        let mut mem_slab = run_volume(&vol, &params, &VolumeOpts::default());
+        canonical_relabel(&mut mem_slab.run);
+        let identical =
+            hist_labels == mem.run.labels && slab_labels == mem_slab.run.labels;
+
+        let mem_hist = bench(&format!("mem-hist-{name}"), &opts, || {
+            let v = volume::load_raw(&path).unwrap();
+            let _ = run_volume(&v, &params, &VolumeOpts::with_backend(Backend::Histogram));
+        });
+        let stream_hist = bench(&format!("stream-hist-{name}"), &opts, || {
+            let _ = stream_once(&path, &params, Backend::Histogram, tile);
+        });
+        let stream_slab = bench(&format!("stream-slab-{name}"), &opts, || {
+            let _ = stream_once(&path, &params, Backend::Parallel, tile);
+        });
+
+        t.row([
+            name,
+            vol.len().to_string(),
+            fmt_secs(mem_hist.mean()),
+            fmt_secs(stream_hist.mean()),
+            fmt_secs(stream_slab.mean()),
+            (hist_run.peak_resident_bytes / 1024).to_string(),
+            (slab_run.peak_resident_bytes / 1024).to_string(),
+            identical.to_string(),
+        ]);
+        rows.push(SizeRow {
+            width: w,
+            height: h,
+            depth: d,
+            voxels: vol.len(),
+            mem_hist,
+            stream_hist,
+            stream_slab,
+            hist_peak_bytes: hist_run.peak_resident_bytes,
+            slab_peak_bytes: slab_run.peak_resident_bytes,
+            identical,
+        });
+    }
+    t.print();
+
+    // Gate 1: byte identity at every size.
+    let identical = rows.iter().all(|r| r.identical);
+    println!(
+        "\nGATE streamed output byte-identical to in-memory at every size: {}",
+        if identical { "PASS" } else { "FAIL" }
+    );
+
+    // Gate 2: stream-hist peak resident bytes independent of depth at a
+    // fixed tile and resolution (the out-of-core claim, on a counter).
+    let peak_at = |depth: usize| {
+        let (path, _) = make_rvol(&dir, 91, 109, depth);
+        stream_once(&path, &params, Backend::Histogram, 2).1.peak_resident_bytes
+    };
+    let (p_a, p_b) = (peak_at(6), peak_at(48));
+    let bounded = p_a == p_b;
+    println!(
+        "GATE stream-hist peak resident bytes depth-independent: {} ({p_a} vs {p_b})",
+        if bounded { "PASS" } else { "FAIL" }
+    );
+
+    write_json(&rows, identical, bounded, quick)?;
+    std::fs::remove_dir_all(&dir).ok();
+    if !(identical && bounded) {
+        anyhow::bail!("streaming gates failed");
+    }
+    Ok(())
+}
+
+/// Record the sweep in BENCH_PR4.json at the repo root (hand-rolled
+/// JSON: the offline build has no serde).
+fn write_json(rows: &[SizeRow], identical: bool, bounded: bool, quick: bool) -> anyhow::Result<()> {
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::Path::new(&dir).join("../BENCH_PR4.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_PR4.json"),
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"pr\": 4,\n");
+    s.push_str("  \"bench\": \"streaming\",\n");
+    s.push_str("  \"status\": \"measured\",\n");
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"params\": {\"clusters\": 4, \"m\": 2.0, \"epsilon\": 0.005, \"seed\": 42, \"tile_slices\": 4},\n");
+    s.push_str(&format!(
+        "  \"gates\": {{\"byte_identical\": {identical}, \"peak_depth_independent\": {bounded}}},\n"
+    ));
+    s.push_str("  \"sizes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let path_json = |b: &BenchResult| {
+            format!(
+                "{{\"mean_s\": {:.6}, \"p95_s\": {:.6}, \"runs\": {}, \"mvox_per_s\": {:.3}}}",
+                b.mean(),
+                b.seconds.p95,
+                b.runs,
+                r.voxels as f64 / b.mean() / 1e6
+            )
+        };
+        s.push_str(&format!(
+            "    {{\"shape\": [{}, {}, {}], \"voxels\": {}, \"mem_hist\": {}, \"stream_hist\": {}, \
+             \"stream_slab\": {}, \"hist_peak_bytes\": {}, \"slab_peak_bytes\": {}}}{}\n",
+            r.width,
+            r.height,
+            r.depth,
+            r.voxels,
+            path_json(&r.mem_hist),
+            path_json(&r.stream_hist),
+            path_json(&r.stream_slab),
+            r.hist_peak_bytes,
+            r.slab_peak_bytes,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(&path, &s)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

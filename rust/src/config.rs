@@ -67,6 +67,10 @@ pub struct EngineConfig {
     /// changing it changes the fp rounding of the sigma sums (within
     /// tolerance), so it is a config knob, not an auto-tuned value.
     pub chunk: usize,
+    /// Slices per resident tile on the out-of-core volume path
+    /// (`segment-volume --stream`; `--tile-slices` overrides per run).
+    /// Memory budget only — results are identical for every value.
+    pub tile_slices: usize,
 }
 
 impl Default for EngineConfig {
@@ -75,6 +79,7 @@ impl Default for EngineConfig {
             backend: crate::fcm::Backend::Parallel,
             threads: 0,
             chunk: 4096,
+            tile_slices: 8,
         }
     }
 }
@@ -83,6 +88,9 @@ impl EngineConfig {
     pub fn validate(&self) -> Result<()> {
         if self.chunk == 0 {
             bail!("engine_chunk must be >= 1");
+        }
+        if self.tile_slices == 0 {
+            bail!("tile_slices must be >= 1");
         }
         Ok(())
     }
@@ -139,6 +147,7 @@ pub const KEYS: &[&str] = &[
     "backend",
     "engine_threads",
     "engine_chunk",
+    "tile_slices",
     "workers",
     "max_batch",
     "queue_depth",
@@ -198,6 +207,7 @@ impl Config {
             "backend" => self.engine.backend = parse(key, v)?,
             "engine_threads" => self.engine.threads = parse(key, v)?,
             "engine_chunk" => self.engine.chunk = parse(key, v)?,
+            "tile_slices" => self.engine.tile_slices = parse(key, v)?,
             "workers" => self.service.workers = parse(key, v)?,
             "max_batch" => self.service.max_batch = parse(key, v)?,
             "queue_depth" => self.service.queue_depth = parse(key, v)?,
@@ -290,13 +300,17 @@ mod tests {
 
     #[test]
     fn engine_keys_parse_and_validate() {
-        let c = Config::from_str("backend = histogram\nengine_threads = 4\nengine_chunk = 1024\n")
-            .unwrap();
+        let c = Config::from_str(
+            "backend = histogram\nengine_threads = 4\nengine_chunk = 1024\ntile_slices = 3\n",
+        )
+        .unwrap();
         assert_eq!(c.engine.backend, crate::fcm::Backend::Histogram);
         assert_eq!(c.engine.threads, 4);
         assert_eq!(c.engine.chunk, 1024);
+        assert_eq!(c.engine.tile_slices, 3);
         assert!(Config::from_str("backend = cuda\n").is_err());
         assert!(Config::from_str("engine_chunk = 0\n").is_err());
+        assert!(Config::from_str("tile_slices = 0\n").is_err());
         // Default: parallel, auto threads.
         let d = Config::new();
         assert_eq!(d.engine.backend, crate::fcm::Backend::Parallel);

@@ -21,8 +21,10 @@
 
 use super::job::Engine;
 use crate::fcm::engine::batch::BatchInput;
+use crate::fcm::engine::stream::{run_streamed, StreamOpts, StreamRun};
 use crate::fcm::engine::volume::{VolumeOpts, VolumeRun};
 use crate::fcm::{canonical_relabel, engine, spatial, Backend, EngineOpts, FcmParams, FcmRun};
+use crate::image::volume::stream::{materialize, LabelSink, VoxelSource};
 use crate::image::{FeatureVector, VoxelVolume};
 use crate::runtime::{DeviceStats, FcmExecutor, Registry};
 use anyhow::{anyhow, Result};
@@ -57,9 +59,53 @@ pub struct VolumeOutcome {
     pub work_per_iter: usize,
 }
 
+/// One served out-of-core volumetric segmentation: the labels streamed
+/// to the caller's sink (already canonical); this carries the metadata.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// Converged centers, ascending.
+    pub centers: Vec<f32>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Whether the out-of-core tile engine served the job (false = the
+    /// materialize-then-segment fallback of backends without a
+    /// streaming path).
+    pub streamed: bool,
+    pub work_per_iter: usize,
+    /// Voxels processed.
+    pub voxels: usize,
+    /// Peak bytes of voxel-proportional buffers resident at once (the
+    /// fallback reports the whole materialized volume).
+    pub peak_resident_bytes: usize,
+}
+
+impl From<StreamRun> for StreamOutcome {
+    fn from(run: StreamRun) -> StreamOutcome {
+        StreamOutcome {
+            centers: run.centers,
+            iterations: run.iterations,
+            converged: run.converged,
+            streamed: true,
+            work_per_iter: run.work_per_iter,
+            voxels: run.voxels,
+            peak_resident_bytes: run.peak_resident_bytes,
+        }
+    }
+}
+
 /// Canonicalize an engine-level volumetric run into a served outcome.
-fn finish_volume_run(mut vr: VolumeRun) -> VolumeOutcome {
+/// Masked voxels carry all-zero membership, so `defuzzify` gave them
+/// raw label 0 — re-pin the sentinel after the relabel, exactly as
+/// `finish_host_run` does for padded slice jobs.
+fn finish_volume_run(mut vr: VolumeRun, mask: Option<&[u8]>) -> VolumeOutcome {
     canonical_relabel(&mut vr.run);
+    if let Some(mask) = mask {
+        for (l, &mk) in vr.run.labels.iter_mut().zip(mask) {
+            if mk == 0 {
+                *l = 0;
+            }
+        }
+    }
     VolumeOutcome {
         labels: vr.run.labels,
         centers: vr.run.centers,
@@ -94,8 +140,22 @@ pub trait FcmBackend {
     /// Histogram, and Spatial override with the true-3D engine paths
     /// (slab decomposition / volume histogram / 3-D regularization).
     fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
+        // Masked voxels carry w = 0 into the per-slice features, so they
+        // stay out of the clustering here exactly as on the true-3D
+        // paths (the sentinel pinning below then matches finish_host_run).
+        let area = vol.slice_area();
         let fvs: Vec<FeatureVector> = (0..vol.depth)
-            .map(|z| FeatureVector::from_image(&vol.slice(z)))
+            .map(|z| {
+                let mut fv = FeatureVector::from_image(&vol.slice(z));
+                if let Some(mask) = &vol.mask {
+                    for (wi, &mk) in fv.w.iter_mut().zip(&mask[z * area..(z + 1) * area]) {
+                        if mk == 0 {
+                            *wi = 0.0;
+                        }
+                    }
+                }
+                fv
+            })
             .collect();
         let refs: Vec<&FeatureVector> = fvs.iter().collect();
         let mut labels = Vec::with_capacity(vol.len());
@@ -116,6 +176,13 @@ pub trait FcmBackend {
         for c in centers.iter_mut() {
             *c /= served.max(1) as f32;
         }
+        if let Some(mask) = &vol.mask {
+            for (l, &mk) in labels.iter_mut().zip(mask) {
+                if mk == 0 {
+                    *l = 0;
+                }
+            }
+        }
         Ok(VolumeOutcome {
             labels,
             centers,
@@ -123,6 +190,38 @@ pub trait FcmBackend {
             converged,
             true_3d: false,
             work_per_iter: vol.slice_area(),
+        })
+    }
+
+    /// Segment a tile-streamed volume: voxels in from a [`VoxelSource`]
+    /// (typically a file-backed `RvolReader` — the job carries a path,
+    /// not the field), canonical labels out to a [`LabelSink`], in z
+    /// order. The default **materializes** the source and serves it
+    /// through [`FcmBackend::segment_volume`] — correct for every
+    /// backend, but resident-memory-bound by the volume. Parallel and
+    /// Histogram override with the out-of-core tile engine
+    /// (`fcm::engine::stream`), whose resident set is bounded by
+    /// `tile_slices`, not the volume — and whose output is
+    /// byte-identical to this fallback (tested).
+    fn segment_volume_streamed(
+        &self,
+        src: &mut dyn VoxelSource,
+        sink: &mut dyn LabelSink,
+        params: &FcmParams,
+        _tile_slices: usize,
+    ) -> Result<StreamOutcome> {
+        let vol = materialize(src)?;
+        let resident = vol.size_bytes() + vol.mask.as_ref().map_or(0, |m| m.len());
+        let out = self.segment_volume(&vol, params)?;
+        sink.write_slab(&out.labels)?;
+        Ok(StreamOutcome {
+            centers: out.centers,
+            iterations: out.iterations,
+            converged: out.converged,
+            streamed: false,
+            work_per_iter: out.work_per_iter,
+            voxels: vol.len(),
+            peak_resident_bytes: resident + out.labels.len(),
         })
     }
 }
@@ -257,11 +356,32 @@ impl FcmBackend for ParallelBackend {
     /// True-3D path: slab-decomposed volumetric FCM on the persistent
     /// pool (bit-identical across thread counts and slab sizes).
     fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
-        Ok(finish_volume_run(engine::volume::run_volume(
-            vol,
+        Ok(finish_volume_run(
+            engine::volume::run_volume(vol, params, &volume_opts(&self.opts, Backend::Parallel)),
+            vol.mask.as_deref(),
+        ))
+    }
+
+    /// Out-of-core path: the tile-recompute slab engine — per-iteration
+    /// state is two center vectors, resident memory bounded by the tile.
+    fn segment_volume_streamed(
+        &self,
+        src: &mut dyn VoxelSource,
+        sink: &mut dyn LabelSink,
+        params: &FcmParams,
+        tile_slices: usize,
+    ) -> Result<StreamOutcome> {
+        Ok(run_streamed(
+            src,
+            sink,
             params,
-            &volume_opts(&self.opts, Backend::Parallel),
-        )))
+            &StreamOpts {
+                backend: Backend::Parallel,
+                threads: self.opts.threads,
+                tile_slices,
+            },
+        )?
+        .into())
     }
 }
 
@@ -294,11 +414,33 @@ impl FcmBackend for HistogramBackend {
     /// True-3D path: one 256-bin histogram over the whole volume —
     /// per-iteration cost independent of voxel count.
     fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
-        Ok(finish_volume_run(engine::volume::run_volume(
-            vol,
+        Ok(finish_volume_run(
+            engine::volume::run_volume(vol, params, &volume_opts(&self.opts, Backend::Histogram)),
+            vol.mask.as_deref(),
+        ))
+    }
+
+    /// Truly out-of-core path: one streaming binning sweep, bin-level
+    /// iterations, one streaming label sweep — resident memory bounded
+    /// by the tile for any volume size.
+    fn segment_volume_streamed(
+        &self,
+        src: &mut dyn VoxelSource,
+        sink: &mut dyn LabelSink,
+        params: &FcmParams,
+        tile_slices: usize,
+    ) -> Result<StreamOutcome> {
+        Ok(run_streamed(
+            src,
+            sink,
             params,
-            &volume_opts(&self.opts, Backend::Histogram),
-        )))
+            &StreamOpts {
+                backend: Backend::Histogram,
+                threads: self.opts.threads,
+                tile_slices,
+            },
+        )?
+        .into())
     }
 }
 
@@ -346,14 +488,13 @@ impl FcmBackend for SpatialBackend {
     }
 
     /// True-3D path: 26-neighbour spatial regularization after a
-    /// slab-parallel volumetric phase 1.
+    /// slab-parallel volumetric phase 1 (phase 2's box filter runs
+    /// slice-decomposed on the same pool).
     fn segment_volume(&self, vol: &VoxelVolume, params: &FcmParams) -> Result<VolumeOutcome> {
-        Ok(finish_volume_run(spatial::run_volume(
-            vol,
-            params,
-            &self.sp,
-            &volume_opts(&self.opts, Backend::Parallel),
-        )))
+        Ok(finish_volume_run(
+            spatial::run_volume(vol, params, &self.sp, &volume_opts(&self.opts, Backend::Parallel)),
+            vol.mask.as_deref(),
+        ))
     }
 }
 
@@ -654,6 +795,99 @@ mod tests {
         assert!(out.true_3d);
         assert_eq!(out.work_per_iter, crate::fcm::engine::volume::BINS);
         assert_eq!(out.labels.len(), vol.len());
+    }
+
+    #[test]
+    fn streamed_overrides_match_in_memory_segment_volume() {
+        // The serving contract of segment_volume_streamed: whatever
+        // lands in the sink is byte-identical to the in-memory path's
+        // canonical labels, and the override actually streams.
+        let vol = synth_volume(5);
+        let params = FcmParams::default();
+        let opts = EngineOpts::default();
+        let backends: Vec<Box<dyn FcmBackend>> = vec![
+            Box::new(ParallelBackend::new(&opts)),
+            Box::new(HistogramBackend::new(&opts)),
+        ];
+        for b in &backends {
+            let engine = b.engine();
+            let mem = b.segment_volume(&vol, &params).unwrap();
+            let mut src = vol.clone();
+            let mut sink = Vec::new();
+            let out = b
+                .segment_volume_streamed(&mut src, &mut sink, &params, 3)
+                .unwrap();
+            assert!(out.streamed, "{engine:?} must use the tile engine");
+            assert_eq!(sink, mem.labels, "{engine:?}");
+            assert_eq!(out.centers, mem.centers, "{engine:?}");
+            assert_eq!(out.iterations, mem.iterations, "{engine:?}");
+            assert_eq!(out.voxels, vol.len(), "{engine:?}");
+            assert!(
+                out.peak_resident_bytes < vol.size_bytes() * 40,
+                "{engine:?}: resident footprint not bounded"
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_default_materializes_for_backends_without_a_path() {
+        let vol = synth_volume(3);
+        let params = FcmParams::default();
+        let backend = SequentialBackend::new(&EngineOpts::default());
+        let mem = backend.segment_volume(&vol, &params).unwrap();
+        let mut src = vol.clone();
+        let mut sink = Vec::new();
+        let out = backend
+            .segment_volume_streamed(&mut src, &mut sink, &params, 4)
+            .unwrap();
+        assert!(!out.streamed, "no override: the fallback materializes");
+        assert_eq!(sink, mem.labels);
+        assert_eq!(out.centers, mem.centers);
+        assert!(out.peak_resident_bytes >= vol.size_bytes());
+    }
+
+    #[test]
+    fn masked_volume_outcomes_pin_the_sentinel_label() {
+        let base = synth_volume(3);
+        let mut mask = vec![1u8; base.len()];
+        for i in (0..base.len()).step_by(4) {
+            mask[i] = 0;
+        }
+        let vol = base.with_mask(mask.clone());
+        let params = FcmParams::default();
+        let opts = EngineOpts::default();
+        let backends: Vec<Box<dyn FcmBackend>> = vec![
+            Box::new(ParallelBackend::new(&opts)),
+            Box::new(HistogramBackend::new(&opts)),
+            Box::new(SpatialBackend::new(&opts)),
+            // Default slice-loop path (no 3-D override): same contract.
+            Box::new(SequentialBackend::new(&opts)),
+        ];
+        for b in &backends {
+            let out = b.segment_volume(&vol, &params).unwrap();
+            for (i, (&l, &mk)) in out.labels.iter().zip(&mask).enumerate() {
+                if mk == 0 {
+                    assert_eq!(l, 0, "{:?}: masked voxel {i}", b.engine());
+                }
+            }
+        }
+        // And on the default slice-loop path the mask keeps masked
+        // voxels OUT of the clustering, not just out of the labels: a
+        // volume whose masked voxels are scribbled over segments
+        // identically.
+        let mut scribbled = synth_volume(3);
+        for (v, &mk) in scribbled.voxels.iter_mut().zip(&mask) {
+            if mk == 0 {
+                *v = 250;
+            }
+        }
+        let seq = SequentialBackend::new(&opts);
+        let a = seq.segment_volume(&vol, &params).unwrap();
+        let b = seq
+            .segment_volume(&scribbled.with_mask(mask.clone()), &params)
+            .unwrap();
+        assert_eq!(a.labels, b.labels, "masked voxels leaked into the slice loop");
+        assert_eq!(a.centers, b.centers);
     }
 
     #[test]

@@ -92,15 +92,36 @@ impl From<crate::fcm::Backend> for Engine {
     }
 }
 
+/// A file-backed volume job: the queue carries **paths and tiling**,
+/// never the voxels — the worker streams tiles straight from `input`
+/// through [`crate::coordinator::FcmBackend::segment_volume_streamed`]
+/// and appends canonical labels to `output` (RVOL in, RVOL out), so a
+/// volume larger than RAM can ride the service queue.
+#[derive(Clone, Debug)]
+pub struct StreamVolumeJob {
+    /// RVOL file holding the voxel field.
+    pub input: std::path::PathBuf,
+    /// Optional sibling mask RVOL (0 = excluded voxel), same shape.
+    pub mask: Option<std::path::PathBuf>,
+    /// RVOL file the canonical labels are written to.
+    pub output: std::path::PathBuf,
+    /// Slices per resident tile (the job's memory budget).
+    pub tile_slices: usize,
+}
+
 /// A segmentation request. Slice jobs carry `features`; volume jobs
 /// carry `volume` (and an empty feature vector) and are served through
 /// [`crate::coordinator::FcmBackend::segment_volume`] as singleton
-/// batches — a volume is already the heavyweight unit of work.
+/// batches — a volume is already the heavyweight unit of work; streamed
+/// volume jobs carry `stream` (a [`StreamVolumeJob`]) instead and never
+/// materialize the field in the queue or the worker.
 pub struct SegmentJob {
     pub id: u64,
     pub features: FeatureVector,
     /// Present on volume jobs (`Service::submit_volume`).
     pub volume: Option<crate::image::VoxelVolume>,
+    /// Present on streamed volume jobs (`Service::submit_volume_streamed`).
+    pub stream: Option<StreamVolumeJob>,
     pub params: FcmParams,
     pub engine: Engine,
     pub submitted: Instant,
@@ -141,6 +162,9 @@ pub struct JobResult {
     pub worker: usize,
     /// Batch the job was grouped into.
     pub batch_id: u64,
+    /// Streamed volume jobs only: peak resident tile bytes of the run
+    /// (labels live in the job's output file, so `labels` is empty).
+    pub peak_resident_bytes: Option<usize>,
 }
 
 #[cfg(test)]
@@ -153,6 +177,7 @@ mod tests {
             id: 1,
             features: FeatureVector::from_values(vec![0.0; n]),
             volume: None,
+            stream: None,
             params: FcmParams::default(),
             engine: Engine::Device,
             submitted: Instant::now(),

@@ -23,6 +23,11 @@ pub struct Metrics {
     queue_wait_us: AtomicU64,
     service_us: AtomicU64,
     iterations: AtomicU64,
+    /// Streamed (out-of-core) volume runs served.
+    streamed_runs: AtomicU64,
+    /// High-water mark of peak-resident-tile-bytes across streamed runs
+    /// — the serving layer's bounded-memory evidence.
+    stream_peak_bytes: AtomicU64,
     per_engine: [EngineCounters; Engine::ALL.len()],
 }
 
@@ -51,6 +56,10 @@ pub struct Snapshot {
     pub mean_iterations: f64,
     /// Jobs per batch — the batching efficiency of the coordinator.
     pub mean_batch_size: f64,
+    /// Streamed (out-of-core) volume runs served.
+    pub streamed_runs: u64,
+    /// Largest peak-resident-tile-bytes any streamed run reported.
+    pub stream_peak_resident_bytes: u64,
     /// Per-engine batch size/latency (engines that served >= 1 batch).
     pub per_engine: Vec<EngineBatchStats>,
 }
@@ -83,6 +92,13 @@ impl Metrics {
 
     pub fn batch_formed(&self) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one streamed volume run and its peak resident tile bytes.
+    pub fn stream_run(&self, peak_resident_bytes: usize) {
+        self.streamed_runs.fetch_add(1, Ordering::Relaxed);
+        self.stream_peak_bytes
+            .fetch_max(peak_resident_bytes as u64, Ordering::Relaxed);
     }
 
     /// Record one executed batch: which engine served it, how many jobs
@@ -127,6 +143,8 @@ impl Metrics {
             mean_service_s: self.service_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
             mean_iterations: self.iterations.load(Ordering::Relaxed) as f64 / denom,
             mean_batch_size: completed as f64 / batches.max(1) as f64,
+            streamed_runs: self.streamed_runs.load(Ordering::Relaxed),
+            stream_peak_resident_bytes: self.stream_peak_bytes.load(Ordering::Relaxed),
             per_engine,
         }
     }
@@ -161,6 +179,19 @@ mod tests {
         assert_eq!(s.mean_service_s, 0.0);
         assert_eq!(s.mean_batch_size, 0.0);
         assert!(s.per_engine.is_empty());
+        assert_eq!(s.streamed_runs, 0);
+        assert_eq!(s.stream_peak_resident_bytes, 0);
+    }
+
+    #[test]
+    fn stream_runs_keep_the_high_water_mark() {
+        let m = Metrics::default();
+        m.stream_run(1024);
+        m.stream_run(4096);
+        m.stream_run(2048);
+        let s = m.snapshot();
+        assert_eq!(s.streamed_runs, 3);
+        assert_eq!(s.stream_peak_resident_bytes, 4096);
     }
 
     #[test]

@@ -9,8 +9,8 @@ pub mod metrics;
 pub mod queue;
 pub mod service;
 
-pub use backend::{backend_for, BackendRun, FcmBackend, VolumeOutcome};
-pub use job::{Engine, JobResult, SegmentJob};
+pub use backend::{backend_for, BackendRun, FcmBackend, StreamOutcome, VolumeOutcome};
+pub use job::{Engine, JobResult, SegmentJob, StreamVolumeJob};
 pub use metrics::{EngineBatchStats, Metrics, Snapshot};
 pub use queue::Queue;
 pub use service::{Service, Ticket};

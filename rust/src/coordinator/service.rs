@@ -18,6 +18,13 @@
 //! — the true-3D slab / histogram / spatial paths on the host backends,
 //! the per-slice fallback everywhere else.
 //!
+//! Streamed volume jobs ([`Service::submit_volume_streamed`]) go one
+//! step further: the job carries **paths, not voxels** (RVOL in, RVOL
+//! out, plus a tile budget), and the worker streams tiles through
+//! [`crate::coordinator::FcmBackend::segment_volume_streamed`] — so a
+//! volume larger than worker RAM is servable. The metrics track each
+//! run's peak resident tile bytes (`Snapshot::stream_peak_resident_bytes`).
+//!
 //! Batch compatibility = same [`Engine`], identical [`FcmParams`], and
 //! the same shape key (manifest bucket for device jobs — derived from
 //! the job's cluster count and flavor — exact feature length for host
@@ -25,11 +32,12 @@
 //! whole batch.
 
 use super::backend::{backend_for, BackendRun};
-use super::job::{Engine, JobResult, SegmentJob};
+use super::job::{Engine, JobResult, SegmentJob, StreamVolumeJob};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
 use crate::fcm::{EngineOpts, FcmParams};
+use crate::image::volume::stream::{RvolReader, RvolWriter, VoxelSource};
 use crate::image::{FeatureVector, GrayImage, VoxelVolume};
 use crate::runtime::Registry;
 use anyhow::{anyhow, Result};
@@ -127,6 +135,7 @@ impl Service {
             id,
             features,
             volume: None,
+            stream: None,
             params,
             engine,
             submitted: Instant::now(),
@@ -164,6 +173,39 @@ impl Service {
             id,
             features: FeatureVector::from_values(Vec::new()),
             volume: Some(vol),
+            stream: None,
+            params,
+            engine,
+            submitted: Instant::now(),
+            respond: tx,
+        };
+        self.metrics.job_submitted();
+        self.queue
+            .push(job)
+            .map_err(|_| anyhow!("service is shut down"))?;
+        Ok(Ticket { id, rx })
+    }
+
+    /// Submit a **file-backed** volume for out-of-core segmentation:
+    /// the job carries the input/output paths and the tile budget, not
+    /// the voxels — the worker streams tiles through
+    /// `FcmBackend::segment_volume_streamed` and writes canonical
+    /// labels to `output` as an RVOL. The returned result has empty
+    /// `labels` (they live in the file) and reports the run's peak
+    /// resident tile bytes, which the service metrics also track.
+    pub fn submit_volume_streamed(
+        &self,
+        spec: StreamVolumeJob,
+        params: FcmParams,
+        engine: Engine,
+    ) -> Result<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let job = SegmentJob {
+            id,
+            features: FeatureVector::from_values(Vec::new()),
+            volume: None,
+            stream: Some(spec),
             params,
             engine,
             submitted: Instant::now(),
@@ -231,8 +273,9 @@ fn form_batch(
     max_batch: usize,
     registry: Option<&Registry>,
 ) -> Vec<SegmentJob> {
-    // Volume jobs are singleton batches (module docs).
-    if first.volume.is_some() {
+    // Volume jobs — in-memory or streamed — are singleton batches
+    // (module docs).
+    if first.volume.is_some() || first.stream.is_some() {
         return vec![first];
     }
     let buckets = device_buckets(&first, registry);
@@ -243,6 +286,7 @@ fn form_batch(
     while batch.len() < max_batch {
         match queue.try_pop_matching(|j| {
             j.volume.is_none()
+                && j.stream.is_none()
                 && j.engine == engine
                 && j.params == params
                 && shape_key(j, &buckets) == key
@@ -287,6 +331,63 @@ fn serve_volume_job(
                 device: None,
                 worker: worker_id,
                 batch_id,
+                peak_resident_bytes: None,
+            };
+            let _ = job.respond.send(Ok(result));
+        }
+        Err(e) => {
+            metrics.job_failed();
+            let _ = job.respond.send(Err(e));
+        }
+    }
+}
+
+/// Serve one file-backed (streamed) volume job: open the RVOL source
+/// (and mask, when the job names one), stream canonical labels to the
+/// output RVOL through `FcmBackend::segment_volume_streamed`, and
+/// record the run's peak resident tile bytes in the metrics.
+fn serve_stream_job(
+    worker_id: usize,
+    job: SegmentJob,
+    registry: Option<&Registry>,
+    engine_opts: &EngineOpts,
+    metrics: &Metrics,
+    batch_id: u64,
+) {
+    let spec = job.stream.clone().expect("stream job");
+    let queue_wait_s = job.submitted.elapsed().as_secs_f64();
+    let outcome = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
+        let mut src = match &spec.mask {
+            Some(mask) => RvolReader::with_mask(&spec.input, mask)?,
+            None => RvolReader::open(&spec.input)?,
+        };
+        let (w, h, d) = (src.width(), src.height(), src.depth());
+        let mut sink = RvolWriter::create(&spec.output, w, h, d)?;
+        let t0 = Instant::now();
+        let out =
+            backend.segment_volume_streamed(&mut src, &mut sink, &job.params, spec.tile_slices)?;
+        sink.finish()?;
+        let wall = t0.elapsed().as_secs_f64();
+        metrics.batch_served(job.engine, 1, wall);
+        metrics.stream_run(out.peak_resident_bytes);
+        Ok((out, wall))
+    });
+    match outcome {
+        Ok((out, service_s)) => {
+            metrics.job_completed(queue_wait_s, service_s, out.iterations);
+            let result = JobResult {
+                id: job.id,
+                labels: Vec::new(),
+                centers: out.centers,
+                iterations: out.iterations,
+                converged: out.converged,
+                engine: job.engine,
+                queue_wait_s,
+                service_s,
+                device: None,
+                worker: worker_id,
+                batch_id,
+                peak_resident_bytes: Some(out.peak_resident_bytes),
             };
             let _ = job.respond.send(Ok(result));
         }
@@ -323,6 +424,19 @@ fn worker_loop(
         if batch[0].volume.is_some() {
             let job = batch.pop().expect("singleton volume batch");
             serve_volume_job(
+                worker_id,
+                job,
+                registry.as_ref(),
+                &engine_opts,
+                &metrics,
+                batch_id,
+            );
+            continue;
+        }
+        // Streamed (file-backed) volume jobs likewise.
+        if batch[0].stream.is_some() {
+            let job = batch.pop().expect("singleton stream batch");
+            serve_stream_job(
                 worker_id,
                 job,
                 registry.as_ref(),
@@ -396,6 +510,7 @@ fn worker_loop(
                         device,
                         worker: worker_id,
                         batch_id,
+                        peak_resident_bytes: None,
                     };
                     let _ = job.respond.send(Ok(result));
                 }
@@ -418,6 +533,7 @@ mod tests {
             id: 0,
             features: FeatureVector::from_values(vec![0.0; n]),
             volume: None,
+            stream: None,
             params,
             engine,
             submitted: Instant::now(),
@@ -431,6 +547,26 @@ mod tests {
             id: 0,
             features: FeatureVector::from_values(Vec::new()),
             volume: Some(VoxelVolume::new(4, 4, 2)),
+            stream: None,
+            params,
+            engine,
+            submitted: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    fn stream_job(engine: Engine, params: FcmParams) -> SegmentJob {
+        let (tx, _rx) = mpsc::channel();
+        SegmentJob {
+            id: 0,
+            features: FeatureVector::from_values(Vec::new()),
+            volume: None,
+            stream: Some(StreamVolumeJob {
+                input: std::path::PathBuf::from("in.rvol"),
+                mask: None,
+                output: std::path::PathBuf::from("out.rvol"),
+                tile_slices: 4,
+            }),
             params,
             engine,
             submitted: Instant::now(),
@@ -516,6 +652,27 @@ mod tests {
         assert_eq!(batch.len(), 2, "first + the queued slice job");
         assert!(batch.iter().all(|j| j.volume.is_none()));
         assert_eq!(q.len(), 1, "the volume job stays queued");
+    }
+
+    #[test]
+    fn stream_jobs_form_singleton_batches() {
+        let q: Queue<SegmentJob> = Queue::bounded(16);
+        assert!(q.push(job(Engine::Histogram, 0, FcmParams::default())).is_ok());
+        assert!(q.push(stream_job(Engine::Histogram, FcmParams::default())).is_ok());
+        let batch = form_batch(
+            &q,
+            stream_job(Engine::Histogram, FcmParams::default()),
+            8,
+            None,
+        );
+        assert_eq!(batch.len(), 1);
+        assert!(batch[0].stream.is_some());
+        assert_eq!(q.len(), 2, "queued jobs stay put");
+        // And a slice batch never swallows a queued stream job.
+        let batch = form_batch(&q, job(Engine::Histogram, 0, FcmParams::default()), 8, None);
+        assert_eq!(batch.len(), 2, "first + the queued slice job");
+        assert!(batch.iter().all(|j| j.stream.is_none()));
+        assert_eq!(q.len(), 1, "the stream job stays queued");
     }
 
     #[test]

@@ -156,6 +156,29 @@ pub fn fused_chunk(
     part
 }
 
+/// Recompute the membership values a fused pass at `centers` would
+/// store, without keeping its partial — the out-of-core engine's u_old
+/// reconstruction (`engine::stream`): FCM memberships are a pure
+/// function of (x, w, centers), so the previous iteration's matrix
+/// never needs to stay resident. Arithmetic identity is guaranteed by
+/// construction: this *is* [`fused_chunk`] (whose `u_old` input feeds
+/// only the delta) fed an all-zero `u_old` and stripped of its partial.
+/// `zeros` is caller scratch holding at least `c * rows[0].len()` zero
+/// f32s, so the hot loop never reallocates it.
+pub fn recompute_memberships(
+    x: &[f32],
+    w: &[f32],
+    centers: &[f32],
+    m: f64,
+    zeros: &[f32],
+    rows: &mut [&mut [f32]],
+) {
+    let len = rows[0].len();
+    debug_assert!(zeros.len() >= centers.len() * len, "zero scratch too small");
+    debug_assert!(zeros.iter().all(|&z| z == 0.0), "scratch must stay zero");
+    let _ = fused_chunk(x, w, &zeros[..centers.len() * len], len, centers, m, 0, rows);
+}
+
 /// Sigma sums of Equation 3 over one chunk of an existing membership
 /// matrix (used once at startup to get centers_0 from u_0; iterations
 /// after that get their center sums for free from the fused pass).
@@ -314,6 +337,28 @@ mod tests {
                 assert_eq!(u_new[j * n + i], 0.0, "padding gained membership");
             }
         }
+    }
+
+    #[test]
+    fn recompute_matches_fused_chunk_values() {
+        let (x, w) = two_mode(777, 12);
+        let n = x.len();
+        let c = 2;
+        let u_old = init_membership(c, n, 6);
+        let mut centers = vec![0f32; c];
+        sequential::update_centers(&x, &w, &u_old, c, 2.0, &mut centers);
+        let mut u_fused = vec![0f32; c * n];
+        {
+            let mut rows: Vec<&mut [f32]> = u_fused.chunks_mut(n).collect();
+            let _ = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
+        }
+        let zeros = vec![0f32; c * n];
+        let mut u_re = vec![0f32; c * n];
+        {
+            let mut rows: Vec<&mut [f32]> = u_re.chunks_mut(n).collect();
+            recompute_memberships(&x, &w, &centers, 2.0, &zeros, &mut rows);
+        }
+        assert_eq!(u_re, u_fused, "recomputed memberships must be bit-identical");
     }
 
     #[test]

@@ -28,7 +28,11 @@
 //!   results bit-identical to per-image runs;
 //! * [`volume`] — volumetric (3-D) FCM: Z-slab decomposition onto the
 //!   same pool with per-slice fixed-order reductions, plus the 3-D
-//!   histogram fast path (O(256·c²) per iteration for any voxel count).
+//!   histogram fast path (O(256·c²) per iteration for any voxel count);
+//! * [`stream`] — out-of-core volumetric FCM over the
+//!   `image::volume::stream::VoxelSource` tile abstraction: fields
+//!   larger than RAM stream through in bounded memory, bit-identical
+//!   to the in-memory volume paths for every tile size.
 
 pub mod batch;
 pub mod fused;
@@ -36,6 +40,7 @@ pub mod histogram;
 pub mod parallel;
 pub mod pool;
 pub mod reduce;
+pub mod stream;
 pub mod volume;
 
 use crate::fcm::{FcmParams, FcmRun};

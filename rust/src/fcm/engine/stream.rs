@@ -1,0 +1,635 @@
+//! Out-of-core volumetric FCM — the engine client of the
+//! [`VoxelSource`] tile abstraction.
+//!
+//! The in-memory engines assume the whole field is one resident slice;
+//! this module inverts that: a pass *pulls* fixed-size z-major tiles
+//! from a source and keeps only per-slice reduction leaves between
+//! tiles, so a field larger than RAM streams through in bounded memory.
+//! Both host volume paths exist in streamed form, and both are
+//! **bit-identical** to their in-memory counterparts for every tile
+//! size and thread count (pinned by `tests/streaming.rs`):
+//!
+//! * **Histogram (truly out-of-core).** One streaming sweep builds the
+//!   exact integer 256-bin histogram, the per-slice centers_1 leaves,
+//!   and the bin-level u_0 sums; iterations then run at O(256·c²) on
+//!   the resident bin table (`volume::bin_iterations` — the same loop
+//!   body as the in-memory path, shared so the two cannot drift); a
+//!   second sweep expands canonical labels through a 256-entry LUT
+//!   into the sink. Resident memory: one tile plus O(c·256) tables,
+//!   independent of depth.
+//! * **Tile-recompute slab path.** FCM memberships are a pure function
+//!   of (x, w, centers), so the previous iteration's c·n matrix never
+//!   needs to stay resident: each iteration re-reads the tiles and
+//!   reconstructs u_old from the previous centers
+//!   ([`super::fused::recompute_memberships`] — by construction the
+//!   same arithmetic that stored them), at the cost of one extra fused
+//!   evaluation per voxel per iteration and one full re-read of the
+//!   source per iteration. Iteration 1 replays the seeded u_0 stream
+//!   ([`crate::fcm::init_membership_tile`]) — tiles arrive in z order,
+//!   so one serial RNG reproduces the in-memory init exactly.
+//!
+//! Why results cannot depend on the tile size: tiles change only how
+//! much of the field is resident. The partial grid stays the axial
+//! slice and the reduction stays the fixed z-order tree — exactly the
+//! slab engine's invariant (DESIGN.md), with "slab" generalized from a
+//! scheduling group to a residency group. Slices within a tile are
+//! dispatched onto the persistent pool (slice z → lane z mod lanes),
+//! position-keyed like every other pass in this engine.
+//!
+//! Labels stream to a [`LabelSink`] already **canonical** (clusters
+//! relabeled by ascending center, masked voxels pinned to sentinel 0) —
+//! a sink cannot be rewritten after the fact, so the serving-layer
+//! contract is applied on the way out. [`StreamRun::centers`] is
+//! likewise ascending.
+
+use super::fused::{centers_chunk, fused_chunk, recompute_memberships, PassPartial};
+use super::pool::Pool;
+use super::reduce::tree_reduce;
+use super::volume::{bin_iterations, BINS};
+use super::Backend;
+use crate::fcm::{canonical_order, defuzzify, init_membership_tile, FcmParams};
+use crate::image::volume::stream::{tile_ranges, LabelSink, VoxelSource};
+use crate::util::Rng64;
+use anyhow::Result;
+use std::sync::Mutex;
+
+/// Out-of-core engine knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamOpts {
+    /// `Histogram` = the truly out-of-core 256-bin path; `Parallel` =
+    /// the tile-recompute slab path (`Sequential` runs the same path on
+    /// one lane). Results are bit-identical to the in-memory engine of
+    /// the same backend.
+    pub backend: Backend,
+    /// Pool lanes for the per-tile slice dispatch; 0 = all cores.
+    /// Results identical for every value.
+    pub threads: usize,
+    /// Slices per resident tile — the memory budget knob. Results
+    /// identical for every value.
+    pub tile_slices: usize,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        StreamOpts {
+            backend: Backend::Parallel,
+            threads: 0,
+            tile_slices: 8,
+        }
+    }
+}
+
+/// A finished streamed run. Labels went to the caller's sink (already
+/// canonical); this carries the run metadata.
+#[derive(Clone, Debug)]
+pub struct StreamRun {
+    /// Converged centers, ascending (canonical order — the same
+    /// permutation applied to the streamed labels).
+    pub centers: Vec<f32>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub final_delta: f32,
+    /// J_m per iteration — identical to the in-memory run's history.
+    pub jm_history: Vec<f64>,
+    /// Elements the fused update touches per iteration ([`BINS`] on the
+    /// histogram path, the voxel count on the tile path).
+    pub work_per_iter: usize,
+    /// Voxels processed (the source's full extent).
+    pub voxels: usize,
+    /// Peak bytes of voxel-proportional buffers resident at once — the
+    /// bounded-memory claim, measured from the actual allocations. A
+    /// pure function of (tile_slices, slice area, c), never of depth;
+    /// O(depth) reduction leaves (~80 B/slice) and O(c·256) bin tables
+    /// are bookkeeping outside this metric.
+    pub peak_resident_bytes: usize,
+}
+
+/// Run streamed volumetric FCM: tiles in from `src`, canonical labels
+/// out to `sink`, bounded resident memory. See the module docs for the
+/// equivalence contract.
+pub fn run_streamed(
+    src: &mut dyn VoxelSource,
+    sink: &mut dyn LabelSink,
+    params: &FcmParams,
+    opts: &StreamOpts,
+) -> Result<StreamRun> {
+    let c = params.clusters;
+    if src.is_empty() {
+        return Ok(StreamRun {
+            centers: vec![0.0; c],
+            iterations: 0,
+            converged: true,
+            final_delta: 0.0,
+            jm_history: Vec::new(),
+            work_per_iter: 0,
+            voxels: 0,
+            peak_resident_bytes: 0,
+        });
+    }
+    assert!(params.max_iters >= 1, "max_iters must be >= 1");
+    match opts.backend {
+        Backend::Histogram => hist_streamed(src, sink, params, opts),
+        Backend::Parallel | Backend::Sequential => tiles_streamed(src, sink, params, opts),
+    }
+}
+
+/// Read slices `[z0, z0+nz)` plus their mask and mirror them into the
+/// f32 feature/weight buffers the fused kernels consume.
+#[allow(clippy::too_many_arguments)]
+fn load_tile(
+    src: &mut dyn VoxelSource,
+    z0: usize,
+    nz: usize,
+    area: usize,
+    raw: &mut [u8],
+    mraw: &mut [u8],
+    x: &mut [f32],
+    w: &mut [f32],
+) -> Result<()> {
+    let k = nz * area;
+    src.read_slab(z0, nz, &mut raw[..k])?;
+    src.read_mask_slab(z0, nz, &mut mraw[..k])?;
+    for i in 0..k {
+        x[i] = raw[i] as f32;
+        w[i] = if mraw[i] > 0 { 1.0 } else { 0.0 };
+    }
+    Ok(())
+}
+
+/// The truly out-of-core 3-D histogram path (module docs).
+fn hist_streamed(
+    src: &mut dyn VoxelSource,
+    sink: &mut dyn LabelSink,
+    params: &FcmParams,
+    opts: &StreamOpts,
+) -> Result<StreamRun> {
+    let area = src.slice_area();
+    let depth = src.depth();
+    let n = area * depth;
+    let c = params.clusters;
+    let m = params.m as f64;
+    let t = opts.tile_slices.max(1).min(depth);
+    let tiles = tile_ranges(depth, t);
+
+    // The resident set: one raw/mask/label tile plus one slice's f32
+    // mirror and u_0 replay rows.
+    let mut raw = vec![0u8; t * area];
+    let mut mraw = vec![0u8; t * area];
+    let mut labels = vec![0u8; t * area];
+    let mut xs = vec![0f32; area];
+    let mut ws = vec![0f32; area];
+    let mut u0 = vec![0f32; c * area];
+    let peak_resident_bytes =
+        raw.len() + mraw.len() + labels.len() + 4 * (xs.len() + ws.len() + u0.len());
+
+    // Pass A — one streaming sweep in z order builds the exact integer
+    // counts, the per-slice centers_1 leaves, and the bin-level u_0
+    // sums. Each accumulator sees its additions in the same order as
+    // the in-memory path, so all three are bit-identical to it.
+    let mut counts = [0u64; BINS];
+    let mut bin_sums = vec![0f64; c * BINS];
+    let mut leaves: Vec<PassPartial> = Vec::with_capacity(depth);
+    let mut rng = Rng64::new(params.seed);
+    for &(z0, nz) in &tiles {
+        src.read_slab(z0, nz, &mut raw[..nz * area])?;
+        src.read_mask_slab(z0, nz, &mut mraw[..nz * area])?;
+        for s in 0..nz {
+            let rb = &raw[s * area..(s + 1) * area];
+            let mb = &mraw[s * area..(s + 1) * area];
+            for i in 0..area {
+                xs[i] = rb[i] as f32;
+                ws[i] = if mb[i] > 0 { 1.0 } else { 0.0 };
+            }
+            {
+                let mut rows: Vec<&mut [f32]> = u0.chunks_mut(area).collect();
+                init_membership_tile(&mut rng, &ws, &mut rows);
+            }
+            for (&v, &wi) in rb.iter().zip(&ws) {
+                if wi > 0.0 {
+                    counts[v as usize] += 1;
+                }
+            }
+            // No mask guard, matching the in-memory sums: masked rows
+            // of u_0 are all-zero, and x + 0.0 == x.
+            for j in 0..c {
+                let row = &u0[j * area..(j + 1) * area];
+                for (&v, &ui) in rb.iter().zip(row) {
+                    bin_sums[j * BINS + v as usize] += ui as f64;
+                }
+            }
+            leaves.push(centers_chunk(&xs, &ws, &u0, area, c, m, 0, area));
+        }
+    }
+    let total = tree_reduce(&leaves, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c));
+    let mut centers = vec![0f32; c];
+    total.centers(&mut centers);
+
+    // Bin-level state (O(c·256), resident by design) + the shared
+    // iteration loop.
+    let xb: Vec<f32> = (0..BINS).map(|v| v as f32).collect();
+    let wb: Vec<f32> = counts.iter().map(|&v| v as f32).collect();
+    let mut u_bin = vec![0f32; c * BINS];
+    for j in 0..c {
+        for b in 0..BINS {
+            if counts[b] > 0 {
+                u_bin[j * BINS + b] = (bin_sums[j * BINS + b] / counts[b] as f64) as f32;
+            }
+        }
+    }
+    let it = bin_iterations(&xb, &wb, &mut u_bin, &mut centers, params, m);
+
+    // Pass B — canonical labels through one 256-entry LUT.
+    let bin_labels = defuzzify(&u_bin, c, BINS);
+    let (order, rank) = canonical_order(&centers);
+    let mut lut = [0u8; BINS];
+    for (b, l) in lut.iter_mut().enumerate() {
+        *l = rank[bin_labels[b] as usize];
+    }
+    for &(z0, nz) in &tiles {
+        let k = nz * area;
+        src.read_slab(z0, nz, &mut raw[..k])?;
+        src.read_mask_slab(z0, nz, &mut mraw[..k])?;
+        for i in 0..k {
+            labels[i] = if mraw[i] > 0 { lut[raw[i] as usize] } else { 0 };
+        }
+        sink.write_slab(&labels[..k])?;
+    }
+
+    Ok(StreamRun {
+        centers: order.iter().map(|&o| centers[o]).collect(),
+        iterations: it.iterations,
+        converged: it.converged,
+        final_delta: it.final_delta,
+        jm_history: it.jm_history,
+        work_per_iter: BINS,
+        voxels: n,
+        peak_resident_bytes,
+    })
+}
+
+/// One slice's work unit on the tile path: (absolute z, slice-in-tile,
+/// that slice's u_prev chunk, its u_new chunk) — chunks are c·area,
+/// per-slice-major within the tile.
+type SliceTask<'a> = (usize, usize, &'a mut [f32], &'a mut [f32]);
+
+/// One fused pass over a tile's slices, dispatched onto the pool.
+/// Partials come back keyed by absolute slice index; the caller sorts
+/// and tree-reduces across all tiles, so scheduling never shows.
+#[allow(clippy::too_many_arguments)]
+fn tile_pass(
+    pool: &Pool,
+    z0: usize,
+    nz: usize,
+    area: usize,
+    c: usize,
+    m: f64,
+    recompute_prev: bool,
+    x: &[f32],
+    w: &[f32],
+    u_prev: &mut [f32],
+    u_new: &mut [f32],
+    zeros: &[f32],
+    prev_centers: &[f32],
+    centers: &[f32],
+) -> Vec<(usize, PassPartial)> {
+    let lanes = pool.lanes().min(nz).max(1);
+    let mut per_lane: Vec<Vec<SliceTask>> = (0..lanes).map(|_| Vec::new()).collect();
+    let prev_chunks = u_prev[..nz * c * area].chunks_mut(c * area);
+    let new_chunks = u_new[..nz * c * area].chunks_mut(c * area);
+    for (s, (pc, nc)) in prev_chunks.zip(new_chunks).enumerate() {
+        per_lane[s % lanes].push((z0 + s, s, pc, nc));
+    }
+    let slots: Vec<Mutex<(Vec<SliceTask>, Vec<(usize, PassPartial)>)>> = per_lane
+        .into_iter()
+        .map(|tasks| Mutex::new((tasks, Vec::new())))
+        .collect();
+    pool.run(|lane| {
+        if lane >= slots.len() {
+            return;
+        }
+        let mut slot = slots[lane].lock().unwrap();
+        let (tasks, out) = &mut *slot;
+        for (z, s, prev, new) in tasks.iter_mut() {
+            let xs = &x[*s * area..(*s + 1) * area];
+            let ws = &w[*s * area..(*s + 1) * area];
+            if recompute_prev {
+                let mut rows: Vec<&mut [f32]> = prev.chunks_mut(area).collect();
+                recompute_memberships(xs, ws, prev_centers, m, zeros, &mut rows);
+            }
+            let part = {
+                let mut rows: Vec<&mut [f32]> = new.chunks_mut(area).collect();
+                fused_chunk(xs, ws, &**prev, area, centers, m, 0, &mut rows)
+            };
+            out.push((*z, part));
+        }
+    });
+    slots
+        .into_iter()
+        .flat_map(|s| s.into_inner().unwrap().1)
+        .collect()
+}
+
+/// The tile-recompute slab path (module docs): per-iteration state is
+/// two center vectors; each iteration re-reads the source tile by tile.
+fn tiles_streamed(
+    src: &mut dyn VoxelSource,
+    sink: &mut dyn LabelSink,
+    params: &FcmParams,
+    opts: &StreamOpts,
+) -> Result<StreamRun> {
+    let area = src.slice_area();
+    let depth = src.depth();
+    let n = area * depth;
+    let c = params.clusters;
+    let m = params.m as f64;
+    let t = opts.tile_slices.max(1).min(depth);
+    let tiles = tile_ranges(depth, t);
+    let threads = if opts.backend == Backend::Sequential {
+        1
+    } else {
+        opts.threads
+    };
+    let pool = super::pool::global(threads);
+
+    // The resident set: one raw/mask/label tile, its f32 mirror, two
+    // per-slice-major membership tiles, and the recompute zero scratch.
+    let mut raw = vec![0u8; t * area];
+    let mut mraw = vec![0u8; t * area];
+    let mut labels = vec![0u8; t * area];
+    let mut x = vec![0f32; t * area];
+    let mut w = vec![0f32; t * area];
+    let mut u_prev = vec![0f32; c * t * area];
+    let mut u_new = vec![0f32; c * t * area];
+    let zeros = vec![0f32; c * area];
+    let peak_resident_bytes = raw.len()
+        + mraw.len()
+        + labels.len()
+        + 4 * (x.len() + w.len() + u_prev.len() + u_new.len() + zeros.len());
+
+    // Pass 0: centers_1 from the streamed u_0 — the same per-slice
+    // leaves and z-order tree as the in-memory `initial_centers` with
+    // chunk = area.
+    let mut leaves: Vec<PassPartial> = Vec::with_capacity(depth);
+    {
+        let mut rng = Rng64::new(params.seed);
+        for &(z0, nz) in &tiles {
+            load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
+            for s in 0..nz {
+                let xs = &x[s * area..(s + 1) * area];
+                let ws = &w[s * area..(s + 1) * area];
+                let chunk = &mut u_prev[s * c * area..(s + 1) * c * area];
+                {
+                    let mut rows: Vec<&mut [f32]> = chunk.chunks_mut(area).collect();
+                    init_membership_tile(&mut rng, ws, &mut rows);
+                }
+                leaves.push(centers_chunk(xs, ws, chunk, area, c, m, 0, area));
+            }
+        }
+    }
+    let total = tree_reduce(&leaves, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c));
+    let mut centers = vec![0f32; c];
+    total.centers(&mut centers);
+    drop(leaves);
+
+    let mut prev_centers = vec![0f32; c];
+    let mut jm_history = Vec::new();
+    let mut final_delta = f32::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for it in 0..params.max_iters {
+        iterations += 1;
+        let mut parts: Vec<(usize, PassPartial)> = Vec::with_capacity(depth);
+        // Iteration 1's u_old is u_0: replay the serial seeded stream
+        // (tiles arrive in z order, so one pass reproduces it exactly).
+        let mut rng = Rng64::new(params.seed);
+        for &(z0, nz) in &tiles {
+            load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
+            if it == 0 {
+                for s in 0..nz {
+                    let ws = &w[s * area..(s + 1) * area];
+                    let chunk = &mut u_prev[s * c * area..(s + 1) * c * area];
+                    let mut rows: Vec<&mut [f32]> = chunk.chunks_mut(area).collect();
+                    init_membership_tile(&mut rng, ws, &mut rows);
+                }
+            }
+            parts.extend(tile_pass(
+                &pool,
+                z0,
+                nz,
+                area,
+                c,
+                m,
+                it > 0,
+                &x,
+                &w,
+                &mut u_prev,
+                &mut u_new,
+                &zeros,
+                &prev_centers,
+                &centers,
+            ));
+        }
+        // Fixed z-order reduction across every tile's slices.
+        parts.sort_by_key(|&(z, _)| z);
+        let ordered: Vec<PassPartial> = parts.into_iter().map(|(_, p)| p).collect();
+        let total =
+            tree_reduce(&ordered, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c));
+        jm_history.push(total.jm);
+        final_delta = total.delta;
+        if total.delta < params.epsilon {
+            converged = true;
+            break;
+        }
+        // As everywhere: no center update on the final capped
+        // iteration. `prev_centers` keeps the centers the pass just
+        // used — next iteration's u_old recomputes from them.
+        if it + 1 < params.max_iters {
+            prev_centers.copy_from_slice(&centers);
+            total.centers(&mut centers);
+        }
+    }
+
+    // Labeling pass: the final memberships are a pure function of the
+    // final centers — recompute per tile, defuzzify, canonicalize, pin
+    // the masked sentinel, stream out.
+    let (order, rank) = canonical_order(&centers);
+    for &(z0, nz) in &tiles {
+        load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
+        for s in 0..nz {
+            let xs = &x[s * area..(s + 1) * area];
+            let ws = &w[s * area..(s + 1) * area];
+            let chunk = &mut u_new[s * c * area..(s + 1) * c * area];
+            {
+                let mut rows: Vec<&mut [f32]> = chunk.chunks_mut(area).collect();
+                recompute_memberships(xs, ws, &centers, m, &zeros, &mut rows);
+            }
+            let raw_labels = defuzzify(chunk, c, area);
+            let lt = &mut labels[s * area..(s + 1) * area];
+            for ((l, &rl), &wi) in lt.iter_mut().zip(&raw_labels).zip(ws) {
+                *l = if wi > 0.0 { rank[rl as usize] } else { 0 };
+            }
+        }
+        sink.write_slab(&labels[..nz * area])?;
+    }
+
+    Ok(StreamRun {
+        centers: order.iter().map(|&o| centers[o]).collect(),
+        iterations,
+        converged,
+        final_delta,
+        jm_history,
+        work_per_iter: n,
+        voxels: n,
+        peak_resident_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::volume::{run_volume, VolumeOpts};
+    use super::*;
+    use crate::fcm::canonical_relabel;
+    use crate::image::VoxelVolume;
+    use crate::phantom::{generate_volume, PhantomConfig};
+
+    fn small_volume(depth: usize) -> VoxelVolume {
+        generate_volume(
+            &PhantomConfig {
+                width: 45,
+                height: 53,
+                ..PhantomConfig::default()
+            },
+            90,
+            90 + depth,
+            1,
+        )
+        .to_voxel_volume()
+    }
+
+    fn streamed(vol: &VoxelVolume, params: &FcmParams, opts: &StreamOpts) -> (Vec<u8>, StreamRun) {
+        let mut src = vol.clone();
+        let mut sink = Vec::new();
+        let run = run_streamed(&mut src, &mut sink, params, opts).unwrap();
+        (sink, run)
+    }
+
+    #[test]
+    fn streamed_paths_match_in_memory_bitwise() {
+        let vol = small_volume(7);
+        let params = FcmParams {
+            max_iters: 30,
+            ..FcmParams::default()
+        };
+        for backend in [Backend::Parallel, Backend::Histogram] {
+            let mut mem = run_volume(&vol, &params, &VolumeOpts::with_backend(backend));
+            canonical_relabel(&mut mem.run);
+            for tile in [1usize, 3, 17] {
+                let (labels, run) = streamed(
+                    &vol,
+                    &params,
+                    &StreamOpts {
+                        backend,
+                        threads: 2,
+                        tile_slices: tile,
+                    },
+                );
+                assert_eq!(labels, mem.run.labels, "{backend:?} tile {tile}");
+                assert_eq!(run.centers, mem.run.centers, "{backend:?} tile {tile}");
+                assert_eq!(run.jm_history, mem.run.jm_history, "{backend:?} tile {tile}");
+                assert_eq!(run.iterations, mem.run.iterations);
+                assert_eq!(run.final_delta, mem.run.final_delta);
+                assert_eq!(run.converged, mem.run.converged);
+                assert_eq!(run.voxels, vol.len());
+            }
+        }
+    }
+
+    #[test]
+    fn capped_runs_match_in_memory() {
+        // epsilon unreachable: the no-update-on-final-iteration rule
+        // must hold on the streamed path too.
+        let vol = small_volume(4);
+        let params = FcmParams {
+            epsilon: 0.0,
+            max_iters: 6,
+            ..FcmParams::default()
+        };
+        for backend in [Backend::Parallel, Backend::Histogram] {
+            let mut mem = run_volume(&vol, &params, &VolumeOpts::with_backend(backend));
+            canonical_relabel(&mut mem.run);
+            let (labels, run) = streamed(
+                &vol,
+                &params,
+                &StreamOpts {
+                    backend,
+                    ..StreamOpts::default()
+                },
+            );
+            assert!(!run.converged, "{backend:?}");
+            assert_eq!(run.iterations, 6, "{backend:?}");
+            assert_eq!(labels, mem.run.labels, "{backend:?}");
+            assert_eq!(run.centers, mem.run.centers, "{backend:?}");
+            assert_eq!(run.jm_history, mem.run.jm_history, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn peak_resident_is_depth_independent() {
+        let shallow = small_volume(4);
+        let deep = small_volume(16);
+        let params = FcmParams::default();
+        for backend in [Backend::Histogram, Backend::Parallel] {
+            let opts = StreamOpts {
+                backend,
+                threads: 1,
+                tile_slices: 2,
+            };
+            let (_, a) = streamed(&shallow, &params, &opts);
+            let (_, b) = streamed(&deep, &params, &opts);
+            assert_eq!(
+                a.peak_resident_bytes, b.peak_resident_bytes,
+                "{backend:?}: peak must depend on the tile, not the volume"
+            );
+            assert!(b.peak_resident_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn masked_source_streams_sentinel_labels() {
+        let base = small_volume(4);
+        let mut mask = vec![1u8; base.len()];
+        for i in (0..base.len()).step_by(3) {
+            mask[i] = 0;
+        }
+        let vol = base.with_mask(mask.clone());
+        let params = FcmParams::default();
+        for backend in [Backend::Parallel, Backend::Histogram] {
+            let (labels, _) = streamed(
+                &vol,
+                &params,
+                &StreamOpts {
+                    backend,
+                    ..StreamOpts::default()
+                },
+            );
+            for (i, (&l, &mk)) in labels.iter().zip(&mask).enumerate() {
+                if mk == 0 {
+                    assert_eq!(l, 0, "{backend:?}: masked voxel {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_source_is_a_noop() {
+        let mut vol = VoxelVolume::new(0, 0, 0);
+        let mut sink = Vec::new();
+        let run =
+            run_streamed(&mut vol, &mut sink, &FcmParams::default(), &StreamOpts::default())
+                .unwrap();
+        assert!(run.converged);
+        assert!(sink.is_empty());
+        assert_eq!(run.peak_resident_bytes, 0);
+    }
+}

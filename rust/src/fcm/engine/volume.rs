@@ -39,6 +39,7 @@ use super::pool::Pool;
 use super::reduce::{chunk_ranges, tree_reduce};
 use super::Backend;
 use crate::fcm::{defuzzify, init_membership_masked, FcmParams, FcmRun};
+use crate::image::volume::stream::{materialize, VoxelSource};
 use crate::image::VoxelVolume;
 use std::sync::Mutex;
 
@@ -97,11 +98,26 @@ pub fn slab_ranges(depth: usize, slab_slices: usize) -> Vec<(usize, usize)> {
     chunk_ranges(depth, slab_slices.max(1))
 }
 
-/// Run volumetric FCM from a fresh (seeded) membership init.
+/// Run volumetric FCM from a fresh (seeded) membership init. Masked
+/// volumes (`vol.mask`) run with zero weight on excluded voxels, which
+/// keep all-zero membership and raw label 0.
 pub fn run_volume(vol: &VoxelVolume, params: &FcmParams, opts: &VolumeOpts) -> VolumeRun {
-    let w = vec![1.0f32; vol.len()];
+    let w = vol.weights();
     let u0 = init_membership_masked(params.clusters, &w, params.seed);
     run_volume_from(vol, u0, params, opts)
+}
+
+/// Run the in-memory engine over any [`VoxelSource`] by materializing
+/// it first — the thin-client entry that puts every engine behind the
+/// tile abstraction (file-backed and in-memory volumes arrive through
+/// the same trait). For execution in bounded memory use
+/// [`super::stream::run_streamed`] instead.
+pub fn run_volume_source(
+    src: &mut dyn VoxelSource,
+    params: &FcmParams,
+    opts: &VolumeOpts,
+) -> anyhow::Result<VolumeRun> {
+    Ok(run_volume(&materialize(src)?, params, opts))
 }
 
 /// Run volumetric FCM from a caller-supplied voxel-level initial
@@ -135,7 +151,7 @@ pub fn run_volume_from(
         Backend::Parallel => run_slab(vol, u0, params, opts),
         Backend::Sequential => {
             let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
-            let w = vec![1.0f32; n];
+            let w = vol.weights();
             VolumeRun {
                 run: crate::fcm::sequential::run_from(&x, &w, u0, params),
                 work_per_iter: n,
@@ -156,7 +172,7 @@ fn run_slab(
     let m = params.m as f64;
     let area = vol.slice_area();
     let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
-    let w = vec![1.0f32; n];
+    let w = vol.weights();
     let pool = super::pool::global(opts.threads);
 
     // centers_1 from u_0 over the same per-slice grid the iterations use.
@@ -269,11 +285,65 @@ fn slab_pass(
     tree_reduce(&ordered, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c))
 }
 
+/// Outcome of [`bin_iterations`].
+pub(crate) struct BinIterations {
+    pub iterations: usize,
+    pub converged: bool,
+    pub final_delta: f32,
+    pub jm_history: Vec<f64>,
+}
+
+/// The bin-granularity iteration loop shared by the in-memory and
+/// out-of-core 3-D histogram paths (`super::stream`): one fused chunk
+/// of [`BINS`] weighted "voxels" per iteration. `u_bin` holds the
+/// bin-level u_0 on entry and the final bin memberships on exit;
+/// `centers` is updated in place (and, as everywhere, not updated on
+/// the final capped iteration). One body, so the two paths cannot
+/// drift.
+pub(crate) fn bin_iterations(
+    xb: &[f32],
+    wb: &[f32],
+    u_bin: &mut Vec<f32>,
+    centers: &mut [f32],
+    params: &FcmParams,
+    m: f64,
+) -> BinIterations {
+    let mut u_bin_new = vec![0f32; u_bin.len()];
+    let mut jm_history = Vec::new();
+    let mut final_delta = f32::INFINITY;
+    let mut iterations = 0;
+    let mut converged = false;
+    for it in 0..params.max_iters {
+        iterations += 1;
+        let part = {
+            let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(BINS).collect();
+            fused_chunk(xb, wb, u_bin.as_slice(), BINS, centers, m, 0, &mut rows)
+        };
+        std::mem::swap(u_bin, &mut u_bin_new);
+        jm_history.push(part.jm);
+        final_delta = part.delta;
+        if part.delta < params.epsilon {
+            converged = true;
+            break;
+        }
+        if it + 1 < params.max_iters {
+            part.centers(centers);
+        }
+    }
+    BinIterations {
+        iterations,
+        converged,
+        final_delta,
+        jm_history,
+    }
+}
+
 /// The 3-D histogram path: brFCM over the whole volume's grey-level
 /// histogram. Mirrors `engine::histogram` (centers_1 from the full
 /// voxel-level u_0, bin-averaged u_0 for the first delta), with exact
 /// integer bin counts — voxels are u8 by construction, so there is no
-/// applicability check and no fallback.
+/// applicability check and no fallback. Masked voxels are excluded
+/// from the histogram and keep raw label 0.
 fn run_histogram(
     vol: &VoxelVolume,
     u0: Vec<f32>,
@@ -286,11 +356,15 @@ fn run_histogram(
     let c = params.clusters;
     let m = params.m as f64;
     let area = vol.slice_area();
+    let w = vol.weights();
 
-    // Exact integer counts: order-independent by construction.
+    // Exact integer counts over the real voxels: order-independent by
+    // construction.
     let mut counts = [0u64; BINS];
-    for &v in &vol.voxels {
-        counts[v as usize] += 1;
+    for (&v, &wi) in vol.voxels.iter().zip(&w) {
+        if wi > 0.0 {
+            counts[v as usize] += 1;
+        }
     }
     let xb: Vec<f32> = (0..BINS).map(|v| v as f32).collect();
     // One f64 -> f32 rounding per bin, as in the 2-D histogram engine
@@ -300,11 +374,11 @@ fn run_histogram(
     // centers_1 from the full voxel-level u_0 (trajectory parity with
     // the slab path), over the same per-slice grid.
     let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
-    let w = vec![1.0f32; n];
     let mut centers = initial_centers(&x, &w, &u0, c, m, area);
 
     // Bin-level u_0: count-averaged membership per grey level; only the
-    // first delta reads it.
+    // first delta reads it. Masked rows of u_0 are all-zero, so no mask
+    // guard is needed on the sums.
     let mut u_bin = vec![0f32; c * BINS];
     for j in 0..c {
         let mut sums = [0f64; BINS];
@@ -320,43 +394,27 @@ fn run_histogram(
     }
     drop(u0);
 
-    // Iterate at bin granularity: one fused chunk of 256 "voxels".
-    let mut u_bin_new = vec![0f32; c * BINS];
-    let mut jm_history = Vec::new();
-    let mut final_delta = f32::INFINITY;
-    let mut iterations = 0;
-    let mut converged = false;
-    for it in 0..params.max_iters {
-        iterations += 1;
-        let part = {
-            let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(BINS).collect();
-            fused_chunk(&xb, &wb, &u_bin, BINS, &centers, m, 0, &mut rows)
-        };
-        std::mem::swap(&mut u_bin, &mut u_bin_new);
-        jm_history.push(part.jm);
-        final_delta = part.delta;
-        if part.delta < params.epsilon {
-            converged = true;
-            break;
-        }
-        if it + 1 < params.max_iters {
-            part.centers(&mut centers);
-        }
-    }
+    // Iterate at bin granularity (shared loop; see bin_iterations).
+    let it = bin_iterations(&xb, &wb, &mut u_bin, &mut centers, params, m);
 
     // Labels through a 256-entry LUT; u stays bin-level (module docs).
     let bin_labels = defuzzify(&u_bin, c, BINS);
-    let labels: Vec<u8> = vol.voxels.iter().map(|&v| bin_labels[v as usize]).collect();
+    let labels: Vec<u8> = vol
+        .voxels
+        .iter()
+        .zip(&w)
+        .map(|(&v, &wi)| if wi > 0.0 { bin_labels[v as usize] } else { 0 })
+        .collect();
 
     VolumeRun {
         run: FcmRun {
             centers,
             u: u_bin,
             labels,
-            iterations,
-            final_delta,
-            jm_history,
-            converged,
+            iterations: it.iterations,
+            final_delta: it.final_delta,
+            jm_history: it.jm_history,
+            converged: it.converged,
         },
         work_per_iter: BINS,
     }
@@ -496,6 +554,42 @@ mod tests {
             "agreement only {agree}/{}",
             vol.len()
         );
+    }
+
+    #[test]
+    fn masked_voxels_get_zero_weight_and_raw_label_zero() {
+        // brFCM-style masked volume: excluded voxels must not shape the
+        // clustering (histogram counts, center sums) and keep raw label
+        // 0 on both host paths.
+        let base = small_volume(3);
+        let mut mask = vec![1u8; base.len()];
+        for i in (0..base.len()).step_by(5) {
+            mask[i] = 0;
+        }
+        let vol = base.clone().with_mask(mask.clone());
+        let params = FcmParams::default();
+        for backend in [Backend::Parallel, Backend::Histogram] {
+            let r = run_volume(&vol, &params, &VolumeOpts::with_backend(backend));
+            for (i, (&l, &mk)) in r.run.labels.iter().zip(&mask).enumerate() {
+                if mk == 0 {
+                    assert_eq!(l, 0, "{backend:?}: masked voxel {i} gained a label");
+                }
+            }
+        }
+        // The histogram path's bin weights exclude masked voxels: a
+        // volume whose masked voxels are rewritten to an arbitrary grey
+        // level segments identically (they are invisible to the run).
+        let mut scribbled = base.clone();
+        for (v, &mk) in scribbled.voxels.iter_mut().zip(&mask) {
+            if mk == 0 {
+                *v = 251;
+            }
+        }
+        let scribbled = scribbled.with_mask(mask.clone());
+        let a = run_volume(&vol, &params, &VolumeOpts::with_backend(Backend::Histogram));
+        let b = run_volume(&scribbled, &params, &VolumeOpts::with_backend(Backend::Histogram));
+        assert_eq!(a.run.centers, b.run.centers);
+        assert_eq!(a.run.labels, b.run.labels);
     }
 
     #[test]

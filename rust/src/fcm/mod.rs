@@ -111,6 +111,35 @@ pub fn init_membership(clusters: usize, n: usize, seed: u64) -> Vec<f32> {
     u
 }
 
+/// Streaming analogue of [`init_membership_masked`]: fill `rows` (one
+/// per-cluster slice of equal length) with the init values for the
+/// *next* `rows[0].len()` pixels of `rng`'s draw stream, masking with
+/// `w`. Consuming a volume tile by tile in z order from
+/// `Rng64::new(seed)` reproduces the in-memory init **bit for bit**
+/// (identical draw sequence, identical f32 normalization order) — the
+/// out-of-core engine's u_0 replay primitive; pinned by
+/// `tiled_init_replays_the_masked_init`.
+pub fn init_membership_tile(rng: &mut Rng64, w: &[f32], rows: &mut [&mut [f32]]) {
+    let len = w.len();
+    debug_assert!(rows.iter().all(|r| r.len() == len), "row length mismatch");
+    for i in 0..len {
+        let mut sum = 0f32;
+        for row in rows.iter_mut() {
+            let v = rng.uniform(0.01, 1.0);
+            row[i] = v;
+            sum += v;
+        }
+        for row in rows.iter_mut() {
+            row[i] /= sum;
+        }
+        if w[i] == 0.0 {
+            for row in rows.iter_mut() {
+                row[i] = 0.0;
+            }
+        }
+    }
+}
+
 /// Masked init: same stream, but pixels with w=0 get all-zero membership
 /// (bucket padding; see image::feature).
 pub fn init_membership_masked(clusters: usize, w: &[f32], seed: u64) -> Vec<f32> {
@@ -172,6 +201,22 @@ pub fn objective(x: &[f32], w: &[f32], u: &[f32], centers: &[f32], m: f32) -> f6
     jm
 }
 
+/// The canonical cluster permutation for a set of centers: `order` with
+/// `order[new] = old` (ascending centers, stable sort) and the label
+/// LUT `rank` with `rank[old] = new`. Single source of truth shared by
+/// [`canonical_relabel`] and the streamed engine's on-the-way-out
+/// relabel (`engine::stream`), so the two cannot drift — the streamed
+/// byte-identity guarantee depends on them agreeing bit for bit.
+pub fn canonical_order(centers: &[f32]) -> (Vec<usize>, Vec<u8>) {
+    let mut order: Vec<usize> = (0..centers.len()).collect();
+    order.sort_by(|&a, &b| centers[a].partial_cmp(&centers[b]).unwrap());
+    let mut rank = vec![0u8; centers.len()];
+    for (new, &old) in order.iter().enumerate() {
+        rank[old] = new as u8;
+    }
+    (order, rank)
+}
+
 /// Map cluster indices so centers are in ascending intensity order.
 ///
 /// FCM labels are permutation-symmetric across runs/seeds; canonicalizing
@@ -182,13 +227,7 @@ pub fn canonical_relabel(run: &mut FcmRun) {
     if c == 0 {
         return;
     }
-    let mut order: Vec<usize> = (0..c).collect();
-    order.sort_by(|&a, &b| run.centers[a].partial_cmp(&run.centers[b]).unwrap());
-    // rank[old_cluster] = new label
-    let mut rank = vec![0u8; c];
-    for (new, &old) in order.iter().enumerate() {
-        rank[old] = new as u8;
-    }
+    let (order, rank) = canonical_order(&run.centers);
     for l in run.labels.iter_mut() {
         *l = rank[*l as usize];
     }
@@ -239,6 +278,30 @@ mod tests {
     fn init_is_deterministic() {
         assert_eq!(init_membership(3, 50, 9), init_membership(3, 50, 9));
         assert_ne!(init_membership(3, 50, 9), init_membership(3, 50, 10));
+    }
+
+    #[test]
+    fn tiled_init_replays_the_masked_init() {
+        // Consuming the init tile by tile (ragged tiles included) from
+        // one rng stream reproduces the in-memory masked init exactly.
+        let (c, n) = (3, 103);
+        let w: Vec<f32> = (0..n).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+        let expect = init_membership_masked(c, &w, 42);
+        for tile in [1usize, 4, 50, 200] {
+            let mut rng = Rng64::new(42);
+            let mut got = vec![0f32; c * n];
+            let mut start = 0;
+            while start < n {
+                let len = tile.min(n - start);
+                let mut rows: Vec<&mut [f32]> = got
+                    .chunks_mut(n)
+                    .map(|row| &mut row[start..start + len])
+                    .collect();
+                init_membership_tile(&mut rng, &w[start..start + len], &mut rows);
+                start += len;
+            }
+            assert_eq!(got, expect, "tile {tile}");
+        }
     }
 
     #[test]

@@ -27,9 +27,11 @@
 //!   box, computed with a separable three-pass filter, after a slab-
 //!   parallel volumetric phase 1.
 
+use super::engine::pool::{self, Pool};
 use super::engine::volume::{VolumeOpts, VolumeRun};
 use super::{defuzzify, Backend, EngineOpts, FcmParams, FcmRun};
 use crate::image::{GrayImage, VoxelVolume};
+use std::sync::Mutex;
 
 /// Spatial modulation parameters.
 #[derive(Clone, Copy, Debug)]
@@ -126,13 +128,19 @@ pub fn run_volume(
     }
     let n = vol.len();
     let x: Vec<f32> = vol.voxels.iter().map(|&v| v as f32).collect();
-    let w = vec![1.0f32; n];
+    let w = vol.weights();
     // Separable-filter scratch, allocated once for the whole phase-2
     // loop (two n-length buffers ~ 57 MB on a full BrainWeb volume).
     let mut tmp1 = vec![0f32; n];
     let mut tmp2 = vec![0f32; n];
+    // Phase-2 slab parallelism: the box filter's three passes run on
+    // the same persistent pool as phase 1, slice-decomposed with
+    // position-keyed writes — bit-identical to the serial filter for
+    // any lane count (tested).
+    let filter_pool = pool::global(vopts.threads);
     let run = spatial_iterations(&x, &w, plain.run, params, sp, |u_new, c, h| {
         spatial_function_3d(
+            &filter_pool,
             u_new,
             vol.width,
             vol.height,
@@ -256,13 +264,48 @@ fn spatial_function(u: &[f32], w: usize, hgt: usize, c: usize, radius: usize, ou
     }
 }
 
+/// Dispatch one separable filter pass onto the pool, slice-decomposed:
+/// slice z of `out` goes to lane z mod lanes, and `f(z, slice)` fills
+/// it reading whatever shared input it closes over. Every output value
+/// is a pure position-keyed function of the input — no reductions — so
+/// the result is bit-identical to the serial loop for any lane count
+/// (the "fixed z-order join" is the pass barrier itself).
+fn pool_slices<F>(pool: &Pool, out: &mut [f32], area: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if area == 0 || out.is_empty() {
+        return;
+    }
+    let dep = out.len() / area;
+    let lanes = pool.lanes().min(dep).max(1);
+    let mut per_lane: Vec<Vec<(usize, &mut [f32])>> = (0..lanes).map(|_| Vec::new()).collect();
+    for (z, slice) in out.chunks_mut(area).enumerate() {
+        per_lane[z % lanes].push((z, slice));
+    }
+    let slots: Vec<Mutex<Vec<(usize, &mut [f32])>>> =
+        per_lane.into_iter().map(Mutex::new).collect();
+    pool.run(|lane| {
+        if lane >= slots.len() {
+            return;
+        }
+        let mut tasks = slots[lane].lock().unwrap();
+        for (z, slice) in tasks.iter_mut() {
+            f(*z, slice);
+        }
+    });
+}
+
 /// 3-D spatial function: h_ij = sum of u_rj over the (2r+1)^3 voxel box
 /// around voxel i (r = 1 -> the 26-neighbourhood plus the voxel itself),
 /// as three separable passes — O(n·(2r+1)) per cluster per pass instead
-/// of O(n·(2r+1)³). `tmp1`/`tmp2` are n-length caller-owned scratch so
-/// the phase-2 loop does not reallocate them every iteration.
+/// of O(n·(2r+1)³) — each slice-decomposed onto the persistent pool
+/// ([`pool_slices`]; phase 2 of the ROADMAP's slab-parallel spatial
+/// item). `tmp1`/`tmp2` are n-length caller-owned scratch so the
+/// phase-2 loop does not reallocate them every iteration.
 #[allow(clippy::too_many_arguments)]
 fn spatial_function_3d(
+    pool: &Pool,
     u: &[f32],
     w: usize,
     hgt: usize,
@@ -278,8 +321,8 @@ fn spatial_function_3d(
     assert!(tmp1.len() >= n && tmp2.len() >= n, "scratch too small");
     for j in 0..c {
         let row = &u[j * n..(j + 1) * n];
-        // Pass 1: along x (columns).
-        for z in 0..dep {
+        // Pass 1: along x (columns); slice z reads only its own region.
+        pool_slices(pool, &mut tmp1[..n], area, |z, slice| {
             for r in 0..hgt {
                 let base = z * area + r * w;
                 for col in 0..w {
@@ -289,36 +332,43 @@ fn spatial_function_3d(
                     for cc in lo..=hi {
                         s += row[base + cc];
                     }
-                    tmp1[base + col] = s;
+                    slice[r * w + col] = s;
                 }
             }
-        }
-        // Pass 2: along y (rows).
-        for z in 0..dep {
-            for r in 0..hgt {
-                let lo = r.saturating_sub(radius);
-                let hi = (r + radius).min(hgt - 1);
-                for col in 0..w {
-                    let mut s = 0f32;
-                    for rr in lo..=hi {
-                        s += tmp1[z * area + rr * w + col];
+        });
+        // Pass 2: along y (rows); still slice-local reads.
+        {
+            let tmp1 = &tmp1[..n];
+            pool_slices(pool, &mut tmp2[..n], area, |z, slice| {
+                for r in 0..hgt {
+                    let lo = r.saturating_sub(radius);
+                    let hi = (r + radius).min(hgt - 1);
+                    for col in 0..w {
+                        let mut s = 0f32;
+                        for rr in lo..=hi {
+                            s += tmp1[z * area + rr * w + col];
+                        }
+                        slice[r * w + col] = s;
                     }
-                    tmp2[z * area + r * w + col] = s;
                 }
-            }
+            });
         }
-        // Pass 3: along z (slices).
-        let orow = &mut out[j * n..(j + 1) * n];
-        for z in 0..dep {
-            let lo = z.saturating_sub(radius);
-            let hi = (z + radius).min(dep - 1);
-            for i in 0..area {
-                let mut s = 0f32;
-                for zz in lo..=hi {
-                    s += tmp2[zz * area + i];
+        // Pass 3: along z; slice z reads its neighbours in tmp2 (shared,
+        // immutable) and writes only its own slice of the output.
+        {
+            let tmp2 = &tmp2[..n];
+            let orow = &mut out[j * n..(j + 1) * n];
+            pool_slices(pool, orow, area, |z, slice| {
+                let lo = z.saturating_sub(radius);
+                let hi = (z + radius).min(dep - 1);
+                for (i, v) in slice.iter_mut().enumerate() {
+                    let mut s = 0f32;
+                    for zz in lo..=hi {
+                        s += tmp2[zz * area + i];
+                    }
+                    *v = s;
                 }
-                orow[z * area + i] = s;
-            }
+            });
         }
     }
 }
@@ -351,7 +401,8 @@ mod tests {
         let u = vec![1.0f32; c * n];
         let mut out = vec![0f32; c * n];
         let (mut t1, mut t2) = (vec![0f32; n], vec![0f32; n]);
-        spatial_function_3d(&u, w, h, d, c, 1, &mut out, &mut t1, &mut t2);
+        let pool = Pool::new(2);
+        spatial_function_3d(&pool, &u, w, h, d, c, 1, &mut out, &mut t1, &mut t2);
         let interior = w * h + w + 1; // (z=1, y=1, x=1)
         assert_eq!(out[interior], 27.0); // full 3x3x3 (26 neighbours + self)
         assert_eq!(out[0], 8.0); // corner: 2x2x2
@@ -370,8 +421,56 @@ mod tests {
         let mut out3 = vec![0f32; c * n];
         let (mut t1, mut t2) = (vec![0f32; n], vec![0f32; n]);
         spatial_function(&u, w, h, c, 1, &mut out2);
-        spatial_function_3d(&u, w, h, 1, c, 1, &mut out3, &mut t1, &mut t2);
+        spatial_function_3d(&Pool::new(3), &u, w, h, 1, c, 1, &mut out3, &mut t1, &mut t2);
         assert_eq!(out2, out3);
+    }
+
+    #[test]
+    fn spatial_function_3d_bit_identical_across_lane_counts() {
+        // The slab-parallel phase-2 contract: the pooled separable
+        // filter equals the single-lane run to the last bit, for ragged
+        // depths and every lane count.
+        let (w, h, d) = (9, 7, 5);
+        let c = 3;
+        let n = w * h * d;
+        let u: Vec<f32> = (0..c * n).map(|i| ((i * 31) % 97) as f32 / 97.0).collect();
+        let mut reference = vec![0f32; c * n];
+        let (mut t1, mut t2) = (vec![0f32; n], vec![0f32; n]);
+        spatial_function_3d(&Pool::new(1), &u, w, h, d, c, 1, &mut reference, &mut t1, &mut t2);
+        for lanes in [2usize, 4, 8] {
+            let mut out = vec![0f32; c * n];
+            spatial_function_3d(&Pool::new(lanes), &u, w, h, d, c, 1, &mut out, &mut t1, &mut t2);
+            assert_eq!(out, reference, "lanes {lanes}");
+        }
+    }
+
+    #[test]
+    fn run_volume_spatial_bit_identical_across_threads() {
+        // End-to-end phase-2 determinism: the pooled filter keeps the
+        // whole spatial volume run thread-invariant.
+        let vol = crate::phantom::generate_volume(
+            &PhantomConfig {
+                width: 41,
+                height: 47,
+                ..PhantomConfig::default()
+            },
+            92,
+            96,
+            1,
+        )
+        .to_voxel_volume();
+        let params = FcmParams::default();
+        let vopts = |threads| VolumeOpts {
+            backend: Backend::Parallel,
+            threads,
+            slab_slices: 2,
+        };
+        let a = run_volume(&vol, &params, &SpatialParams::default(), &vopts(1));
+        let b = run_volume(&vol, &params, &SpatialParams::default(), &vopts(8));
+        assert_eq!(a.run.u, b.run.u);
+        assert_eq!(a.run.labels, b.run.labels);
+        assert_eq!(a.run.centers, b.run.centers);
+        assert_eq!(a.run.jm_history, b.run.jm_history);
     }
 
     #[test]

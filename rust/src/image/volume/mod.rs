@@ -16,6 +16,14 @@
 //!   (`RVOL\n<width> <height> <depth>\n255\n`) followed by the raw
 //!   z-major bytes — the same header style as PGM, extended by a depth
 //!   field.
+//!
+//! For fields larger than RAM, [`stream`] provides the tile-streaming
+//! counterpart: the [`stream::VoxelSource`] trait yields fixed-size
+//! z-major slabs on demand ([`stream::RvolReader`] reads them straight
+//! from an RVOL file), and in-memory volumes implement the same trait —
+//! one data path for both residencies.
+
+pub mod stream;
 
 use crate::image::{pgm, GrayImage};
 use anyhow::{bail, Context, Result};
@@ -30,6 +38,13 @@ pub struct VoxelVolume {
     pub depth: usize,
     /// Contiguous voxels, length = width * height * depth.
     pub voxels: Vec<u8>,
+    /// Optional brFCM-style inclusion mask (e.g. skull stripping), same
+    /// z-major layout: 0 = excluded voxel, anything else = real. Masked
+    /// voxels carry zero weight through every engine and keep the
+    /// sentinel label 0 in served segmentations. `None` = all real.
+    /// The RVOL/PGM formats serialize only the voxels; a mask travels
+    /// as a sibling RVOL file ([`stream::RvolReader::with_mask`]).
+    pub mask: Option<Vec<u8>>,
 }
 
 impl VoxelVolume {
@@ -39,6 +54,7 @@ impl VoxelVolume {
             height,
             depth,
             voxels: vec![0; width * height * depth],
+            mask: None,
         }
     }
 
@@ -54,6 +70,24 @@ impl VoxelVolume {
             height,
             depth,
             voxels,
+            mask: None,
+        }
+    }
+
+    /// Attach an inclusion mask (0 = excluded voxel). Panics on a size
+    /// mismatch. Builder-style so literal test volumes stay one-liners.
+    pub fn with_mask(mut self, mask: Vec<u8>) -> VoxelVolume {
+        assert_eq!(mask.len(), self.voxels.len(), "mask size mismatch");
+        self.mask = Some(mask);
+        self
+    }
+
+    /// Engine weights for this volume: 1.0 per real voxel, 0.0 per
+    /// masked-out voxel — the `w` vector every FCM path consumes.
+    pub fn weights(&self) -> Vec<f32> {
+        match &self.mask {
+            None => vec![1.0; self.voxels.len()],
+            Some(mask) => mask.iter().map(|&m| if m > 0 { 1.0 } else { 0.0 }).collect(),
         }
     }
 
@@ -81,6 +115,7 @@ impl VoxelVolume {
             height: h,
             depth,
             voxels,
+            mask: None,
         }
     }
 
@@ -102,6 +137,7 @@ impl VoxelVolume {
             height,
             depth,
             voxels,
+            mask: None,
         }
     }
 
@@ -233,7 +269,22 @@ pub fn load_raw(path: &Path) -> Result<VoxelVolume> {
     parse_raw(&buf).with_context(|| format!("parsing {}", path.display()))
 }
 
-pub fn parse_raw(buf: &[u8]) -> Result<VoxelVolume> {
+/// A parsed RVOL header: shape, voxel count, and where the raster
+/// starts. One parser serves both the in-memory loader ([`parse_raw`])
+/// and the streaming reader (`stream::RvolReader`), so the format's
+/// framing rules have a single body.
+pub(crate) struct RvolHeader {
+    pub width: usize,
+    pub height: usize,
+    pub depth: usize,
+    /// width * height * depth (overflow-checked).
+    pub voxels: usize,
+    /// Byte offset of the raster: exactly one whitespace byte separates
+    /// the header from the data, same framing rule as P5 PGM.
+    pub data_start: usize,
+}
+
+pub(crate) fn parse_raw_header(buf: &[u8]) -> Result<RvolHeader> {
     let mut pos = 0;
     let magic = pgm::next_token(buf, &mut pos).context("missing magic")?;
     if magic != "RVOL" {
@@ -252,18 +303,37 @@ pub fn parse_raw(buf: &[u8]) -> Result<VoxelVolume> {
     if maxval != 255 {
         bail!("only 8-bit RVOL supported (maxval {maxval})");
     }
-    let n = width
+    let voxels = width
         .checked_mul(height)
         .and_then(|a| a.checked_mul(depth))
         .context("shape overflow")?;
-    // Exactly one whitespace byte separates the header from the raster,
-    // same framing rule as P5 PGM. `get` (not slicing) so a buffer that
-    // ends at the header is a parse error, not a panic.
-    let data = buf.get(pos + 1..).unwrap_or(&[]);
-    if data.len() < n {
-        bail!("RVOL raster truncated: need {n} bytes, have {}", data.len());
+    Ok(RvolHeader {
+        width,
+        height,
+        depth,
+        voxels,
+        data_start: pos + 1,
+    })
+}
+
+pub fn parse_raw(buf: &[u8]) -> Result<VoxelVolume> {
+    let h = parse_raw_header(buf)?;
+    // `get` (not slicing) so a buffer that ends at the header is a
+    // parse error, not a panic.
+    let data = buf.get(h.data_start..).unwrap_or(&[]);
+    if data.len() < h.voxels {
+        bail!(
+            "RVOL raster truncated: need {} bytes, have {}",
+            h.voxels,
+            data.len()
+        );
     }
-    Ok(VoxelVolume::from_voxels(width, height, depth, data[..n].to_vec()))
+    Ok(VoxelVolume::from_voxels(
+        h.width,
+        h.height,
+        h.depth,
+        data[..h.voxels].to_vec(),
+    ))
 }
 
 #[cfg(test)]
@@ -355,6 +425,26 @@ mod tests {
     fn label_rendering_spreads_grey_levels() {
         let v = VoxelVolume::from_labels(2, 1, 2, &[0, 1, 2, 3], 4);
         assert_eq!(v.voxels, vec![0, 85, 170, 255]);
+    }
+
+    #[test]
+    fn mask_drives_weights() {
+        let v = sample();
+        assert_eq!(v.weights(), vec![1.0; 12]);
+        let mut m = vec![1u8; 12];
+        m[3] = 0;
+        m[7] = 0;
+        let v = v.with_mask(m);
+        let w = v.weights();
+        assert_eq!(w[3], 0.0);
+        assert_eq!(w[7], 0.0);
+        assert_eq!(w.iter().filter(|&&x| x > 0.0).count(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mask_size_checked() {
+        let _ = sample().with_mask(vec![1; 5]);
     }
 
     #[test]

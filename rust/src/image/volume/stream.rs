@@ -1,0 +1,550 @@
+//! Tile streaming — the out-of-core data path behind every volume
+//! engine.
+//!
+//! The paper's central move is restructuring the pass over the pixel
+//! field (load once, stream through compute); this module applies the
+//! same inversion to the *residency* of the field itself. A
+//! [`VoxelSource`] yields fixed-size z-major **slabs** (groups of
+//! consecutive axial slices) on demand, so a consumer that walks slabs
+//! in z order touches the whole volume while holding only one tile:
+//!
+//! * [`RvolReader`] streams slabs straight out of an RVOL file —
+//!   volumes larger than RAM never materialize;
+//! * [`VoxelVolume`] and [`GrayImage`] implement the same trait by
+//!   copying from memory, which is what makes the in-memory engines
+//!   thin clients of the identical abstraction ([`materialize`] is the
+//!   reverse adapter);
+//! * [`LabelSink`] is the output side: segmentation labels stream out
+//!   slab by slab ([`RvolWriter`] appends them to an RVOL file,
+//!   `Vec<u8>` captures them for tests, [`LabelScaler`] renders class
+//!   ids to viewable grey levels en route).
+//!
+//! Masks ride along: a source reports [`VoxelSource::has_mask`] and
+//! serves mask tiles in the same slab geometry (`RvolReader::with_mask`
+//! pairs a sibling mask RVOL with the voxel file), so brFCM-style
+//! masked execution needs no second data path.
+//!
+//! Determinism note: the tile grid ([`tile_ranges`]) affects only how
+//! much of the field is resident at once. The engines consuming this
+//! trait keep their per-slice partial grids and fixed z-order
+//! reductions, so results are bit-identical for every tile size — see
+//! `fcm::engine::stream` and DESIGN.md.
+
+use crate::image::{GrayImage, VoxelVolume};
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// A voxel field served as z-major slabs of axial slices.
+pub trait VoxelSource {
+    fn width(&self) -> usize;
+    fn height(&self) -> usize;
+    fn depth(&self) -> usize;
+
+    /// Copy slices `[z0, z0 + nz)` into `out` (z-major, each slice
+    /// row-major — the exact `VoxelVolume` layout). `out` must hold
+    /// exactly `nz * width * height` bytes.
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()>;
+
+    /// Whether this source carries an inclusion mask.
+    fn has_mask(&self) -> bool {
+        false
+    }
+
+    /// Copy the mask for slices `[z0, z0 + nz)` into `out` (same slab
+    /// geometry as [`VoxelSource::read_slab`]; 0 = excluded voxel).
+    /// Maskless sources fill `out` with 1 — every voxel real.
+    fn read_mask_slab(&mut self, _z0: usize, _nz: usize, out: &mut [u8]) -> Result<()> {
+        out.fill(1);
+        Ok(())
+    }
+
+    /// Voxels per axial slice.
+    fn slice_area(&self) -> usize {
+        self.width() * self.height()
+    }
+
+    /// Total voxels.
+    fn len(&self) -> usize {
+        self.slice_area() * self.depth()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Tile grid: (first slice, slice count) pairs covering `depth` in
+/// groups of `tile_slices` — a pure function of its inputs, like the
+/// engines' chunk grids (`tile_slices` 0 is clamped to 1).
+pub fn tile_ranges(depth: usize, tile_slices: usize) -> Vec<(usize, usize)> {
+    let t = tile_slices.max(1);
+    (0..depth.div_ceil(t))
+        .map(|k| {
+            let z0 = k * t;
+            (z0, t.min(depth - z0))
+        })
+        .collect()
+}
+
+impl VoxelSource for VoxelVolume {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn height(&self) -> usize {
+        self.height
+    }
+
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        let a = self.width * self.height;
+        ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
+        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        out.copy_from_slice(&self.voxels[z0 * a..(z0 + nz) * a]);
+        Ok(())
+    }
+
+    fn has_mask(&self) -> bool {
+        self.mask.is_some()
+    }
+
+    fn read_mask_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        let a = self.width * self.height;
+        ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
+        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        match &self.mask {
+            Some(mask) => out.copy_from_slice(&mask[z0 * a..(z0 + nz) * a]),
+            None => out.fill(1),
+        }
+        Ok(())
+    }
+}
+
+/// A grayscale image is a depth-1 volume: the 2-D engines become
+/// clients of the same trait.
+impl VoxelSource for GrayImage {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn height(&self) -> usize {
+        self.height
+    }
+
+    fn depth(&self) -> usize {
+        1
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        ensure!(z0 == 0 && nz <= 1, "image has a single slice");
+        ensure!(out.len() == nz * self.pixels.len(), "slab buffer size mismatch");
+        out.copy_from_slice(&self.pixels[..out.len()]);
+        Ok(())
+    }
+}
+
+/// Materialize any source as an in-memory [`VoxelVolume`] (mask
+/// included) — the adapter the non-streaming engines use to serve
+/// file-backed jobs they have no out-of-core path for.
+pub fn materialize(src: &mut dyn VoxelSource) -> Result<VoxelVolume> {
+    let (w, h, d) = (src.width(), src.height(), src.depth());
+    let mut voxels = vec![0u8; w * h * d];
+    if d > 0 && w * h > 0 {
+        src.read_slab(0, d, &mut voxels)?;
+    }
+    let mut vol = VoxelVolume::from_voxels(w, h, d, voxels);
+    if src.has_mask() {
+        let mut mask = vec![0u8; w * h * d];
+        if d > 0 && w * h > 0 {
+            src.read_mask_slab(0, d, &mut mask)?;
+        }
+        vol = vol.with_mask(mask);
+    }
+    Ok(vol)
+}
+
+/// Parse an RVOL header from the front of a file without reading the
+/// raster: returns (file, width, height, depth, raster offset). The
+/// framing rules live in one place (`volume::parse_raw_header`, shared
+/// with the in-memory loader), so the streamed and materialized readers
+/// cannot drift apart on what counts as a valid file.
+fn open_rvol(path: &Path) -> Result<(File, usize, usize, usize, u64)> {
+    let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    // The header is a handful of ASCII tokens; 128 bytes is generous.
+    let mut head = [0u8; 128];
+    let mut got = 0;
+    while got < head.len() {
+        let n = file.read(&mut head[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+    }
+    let h = super::parse_raw_header(&head[..got])
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let data_start = h.data_start as u64;
+    let file_len = file.metadata()?.len();
+    if file_len < data_start + h.voxels as u64 {
+        bail!(
+            "RVOL raster truncated: need {} bytes, have {}",
+            h.voxels,
+            file_len.saturating_sub(data_start)
+        );
+    }
+    Ok((file, h.width, h.height, h.depth, data_start))
+}
+
+/// Streams slabs out of an RVOL file: the whole volume is never
+/// resident. Optionally paired with a same-shape mask RVOL.
+pub struct RvolReader {
+    file: File,
+    width: usize,
+    height: usize,
+    depth: usize,
+    data_start: u64,
+    mask: Option<(File, u64)>,
+}
+
+impl RvolReader {
+    pub fn open(path: &Path) -> Result<RvolReader> {
+        let (file, width, height, depth, data_start) = open_rvol(path)?;
+        Ok(RvolReader {
+            file,
+            width,
+            height,
+            depth,
+            data_start,
+            mask: None,
+        })
+    }
+
+    /// Open a voxel RVOL plus a sibling mask RVOL (0 = excluded voxel);
+    /// the shapes must match.
+    pub fn with_mask(path: &Path, mask_path: &Path) -> Result<RvolReader> {
+        let mut r = RvolReader::open(path)?;
+        let (file, w, h, d, start) = open_rvol(mask_path)?;
+        if (w, h, d) != (r.width, r.height, r.depth) {
+            bail!(
+                "mask {} is {w}x{h}x{d}, volume is {}x{}x{}",
+                mask_path.display(),
+                r.width,
+                r.height,
+                r.depth
+            );
+        }
+        r.mask = Some((file, start));
+        Ok(r)
+    }
+
+    fn read_at(file: &mut File, start: u64, z0: usize, area: usize, out: &mut [u8]) -> Result<()> {
+        file.seek(SeekFrom::Start(start + (z0 * area) as u64))?;
+        file.read_exact(out)?;
+        Ok(())
+    }
+}
+
+impl VoxelSource for RvolReader {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn height(&self) -> usize {
+        self.height
+    }
+
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        let a = self.width * self.height;
+        ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
+        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        RvolReader::read_at(&mut self.file, self.data_start, z0, a, out)
+    }
+
+    fn has_mask(&self) -> bool {
+        self.mask.is_some()
+    }
+
+    fn read_mask_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        let a = self.width * self.height;
+        ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
+        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        match &mut self.mask {
+            Some((file, start)) => RvolReader::read_at(file, *start, z0, a, out),
+            None => {
+                out.fill(1);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The output side of the tile path: consumers hand finished label (or
+/// voxel) slabs over in z order.
+pub trait LabelSink {
+    fn write_slab(&mut self, labels: &[u8]) -> Result<()>;
+}
+
+/// Capture in memory (tests, and the materialized fallback path).
+impl LabelSink for Vec<u8> {
+    fn write_slab(&mut self, labels: &[u8]) -> Result<()> {
+        self.extend_from_slice(labels);
+        Ok(())
+    }
+}
+
+/// Streams an RVOL file out slab by slab: header up front, bytes
+/// appended in z order, byte count enforced by [`RvolWriter::finish`].
+pub struct RvolWriter {
+    out: BufWriter<File>,
+    expected: usize,
+    written: usize,
+}
+
+impl RvolWriter {
+    pub fn create(path: &Path, width: usize, height: usize, depth: usize) -> Result<RvolWriter> {
+        let file =
+            File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+        // Exactly the `write_raw_to` header, so a streamed file is
+        // byte-identical to an in-memory `save_raw` of the same field.
+        write!(out, "RVOL\n{width} {height} {depth}\n255\n")?;
+        Ok(RvolWriter {
+            out,
+            expected: width * height * depth,
+            written: 0,
+        })
+    }
+
+    /// Flush and verify every voxel was written.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        ensure!(
+            self.written == self.expected,
+            "RVOL stream incomplete: wrote {} of {} bytes",
+            self.written,
+            self.expected
+        );
+        Ok(())
+    }
+}
+
+impl LabelSink for RvolWriter {
+    fn write_slab(&mut self, labels: &[u8]) -> Result<()> {
+        ensure!(
+            self.written + labels.len() <= self.expected,
+            "RVOL stream overflow: {} + {} > {}",
+            self.written,
+            labels.len(),
+            self.expected
+        );
+        self.out.write_all(labels)?;
+        self.written += labels.len();
+        Ok(())
+    }
+}
+
+/// Renders class ids to evenly spread grey levels en route to a sink —
+/// the streaming analogue of [`VoxelVolume::from_labels`], same scale.
+pub struct LabelScaler<S: LabelSink> {
+    inner: S,
+    lut: [u8; 256],
+    buf: Vec<u8>,
+}
+
+impl<S: LabelSink> LabelScaler<S> {
+    pub fn new(inner: S, n_classes: u8) -> LabelScaler<S> {
+        let scale = if n_classes <= 1 { 0 } else { 255 / (n_classes - 1) as u16 };
+        let mut lut = [0u8; 256];
+        for (l, v) in lut.iter_mut().enumerate() {
+            *v = (l as u16 * scale).min(255) as u8;
+        }
+        LabelScaler {
+            inner,
+            lut,
+            buf: Vec::new(),
+        }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: LabelSink> LabelSink for LabelScaler<S> {
+    fn write_slab(&mut self, labels: &[u8]) -> Result<()> {
+        let lut = &self.lut;
+        self.buf.clear();
+        self.buf.extend(labels.iter().map(|&l| lut[l as usize]));
+        self.inner.write_slab(&self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> VoxelVolume {
+        VoxelVolume::from_voxels(
+            3,
+            2,
+            3,
+            (0..18).map(|i| (i * 7) as u8).collect(),
+        )
+    }
+
+    #[test]
+    fn tile_grid_covers_depth() {
+        assert_eq!(tile_ranges(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(tile_ranges(3, 0), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(tile_ranges(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(tile_ranges(2, 17), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn in_memory_source_serves_slabs() {
+        let mut v = sample();
+        let area = VoxelSource::slice_area(&v);
+        assert_eq!(area, 6);
+        let mut out = vec![0u8; 2 * area];
+        v.read_slab(1, 2, &mut out).unwrap();
+        assert_eq!(out[..], v.voxels[area..3 * area]);
+        // Maskless sources serve all-real mask tiles.
+        let mut m = vec![0u8; area];
+        v.read_mask_slab(0, 1, &mut m).unwrap();
+        assert!(m.iter().all(|&b| b == 1));
+        assert!(!v.has_mask());
+        // Out-of-range and wrong-size slabs are errors, not panics.
+        assert!(v.read_slab(2, 2, &mut out).is_err());
+        assert!(v.read_slab(0, 1, &mut out).is_err());
+    }
+
+    #[test]
+    fn masked_volume_serves_mask_tiles() {
+        let mut mask = vec![1u8; 18];
+        mask[4] = 0;
+        let mut v = sample().with_mask(mask);
+        assert!(v.has_mask());
+        let mut m = vec![9u8; 6];
+        v.read_mask_slab(0, 1, &mut m).unwrap();
+        assert_eq!(m[4], 0);
+        assert_eq!(m.iter().filter(|&&b| b > 0).count(), 5);
+    }
+
+    #[test]
+    fn gray_image_is_a_depth_one_source() {
+        let mut img = GrayImage::from_pixels(2, 2, vec![1, 2, 3, 4]);
+        assert_eq!(VoxelSource::depth(&img), 1);
+        let mut out = vec![0u8; 4];
+        img.read_slab(0, 1, &mut out).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert!(img.read_slab(1, 1, &mut out).is_err());
+    }
+
+    #[test]
+    fn rvol_reader_slabs_match_in_memory() {
+        let dir = std::env::temp_dir().join(format!("rvol_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let v = sample();
+        let path = dir.join("v.rvol");
+        super::super::save_raw(&v, &path).unwrap();
+        let mut r = RvolReader::open(&path).unwrap();
+        assert_eq!(
+            (r.width(), r.height(), r.depth()),
+            (v.width, v.height, v.depth)
+        );
+        let area = v.slice_area();
+        // Every tile size reproduces the exact field, in any order.
+        for t in [1usize, 2, 5] {
+            let mut got = vec![0u8; v.len()];
+            for (z0, nz) in tile_ranges(v.depth, t) {
+                r.read_slab(z0, nz, &mut got[z0 * area..(z0 + nz) * area]).unwrap();
+            }
+            assert_eq!(got, v.voxels, "tile {t}");
+        }
+        // Materializing through the trait is the identity.
+        assert_eq!(materialize(&mut r).unwrap(), v);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rvol_reader_with_mask_pairs_files() {
+        let dir = std::env::temp_dir().join(format!("rvol_mask_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let v = sample();
+        let mut mask = vec![1u8; v.len()];
+        mask[0] = 0;
+        mask[17] = 0;
+        let vp = dir.join("v.rvol");
+        let mp = dir.join("m.rvol");
+        super::super::save_raw(&v, &vp).unwrap();
+        super::super::save_raw(
+            &VoxelVolume::from_voxels(v.width, v.height, v.depth, mask.clone()),
+            &mp,
+        )
+        .unwrap();
+        let mut r = RvolReader::with_mask(&vp, &mp).unwrap();
+        assert!(r.has_mask());
+        let got = materialize(&mut r).unwrap();
+        assert_eq!(got.mask.as_deref(), Some(&mask[..]));
+        assert_eq!(got.voxels, v.voxels);
+        // Shape mismatch between volume and mask is rejected.
+        let bad = dir.join("bad.rvol");
+        super::super::save_raw(&VoxelVolume::new(2, 2, 2), &bad).unwrap();
+        assert!(RvolReader::with_mask(&vp, &bad).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rvol_reader_rejects_bad_headers() {
+        let dir = std::env::temp_dir().join(format!("rvol_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p5 = dir.join("p5.rvol");
+        std::fs::write(&p5, b"P5\n1 1\n255\nx").unwrap();
+        assert!(RvolReader::open(&p5).is_err());
+        let trunc = dir.join("trunc.rvol");
+        std::fs::write(&trunc, b"RVOL\n4 4 4\n255\nabc").unwrap();
+        assert!(RvolReader::open(&trunc).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rvol_writer_roundtrips_and_enforces_count() {
+        let dir = std::env::temp_dir().join(format!("rvol_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let v = sample();
+        let path = dir.join("out.rvol");
+        let mut w = RvolWriter::create(&path, v.width, v.height, v.depth).unwrap();
+        let area = v.slice_area();
+        for (z0, nz) in tile_ranges(v.depth, 2) {
+            w.write_slab(&v.voxels[z0 * area..(z0 + nz) * area]).unwrap();
+        }
+        w.finish().unwrap();
+        // Byte-identical to the in-memory writer.
+        let mut mem = Vec::new();
+        super::super::write_raw_to(&v, &mut mem).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), mem);
+        // Short and overflowing streams are errors.
+        let short = RvolWriter::create(&dir.join("s.rvol"), 2, 2, 2).unwrap();
+        assert!(short.finish().is_err());
+        let mut over = RvolWriter::create(&dir.join("o.rvol"), 1, 1, 1).unwrap();
+        assert!(over.write_slab(&[0, 0]).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn label_scaler_matches_from_labels() {
+        let labels = [0u8, 1, 2, 3];
+        let mut captured = LabelScaler::new(Vec::new(), 4);
+        captured.write_slab(&labels).unwrap();
+        let rendered = VoxelVolume::from_labels(2, 1, 2, &labels, 4);
+        assert_eq!(captured.into_inner(), rendered.voxels);
+    }
+}

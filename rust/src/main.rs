@@ -248,9 +248,47 @@ fn segment(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the phantom volume described by `--start/--slices/--step/
+/// --noise` (bounds-checked against the 181-slice axis). Shared by
+/// `segment-volume`'s phantom input and `phantom --volume`.
+fn phantom_volume_from_args(args: &Args, cfg: &Config) -> Result<phantom::PhantomVolume> {
+    let start = args.get_usize("start", 80)?;
+    let slices = args.get_usize("slices", 41)?;
+    let step = args.get_usize("step", 1)?;
+    if slices == 0 || step == 0 {
+        bail!("--slices and --step must be >= 1");
+    }
+    // Exclusive end just past the LAST generated index, so e.g.
+    // start 80, 26 slices, step 4 (last index 180) stays valid.
+    let end = start + (slices - 1) * step + 1;
+    if end > 181 {
+        bail!(
+            "phantom range out of bounds: start {start} + {slices} slices * step {step} \
+             runs past the 181-slice axis (last index {})",
+            end - 1
+        );
+    }
+    let noise: f32 = match args.get("noise") {
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--noise: bad float {v:?}"))?,
+        None => PhantomConfig::default().noise_sigma,
+    };
+    Ok(phantom::generate_volume(
+        &PhantomConfig {
+            noise_sigma: noise,
+            seed: cfg.fcm.seed,
+            ..PhantomConfig::default()
+        },
+        start,
+        end,
+        step,
+    ))
+}
+
 /// `repro segment-volume [--input-raw v.rvol | --input-dir slices/ |
 /// --slices 41 --start 80 --step 1 --noise 4] [--engine ...]
 /// [--out-raw seg.rvol] [--out-dir segdir]`
+/// Add `--stream [--tile-slices N]` to route RVOL-in/RVOL-out through
+/// the out-of-core tile path without materializing the volume.
 ///
 /// Segments a whole voxel volume through `FcmBackend::segment_volume`:
 /// true-3D on the parallel (slab-decomposed), histogram (256-bin,
@@ -262,43 +300,39 @@ fn segment_volume(args: &Args) -> Result<()> {
     let params = FcmParams::from(&cfg.fcm);
     let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
 
+    if args.flag("stream") {
+        return segment_volume_streamed(args, &cfg, engine);
+    }
+
     let (vol, truth): (VoxelVolume, Option<Vec<u8>>) = if let Some(p) = args.get("input-raw") {
         (volume::load_raw(Path::new(p))?, None)
     } else if let Some(d) = args.get("input-dir") {
         (volume::load_pgm_stack(Path::new(d))?, None)
     } else {
-        let start = args.get_usize("start", 80)?;
-        let slices = args.get_usize("slices", 41)?;
-        let step = args.get_usize("step", 1)?;
-        if slices == 0 || step == 0 {
-            bail!("--slices and --step must be >= 1");
-        }
-        // Exclusive end just past the LAST generated index, so e.g.
-        // start 80, 26 slices, step 4 (last index 180) stays valid.
-        let end = start + (slices - 1) * step + 1;
-        if end > 181 {
-            bail!(
-                "phantom range out of bounds: start {start} + {slices} slices * step {step} \
-                 runs past the 181-slice axis (last index {})",
-                end - 1
-            );
-        }
-        let noise: f32 = match args.get("noise") {
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--noise: bad float {v:?}"))?,
-            None => PhantomConfig::default().noise_sigma,
-        };
-        let pv = phantom::generate_volume(
-            &PhantomConfig {
-                noise_sigma: noise,
-                seed: cfg.fcm.seed,
-                ..PhantomConfig::default()
-            },
-            start,
-            end,
-            step,
-        );
+        let pv = phantom_volume_from_args(args, &cfg)?;
         let truth = pv.ground_truth_labels();
         (pv.to_voxel_volume(), Some(truth))
+    };
+    // --mask-raw works on the in-memory path too, not just --stream:
+    // masked voxels carry zero weight through the engines and keep the
+    // sentinel label 0.
+    let vol = match args.get("mask-raw") {
+        Some(m) => {
+            let mask = volume::load_raw(Path::new(m))?;
+            if (mask.width, mask.height, mask.depth) != (vol.width, vol.height, vol.depth) {
+                bail!(
+                    "mask {m} is {}x{}x{}, volume is {}x{}x{}",
+                    mask.width,
+                    mask.height,
+                    mask.depth,
+                    vol.width,
+                    vol.height,
+                    vol.depth
+                );
+            }
+            vol.with_mask(mask.voxels)
+        }
+        None => vol,
     };
 
     println!(
@@ -356,9 +390,95 @@ fn segment_volume(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro segment-volume --stream --input-raw v.rvol --out-raw seg.rvol
+/// [--mask-raw m.rvol] [--tile-slices N] [--engine histogram|parallel|...]`
+///
+/// The out-of-core path: tiles stream from the input RVOL through
+/// `FcmBackend::segment_volume_streamed` and rendered labels stream to
+/// the output RVOL — the volume is never materialized here, so fields
+/// larger than RAM segment in bounded memory. Output is byte-identical
+/// to the in-memory `segment-volume --out-raw` of the same input
+/// (enforced by the CI streaming smoke job). Histogram and parallel
+/// backends run truly out-of-core; other engines fall back to
+/// materializing inside the backend (reported as path=materialized).
+fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<()> {
+    use repro::image::volume::stream::{LabelScaler, RvolReader, RvolWriter, VoxelSource};
+
+    let params = FcmParams::from(&cfg.fcm);
+    let input = args
+        .get("input-raw")
+        .ok_or_else(|| anyhow::anyhow!("--stream needs --input-raw (an RVOL file)"))?;
+    let out = args
+        .get("out-raw")
+        .ok_or_else(|| anyhow::anyhow!("--stream needs --out-raw (the label RVOL to write)"))?;
+    let tile_slices = args.get_usize("tile-slices", cfg.engine.tile_slices)?.max(1);
+    let mut src = match args.get("mask-raw") {
+        Some(m) => RvolReader::with_mask(Path::new(input), Path::new(m))?,
+        None => RvolReader::open(Path::new(input))?,
+    };
+    let (w, h, d) = (src.width(), src.height(), src.depth());
+    println!(
+        "volume {w}x{h}x{d} = {} voxels ({} KB), streaming in {tile_slices}-slice tiles",
+        w * h * d,
+        w * h * d / 1024
+    );
+
+    let registry = match engine {
+        Engine::Device | Engine::DeviceRef => Some(Registry::open(Path::new(&cfg.artifacts_dir))?),
+        _ => None,
+    };
+    let opts = repro::fcm::EngineOpts::from(&cfg.engine);
+    let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
+    // Labels render to grey levels en route, so the output file is
+    // byte-identical to the in-memory path's `--out-raw`.
+    let mut sink = LabelScaler::new(
+        RvolWriter::create(Path::new(out), w, h, d)?,
+        params.clusters as u8,
+    );
+    let t0 = std::time::Instant::now();
+    let res = backend.segment_volume_streamed(&mut src, &mut sink, &params, tile_slices)?;
+    sink.into_inner().finish()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "engine={engine:?} path={} work/iter={} iters={} converged={} wall={wall:.3}s ({:.0} kvox/s)",
+        if res.streamed { "streamed" } else { "materialized" },
+        res.work_per_iter,
+        res.iterations,
+        res.converged,
+        res.voxels as f64 / wall / 1000.0
+    );
+    println!(
+        "peak resident tile bytes: {} ({:.1}% of the {} byte volume)",
+        res.peak_resident_bytes,
+        100.0 * res.peak_resident_bytes as f64 / (res.voxels.max(1)) as f64,
+        res.voxels
+    );
+    println!("centers (ascending): {:?}", res.centers);
+    println!("segmentation written to {out}");
+    Ok(())
+}
+
 /// `repro phantom --slice 96 [--ground-truth] [--with-skull] --out dir`
+/// or `repro phantom --volume --slices 24 --start 80 --out-raw v.rvol`
+/// (write a synthetic RVOL volume — the streaming smoke job's input)
 fn phantom_cmd(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    if args.flag("volume") {
+        let out = args
+            .get("out-raw")
+            .ok_or_else(|| anyhow::anyhow!("phantom --volume needs --out-raw"))?;
+        let vol = phantom_volume_from_args(args, &cfg)?.to_voxel_volume();
+        volume::save_raw(&vol, Path::new(out))?;
+        println!(
+            "{out} ({}x{}x{} = {} voxels)",
+            vol.width,
+            vol.height,
+            vol.depth,
+            vol.len()
+        );
+        return Ok(());
+    }
     let slice = args.get_usize("slice", 96)?;
     let outdir = Path::new(args.get_or("out", "out/phantom"));
     if args.flag("ground-truth") {
@@ -472,8 +592,11 @@ USAGE: repro <subcommand> [options]
   segment-volume --input-raw v.rvol | --input-dir slices/ |
                  --slices 41 --start 80 --step 1 --noise 4  (phantom volume)
                  [--engine auto|parallel|histogram|spatial|seq|...]
-                 [--out-raw seg.rvol] [--out-dir segdir]
+                 [--mask-raw m.rvol] [--out-raw seg.rvol] [--out-dir segdir]
+                 [--stream --tile-slices 8]  (out-of-core: RVOL in,
+                 RVOL out, volume never materialized)
   phantom        --slice 96 [--ground-truth] [--with-skull] [--out dir]
+                 --volume --slices 24 --start 80 --out-raw v.rvol  (RVOL gen)
   serve          --jobs 32 [--engine auto|device|seq|parallel|histogram|brfcm|spatial]
                  [--workers N] [--batch true|false]
   bench-table1   [--runs 5]
@@ -489,7 +612,7 @@ USAGE: repro <subcommand> [options]
 COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         --seed N --workers N --artifacts_dir DIR --set k=v,k=v
         --backend sequential|parallel|histogram  --engine_threads N
-        --engine_chunk N --batch_execute true|false
+        --engine_chunk N --tile_slices N --batch_execute true|false
         (host-engine + service knobs; see README 'Architecture')
 
 --engine auto (default) = device path when artifacts exist, else the
@@ -502,5 +625,9 @@ segment-volume serves true-3D paths on parallel (Z-slab decomposition,
 bit-identical for any thread count / slab size), histogram (one 256-bin
 volume histogram; per-iteration cost independent of voxel count), and
 spatial (3x3x3 neighbourhood regularization — the noise-robust engine);
-other engines fall back to a per-slice loop. See README 'Volumes'.
+other engines fall back to a per-slice loop. With --stream, histogram
+and parallel run OUT-OF-CORE: tiles of --tile-slices slices stream from
+the input RVOL, resident memory is bounded by the tile (reported as
+'peak resident tile bytes'), and the output is byte-identical to the
+in-memory path. See README 'Volumes' / 'Out-of-core volumes'.
 ";

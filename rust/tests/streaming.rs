@@ -1,0 +1,277 @@
+//! Integration suite for out-of-core streaming execution (PR 4):
+//!
+//! * the acceptance gates — a file-backed RVOL volume several times
+//!   larger than the tile budget segments via the streamed path with
+//!   output **byte-identical** to the in-memory `segment_volume`,
+//!   across tile sizes {1, 3, 17} x thread counts {1, 2, 8}, with the
+//!   peak-resident metric bounded by the tile, not the volume;
+//! * the CLI contract — a streamed label RVOL (rendered through
+//!   `LabelScaler`) equals `save_raw(from_labels(...))` of the
+//!   in-memory run, byte for byte;
+//! * masked (skull-stripped) volumes through the paired-file reader;
+//! * streamed volume jobs end-to-end through the service.
+
+use repro::config::Config;
+use repro::coordinator::{backend_for, Engine, Service, StreamVolumeJob};
+use repro::fcm::{EngineOpts, FcmParams};
+use repro::image::volume::stream::{materialize, LabelScaler, RvolReader, RvolWriter};
+use repro::image::{volume, VoxelVolume};
+use repro::phantom::{generate_volume, PhantomConfig};
+use std::path::PathBuf;
+
+fn phantom_rvol(width: usize, height: usize, depth: usize) -> VoxelVolume {
+    // Mid-brain slices when they fit the axis, lower start for deep
+    // volumes (the slice axis runs 0..181).
+    let start = 90usize.min(181 - depth);
+    generate_volume(
+        &PhantomConfig {
+            width,
+            height,
+            ..PhantomConfig::default()
+        },
+        start,
+        start + depth,
+        1,
+    )
+    .to_voxel_volume()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("stream_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn streamed_rvol_bit_identical_across_tiles_and_threads() {
+    // THE acceptance gate: file-backed streaming equals the in-memory
+    // path exactly, for every tile size and thread count.
+    let vol = phantom_rvol(41, 47, 19);
+    let dir = tmp_dir("equiv");
+    let path = dir.join("v.rvol");
+    volume::save_raw(&vol, &path).unwrap();
+    let params = FcmParams::default();
+
+    for engine in [Engine::Parallel, Engine::Histogram] {
+        let mem = backend_for(engine, None, &EngineOpts::default())
+            .unwrap()
+            .segment_volume(&vol, &params)
+            .unwrap();
+        for threads in [1usize, 2, 8] {
+            let opts = EngineOpts {
+                threads,
+                ..EngineOpts::default()
+            };
+            let backend = backend_for(engine, None, &opts).unwrap();
+            for tile in [1usize, 3, 17] {
+                let mut src = RvolReader::open(&path).unwrap();
+                let mut sink = Vec::new();
+                let out = backend
+                    .segment_volume_streamed(&mut src, &mut sink, &params, tile)
+                    .unwrap();
+                assert!(out.streamed, "{engine:?} t={threads} tile={tile}");
+                assert_eq!(
+                    sink, mem.labels,
+                    "{engine:?} t={threads} tile={tile}: labels diverged"
+                );
+                assert_eq!(out.centers, mem.centers, "{engine:?} t={threads} tile={tile}");
+                assert_eq!(out.iterations, mem.iterations);
+                assert_eq!(out.converged, mem.converged);
+                assert_eq!(out.voxels, vol.len());
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn streamed_histogram_memory_is_bounded_by_the_tile() {
+    // A volume several times larger than the tile budget must segment
+    // with peak resident tile bytes (a) at least 4x below the volume
+    // and (b) EQUAL for a 4x-deeper volume — the "bounded by the tile,
+    // not the volume" pin, on the counter rather than the clock.
+    let dir = tmp_dir("mem");
+    let params = FcmParams::default();
+    let backend = backend_for(Engine::Histogram, None, &EngineOpts::default()).unwrap();
+    let mut peaks = Vec::new();
+    for depth in [37usize, 148] {
+        let vol = phantom_rvol(45, 53, depth);
+        let path = dir.join(format!("v{depth}.rvol"));
+        volume::save_raw(&vol, &path).unwrap();
+        let mut src = RvolReader::open(&path).unwrap();
+        let mut sink = Vec::new();
+        let out = backend
+            .segment_volume_streamed(&mut src, &mut sink, &params, 1)
+            .unwrap();
+        assert!(out.streamed);
+        assert_eq!(sink.len(), vol.len());
+        if depth == 148 {
+            assert!(
+                out.peak_resident_bytes * 4 <= vol.size_bytes(),
+                "peak {} bytes vs volume {} bytes: not out-of-core",
+                out.peak_resident_bytes,
+                vol.size_bytes()
+            );
+        }
+        peaks.push(out.peak_resident_bytes);
+    }
+    assert_eq!(
+        peaks[0], peaks[1],
+        "peak resident bytes must depend on the tile, not the depth"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn streamed_label_rvol_matches_in_memory_cli_output() {
+    // The CLI contract behind the CI smoke job: --stream --out-raw
+    // produces the same bytes as the in-memory --out-raw (labels
+    // rendered to grey levels, RVOL-framed).
+    let vol = phantom_rvol(33, 39, 11);
+    let dir = tmp_dir("cli");
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let params = FcmParams::default();
+    let backend = backend_for(Engine::Histogram, None, &EngineOpts::default()).unwrap();
+
+    // In-memory path, as `segment_volume` + `--out-raw` writes it.
+    let mem = backend.segment_volume(&vol, &params).unwrap();
+    let mem_path = dir.join("mem.rvol");
+    volume::save_raw(
+        &VoxelVolume::from_labels(
+            vol.width,
+            vol.height,
+            vol.depth,
+            &mem.labels,
+            params.clusters as u8,
+        ),
+        &mem_path,
+    )
+    .unwrap();
+
+    // Streamed path, as `segment-volume --stream --out-raw` writes it.
+    let stream_path = dir.join("stream.rvol");
+    let mut src = RvolReader::open(&input).unwrap();
+    let mut sink = LabelScaler::new(
+        RvolWriter::create(&stream_path, vol.width, vol.height, vol.depth).unwrap(),
+        params.clusters as u8,
+    );
+    backend
+        .segment_volume_streamed(&mut src, &mut sink, &params, 4)
+        .unwrap();
+    sink.into_inner().finish().unwrap();
+
+    assert_eq!(
+        std::fs::read(&mem_path).unwrap(),
+        std::fs::read(&stream_path).unwrap(),
+        "streamed output file must be byte-identical to the in-memory one"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn masked_rvol_streams_through_the_paired_reader() {
+    let base = phantom_rvol(31, 35, 7);
+    let mut mask = vec![1u8; base.len()];
+    for i in (0..base.len()).step_by(6) {
+        mask[i] = 0;
+    }
+    let masked = base.clone().with_mask(mask.clone());
+    let dir = tmp_dir("mask");
+    let vp = dir.join("v.rvol");
+    let mp = dir.join("m.rvol");
+    volume::save_raw(&base, &vp).unwrap();
+    volume::save_raw(
+        &VoxelVolume::from_voxels(base.width, base.height, base.depth, mask.clone()),
+        &mp,
+    )
+    .unwrap();
+    let params = FcmParams::default();
+
+    for engine in [Engine::Parallel, Engine::Histogram] {
+        let backend = backend_for(engine, None, &EngineOpts::default()).unwrap();
+        // The in-memory reference over the same masked volume.
+        let mem = backend.segment_volume(&masked, &params).unwrap();
+        let mut src = RvolReader::with_mask(&vp, &mp).unwrap();
+        // Sanity: the paired reader reconstructs the masked volume.
+        assert_eq!(materialize(&mut src).unwrap(), masked);
+        let mut sink = Vec::new();
+        let out = backend
+            .segment_volume_streamed(&mut src, &mut sink, &params, 3)
+            .unwrap();
+        assert_eq!(sink, mem.labels, "{engine:?}");
+        assert_eq!(out.centers, mem.centers, "{engine:?}");
+        for (i, (&l, &mk)) in sink.iter().zip(&mask).enumerate() {
+            if mk == 0 {
+                assert_eq!(l, 0, "{engine:?}: masked voxel {i} lost the sentinel");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn service_streamed_volume_jobs_end_to_end() {
+    let vol = phantom_rvol(35, 41, 9);
+    let dir = tmp_dir("svc");
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let cfg = Config::new();
+    let params = FcmParams::from(&cfg.fcm);
+    let opts = EngineOpts::from(&cfg.engine);
+    let service = Service::start(&cfg).unwrap();
+
+    let mut outputs = Vec::new();
+    for (i, engine) in [Engine::Histogram, Engine::Parallel].into_iter().enumerate() {
+        let output = dir.join(format!("seg{i}.rvol"));
+        let r = service
+            .submit_volume_streamed(
+                StreamVolumeJob {
+                    input: input.clone(),
+                    mask: None,
+                    output: output.clone(),
+                    tile_slices: 4,
+                },
+                params,
+                engine,
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.engine, engine);
+        assert!(r.labels.is_empty(), "streamed labels live in the file");
+        let peak = r.peak_resident_bytes.expect("streamed jobs report peak bytes");
+        assert!(peak > 0);
+        // The output RVOL holds exactly the in-memory path's canonical
+        // labels.
+        let direct = backend_for(engine, None, &opts)
+            .unwrap()
+            .segment_volume(&vol, &params)
+            .unwrap();
+        let written = volume::load_raw(&output).unwrap();
+        assert_eq!(written.voxels, direct.labels, "{engine:?}");
+        assert_eq!(r.centers, direct.centers, "{engine:?}");
+        assert_eq!(r.iterations, direct.iterations, "{engine:?}");
+        outputs.push(output);
+    }
+
+    // A bad input path fails the job, never the worker.
+    let r = service.submit_volume_streamed(
+        StreamVolumeJob {
+            input: dir.join("missing.rvol"),
+            mask: None,
+            output: dir.join("never.rvol"),
+            tile_slices: 4,
+        },
+        params,
+        Engine::Histogram,
+    );
+    assert!(r.unwrap().wait().is_err());
+
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.streamed_runs, 2);
+    assert!(snap.stream_peak_resident_bytes > 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
