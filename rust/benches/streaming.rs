@@ -1,31 +1,43 @@
-//! Bench: out-of-core streaming execution — the PR-4 size sweep.
+//! Bench: out-of-core streaming execution — the PR-4 size sweep,
+//! extended in PR 5 with the halo-streamed spatial path and the
+//! double-buffered tile prefetcher.
 //!
-//! Sweeps volume sizes over three ways of serving an RVOL file:
-//!   * mem-hist    — materialize the file, run the in-memory 3-D
+//! Sweeps volume sizes over the ways of serving an RVOL file:
+//!   * mem-hist        — materialize the file, run the in-memory 3-D
 //!     histogram engine (the pre-PR-4 workflow);
-//!   * stream-hist — the truly out-of-core histogram path: two
+//!   * stream-hist     — the truly out-of-core histogram path: two
 //!     streaming sweeps + bin-level iterations, resident memory
 //!     bounded by the tile;
-//!   * stream-slab — the tile-recompute slab path (re-reads the file
-//!     once per iteration; the price of out-of-core voxel-level FCM).
+//!   * stream-slab     — the tile-recompute slab path (re-reads the
+//!     file once per iteration; the price of out-of-core voxel-level
+//!     FCM);
+//!   * stream-spatial  — the halo-streamed spatial path (±1-slice halo
+//!     per tile, two re-reads per phase-2 iteration);
+//!   * *-pf            — the same streamed paths with a TilePrefetcher
+//!     reading tile k+1 while tile k computes (identical output by
+//!     construction; the delta is pure I/O overlap).
 //!
-//! Results (mean/p95, per-voxel throughput, peak resident bytes) go to
-//! BENCH_PR4.json at the repo root.
+//! Results (mean/p95, per-voxel throughput, peak resident bytes,
+//! prefetch on/off) go to BENCH_PR5.json at the repo root.
 //!
 //!   cargo bench --bench streaming
 //!   REPRO_BENCH_QUICK=1 cargo bench --bench streaming   # CI smoke
 //!
 //! Gates (on counters and bytes, not clocks):
 //!   * streamed labels byte-identical to the in-memory path at EVERY
-//!     size, for both streamed engines;
-//!   * stream-hist peak resident bytes identical across depths at a
-//!     fixed tile (bounded by the tile, not the volume).
+//!     size, for all three streamed engines, prefetch on AND off;
+//!   * stream-hist and stream-spatial peak resident bytes identical
+//!     across depths at a fixed tile (bounded by the tile — spatial's
+//!     halo adds at most 2 slices — never by the volume).
 
-use repro::fcm::engine::stream::{run_streamed, StreamOpts, StreamRun};
+use repro::fcm::engine::stream::{
+    run_streamed, run_streamed_spatial, StreamOpts, StreamRun,
+};
 use repro::fcm::engine::volume::{run_volume, VolumeOpts};
-use repro::fcm::{canonical_relabel, Backend, FcmParams};
+use repro::fcm::spatial::SpatialParams;
+use repro::fcm::{canonical_relabel, spatial, Backend, FcmParams};
 use repro::harness::{bench, BenchResult, Opts};
-use repro::image::volume::stream::RvolReader;
+use repro::image::volume::stream::{RvolReader, TilePrefetcher, VoxelSource};
 use repro::image::{volume, VoxelVolume};
 use repro::phantom::{generate_volume, PhantomConfig};
 use repro::report::{fmt_secs, Table};
@@ -38,9 +50,14 @@ struct SizeRow {
     voxels: usize,
     mem_hist: BenchResult,
     stream_hist: BenchResult,
+    stream_hist_pf: BenchResult,
     stream_slab: BenchResult,
+    stream_slab_pf: BenchResult,
+    stream_spatial: BenchResult,
+    stream_spatial_pf: BenchResult,
     hist_peak_bytes: usize,
     slab_peak_bytes: usize,
+    spatial_peak_bytes: usize,
     identical: bool,
 }
 
@@ -62,20 +79,53 @@ fn make_rvol(dir: &Path, width: usize, height: usize, depth: usize) -> (PathBuf,
     (path, vol)
 }
 
+fn open(path: &Path, prefetch: bool) -> Box<dyn VoxelSource + Send> {
+    let src = RvolReader::open(path).unwrap();
+    if prefetch {
+        Box::new(TilePrefetcher::wrap(src))
+    } else {
+        Box::new(src)
+    }
+}
+
 fn stream_once(
     path: &Path,
     params: &FcmParams,
     backend: Backend,
     tile: usize,
+    prefetch: bool,
 ) -> (Vec<u8>, StreamRun) {
-    let mut src = RvolReader::open(path).unwrap();
+    let mut src = open(path, prefetch);
     let mut sink = Vec::new();
     let run = run_streamed(
-        &mut src,
+        &mut *src,
         &mut sink,
         params,
         &StreamOpts {
             backend,
+            threads: 0,
+            tile_slices: tile,
+        },
+    )
+    .unwrap();
+    (sink, run)
+}
+
+fn stream_spatial_once(
+    path: &Path,
+    params: &FcmParams,
+    tile: usize,
+    prefetch: bool,
+) -> (Vec<u8>, StreamRun) {
+    let mut src = open(path, prefetch);
+    let mut sink = Vec::new();
+    let run = run_streamed_spatial(
+        &mut *src,
+        &mut sink,
+        params,
+        &SpatialParams::default(),
+        &StreamOpts {
+            backend: Backend::Parallel,
             threads: 0,
             tile_slices: tile,
         },
@@ -102,15 +152,20 @@ fn main() -> anyhow::Result<()> {
     let dir = std::env::temp_dir().join(format!("stream_bench_{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
 
-    println!("== out-of-core streaming: materialize+hist vs stream-hist vs stream-slab ==\n");
+    println!("== out-of-core streaming: mem-hist vs stream-{{hist,slab,spatial}} x prefetch ==\n");
     let mut t = Table::new([
         "volume",
         "voxels",
         "mem-hist",
-        "stream-hist",
-        "stream-slab",
-        "hist peak KB",
-        "slab peak KB",
+        "s-hist",
+        "s-hist-pf",
+        "s-slab",
+        "s-slab-pf",
+        "s-spatial",
+        "s-spatial-pf",
+        "hist KB",
+        "slab KB",
+        "spatial KB",
         "identical",
     ]);
     let mut rows = Vec::new();
@@ -118,25 +173,53 @@ fn main() -> anyhow::Result<()> {
         let (path, vol) = make_rvol(&dir, w, h, d);
         let name = format!("{w}x{h}x{d}");
 
-        // Equivalence + metadata from one untimed run each.
+        // Equivalence + metadata from untimed runs: every streamed
+        // engine, prefetch on AND off, against its in-memory twin.
         let mut mem = run_volume(&vol, &params, &VolumeOpts::with_backend(Backend::Histogram));
         canonical_relabel(&mut mem.run);
-        let (hist_labels, hist_run) = stream_once(&path, &params, Backend::Histogram, tile);
-        let (slab_labels, slab_run) = stream_once(&path, &params, Backend::Parallel, tile);
         let mut mem_slab = run_volume(&vol, &params, &VolumeOpts::default());
         canonical_relabel(&mut mem_slab.run);
-        let identical =
-            hist_labels == mem.run.labels && slab_labels == mem_slab.run.labels;
+        let mut mem_spatial = spatial::run_volume(
+            &vol,
+            &params,
+            &SpatialParams::default(),
+            &VolumeOpts::default(),
+        );
+        canonical_relabel(&mut mem_spatial.run);
+        let (hist_labels, hist_run) = stream_once(&path, &params, Backend::Histogram, tile, false);
+        let (hist_pf, _) = stream_once(&path, &params, Backend::Histogram, tile, true);
+        let (slab_labels, slab_run) = stream_once(&path, &params, Backend::Parallel, tile, false);
+        let (slab_pf, _) = stream_once(&path, &params, Backend::Parallel, tile, true);
+        let (spatial_labels, spatial_run) = stream_spatial_once(&path, &params, tile, false);
+        let (spatial_pf, _) = stream_spatial_once(&path, &params, tile, true);
+        let identical = hist_labels == mem.run.labels
+            && hist_pf == mem.run.labels
+            && slab_labels == mem_slab.run.labels
+            && slab_pf == mem_slab.run.labels
+            && spatial_labels == mem_spatial.run.labels
+            && spatial_pf == mem_spatial.run.labels;
 
         let mem_hist = bench(&format!("mem-hist-{name}"), &opts, || {
             let v = volume::load_raw(&path).unwrap();
             let _ = run_volume(&v, &params, &VolumeOpts::with_backend(Backend::Histogram));
         });
         let stream_hist = bench(&format!("stream-hist-{name}"), &opts, || {
-            let _ = stream_once(&path, &params, Backend::Histogram, tile);
+            let _ = stream_once(&path, &params, Backend::Histogram, tile, false);
+        });
+        let stream_hist_pf = bench(&format!("stream-hist-pf-{name}"), &opts, || {
+            let _ = stream_once(&path, &params, Backend::Histogram, tile, true);
         });
         let stream_slab = bench(&format!("stream-slab-{name}"), &opts, || {
-            let _ = stream_once(&path, &params, Backend::Parallel, tile);
+            let _ = stream_once(&path, &params, Backend::Parallel, tile, false);
+        });
+        let stream_slab_pf = bench(&format!("stream-slab-pf-{name}"), &opts, || {
+            let _ = stream_once(&path, &params, Backend::Parallel, tile, true);
+        });
+        let stream_spatial = bench(&format!("stream-spatial-{name}"), &opts, || {
+            let _ = stream_spatial_once(&path, &params, tile, false);
+        });
+        let stream_spatial_pf = bench(&format!("stream-spatial-pf-{name}"), &opts, || {
+            let _ = stream_spatial_once(&path, &params, tile, true);
         });
 
         t.row([
@@ -144,9 +227,14 @@ fn main() -> anyhow::Result<()> {
             vol.len().to_string(),
             fmt_secs(mem_hist.mean()),
             fmt_secs(stream_hist.mean()),
+            fmt_secs(stream_hist_pf.mean()),
             fmt_secs(stream_slab.mean()),
+            fmt_secs(stream_slab_pf.mean()),
+            fmt_secs(stream_spatial.mean()),
+            fmt_secs(stream_spatial_pf.mean()),
             (hist_run.peak_resident_bytes / 1024).to_string(),
             (slab_run.peak_resident_bytes / 1024).to_string(),
+            (spatial_run.peak_resident_bytes / 1024).to_string(),
             identical.to_string(),
         ]);
         rows.push(SizeRow {
@@ -156,31 +244,42 @@ fn main() -> anyhow::Result<()> {
             voxels: vol.len(),
             mem_hist,
             stream_hist,
+            stream_hist_pf,
             stream_slab,
+            stream_slab_pf,
+            stream_spatial,
+            stream_spatial_pf,
             hist_peak_bytes: hist_run.peak_resident_bytes,
             slab_peak_bytes: slab_run.peak_resident_bytes,
+            spatial_peak_bytes: spatial_run.peak_resident_bytes,
             identical,
         });
     }
     t.print();
 
-    // Gate 1: byte identity at every size.
+    // Gate 1: byte identity at every size, all engines, prefetch on/off.
     let identical = rows.iter().all(|r| r.identical);
     println!(
         "\nGATE streamed output byte-identical to in-memory at every size: {}",
         if identical { "PASS" } else { "FAIL" }
     );
 
-    // Gate 2: stream-hist peak resident bytes independent of depth at a
-    // fixed tile and resolution (the out-of-core claim, on a counter).
-    let peak_at = |depth: usize| {
+    // Gate 2: stream-hist AND stream-spatial peak resident bytes
+    // independent of depth at a fixed tile and resolution (the
+    // out-of-core claim, on a counter; spatial's halo adds slices to
+    // the tile, never depth-dependence).
+    let peaks_at = |depth: usize| {
         let (path, _) = make_rvol(&dir, 91, 109, depth);
-        stream_once(&path, &params, Backend::Histogram, 2).1.peak_resident_bytes
+        let hist = stream_once(&path, &params, Backend::Histogram, 2, false).1;
+        let spat = stream_spatial_once(&path, &params, 2, false).1;
+        (hist.peak_resident_bytes, spat.peak_resident_bytes)
     };
-    let (p_a, p_b) = (peak_at(6), peak_at(48));
-    let bounded = p_a == p_b;
+    let (h_a, s_a) = peaks_at(6);
+    let (h_b, s_b) = peaks_at(48);
+    let bounded = h_a == h_b && s_a == s_b;
     println!(
-        "GATE stream-hist peak resident bytes depth-independent: {} ({p_a} vs {p_b})",
+        "GATE streamed peak resident bytes depth-independent: {} \
+         (hist {h_a} vs {h_b}, spatial {s_a} vs {s_b})",
         if bounded { "PASS" } else { "FAIL" }
     );
 
@@ -192,20 +291,23 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Record the sweep in BENCH_PR4.json at the repo root (hand-rolled
+/// Record the sweep in BENCH_PR5.json at the repo root (hand-rolled
 /// JSON: the offline build has no serde).
 fn write_json(rows: &[SizeRow], identical: bool, bounded: bool, quick: bool) -> anyhow::Result<()> {
     let path = match std::env::var("CARGO_MANIFEST_DIR") {
-        Ok(dir) => std::path::Path::new(&dir).join("../BENCH_PR4.json"),
-        Err(_) => std::path::PathBuf::from("BENCH_PR4.json"),
+        Ok(dir) => std::path::Path::new(&dir).join("../BENCH_PR5.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_PR5.json"),
     };
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"pr\": 4,\n");
+    s.push_str("  \"pr\": 5,\n");
     s.push_str("  \"bench\": \"streaming\",\n");
     s.push_str("  \"status\": \"measured\",\n");
     s.push_str(&format!("  \"quick\": {quick},\n"));
-    s.push_str("  \"params\": {\"clusters\": 4, \"m\": 2.0, \"epsilon\": 0.005, \"seed\": 42, \"tile_slices\": 4},\n");
+    s.push_str(
+        "  \"params\": {\"clusters\": 4, \"m\": 2.0, \"epsilon\": 0.005, \"seed\": 42, \
+         \"tile_slices\": 4},\n",
+    );
     s.push_str(&format!(
         "  \"gates\": {{\"byte_identical\": {identical}, \"peak_depth_independent\": {bounded}}},\n"
     ));
@@ -221,17 +323,25 @@ fn write_json(rows: &[SizeRow], identical: bool, bounded: bool, quick: bool) -> 
             )
         };
         s.push_str(&format!(
-            "    {{\"shape\": [{}, {}, {}], \"voxels\": {}, \"mem_hist\": {}, \"stream_hist\": {}, \
-             \"stream_slab\": {}, \"hist_peak_bytes\": {}, \"slab_peak_bytes\": {}}}{}\n",
+            "    {{\"shape\": [{}, {}, {}], \"voxels\": {}, \"mem_hist\": {}, \
+             \"stream_hist\": {}, \"stream_hist_prefetch\": {}, \"stream_slab\": {}, \
+             \"stream_slab_prefetch\": {}, \"stream_spatial\": {}, \
+             \"stream_spatial_prefetch\": {}, \"hist_peak_bytes\": {}, \
+             \"slab_peak_bytes\": {}, \"spatial_peak_bytes\": {}}}{}\n",
             r.width,
             r.height,
             r.depth,
             r.voxels,
             path_json(&r.mem_hist),
             path_json(&r.stream_hist),
+            path_json(&r.stream_hist_pf),
             path_json(&r.stream_slab),
+            path_json(&r.stream_slab_pf),
+            path_json(&r.stream_spatial),
+            path_json(&r.stream_spatial_pf),
             r.hist_peak_bytes,
             r.slab_peak_bytes,
+            r.spatial_peak_bytes,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -71,6 +71,11 @@ pub struct EngineConfig {
     /// (`segment-volume --stream`; `--tile-slices` overrides per run).
     /// Memory budget only — results are identical for every value.
     pub tile_slices: usize,
+    /// Double-buffered tile prefetch on the out-of-core volume path: a
+    /// dedicated I/O thread reads tile k+1 while the engine computes on
+    /// tile k (`image::volume::stream::TilePrefetcher`). Reorders I/O
+    /// only — results are identical either way.
+    pub prefetch: bool,
 }
 
 impl Default for EngineConfig {
@@ -80,6 +85,7 @@ impl Default for EngineConfig {
             threads: 0,
             chunk: 4096,
             tile_slices: 8,
+            prefetch: true,
         }
     }
 }
@@ -148,6 +154,7 @@ pub const KEYS: &[&str] = &[
     "engine_threads",
     "engine_chunk",
     "tile_slices",
+    "prefetch",
     "workers",
     "max_batch",
     "queue_depth",
@@ -208,6 +215,7 @@ impl Config {
             "engine_threads" => self.engine.threads = parse(key, v)?,
             "engine_chunk" => self.engine.chunk = parse(key, v)?,
             "tile_slices" => self.engine.tile_slices = parse(key, v)?,
+            "prefetch" => self.engine.prefetch = parse(key, v)?,
             "workers" => self.service.workers = parse(key, v)?,
             "max_batch" => self.service.max_batch = parse(key, v)?,
             "queue_depth" => self.service.queue_depth = parse(key, v)?,
@@ -311,6 +319,10 @@ mod tests {
         assert!(Config::from_str("backend = cuda\n").is_err());
         assert!(Config::from_str("engine_chunk = 0\n").is_err());
         assert!(Config::from_str("tile_slices = 0\n").is_err());
+        // Prefetch defaults on; parses as a boolean.
+        assert!(Config::new().engine.prefetch);
+        assert!(!Config::from_str("prefetch = false\n").unwrap().engine.prefetch);
+        assert!(Config::from_str("prefetch = maybe\n").is_err());
         // Default: parallel, auto threads.
         let d = Config::new();
         assert_eq!(d.engine.backend, crate::fcm::Backend::Parallel);
@@ -336,7 +348,7 @@ mod tests {
                 "backend" => "parallel",
                 "artifacts_dir" => "x",
                 "m" | "epsilon" => "2.0",
-                "batch_execute" => "true",
+                "batch_execute" | "prefetch" => "true",
                 _ => "3",
             };
             c.set(key, probe).unwrap_or_else(|e| panic!("key {key}: {e}"));

@@ -95,18 +95,25 @@ impl From<crate::fcm::Backend> for Engine {
 /// A file-backed volume job: the queue carries **paths and tiling**,
 /// never the voxels — the worker streams tiles straight from `input`
 /// through [`crate::coordinator::FcmBackend::segment_volume_streamed`]
-/// and appends canonical labels to `output` (RVOL in, RVOL out), so a
+/// and appends canonical labels to `output` (RVOL in, RVOL out — or a
+/// per-slice PGM directory in, streamed through the same seam), so a
 /// volume larger than RAM can ride the service queue.
 #[derive(Clone, Debug)]
 pub struct StreamVolumeJob {
-    /// RVOL file holding the voxel field.
+    /// RVOL file — or directory of per-slice PGMs — holding the voxel
+    /// field.
     pub input: std::path::PathBuf,
     /// Optional sibling mask RVOL (0 = excluded voxel), same shape.
+    /// RVOL inputs only.
     pub mask: Option<std::path::PathBuf>,
     /// RVOL file the canonical labels are written to.
     pub output: std::path::PathBuf,
     /// Slices per resident tile (the job's memory budget).
     pub tile_slices: usize,
+    /// Double-buffered tile prefetch: overlap the job's tile I/O with
+    /// compute on a dedicated reader thread. Reorders I/O only —
+    /// results are identical either way.
+    pub prefetch: bool,
 }
 
 /// A segmentation request. Slice jobs carry `features`; volume jobs

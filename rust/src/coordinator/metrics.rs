@@ -195,6 +195,33 @@ mod tests {
     }
 
     #[test]
+    fn stream_high_water_is_exact_under_concurrency() {
+        // fetch_max semantics: with many threads racing different peak
+        // values, the mark must land on exactly the global maximum (a
+        // plain load+store race would lose it) and the run counter on
+        // exactly the number of runs.
+        let m = std::sync::Arc::new(Metrics::default());
+        let hs: Vec<_> = (0..8usize)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for k in 0..500usize {
+                        // Every thread reports a distinct sequence; the
+                        // global max is known in closed form.
+                        m.stream_run(1 + t * 1000 + k);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.streamed_runs, 8 * 500);
+        assert_eq!(s.stream_peak_resident_bytes, 1 + 7 * 1000 + 499);
+    }
+
+    #[test]
     fn per_engine_batch_stats() {
         let m = Metrics::default();
         m.batch_served(Engine::Parallel, 4, 0.2);

@@ -37,7 +37,9 @@ use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
 use crate::fcm::{EngineOpts, FcmParams};
-use crate::image::volume::stream::{RvolReader, RvolWriter, VoxelSource};
+use crate::image::volume::stream::{
+    PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
+};
 use crate::image::{FeatureVector, GrayImage, VoxelVolume};
 use crate::runtime::Registry;
 use anyhow::{anyhow, Result};
@@ -342,8 +344,30 @@ fn serve_volume_job(
     }
 }
 
-/// Serve one file-backed (streamed) volume job: open the RVOL source
-/// (and mask, when the job names one), stream canonical labels to the
+/// Open the voxel source a streamed job names: an RVOL file (optionally
+/// paired with a mask RVOL) or a directory of per-slice PGMs, wrapped
+/// in a [`TilePrefetcher`] when the job asks for overlapped tile I/O.
+fn open_stream_source(spec: &StreamVolumeJob) -> Result<Box<dyn VoxelSource + Send>> {
+    let mut src: Box<dyn VoxelSource + Send> = if spec.input.is_dir() {
+        if spec.mask.is_some() {
+            return Err(anyhow!("mask pairing needs an RVOL input, not a PGM directory"));
+        }
+        Box::new(PgmStackSource::open(&spec.input)?)
+    } else {
+        match &spec.mask {
+            Some(mask) => Box::new(RvolReader::with_mask(&spec.input, mask)?),
+            None => Box::new(RvolReader::open(&spec.input)?),
+        }
+    };
+    if spec.prefetch {
+        src = Box::new(TilePrefetcher::new(src));
+    }
+    Ok(src)
+}
+
+/// Serve one file-backed (streamed) volume job: open the source
+/// ([`open_stream_source`] — RVOL file, paired mask, or PGM-stack
+/// directory, with optional prefetch), stream canonical labels to the
 /// output RVOL through `FcmBackend::segment_volume_streamed`, and
 /// record the run's peak resident tile bytes in the metrics.
 fn serve_stream_job(
@@ -357,15 +381,12 @@ fn serve_stream_job(
     let spec = job.stream.clone().expect("stream job");
     let queue_wait_s = job.submitted.elapsed().as_secs_f64();
     let outcome = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
-        let mut src = match &spec.mask {
-            Some(mask) => RvolReader::with_mask(&spec.input, mask)?,
-            None => RvolReader::open(&spec.input)?,
-        };
+        let mut src = open_stream_source(&spec)?;
         let (w, h, d) = (src.width(), src.height(), src.depth());
         let mut sink = RvolWriter::create(&spec.output, w, h, d)?;
         let t0 = Instant::now();
         let out =
-            backend.segment_volume_streamed(&mut src, &mut sink, &job.params, spec.tile_slices)?;
+            backend.segment_volume_streamed(&mut *src, &mut sink, &job.params, spec.tile_slices)?;
         sink.finish()?;
         let wall = t0.elapsed().as_secs_f64();
         metrics.batch_served(job.engine, 1, wall);
@@ -566,6 +587,7 @@ mod tests {
                 mask: None,
                 output: std::path::PathBuf::from("out.rvol"),
                 tile_slices: 4,
+                prefetch: true,
             }),
             params,
             engine,

@@ -27,6 +27,14 @@
 //!   source per iteration. Iteration 1 replays the seeded u_0 stream
 //!   ([`crate::fcm::init_membership_tile`]) — tiles arrive in z order,
 //!   so one serial RNG reproduces the in-memory init exactly.
+//! * **Halo-streamed spatial path** ([`run_streamed_spatial`]). The
+//!   noise-robust spatial engine runs out of core too: each tile is
+//!   read with a ±1-slice halo (the 3×3×3 window needs only a 3-slice
+//!   support), phase-2 memberships are recomputed per halo-tile from
+//!   the defining centers, and the separable box filter runs on the
+//!   haloed tile with absolute-z clamping — bit-identical to the
+//!   in-memory `spatial::run_volume` for every tile size, thread
+//!   count, and q (see its docs for the two-pass-per-iteration shape).
 //!
 //! Why results cannot depend on the tile size: tiles change only how
 //! much of the field is resident. The partial grid stays the axial
@@ -47,8 +55,9 @@ use super::pool::Pool;
 use super::reduce::tree_reduce;
 use super::volume::{bin_iterations, BINS};
 use super::Backend;
-use crate::fcm::{canonical_order, defuzzify, init_membership_tile, FcmParams};
-use crate::image::volume::stream::{tile_ranges, LabelSink, VoxelSource};
+use crate::fcm::spatial::{pw, SpatialParams};
+use crate::fcm::{canonical_order, defuzzify, init_membership_tile, FcmParams, DEN_EPS};
+use crate::image::volume::stream::{halo_range, tile_ranges, LabelSink, VoxelSource};
 use crate::util::Rng64;
 use anyhow::Result;
 use std::sync::Mutex;
@@ -329,17 +338,34 @@ fn tile_pass(
         .collect()
 }
 
-/// The tile-recompute slab path (module docs): per-iteration state is
-/// two center vectors; each iteration re-reads the source tile by tile.
-fn tiles_streamed(
+/// The engine state a finished plain tile iteration loop leaves
+/// behind. `centers` is the vector the **last pass used** (exactly the
+/// in-memory `run_slab` end state), so the final voxel-level
+/// memberships are a pure function of it via
+/// [`recompute_memberships`] — which is how both the labeling pass and
+/// the streamed spatial phase 2 consume it without a resident matrix.
+struct TilesIterated {
+    centers: Vec<f32>,
+    iterations: usize,
+    converged: bool,
+    final_delta: f32,
+    jm_history: Vec<f64>,
+    /// Bytes of the iteration loop's voxel-proportional buffers.
+    resident_bytes: usize,
+}
+
+/// The plain tile-recompute iteration loop (module docs): pass 0
+/// (streamed u_0 → centers_1) plus the fused iterations, re-reading the
+/// source once per iteration. Shared by [`tiles_streamed`] (which
+/// appends the labeling pass) and [`run_streamed_spatial`] (which
+/// appends the spatial phase 2 instead — this loop IS its phase 1).
+fn tiles_iterate(
     src: &mut dyn VoxelSource,
-    sink: &mut dyn LabelSink,
     params: &FcmParams,
     opts: &StreamOpts,
-) -> Result<StreamRun> {
+) -> Result<TilesIterated> {
     let area = src.slice_area();
     let depth = src.depth();
-    let n = area * depth;
     let c = params.clusters;
     let m = params.m as f64;
     let t = opts.tile_slices.max(1).min(depth);
@@ -351,19 +377,17 @@ fn tiles_streamed(
     };
     let pool = super::pool::global(threads);
 
-    // The resident set: one raw/mask/label tile, its f32 mirror, two
+    // The resident set: one raw/mask tile, its f32 mirror, two
     // per-slice-major membership tiles, and the recompute zero scratch.
     let mut raw = vec![0u8; t * area];
     let mut mraw = vec![0u8; t * area];
-    let mut labels = vec![0u8; t * area];
     let mut x = vec![0f32; t * area];
     let mut w = vec![0f32; t * area];
     let mut u_prev = vec![0f32; c * t * area];
     let mut u_new = vec![0f32; c * t * area];
     let zeros = vec![0f32; c * area];
-    let peak_resident_bytes = raw.len()
+    let resident_bytes = raw.len()
         + mraw.len()
-        + labels.len()
         + 4 * (x.len() + w.len() + u_prev.len() + u_new.len() + zeros.len());
 
     // Pass 0: centers_1 from the streamed u_0 — the same per-slice
@@ -450,9 +474,45 @@ fn tiles_streamed(
         }
     }
 
+    Ok(TilesIterated {
+        centers,
+        iterations,
+        converged,
+        final_delta,
+        jm_history,
+        resident_bytes,
+    })
+}
+
+/// The tile-recompute slab path (module docs): per-iteration state is
+/// two center vectors; each iteration re-reads the source tile by tile.
+fn tiles_streamed(
+    src: &mut dyn VoxelSource,
+    sink: &mut dyn LabelSink,
+    params: &FcmParams,
+    opts: &StreamOpts,
+) -> Result<StreamRun> {
+    let area = src.slice_area();
+    let depth = src.depth();
+    let n = area * depth;
+    let c = params.clusters;
+    let m = params.m as f64;
+    let t = opts.tile_slices.max(1).min(depth);
+    let tiles = tile_ranges(depth, t);
+
+    let it = tiles_iterate(src, params, opts)?;
+    let centers = it.centers;
+
     // Labeling pass: the final memberships are a pure function of the
     // final centers — recompute per tile, defuzzify, canonicalize, pin
     // the masked sentinel, stream out.
+    let mut raw = vec![0u8; t * area];
+    let mut mraw = vec![0u8; t * area];
+    let mut labels = vec![0u8; t * area];
+    let mut x = vec![0f32; t * area];
+    let mut w = vec![0f32; t * area];
+    let mut u_new = vec![0f32; c * t * area];
+    let zeros = vec![0f32; c * area];
     let (order, rank) = canonical_order(&centers);
     for &(z0, nz) in &tiles {
         load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
@@ -471,6 +531,441 @@ fn tiles_streamed(
             }
         }
         sink.write_slab(&labels[..nz * area])?;
+    }
+
+    Ok(StreamRun {
+        centers: order.iter().map(|&o| centers[o]).collect(),
+        iterations: it.iterations,
+        converged: it.converged,
+        final_delta: it.final_delta,
+        jm_history: it.jm_history,
+        work_per_iter: n,
+        voxels: n,
+        // The iteration loop's buffer set (a superset of the labeling
+        // pass's modulo the u8 label tile) plus the label tile — the
+        // same total the pre-refactor single-allocation path reported.
+        peak_resident_bytes: it.resident_bytes + labels.len(),
+    })
+}
+
+/// Recompute the **unmodulated** memberships (a pure function of the
+/// centers) for slices `[0, hnz)` of the loaded halo into `u_raw`
+/// (cluster-major, row stride `raw_stride`). Per-slice
+/// [`recompute_memberships`] calls — per-voxel arithmetic identical to
+/// `sequential::update_memberships`, which is what the in-memory
+/// phase 2 runs.
+#[allow(clippy::too_many_arguments)]
+fn raw_memberships_halo(
+    x: &[f32],
+    wts: &[f32],
+    hnz: usize,
+    area: usize,
+    centers: &[f32],
+    m: f64,
+    zeros: &[f32],
+    u_raw: &mut [f32],
+    raw_stride: usize,
+) {
+    for s in 0..hnz {
+        let xs = &x[s * area..(s + 1) * area];
+        let ws = &wts[s * area..(s + 1) * area];
+        let mut rows: Vec<&mut [f32]> = u_raw
+            .chunks_mut(raw_stride)
+            .map(|r| &mut r[s * area..(s + 1) * area])
+            .collect();
+        recompute_memberships(xs, ws, centers, m, zeros, &mut rows);
+    }
+}
+
+/// Recompute the **modulated** phase-2 memberships of tile
+/// `[z0, z0+nz)` from the centers that define them: raw memberships on
+/// the loaded ±`radius`-slice halo, the separable three-pass box
+/// filter with **absolute-z** clamping (so a tile's filtered values
+/// are exactly the in-memory whole-volume filter's), then the p/q
+/// modulation on the interior — per-voxel arithmetic identical to
+/// `spatial::spatial_iterations` + `spatial_function_3d`. Results land
+/// in `dst` (cluster-major, row stride `row_stride`, first `nz·area`
+/// of each row valid).
+#[allow(clippy::too_many_arguments)]
+fn spatial_recompute_tile(
+    x: &[f32],
+    wts: &[f32],
+    geom: (usize, usize, usize),
+    (z0, nz): (usize, usize),
+    (hz0, hnz): (usize, usize),
+    sp: &SpatialParams,
+    centers: &[f32],
+    m: f64,
+    zeros: &[f32],
+    u_raw: &mut [f32],
+    raw_stride: usize,
+    tmp1: &mut [f32],
+    tmp2: &mut [f32],
+    dst: &mut [f32],
+    row_stride: usize,
+) {
+    let (gw, gh, depth) = geom;
+    let area = gw * gh;
+    let c = centers.len();
+    let radius = sp.radius;
+    raw_memberships_halo(x, wts, hnz, area, centers, m, zeros, u_raw, raw_stride);
+
+    let interior = (z0 - hz0) * area;
+    // Filter each cluster's halo field; tmp1/tmp2 are reused across
+    // clusters, with the filtered interior parked in `dst` until the
+    // per-voxel modulation below combines all clusters.
+    for j in 0..c {
+        let row = &u_raw[j * raw_stride..j * raw_stride + hnz * area];
+        // Pass 1: along x (slice-local, whole halo).
+        for s in 0..hnz {
+            for r in 0..gh {
+                let base = s * area + r * gw;
+                for col in 0..gw {
+                    let lo = col.saturating_sub(radius);
+                    let hi = (col + radius).min(gw - 1);
+                    let mut acc = 0f32;
+                    for cc in lo..=hi {
+                        acc += row[base + cc];
+                    }
+                    tmp1[base + col] = acc;
+                }
+            }
+        }
+        // Pass 2: along y (slice-local, whole halo).
+        for s in 0..hnz {
+            for r in 0..gh {
+                let lo = r.saturating_sub(radius);
+                let hi = (r + radius).min(gh - 1);
+                for col in 0..gw {
+                    let mut acc = 0f32;
+                    for rr in lo..=hi {
+                        acc += tmp1[s * area + rr * gw + col];
+                    }
+                    tmp2[s * area + r * gw + col] = acc;
+                }
+            }
+        }
+        // Pass 3: along z, interior slices only, clamped against the
+        // VOLUME bounds (the halo covers every clamped index by
+        // construction of `halo_range`).
+        let hrow = &mut dst[j * row_stride..j * row_stride + nz * area];
+        for s in 0..nz {
+            let z = z0 + s;
+            let lo = z.saturating_sub(radius);
+            let hi = (z + radius).min(depth - 1);
+            for (i, v) in hrow[s * area..(s + 1) * area].iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for zz in lo..=hi {
+                    acc += tmp2[(zz - hz0) * area + i];
+                }
+                *v = acc;
+            }
+        }
+    }
+    // Modulation: v = u^p · h^q, row-normalized — dst currently holds h
+    // per cluster; combine with the raw interior memberships in place,
+    // in exactly `spatial_iterations`' per-voxel order.
+    for i in 0..nz * area {
+        let mut sum = 0f32;
+        for j in 0..c {
+            let v =
+                pw(u_raw[j * raw_stride + interior + i], sp.p) * pw(dst[j * row_stride + i], sp.q);
+            dst[j * row_stride + i] = v;
+            sum += v;
+        }
+        if sum > 0.0 {
+            for j in 0..c {
+                dst[j * row_stride + i] /= sum;
+            }
+        }
+    }
+}
+
+/// Streamed spatial 3-D FCM — the out-of-core counterpart of
+/// [`crate::fcm::spatial::run_volume`], **bit-identical** to it (after
+/// its serving-layer canonicalization) for every tile size, thread
+/// count, and q.
+///
+/// Phase 1 is [`tiles_iterate`] — the plain tile-recompute slab loop,
+/// already bit-identical to the in-memory `run_volume(Parallel)` phase
+/// 1 (`opts.backend` is ignored: in-memory spatial always runs the
+/// slab path). Phase 2 exploits the same purity argument one level up:
+/// the modulated memberships u_k are a pure function of the centers
+/// that produced them — u_raw = f(x, w, centers) per voxel, h = box(u_raw)
+/// needs only a ±`radius`-slice halo (3 slices of support for the
+/// 3×3×3 window), and the modulation is per-voxel. So per-iteration
+/// resident state is again just center vectors:
+///
+/// * **pass A** re-reads each tile with its halo, recomputes u_k, and
+///   accumulates the per-cluster center sigma sums in voxel order —
+///   the exact accumulation order of `sequential::update_centers` over
+///   the whole field, so the new centers match bit for bit;
+/// * **pass B** re-reads again, recomputes u_k and u_{k+1}, and
+///   accumulates the convergence delta (an order-free f32 max) plus
+///   the per-cluster J_m partials (folded in ascending cluster order —
+///   the same total `spatial_iterations` now computes via
+///   `objective_by_cluster`).
+///
+/// The final labeling pass recomputes u from the final centers per
+/// halo-tile, defuzzifies, canonicalizes and pins the masked sentinel
+/// on the way out — labels stream to the sink byte-identical to the
+/// served in-memory spatial labels. Two full source reads per phase-2
+/// iteration (plus phase 1's one) are the out-of-core price.
+pub fn run_streamed_spatial(
+    src: &mut dyn VoxelSource,
+    sink: &mut dyn LabelSink,
+    params: &FcmParams,
+    sp: &SpatialParams,
+    opts: &StreamOpts,
+) -> Result<StreamRun> {
+    let c = params.clusters;
+    if src.is_empty() {
+        return Ok(StreamRun {
+            centers: vec![0.0; c],
+            iterations: 0,
+            converged: true,
+            final_delta: 0.0,
+            jm_history: Vec::new(),
+            work_per_iter: 0,
+            voxels: 0,
+            peak_resident_bytes: 0,
+        });
+    }
+    assert!(params.max_iters >= 1, "max_iters must be >= 1");
+    let plain_opts = StreamOpts {
+        backend: Backend::Parallel,
+        ..*opts
+    };
+    // q = 0: the spatial term is identically 1 and no phase-2 iteration
+    // may run — the plain tile path IS the run (mirrors `run_volume`).
+    if sp.q == 0.0 {
+        return run_streamed(src, sink, params, &plain_opts);
+    }
+
+    let (gw, gh) = (src.width(), src.height());
+    let area = src.slice_area();
+    let depth = src.depth();
+    let n = area * depth;
+    let m = params.m as f64;
+    let t = opts.tile_slices.max(1).min(depth);
+    let tiles = tile_ranges(depth, t);
+    let radius = sp.radius;
+
+    // Phase 1: plain volumetric FCM to convergence, out of core.
+    let plain = tiles_iterate(src, params, &plain_opts)?;
+
+    // Phase-2 buffers, all sized by the halo tile (at most t + 2·radius
+    // slices) — the +2-halo-slices term of the bounded-memory claim.
+    let ht = (t + 2 * radius).min(depth);
+    let raw_stride = ht * area;
+    let row_stride = t * area;
+    let mut raw = vec![0u8; raw_stride];
+    let mut mraw = vec![0u8; raw_stride];
+    let mut x = vec![0f32; raw_stride];
+    let mut wts = vec![0f32; raw_stride];
+    let mut u_raw = vec![0f32; c * raw_stride];
+    let mut tmp1 = vec![0f32; raw_stride];
+    let mut tmp2 = vec![0f32; raw_stride];
+    let mut u_a = vec![0f32; c * row_stride];
+    let mut u_b = vec![0f32; c * row_stride];
+    let mut labels = vec![0u8; row_stride];
+    let zeros = vec![0f32; c * area];
+    let phase2_bytes = raw.len()
+        + mraw.len()
+        + labels.len()
+        + 4 * (x.len()
+            + wts.len()
+            + u_raw.len()
+            + tmp1.len()
+            + tmp2.len()
+            + u_a.len()
+            + u_b.len()
+            + zeros.len());
+    let peak_resident_bytes = plain.resident_bytes.max(phase2_bytes);
+
+    // Phase-2 state: the centers that define the current memberships
+    // (plain.centers define u_0 = the converged plain run's matrix) and
+    // whether they do so through the modulation or not.
+    let mut prev_centers = plain.centers.clone();
+    let mut prev_is_plain = true;
+    let mut centers = vec![0f32; c];
+    let mut jm_history = plain.jm_history;
+    let mut iterations = plain.iterations;
+    let mut final_delta = plain.final_delta;
+    let mut converged = false;
+
+    // u_k for the current tile into `u_a`, from the phase-2 state.
+    macro_rules! recompute_u_k {
+        ($z0:expr, $nz:expr, $hz0:expr, $hnz:expr) => {{
+            if prev_is_plain {
+                // The plain matrix carries no modulation: recompute the
+                // interior slices directly (no halo dependence).
+                let off = ($z0 - $hz0) * area;
+                for s in 0..$nz {
+                    let xs = &x[off + s * area..off + (s + 1) * area];
+                    let ws = &wts[off + s * area..off + (s + 1) * area];
+                    let mut rows: Vec<&mut [f32]> = u_a
+                        .chunks_mut(row_stride)
+                        .map(|r| &mut r[s * area..(s + 1) * area])
+                        .collect();
+                    recompute_memberships(xs, ws, &prev_centers, m, &zeros, &mut rows);
+                }
+            } else {
+                spatial_recompute_tile(
+                    &x,
+                    &wts,
+                    (gw, gh, depth),
+                    ($z0, $nz),
+                    ($hz0, $hnz),
+                    sp,
+                    &prev_centers,
+                    m,
+                    &zeros,
+                    &mut u_raw,
+                    raw_stride,
+                    &mut tmp1,
+                    &mut tmp2,
+                    &mut u_a,
+                    row_stride,
+                );
+            }
+        }};
+    }
+
+    for _ in 0..params.max_iters {
+        iterations += 1;
+
+        // Pass A: new centers from u_k — per-cluster sigma sums in
+        // voxel order (`sequential::update_centers`' accumulation).
+        let mut num = vec![0f64; c];
+        let mut den = vec![0f64; c];
+        for &(z0, nz) in &tiles {
+            let (hz0, hnz) = halo_range(z0, nz, depth, radius);
+            load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
+            recompute_u_k!(z0, nz, hz0, hnz);
+            let off = (z0 - hz0) * area;
+            let len = nz * area;
+            for j in 0..c {
+                let row = &u_a[j * row_stride..j * row_stride + len];
+                let (nj, dj) = (&mut num[j], &mut den[j]);
+                if m == 2.0 {
+                    for (i, &ui) in row.iter().enumerate() {
+                        let wum = wts[off + i] as f64 * (ui as f64) * (ui as f64);
+                        *nj += wum * x[off + i] as f64;
+                        *dj += wum;
+                    }
+                } else {
+                    for (i, &ui) in row.iter().enumerate() {
+                        let wum = wts[off + i] as f64 * (ui as f64).powf(m);
+                        *nj += wum * x[off + i] as f64;
+                        *dj += wum;
+                    }
+                }
+            }
+        }
+        for j in 0..c {
+            centers[j] = (num[j] / den[j].max(DEN_EPS)) as f32;
+        }
+
+        // Pass B: u_{k+1} from the new centers; delta vs u_k and the
+        // per-cluster J_m partials, accumulated tile by tile.
+        let mut delta = 0f32;
+        let mut jm = vec![0f64; c];
+        for &(z0, nz) in &tiles {
+            let (hz0, hnz) = halo_range(z0, nz, depth, radius);
+            load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
+            recompute_u_k!(z0, nz, hz0, hnz);
+            spatial_recompute_tile(
+                &x,
+                &wts,
+                (gw, gh, depth),
+                (z0, nz),
+                (hz0, hnz),
+                sp,
+                &centers,
+                m,
+                &zeros,
+                &mut u_raw,
+                raw_stride,
+                &mut tmp1,
+                &mut tmp2,
+                &mut u_b,
+                row_stride,
+            );
+            let off = (z0 - hz0) * area;
+            let len = nz * area;
+            for j in 0..c {
+                let new = &u_b[j * row_stride..j * row_stride + len];
+                let old = &u_a[j * row_stride..j * row_stride + len];
+                for (a, b) in old.iter().zip(new) {
+                    delta = delta.max((b - a).abs());
+                }
+                let vj = centers[j] as f64;
+                let jj = &mut jm[j];
+                if params.m == 2.0 {
+                    for (i, &ui) in new.iter().enumerate() {
+                        let d = x[off + i] as f64 - vj;
+                        let uf = ui as f64;
+                        *jj += wts[off + i] as f64 * uf * uf * d * d;
+                    }
+                } else {
+                    for (i, &ui) in new.iter().enumerate() {
+                        let d = x[off + i] as f64 - vj;
+                        *jj += wts[off + i] as f64 * (ui as f64).powf(params.m as f64) * d * d;
+                    }
+                }
+            }
+        }
+        jm_history.push(jm.iter().sum());
+        final_delta = delta;
+        prev_centers.copy_from_slice(&centers);
+        prev_is_plain = false;
+        if delta < params.epsilon {
+            converged = true;
+            break;
+        }
+    }
+
+    // Labeling pass: u is a pure function of the final centers —
+    // recompute per halo-tile, defuzzify, canonicalize, pin the masked
+    // sentinel, stream out.
+    let (order, rank) = canonical_order(&centers);
+    for &(z0, nz) in &tiles {
+        let (hz0, hnz) = halo_range(z0, nz, depth, radius);
+        load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
+        spatial_recompute_tile(
+            &x,
+            &wts,
+            (gw, gh, depth),
+            (z0, nz),
+            (hz0, hnz),
+            sp,
+            &centers,
+            m,
+            &zeros,
+            &mut u_raw,
+            raw_stride,
+            &mut tmp1,
+            &mut tmp2,
+            &mut u_b,
+            row_stride,
+        );
+        let off = (z0 - hz0) * area;
+        let len = nz * area;
+        for (i, l) in labels[..len].iter_mut().enumerate() {
+            // Argmax with defuzzify's tie-break (strictly greater wins).
+            let mut best = 0usize;
+            let mut best_v = u_b[i];
+            for j in 1..c {
+                let v = u_b[j * row_stride + i];
+                if v > best_v {
+                    best_v = v;
+                    best = j;
+                }
+            }
+            *l = if wts[off + i] > 0.0 { rank[best] } else { 0 };
+        }
+        sink.write_slab(&labels[..len])?;
     }
 
     Ok(StreamRun {
@@ -572,6 +1067,140 @@ mod tests {
             assert_eq!(run.centers, mem.run.centers, "{backend:?}");
             assert_eq!(run.jm_history, mem.run.jm_history, "{backend:?}");
         }
+    }
+
+    #[test]
+    fn streamed_spatial_matches_in_memory_bitwise() {
+        // THE tentpole gate at engine level: the halo-streamed spatial
+        // path equals the served in-memory spatial run exactly, for
+        // every tile size (ragged last tiles included) and thread count.
+        let vol = small_volume(6);
+        let params = FcmParams::default();
+        let sp = SpatialParams::default();
+        let mut mem =
+            crate::fcm::spatial::run_volume(&vol, &params, &sp, &VolumeOpts::default());
+        canonical_relabel(&mut mem.run);
+        for tile in [1usize, 3, 17] {
+            for threads in [1usize, 2, 8] {
+                let mut src = vol.clone();
+                let mut sink = Vec::new();
+                let run = run_streamed_spatial(
+                    &mut src,
+                    &mut sink,
+                    &params,
+                    &sp,
+                    &StreamOpts {
+                        backend: Backend::Parallel,
+                        threads,
+                        tile_slices: tile,
+                    },
+                )
+                .unwrap();
+                assert_eq!(sink, mem.run.labels, "tile {tile} threads {threads}");
+                assert_eq!(run.centers, mem.run.centers, "tile {tile} threads {threads}");
+                assert_eq!(run.jm_history, mem.run.jm_history, "tile {tile}");
+                assert_eq!(run.iterations, mem.run.iterations);
+                assert_eq!(run.final_delta, mem.run.final_delta);
+                assert_eq!(run.converged, mem.run.converged);
+                assert_eq!(run.work_per_iter, vol.len());
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_spatial_q_zero_is_the_plain_tile_path() {
+        // q = 0 turns the modulation into the identity: the run must BE
+        // the plain streamed slab run, bit for bit, with no phase-2
+        // iterations executed.
+        let vol = small_volume(5);
+        let params = FcmParams::default();
+        let sp = SpatialParams {
+            q: 0.0,
+            ..SpatialParams::default()
+        };
+        let opts = StreamOpts {
+            backend: Backend::Parallel,
+            threads: 2,
+            tile_slices: 3,
+        };
+        let (plain_labels, plain_run) = streamed(&vol, &params, &opts);
+        let mut src = vol.clone();
+        let mut sink = Vec::new();
+        let run = run_streamed_spatial(&mut src, &mut sink, &params, &sp, &opts).unwrap();
+        assert_eq!(sink, plain_labels);
+        assert_eq!(run.centers, plain_run.centers);
+        assert_eq!(run.iterations, plain_run.iterations);
+        assert_eq!(run.jm_history, plain_run.jm_history);
+    }
+
+    #[test]
+    fn streamed_spatial_masked_pins_the_sentinel() {
+        let base = small_volume(4);
+        let mut mask = vec![1u8; base.len()];
+        for i in (0..base.len()).step_by(5) {
+            mask[i] = 0;
+        }
+        let vol = base.with_mask(mask.clone());
+        let params = FcmParams::default();
+        let mut src = vol.clone();
+        let mut sink = Vec::new();
+        run_streamed_spatial(
+            &mut src,
+            &mut sink,
+            &params,
+            &SpatialParams::default(),
+            &StreamOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(sink.len(), vol.len());
+        for (i, (&l, &mk)) in sink.iter().zip(&mask).enumerate() {
+            if mk == 0 {
+                assert_eq!(l, 0, "masked voxel {i} lost the sentinel");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_spatial_peak_resident_is_depth_independent() {
+        // The halo adds at most 2·radius slices to the resident tile;
+        // the total never depends on the volume's depth.
+        let shallow = small_volume(5);
+        let deep = small_volume(20);
+        let params = FcmParams::default();
+        let sp = SpatialParams::default();
+        let opts = StreamOpts {
+            backend: Backend::Parallel,
+            threads: 1,
+            tile_slices: 2,
+        };
+        let peak = |vol: &VoxelVolume| {
+            let mut src = vol.clone();
+            let mut sink = Vec::new();
+            run_streamed_spatial(&mut src, &mut sink, &params, &sp, &opts)
+                .unwrap()
+                .peak_resident_bytes
+        };
+        let (a, b) = (peak(&shallow), peak(&deep));
+        assert_eq!(a, b, "spatial peak must depend on the tile, not the depth");
+        assert!(b > 0);
+        // And it grows with the tile budget, not the volume.
+        let bigger_tile = {
+            let mut src = shallow.clone();
+            let mut sink = Vec::new();
+            run_streamed_spatial(
+                &mut src,
+                &mut sink,
+                &params,
+                &sp,
+                &StreamOpts {
+                    tile_slices: 4,
+                    ..opts
+                },
+            )
+            .unwrap()
+            .peak_resident_bytes
+        };
+        assert!(bigger_tile > a);
     }
 
     #[test]

@@ -201,6 +201,46 @@ pub fn objective(x: &[f32], w: &[f32], u: &[f32], centers: &[f32], m: f32) -> f6
     jm
 }
 
+/// J_m split into per-cluster partial sums (each accumulated over
+/// pixels in index order — the same inner loops as [`objective`]).
+/// Summing the returned vector in ascending cluster order yields a
+/// total whose rounding depends only on (data, c) — never on how much
+/// of the field was resident when a partial was accumulated. That is
+/// what lets the streamed spatial engine (`engine::stream`) accumulate
+/// each cluster's partial tile by tile and still reproduce the
+/// in-memory `spatial::spatial_iterations` objective bit for bit; the
+/// in-memory side folds the same partials in the same order.
+pub fn objective_by_cluster(
+    x: &[f32],
+    w: &[f32],
+    u: &[f32],
+    centers: &[f32],
+    m: f32,
+) -> Vec<f64> {
+    let n = x.len();
+    let c = centers.len();
+    let mut parts = vec![0f64; c];
+    for j in 0..c {
+        let vj = centers[j] as f64;
+        let row = &u[j * n..(j + 1) * n];
+        let mut jm = 0f64;
+        if m == 2.0 {
+            for i in 0..n {
+                let d = x[i] as f64 - vj;
+                let ui = row[i] as f64;
+                jm += w[i] as f64 * ui * ui * d * d;
+            }
+        } else {
+            for i in 0..n {
+                let d = x[i] as f64 - vj;
+                jm += w[i] as f64 * (row[i] as f64).powf(m as f64) * d * d;
+            }
+        }
+        parts[j] = jm;
+    }
+    parts
+}
+
 /// The canonical cluster permutation for a set of centers: `order` with
 /// `order[new] = old` (ascending centers, stable sort) and the label
 /// LUT `rank` with `rank[old] = new`. Single source of truth shared by
@@ -393,6 +433,21 @@ mod tests {
             converged: false,
         };
         canonical_relabel(&mut empty); // must not panic
+    }
+
+    #[test]
+    fn objective_by_cluster_sums_to_objective() {
+        let x: Vec<f32> = (0..64).map(|i| (i * 4) as f32).collect();
+        let w = vec![1.0; 64];
+        let u = init_membership(3, 64, 4);
+        let v = [20.0f32, 120.0, 220.0];
+        let total: f64 = objective_by_cluster(&x, &w, &u, &v, 2.0).iter().sum();
+        let reference = objective(&x, &w, &u, &v, 2.0);
+        assert!((total - reference).abs() / reference.max(1.0) < 1e-12);
+        // The powf path agrees too.
+        let p25: f64 = objective_by_cluster(&x, &w, &u, &v, 2.5).iter().sum();
+        let r25 = objective(&x, &w, &u, &v, 2.5);
+        assert!((p25 - r25).abs() / r25.max(1.0) < 1e-12);
     }
 
     #[test]

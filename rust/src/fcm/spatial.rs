@@ -158,6 +158,21 @@ pub fn run_volume(
     }
 }
 
+/// `x^e` with an identity fast path: `e == 1` (the default exponents)
+/// returns `x` unchanged instead of calling `powf` — libm `powf` is
+/// allowed sub-ulp slack even at e = 1, and the streamed spatial
+/// engine's bit-identity contract (`engine::stream`) needs the
+/// modulation arithmetic to be exactly reproducible. Shared by the
+/// in-memory and streamed phase-2 loops so they cannot drift.
+#[inline]
+pub(crate) fn pw(x: f32, e: f32) -> f32 {
+    if e == 1.0 {
+        x
+    } else {
+        x.powf(e)
+    }
+}
+
 /// Phase 2 shared by [`run`], [`run_features`] and [`run_volume`]:
 /// continue from a converged plain run with the spatial modulation
 /// active until re-convergence. `spatial_fn(u_new, c, h)` fills `h`
@@ -195,7 +210,7 @@ where
         for i in 0..n {
             let mut sum = 0f32;
             for j in 0..c {
-                let v = u_new[j * n + i].powf(sp.p) * h[j * n + i].powf(sp.q);
+                let v = pw(u_new[j * n + i], sp.p) * pw(h[j * n + i], sp.q);
                 u_new[j * n + i] = v;
                 sum += v;
             }
@@ -209,7 +224,14 @@ where
             }
         }
         std::mem::swap(&mut u, &mut u_new);
-        jm_history.push(super::objective(x, w, &u, &centers, params.m));
+        // Per-cluster partials folded in ascending j — the same total
+        // the streamed spatial engine reproduces from tile-accumulated
+        // partials (objective_by_cluster docs).
+        jm_history.push(
+            super::objective_by_cluster(x, w, &u, &centers, params.m)
+                .iter()
+                .sum(),
+        );
         final_delta = delta;
         if delta < params.epsilon {
             converged = true;

@@ -30,6 +30,32 @@ use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
+/// Typed error: an RVOL raster holding fewer bytes than its header
+/// promises. Raised up front by the in-memory loader ([`parse_raw`])
+/// and the streaming reader (`stream::RvolReader`) — and again
+/// mid-sweep if the file shrinks underneath an open reader — so
+/// callers can `downcast_ref::<TruncatedRaster>()` instead of pattern
+/// matching a generic read failure's message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TruncatedRaster {
+    /// Bytes the header's `w*h*d` shape requires.
+    pub needed: usize,
+    /// Bytes actually present after the header.
+    pub have: usize,
+}
+
+impl std::fmt::Display for TruncatedRaster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RVOL raster truncated: need {} bytes, have {}",
+            self.needed, self.have
+        )
+    }
+}
+
+impl std::error::Error for TruncatedRaster {}
+
 /// An 8-bit voxel field with shape (width, height, depth), z-major.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VoxelVolume {
@@ -208,6 +234,32 @@ pub fn save_pgm_stack(vol: &VoxelVolume, dir: &Path) -> Result<Vec<PathBuf>> {
 /// zero-padded names round-trip either way. All slices must share one
 /// shape.
 pub fn load_pgm_stack(dir: &Path) -> Result<VoxelVolume> {
+    let paths = stack_paths(dir)?;
+    let mut slices = Vec::with_capacity(paths.len());
+    for p in &paths {
+        slices.push(pgm::read(p)?);
+    }
+    let (w, h) = (slices[0].width, slices[0].height);
+    for (p, s) in paths.iter().zip(&slices) {
+        if (s.width, s.height) != (w, h) {
+            bail!(
+                "slice {} is {}x{}, expected {w}x{h}",
+                p.display(),
+                s.width,
+                s.height
+            );
+        }
+    }
+    Ok(VoxelVolume::from_slices(&slices))
+}
+
+/// Enumerate the `*.pgm` slice files of a stack directory in z order.
+/// One body shared by [`load_pgm_stack`] and the streaming
+/// `stream::PgmStackSource`, so the two readers cannot disagree on
+/// slice ordering. Ordering is by the trailing number in the file stem
+/// when one exists (so `slice_2.pgm` precedes `slice_10.pgm` even
+/// without zero-padding), with plain name order as the fallback.
+pub(crate) fn stack_paths(dir: &Path) -> Result<Vec<PathBuf>> {
     let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
         .with_context(|| format!("reading {}", dir.display()))?
         .filter_map(|e| e.ok().map(|e| e.path()))
@@ -229,22 +281,7 @@ pub fn load_pgm_stack(dir: &Path) -> Result<VoxelVolume> {
         // Numbered stems first, by number; un-numbered after, by name.
         (digits.is_empty(), digits.parse::<u64>().unwrap_or(0), p.clone())
     });
-    let mut slices = Vec::with_capacity(paths.len());
-    for p in &paths {
-        slices.push(pgm::read(p)?);
-    }
-    let (w, h) = (slices[0].width, slices[0].height);
-    for (p, s) in paths.iter().zip(&slices) {
-        if (s.width, s.height) != (w, h) {
-            bail!(
-                "slice {} is {}x{}, expected {w}x{h}",
-                p.display(),
-                s.width,
-                s.height
-            );
-        }
-    }
-    Ok(VoxelVolume::from_slices(&slices))
+    Ok(paths)
 }
 
 /// Write the RVOL raw-volume format.
@@ -322,11 +359,11 @@ pub fn parse_raw(buf: &[u8]) -> Result<VoxelVolume> {
     // parse error, not a panic.
     let data = buf.get(h.data_start..).unwrap_or(&[]);
     if data.len() < h.voxels {
-        bail!(
-            "RVOL raster truncated: need {} bytes, have {}",
-            h.voxels,
-            data.len()
-        );
+        return Err(TruncatedRaster {
+            needed: h.voxels,
+            have: data.len(),
+        }
+        .into());
     }
     Ok(VoxelVolume::from_voxels(
         h.width,
@@ -370,6 +407,17 @@ mod tests {
         let mut buf = Vec::new();
         write_raw_to(&v, &mut buf).unwrap();
         assert_eq!(parse_raw(&buf).unwrap(), v);
+    }
+
+    #[test]
+    fn truncation_error_is_typed_with_counts() {
+        let err = parse_raw(b"RVOL\n4 4 4\n255\nabc").unwrap_err();
+        let t = err
+            .downcast_ref::<TruncatedRaster>()
+            .expect("truncation must surface as the typed error");
+        assert_eq!(t.needed, 64);
+        assert_eq!(t.have, 3);
+        assert!(err.to_string().contains("need 64 bytes, have 3"));
     }
 
     #[test]

@@ -10,6 +10,13 @@
 //!
 //! * [`RvolReader`] streams slabs straight out of an RVOL file —
 //!   volumes larger than RAM never materialize;
+//! * [`PgmStackSource`] does the same for a per-slice PGM directory
+//!   (per-slice files are naturally tiled — one slice is opened at a
+//!   time);
+//! * [`TilePrefetcher`] wraps any source with a dedicated I/O thread
+//!   that reads tile k+1 while the consumer computes on tile k
+//!   (double-buffered; identical bytes by construction — it only
+//!   reorders I/O);
 //! * [`VoxelVolume`] and [`GrayImage`] implement the same trait by
 //!   copying from memory, which is what makes the in-memory engines
 //!   thin clients of the identical abstraction ([`materialize`] is the
@@ -30,11 +37,46 @@
 //! reductions, so results are bit-identical for every tile size — see
 //! `fcm::engine::stream` and DESIGN.md.
 
-use crate::image::{GrayImage, VoxelVolume};
+use super::TruncatedRaster;
+use crate::image::{pgm, GrayImage, VoxelVolume};
 use anyhow::{bail, ensure, Context, Result};
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+/// Typed error: an RVOL label stream that closed with the wrong byte
+/// count — [`RvolWriter::finish`] after too few slabs, or a
+/// [`RvolWriter::write_slab`] that would run past the header's extent.
+/// Carries the expected vs written counts so callers (and messages)
+/// name both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamCountMismatch {
+    /// Bytes the header promised (`w * h * d`).
+    pub expected: usize,
+    /// Bytes actually written (for an overflowing slab: the count the
+    /// rejected write would have reached).
+    pub written: usize,
+}
+
+impl std::fmt::Display for StreamCountMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.written < self.expected {
+            write!(
+                f,
+                "RVOL stream incomplete: wrote {} of {} expected bytes",
+                self.written, self.expected
+            )
+        } else {
+            write!(
+                f,
+                "RVOL stream overflow: {} bytes written exceeds the {} expected",
+                self.written, self.expected
+            )
+        }
+    }
+}
+
+impl std::error::Error for StreamCountMismatch {}
 
 /// A voxel field served as z-major slabs of axial slices.
 pub trait VoxelSource {
@@ -86,6 +128,18 @@ pub fn tile_ranges(depth: usize, tile_slices: usize) -> Vec<(usize, usize)> {
             (z0, t.min(depth - z0))
         })
         .collect()
+}
+
+/// Haloed tile: extend `[z0, z0 + nz)` by `radius` slices on each side,
+/// clamped to `[0, depth)`. Returns `(halo_z0, halo_nz)` — the slab the
+/// streamed spatial engine actually reads so a tile's 3×3×3 window
+/// support is resident (`radius = 1` ⇒ at most `nz + 2` slices). A pure
+/// function of its inputs; never exceeds the volume bounds (pinned by
+/// `tests/property.rs`).
+pub fn halo_range(z0: usize, nz: usize, depth: usize, radius: usize) -> (usize, usize) {
+    let hz0 = z0.saturating_sub(radius);
+    let hz1 = (z0 + nz + radius).min(depth);
+    (hz0, hz1 - hz0)
 }
 
 impl VoxelSource for VoxelVolume {
@@ -190,11 +244,11 @@ fn open_rvol(path: &Path) -> Result<(File, usize, usize, usize, u64)> {
     let data_start = h.data_start as u64;
     let file_len = file.metadata()?.len();
     if file_len < data_start + h.voxels as u64 {
-        bail!(
-            "RVOL raster truncated: need {} bytes, have {}",
-            h.voxels,
-            file_len.saturating_sub(data_start)
-        );
+        return Err(anyhow::Error::new(TruncatedRaster {
+            needed: h.voxels,
+            have: file_len.saturating_sub(data_start) as usize,
+        })
+        .context(format!("reading {}", path.display())));
     }
     Ok((file, h.width, h.height, h.depth, data_start))
 }
@@ -243,8 +297,20 @@ impl RvolReader {
 
     fn read_at(file: &mut File, start: u64, z0: usize, area: usize, out: &mut [u8]) -> Result<()> {
         file.seek(SeekFrom::Start(start + (z0 * area) as u64))?;
-        file.read_exact(out)?;
-        Ok(())
+        match file.read_exact(out) {
+            Ok(()) => Ok(()),
+            // The file passed the open-time length check but shrank
+            // underneath us: surface the same typed error, not a bare
+            // UnexpectedEof in the middle of a sweep.
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                let have = file.metadata().map(|m| m.len().saturating_sub(start)).unwrap_or(0);
+                Err(anyhow::Error::new(TruncatedRaster {
+                    needed: z0 * area + out.len(),
+                    have: have as usize,
+                }))
+            }
+            Err(e) => Err(e.into()),
+        }
     }
 }
 
@@ -286,6 +352,302 @@ impl VoxelSource for RvolReader {
     }
 }
 
+/// Streams slabs out of a per-slice PGM directory (`slice_0000.pgm`,
+/// ...): slices are opened one at a time as a slab is read, so a stack
+/// deeper than RAM flows through the same seam as an RVOL file without
+/// ever materializing. Slice ordering is `super::stack_paths` — the
+/// exact order `load_pgm_stack` materializes — so the streamed and
+/// in-memory readers cannot disagree about z.
+pub struct PgmStackSource {
+    paths: Vec<PathBuf>,
+    width: usize,
+    height: usize,
+}
+
+impl PgmStackSource {
+    pub fn open(dir: &Path) -> Result<PgmStackSource> {
+        let paths = super::stack_paths(dir)?;
+        // Shape comes from slice 0; the rest are checked lazily as
+        // their slabs are read (reading every header up front would
+        // defeat the point of streaming a huge stack).
+        let first = pgm::read(&paths[0])?;
+        Ok(PgmStackSource {
+            paths,
+            width: first.width,
+            height: first.height,
+        })
+    }
+}
+
+impl VoxelSource for PgmStackSource {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn height(&self) -> usize {
+        self.height
+    }
+
+    fn depth(&self) -> usize {
+        self.paths.len()
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        let a = self.width * self.height;
+        ensure!(z0 + nz <= self.paths.len(), "slab [{z0}, {}) out of range", z0 + nz);
+        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        for (s, z) in (z0..z0 + nz).enumerate() {
+            let img = pgm::read(&self.paths[z])?;
+            if (img.width, img.height) != (self.width, self.height) {
+                bail!(
+                    "slice {} is {}x{}, expected {}x{}",
+                    self.paths[z].display(),
+                    img.width,
+                    img.height,
+                    self.width,
+                    self.height
+                );
+            }
+            out[s * a..(s + 1) * a].copy_from_slice(&img.pixels);
+        }
+        Ok(())
+    }
+}
+
+/// One prefetched slab in flight between the I/O thread and the
+/// consumer: voxels plus (when the source carries one) the mask for the
+/// same range, so the usual read_slab + read_mask_slab call pair costs
+/// one thread round-trip.
+struct PrefetchTile {
+    z0: usize,
+    nz: usize,
+    vox: Vec<u8>,
+    mask: Vec<u8>,
+    err: Option<anyhow::Error>,
+}
+
+impl PrefetchTile {
+    fn empty() -> PrefetchTile {
+        PrefetchTile {
+            z0: 0,
+            nz: 0,
+            vox: Vec::new(),
+            mask: Vec::new(),
+            err: None,
+        }
+    }
+}
+
+/// Double-buffered tile prefetch: wraps any [`VoxelSource`] and moves
+/// it onto a dedicated I/O thread that reads tile k+1 while the caller
+/// (typically the engine pool) chews tile k.
+///
+/// The thread predicts the next request from the observed stride
+/// between slab starts — which matches both the plain tile walk
+/// (starts advance by `tile_slices`) and the halo walk of the streamed
+/// spatial engine (starts advance by `tile_slices` after the first
+/// tile) — and wraps to the first-seen request at the end of a pass,
+/// since every engine pass restarts at z 0. A mispredicted request
+/// simply misses and is read on demand: the prefetcher **only reorders
+/// I/O**, so the bytes any consumer observes — and therefore every
+/// engine result — are identical by construction to reading the inner
+/// source directly (pinned by `tests/streaming.rs`). At most two tiles
+/// (the one being consumed and the one in flight) are resident, plus
+/// their masks for masked sources.
+pub struct TilePrefetcher {
+    req_tx: Option<std::sync::mpsc::Sender<(usize, usize)>>,
+    resp_rx: std::sync::mpsc::Receiver<PrefetchTile>,
+    recycle_tx: std::sync::mpsc::Sender<PrefetchTile>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    width: usize,
+    height: usize,
+    depth: usize,
+    has_mask: bool,
+    current: Option<PrefetchTile>,
+}
+
+impl TilePrefetcher {
+    pub fn new(inner: Box<dyn VoxelSource + Send>) -> TilePrefetcher {
+        let (width, height, depth) = (inner.width(), inner.height(), inner.depth());
+        let has_mask = inner.has_mask();
+        let area = width * height;
+        let (req_tx, req_rx) = std::sync::mpsc::channel::<(usize, usize)>();
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel::<PrefetchTile>();
+        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrefetchTile>();
+        let handle = std::thread::Builder::new()
+            .name("tile-prefetch".to_string())
+            .spawn(move || {
+                prefetch_loop(inner, area, depth, has_mask, req_rx, resp_tx, recycle_rx)
+            })
+            .expect("spawning prefetch thread");
+        TilePrefetcher {
+            req_tx: Some(req_tx),
+            resp_rx,
+            recycle_tx,
+            handle: Some(handle),
+            width,
+            height,
+            depth,
+            has_mask,
+            current: None,
+        }
+    }
+
+    /// Convenience: wrap a concrete source.
+    pub fn wrap<S: VoxelSource + Send + 'static>(inner: S) -> TilePrefetcher {
+        TilePrefetcher::new(Box::new(inner))
+    }
+
+    /// Make `[z0, z0+nz)` the resident tile (served from the prefetch
+    /// buffer on a hit, read on demand on a miss).
+    fn fetch(&mut self, z0: usize, nz: usize) -> Result<&PrefetchTile> {
+        let hit = matches!(&self.current, Some(t) if t.z0 == z0 && t.nz == nz);
+        if !hit {
+            let tx = self.req_tx.as_ref().expect("prefetcher running");
+            if tx.send((z0, nz)).is_err() {
+                bail!("prefetch thread terminated");
+            }
+            let mut tile = self
+                .resp_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("prefetch thread terminated"))?;
+            if let Some(err) = tile.err.take() {
+                let _ = self.recycle_tx.send(tile);
+                return Err(err);
+            }
+            if let Some(old) = self.current.take() {
+                let _ = self.recycle_tx.send(old);
+            }
+            self.current = Some(tile);
+        }
+        Ok(self.current.as_ref().expect("tile just stored"))
+    }
+}
+
+impl Drop for TilePrefetcher {
+    fn drop(&mut self) {
+        // Closing the request channel ends the I/O loop; join so the
+        // inner source is released before we return.
+        drop(self.req_tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl VoxelSource for TilePrefetcher {
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn height(&self) -> usize {
+        self.height
+    }
+
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn has_mask(&self) -> bool {
+        self.has_mask
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        let a = self.width * self.height;
+        ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
+        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        out.copy_from_slice(&self.fetch(z0, nz)?.vox);
+        Ok(())
+    }
+
+    fn read_mask_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        let a = self.width * self.height;
+        ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
+        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        if !self.has_mask {
+            out.fill(1);
+            return Ok(());
+        }
+        out.copy_from_slice(&self.fetch(z0, nz)?.mask);
+        Ok(())
+    }
+}
+
+/// The prefetcher's I/O loop: serve each request (from the buffer on a
+/// prediction hit), then speculatively read the predicted next tile
+/// before blocking on the next request.
+fn prefetch_loop(
+    mut inner: Box<dyn VoxelSource + Send>,
+    area: usize,
+    depth: usize,
+    has_mask: bool,
+    req_rx: std::sync::mpsc::Receiver<(usize, usize)>,
+    resp_tx: std::sync::mpsc::Sender<PrefetchTile>,
+    recycle_rx: std::sync::mpsc::Receiver<PrefetchTile>,
+) {
+    let mut prefetched: Option<PrefetchTile> = None;
+    let mut first_req: Option<(usize, usize)> = None;
+    let mut last_z0: Option<usize> = None;
+    let mut stride: Option<usize> = None;
+    while let Ok((z0, nz)) = req_rx.recv() {
+        let tile = match prefetched.take() {
+            Some(t) if t.z0 == z0 && t.nz == nz => t,
+            missed => {
+                // Miss: read on demand, recycling whichever buffer is free.
+                let buf = missed.or_else(|| recycle_rx.try_recv().ok());
+                fill_tile(&mut *inner, z0, nz, area, has_mask, buf)
+            }
+        };
+        if resp_tx.send(tile).is_err() {
+            return;
+        }
+        // Predict the next request from the observed walk.
+        if first_req.is_none() {
+            first_req = Some((z0, nz));
+        }
+        if let Some(lz0) = last_z0 {
+            if z0 > lz0 {
+                stride = Some(z0 - lz0);
+            }
+        }
+        last_z0 = Some(z0);
+        let pz0 = z0 + stride.unwrap_or(nz.max(1));
+        let pred = if pz0 < depth {
+            Some((pz0, nz.min(depth - pz0)))
+        } else {
+            // End of a pass: the next pass restarts where the first did.
+            first_req.filter(|&f| f != (z0, nz))
+        };
+        if let Some((pz0, pnz)) = pred {
+            let buf = recycle_rx.try_recv().ok();
+            prefetched = Some(fill_tile(&mut *inner, pz0, pnz, area, has_mask, buf));
+        }
+    }
+}
+
+/// Read one tile (voxels + mask) into a recycled or fresh buffer pair.
+fn fill_tile(
+    inner: &mut dyn VoxelSource,
+    z0: usize,
+    nz: usize,
+    area: usize,
+    has_mask: bool,
+    buf: Option<PrefetchTile>,
+) -> PrefetchTile {
+    let mut t = buf.unwrap_or_else(PrefetchTile::empty);
+    t.z0 = z0;
+    t.nz = nz;
+    t.err = None;
+    t.vox.resize(nz * area, 0);
+    let mut res = inner.read_slab(z0, nz, &mut t.vox);
+    if res.is_ok() && has_mask {
+        t.mask.resize(nz * area, 0);
+        res = inner.read_mask_slab(z0, nz, &mut t.mask);
+    }
+    t.err = res.err();
+    t
+}
+
 /// The output side of the tile path: consumers hand finished label (or
 /// voxel) slabs over in z order.
 pub trait LabelSink {
@@ -323,28 +685,31 @@ impl RvolWriter {
         })
     }
 
-    /// Flush and verify every voxel was written.
+    /// Flush and verify every voxel was written. A short stream fails
+    /// with the typed [`StreamCountMismatch`], naming expected vs
+    /// written counts.
     pub fn finish(mut self) -> Result<()> {
         self.out.flush()?;
-        ensure!(
-            self.written == self.expected,
-            "RVOL stream incomplete: wrote {} of {} bytes",
-            self.written,
-            self.expected
-        );
+        if self.written != self.expected {
+            return Err(StreamCountMismatch {
+                expected: self.expected,
+                written: self.written,
+            }
+            .into());
+        }
         Ok(())
     }
 }
 
 impl LabelSink for RvolWriter {
     fn write_slab(&mut self, labels: &[u8]) -> Result<()> {
-        ensure!(
-            self.written + labels.len() <= self.expected,
-            "RVOL stream overflow: {} + {} > {}",
-            self.written,
-            labels.len(),
-            self.expected
-        );
+        if self.written + labels.len() > self.expected {
+            return Err(StreamCountMismatch {
+                expected: self.expected,
+                written: self.written + labels.len(),
+            }
+            .into());
+        }
         self.out.write_all(labels)?;
         self.written += labels.len();
         Ok(())
@@ -406,6 +771,149 @@ mod tests {
         assert_eq!(tile_ranges(3, 0), vec![(0, 1), (1, 1), (2, 1)]);
         assert_eq!(tile_ranges(0, 4), Vec::<(usize, usize)>::new());
         assert_eq!(tile_ranges(2, 17), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn halo_ranges_clamp_to_bounds() {
+        assert_eq!(halo_range(0, 3, 10, 1), (0, 4)); // no slice below 0
+        assert_eq!(halo_range(3, 3, 10, 1), (2, 5)); // interior: +2
+        assert_eq!(halo_range(9, 1, 10, 1), (8, 2)); // no slice past depth
+        assert_eq!(halo_range(0, 10, 10, 1), (0, 10)); // whole volume
+        assert_eq!(halo_range(4, 2, 10, 0), (4, 2)); // radius 0 = the tile
+    }
+
+    #[test]
+    fn pgm_stack_source_streams_without_materializing() {
+        let dir = std::env::temp_dir().join(format!("pgm_src_{}", std::process::id()));
+        let v = VoxelVolume::from_voxels(3, 2, 3, (0..18).map(|i| (i * 9) as u8).collect());
+        super::super::save_pgm_stack(&v, &dir).unwrap();
+        let mut src = PgmStackSource::open(&dir).unwrap();
+        assert_eq!(
+            (src.width(), src.height(), VoxelSource::depth(&src)),
+            (3, 2, 3)
+        );
+        assert!(!src.has_mask());
+        // Every tile size reproduces the exact field.
+        let area = 6;
+        for t in [1usize, 2, 5] {
+            let mut got = vec![0u8; v.len()];
+            for (z0, nz) in tile_ranges(3, t) {
+                src.read_slab(z0, nz, &mut got[z0 * area..(z0 + nz) * area]).unwrap();
+            }
+            assert_eq!(got, v.voxels, "tile {t}");
+        }
+        assert_eq!(materialize(&mut src).unwrap(), v);
+        // Out-of-range slabs are errors; a shape-drifted slice is too.
+        let mut buf = vec![0u8; area];
+        assert!(src.read_slab(3, 1, &mut buf).is_err());
+        pgm::write(&GrayImage::new(4, 2), &dir.join("slice_0001.pgm")).unwrap();
+        assert!(src.read_slab(1, 1, &mut buf).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prefetcher_is_transparent_for_any_walk() {
+        let v = VoxelVolume::from_voxels(4, 3, 7, (0..84).map(|i| (i * 3) as u8).collect());
+        let area = 12;
+        for t in [1usize, 2, 3, 7, 9] {
+            let mut pf = TilePrefetcher::wrap(v.clone());
+            assert_eq!(
+                (pf.width(), pf.height(), VoxelSource::depth(&pf)),
+                (4, 3, 7)
+            );
+            // Two passes (engines re-read per iteration), plain tiles.
+            for _ in 0..2 {
+                let mut got = vec![0u8; v.len()];
+                for (z0, nz) in tile_ranges(7, t) {
+                    pf.read_slab(z0, nz, &mut got[z0 * area..(z0 + nz) * area]).unwrap();
+                    // Maskless inner: mask tiles are all-ones.
+                    let mut m = vec![0u8; nz * area];
+                    pf.read_mask_slab(z0, nz, &mut m).unwrap();
+                    assert!(m.iter().all(|&b| b == 1));
+                }
+                assert_eq!(got, v.voxels, "tile {t}");
+            }
+            // A haloed walk through the same prefetcher still matches.
+            let mut got = vec![0u8; v.len()];
+            let mut seen = vec![false; 7];
+            for (z0, nz) in tile_ranges(7, t) {
+                let (hz0, hnz) = halo_range(z0, nz, 7, 1);
+                let mut buf = vec![0u8; hnz * area];
+                pf.read_slab(hz0, hnz, &mut buf).unwrap();
+                let off = (z0 - hz0) * area;
+                got[z0 * area..(z0 + nz) * area]
+                    .copy_from_slice(&buf[off..off + nz * area]);
+                for z in z0..z0 + nz {
+                    seen[z] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+            assert_eq!(got, v.voxels, "halo tile {t}");
+        }
+    }
+
+    #[test]
+    fn prefetcher_carries_masks_and_errors() {
+        let mut mask = vec![1u8; 18];
+        mask[7] = 0;
+        let v = sample().with_mask(mask.clone());
+        let mut pf = TilePrefetcher::wrap(v.clone());
+        assert!(pf.has_mask());
+        let got = materialize(&mut pf).unwrap();
+        assert_eq!(got, v);
+        // Errors propagate per-request (out-of-range read).
+        let mut buf = vec![0u8; 6];
+        assert!(pf.read_slab(5, 1, &mut buf).is_err());
+        // And the prefetcher still serves valid requests afterwards.
+        pf.read_slab(2, 1, &mut buf).unwrap();
+        assert_eq!(buf[..], v.voxels[12..18]);
+    }
+
+    #[test]
+    fn writer_count_errors_are_typed() {
+        let dir = std::env::temp_dir().join(format!("rvol_typed_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let short = RvolWriter::create(&dir.join("s.rvol"), 2, 2, 2).unwrap();
+        let err = short.finish().unwrap_err();
+        let t = err
+            .downcast_ref::<StreamCountMismatch>()
+            .expect("short stream must surface the typed error");
+        assert_eq!((t.written, t.expected), (0, 8));
+        assert!(err.to_string().contains("wrote 0 of 8 expected bytes"));
+        let mut over = RvolWriter::create(&dir.join("o.rvol"), 1, 1, 1).unwrap();
+        let err = over.write_slab(&[0, 0]).unwrap_err();
+        let t = err.downcast_ref::<StreamCountMismatch>().unwrap();
+        assert_eq!((t.written, t.expected), (2, 1));
+        assert!(err.to_string().contains("exceeds the 1 expected"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reader_truncation_is_typed_mid_sweep_too() {
+        let dir = std::env::temp_dir().join(format!("rvol_shrink_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v.rvol");
+        super::super::save_raw(&sample(), &path).unwrap();
+        // Open-time check: a too-short raster is the typed error.
+        let trunc = dir.join("t.rvol");
+        std::fs::write(&trunc, b"RVOL\n3 2 3\n255\nonly-a-few").unwrap();
+        let err = RvolReader::open(&trunc).unwrap_err();
+        let t = err
+            .downcast_ref::<TruncatedRaster>()
+            .expect("open must surface the typed error");
+        assert_eq!(t.needed, 18);
+        // Mid-sweep: shrink the file underneath an open reader.
+        let mut r = RvolReader::open(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 10]).unwrap();
+        let mut buf = vec![0u8; 6];
+        let err = r.read_slab(2, 1, &mut buf).unwrap_err();
+        let t = err
+            .downcast_ref::<TruncatedRaster>()
+            .expect("mid-sweep truncation must surface the typed error");
+        assert_eq!(t.needed, 18);
+        assert!(t.have < t.needed);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

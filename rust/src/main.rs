@@ -390,37 +390,57 @@ fn segment_volume(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `repro segment-volume --stream --input-raw v.rvol --out-raw seg.rvol
-/// [--mask-raw m.rvol] [--tile-slices N] [--engine histogram|parallel|...]`
+/// `repro segment-volume --stream [--input-raw v.rvol | --input-dir
+/// slices/] --out-raw seg.rvol [--mask-raw m.rvol] [--tile-slices N]
+/// [--prefetch true|false] [--engine histogram|parallel|spatial|...]`
 ///
-/// The out-of-core path: tiles stream from the input RVOL through
-/// `FcmBackend::segment_volume_streamed` and rendered labels stream to
-/// the output RVOL — the volume is never materialized here, so fields
-/// larger than RAM segment in bounded memory. Output is byte-identical
-/// to the in-memory `segment-volume --out-raw` of the same input
-/// (enforced by the CI streaming smoke job). Histogram and parallel
-/// backends run truly out-of-core; other engines fall back to
-/// materializing inside the backend (reported as path=materialized).
+/// The out-of-core path: tiles stream from the input RVOL (or
+/// per-slice PGM directory) through `FcmBackend::segment_volume_streamed`
+/// and rendered labels stream to the output RVOL — the volume is never
+/// materialized here, so fields larger than RAM segment in bounded
+/// memory. A dedicated prefetch thread reads tile k+1 while the engine
+/// computes on tile k (on by default; `--prefetch false` to disable —
+/// results are identical either way). Output is byte-identical to the
+/// in-memory `segment-volume --out-raw` of the same input (enforced by
+/// the CI streaming smoke job). Histogram, parallel, and spatial
+/// backends run truly out-of-core (spatial reads each tile with a
+/// ±1-slice halo); other engines fall back to materializing inside the
+/// backend (reported as path=materialized).
 fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<()> {
-    use repro::image::volume::stream::{LabelScaler, RvolReader, RvolWriter, VoxelSource};
+    use repro::image::volume::stream::{
+        LabelScaler, PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
+    };
 
     let params = FcmParams::from(&cfg.fcm);
-    let input = args
-        .get("input-raw")
-        .ok_or_else(|| anyhow::anyhow!("--stream needs --input-raw (an RVOL file)"))?;
     let out = args
         .get("out-raw")
         .ok_or_else(|| anyhow::anyhow!("--stream needs --out-raw (the label RVOL to write)"))?;
     let tile_slices = args.get_usize("tile-slices", cfg.engine.tile_slices)?.max(1);
-    let mut src = match args.get("mask-raw") {
-        Some(m) => RvolReader::with_mask(Path::new(input), Path::new(m))?,
-        None => RvolReader::open(Path::new(input))?,
-    };
+    let mut src: Box<dyn VoxelSource + Send> =
+        if let Some(dir) = args.get("input-dir") {
+            if args.get("mask-raw").is_some() {
+                bail!("--mask-raw needs --input-raw (an RVOL input), not --input-dir");
+            }
+            Box::new(PgmStackSource::open(Path::new(dir))?)
+        } else {
+            let input = args.get("input-raw").ok_or_else(|| {
+                anyhow::anyhow!("--stream needs --input-raw (an RVOL file) or --input-dir")
+            })?;
+            match args.get("mask-raw") {
+                Some(m) => Box::new(RvolReader::with_mask(Path::new(input), Path::new(m))?),
+                None => Box::new(RvolReader::open(Path::new(input))?),
+            }
+        };
+    if cfg.engine.prefetch {
+        src = Box::new(TilePrefetcher::new(src));
+    }
     let (w, h, d) = (src.width(), src.height(), src.depth());
     println!(
-        "volume {w}x{h}x{d} = {} voxels ({} KB), streaming in {tile_slices}-slice tiles",
+        "volume {w}x{h}x{d} = {} voxels ({} KB), streaming in {tile_slices}-slice tiles \
+         (prefetch {})",
         w * h * d,
-        w * h * d / 1024
+        w * h * d / 1024,
+        if cfg.engine.prefetch { "on" } else { "off" }
     );
 
     let registry = match engine {
@@ -436,7 +456,7 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
         params.clusters as u8,
     );
     let t0 = std::time::Instant::now();
-    let res = backend.segment_volume_streamed(&mut src, &mut sink, &params, tile_slices)?;
+    let res = backend.segment_volume_streamed(&mut *src, &mut sink, &params, tile_slices)?;
     sink.into_inner().finish()?;
     let wall = t0.elapsed().as_secs_f64();
 
@@ -593,8 +613,9 @@ USAGE: repro <subcommand> [options]
                  --slices 41 --start 80 --step 1 --noise 4  (phantom volume)
                  [--engine auto|parallel|histogram|spatial|seq|...]
                  [--mask-raw m.rvol] [--out-raw seg.rvol] [--out-dir segdir]
-                 [--stream --tile-slices 8]  (out-of-core: RVOL in,
-                 RVOL out, volume never materialized)
+                 [--stream --tile-slices 8 --prefetch true|false]
+                 (out-of-core: RVOL file or PGM-stack dir in, RVOL out,
+                 volume never materialized; double-buffered prefetch)
   phantom        --slice 96 [--ground-truth] [--with-skull] [--out dir]
                  --volume --slices 24 --start 80 --out-raw v.rvol  (RVOL gen)
   serve          --jobs 32 [--engine auto|device|seq|parallel|histogram|brfcm|spatial]
@@ -612,7 +633,8 @@ USAGE: repro <subcommand> [options]
 COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         --seed N --workers N --artifacts_dir DIR --set k=v,k=v
         --backend sequential|parallel|histogram  --engine_threads N
-        --engine_chunk N --tile_slices N --batch_execute true|false
+        --engine_chunk N --tile_slices N --prefetch true|false
+        --batch_execute true|false
         (host-engine + service knobs; see README 'Architecture')
 
 --engine auto (default) = device path when artifacts exist, else the
@@ -625,9 +647,12 @@ segment-volume serves true-3D paths on parallel (Z-slab decomposition,
 bit-identical for any thread count / slab size), histogram (one 256-bin
 volume histogram; per-iteration cost independent of voxel count), and
 spatial (3x3x3 neighbourhood regularization — the noise-robust engine);
-other engines fall back to a per-slice loop. With --stream, histogram
-and parallel run OUT-OF-CORE: tiles of --tile-slices slices stream from
-the input RVOL, resident memory is bounded by the tile (reported as
-'peak resident tile bytes'), and the output is byte-identical to the
-in-memory path. See README 'Volumes' / 'Out-of-core volumes'.
+other engines fall back to a per-slice loop. With --stream, histogram,
+parallel, AND spatial run OUT-OF-CORE: tiles of --tile-slices slices
+stream from the input RVOL or PGM-stack directory (spatial reads each
+tile with a +-1-slice halo for its 3x3x3 window), a prefetch thread
+reads tile k+1 while tile k computes, resident memory is bounded by the
+tile (reported as 'peak resident tile bytes'), and the output is
+byte-identical to the in-memory path. See README 'Volumes' /
+'Out-of-core volumes'.
 ";

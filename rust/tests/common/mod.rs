@@ -1,6 +1,18 @@
 //! Shared integration-test helpers (a directory module, so cargo does
 //! not compile it as its own test crate).
 
+/// Engine lane count for the CI thread-matrix legs: `ENGINE_THREADS=N`
+/// re-runs the deterministic suites at a pinned pool width (absent or
+/// unparsable = 0 = all cores). Results must be identical for every
+/// value — that is the invariant the matrix re-checks.
+#[allow(dead_code)]
+pub fn engine_threads() -> usize {
+    std::env::var("ENGINE_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
 /// Whether device-path tests can run: artifacts present AND a real xla
 /// crate linked (the vendored offline stub parses manifests but cannot
 /// compile HLO). Prints the skip reason so `cargo test -q` output shows

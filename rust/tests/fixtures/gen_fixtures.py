@@ -1,0 +1,588 @@
+#!/usr/bin/env python3
+"""Golden-fixture generator: a bit-exact numpy mirror of the repo's host
+FCM engines, used to produce the committed expected label bytes under
+fixtures/expected/.
+
+Why a mirror: the fixtures pin cross-PR output drift (tests/golden.rs
+byte-compares every engine against them), so the expected bytes must be
+derived from the engines' defined arithmetic, not from whatever binary
+happened to be lying around. Every operation below reproduces the Rust
+code's IEEE semantics exactly: f32 storage rounding (np.float32), f64
+accumulators (python floats), the xoshiro256++ init stream, the fixed
+per-slice partial grid + pairwise z-order tree reduction, and the m=2 /
+p=q=1 fast paths (no libm powf anywhere on the default-parameter
+paths). On top of bit-exactness, generation asserts wide safety margins
+(distance to the ZERO_TOL singularity, to the epsilon convergence
+boundary, and argmax label margins), so the committed labels are stable
+far beyond last-ulp concerns.
+
+Regeneration: python3 gen_fixtures.py   (from this directory)
+A toolchain machine can instead re-bless from the Rust side with
+REPRO_BLESS=1 cargo test --test golden  after verifying a change is an
+intended output change.
+"""
+
+import os
+import numpy as np
+
+f32 = np.float32
+M64 = (1 << 64) - 1
+ZERO_TOL = 1e-12
+DEN_EPS = 1e-12
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# ---------------------------------------------------------------- rng ----
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng64:
+    """util::rng::Rng64 — xoshiro256++ seeded via splitmix64."""
+
+    def __init__(self, seed):
+        s = []
+        sm = seed & M64
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & M64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            s.append((z ^ (z >> 31)) & M64)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        r = (_rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+    def next_f32(self):
+        # (next_u64() >> 40) as f32 * (1.0 / 2^24) — both factors exact.
+        return f32(self.next_u64() >> 40) * f32(1.0 / 16777216.0)
+
+    def uniform(self, lo, hi):
+        lo = f32(lo)
+        hi = f32(hi)
+        return lo + (hi - lo) * self.next_f32()
+
+
+def init_membership_masked(c, w, seed):
+    """fcm::init_membership (+ masked zeroing). w: np.float32[n]."""
+    n = len(w)
+    u = np.zeros((c, n), dtype=np.float32)
+    rng = Rng64(seed)
+    for i in range(n):
+        sm = f32(0.0)
+        for j in range(c):
+            v = rng.uniform(0.01, 1.0)
+            u[j, i] = v
+            sm = sm + v
+        for j in range(c):
+            u[j, i] = u[j, i] / sm
+    for i in range(n):
+        if w[i] == 0.0:
+            for j in range(c):
+                u[j, i] = f32(0.0)
+    return u
+
+
+# ---------------------------------------------------- margin tracking ----
+
+MARGINS = {"min_d2": float("inf"), "min_eps_gap": float("inf"), "min_label_gap": float("inf")}
+
+
+def track_d2(d2):
+    if d2 < MARGINS["min_d2"]:
+        MARGINS["min_d2"] = d2
+
+
+def track_delta(delta, eps):
+    gap = abs(float(delta) - float(f32(eps)))
+    if gap < MARGINS["min_eps_gap"]:
+        MARGINS["min_eps_gap"] = gap
+
+
+def track_labels(u):
+    # Margin between the winning and runner-up membership per column.
+    a = np.sort(np.asarray(u, dtype=np.float64), axis=0)
+    gap = float(np.min(a[-1, :] - a[-2, :]))
+    if gap < MARGINS["min_label_gap"]:
+        MARGINS["min_label_gap"] = gap
+
+
+# --------------------------------------------------- shared primitives ----
+
+
+def membership_row(xi, w_i, centers, c):
+    """One pixel of sequential::update_memberships / fused_chunk (m=2):
+    returns the list of new f32 memberships. xi: f64, centers: f32[]."""
+    d2 = []
+    nzero = 0
+    for j in range(c):
+        d = xi - float(centers[j])
+        dd = d * d
+        d2.append(dd)
+        track_d2(dd)
+        if dd <= ZERO_TOL:
+            nzero += 1
+    wi = f32(1.0) if w_i > 0.0 else f32(0.0)
+    if nzero > 0:
+        vals = []
+        for j in range(c):
+            vals.append(wi / f32(nzero) if d2[j] <= ZERO_TOL else f32(0.0))
+        return vals, d2
+    inv = []
+    sum_inv = 0.0
+    for j in range(c):
+        inv.append(1.0 / d2[j])
+        sum_inv += inv[j]
+    vals = []
+    for j in range(c):
+        vals.append(f32(inv[j] / sum_inv) * wi)
+    return vals, d2
+
+
+def fused_slice(x64, w, u_old, centers, u_new, start, length, c):
+    """fused::fused_chunk over [start, start+length): writes u_new
+    columns, returns PassPartial (num, den, jm, delta)."""
+    num = [0.0] * c
+    den = [0.0] * c
+    jm = 0.0
+    delta = f32(0.0)
+    for k in range(length):
+        i = start + k
+        vals, d2 = membership_row(x64[i], w[i], centers, c)
+        for j in range(c):
+            val = vals[j]
+            diff = abs(val - u_old[j, i])
+            if diff > delta:
+                delta = diff
+            u_new[j, i] = val
+            vf = float(val)
+            um = vf * vf
+            wu = float(w[i]) * um
+            num[j] += wu * x64[i]
+            den[j] += wu
+            jm += wu * d2[j]
+    return {"num": num, "den": den, "jm": jm, "delta": delta}
+
+
+def centers_slice(x64, w, u, start, length, c):
+    """fused::centers_chunk: sigma sums of an existing membership chunk."""
+    num = [0.0] * c
+    den = [0.0] * c
+    for j in range(c):
+        for k in range(length):
+            i = start + k
+            wu = float(w[i]) * float(u[j, i]) * float(u[j, i])
+            num[j] += wu * x64[i]
+            den[j] += wu
+    return {"num": num, "den": den, "jm": 0.0, "delta": f32(0.0)}
+
+
+def combine(a, b):
+    return {
+        "num": [p + q for p, q in zip(a["num"], b["num"])],
+        "den": [p + q for p, q in zip(a["den"], b["den"])],
+        "jm": a["jm"] + b["jm"],
+        "delta": max(a["delta"], b["delta"]),
+    }
+
+
+def tree_reduce(items):
+    level = list(items)
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level), 2):
+            if i + 1 < len(level):
+                nxt.append(combine(level[i], level[i + 1]))
+            else:
+                nxt.append(level[i])
+        level = nxt
+    return level[0]
+
+
+def part_centers(part, c):
+    return np.array(
+        [f32(part["num"][j] / max(part["den"][j], DEN_EPS)) for j in range(c)],
+        dtype=np.float32,
+    )
+
+
+def defuzzify(u, c, n):
+    labels = np.zeros(n, dtype=np.uint8)
+    for i in range(n):
+        best = 0
+        best_v = u[0, i]
+        for j in range(1, c):
+            if u[j, i] > best_v:
+                best_v = u[j, i]
+                best = j
+        labels[i] = best
+    return labels
+
+
+def canonical_rank(centers):
+    """fcm::canonical_order: stable ascending sort; rank[old] = new."""
+    order = sorted(range(len(centers)), key=lambda j: float(centers[j]))
+    rank = [0] * len(centers)
+    for new, old in enumerate(order):
+        rank[old] = new
+    return order, rank
+
+
+def canonical_labels(labels, centers, w):
+    _, rank = canonical_rank(centers)
+    out = np.zeros(len(labels), dtype=np.uint8)
+    for i, l in enumerate(labels):
+        out[i] = rank[l] if w[i] > 0.0 else 0
+    return out
+
+
+# ----------------------------------------------------------- engines ----
+
+
+def run_parallel_volume(vox, w, area, params, require_converged=True):
+    """engine::volume::run_volume, Backend::Parallel (the slab path):
+    per-slice fused partials, pairwise z-order tree. Returns the final
+    (u, centers) and run metadata; labels via the caller.
+    `require_converged=False` allows capped runs (the verification
+    mirrors exercise the skip-update-on-last-iteration semantics; the
+    committed fixtures always converge)."""
+    c, eps, max_iters, seed = params["c"], params["eps"], params["max_iters"], params["seed"]
+    n = len(vox)
+    x64 = [float(v) for v in vox]
+    u = init_membership_masked(c, w, seed)
+    slices = [(s, area) for s in range(0, n, area)]
+    parts = [centers_slice(x64, w, u, s, l, c) for s, l in slices]
+    centers = part_centers(tree_reduce(parts), c)
+    u_new = np.zeros_like(u)
+    jm_history = []
+    converged = False
+    iterations = 0
+    for it in range(max_iters):
+        iterations += 1
+        parts = [fused_slice(x64, w, u, centers, u_new, s, l, c) for s, l in slices]
+        total = tree_reduce(parts)
+        u, u_new = u_new, u
+        jm_history.append(total["jm"])
+        track_delta(total["delta"], eps)
+        if total["delta"] < f32(eps):
+            converged = True
+            break
+        if it + 1 < max_iters:
+            centers = part_centers(total, c)
+    assert converged or not require_converged, "parallel volume mirror did not converge"
+    return u, centers, iterations, jm_history
+
+
+def run_sequential(x_vals, w, params):
+    """fcm::sequential::run (the per-slice baseline): linear f64 sums."""
+    c, eps, max_iters, seed = params["c"], params["eps"], params["max_iters"], params["seed"]
+    n = len(x_vals)
+    x64 = [float(v) for v in x_vals]
+    u = init_membership_masked(c, w, seed)
+    u_new = np.zeros_like(u)
+    centers = np.zeros(c, dtype=np.float32)
+    converged = False
+    for _ in range(max_iters):
+        update_centers(x64, w, u, centers, c)
+        delta = f32(0.0)
+        for i in range(n):
+            vals, _ = membership_row(x64[i], w[i], centers, c)
+            for j in range(c):
+                diff = abs(vals[j] - u[j, i])
+                if diff > delta:
+                    delta = diff
+                u_new[j, i] = vals[j]
+        u, u_new = u_new, u
+        track_delta(delta, eps)
+        if delta < f32(eps):
+            converged = True
+            break
+    assert converged, "sequential mirror did not converge"
+    return u, centers
+
+
+def update_centers(x64, w, u, centers, c):
+    """sequential::update_centers (m=2 branch), in place."""
+    n = len(x64)
+    for j in range(c):
+        num = 0.0
+        den = 0.0
+        for i in range(n):
+            wum = float(w[i]) * float(u[j, i]) * float(u[j, i])
+            num += wum * x64[i]
+            den += wum
+        centers[j] = f32(num / max(den, DEN_EPS))
+
+
+def run_histogram_volume(vox, w, area, params):
+    """engine::volume::run_histogram: exact integer counts, centers_1
+    from the full voxel-level u_0, bin-level iterations."""
+    c, eps, max_iters, seed = params["c"], params["eps"], params["max_iters"], params["seed"]
+    n = len(vox)
+    x64 = [float(v) for v in vox]
+    u0 = init_membership_masked(c, w, seed)
+    counts = [0] * 256
+    for i, v in enumerate(vox):
+        if w[i] > 0.0:
+            counts[v] += 1
+    xb64 = [float(b) for b in range(256)]
+    wb = np.array([f32(cnt) for cnt in counts], dtype=np.float32)
+    slices = [(s, area) for s in range(0, n, area)]
+    parts = [centers_slice(x64, w, u0, s, l, c) for s, l in slices]
+    centers = part_centers(tree_reduce(parts), c)
+    u_bin = np.zeros((c, 256), dtype=np.float32)
+    for j in range(c):
+        sums = [0.0] * 256
+        for i, v in enumerate(vox):
+            sums[v] += float(u0[j, i])
+        for b in range(256):
+            if counts[b] > 0:
+                u_bin[j, b] = f32(sums[b] / counts[b])
+    u_new = np.zeros_like(u_bin)
+    converged = False
+    for it in range(max_iters):
+        part = fused_slice(xb64, wb, u_bin, centers, u_new, 0, 256, c)
+        u_bin, u_new = u_new, u_bin
+        track_delta(part["delta"], eps)
+        if part["delta"] < f32(eps):
+            converged = True
+            break
+        if it + 1 < max_iters:
+            centers = part_centers(part, c)
+    assert converged, "histogram mirror did not converge"
+    bin_labels = defuzzify(u_bin, c, 256)
+    _, rank = canonical_rank(centers)
+    labels = np.zeros(n, dtype=np.uint8)
+    for i, v in enumerate(vox):
+        labels[i] = rank[bin_labels[v]] if w[i] > 0.0 else 0
+    # Label margins at bin level, occupied bins only.
+    occ = [b for b in range(256) if counts[b] > 0]
+    track_labels(u_bin[:, occ])
+    return labels
+
+
+def box3d(u, gw, gh, d, c, radius=1):
+    """spatial::spatial_function_3d: separable three-pass f32 box sum."""
+    area = gw * gh
+    n = area * d
+    out = np.zeros_like(u)
+    tmp1 = np.zeros(n, dtype=np.float32)
+    tmp2 = np.zeros(n, dtype=np.float32)
+    for j in range(c):
+        row = u[j]
+        for z in range(d):
+            for r in range(gh):
+                base = z * area + r * gw
+                for col in range(gw):
+                    lo = max(col - radius, 0)
+                    hi = min(col + radius, gw - 1)
+                    acc = f32(0.0)
+                    for cc in range(lo, hi + 1):
+                        acc = acc + row[base + cc]
+                    tmp1[base + col] = acc
+        for z in range(d):
+            for r in range(gh):
+                lo = max(r - radius, 0)
+                hi = min(r + radius, gh - 1)
+                for col in range(gw):
+                    acc = f32(0.0)
+                    for rr in range(lo, hi + 1):
+                        acc = acc + tmp1[z * area + rr * gw + col]
+                    tmp2[z * area + r * gw + col] = acc
+        for z in range(d):
+            lo = max(z - radius, 0)
+            hi = min(z + radius, d - 1)
+            for i in range(area):
+                acc = f32(0.0)
+                for zz in range(lo, hi + 1):
+                    acc = acc + tmp2[zz * area + i]
+                out[j, z * area + i] = acc
+    return out
+
+
+def run_spatial_volume(vox, w, gw, gh, d, params):
+    """spatial::run_volume with default SpatialParams (p=q=1, r=1):
+    parallel phase 1, then modulated iterations (pw fast path: p=q=1 is
+    the identity — no powf)."""
+    c, eps, max_iters = params["c"], params["eps"], params["max_iters"]
+    area = gw * gh
+    n = len(vox)
+    x64 = [float(v) for v in vox]
+    u, centers, _, _ = run_parallel_volume(vox, w, area, params)
+    centers = np.array(centers, dtype=np.float32, copy=True)
+    u_new = np.zeros_like(u)
+    converged = False
+    for _ in range(max_iters):
+        update_centers(x64, w, u, centers, c)
+        for i in range(n):
+            vals, _ = membership_row(x64[i], w[i], centers, c)
+            for j in range(c):
+                u_new[j, i] = vals[j]
+        h = box3d(u_new, gw, gh, d, c)
+        delta = f32(0.0)
+        for i in range(n):
+            sm = f32(0.0)
+            for j in range(c):
+                v = u_new[j, i] * h[j, i]
+                u_new[j, i] = v
+                sm = sm + v
+            if sm > 0.0:
+                for j in range(c):
+                    u_new[j, i] = u_new[j, i] / sm
+            for j in range(c):
+                diff = abs(u_new[j, i] - u[j, i])
+                if diff > delta:
+                    delta = diff
+        u, u_new = u_new, u
+        track_delta(delta, eps)
+        if delta < f32(eps):
+            converged = True
+            break
+    assert converged, "spatial mirror did not converge"
+    return u, centers
+
+
+# --------------------------------------------------- fixture dataset ----
+
+
+def fixture_volume(gw, gh, d):
+    """Four well-separated intensity bands in a deterministic spatial
+    pattern, with deterministic jitter so no center can collide with a
+    voxel value (ZERO_TOL margin) and argmax margins stay wide."""
+    base = [20, 90, 160, 230]
+    vox = []
+    for z in range(d):
+        for y in range(gh):
+            for x in range(gw):
+                cls = ((x // 2) + (y // 2) + z) % 4
+                jit = (3 * x + 5 * y + 7 * z) % 5
+                vox.append(base[cls] + jit)
+    return vox
+
+
+def fixture_mask(gw, gh, d):
+    mask = []
+    for z in range(d):
+        for y in range(gh):
+            for x in range(gw):
+                mask.append(0 if (x + y + z) % 7 == 0 else 1)
+    return mask
+
+
+def weights(mask):
+    return np.array([f32(1.0) if m > 0 else f32(0.0) for m in mask], dtype=np.float32)
+
+
+def slice_loop_sequential(vox, mask, gw, gh, d, params):
+    """SequentialBackend::segment_volume — the default per-slice batch
+    flatten: one independent sequential run per axial slice, each
+    canonicalized (finish_host_run), stitched in z order."""
+    area = gw * gh
+    labels = np.zeros(len(vox), dtype=np.uint8)
+    for z in range(d):
+        xs = vox[z * area:(z + 1) * area]
+        w = weights(mask[z * area:(z + 1) * area])
+        u, centers = run_sequential([f32(v) for v in xs], w, params)
+        track_labels(u[:, w > 0])
+        raw = defuzzify(u, params["c"], area)
+        labels[z * area:(z + 1) * area] = canonical_labels(raw, centers, w)
+    return labels
+
+
+def volume_labels(run_fn, vox, mask, gw, gh, d, params):
+    area = gw * gh
+    w = weights(mask)
+    if run_fn is run_spatial_volume:
+        u, centers = run_spatial_volume(vox, w, gw, gh, d, params)
+    else:
+        u, centers, _, _ = run_parallel_volume(vox, w, area, params)
+    track_labels(u[:, w > 0])
+    raw = defuzzify(u, params["c"], len(vox))
+    return canonical_labels(raw, centers, w)
+
+
+# ------------------------------------------------------------ writers ----
+
+
+def write_rvol(path, gw, gh, d, data):
+    with open(path, "wb") as f:
+        f.write(f"RVOL\n{gw} {gh} {d}\n255\n".encode())
+        f.write(bytes(data))
+
+
+def write_pgm(path, gw, gh, data):
+    with open(path, "wb") as f:
+        f.write(f"P5\n{gw} {gh}\n255\n".encode())
+        f.write(bytes(data))
+
+
+def write_labels(name, labels):
+    path = os.path.join(HERE, "expected", name)
+    with open(path, "wb") as f:
+        f.write(bytes(int(l) for l in labels))
+    print(f"  {name}: {len(labels)} bytes, counts {np.bincount(labels, minlength=4).tolist()}")
+
+
+def main():
+    gw, gh, d = 8, 8, 6
+    params = {"c": 4, "eps": 0.005, "max_iters": 300, "seed": 42}
+    vox = fixture_volume(gw, gh, d)
+    mask = fixture_mask(gw, gh, d)
+    all_real = [1] * len(vox)
+    os.makedirs(os.path.join(HERE, "expected"), exist_ok=True)
+    os.makedirs(os.path.join(HERE, "stack"), exist_ok=True)
+
+    write_rvol(os.path.join(HERE, "vol.rvol"), gw, gh, d, vox)
+    write_rvol(os.path.join(HERE, "mask.rvol"), gw, gh, d, mask)
+    area = gw * gh
+    for z in range(3):
+        write_pgm(
+            os.path.join(HERE, "stack", f"slice_{z:04}.pgm"),
+            gw,
+            gh,
+            vox[z * area:(z + 1) * area],
+        )
+
+    print("unmasked volume:")
+    write_labels("sequential.labels", slice_loop_sequential(vox, all_real, gw, gh, d, params))
+    write_labels("parallel.labels", volume_labels(run_parallel_volume, vox, all_real, gw, gh, d, params))
+    write_labels("histogram.labels", run_histogram_volume(vox, weights(all_real), area, params))
+    write_labels("spatial.labels", volume_labels(run_spatial_volume, vox, all_real, gw, gh, d, params))
+
+    print("masked volume:")
+    write_labels("sequential_masked.labels", slice_loop_sequential(vox, mask, gw, gh, d, params))
+    write_labels("parallel_masked.labels", volume_labels(run_parallel_volume, vox, mask, gw, gh, d, params))
+    write_labels("histogram_masked.labels", run_histogram_volume(vox, weights(mask), area, params))
+    write_labels("spatial_masked.labels", volume_labels(run_spatial_volume, vox, mask, gw, gh, d, params))
+
+    print("3-slice PGM stack:")
+    stack_vox = vox[: 3 * area]
+    write_labels(
+        "stack_parallel.labels",
+        volume_labels(run_parallel_volume, stack_vox, [1] * len(stack_vox), gw, gh, 3, params),
+    )
+
+    print(f"margins: {MARGINS}")
+    # The singularity branch triggers at d2 <= 1e-12, i.e. |d| <= 1e-6.
+    # Requiring min d2 > 1e-9 keeps every trajectory distance at least
+    # 30x above that |d| threshold — far beyond any last-ulp wobble.
+    assert MARGINS["min_d2"] > 1e-9, "trajectory too close to the ZERO_TOL singularity"
+    assert MARGINS["min_eps_gap"] > 1e-4, "a delta too close to the epsilon boundary"
+    assert MARGINS["min_label_gap"] > 0.05, "an argmax label margin too thin"
+    print("all margin gates passed")
+
+
+if __name__ == "__main__":
+    main()

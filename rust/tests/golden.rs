@@ -1,0 +1,179 @@
+//! Golden-fixture regression suite: every serving engine, in-memory
+//! AND streamed, byte-compared against committed expected label bytes.
+//!
+//! The fixtures under `tests/fixtures/` are tiny deterministic volumes
+//! (an 8×8×6 RVOL, a paired mask RVOL, a 3-slice PGM stack) whose
+//! expected labels per engine were derived from the engines' defined
+//! arithmetic by the bit-exact mirror in `fixtures/gen_fixtures.py`
+//! (wide singularity/epsilon/argmax margins asserted at generation
+//! time). Because the bytes are committed, ANY cross-PR drift in
+//! engine output — init stream, reduction order, canonicalization,
+//! sentinel pinning, streaming equivalence — fails here immediately,
+//! without re-deriving anything on a toolchain machine.
+//!
+//! Intended output changes are re-blessed with
+//! `REPRO_BLESS=1 cargo test --test golden` (rewrites the expected
+//! files from the in-memory engines; review the diff) or by re-running
+//! the python generator.
+
+mod common;
+
+use repro::coordinator::{backend_for, Engine};
+use repro::fcm::{EngineOpts, FcmParams};
+use repro::image::volume::stream::{PgmStackSource, RvolReader, TilePrefetcher};
+use repro::image::{volume, VoxelVolume};
+use std::path::{Path, PathBuf};
+
+const ENGINES: [(Engine, &str); 4] = [
+    (Engine::Sequential, "sequential"),
+    (Engine::Parallel, "parallel"),
+    (Engine::Histogram, "histogram"),
+    (Engine::Spatial, "spatial"),
+];
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn fixture_volume(masked: bool) -> VoxelVolume {
+    let vol = volume::load_raw(&fixtures().join("vol.rvol")).unwrap();
+    if masked {
+        let mask = volume::load_raw(&fixtures().join("mask.rvol")).unwrap();
+        vol.with_mask(mask.voxels)
+    } else {
+        vol
+    }
+}
+
+fn expected(name: &str) -> Vec<u8> {
+    let path = fixtures().join("expected").join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("missing fixture {}: {e}", path.display()))
+}
+
+fn opts() -> EngineOpts {
+    EngineOpts {
+        threads: common::engine_threads(),
+        ..EngineOpts::default()
+    }
+}
+
+fn label_file(name: &str, masked: bool) -> String {
+    if masked {
+        format!("{name}_masked.labels")
+    } else {
+        format!("{name}.labels")
+    }
+}
+
+fn blessing() -> bool {
+    std::env::var("REPRO_BLESS").is_ok()
+}
+
+/// Compare against the committed bytes — or, under REPRO_BLESS, rewrite
+/// them (only this in-memory path blesses, so parallel test threads
+/// never race on the files).
+fn check_or_bless(name: &str, got: &[u8]) {
+    let path = fixtures().join("expected").join(name);
+    if blessing() {
+        std::fs::write(&path, got).unwrap();
+        return;
+    }
+    assert_eq!(
+        got,
+        &expected(name)[..],
+        "{name}: engine output drifted from the golden fixture \
+         (REPRO_BLESS=1 re-blesses after verifying the change is intended)"
+    );
+}
+
+#[test]
+fn golden_in_memory_engines_match_fixtures() {
+    let params = FcmParams::default();
+    for masked in [false, true] {
+        let vol = fixture_volume(masked);
+        for (engine, name) in ENGINES {
+            let backend = backend_for(engine, None, &opts()).unwrap();
+            let out = backend.segment_volume(&vol, &params).unwrap();
+            assert_eq!(out.labels.len(), vol.len(), "{engine:?}");
+            check_or_bless(&label_file(name, masked), &out.labels);
+        }
+    }
+}
+
+#[test]
+fn golden_streamed_engines_match_fixtures() {
+    // Every engine through segment_volume_streamed (the host overrides
+    // run out of core; Sequential exercises the materialize fallback),
+    // across two tile sizes. Under REPRO_BLESS the reference is the
+    // in-memory run instead of the file (the bless happens there).
+    let params = FcmParams::default();
+    for masked in [false, true] {
+        let vol = fixture_volume(masked);
+        for (engine, name) in ENGINES {
+            let backend = backend_for(engine, None, &opts()).unwrap();
+            let want = if blessing() {
+                backend.segment_volume(&vol, &params).unwrap().labels
+            } else {
+                expected(&label_file(name, masked))
+            };
+            for tile in [1usize, 2] {
+                let mut src = vol.clone();
+                let mut sink = Vec::new();
+                backend
+                    .segment_volume_streamed(&mut src, &mut sink, &params, tile)
+                    .unwrap();
+                assert_eq!(sink, want, "{engine:?} tile {tile} masked {masked}");
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_file_backed_stream_matches_fixtures() {
+    // The real file path: RvolReader (with the paired mask), wrapped in
+    // the prefetcher — bytes must still equal the committed labels.
+    if blessing() {
+        return;
+    }
+    let params = FcmParams::default();
+    let vp = fixtures().join("vol.rvol");
+    let mp = fixtures().join("mask.rvol");
+    for (engine, name) in [(Engine::Parallel, "parallel"), (Engine::Spatial, "spatial")] {
+        let backend = backend_for(engine, None, &opts()).unwrap();
+        let mut src = TilePrefetcher::wrap(RvolReader::with_mask(&vp, &mp).unwrap());
+        let mut sink = Vec::new();
+        backend
+            .segment_volume_streamed(&mut src, &mut sink, &params, 2)
+            .unwrap();
+        assert_eq!(
+            sink,
+            expected(&label_file(name, true)),
+            "{engine:?} file-backed prefetched stream"
+        );
+    }
+}
+
+#[test]
+fn golden_pgm_stack_in_memory_and_streamed() {
+    let params = FcmParams::default();
+    let dir = fixtures().join("stack");
+    let backend = backend_for(Engine::Parallel, None, &opts()).unwrap();
+    let vol = volume::load_pgm_stack(&dir).unwrap();
+    assert_eq!((vol.width, vol.height, vol.depth), (8, 8, 3));
+    let out = backend.segment_volume(&vol, &params).unwrap();
+    check_or_bless("stack_parallel.labels", &out.labels);
+    // The streamed PGM-stack seam lands on the same bytes.
+    let want = if blessing() {
+        out.labels
+    } else {
+        expected("stack_parallel.labels")
+    };
+    for tile in [1usize, 2, 3] {
+        let mut src = PgmStackSource::open(&dir).unwrap();
+        let mut sink = Vec::new();
+        backend
+            .segment_volume_streamed(&mut src, &mut sink, &params, tile)
+            .unwrap();
+        assert_eq!(sink, want, "PGM stack streamed, tile {tile}");
+    }
+}

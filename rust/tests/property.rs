@@ -3,7 +3,11 @@
 //! Rng64; failures print the seed for deterministic reproduction.
 
 use repro::eval::{dice_per_class, Confusion};
-use repro::fcm::{self, FcmParams};
+use repro::fcm::engine::stream::{run_streamed, run_streamed_spatial, StreamOpts};
+use repro::fcm::spatial::SpatialParams;
+use repro::fcm::{self, Backend, FcmParams};
+use repro::image::volume::stream::{halo_range, tile_ranges};
+use repro::image::volume::{self, VoxelVolume};
 use repro::image::{pgm, GrayImage};
 use repro::util::Rng64;
 
@@ -231,6 +235,182 @@ fn prop_canonical_relabel_preserves_partition() {
         // Centers ascending.
         assert!(run.centers.windows(2).all(|p| p[0] <= p[1]));
     });
+}
+
+/// The streaming seam's tile geometry: every tile grid covers the depth
+/// exactly once, in order, with no tile exceeding the budget.
+#[test]
+fn prop_tile_ranges_cover_exactly_once() {
+    for_all_seeds(40, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x711E);
+        let depth = rng.below(200) as usize;
+        let tile = [1usize, 2, 3, 5, 17][rng.below(5) as usize];
+        let ranges = tile_ranges(depth, tile);
+        let mut expect_start = 0;
+        for &(z0, nz) in &ranges {
+            assert_eq!(z0, expect_start, "gap or overlap at {z0}");
+            assert!((1..=tile).contains(&nz), "tile budget exceeded: {nz}");
+            expect_start += nz;
+        }
+        assert_eq!(expect_start, depth, "grid does not cover the depth");
+    });
+}
+
+/// Halo reads never exceed the volume bounds, always contain their
+/// tile, and never add more than `radius` slices per side.
+#[test]
+fn prop_halo_ranges_stay_in_bounds() {
+    for_all_seeds(40, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x4A10);
+        let depth = 1 + rng.below(120) as usize;
+        let tile = [1usize, 2, 3, 5, 17][rng.below(5) as usize];
+        let radius = rng.below(3) as usize;
+        for (z0, nz) in tile_ranges(depth, tile) {
+            let (hz0, hnz) = halo_range(z0, nz, depth, radius);
+            assert!(hz0 <= z0, "halo must start at or before its tile");
+            assert!(hz0 + hnz >= z0 + nz, "halo must contain its tile");
+            assert!(hz0 + hnz <= depth, "halo read past the volume");
+            assert!(z0 - hz0 <= radius, "lower halo wider than the radius");
+            assert!((hz0 + hnz) - (z0 + nz) <= radius, "upper halo wider than the radius");
+        }
+    });
+}
+
+fn random_volume(rng: &mut Rng64) -> VoxelVolume {
+    let gw = 3 + rng.below(8) as usize;
+    let gh = 3 + rng.below(8) as usize;
+    let d = 2 + rng.below(7) as usize;
+    let n = gw * gh * d;
+    let voxels: Vec<u8> = (0..n)
+        .map(|_| {
+            let mu = [25.0, 95.0, 165.0, 235.0][rng.below(4) as usize];
+            rng.gauss(mu, 4.0).clamp(0.0, 255.0) as u8
+        })
+        .collect();
+    let mut mask = vec![1u8; n];
+    for m in mask.iter_mut() {
+        if rng.below(5) == 0 {
+            *m = 0;
+        }
+    }
+    VoxelVolume::from_voxels(gw, gh, d, voxels).with_mask(mask)
+}
+
+/// Masked voxels keep sentinel label 0 on every streamed engine, for
+/// every tile size — and the label stream always covers the volume.
+#[test]
+fn prop_streamed_masked_labels_always_sentinel() {
+    for_all_seeds(4, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x5EA7);
+        let vol = random_volume(&mut rng);
+        let mask = vol.mask.clone().unwrap();
+        let params = FcmParams {
+            max_iters: 12,
+            seed,
+            ..FcmParams::default()
+        };
+        for tile in [1usize, 2, 3, 5, 17] {
+            for backend in [Backend::Parallel, Backend::Histogram] {
+                let mut src = vol.clone();
+                let mut sink = Vec::new();
+                run_streamed(
+                    &mut src,
+                    &mut sink,
+                    &params,
+                    &StreamOpts {
+                        backend,
+                        threads: 2,
+                        tile_slices: tile,
+                    },
+                )
+                .unwrap();
+                assert_eq!(sink.len(), vol.len(), "{backend:?} tile {tile}");
+                for (i, (&l, &mk)) in sink.iter().zip(&mask).enumerate() {
+                    if mk == 0 {
+                        assert_eq!(l, 0, "{backend:?} tile {tile}: voxel {i}");
+                    }
+                }
+            }
+            // The halo-streamed spatial path honors the same contract.
+            let mut src = vol.clone();
+            let mut sink = Vec::new();
+            run_streamed_spatial(
+                &mut src,
+                &mut sink,
+                &params,
+                &SpatialParams::default(),
+                &StreamOpts {
+                    backend: Backend::Parallel,
+                    threads: 2,
+                    tile_slices: tile,
+                },
+            )
+            .unwrap();
+            assert_eq!(sink.len(), vol.len(), "spatial tile {tile}");
+            for (i, (&l, &mk)) in sink.iter().zip(&mask).enumerate() {
+                if mk == 0 {
+                    assert_eq!(l, 0, "spatial tile {tile}: voxel {i}");
+                }
+            }
+        }
+    });
+}
+
+/// The RVOL header parser rejects malformed files with clean errors —
+/// never panics, and truncation surfaces the typed counts.
+#[test]
+fn prop_rvol_parser_rejects_corruption_cleanly() {
+    use repro::image::volume::TruncatedRaster;
+    // Truncated body: every proper prefix of a valid file fails to
+    // parse (and never panics); the header-complete prefixes fail with
+    // the typed truncation error.
+    let vol = VoxelVolume::from_voxels(3, 2, 2, (0..12).map(|i| i as u8 * 9).collect());
+    let mut buf = Vec::new();
+    volume::write_raw_to(&vol, &mut buf).unwrap();
+    let header_len = buf.len() - vol.len();
+    for cut in 0..buf.len() {
+        let err = volume::parse_raw(&buf[..cut]).unwrap_err();
+        if cut >= header_len {
+            let t = err
+                .downcast_ref::<TruncatedRaster>()
+                .unwrap_or_else(|| panic!("cut {cut}: expected the typed truncation error"));
+            assert_eq!(t.needed, 12);
+            assert_eq!(t.have, cut - header_len);
+        }
+    }
+    // Junk magic, oversize dims, bad/missing maxval lines.
+    let malformed: [&[u8]; 13] = [
+        b"VOXL\n2 2 2\n255\n\0\0\0\0\0\0\0\0",
+        b"P5\n2 2\n255\n\0\0\0\0",
+        b"",
+        b"RVOL",
+        b"RVOL\n2\n",
+        b"RVOL\n2 2\n255\n",
+        b"RVOL\n-1 2 2\n255\n",
+        b"RVOL\n2.5 2 2\n255\n",
+        b"RVOL\n99999999999999999999 2 2\n255\n",
+        b"RVOL\n4294967295 4294967295 4294967295\n255\n",
+        b"RVOL\n2 2 2\n", // missing maxval line entirely
+        b"RVOL\n2 2 2\n65535\n\0\0\0\0\0\0\0\0",
+        b"RVOL\n2 2 2\nmax\n\0\0\0\0\0\0\0\0",
+    ];
+    for bad in malformed {
+        assert!(
+            volume::parse_raw(bad).is_err(),
+            "accepted malformed header: {:?}",
+            String::from_utf8_lossy(&bad[..bad.len().min(24)])
+        );
+    }
+    // The streaming reader applies the same rules at open.
+    let dir = std::env::temp_dir().join(format!("prop_rvol_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.rvol");
+    std::fs::write(&p, b"RVOL\n4 4 4\n255\nshort").unwrap();
+    let err = repro::image::volume::stream::RvolReader::open(&p).unwrap_err();
+    let t = err.downcast_ref::<TruncatedRaster>().expect("typed at open");
+    assert_eq!(t.needed, 64);
+    assert_eq!(t.have, 5);
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]

@@ -1,20 +1,31 @@
-//! Integration suite for out-of-core streaming execution (PR 4):
+//! Integration suite for out-of-core streaming execution (PR 4 + the
+//! PR 5 spatial/prefetch extensions):
 //!
 //! * the acceptance gates — a file-backed RVOL volume several times
 //!   larger than the tile budget segments via the streamed path with
 //!   output **byte-identical** to the in-memory `segment_volume`,
-//!   across tile sizes {1, 3, 17} x thread counts {1, 2, 8}, with the
-//!   peak-resident metric bounded by the tile, not the volume;
+//!   across tile sizes {1, 3, 17} x thread counts {1, 2, 8} — for the
+//!   histogram, slab, AND halo-streamed spatial paths (the spatial
+//!   matrix also sweeps q ∈ {0, q>0}) — with the peak-resident metric
+//!   bounded by the tile, not the volume;
 //! * the CLI contract — a streamed label RVOL (rendered through
 //!   `LabelScaler`) equals `save_raw(from_labels(...))` of the
 //!   in-memory run, byte for byte;
 //! * masked (skull-stripped) volumes through the paired-file reader;
-//! * streamed volume jobs end-to-end through the service.
+//! * [`TilePrefetcher`] transparency (prefetch reorders I/O only) and
+//!   [`PgmStackSource`] streaming through the same seam;
+//! * streamed volume jobs end-to-end through the service, including
+//!   concurrent-job high-water metrics and error propagation.
+
+mod common;
 
 use repro::config::Config;
 use repro::coordinator::{backend_for, Engine, Service, StreamVolumeJob};
+use repro::fcm::spatial::SpatialParams;
 use repro::fcm::{EngineOpts, FcmParams};
-use repro::image::volume::stream::{materialize, LabelScaler, RvolReader, RvolWriter};
+use repro::image::volume::stream::{
+    materialize, LabelScaler, PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
+};
 use repro::image::{volume, VoxelVolume};
 use repro::phantom::{generate_volume, PhantomConfig};
 use std::path::PathBuf;
@@ -52,7 +63,7 @@ fn streamed_rvol_bit_identical_across_tiles_and_threads() {
     volume::save_raw(&vol, &path).unwrap();
     let params = FcmParams::default();
 
-    for engine in [Engine::Parallel, Engine::Histogram] {
+    for engine in [Engine::Parallel, Engine::Histogram, Engine::Spatial] {
         let mem = backend_for(engine, None, &EngineOpts::default())
             .unwrap()
             .segment_volume(&vol, &params)
@@ -211,6 +222,254 @@ fn masked_rvol_streams_through_the_paired_reader() {
 }
 
 #[test]
+fn streamed_spatial_q_matrix_bit_identical() {
+    // The PR-5 acceptance gate: the halo-streamed spatial path equals
+    // the in-memory spatial engine byte-for-byte for tile sizes
+    // {1, 3, 17} x threads {1, 2, 8} x q in {0, q > 0}, through the
+    // serving seam and a real file-backed source.
+    use repro::coordinator::backend::SpatialBackend;
+    use repro::coordinator::FcmBackend;
+    let vol = phantom_rvol(29, 33, 8);
+    let dir = tmp_dir("spatial_q");
+    let path = dir.join("v.rvol");
+    volume::save_raw(&vol, &path).unwrap();
+    let params = FcmParams::default();
+    for q in [0.0f32, 1.0] {
+        let sp = SpatialParams {
+            q,
+            ..SpatialParams::default()
+        };
+        let mem = SpatialBackend::with_params(&EngineOpts::default(), sp)
+            .segment_volume(&vol, &params)
+            .unwrap();
+        for threads in [1usize, 2, 8] {
+            let opts = EngineOpts {
+                threads,
+                ..EngineOpts::default()
+            };
+            let backend = SpatialBackend::with_params(&opts, sp);
+            for tile in [1usize, 3, 17] {
+                let mut src = RvolReader::open(&path).unwrap();
+                let mut sink = Vec::new();
+                let out = backend
+                    .segment_volume_streamed(&mut src, &mut sink, &params, tile)
+                    .unwrap();
+                assert!(out.streamed, "q={q} t={threads} tile={tile}");
+                assert_eq!(sink, mem.labels, "q={q} t={threads} tile={tile}");
+                assert_eq!(out.centers, mem.centers, "q={q} t={threads} tile={tile}");
+                assert_eq!(out.iterations, mem.iterations, "q={q} t={threads} tile={tile}");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn prefetched_stream_is_byte_identical_to_direct() {
+    // The prefetcher only reorders I/O: wrapping the source must change
+    // nothing — labels, centers, iterations — for any engine, including
+    // the halo-walking spatial path whose request stride differs.
+    let vol = phantom_rvol(31, 37, 11);
+    let dir = tmp_dir("prefetch");
+    let path = dir.join("v.rvol");
+    volume::save_raw(&vol, &path).unwrap();
+    let params = FcmParams::default();
+    let threads = common::engine_threads();
+    let opts = EngineOpts {
+        threads,
+        ..EngineOpts::default()
+    };
+    for engine in [Engine::Histogram, Engine::Parallel, Engine::Spatial] {
+        let backend = backend_for(engine, None, &opts).unwrap();
+        for tile in [2usize, 5] {
+            let mut direct_sink = Vec::new();
+            let direct = {
+                let mut src = RvolReader::open(&path).unwrap();
+                backend
+                    .segment_volume_streamed(&mut src, &mut direct_sink, &params, tile)
+                    .unwrap()
+            };
+            let mut pf_sink = Vec::new();
+            let prefetched = {
+                let mut src = TilePrefetcher::wrap(RvolReader::open(&path).unwrap());
+                backend
+                    .segment_volume_streamed(&mut src, &mut pf_sink, &params, tile)
+                    .unwrap()
+            };
+            assert_eq!(pf_sink, direct_sink, "{engine:?} tile {tile}");
+            assert_eq!(prefetched.centers, direct.centers, "{engine:?} tile {tile}");
+            assert_eq!(prefetched.iterations, direct.iterations, "{engine:?}");
+            assert_eq!(
+                prefetched.peak_resident_bytes, direct.peak_resident_bytes,
+                "{engine:?}: the engine-side resident metric must not see the prefetcher"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pgm_stack_streams_through_the_same_seam() {
+    // A per-slice PGM directory is a first-class streaming source: the
+    // streamed run over PgmStackSource equals both the in-memory load
+    // and the RVOL streaming of the same field, byte for byte.
+    let vol = phantom_rvol(27, 31, 9);
+    let dir = tmp_dir("pgmstack");
+    let stack = dir.join("slices");
+    volume::save_pgm_stack(&vol, &stack).unwrap();
+    let rvol = dir.join("v.rvol");
+    volume::save_raw(&vol, &rvol).unwrap();
+    assert_eq!(volume::load_pgm_stack(&stack).unwrap(), vol);
+    let params = FcmParams::default();
+    for engine in [Engine::Histogram, Engine::Parallel] {
+        let backend = backend_for(engine, None, &EngineOpts::default()).unwrap();
+        let mem = backend.segment_volume(&vol, &params).unwrap();
+        let mut stack_sink = Vec::new();
+        let mut src = PgmStackSource::open(&stack).unwrap();
+        assert_eq!(
+            (src.width(), src.height(), src.depth()),
+            (vol.width, vol.height, vol.depth)
+        );
+        let out = backend
+            .segment_volume_streamed(&mut src, &mut stack_sink, &params, 4)
+            .unwrap();
+        assert!(out.streamed, "{engine:?}");
+        assert_eq!(stack_sink, mem.labels, "{engine:?}: PGM stack diverged");
+        let mut rvol_sink = Vec::new();
+        let mut rsrc = RvolReader::open(&rvol).unwrap();
+        backend
+            .segment_volume_streamed(&mut rsrc, &mut rvol_sink, &params, 4)
+            .unwrap();
+        assert_eq!(stack_sink, rvol_sink, "{engine:?}: sources disagree");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn service_streams_pgm_stack_jobs_with_prefetch() {
+    // StreamVolumeJob.input may name a PGM-stack directory; the worker
+    // routes it through PgmStackSource (+ prefetch) and the output RVOL
+    // holds the in-memory path's canonical labels.
+    let vol = phantom_rvol(25, 29, 7);
+    let dir = tmp_dir("svc_stack");
+    let stack = dir.join("slices");
+    volume::save_pgm_stack(&vol, &stack).unwrap();
+    let cfg = Config::new();
+    let params = FcmParams::from(&cfg.fcm);
+    let service = Service::start(&cfg).unwrap();
+    let output = dir.join("seg.rvol");
+    let r = service
+        .submit_volume_streamed(
+            StreamVolumeJob {
+                input: stack.clone(),
+                mask: None,
+                output: output.clone(),
+                tile_slices: 3,
+                prefetch: true,
+            },
+            params,
+            Engine::Parallel,
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    let direct = backend_for(Engine::Parallel, None, &EngineOpts::from(&cfg.engine))
+        .unwrap()
+        .segment_volume(&vol, &params)
+        .unwrap();
+    assert_eq!(volume::load_raw(&output).unwrap().voxels, direct.labels);
+    assert_eq!(r.centers, direct.centers);
+    // A mask paired with a directory input is a per-job error.
+    let r = service
+        .submit_volume_streamed(
+            StreamVolumeJob {
+                input: stack.clone(),
+                mask: Some(dir.join("nope.rvol")),
+                output: dir.join("never.rvol"),
+                tile_slices: 3,
+                prefetch: false,
+            },
+            params,
+            Engine::Parallel,
+        )
+        .unwrap()
+        .wait();
+    assert!(r.is_err());
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.failed, 1);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn service_stream_metrics_track_high_water_across_concurrent_jobs() {
+    // The PR-4 gap this PR closes: stream_peak_resident_bytes is a
+    // fetch_max high-water mark — under CONCURRENT streamed jobs with
+    // different tile budgets it must land on exactly the largest
+    // per-job peak, and streamed_runs must count every success.
+    let dir = tmp_dir("svc_conc");
+    let vol = phantom_rvol(33, 37, 12);
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 2;
+    let params = FcmParams::from(&cfg.fcm);
+    let service = Service::start(&cfg).unwrap();
+    // Mixed tile budgets (and prefetch settings) in flight at once.
+    let specs: Vec<StreamVolumeJob> = [1usize, 2, 4, 6]
+        .iter()
+        .enumerate()
+        .map(|(i, &tile)| StreamVolumeJob {
+            input: input.clone(),
+            mask: None,
+            output: dir.join(format!("seg{i}.rvol")),
+            tile_slices: tile,
+            prefetch: i % 2 == 0,
+        })
+        .collect();
+    let tickets: Vec<_> = specs
+        .iter()
+        .map(|spec| {
+            service
+                .submit_volume_streamed(spec.clone(), params, Engine::Histogram)
+                .unwrap()
+        })
+        .collect();
+    let mut peaks = Vec::new();
+    for t in tickets {
+        let r = t.wait().unwrap();
+        peaks.push(r.peak_resident_bytes.expect("streamed jobs report peak bytes") as u64);
+    }
+    // A failing job (missing input) must not bump the streamed counters.
+    assert!(service
+        .submit_volume_streamed(
+            StreamVolumeJob {
+                input: dir.join("missing.rvol"),
+                mask: None,
+                output: dir.join("never.rvol"),
+                tile_slices: 2,
+                prefetch: true,
+            },
+            params,
+            Engine::Histogram,
+        )
+        .unwrap()
+        .wait()
+        .is_err());
+    let snap = service.shutdown();
+    assert_eq!(snap.streamed_runs, 4);
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.failed, 1);
+    assert_eq!(
+        snap.stream_peak_resident_bytes,
+        *peaks.iter().max().unwrap(),
+        "high-water mark must be exactly the largest per-job peak"
+    );
+    assert!(peaks.iter().any(|&p| p != snap.stream_peak_resident_bytes));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn service_streamed_volume_jobs_end_to_end() {
     let vol = phantom_rvol(35, 41, 9);
     let dir = tmp_dir("svc");
@@ -231,6 +490,7 @@ fn service_streamed_volume_jobs_end_to_end() {
                     mask: None,
                     output: output.clone(),
                     tile_slices: 4,
+                    prefetch: i % 2 == 0,
                 },
                 params,
                 engine,
@@ -262,6 +522,7 @@ fn service_streamed_volume_jobs_end_to_end() {
             mask: None,
             output: dir.join("never.rvol"),
             tile_slices: 4,
+            prefetch: true,
         },
         params,
         Engine::Histogram,

@@ -8,6 +8,8 @@
 //! * volume jobs end-to-end through the service (true-3D on the host
 //!   backends, labels aligned with the submitted voxel field).
 
+mod common;
+
 use repro::config::Config;
 use repro::coordinator::{backend_for, Engine, Service};
 use repro::eval::dice_per_class;
@@ -50,7 +52,9 @@ fn forty_slice_volume_bit_identical_across_threads() {
         },
     );
     assert_eq!(reference.run.iterations, 10);
-    for (threads, slab) in [(2, 4), (8, 4), (8, 1), (8, 16)] {
+    // The CI thread-matrix leg re-runs this suite with ENGINE_THREADS
+    // pinned; fold that lane count into the explicit sweep too.
+    for (threads, slab) in [(2, 4), (8, 4), (8, 1), (8, 16), (common::engine_threads(), 4)] {
         let r = run_volume(
             &vol,
             &params,

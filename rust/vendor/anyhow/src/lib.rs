@@ -2,6 +2,8 @@
 //! crates.io access). Implements exactly the subset this repository uses:
 //!
 //! * [`Error`] — a context-chain error (outermost context first),
+//!   carrying the originating typed error for [`Error::downcast_ref`]
+//!   when constructed from one ([`Error::new`] or `?` conversion),
 //! * [`Result`] — `Result<T, Error>` alias with a default type parameter,
 //! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
 //!   `Option`,
@@ -17,8 +19,12 @@ use std::fmt::{self, Display};
 
 /// Error with a chain of context messages; `chain[0]` is the outermost
 /// (most recently attached) context, `chain.last()` the root cause.
+/// When built from a typed `std::error::Error` value, that value rides
+/// along so callers can recover it with [`Error::downcast_ref`] — the
+/// same contract as real anyhow (context layers never drop it).
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
@@ -26,6 +32,23 @@ impl Error {
     pub fn msg<M: Display>(message: M) -> Error {
         Error {
             chain: vec![message.to_string()],
+            payload: None,
+        }
+    }
+
+    /// Construct from a typed error, preserving it for
+    /// [`Error::downcast_ref`] — real anyhow's `Error::new`.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        // Preserve the source chain as context layers.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error {
+            chain,
+            payload: Some(Box::new(e)),
         }
     }
 
@@ -33,6 +56,15 @@ impl Error {
     pub fn context<C: Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// The typed error this chain was built from, if it was one of type
+    /// `T` (real anyhow's bound, so swapping the crates stays a no-op).
+    pub fn downcast_ref<T>(&self) -> Option<&T>
+    where
+        T: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        self.payload.as_ref().and_then(|p| p.downcast_ref::<T>())
     }
 
     /// The root cause message (innermost layer).
@@ -76,14 +108,7 @@ impl fmt::Debug for Error {
 // impl cannot overlap the identity `From<Error> for Error`.
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        // Preserve the source chain as context layers.
-        let mut chain = vec![e.to_string()];
-        let mut src = e.source();
-        while let Some(s) = src {
-            chain.push(s.to_string());
-            src = s.source();
-        }
-        Error { chain }
+        Error::new(e)
     }
 }
 
@@ -191,6 +216,29 @@ mod tests {
         assert_eq!(f(3).unwrap(), 3);
         assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
         assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_typed_error_through_context() {
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        struct Typed {
+            code: u32,
+        }
+        impl Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed error {}", self.code)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        let e = Error::new(Typed { code: 7 }).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed { code: 7 }));
+        // `?`-style conversion preserves the payload too.
+        let e: Error = Typed { code: 9 }.into();
+        assert_eq!(e.downcast_ref::<Typed>().unwrap().code, 9);
+        // Message-only errors carry no payload.
+        assert!(Error::msg("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]
