@@ -116,6 +116,23 @@ pub struct ServiceConfig {
     /// the A/B lever for the coordinator bench). Results are identical
     /// either way.
     pub batch_execute: bool,
+    /// Per-job deadline in milliseconds; 0 = no deadline. The clock
+    /// starts at submit, so queue wait counts against it. Expired jobs
+    /// come back as typed `Interrupted::DeadlineExceeded` errors and
+    /// bump the `cancelled` counter.
+    pub job_timeout_ms: u64,
+    /// Retry attempts beyond the first for transient I/O failures on
+    /// file-backed streamed jobs (safe: engines are deterministic, so a
+    /// re-run is bit-identical). 0 disables retries.
+    pub max_retries: u32,
+    /// Backoff base delay (ms) before the first retry; later attempts
+    /// double it, with seeded jitter (`fault::backoff_delay`).
+    pub retry_backoff_ms: u64,
+    /// Global admission budget: max estimated resident tile bytes in
+    /// flight across streamed-volume jobs; 0 = unlimited. Over-budget
+    /// submissions wait briefly for capacity, then come back as typed
+    /// `Rejected` errors.
+    pub resident_budget_bytes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -128,6 +145,10 @@ impl Default for ServiceConfig {
             max_batch: 8,
             queue_depth: 64,
             batch_execute: true,
+            job_timeout_ms: 0,
+            max_retries: 2,
+            retry_backoff_ms: 50,
+            resident_budget_bytes: 0,
         }
     }
 }
@@ -136,6 +157,9 @@ impl ServiceConfig {
     pub fn validate(&self) -> Result<()> {
         if self.workers == 0 || self.max_batch == 0 || self.queue_depth == 0 {
             bail!("service config fields must all be >= 1: {self:?}");
+        }
+        if self.max_retries > 0 && self.retry_backoff_ms == 0 {
+            bail!("retry_backoff_ms must be >= 1 when max_retries > 0 (zero backoff spins hot)");
         }
         Ok(())
     }
@@ -159,6 +183,10 @@ pub const KEYS: &[&str] = &[
     "max_batch",
     "queue_depth",
     "batch_execute",
+    "job_timeout_ms",
+    "max_retries",
+    "retry_backoff_ms",
+    "resident_budget_bytes",
     "artifacts_dir",
 ];
 
@@ -220,6 +248,10 @@ impl Config {
             "max_batch" => self.service.max_batch = parse(key, v)?,
             "queue_depth" => self.service.queue_depth = parse(key, v)?,
             "batch_execute" => self.service.batch_execute = parse(key, v)?,
+            "job_timeout_ms" => self.service.job_timeout_ms = parse(key, v)?,
+            "max_retries" => self.service.max_retries = parse(key, v)?,
+            "retry_backoff_ms" => self.service.retry_backoff_ms = parse(key, v)?,
+            "resident_budget_bytes" => self.service.resident_budget_bytes = parse(key, v)?,
             "artifacts_dir" => self.artifacts_dir = v.trim_matches('"').to_string(),
             _ => bail!("unknown config key {key:?}"),
         }
@@ -335,6 +367,30 @@ mod tests {
         let c = Config::from_str("batch_execute = false\n").unwrap();
         assert!(!c.service.batch_execute);
         assert!(Config::from_str("batch_execute = maybe\n").is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_validate() {
+        let c = Config::from_str(
+            "job_timeout_ms = 2500\nmax_retries = 3\nretry_backoff_ms = 10\n\
+             resident_budget_bytes = 1048576\n",
+        )
+        .unwrap();
+        assert_eq!(c.service.job_timeout_ms, 2500);
+        assert_eq!(c.service.max_retries, 3);
+        assert_eq!(c.service.retry_backoff_ms, 10);
+        assert_eq!(c.service.resident_budget_bytes, 1 << 20);
+        // Defaults: no deadline, unlimited budget, a couple of retries.
+        let d = Config::new();
+        assert_eq!(d.service.job_timeout_ms, 0);
+        assert_eq!(d.service.max_retries, 2);
+        assert_eq!(d.service.resident_budget_bytes, 0);
+        // Nonsense values: negative timeouts/budgets fail the unsigned
+        // parse; a zero backoff with retries enabled fails validation.
+        assert!(Config::from_str("job_timeout_ms = -5\n").is_err());
+        assert!(Config::from_str("resident_budget_bytes = -1\n").is_err());
+        assert!(Config::from_str("max_retries = -1\n").is_err());
+        assert!(Config::from_str("max_retries = 1\nretry_backoff_ms = 0\n").is_err());
     }
 
     #[test]

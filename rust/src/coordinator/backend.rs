@@ -21,8 +21,12 @@
 
 use super::job::Engine;
 use crate::fcm::engine::batch::BatchInput;
-use crate::fcm::engine::stream::{run_streamed, run_streamed_spatial, StreamOpts, StreamRun};
-use crate::fcm::engine::volume::{VolumeOpts, VolumeRun};
+use crate::fcm::engine::cancel::CancelToken;
+use crate::fcm::engine::stream::{
+    run_streamed, run_streamed_cancellable, run_streamed_spatial,
+    run_streamed_spatial_cancellable, StreamOpts, StreamRun,
+};
+use crate::fcm::engine::volume::{run_volume_cancellable, VolumeOpts, VolumeRun};
 use crate::fcm::{canonical_relabel, engine, spatial, Backend, EngineOpts, FcmParams, FcmRun};
 use crate::image::volume::stream::{materialize, LabelSink, VoxelSource};
 use crate::image::{FeatureVector, VoxelVolume};
@@ -225,6 +229,57 @@ pub trait FcmBackend {
             peak_resident_bytes: resident + out.labels.len(),
         })
     }
+
+    /// [`FcmBackend::segment`] with cooperative cancellation. The
+    /// default checks the token before and after an uninterruptible
+    /// call — backends whose engines poll between iterations override
+    /// (Parallel). Cancellation surfaces as a typed
+    /// [`crate::coordinator::Interrupted`] inside the `anyhow` error.
+    fn segment_cancellable(
+        &self,
+        features: &FeatureVector,
+        params: &FcmParams,
+        cancel: &CancelToken,
+    ) -> Result<BackendRun> {
+        cancel.checkpoint()?;
+        let out = self.segment(features, params)?;
+        cancel.checkpoint()?;
+        Ok(out)
+    }
+
+    /// [`FcmBackend::segment_volume`] with cooperative cancellation.
+    /// Parallel and Histogram override with the per-iteration /
+    /// bounded-bin-loop engine variants.
+    fn segment_volume_cancellable(
+        &self,
+        vol: &VoxelVolume,
+        params: &FcmParams,
+        cancel: &CancelToken,
+    ) -> Result<VolumeOutcome> {
+        cancel.checkpoint()?;
+        let out = self.segment_volume(vol, params)?;
+        cancel.checkpoint()?;
+        Ok(out)
+    }
+
+    /// [`FcmBackend::segment_volume_streamed`] with cooperative
+    /// cancellation. The streaming backends override with the
+    /// tile-granular engine variants: the token is observed between
+    /// tile reads, so a cancel lands within one tile of work, never
+    /// mid-kernel.
+    fn segment_volume_streamed_cancellable(
+        &self,
+        src: &mut dyn VoxelSource,
+        sink: &mut dyn LabelSink,
+        params: &FcmParams,
+        tile_slices: usize,
+        cancel: &CancelToken,
+    ) -> Result<StreamOutcome> {
+        cancel.checkpoint()?;
+        let out = self.segment_volume_streamed(src, sink, params, tile_slices)?;
+        cancel.checkpoint()?;
+        Ok(out)
+    }
 }
 
 /// Resolve the backend serving an [`Engine`] variant. Device variants
@@ -265,6 +320,20 @@ fn host_segment(opts: &EngineOpts, features: &FeatureVector, params: &FcmParams)
     let mut run = engine::run(&features.x, &features.w, params, opts);
     finish_host_run(&mut run, features);
     BackendRun { run, device: None }
+}
+
+/// [`host_segment`] with a cancellation token threaded into the engine:
+/// the parallel path polls per iteration, sequential/histogram check
+/// around the (bounded) run.
+fn host_segment_cancellable(
+    opts: &EngineOpts,
+    features: &FeatureVector,
+    params: &FcmParams,
+    cancel: &CancelToken,
+) -> Result<BackendRun> {
+    let mut run = engine::run_cancellable(&features.x, &features.w, params, opts, cancel)?;
+    finish_host_run(&mut run, features);
+    Ok(BackendRun { run, device: None })
 }
 
 /// Canonicalize a host run and re-pin the sentinel: masked (w = 0)
@@ -384,6 +453,54 @@ impl FcmBackend for ParallelBackend {
         )?
         .into())
     }
+
+    fn segment_cancellable(
+        &self,
+        features: &FeatureVector,
+        params: &FcmParams,
+        cancel: &CancelToken,
+    ) -> Result<BackendRun> {
+        host_segment_cancellable(&self.opts, features, params, cancel)
+    }
+
+    fn segment_volume_cancellable(
+        &self,
+        vol: &VoxelVolume,
+        params: &FcmParams,
+        cancel: &CancelToken,
+    ) -> Result<VolumeOutcome> {
+        Ok(finish_volume_run(
+            run_volume_cancellable(
+                vol,
+                params,
+                &volume_opts(&self.opts, Backend::Parallel),
+                cancel,
+            )?,
+            vol.mask.as_deref(),
+        ))
+    }
+
+    fn segment_volume_streamed_cancellable(
+        &self,
+        src: &mut dyn VoxelSource,
+        sink: &mut dyn LabelSink,
+        params: &FcmParams,
+        tile_slices: usize,
+        cancel: &CancelToken,
+    ) -> Result<StreamOutcome> {
+        Ok(run_streamed_cancellable(
+            src,
+            sink,
+            params,
+            &StreamOpts {
+                backend: Backend::Parallel,
+                threads: self.opts.threads,
+                tile_slices,
+            },
+            cancel,
+        )?
+        .into())
+    }
 }
 
 /// brFCM histogram fast path for 8-bit inputs (falls back to the
@@ -440,6 +557,45 @@ impl FcmBackend for HistogramBackend {
                 threads: self.opts.threads,
                 tile_slices,
             },
+        )?
+        .into())
+    }
+
+    fn segment_volume_cancellable(
+        &self,
+        vol: &VoxelVolume,
+        params: &FcmParams,
+        cancel: &CancelToken,
+    ) -> Result<VolumeOutcome> {
+        Ok(finish_volume_run(
+            run_volume_cancellable(
+                vol,
+                params,
+                &volume_opts(&self.opts, Backend::Histogram),
+                cancel,
+            )?,
+            vol.mask.as_deref(),
+        ))
+    }
+
+    fn segment_volume_streamed_cancellable(
+        &self,
+        src: &mut dyn VoxelSource,
+        sink: &mut dyn LabelSink,
+        params: &FcmParams,
+        tile_slices: usize,
+        cancel: &CancelToken,
+    ) -> Result<StreamOutcome> {
+        Ok(run_streamed_cancellable(
+            src,
+            sink,
+            params,
+            &StreamOpts {
+                backend: Backend::Histogram,
+                threads: self.opts.threads,
+                tile_slices,
+            },
+            cancel,
         )?
         .into())
     }
@@ -520,6 +676,29 @@ impl FcmBackend for SpatialBackend {
                 threads: self.opts.threads,
                 tile_slices,
             },
+        )?
+        .into())
+    }
+
+    fn segment_volume_streamed_cancellable(
+        &self,
+        src: &mut dyn VoxelSource,
+        sink: &mut dyn LabelSink,
+        params: &FcmParams,
+        tile_slices: usize,
+        cancel: &CancelToken,
+    ) -> Result<StreamOutcome> {
+        Ok(run_streamed_spatial_cancellable(
+            src,
+            sink,
+            params,
+            &self.sp,
+            &StreamOpts {
+                backend: Backend::Parallel,
+                threads: self.opts.threads,
+                tile_slices,
+            },
+            cancel,
         )?
         .into())
     }

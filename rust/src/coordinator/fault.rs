@@ -1,0 +1,329 @@
+//! Fault-tolerance layer for the serving pipeline: admission control
+//! against a resident-tile-bytes budget, deterministic retry backoff,
+//! and the typed errors the service surfaces for rejected, cancelled,
+//! and panicked jobs.
+//!
+//! The pieces compose with the rest of the stack like this (DESIGN.md,
+//! "Failure model & cancellation contract"):
+//!
+//! * [`AdmissionController`] — streamed-volume jobs declare their
+//!   estimated peak resident bytes (the quantity
+//!   `StreamRun::peak_resident_bytes` measures) at submit time; the
+//!   controller admits them against a global budget with a bounded
+//!   condvar wait, and over-budget submissions come back as typed
+//!   [`Rejected`] errors instead of queueing unboundedly;
+//! * [`backoff_delay`] — exponential backoff with **seeded** jitter for
+//!   retrying transient I/O failures; deterministic from `(seed,
+//!   attempt)`, so retry schedules are reproducible in tests and CI;
+//! * [`is_transient_io`] — the retry classifier: raw `io::Error`s and
+//!   mid-sweep [`TruncatedRaster`](crate::image::volume::TruncatedRaster)
+//!   reads are retryable (the engines are deterministic, so a re-run is
+//!   bit-identical and at-least-once execution is free); everything
+//!   else — bad parameters, shape mismatches, cancellation — is not;
+//! * [`JobFailed`] — what a worker panic is converted into by the
+//!   `catch_unwind` boundary in `service::worker_loop`.
+//!
+//! Cancellation itself lives one layer down in
+//! [`crate::fcm::engine::cancel`] (re-exported here) so the engine
+//! loops can poll it without depending on the coordinator.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::Rng64;
+
+pub use crate::fcm::engine::cancel::{CancelToken, Interrupted};
+
+/// Typed admission-control rejection: admitting the job would have put
+/// `would_exceed` resident tile bytes in flight against `budget`, and
+/// capacity did not free up within the bounded wait.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rejected {
+    /// Resident bytes that would have been in flight had the job been
+    /// admitted (current in-flight + this job's estimate).
+    pub would_exceed: usize,
+    /// The configured `resident_budget_bytes`.
+    pub budget: usize,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job rejected: would put {} resident tile bytes in flight (budget {})",
+            self.would_exceed, self.budget
+        )
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Typed result of a worker panic caught by the `catch_unwind` boundary:
+/// the job fails, the worker loop survives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobFailed {
+    /// The worker whose job panicked.
+    pub worker: usize,
+    /// The panic payload, stringified.
+    pub reason: String,
+}
+
+impl std::fmt::Display for JobFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job panicked on worker {}: {}", self.worker, self.reason)
+    }
+}
+
+impl std::error::Error for JobFailed {}
+
+/// Retry classifier: is this error worth re-running the job for?
+/// Transient = raw I/O errors and mid-sweep truncated reads on
+/// file-backed sources. Deterministic engines make the retry safe: a
+/// successful re-run is bit-identical to a first-try run (tested).
+pub fn is_transient_io(err: &anyhow::Error) -> bool {
+    if let Some(io) = err.downcast_ref::<std::io::Error>() {
+        // A missing input will not appear on retry; every other I/O
+        // error (interrupted read, transient device error) is worth one.
+        return io.kind() != std::io::ErrorKind::NotFound;
+    }
+    err.downcast_ref::<crate::image::volume::TruncatedRaster>().is_some()
+}
+
+/// Retry policy for transient I/O failures on file-backed streamed jobs
+/// (in-memory jobs never retry — they do no I/O).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retry attempts beyond the first (0 = fail on the first error).
+    pub max_retries: u32,
+    /// Backoff base: the attempt-0 delay before jitter; later attempts
+    /// double it (see [`backoff_delay`]).
+    pub backoff: Duration,
+}
+
+/// Ceiling on a single backoff delay, so a misconfigured base cannot
+/// park a worker for minutes.
+pub const MAX_BACKOFF: Duration = Duration::from_secs(5);
+
+/// Delay before retry `attempt` (0-based): `base · 2^attempt`, scaled by
+/// a jitter factor in `[0.5, 1.5)` drawn from a [`Rng64`] seeded by
+/// `(seed, attempt)` — fully deterministic, schedulable in tests, and
+/// de-synchronized across jobs (each job seeds with its own id).
+pub fn backoff_delay(base: Duration, attempt: u32, seed: u64) -> Duration {
+    let exp = base.saturating_mul(1u32.checked_shl(attempt.min(16)).unwrap_or(u32::MAX));
+    let mut rng = Rng64::new(seed ^ (u64::from(attempt) + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let jitter = 0.5 + rng.next_f64();
+    Duration::from_secs_f64(exp.as_secs_f64() * jitter).min(MAX_BACKOFF)
+}
+
+/// The full deterministic schedule for `retries` retries — what the
+/// service will sleep between attempts for a job with this seed.
+pub fn backoff_schedule(base: Duration, retries: u32, seed: u64) -> Vec<Duration> {
+    (0..retries).map(|a| backoff_delay(base, a, seed)).collect()
+}
+
+/// Global resident-tile-bytes admission control for streamed-volume
+/// jobs. `budget == 0` disables admission (every job admitted
+/// immediately); otherwise [`admit`](AdmissionController::admit) blocks
+/// up to `max_wait` for in-flight jobs to release capacity, then
+/// returns a typed [`Rejected`].
+#[derive(Debug)]
+pub struct AdmissionController {
+    budget: usize,
+    max_wait: Duration,
+    in_flight: Mutex<usize>,
+    freed: Condvar,
+    /// Peak admitted bytes — observability for tests and the snapshot.
+    peak: AtomicUsize,
+}
+
+impl AdmissionController {
+    pub fn new(budget_bytes: usize, max_wait: Duration) -> Arc<AdmissionController> {
+        Arc::new(AdmissionController {
+            budget: budget_bytes,
+            max_wait,
+            in_flight: Mutex::new(0),
+            freed: Condvar::new(),
+            peak: AtomicUsize::new(0),
+        })
+    }
+
+    /// The configured budget (0 = unlimited).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently admitted.
+    pub fn in_flight(&self) -> usize {
+        *self.in_flight.lock().unwrap()
+    }
+
+    /// High-water mark of admitted bytes.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Admit `bytes` against the budget, waiting up to `max_wait` for
+    /// capacity. The returned permit releases the bytes on drop (i.e.
+    /// when the job finishes, fails, or is cancelled).
+    pub fn admit(self: &Arc<Self>, bytes: usize) -> Result<AdmissionPermit, Rejected> {
+        if self.budget == 0 {
+            return Ok(AdmissionPermit { ctl: None, bytes: 0 });
+        }
+        if bytes > self.budget {
+            // Can never fit; reject without waiting.
+            return Err(Rejected {
+                would_exceed: bytes,
+                budget: self.budget,
+            });
+        }
+        let deadline = Instant::now() + self.max_wait;
+        let mut held = self.in_flight.lock().unwrap();
+        loop {
+            if *held + bytes <= self.budget {
+                *held += bytes;
+                self.peak.fetch_max(*held, Ordering::Relaxed);
+                return Ok(AdmissionPermit {
+                    ctl: Some(Arc::clone(self)),
+                    bytes,
+                });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Rejected {
+                    would_exceed: *held + bytes,
+                    budget: self.budget,
+                });
+            }
+            let (guard, _timeout) = self.freed.wait_timeout(held, deadline - now).unwrap();
+            held = guard;
+        }
+    }
+}
+
+/// RAII admission grant: holds `bytes` of the budget until dropped.
+#[derive(Debug)]
+pub struct AdmissionPermit {
+    ctl: Option<Arc<AdmissionController>>,
+    bytes: usize,
+}
+
+impl AdmissionPermit {
+    /// Bytes this permit holds (0 when admission is disabled).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        if let Some(ctl) = self.ctl.take() {
+            let mut held = ctl.in_flight.lock().unwrap();
+            *held = held.saturating_sub(self.bytes);
+            drop(held);
+            ctl.freed.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn backoff_is_deterministic_and_exponential() {
+        let base = Duration::from_millis(10);
+        let a = backoff_schedule(base, 4, 42);
+        let b = backoff_schedule(base, 4, 42);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        // Jitter is bounded in [0.5, 1.5), so attempt k lies in
+        // [base·2^k/2, base·2^k·1.5).
+        for (k, d) in a.iter().enumerate() {
+            let nominal = base * 2u32.pow(k as u32);
+            assert!(*d >= nominal / 2, "attempt {k}: {d:?} < {:?}", nominal / 2);
+            assert!(*d < nominal * 3 / 2, "attempt {k}: {d:?} >= {:?}", nominal * 3 / 2);
+        }
+        // Different seeds de-synchronize.
+        let c = backoff_schedule(base, 4, 43);
+        assert_ne!(a, c, "different seeds should jitter differently");
+    }
+
+    #[test]
+    fn backoff_is_capped() {
+        let d = backoff_delay(Duration::from_secs(4), 20, 1);
+        assert!(d <= MAX_BACKOFF);
+    }
+
+    #[test]
+    fn zero_budget_admits_everything() {
+        let ctl = AdmissionController::new(0, Duration::from_millis(1));
+        let p = ctl.admit(usize::MAX).unwrap();
+        assert_eq!(p.bytes(), 0);
+        assert_eq!(ctl.in_flight(), 0);
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_immediately() {
+        let ctl = AdmissionController::new(100, Duration::from_secs(30));
+        let t0 = Instant::now();
+        let err = ctl.admit(101).unwrap_err();
+        assert_eq!(err, Rejected { would_exceed: 101, budget: 100 });
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait for the impossible");
+    }
+
+    #[test]
+    fn permits_hold_and_release_capacity() {
+        let ctl = AdmissionController::new(100, Duration::from_millis(10));
+        let p1 = ctl.admit(60).unwrap();
+        let p2 = ctl.admit(40).unwrap();
+        assert_eq!(ctl.in_flight(), 100);
+        // Full: the next admit times out with the exact would-exceed.
+        let err = ctl.admit(1).unwrap_err();
+        assert_eq!(err, Rejected { would_exceed: 101, budget: 100 });
+        drop(p1);
+        assert_eq!(ctl.in_flight(), 40);
+        let p3 = ctl.admit(60).unwrap();
+        drop(p2);
+        drop(p3);
+        assert_eq!(ctl.in_flight(), 0);
+        assert_eq!(ctl.peak(), 100);
+    }
+
+    #[test]
+    fn bounded_wait_sees_freed_capacity() {
+        let ctl = AdmissionController::new(50, Duration::from_secs(10));
+        let p = ctl.admit(50).unwrap();
+        let ctl2 = Arc::clone(&ctl);
+        let waiter = thread::spawn(move || ctl2.admit(30).map(|p| p.bytes()));
+        thread::sleep(Duration::from_millis(50));
+        drop(p); // frees capacity; the waiter must wake well before 10 s
+        assert_eq!(waiter.join().unwrap(), Ok(30));
+    }
+
+    #[test]
+    fn rejected_error_is_typed_through_anyhow() {
+        let err = anyhow::Error::new(Rejected { would_exceed: 7, budget: 3 });
+        let r = err.downcast_ref::<Rejected>().unwrap();
+        assert_eq!(r.budget, 3);
+        assert!(err.to_string().contains("7 resident tile bytes"));
+    }
+
+    #[test]
+    fn transient_classifier_accepts_io_rejects_typed() {
+        let io = anyhow::Error::new(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "disk"));
+        assert!(is_transient_io(&io));
+        let missing =
+            anyhow::Error::new(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(!is_transient_io(&missing), "a missing file will not appear on retry");
+        let trunc = anyhow::Error::new(crate::image::volume::TruncatedRaster {
+            needed: 10,
+            have: 3,
+        });
+        assert!(is_transient_io(&trunc));
+        let rejected = anyhow::Error::new(Rejected { would_exceed: 1, budget: 1 });
+        assert!(!is_transient_io(&rejected));
+        let cancelled = anyhow::Error::new(Interrupted::Cancelled);
+        assert!(!is_transient_io(&cancelled));
+    }
+}

@@ -1,7 +1,8 @@
 //! Job types flowing through the segmentation service.
 
+use super::fault::{AdmissionPermit, CancelToken};
 use crate::fcm::FcmParams;
-use crate::image::FeatureVector;
+use crate::image::{FaultPlan, FeatureVector};
 use crate::runtime::DeviceStats;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -114,6 +115,11 @@ pub struct StreamVolumeJob {
     /// compute on a dedicated reader thread. Reorders I/O only —
     /// results are identical either way.
     pub prefetch: bool,
+    /// Deterministic fault injection ([`FaultPlan`]) wrapped around the
+    /// opened source — `None` in production; soak tests and the
+    /// `REPRO_FAULT_SEED` CLI hook set it to provoke reproducible
+    /// failures through the real retry/recovery machinery.
+    pub fault: Option<FaultPlan>,
 }
 
 /// A segmentation request. Slice jobs carry `features`; volume jobs
@@ -132,6 +138,15 @@ pub struct SegmentJob {
     pub params: FcmParams,
     pub engine: Engine,
     pub submitted: Instant,
+    /// Cooperative cancellation handle (deadline and/or explicit
+    /// cancel); [`CancelToken::never`] when neither applies. Workers
+    /// fast-fail queued jobs whose token has fired and thread it into
+    /// the engine loops for in-flight ones.
+    pub cancel: CancelToken,
+    /// Admission grant held while the job is queued or running;
+    /// dropping the job (after serving, or on shutdown) releases its
+    /// resident-byte reservation.
+    pub permit: Option<AdmissionPermit>,
     pub respond: mpsc::Sender<anyhow::Result<JobResult>>,
 }
 
@@ -188,6 +203,8 @@ mod tests {
             params: FcmParams::default(),
             engine: Engine::Device,
             submitted: Instant::now(),
+            cancel: CancelToken::never(),
+            permit: None,
             respond: tx,
         }
     }

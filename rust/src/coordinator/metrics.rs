@@ -18,6 +18,17 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Jobs refused at admission (budget would be exceeded) — counted
+    /// **instead of** `submitted`, never both: a rejected job never
+    /// enters the queue, so `submitted == completed + failed +
+    /// cancelled` stays an exact identity on a drained service.
+    pub rejected: AtomicU64,
+    /// Jobs that ended via [`super::Interrupted`] (explicit cancel or
+    /// deadline), whether observed in-queue or mid-run.
+    pub cancelled: AtomicU64,
+    /// Retry attempts executed (attempts beyond the first; a job that
+    /// succeeds on its 3rd attempt adds 2 here and 1 to `completed`).
+    pub retried: AtomicU64,
     pub batches: AtomicU64,
     /// Microsecond accumulators (atomics hold integers).
     queue_wait_us: AtomicU64,
@@ -50,6 +61,14 @@ pub struct Snapshot {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Jobs refused at admission; disjoint from `submitted`.
+    pub rejected: u64,
+    /// Jobs ended by cancellation or deadline; counted under
+    /// `submitted` (the accounting identity is
+    /// `submitted == completed + failed + cancelled` once drained).
+    pub cancelled: u64,
+    /// Retry attempts beyond each job's first attempt.
+    pub retried: u64,
     pub batches: u64,
     pub mean_queue_wait_s: f64,
     pub mean_service_s: f64,
@@ -88,6 +107,21 @@ impl Metrics {
 
     pub fn job_failed(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a job refused at admission (never submitted).
+    pub fn job_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a job ended by cancellation or deadline.
+    pub fn job_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one retry attempt (an attempt beyond a job's first).
+    pub fn job_retried(&self) {
+        self.retried.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn batch_formed(&self) {
@@ -138,6 +172,9 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
             failed: self.failed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
             batches,
             mean_queue_wait_s: self.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
             mean_service_s: self.service_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
@@ -181,6 +218,39 @@ mod tests {
         assert!(s.per_engine.is_empty());
         assert_eq!(s.streamed_runs, 0);
         assert_eq!(s.stream_peak_resident_bytes, 0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.cancelled, 0);
+        assert_eq!(s.retried, 0);
+    }
+
+    #[test]
+    fn fault_counters_hold_the_accounting_identity() {
+        // Replay a mixed workload the way the service counts it: 6 jobs
+        // admitted (2 complete — one after 3 retry attempts — 1 fails,
+        // 3 cancelled), 2 refused at admission. Rejected jobs are
+        // disjoint from submitted, so the drained identity is exact.
+        let m = Metrics::default();
+        for _ in 0..6 {
+            m.job_submitted();
+        }
+        m.job_completed(0.0, 0.1, 5);
+        for _ in 0..3 {
+            m.job_retried();
+        }
+        m.job_completed(0.0, 0.2, 7);
+        m.job_failed();
+        for _ in 0..3 {
+            m.job_cancelled();
+        }
+        for _ in 0..2 {
+            m.job_rejected();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 6);
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.cancelled, 3);
+        assert_eq!(s.retried, 3);
+        assert_eq!(s.submitted, s.completed + s.failed + s.cancelled);
     }
 
     #[test]

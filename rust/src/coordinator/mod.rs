@@ -4,12 +4,17 @@
 //! See DESIGN.md section 1 (L3) and S12.
 
 pub mod backend;
+pub mod fault;
 pub mod job;
 pub mod metrics;
 pub mod queue;
 pub mod service;
 
 pub use backend::{backend_for, BackendRun, FcmBackend, StreamOutcome, VolumeOutcome};
+pub use fault::{
+    backoff_delay, backoff_schedule, is_transient_io, AdmissionController, AdmissionPermit,
+    CancelToken, Interrupted, JobFailed, Rejected, RetryPolicy,
+};
 pub use job::{Engine, JobResult, SegmentJob, StreamVolumeJob};
 pub use metrics::{EngineBatchStats, Metrics, Snapshot};
 pub use queue::Queue;

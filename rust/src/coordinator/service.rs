@@ -32,32 +32,48 @@
 //! whole batch.
 
 use super::backend::{backend_for, BackendRun};
+use super::fault::{
+    backoff_delay, is_transient_io, AdmissionController, CancelToken, Interrupted, JobFailed,
+    RetryPolicy,
+};
 use super::job::{Engine, JobResult, SegmentJob, StreamVolumeJob};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
-use crate::fcm::{EngineOpts, FcmParams};
+use crate::fcm::engine::stream::{
+    estimated_peak_resident_bytes, estimated_peak_resident_bytes_spatial, StreamOpts,
+};
+use crate::fcm::{spatial, Backend, EngineOpts, FcmParams};
 use crate::image::volume::stream::{
-    PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
+    FaultySource, PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
 };
 use crate::image::{FeatureVector, GrayImage, VoxelVolume};
 use crate::runtime::Registry;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Bounded wait for admission: how long a streamed submission may block
+/// for in-flight jobs to release resident-byte capacity before it comes
+/// back as a typed `Rejected`.
+const ADMISSION_WAIT: Duration = Duration::from_millis(500);
 
 pub struct Service {
     queue: Queue<SegmentJob>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    admission: Arc<AdmissionController>,
+    job_timeout: Option<Duration>,
 }
 
-/// Ticket for an in-flight job.
+/// Ticket for an in-flight job — the caller's handle for waiting on and
+/// cancelling it.
 pub struct Ticket {
     pub id: u64,
     rx: mpsc::Receiver<Result<JobResult>>,
+    cancel: CancelToken,
 }
 
 impl Ticket {
@@ -66,6 +82,20 @@ impl Ticket {
         self.rx
             .recv()
             .map_err(|_| anyhow!("service dropped the job (shutdown?)"))?
+    }
+
+    /// Cooperatively cancel the job: queued jobs are fast-failed by the
+    /// worker that pops them; in-flight engine runs observe the token
+    /// between iterations/tiles and abort with the typed
+    /// [`Interrupted::Cancelled`]. Idempotent.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clone of the job's cancel token (e.g. to cancel after this
+    /// ticket has been consumed by [`Ticket::wait`] on another thread).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
     }
 }
 
@@ -88,29 +118,27 @@ impl Service {
         let queue: Queue<SegmentJob> = Queue::bounded(cfg.service.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let batch_ids = Arc::new(AtomicU64::new(0));
+        let worker_cfg = WorkerCfg {
+            max_batch: cfg.service.max_batch,
+            batch_execute: cfg.service.batch_execute,
+            engine_opts: EngineOpts::from(&cfg.engine),
+            retry: RetryPolicy {
+                max_retries: cfg.service.max_retries,
+                backoff: Duration::from_millis(cfg.service.retry_backoff_ms),
+            },
+        };
         let mut workers = Vec::new();
         for w in 0..cfg.service.workers {
             let queue = queue.clone();
             let metrics = metrics.clone();
             let batch_ids = batch_ids.clone();
             let artifacts_dir = cfg.artifacts_dir.clone();
-            let max_batch = cfg.service.max_batch;
-            let batch_execute = cfg.service.batch_execute;
-            let engine_opts = EngineOpts::from(&cfg.engine);
+            let worker_cfg = worker_cfg.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fcm-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(
-                            w,
-                            &artifacts_dir,
-                            queue,
-                            metrics,
-                            batch_ids,
-                            max_batch,
-                            batch_execute,
-                            engine_opts,
-                        )
+                        worker_loop(w, &artifacts_dir, queue, metrics, batch_ids, worker_cfg)
                     })
                     .expect("spawning worker"),
             );
@@ -120,7 +148,28 @@ impl Service {
             workers,
             metrics,
             next_id: AtomicU64::new(0),
+            admission: AdmissionController::new(
+                cfg.service.resident_budget_bytes,
+                ADMISSION_WAIT,
+            ),
+            job_timeout: (cfg.service.job_timeout_ms > 0)
+                .then(|| Duration::from_millis(cfg.service.job_timeout_ms)),
         })
+    }
+
+    /// The admission controller (budget/in-flight observability).
+    pub fn admission(&self) -> &Arc<AdmissionController> {
+        &self.admission
+    }
+
+    /// Fresh cancel token for a new job: deadline-armed when the
+    /// service has a job timeout (the clock starts at submit, so queue
+    /// wait counts against the deadline), plain-cancellable otherwise.
+    fn new_token(&self) -> CancelToken {
+        match self.job_timeout {
+            Some(t) => CancelToken::with_timeout(t),
+            None => CancelToken::new(),
+        }
     }
 
     /// Submit features for segmentation. Blocks if the queue is full
@@ -133,6 +182,7 @@ impl Service {
     ) -> Result<Ticket> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        let cancel = self.new_token();
         let job = SegmentJob {
             id,
             features,
@@ -141,13 +191,15 @@ impl Service {
             params,
             engine,
             submitted: Instant::now(),
+            cancel: cancel.clone(),
+            permit: None,
             respond: tx,
         };
         self.metrics.job_submitted();
         self.queue
             .push(job)
             .map_err(|_| anyhow!("service is shut down"))?;
-        Ok(Ticket { id, rx })
+        Ok(Ticket { id, rx, cancel })
     }
 
     /// Convenience: submit an 8-bit image.
@@ -171,6 +223,7 @@ impl Service {
     ) -> Result<Ticket> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        let cancel = self.new_token();
         let job = SegmentJob {
             id,
             features: FeatureVector::from_values(Vec::new()),
@@ -179,13 +232,15 @@ impl Service {
             params,
             engine,
             submitted: Instant::now(),
+            cancel: cancel.clone(),
+            permit: None,
             respond: tx,
         };
         self.metrics.job_submitted();
         self.queue
             .push(job)
             .map_err(|_| anyhow!("service is shut down"))?;
-        Ok(Ticket { id, rx })
+        Ok(Ticket { id, rx, cancel })
     }
 
     /// Submit a **file-backed** volume for out-of-core segmentation:
@@ -195,14 +250,37 @@ impl Service {
     /// labels to `output` as an RVOL. The returned result has empty
     /// `labels` (they live in the file) and reports the run's peak
     /// resident tile bytes, which the service metrics also track.
+    ///
+    /// Streamed jobs are **admitted** against the service's global
+    /// resident-tile-bytes budget: the submission estimates the peak
+    /// resident bytes the run will hold (from the source header and the
+    /// engine's allocation formulas), waits up to [`ADMISSION_WAIT`]
+    /// for capacity, and comes back as a typed
+    /// [`Rejected`](super::Rejected) error — counted under
+    /// `Snapshot::rejected`, never `submitted` — when the budget cannot
+    /// accommodate it.
     pub fn submit_volume_streamed(
         &self,
         spec: StreamVolumeJob,
         params: FcmParams,
         engine: Engine,
     ) -> Result<Ticket> {
+        // An unreadable header skips admission on purpose: the job is
+        // admitted and fails at serve time, where the open error is
+        // counted as a failed job (not a rejected one).
+        let permit = match estimated_stream_job_bytes(&spec, &params, engine) {
+            Some(bytes) => match self.admission.admit(bytes) {
+                Ok(permit) => Some(permit),
+                Err(rejected) => {
+                    self.metrics.job_rejected();
+                    return Err(anyhow::Error::new(rejected));
+                }
+            },
+            None => None,
+        };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        let cancel = self.new_token();
         let job = SegmentJob {
             id,
             features: FeatureVector::from_values(Vec::new()),
@@ -211,13 +289,15 @@ impl Service {
             params,
             engine,
             submitted: Instant::now(),
+            cancel: cancel.clone(),
+            permit,
             respond: tx,
         };
         self.metrics.job_submitted();
         self.queue
             .push(job)
             .map_err(|_| anyhow!("service is shut down"))?;
-        Ok(Ticket { id, rx })
+        Ok(Ticket { id, rx, cancel })
     }
 
     /// Graceful shutdown: drain the queue, join workers, return metrics.
@@ -232,6 +312,97 @@ impl Service {
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
+}
+
+/// Per-worker serving configuration, cloned into each worker thread.
+#[derive(Clone)]
+struct WorkerCfg {
+    max_batch: usize,
+    batch_execute: bool,
+    engine_opts: EngineOpts,
+    retry: RetryPolicy,
+}
+
+/// Read just the source header of a streamed job: shape, and nothing
+/// else resident.
+fn probe_stream_dims(spec: &StreamVolumeJob) -> Result<(usize, usize, usize)> {
+    if spec.input.is_dir() {
+        let src = PgmStackSource::open(&spec.input)?;
+        Ok((src.width(), src.height(), VoxelSource::depth(&src)))
+    } else {
+        let src = RvolReader::open(&spec.input)?;
+        Ok((src.width(), src.height(), src.depth()))
+    }
+}
+
+/// Estimate the peak resident tile bytes a streamed job will hold, from
+/// its source header alone — the admission-control side of the exact
+/// allocation mirrors in `fcm::engine::stream`
+/// ([`estimated_peak_resident_bytes`]). `None` when the header cannot
+/// be read (admission defers to the serve-time failure).
+fn estimated_stream_job_bytes(
+    spec: &StreamVolumeJob,
+    params: &FcmParams,
+    engine: Engine,
+) -> Option<usize> {
+    let (w, h, d) = probe_stream_dims(spec).ok()?;
+    let area = w * h;
+    let opts = |backend| StreamOpts {
+        backend,
+        threads: 0,
+        tile_slices: spec.tile_slices,
+    };
+    Some(match engine {
+        Engine::Parallel => {
+            estimated_peak_resident_bytes(area, d, params.clusters, &opts(Backend::Parallel))
+        }
+        Engine::Histogram => {
+            estimated_peak_resident_bytes(area, d, params.clusters, &opts(Backend::Histogram))
+        }
+        Engine::Spatial => estimated_peak_resident_bytes_spatial(
+            area,
+            d,
+            params.clusters,
+            &spatial::SpatialParams::default(),
+            &opts(Backend::Parallel),
+        ),
+        // Engines without an out-of-core path materialize the source:
+        // voxels + labels (+ mask) are resident at once.
+        _ => (2 + usize::from(spec.mask.is_some())) * area * d,
+    })
+}
+
+/// Run one job execution behind the worker's panic boundary: a
+/// panicking job (engine bug, injected fault) becomes a typed
+/// [`JobFailed`] error and the worker thread lives on to serve the next
+/// job — the pool is never poisoned by one bad input.
+fn catch_job<T>(worker: usize, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let reason = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(anyhow::Error::new(JobFailed { worker, reason }))
+        }
+    }
+}
+
+/// Fail one job, counting it as cancelled when the error is the typed
+/// [`Interrupted`] (explicit cancel or deadline) and failed otherwise —
+/// the split the drained accounting identity relies on
+/// (`submitted == completed + failed + cancelled`).
+fn respond_failure(job: SegmentJob, e: anyhow::Error, metrics: &Metrics) {
+    if e.downcast_ref::<Interrupted>().is_some() {
+        metrics.job_cancelled();
+    } else {
+        metrics.job_failed();
+    }
+    let _ = job.respond.send(Err(e));
 }
 
 /// Shape key used for batch compatibility. Device jobs map to the
@@ -313,7 +484,9 @@ fn serve_volume_job(
     let queue_wait_s = job.submitted.elapsed().as_secs_f64();
     let outcome = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
         let t0 = Instant::now();
-        let out = backend.segment_volume(vol, &job.params)?;
+        let out = catch_job(worker_id, || {
+            backend.segment_volume_cancellable(vol, &job.params, &job.cancel)
+        })?;
         let wall = t0.elapsed().as_secs_f64();
         metrics.batch_served(job.engine, 1, wall);
         Ok((out, wall))
@@ -337,17 +510,22 @@ fn serve_volume_job(
             };
             let _ = job.respond.send(Ok(result));
         }
-        Err(e) => {
-            metrics.job_failed();
-            let _ = job.respond.send(Err(e));
-        }
+        Err(e) => respond_failure(job, e, metrics),
     }
 }
 
 /// Open the voxel source a streamed job names: an RVOL file (optionally
 /// paired with a mask RVOL) or a directory of per-slice PGMs, wrapped
 /// in a [`TilePrefetcher`] when the job asks for overlapped tile I/O.
-fn open_stream_source(spec: &StreamVolumeJob) -> Result<Box<dyn VoxelSource + Send>> {
+/// A job carrying a [`crate::image::FaultPlan`] gets the fault wrapper
+/// **outermost** — outside the prefetcher — so injected panics unwind
+/// on the worker thread, inside its `catch_unwind` boundary. `attempt`
+/// arms or disarms the plan (faults "heal" after `fail_attempts`
+/// attempts, which is what lets retry tests converge).
+fn open_stream_source(
+    spec: &StreamVolumeJob,
+    attempt: u32,
+) -> Result<Box<dyn VoxelSource + Send>> {
     let mut src: Box<dyn VoxelSource + Send> = if spec.input.is_dir() {
         if spec.mask.is_some() {
             return Err(anyhow!("mask pairing needs an RVOL input, not a PGM directory"));
@@ -362,6 +540,9 @@ fn open_stream_source(spec: &StreamVolumeJob) -> Result<Box<dyn VoxelSource + Se
     if spec.prefetch {
         src = Box::new(TilePrefetcher::new(src));
     }
+    if let Some(plan) = spec.fault {
+        src = Box::new(FaultySource::new(src, plan, attempt));
+    }
     Ok(src)
 }
 
@@ -370,31 +551,64 @@ fn open_stream_source(spec: &StreamVolumeJob) -> Result<Box<dyn VoxelSource + Se
 /// directory, with optional prefetch), stream canonical labels to the
 /// output RVOL through `FcmBackend::segment_volume_streamed`, and
 /// record the run's peak resident tile bytes in the metrics.
+///
+/// Transient I/O failures ([`is_transient_io`]) are retried up to
+/// `retry.max_retries` times with deterministic exponential backoff
+/// ([`backoff_delay`], seeded by the job id). A retry re-opens the
+/// source and re-creates the sink from scratch, which is safe — and
+/// byte-identical to a first-try run — because every engine is
+/// deterministic and the sink only publishes output on a successful
+/// `finish` (the `.tmp` rename). Panics and typed errors (rejection,
+/// cancellation, bad parameters) never retry.
 fn serve_stream_job(
     worker_id: usize,
     job: SegmentJob,
     registry: Option<&Registry>,
     engine_opts: &EngineOpts,
+    retry: RetryPolicy,
     metrics: &Metrics,
     batch_id: u64,
 ) {
     let spec = job.stream.clone().expect("stream job");
     let queue_wait_s = job.submitted.elapsed().as_secs_f64();
-    let outcome = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
-        let mut src = open_stream_source(&spec)?;
-        let (w, h, d) = (src.width(), src.height(), src.depth());
-        let mut sink = RvolWriter::create(&spec.output, w, h, d)?;
-        let t0 = Instant::now();
-        let out =
-            backend.segment_volume_streamed(&mut *src, &mut sink, &job.params, spec.tile_slices)?;
-        sink.finish()?;
-        let wall = t0.elapsed().as_secs_f64();
-        metrics.batch_served(job.engine, 1, wall);
-        metrics.stream_run(out.peak_resident_bytes);
-        Ok((out, wall))
-    });
+    let mut attempt: u32 = 0;
+    let outcome = loop {
+        let attempt_run = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
+            catch_job(worker_id, || {
+                job.cancel.checkpoint()?;
+                let mut src = open_stream_source(&spec, attempt)?;
+                let (w, h, d) = (src.width(), src.height(), src.depth());
+                let mut sink = RvolWriter::create(&spec.output, w, h, d)?;
+                let t0 = Instant::now();
+                let out = backend.segment_volume_streamed_cancellable(
+                    &mut *src,
+                    &mut sink,
+                    &job.params,
+                    spec.tile_slices,
+                    &job.cancel,
+                )?;
+                sink.finish()?;
+                Ok((out, t0.elapsed().as_secs_f64()))
+            })
+        });
+        match attempt_run {
+            Ok(v) => break Ok(v),
+            Err(e)
+                if attempt < retry.max_retries
+                    && is_transient_io(&e)
+                    && job.cancel.state().is_none() =>
+            {
+                metrics.job_retried();
+                std::thread::sleep(backoff_delay(retry.backoff, attempt, job.id));
+                attempt += 1;
+            }
+            Err(e) => break Err(e),
+        }
+    };
     match outcome {
         Ok((out, service_s)) => {
+            metrics.batch_served(job.engine, 1, service_s);
+            metrics.stream_run(out.peak_resident_bytes);
             metrics.job_completed(queue_wait_s, service_s, out.iterations);
             let result = JobResult {
                 id: job.id,
@@ -412,34 +626,49 @@ fn serve_stream_job(
             };
             let _ = job.respond.send(Ok(result));
         }
-        Err(e) => {
-            metrics.job_failed();
-            let _ = job.respond.send(Err(e));
-        }
+        Err(e) => respond_failure(job, e, metrics),
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     artifacts_dir: &str,
     queue: Queue<SegmentJob>,
     metrics: Arc<Metrics>,
     batch_ids: Arc<AtomicU64>,
-    max_batch: usize,
-    batch_execute: bool,
-    engine_opts: EngineOpts,
+    cfg: WorkerCfg,
 ) {
+    let WorkerCfg {
+        max_batch,
+        batch_execute,
+        engine_opts,
+        retry,
+    } = cfg;
     // Per-thread PJRT client + executable cache. If artifacts are missing
     // the worker still serves CPU-only engines.
     let registry = Registry::open(std::path::Path::new(artifacts_dir)).ok();
 
     while let Some(first) = queue.pop() {
-        let mut batch = form_batch(&queue, first, max_batch, registry.as_ref());
+        let batch = form_batch(&queue, first, max_batch, registry.as_ref());
         let engine = batch[0].engine;
         let params = batch[0].params;
         let batch_id = batch_ids.fetch_add(1, Ordering::Relaxed);
         metrics.batch_formed();
+
+        // Fast-fail jobs whose token fired while they were queued
+        // (explicit cancel or deadline): they never reach an engine,
+        // and are counted cancelled — not failed.
+        let mut live = Vec::with_capacity(batch.len());
+        for job in batch {
+            match job.cancel.state() {
+                Some(why) => respond_failure(job, anyhow::Error::new(why), &metrics),
+                None => live.push(job),
+            }
+        }
+        let mut batch = live;
+        if batch.is_empty() {
+            continue;
+        }
 
         // Volume jobs arrive as singleton batches; serve and move on.
         if batch[0].volume.is_some() {
@@ -462,6 +691,7 @@ fn worker_loop(
                 job,
                 registry.as_ref(),
                 &engine_opts,
+                retry,
                 &metrics,
                 batch_id,
             );
@@ -491,13 +721,40 @@ fn worker_loop(
                         let features: Vec<&FeatureVector> =
                             batch.iter().map(|j| &j.features).collect();
                         let t0 = Instant::now();
-                        let outs = backend.segment_batch(&features, &params);
-                        let share = t0.elapsed().as_secs_f64() / outs.len().max(1) as f64;
-                        metrics.batch_served(engine, batch.len(), t0.elapsed().as_secs_f64());
-                        outs.into_iter()
-                            .zip(waits)
-                            .map(|(o, wait)| (o, share, wait))
-                            .collect()
+                        // One engine invocation serves the whole batch,
+                        // so per-job tokens cannot interrupt it mid-run
+                        // (they were checked above; a batch is one
+                        // bounded unit of work). The panic boundary
+                        // fails every batchmate as a typed JobFailed.
+                        match catch_job(worker_id, || Ok(backend.segment_batch(&features, &params)))
+                        {
+                            Ok(outs) => {
+                                let share =
+                                    t0.elapsed().as_secs_f64() / outs.len().max(1) as f64;
+                                metrics.batch_served(
+                                    engine,
+                                    batch.len(),
+                                    t0.elapsed().as_secs_f64(),
+                                );
+                                outs.into_iter()
+                                    .zip(waits)
+                                    .map(|(o, wait)| (o, share, wait))
+                                    .collect()
+                            }
+                            Err(e) => {
+                                let failed = JobFailed {
+                                    worker: worker_id,
+                                    reason: format!("{e:#}"),
+                                };
+                                batch
+                                    .iter()
+                                    .zip(waits)
+                                    .map(|(_, wait)| {
+                                        (Err(anyhow::Error::new(failed.clone())), 0.0, wait)
+                                    })
+                                    .collect()
+                            }
+                        }
                     } else {
                         let t0 = Instant::now();
                         let outs: Vec<(Result<BackendRun>, f64, f64)> = batch
@@ -505,7 +762,9 @@ fn worker_loop(
                             .map(|j| {
                                 let wait = wait_of(j);
                                 let t1 = Instant::now();
-                                let o = backend.segment(&j.features, &params);
+                                let o = catch_job(worker_id, || {
+                                    backend.segment_cancellable(&j.features, &params, &j.cancel)
+                                });
                                 (o, t1.elapsed().as_secs_f64(), wait)
                             })
                             .collect();
@@ -535,10 +794,7 @@ fn worker_loop(
                     };
                     let _ = job.respond.send(Ok(result));
                 }
-                Err(e) => {
-                    metrics.job_failed();
-                    let _ = job.respond.send(Err(e));
-                }
+                Err(e) => respond_failure(job, e, &metrics),
             }
         }
     }
@@ -558,6 +814,8 @@ mod tests {
             params,
             engine,
             submitted: Instant::now(),
+            cancel: CancelToken::never(),
+            permit: None,
             respond: tx,
         }
     }
@@ -572,6 +830,8 @@ mod tests {
             params,
             engine,
             submitted: Instant::now(),
+            cancel: CancelToken::never(),
+            permit: None,
             respond: tx,
         }
     }
@@ -588,10 +848,13 @@ mod tests {
                 output: std::path::PathBuf::from("out.rvol"),
                 tile_slices: 4,
                 prefetch: true,
+                fault: None,
             }),
             params,
             engine,
             submitted: Instant::now(),
+            cancel: CancelToken::never(),
+            permit: None,
             respond: tx,
         }
     }

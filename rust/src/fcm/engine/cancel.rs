@@ -1,0 +1,184 @@
+//! Cooperative cancellation + deadlines for engine loops.
+//!
+//! A [`CancelToken`] is the one signalling primitive the fault-tolerance
+//! layer threads from the service's `JobHandle` down through
+//! `coordinator::backend::FcmBackend` into the engine iteration loops.
+//! The contract (DESIGN.md, "Failure model & cancellation contract"):
+//!
+//! * engines poll via [`CancelToken::checkpoint`] **between iterations
+//!   and between tiles/slabs**, never inside the per-pixel hot loop —
+//!   tile granularity bounds the cancellation latency to one tile's
+//!   compute without touching the fused inner passes;
+//! * a fired token surfaces as a typed [`Interrupted`] error through the
+//!   ordinary `Result` plumbing, so workers reclaim the slot and the
+//!   caller can distinguish `Cancelled` (explicit [`CancelToken::cancel`])
+//!   from `DeadlineExceeded` (the token's deadline passed);
+//! * tokens are cheap to clone (one `Arc`) and [`CancelToken::never`] is
+//!   free (no allocation, checkpoint is a no-op) — the default for every
+//!   pre-existing entry point, which keeps the non-cancellable API
+//!   byte-identical in behaviour.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a checkpoint fired. Carried as a typed error through `anyhow`
+/// results so callers can downcast and count cancellations separately
+/// from genuine failures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interrupted {
+    /// [`CancelToken::cancel`] was called.
+    Cancelled,
+    /// The token's deadline passed before the run finished.
+    DeadlineExceeded,
+}
+
+impl std::fmt::Display for Interrupted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Interrupted::Cancelled => f.write_str("job cancelled"),
+            Interrupted::DeadlineExceeded => f.write_str("job deadline exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for Interrupted {}
+
+#[derive(Debug)]
+struct Flag {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// Cooperative cancellation handle. Cloning shares the flag; dropping a
+/// clone never fires it.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    // `None` = the never-firing token: checkpoint is a branch on a
+    // known-None Option, no atomics touched.
+    flag: Option<Arc<Flag>>,
+}
+
+impl CancelToken {
+    /// A token that can be fired by [`cancel`](CancelToken::cancel) but
+    /// has no deadline.
+    pub fn new() -> CancelToken {
+        CancelToken {
+            flag: Some(Arc::new(Flag {
+                cancelled: AtomicBool::new(false),
+                deadline: None,
+            })),
+        }
+    }
+
+    /// A token that never fires. Free: no allocation, checkpoints are
+    /// no-ops. Every non-cancellable entry point passes this.
+    pub fn never() -> CancelToken {
+        CancelToken { flag: None }
+    }
+
+    /// A cancellable token that additionally fires once `timeout` has
+    /// elapsed from now (the deadline clock starts here, so start it at
+    /// submit time to make queue wait count against the deadline).
+    pub fn with_timeout(timeout: Duration) -> CancelToken {
+        CancelToken {
+            flag: Some(Arc::new(Flag {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(Instant::now() + timeout),
+            })),
+        }
+    }
+
+    /// Fire the token. Idempotent; a no-op on [`never`](CancelToken::never).
+    pub fn cancel(&self) {
+        if let Some(flag) = &self.flag {
+            flag.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// Has [`cancel`](CancelToken::cancel) been called? (Deadline expiry
+    /// is NOT reflected here — use [`state`](CancelToken::state).)
+    pub fn is_cancelled(&self) -> bool {
+        match &self.flag {
+            Some(flag) => flag.cancelled.load(Ordering::Acquire),
+            None => false,
+        }
+    }
+
+    /// Current state: `Some(why)` if the token has fired (explicit cancel
+    /// wins over deadline expiry), `None` while the run may proceed.
+    pub fn state(&self) -> Option<Interrupted> {
+        let flag = self.flag.as_ref()?;
+        if flag.cancelled.load(Ordering::Acquire) {
+            return Some(Interrupted::Cancelled);
+        }
+        match flag.deadline {
+            Some(at) if Instant::now() >= at => Some(Interrupted::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    /// The engine-side poll: `Ok(())` while the run may proceed, the
+    /// typed [`Interrupted`] otherwise. Called between iterations and
+    /// between tiles — one atomic load (plus one clock read when a
+    /// deadline is set) per call.
+    pub fn checkpoint(&self) -> Result<(), Interrupted> {
+        match self.state() {
+            None => Ok(()),
+            Some(why) => Err(why),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_token_never_fires() {
+        let t = CancelToken::never();
+        assert!(t.checkpoint().is_ok());
+        t.cancel();
+        assert!(t.checkpoint().is_ok());
+        assert!(!t.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_fires_across_clones() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(u.checkpoint().is_ok());
+        t.cancel();
+        assert_eq!(u.checkpoint(), Err(Interrupted::Cancelled));
+        assert!(u.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_fires_as_deadline_exceeded() {
+        let t = CancelToken::with_timeout(Duration::from_millis(0));
+        // Deadline is `now + 0`, so the first checkpoint at-or-after
+        // creation observes expiry.
+        assert_eq!(t.checkpoint(), Err(Interrupted::DeadlineExceeded));
+        assert!(!t.is_cancelled(), "deadline expiry is not an explicit cancel");
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_deadline() {
+        let t = CancelToken::with_timeout(Duration::from_millis(0));
+        t.cancel();
+        assert_eq!(t.checkpoint(), Err(Interrupted::Cancelled));
+    }
+
+    #[test]
+    fn generous_deadline_does_not_fire() {
+        let t = CancelToken::with_timeout(Duration::from_secs(3600));
+        assert!(t.checkpoint().is_ok());
+    }
+
+    #[test]
+    fn interrupted_displays_and_errors() {
+        let e: Box<dyn std::error::Error> = Box::new(Interrupted::Cancelled);
+        assert_eq!(e.to_string(), "job cancelled");
+        assert_eq!(Interrupted::DeadlineExceeded.to_string(), "job deadline exceeded");
+    }
+}

@@ -35,6 +35,7 @@
 //!   to the in-memory volume paths for every tile size.
 
 pub mod batch;
+pub mod cancel;
 pub mod fused;
 pub mod histogram;
 pub mod parallel;
@@ -42,6 +43,8 @@ pub mod pool;
 pub mod reduce;
 pub mod stream;
 pub mod volume;
+
+pub use cancel::{CancelToken, Interrupted};
 
 use crate::fcm::{FcmParams, FcmRun};
 
@@ -160,6 +163,41 @@ pub fn run_from(
         Backend::Parallel => parallel::run_from(x, w, u0, params, opts),
         Backend::Histogram => histogram::run_from(x, w, u0, params, opts),
     }
+}
+
+/// [`run`] with cooperative cancellation: the fused parallel loop polls
+/// `cancel` between iterations; the sequential baseline and the in-memory
+/// histogram fast path (per-iteration work is O(256·c²), independent of
+/// image size) are checked once up front and at the end, so their
+/// cancellation latency is one full run — bounded and small. With
+/// [`CancelToken::never`] this is exactly [`run`].
+pub fn run_cancellable(
+    x: &[f32],
+    w: &[f32],
+    params: &FcmParams,
+    opts: &EngineOpts,
+    cancel: &CancelToken,
+) -> Result<FcmRun, Interrupted> {
+    let u0 = crate::fcm::init_membership_masked(params.clusters, w, params.seed);
+    run_from_cancellable(x, w, u0, params, opts, cancel)
+}
+
+/// [`run_from`] with cooperative cancellation (see [`run_cancellable`]).
+pub fn run_from_cancellable(
+    x: &[f32],
+    w: &[f32],
+    u0: Vec<f32>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+    cancel: &CancelToken,
+) -> Result<FcmRun, Interrupted> {
+    cancel.checkpoint()?;
+    let run = match opts.backend {
+        Backend::Parallel => parallel::run_from_cancellable(x, w, u0, params, opts, cancel)?,
+        Backend::Sequential | Backend::Histogram => run_from(x, w, u0, params, opts),
+    };
+    cancel.checkpoint()?;
+    Ok(run)
 }
 
 #[cfg(test)]

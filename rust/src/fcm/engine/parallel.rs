@@ -23,6 +23,7 @@
 //! is pre-split into per-chunk row slices behind per-lane mutexes, so
 //! lanes never share a mutable byte.
 
+use super::cancel::{CancelToken, Interrupted};
 use super::fused::{fused_chunk, initial_centers, PassPartial};
 use super::pool::Pool;
 use super::reduce::{chunk_ranges, tree_reduce};
@@ -52,16 +53,48 @@ pub fn run_from(
     run_from_on(&pool, x, w, u, params, opts)
 }
 
+/// [`run_from`] polling a [`CancelToken`] at the top of every fused
+/// iteration — the in-memory half of the cancellation contract (the
+/// tile-granularity half lives in `engine::stream`/`engine::volume`).
+pub fn run_from_cancellable(
+    x: &[f32],
+    w: &[f32],
+    u: Vec<f32>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+    cancel: &CancelToken,
+) -> Result<FcmRun, Interrupted> {
+    let pool = super::pool::global(opts.threads);
+    run_from_on_cancellable(&pool, x, w, u, params, opts, cancel)
+}
+
 /// Run parallel FCM on an explicit pool (the batch layer and tests pass
 /// their own; `run_from` passes the global one).
 pub fn run_from_on(
     pool: &Pool,
     x: &[f32],
     w: &[f32],
-    mut u: Vec<f32>,
+    u: Vec<f32>,
     params: &FcmParams,
     opts: &EngineOpts,
 ) -> FcmRun {
+    match run_from_on_cancellable(pool, x, w, u, params, opts, &CancelToken::never()) {
+        Ok(run) => run,
+        Err(_) => unreachable!("the never token cannot fire"),
+    }
+}
+
+/// [`run_from_on`] with a cancellation checkpoint between iterations.
+#[allow(clippy::too_many_arguments)]
+pub fn run_from_on_cancellable(
+    pool: &Pool,
+    x: &[f32],
+    w: &[f32],
+    mut u: Vec<f32>,
+    params: &FcmParams,
+    opts: &EngineOpts,
+    cancel: &CancelToken,
+) -> Result<FcmRun, Interrupted> {
     let n = x.len();
     let c = params.clusters;
     assert_eq!(w.len(), n, "weights length mismatch");
@@ -70,7 +103,7 @@ pub fn run_from_on(
     let chunk = opts.chunk.max(1);
 
     if n == 0 {
-        return FcmRun {
+        return Ok(FcmRun {
             centers: vec![0.0; c],
             u,
             labels: Vec::new(),
@@ -78,7 +111,7 @@ pub fn run_from_on(
             final_delta: 0.0,
             jm_history: Vec::new(),
             converged: true,
-        };
+        });
     }
 
     // centers_1 = Eq.3 over u_0 (after this, every fused pass hands back
@@ -93,6 +126,7 @@ pub fn run_from_on(
     let mut converged = false;
 
     for it in 0..params.max_iters {
+        cancel.checkpoint()?;
         iterations += 1;
         let total = fused_pass(pool, x, w, &u, n, &centers, m, &ranges, &mut u_new);
         std::mem::swap(&mut u, &mut u_new);
@@ -112,7 +146,7 @@ pub fn run_from_on(
     }
 
     let labels = defuzzify(&u, c, n);
-    FcmRun {
+    Ok(FcmRun {
         centers,
         u,
         labels,
@@ -120,7 +154,7 @@ pub fn run_from_on(
         final_delta,
         jm_history,
         converged,
-    }
+    })
 }
 
 /// One chunk's work unit: (chunk index, start pixel, per-cluster output

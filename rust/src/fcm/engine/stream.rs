@@ -50,6 +50,7 @@
 //! contract is applied on the way out. [`StreamRun::centers`] is
 //! likewise ascending.
 
+use super::cancel::CancelToken;
 use super::fused::{centers_chunk, fused_chunk, recompute_memberships, PassPartial};
 use super::pool::Pool;
 use super::reduce::tree_reduce;
@@ -113,6 +114,71 @@ pub struct StreamRun {
     pub peak_resident_bytes: usize,
 }
 
+/// Predict [`StreamRun::peak_resident_bytes`] for a run over an
+/// `area`-voxel slice, `depth` slices, `clusters` classes with `opts` —
+/// the quantity the service's admission controller budgets streamed
+/// jobs against, computable from the source header alone. Mirrors the
+/// engine's actual allocations ([`hist_streamed`]'s and
+/// [`tiles_iterate`]/[`tiles_streamed`]'s resident sets); exact
+/// equality with the measured peak is pinned by a test.
+pub fn estimated_peak_resident_bytes(
+    area: usize,
+    depth: usize,
+    clusters: usize,
+    opts: &StreamOpts,
+) -> usize {
+    if area == 0 || depth == 0 {
+        return 0;
+    }
+    let c = clusters;
+    let t = opts.tile_slices.max(1).min(depth);
+    let ta = t * area;
+    match opts.backend {
+        // raw + mask + label tiles, one slice's f32 mirror + u_0 rows.
+        Backend::Histogram => 3 * ta + 4 * (2 * area + c * area),
+        // raw + mask + label tiles, f32 tile mirrors, two membership
+        // tiles, the recompute zero scratch.
+        Backend::Parallel | Backend::Sequential => {
+            3 * ta + 4 * (2 * ta + 2 * c * ta + c * area)
+        }
+    }
+}
+
+/// [`estimated_peak_resident_bytes`] for the halo-streamed spatial path
+/// ([`run_streamed_spatial`]): the max of its phase-1 (plain tile loop)
+/// and phase-2 (halo tile) resident sets. With `q == 0` the run IS the
+/// plain path and the plain estimate applies.
+pub fn estimated_peak_resident_bytes_spatial(
+    area: usize,
+    depth: usize,
+    clusters: usize,
+    sp: &SpatialParams,
+    opts: &StreamOpts,
+) -> usize {
+    if area == 0 || depth == 0 {
+        return 0;
+    }
+    let plain_opts = StreamOpts {
+        backend: Backend::Parallel,
+        ..*opts
+    };
+    let plain = estimated_peak_resident_bytes(area, depth, clusters, &plain_opts);
+    if sp.q == 0.0 {
+        return plain;
+    }
+    let c = clusters;
+    let t = opts.tile_slices.max(1).min(depth);
+    let ht = (t + 2 * sp.radius).min(depth);
+    // Phase 1 allocates everything but the label tile of the plain path.
+    let phase1 = plain - t * area;
+    // Phase 2: raw/mask halo tiles + label tile + f32 halo mirrors,
+    // u_raw, two filter scratches, u_a/u_b, zero scratch.
+    let phase2 = 2 * ht * area
+        + t * area
+        + 4 * (2 * ht * area + c * ht * area + 2 * ht * area + 2 * c * t * area + c * area);
+    phase1.max(phase2)
+}
+
 /// Run streamed volumetric FCM: tiles in from `src`, canonical labels
 /// out to `sink`, bounded resident memory. See the module docs for the
 /// equivalence contract.
@@ -121,6 +187,20 @@ pub fn run_streamed(
     sink: &mut dyn LabelSink,
     params: &FcmParams,
     opts: &StreamOpts,
+) -> Result<StreamRun> {
+    run_streamed_cancellable(src, sink, params, opts, &CancelToken::never())
+}
+
+/// [`run_streamed`] polling a [`CancelToken`] between tiles and between
+/// iterations — never inside the fused per-voxel passes, so the
+/// cancellation latency is bounded by one tile's compute and the hot
+/// loop stays untouched (the cancellation contract in DESIGN.md).
+pub fn run_streamed_cancellable(
+    src: &mut dyn VoxelSource,
+    sink: &mut dyn LabelSink,
+    params: &FcmParams,
+    opts: &StreamOpts,
+    cancel: &CancelToken,
 ) -> Result<StreamRun> {
     let c = params.clusters;
     if src.is_empty() {
@@ -137,8 +217,8 @@ pub fn run_streamed(
     }
     assert!(params.max_iters >= 1, "max_iters must be >= 1");
     match opts.backend {
-        Backend::Histogram => hist_streamed(src, sink, params, opts),
-        Backend::Parallel | Backend::Sequential => tiles_streamed(src, sink, params, opts),
+        Backend::Histogram => hist_streamed(src, sink, params, opts, cancel),
+        Backend::Parallel | Backend::Sequential => tiles_streamed(src, sink, params, opts, cancel),
     }
 }
 
@@ -171,6 +251,7 @@ fn hist_streamed(
     sink: &mut dyn LabelSink,
     params: &FcmParams,
     opts: &StreamOpts,
+    cancel: &CancelToken,
 ) -> Result<StreamRun> {
     let area = src.slice_area();
     let depth = src.depth();
@@ -200,6 +281,7 @@ fn hist_streamed(
     let mut leaves: Vec<PassPartial> = Vec::with_capacity(depth);
     let mut rng = Rng64::new(params.seed);
     for &(z0, nz) in &tiles {
+        cancel.checkpoint()?;
         src.read_slab(z0, nz, &mut raw[..nz * area])?;
         src.read_mask_slab(z0, nz, &mut mraw[..nz * area])?;
         for s in 0..nz {
@@ -245,7 +327,9 @@ fn hist_streamed(
             }
         }
     }
+    cancel.checkpoint()?;
     let it = bin_iterations(&xb, &wb, &mut u_bin, &mut centers, params, m);
+    cancel.checkpoint()?;
 
     // Pass B — canonical labels through one 256-entry LUT.
     let bin_labels = defuzzify(&u_bin, c, BINS);
@@ -255,6 +339,7 @@ fn hist_streamed(
         *l = rank[bin_labels[b] as usize];
     }
     for &(z0, nz) in &tiles {
+        cancel.checkpoint()?;
         let k = nz * area;
         src.read_slab(z0, nz, &mut raw[..k])?;
         src.read_mask_slab(z0, nz, &mut mraw[..k])?;
@@ -363,6 +448,7 @@ fn tiles_iterate(
     src: &mut dyn VoxelSource,
     params: &FcmParams,
     opts: &StreamOpts,
+    cancel: &CancelToken,
 ) -> Result<TilesIterated> {
     let area = src.slice_area();
     let depth = src.depth();
@@ -397,6 +483,7 @@ fn tiles_iterate(
     {
         let mut rng = Rng64::new(params.seed);
         for &(z0, nz) in &tiles {
+            cancel.checkpoint()?;
             load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
             for s in 0..nz {
                 let xs = &x[s * area..(s + 1) * area];
@@ -428,6 +515,7 @@ fn tiles_iterate(
         // (tiles arrive in z order, so one pass reproduces it exactly).
         let mut rng = Rng64::new(params.seed);
         for &(z0, nz) in &tiles {
+            cancel.checkpoint()?;
             load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
             if it == 0 {
                 for s in 0..nz {
@@ -491,6 +579,7 @@ fn tiles_streamed(
     sink: &mut dyn LabelSink,
     params: &FcmParams,
     opts: &StreamOpts,
+    cancel: &CancelToken,
 ) -> Result<StreamRun> {
     let area = src.slice_area();
     let depth = src.depth();
@@ -500,7 +589,7 @@ fn tiles_streamed(
     let t = opts.tile_slices.max(1).min(depth);
     let tiles = tile_ranges(depth, t);
 
-    let it = tiles_iterate(src, params, opts)?;
+    let it = tiles_iterate(src, params, opts, cancel)?;
     let centers = it.centers;
 
     // Labeling pass: the final memberships are a pure function of the
@@ -515,6 +604,7 @@ fn tiles_streamed(
     let zeros = vec![0f32; c * area];
     let (order, rank) = canonical_order(&centers);
     for &(z0, nz) in &tiles {
+        cancel.checkpoint()?;
         load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
         for s in 0..nz {
             let xs = &x[s * area..(s + 1) * area];
@@ -718,6 +808,20 @@ pub fn run_streamed_spatial(
     sp: &SpatialParams,
     opts: &StreamOpts,
 ) -> Result<StreamRun> {
+    run_streamed_spatial_cancellable(src, sink, params, sp, opts, &CancelToken::never())
+}
+
+/// [`run_streamed_spatial`] polling a [`CancelToken`] between halo
+/// tiles and between phase-2 passes (same granularity contract as
+/// [`run_streamed_cancellable`]).
+pub fn run_streamed_spatial_cancellable(
+    src: &mut dyn VoxelSource,
+    sink: &mut dyn LabelSink,
+    params: &FcmParams,
+    sp: &SpatialParams,
+    opts: &StreamOpts,
+    cancel: &CancelToken,
+) -> Result<StreamRun> {
     let c = params.clusters;
     if src.is_empty() {
         return Ok(StreamRun {
@@ -739,7 +843,7 @@ pub fn run_streamed_spatial(
     // q = 0: the spatial term is identically 1 and no phase-2 iteration
     // may run — the plain tile path IS the run (mirrors `run_volume`).
     if sp.q == 0.0 {
-        return run_streamed(src, sink, params, &plain_opts);
+        return run_streamed_cancellable(src, sink, params, &plain_opts, cancel);
     }
 
     let (gw, gh) = (src.width(), src.height());
@@ -752,7 +856,7 @@ pub fn run_streamed_spatial(
     let radius = sp.radius;
 
     // Phase 1: plain volumetric FCM to convergence, out of core.
-    let plain = tiles_iterate(src, params, &plain_opts)?;
+    let plain = tiles_iterate(src, params, &plain_opts, cancel)?;
 
     // Phase-2 buffers, all sized by the halo tile (at most t + 2·radius
     // slices) — the +2-halo-slices term of the bounded-memory claim.
@@ -840,6 +944,7 @@ pub fn run_streamed_spatial(
         let mut num = vec![0f64; c];
         let mut den = vec![0f64; c];
         for &(z0, nz) in &tiles {
+            cancel.checkpoint()?;
             let (hz0, hnz) = halo_range(z0, nz, depth, radius);
             load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
             recompute_u_k!(z0, nz, hz0, hnz);
@@ -872,6 +977,7 @@ pub fn run_streamed_spatial(
         let mut delta = 0f32;
         let mut jm = vec![0f64; c];
         for &(z0, nz) in &tiles {
+            cancel.checkpoint()?;
             let (hz0, hnz) = halo_range(z0, nz, depth, radius);
             load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
             recompute_u_k!(z0, nz, hz0, hnz);
@@ -931,6 +1037,7 @@ pub fn run_streamed_spatial(
     // sentinel, stream out.
     let (order, rank) = canonical_order(&centers);
     for &(z0, nz) in &tiles {
+        cancel.checkpoint()?;
         let (hz0, hnz) = halo_range(z0, nz, depth, radius);
         load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
         spatial_recompute_tile(
@@ -1260,5 +1367,60 @@ mod tests {
         assert!(run.converged);
         assert!(sink.is_empty());
         assert_eq!(run.peak_resident_bytes, 0);
+    }
+
+    #[test]
+    fn estimated_peak_matches_measured_peak_exactly() {
+        // The admission controller budgets jobs against this prediction
+        // (from the source header alone, before any allocation), so it
+        // must EQUAL the measured peak — not bound it.
+        let vol = small_volume(7);
+        let area = vol.slice_area();
+        let depth = VoxelSource::depth(&vol);
+        let params = FcmParams::default();
+        for backend in [Backend::Histogram, Backend::Parallel, Backend::Sequential] {
+            for tile in [1usize, 3, 8, 17] {
+                let opts = StreamOpts {
+                    backend,
+                    threads: 2,
+                    tile_slices: tile,
+                };
+                let (_, run) = streamed(&vol, &params, &opts);
+                assert_eq!(
+                    estimated_peak_resident_bytes(area, depth, params.clusters, &opts),
+                    run.peak_resident_bytes,
+                    "{backend:?} tile {tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn estimated_spatial_peak_matches_measured_peak_exactly() {
+        let vol = small_volume(6);
+        let area = vol.slice_area();
+        let depth = VoxelSource::depth(&vol);
+        let params = FcmParams::default();
+        for q in [0.0f32, 1.0] {
+            let sp = SpatialParams {
+                q,
+                ..SpatialParams::default()
+            };
+            for tile in [1usize, 3, 17] {
+                let opts = StreamOpts {
+                    backend: Backend::Parallel,
+                    threads: 2,
+                    tile_slices: tile,
+                };
+                let mut src = vol.clone();
+                let mut sink = Vec::new();
+                let run = run_streamed_spatial(&mut src, &mut sink, &params, &sp, &opts).unwrap();
+                assert_eq!(
+                    estimated_peak_resident_bytes_spatial(area, depth, params.clusters, &sp, &opts),
+                    run.peak_resident_bytes,
+                    "q {q} tile {tile}"
+                );
+            }
+        }
     }
 }

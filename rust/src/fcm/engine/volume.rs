@@ -34,6 +34,7 @@
 //! ~0.1 GB on a full 181x217x181 BrainWeb volume for data that is a pure
 //! function of grey level; labels are expanded through a 256-entry LUT.
 
+use super::cancel::{CancelToken, Interrupted};
 use super::fused::{fused_chunk, initial_centers, PassPartial};
 use super::pool::Pool;
 use super::reduce::{chunk_ranges, tree_reduce};
@@ -107,6 +108,40 @@ pub fn run_volume(vol: &VoxelVolume, params: &FcmParams, opts: &VolumeOpts) -> V
     run_volume_from(vol, u0, params, opts)
 }
 
+/// [`run_volume`] polling a [`CancelToken`] between slab iterations on
+/// the parallel path. The histogram path iterates on a 256-bin table
+/// (O(256·c²) per iteration regardless of voxel count) and the
+/// sequential baseline is kept untouched, so both are checked around
+/// the run instead — their cancellation latency is one run, bounded by
+/// construction on the histogram path.
+pub fn run_volume_cancellable(
+    vol: &VoxelVolume,
+    params: &FcmParams,
+    opts: &VolumeOpts,
+    cancel: &CancelToken,
+) -> Result<VolumeRun, Interrupted> {
+    let w = vol.weights();
+    let u0 = init_membership_masked(params.clusters, &w, params.seed);
+    run_volume_from_cancellable(vol, u0, params, opts, cancel)
+}
+
+/// [`run_volume_from`] with cancellation (see [`run_volume_cancellable`]).
+pub fn run_volume_from_cancellable(
+    vol: &VoxelVolume,
+    u0: Vec<f32>,
+    params: &FcmParams,
+    opts: &VolumeOpts,
+    cancel: &CancelToken,
+) -> Result<VolumeRun, Interrupted> {
+    cancel.checkpoint()?;
+    let run = match opts.backend {
+        Backend::Parallel if vol.len() > 0 => run_slab_cancellable(vol, u0, params, opts, cancel)?,
+        _ => run_volume_from(vol, u0, params, opts),
+    };
+    cancel.checkpoint()?;
+    Ok(run)
+}
+
 /// Run the in-memory engine over any [`VoxelSource`] by materializing
 /// it first — the thin-client entry that puts every engine behind the
 /// tile abstraction (file-backed and in-memory volumes arrive through
@@ -161,12 +196,21 @@ pub fn run_volume_from(
 }
 
 /// The slab-decomposed voxel path (see module docs).
-fn run_slab(
+fn run_slab(vol: &VoxelVolume, u: Vec<f32>, params: &FcmParams, opts: &VolumeOpts) -> VolumeRun {
+    match run_slab_cancellable(vol, u, params, opts, &CancelToken::never()) {
+        Ok(run) => run,
+        Err(_) => unreachable!("the never token cannot fire"),
+    }
+}
+
+/// [`run_slab`] with a cancellation checkpoint between iterations.
+fn run_slab_cancellable(
     vol: &VoxelVolume,
     mut u: Vec<f32>,
     params: &FcmParams,
     opts: &VolumeOpts,
-) -> VolumeRun {
+    cancel: &CancelToken,
+) -> Result<VolumeRun, Interrupted> {
     let n = vol.len();
     let c = params.clusters;
     let m = params.m as f64;
@@ -187,6 +231,7 @@ fn run_slab(
     let mut converged = false;
 
     for it in 0..params.max_iters {
+        cancel.checkpoint()?;
         iterations += 1;
         let total = slab_pass(
             &pool,
@@ -215,7 +260,7 @@ fn run_slab(
     }
 
     let labels = defuzzify(&u, c, n);
-    VolumeRun {
+    Ok(VolumeRun {
         run: FcmRun {
             centers,
             u,
@@ -226,7 +271,7 @@ fn run_slab(
             converged,
         },
         work_per_iter: n,
-    }
+    })
 }
 
 /// One slice's work unit: (slice index, start voxel, per-cluster output

@@ -6,7 +6,7 @@ pub mod pgm;
 pub mod volume;
 
 pub use feature::{pad_to, FeatureVector};
-pub use volume::stream::{LabelSink, VoxelSource};
+pub use volume::stream::{FaultPlan, FaultySource, LabelSink, VoxelSource};
 pub use volume::VoxelVolume;
 
 /// An 8-bit grayscale image (the paper's input type: intensity images).

@@ -648,6 +648,136 @@ fn fill_tile(
     t
 }
 
+/// Deterministic fault-injection plan for a [`FaultySource`]: which
+/// read fails, how (error / panic / truncation), with how much injected
+/// latency, and for how many retry attempts before the fault "heals".
+/// Pure data — carried on a streamed job spec so the service opens an
+/// armed wrapper per attempt, and derivable from a seed for CLI repro
+/// (`REPRO_FAULT_SEED`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// Fail the Nth voxel `read_slab` call of an armed attempt
+    /// (1-based; 0 = no read fault).
+    pub fail_on_read: usize,
+    /// Attempts (0-based) strictly below this are armed — the fault
+    /// fires on them; later attempts read clean. `u32::MAX` keeps the
+    /// fault permanent across every retry.
+    pub fail_attempts: u32,
+    /// Injected latency before every voxel read, armed or not (soak
+    /// tests use it to hold jobs in flight).
+    pub latency: std::time::Duration,
+    /// Truncation fault: an armed read touching slice >= this fails
+    /// with the same typed [`TruncatedRaster`] a shrunken file
+    /// surfaces mid-sweep.
+    pub truncate_from: Option<usize>,
+    /// Panic instead of erroring on the faulting read — exercises the
+    /// worker `catch_unwind` boundary.
+    pub panic_on_read: bool,
+}
+
+impl FaultPlan {
+    /// Permanent deterministic fault derived from a seed — the CLI's
+    /// `REPRO_FAULT_SEED` hook: the run fails on read `1 + seed % 3` of
+    /// every attempt, reproducibly.
+    pub fn from_seed(seed: u64) -> FaultPlan {
+        FaultPlan {
+            fail_on_read: 1 + (seed % 3) as usize,
+            fail_attempts: u32::MAX,
+            ..FaultPlan::default()
+        }
+    }
+}
+
+/// Fault-injection wrapper around any [`VoxelSource`]: deterministic
+/// from its [`FaultPlan`] and the attempt number, so every failure a
+/// test provokes is reproducible. Wrap it **outermost** (outside any
+/// [`TilePrefetcher`]) so injected panics unwind on the consuming
+/// thread, where the worker's `catch_unwind` boundary can convert them.
+pub struct FaultySource {
+    inner: Box<dyn VoxelSource + Send>,
+    plan: FaultPlan,
+    /// Whether this attempt's faults fire (`attempt < plan.fail_attempts`).
+    armed: bool,
+    /// Voxel `read_slab` calls observed so far.
+    reads: usize,
+}
+
+impl FaultySource {
+    pub fn new(inner: Box<dyn VoxelSource + Send>, plan: FaultPlan, attempt: u32) -> FaultySource {
+        FaultySource {
+            inner,
+            armed: attempt < plan.fail_attempts,
+            plan,
+            reads: 0,
+        }
+    }
+
+    /// Reads observed (test observability).
+    pub fn reads(&self) -> usize {
+        self.reads
+    }
+
+    fn fault_check(&mut self, z0: usize, nz: usize) -> Result<()> {
+        if !self.plan.latency.is_zero() {
+            std::thread::sleep(self.plan.latency);
+        }
+        self.reads += 1;
+        if !self.armed {
+            return Ok(());
+        }
+        if let Some(tz) = self.plan.truncate_from {
+            if z0 + nz > tz {
+                let area = self.inner.slice_area();
+                return Err(TruncatedRaster {
+                    needed: (z0 + nz) * area,
+                    have: tz * area,
+                }
+                .into());
+            }
+        }
+        if self.plan.fail_on_read != 0 && self.reads == self.plan.fail_on_read {
+            if self.plan.panic_on_read {
+                panic!("injected fault: panic on read {}", self.reads);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                format!("injected fault on read {}", self.reads),
+            )
+            .into());
+        }
+        Ok(())
+    }
+}
+
+impl VoxelSource for FaultySource {
+    fn width(&self) -> usize {
+        self.inner.width()
+    }
+
+    fn height(&self) -> usize {
+        self.inner.height()
+    }
+
+    fn depth(&self) -> usize {
+        self.inner.depth()
+    }
+
+    fn has_mask(&self) -> bool {
+        self.inner.has_mask()
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        self.fault_check(z0, nz)?;
+        self.inner.read_slab(z0, nz, out)
+    }
+
+    fn read_mask_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        // Mask reads ride the voxel read's fault budget; they never
+        // fault on their own (one knob is enough to break a sweep).
+        self.inner.read_mask_slab(z0, nz, out)
+    }
+}
+
 /// The output side of the tile path: consumers hand finished label (or
 /// voxel) slabs over in z order.
 pub trait LabelSink {
@@ -662,34 +792,57 @@ impl LabelSink for Vec<u8> {
     }
 }
 
+/// The `.tmp` sibling an [`RvolWriter`] streams into before the
+/// finish-time rename (`out.rvol` → `out.rvol.tmp`).
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
 /// Streams an RVOL file out slab by slab: header up front, bytes
 /// appended in z order, byte count enforced by [`RvolWriter::finish`].
+///
+/// Crash/failure atomicity: bytes stream into a `.tmp` sibling and are
+/// renamed onto `path` only by a successful `finish`, so a mid-stream
+/// failure (engine error, cancellation, panic) never leaves a partial
+/// file at the output path — the previous output, if any, survives
+/// intact, and the partial `.tmp` is removed on drop.
 pub struct RvolWriter {
-    out: BufWriter<File>,
+    out: Option<BufWriter<File>>,
+    path: PathBuf,
+    tmp: PathBuf,
     expected: usize,
     written: usize,
+    finished: bool,
 }
 
 impl RvolWriter {
     pub fn create(path: &Path, width: usize, height: usize, depth: usize) -> Result<RvolWriter> {
-        let file =
-            File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let tmp = tmp_sibling(path);
+        let file = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
         let mut out = BufWriter::new(file);
         // Exactly the `write_raw_to` header, so a streamed file is
         // byte-identical to an in-memory `save_raw` of the same field.
         write!(out, "RVOL\n{width} {height} {depth}\n255\n")?;
         Ok(RvolWriter {
-            out,
+            out: Some(out),
+            path: path.to_path_buf(),
+            tmp,
             expected: width * height * depth,
             written: 0,
+            finished: false,
         })
     }
 
-    /// Flush and verify every voxel was written. A short stream fails
-    /// with the typed [`StreamCountMismatch`], naming expected vs
-    /// written counts.
+    /// Flush, verify every voxel was written, and rename the `.tmp`
+    /// sibling onto the output path. A short stream fails with the
+    /// typed [`StreamCountMismatch`], naming expected vs written counts
+    /// — and leaves nothing at the output path.
     pub fn finish(mut self) -> Result<()> {
-        self.out.flush()?;
+        let mut out = self.out.take().expect("finish is called once");
+        out.flush()?;
+        drop(out);
         if self.written != self.expected {
             return Err(StreamCountMismatch {
                 expected: self.expected,
@@ -697,7 +850,21 @@ impl RvolWriter {
             }
             .into());
         }
+        std::fs::rename(&self.tmp, &self.path)
+            .with_context(|| format!("renaming {} into place", self.tmp.display()))?;
+        self.finished = true;
         Ok(())
+    }
+}
+
+impl Drop for RvolWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            // Abandoned stream: close the handle and drop the partial
+            // `.tmp` so failed jobs leave no debris next to the output.
+            drop(self.out.take());
+            let _ = std::fs::remove_file(&self.tmp);
+        }
     }
 }
 
@@ -710,7 +877,7 @@ impl LabelSink for RvolWriter {
             }
             .into());
         }
-        self.out.write_all(labels)?;
+        self.out.as_mut().expect("writer not finished").write_all(labels)?;
         self.written += labels.len();
         Ok(())
     }
@@ -1045,6 +1212,95 @@ mod tests {
         let mut over = RvolWriter::create(&dir.join("o.rvol"), 1, 1, 1).unwrap();
         assert!(over.write_slab(&[0, 0]).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failed_stream_leaves_no_output_file() {
+        let dir = std::env::temp_dir().join(format!("rvol_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.rvol");
+        // Mid-stream abandonment (drop without finish): no output, no
+        // .tmp debris.
+        {
+            let mut w = RvolWriter::create(&path, 2, 2, 2).unwrap();
+            w.write_slab(&[1, 2, 3, 4]).unwrap();
+        }
+        assert!(!path.exists(), "partial stream must not appear at the output path");
+        assert!(!tmp_sibling(&path).exists(), "partial .tmp must be cleaned up");
+        // A failed finish (short stream) likewise.
+        let w = RvolWriter::create(&path, 2, 2, 2).unwrap();
+        assert!(w.finish().is_err());
+        assert!(!path.exists() && !tmp_sibling(&path).exists());
+        // And a mid-stream failure never clobbers a previous good output.
+        let mut w = RvolWriter::create(&path, 1, 1, 2).unwrap();
+        w.write_slab(&[7, 9]).unwrap();
+        w.finish().unwrap();
+        let good = std::fs::read(&path).unwrap();
+        {
+            let mut w = RvolWriter::create(&path, 1, 1, 2).unwrap();
+            w.write_slab(&[0]).unwrap();
+        }
+        assert_eq!(std::fs::read(&path).unwrap(), good, "previous output survives");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn faulty_source_is_deterministic_and_heals() {
+        let plan = FaultPlan {
+            fail_on_read: 2,
+            fail_attempts: 1,
+            ..FaultPlan::default()
+        };
+        // Attempt 0 is armed: read 1 succeeds, read 2 fails with a
+        // retryable io::Error, reads after the burned fault succeed.
+        let mut f = FaultySource::new(Box::new(sample()), plan, 0);
+        let area = 6;
+        let mut buf = vec![0u8; area];
+        f.read_slab(0, 1, &mut buf).unwrap();
+        let err = f.read_slab(1, 1, &mut buf).unwrap_err();
+        assert!(err.downcast_ref::<std::io::Error>().is_some(), "fault is a raw io error");
+        f.read_slab(2, 1, &mut buf).unwrap();
+        assert_eq!(f.reads(), 3);
+        // Attempt 1 is past fail_attempts: clean, byte-identical.
+        let mut f = FaultySource::new(Box::new(sample()), plan, 1);
+        assert_eq!(materialize(&mut f).unwrap(), sample());
+    }
+
+    #[test]
+    fn faulty_source_truncation_is_typed() {
+        let plan = FaultPlan {
+            truncate_from: Some(2),
+            fail_attempts: u32::MAX,
+            ..FaultPlan::default()
+        };
+        let mut f = FaultySource::new(Box::new(sample()), plan, 7);
+        let mut buf = vec![0u8; 6];
+        f.read_slab(0, 1, &mut buf).unwrap();
+        let err = f.read_slab(2, 1, &mut buf).unwrap_err();
+        let t = err.downcast_ref::<TruncatedRaster>().expect("typed truncation");
+        assert_eq!((t.needed, t.have), (18, 12));
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: panic on read 1")]
+    fn faulty_source_can_panic_on_demand() {
+        let plan = FaultPlan {
+            fail_on_read: 1,
+            fail_attempts: u32::MAX,
+            panic_on_read: true,
+            ..FaultPlan::default()
+        };
+        let mut f = FaultySource::new(Box::new(sample()), plan, 0);
+        let mut buf = vec![0u8; 6];
+        let _ = f.read_slab(0, 1, &mut buf);
+    }
+
+    #[test]
+    fn fault_plan_from_seed_is_reproducible() {
+        assert_eq!(FaultPlan::from_seed(5), FaultPlan::from_seed(5));
+        let p = FaultPlan::from_seed(4);
+        assert_eq!(p.fail_on_read, 2, "1 + 4 % 3");
+        assert_eq!(p.fail_attempts, u32::MAX, "seeded faults are permanent");
     }
 
     #[test]

@@ -51,6 +51,19 @@ fn load_config(args: &Args) -> Result<Config> {
             cfg.set(key, v)?;
         }
     }
+    // Friendly fault-tolerance aliases (README names; same keys).
+    for (flag, key) in [
+        ("job-timeout", "job_timeout_ms"),
+        ("max-retries", "max_retries"),
+        ("resident-budget", "resident_budget_bytes"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            cfg.set(key, v).map_err(|e| anyhow::anyhow!("--{flag}: {e}"))?;
+        }
+    }
+    if args.get("resident-budget") == Some("0") {
+        bail!("--resident-budget 0 rejects every streamed job; omit the flag for unlimited");
+    }
     for (k, v) in args.set_overrides() {
         cfg.set(&k, &v)?;
     }
@@ -406,16 +419,20 @@ fn segment_volume(args: &Args) -> Result<()> {
 /// backends run truly out-of-core (spatial reads each tile with a
 /// ±1-slice halo); other engines fall back to materializing inside the
 /// backend (reported as path=materialized).
-fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<()> {
+/// Open the streamed-path voxel source described by the CLI args:
+/// RVOL file (optionally masked) or PGM-stack directory, prefetch
+/// wrapper per config, and — outermost, so injected panics land on the
+/// calling thread — the `REPRO_FAULT_SEED` fault wrapper. Reopened per
+/// retry attempt so a fresh attempt starts from a clean reader.
+fn open_cli_stream_source(
+    args: &Args,
+    cfg: &Config,
+    fault: Option<repro::image::FaultPlan>,
+    attempt: u32,
+) -> Result<Box<dyn repro::image::VoxelSource + Send>> {
     use repro::image::volume::stream::{
-        LabelScaler, PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
+        FaultySource, PgmStackSource, RvolReader, TilePrefetcher, VoxelSource,
     };
-
-    let params = FcmParams::from(&cfg.fcm);
-    let out = args
-        .get("out-raw")
-        .ok_or_else(|| anyhow::anyhow!("--stream needs --out-raw (the label RVOL to write)"))?;
-    let tile_slices = args.get_usize("tile-slices", cfg.engine.tile_slices)?.max(1);
     let mut src: Box<dyn VoxelSource + Send> =
         if let Some(dir) = args.get("input-dir") {
             if args.get("mask-raw").is_some() {
@@ -434,14 +451,40 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
     if cfg.engine.prefetch {
         src = Box::new(TilePrefetcher::new(src));
     }
-    let (w, h, d) = (src.width(), src.height(), src.depth());
-    println!(
-        "volume {w}x{h}x{d} = {} voxels ({} KB), streaming in {tile_slices}-slice tiles \
-         (prefetch {})",
-        w * h * d,
-        w * h * d / 1024,
-        if cfg.engine.prefetch { "on" } else { "off" }
-    );
+    if let Some(plan) = fault {
+        src = Box::new(FaultySource::new(src, plan, attempt));
+    }
+    Ok(src)
+}
+
+fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<()> {
+    use repro::coordinator::{backoff_delay, is_transient_io, CancelToken, RetryPolicy};
+    use repro::image::volume::stream::{FaultPlan, LabelScaler, RvolWriter};
+
+    let params = FcmParams::from(&cfg.fcm);
+    let out = args
+        .get("out-raw")
+        .ok_or_else(|| anyhow::anyhow!("--stream needs --out-raw (the label RVOL to write)"))?;
+    let tile_slices = args.get_usize("tile-slices", cfg.engine.tile_slices)?.max(1);
+    // CI fault-smoke hook: REPRO_FAULT_SEED=N arms a deterministic
+    // FaultPlan around the source — injected faults survive every retry
+    // (fail_attempts = MAX), so the run exercises the real backoff path
+    // and then exits 1 with the typed I/O error.
+    let fault: Option<FaultPlan> = match std::env::var("REPRO_FAULT_SEED") {
+        Ok(s) => {
+            let seed: u64 = s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("REPRO_FAULT_SEED: expected an integer, got {s:?}"))?;
+            let plan = FaultPlan::from_seed(seed);
+            println!(
+                "fault injection armed (REPRO_FAULT_SEED={seed}): failing tile read {}",
+                plan.fail_on_read
+            );
+            Some(plan)
+        }
+        Err(_) => None,
+    };
 
     let registry = match engine {
         Engine::Device | Engine::DeviceRef => Some(Registry::open(Path::new(&cfg.artifacts_dir))?),
@@ -449,15 +492,66 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
     };
     let opts = repro::fcm::EngineOpts::from(&cfg.engine);
     let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
-    // Labels render to grey levels en route, so the output file is
-    // byte-identical to the in-memory path's `--out-raw`.
-    let mut sink = LabelScaler::new(
-        RvolWriter::create(Path::new(out), w, h, d)?,
-        params.clusters as u8,
-    );
+    let retry = RetryPolicy {
+        max_retries: cfg.service.max_retries,
+        backoff: std::time::Duration::from_millis(cfg.service.retry_backoff_ms),
+    };
+    let cancel = match cfg.service.job_timeout_ms {
+        0 => CancelToken::never(),
+        ms => CancelToken::with_timeout(std::time::Duration::from_millis(ms)),
+    };
     let t0 = std::time::Instant::now();
-    let res = backend.segment_volume_streamed(&mut *src, &mut sink, &params, tile_slices)?;
-    sink.into_inner().finish()?;
+    let mut attempt = 0u32;
+    let res = loop {
+        let run = (|| {
+            let mut src = open_cli_stream_source(args, cfg, fault, attempt)?;
+            let (w, h, d) = (src.width(), src.height(), src.depth());
+            if attempt == 0 {
+                println!(
+                    "volume {w}x{h}x{d} = {} voxels ({} KB), streaming in {tile_slices}-slice \
+                     tiles (prefetch {})",
+                    w * h * d,
+                    w * h * d / 1024,
+                    if cfg.engine.prefetch { "on" } else { "off" }
+                );
+            }
+            // Labels render to grey levels en route, so the output file
+            // is byte-identical to the in-memory path's `--out-raw`.
+            // RvolWriter stages into a .tmp sibling, so a failed attempt
+            // never leaves a partial output behind.
+            let mut sink = LabelScaler::new(
+                RvolWriter::create(Path::new(out), w, h, d)?,
+                params.clusters as u8,
+            );
+            let res = backend.segment_volume_streamed_cancellable(
+                &mut *src,
+                &mut sink,
+                &params,
+                tile_slices,
+                &cancel,
+            )?;
+            sink.into_inner().finish()?;
+            Ok::<_, anyhow::Error>(res)
+        })();
+        match run {
+            Ok(res) => break res,
+            Err(e)
+                if attempt < retry.max_retries
+                    && is_transient_io(&e)
+                    && cancel.state().is_none() =>
+            {
+                let delay = backoff_delay(retry.backoff, attempt, cfg.fcm.seed);
+                eprintln!(
+                    "transient I/O failure (attempt {}/{}): {e:#}; retrying in {delay:?}",
+                    attempt + 1,
+                    retry.max_retries + 1
+                );
+                std::thread::sleep(delay);
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     println!(
@@ -635,7 +729,19 @@ COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         --backend sequential|parallel|histogram  --engine_threads N
         --engine_chunk N --tile_slices N --prefetch true|false
         --batch_execute true|false
-        (host-engine + service knobs; see README 'Architecture')
+        --job-timeout MS (deadline per job; 0 = none)
+        --max-retries N --resident-budget BYTES (admission budget;
+        omit for unlimited — 0 is rejected)
+        (host-engine + service + fault-tolerance knobs; see README
+        'Architecture' and 'Fault tolerance')
+
+Fault tolerance: streamed jobs retry transient I/O failures with
+deterministic seeded backoff (safe: engines are bit-identical across
+re-runs); --job-timeout cancels cooperatively at tile/iteration
+boundaries; --resident-budget bounds estimated resident tile bytes in
+flight across streamed service jobs (typed rejection when full). Set
+REPRO_FAULT_SEED=N on segment-volume --stream to arm deterministic
+fault injection (the CI fault-smoke leg).
 
 --engine auto (default) = device path when artifacts exist, else the
 config's host backend. Host engines are deterministic across thread

@@ -1,0 +1,587 @@
+//! Integration suite for the fault-tolerance layer (PR 6):
+//!
+//! * cooperative cancellation is observed within ONE tile of the
+//!   deadline firing — the tile-granularity contract of DESIGN.md;
+//! * a panicking job comes back as the typed [`JobFailed`] and the
+//!   worker pool survives to serve the next job;
+//! * transient I/O faults heal through the retry loop with output
+//!   **byte-identical** to a first-try run (engines are deterministic,
+//!   so re-running is safe);
+//! * deadline and explicit-cancel jobs land in the `cancelled` counter,
+//!   over-budget submissions in `rejected` — never in `failed`;
+//! * the soak gate: 64 concurrent mixed jobs (good / healing-fault /
+//!   permanent-fault / cancelled, plus over-budget rejections) drain
+//!   cleanly with EXACT metrics accounting and zero admission bytes
+//!   left in flight.
+
+mod common;
+
+use repro::config::Config;
+use repro::coordinator::{
+    backend_for, CancelToken, Engine, Interrupted, JobFailed, Rejected, Service, StreamVolumeJob,
+    Ticket,
+};
+use repro::fcm::engine::stream::{estimated_peak_resident_bytes, StreamOpts};
+use repro::fcm::{Backend, EngineOpts, FcmParams};
+use repro::image::volume::stream::{FaultPlan, FaultySource, RvolReader};
+use repro::image::{volume, VoxelVolume};
+use repro::phantom::{generate_volume, PhantomConfig};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn phantom_rvol(width: usize, height: usize, depth: usize) -> VoxelVolume {
+    let start = 90usize.min(181 - depth);
+    generate_volume(
+        &PhantomConfig {
+            width,
+            height,
+            ..PhantomConfig::default()
+        },
+        start,
+        start + depth,
+        1,
+    )
+    .to_voxel_volume()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fault_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Fixed-iteration params: epsilon unreachable, so every run does the
+/// same work and finishes fast — and byte-identity across runs is a
+/// pure determinism check, not a convergence coincidence.
+fn fast_params() -> FcmParams {
+    FcmParams {
+        epsilon: 0.0,
+        max_iters: 6,
+        ..FcmParams::default()
+    }
+}
+
+#[test]
+fn cancellation_is_observed_within_one_tile() {
+    // 25 ms of injected latency per tile read and a 60 ms deadline: the
+    // token fires a couple of reads in, and the engine must abort at
+    // the next between-tile checkpoint — nowhere near the dozens of
+    // reads a full multi-iteration sweep performs.
+    let dir = tmp_dir("cancel_tile");
+    let vol = phantom_rvol(31, 29, 12);
+    let path = dir.join("v.rvol");
+    volume::save_raw(&vol, &path).unwrap();
+    let plan = FaultPlan {
+        latency: Duration::from_millis(25),
+        ..FaultPlan::default()
+    };
+    let mut src = FaultySource::new(Box::new(RvolReader::open(&path).unwrap()), plan, 0);
+    let mut sink = Vec::new();
+    let cancel = CancelToken::with_timeout(Duration::from_millis(60));
+    let backend = backend_for(Engine::Parallel, None, &EngineOpts::default()).unwrap();
+    let err = backend
+        .segment_volume_streamed_cancellable(&mut src, &mut sink, &fast_params(), 2, &cancel)
+        .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<Interrupted>(), Some(Interrupted::DeadlineExceeded)),
+        "expected the typed deadline error, got: {err:#}"
+    );
+    // Depth 12 at tile 2 is 6 reads per sweep; a capped run does 8
+    // sweeps. Tile-granular cancellation stops within the first.
+    assert!(
+        src.reads() <= 6,
+        "cancel took {} reads to observe — not tile-granular",
+        src.reads()
+    );
+    assert!(sink.is_empty(), "no labels may stream after cancellation");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn worker_panic_becomes_typed_job_failed_and_pool_survives() {
+    let dir = tmp_dir("panic");
+    let vol = phantom_rvol(17, 19, 6);
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    let service = Service::start(&cfg).unwrap();
+
+    let bomb = StreamVolumeJob {
+        input: input.clone(),
+        mask: None,
+        output: dir.join("bomb.rvol"),
+        tile_slices: 2,
+        prefetch: false,
+        fault: Some(FaultPlan {
+            fail_on_read: 1,
+            fail_attempts: u32::MAX,
+            panic_on_read: true,
+            ..FaultPlan::default()
+        }),
+    };
+    let err = service
+        .submit_volume_streamed(bomb, fast_params(), Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    let failed = err
+        .downcast_ref::<JobFailed>()
+        .expect("a panicking job must surface as the typed JobFailed");
+    assert_eq!(failed.worker, 0);
+    assert!(
+        failed.reason.contains("injected fault"),
+        "panic payload lost: {}",
+        failed.reason
+    );
+    assert!(!dir.join("bomb.rvol").exists());
+    assert!(!dir.join("bomb.rvol.tmp").exists());
+
+    // The sole worker must still be alive to serve the next job.
+    let good = StreamVolumeJob {
+        input,
+        mask: None,
+        output: dir.join("good.rvol"),
+        tile_slices: 2,
+        prefetch: false,
+        fault: None,
+    };
+    let r = service
+        .submit_volume_streamed(good, fast_params(), Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.worker, 0, "the panicked worker must serve again");
+    let snap = service.shutdown();
+    assert_eq!(snap.submitted, 2);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.cancelled, 0);
+    assert_eq!(snap.retried, 0, "a panic is not a transient fault");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn transient_fault_heals_with_byte_identical_output() {
+    let dir = tmp_dir("retry");
+    let vol = phantom_rvol(21, 23, 8);
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    cfg.service.retry_backoff_ms = 1;
+    let service = Service::start(&cfg).unwrap();
+    let spec = |out: PathBuf, fault: Option<FaultPlan>| StreamVolumeJob {
+        input: input.clone(),
+        mask: None,
+        output: out,
+        tile_slices: 2,
+        prefetch: false,
+        fault,
+    };
+
+    let clean_out = dir.join("clean.rvol");
+    service
+        .submit_volume_streamed(spec(clean_out.clone(), None), fast_params(), Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    // Armed for attempt 0 only: the second read of the first attempt
+    // fails, the retry reads clean and must reproduce the run exactly.
+    let healed_out = dir.join("healed.rvol");
+    let r = service
+        .submit_volume_streamed(
+            spec(
+                healed_out.clone(),
+                Some(FaultPlan {
+                    fail_on_read: 2,
+                    fail_attempts: 1,
+                    ..FaultPlan::default()
+                }),
+            ),
+            fast_params(),
+            Engine::Parallel,
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(r.peak_resident_bytes.is_some());
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.retried, 1, "exactly one retry attempt");
+    assert_eq!(
+        std::fs::read(&clean_out).unwrap(),
+        std::fs::read(&healed_out).unwrap(),
+        "retried output must be byte-identical to the first-try run"
+    );
+    assert!(!dir.join("healed.rvol.tmp").exists(), "no .tmp debris");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn job_timeout_deadline_counts_as_cancelled() {
+    let dir = tmp_dir("deadline");
+    let vol = phantom_rvol(17, 19, 12);
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    cfg.service.job_timeout_ms = 80;
+    let service = Service::start(&cfg).unwrap();
+    let slow = StreamVolumeJob {
+        input,
+        mask: None,
+        output: dir.join("never.rvol"),
+        tile_slices: 1,
+        prefetch: false,
+        // 20 ms per read, 12 reads per sweep: the deadline fires during
+        // the first sweep and the run aborts between tiles.
+        fault: Some(FaultPlan {
+            latency: Duration::from_millis(20),
+            ..FaultPlan::default()
+        }),
+    };
+    let err = service
+        .submit_volume_streamed(slow, fast_params(), Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<Interrupted>(), Some(Interrupted::DeadlineExceeded)),
+        "expected the typed deadline error, got: {err:#}"
+    );
+    assert!(!dir.join("never.rvol").exists());
+    let snap = service.shutdown();
+    assert_eq!(snap.cancelled, 1, "deadlines count as cancelled");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, 0);
+    assert_eq!(snap.retried, 0, "an interrupted job is never retried");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn explicit_cancel_fast_fails_queued_jobs() {
+    let dir = tmp_dir("cancel_queue");
+    let vol = phantom_rvol(17, 19, 8);
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    let service = Service::start(&cfg).unwrap();
+    let spec = |out: &str, fault: Option<FaultPlan>| StreamVolumeJob {
+        input: input.clone(),
+        mask: None,
+        output: dir.join(out),
+        tile_slices: 2,
+        prefetch: false,
+        fault,
+    };
+    // A slow blocker holds the sole worker while the jobs under test
+    // sit in the queue.
+    let blocker = service
+        .submit_volume_streamed(
+            spec(
+                "blocker.rvol",
+                Some(FaultPlan {
+                    latency: Duration::from_millis(10),
+                    ..FaultPlan::default()
+                }),
+            ),
+            fast_params(),
+            Engine::Parallel,
+        )
+        .unwrap();
+    let queued: Vec<Ticket> = (0..3)
+        .map(|i| {
+            let t = service
+                .submit_volume_streamed(
+                    spec(&format!("queued{i}.rvol"), None),
+                    fast_params(),
+                    Engine::Parallel,
+                )
+                .unwrap();
+            t.cancel();
+            t
+        })
+        .collect();
+    for t in queued {
+        let err = t.wait().unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<Interrupted>(), Some(Interrupted::Cancelled)),
+            "expected the typed cancel error, got: {err:#}"
+        );
+    }
+    blocker.wait().unwrap();
+    let snap = service.shutdown();
+    assert_eq!(snap.submitted, 4);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.cancelled, 3);
+    assert_eq!(snap.failed, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn over_budget_submission_is_rejected_with_typed_error() {
+    let dir = tmp_dir("reject");
+    let vol = phantom_rvol(45, 53, 16);
+    let input = dir.join("v.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let params = fast_params();
+    let big_est = estimated_peak_resident_bytes(
+        45 * 53,
+        16,
+        params.clusters,
+        &StreamOpts {
+            backend: Backend::Parallel,
+            threads: 0,
+            tile_slices: 16,
+        },
+    );
+    let small_est = estimated_peak_resident_bytes(
+        45 * 53,
+        16,
+        params.clusters,
+        &StreamOpts {
+            backend: Backend::Parallel,
+            threads: 0,
+            tile_slices: 2,
+        },
+    );
+    assert!(small_est < big_est);
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    cfg.service.resident_budget_bytes = big_est - 1;
+    let service = Service::start(&cfg).unwrap();
+    let spec = |out: &str, tile_slices: usize| StreamVolumeJob {
+        input: input.clone(),
+        mask: None,
+        output: dir.join(out),
+        tile_slices,
+        prefetch: false,
+        fault: None,
+    };
+
+    // Larger than the budget can EVER accommodate: rejected instantly,
+    // without the bounded wait.
+    let err = service
+        .submit_volume_streamed(spec("big.rvol", 16), params, Engine::Parallel)
+        .unwrap_err();
+    let rejected = err
+        .downcast_ref::<Rejected>()
+        .expect("over-budget submission must surface the typed Rejected");
+    assert_eq!(rejected.would_exceed, big_est);
+    assert_eq!(rejected.budget, big_est - 1);
+
+    // The small job fits and completes; its measured peak IS the
+    // estimate the admission controller charged it for.
+    let r = service
+        .submit_volume_streamed(spec("small.rvol", 2), params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.peak_resident_bytes, Some(small_est));
+    let snap = service.shutdown();
+    assert_eq!(snap.rejected, 1);
+    assert_eq!(snap.submitted, 1, "rejected jobs are never counted submitted");
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.failed, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn soak_mixed_jobs_drain_with_exact_accounting() {
+    // THE robustness gate: 64 concurrent jobs — 40 good, 8 with a
+    // healing transient fault (exactly one retry each), 8 with a
+    // permanent fault (retries exhaust), 8 cancelled at submit — plus 4
+    // over-budget rejections, against 8 workers.
+    // Everything drains, every counter lands exactly, healed outputs
+    // are byte-identical to a clean run's, and the admission controller
+    // ends with zero bytes in flight.
+    let dir = tmp_dir("soak");
+    let params = fast_params();
+    let small = phantom_rvol(17, 19, 6);
+    let small_path = dir.join("small.rvol");
+    volume::save_raw(&small, &small_path).unwrap();
+    let big = phantom_rvol(128, 128, 16);
+    let big_path = dir.join("big.rvol");
+    volume::save_raw(&big, &big_path).unwrap();
+
+    let est = |backend: Backend, area: usize, depth: usize, tile: usize| {
+        estimated_peak_resident_bytes(
+            area,
+            depth,
+            params.clusters,
+            &StreamOpts {
+                backend,
+                threads: 0,
+                tile_slices: tile,
+            },
+        )
+    };
+    let par_est = est(Backend::Parallel, 17 * 19, 6, 2);
+    let hist_est = est(Backend::Histogram, 17 * 19, 6, 2);
+    let big_est = est(Backend::Parallel, 128 * 128, 16, 16);
+    // Budget: every admitted job can hold its permit at once, but the
+    // big job must still overshoot — instant typed rejection.
+    let budget = 64 * par_est.max(hist_est);
+    assert!(budget < big_est, "soak geometry: {budget} vs {big_est}");
+
+    let mut cfg = Config::new();
+    cfg.service.workers = 8;
+    cfg.service.queue_depth = 128;
+    cfg.service.max_retries = 2;
+    cfg.service.retry_backoff_ms = 1;
+    cfg.service.resident_budget_bytes = budget;
+    cfg.engine.threads = common::engine_threads();
+    let service = Service::start(&cfg).unwrap();
+    let admission = service.admission().clone();
+    let spec = |out: String, fault: Option<FaultPlan>| StreamVolumeJob {
+        input: small_path.clone(),
+        mask: None,
+        output: dir.join(out),
+        tile_slices: 2,
+        prefetch: false,
+        fault,
+    };
+
+    let good: Vec<(usize, Ticket)> = (0..40)
+        .map(|i| {
+            let engine = if i % 2 == 0 { Engine::Parallel } else { Engine::Histogram };
+            let t = service
+                .submit_volume_streamed(spec(format!("good{i}.rvol"), None), params, engine)
+                .unwrap();
+            (i, t)
+        })
+        .collect();
+    let healing: Vec<(usize, Ticket)> = (0..8)
+        .map(|i| {
+            let t = service
+                .submit_volume_streamed(
+                    spec(
+                        format!("heal{i}.rvol"),
+                        Some(FaultPlan {
+                            fail_on_read: 1 + i % 3,
+                            fail_attempts: 1,
+                            ..FaultPlan::default()
+                        }),
+                    ),
+                    params,
+                    Engine::Parallel,
+                )
+                .unwrap();
+            (i, t)
+        })
+        .collect();
+    let doomed: Vec<(usize, Ticket)> = (0..8)
+        .map(|i| {
+            let t = service
+                .submit_volume_streamed(
+                    spec(
+                        format!("doom{i}.rvol"),
+                        Some(FaultPlan {
+                            fail_on_read: 1,
+                            fail_attempts: u32::MAX,
+                            ..FaultPlan::default()
+                        }),
+                    ),
+                    params,
+                    Engine::Parallel,
+                )
+                .unwrap();
+            (i, t)
+        })
+        .collect();
+    let cancelled: Vec<(usize, Ticket)> = (0..8)
+        .map(|i| {
+            let t = service
+                .submit_volume_streamed(
+                    spec(
+                        format!("cancel{i}.rvol"),
+                        Some(FaultPlan {
+                            latency: Duration::from_millis(10),
+                            ..FaultPlan::default()
+                        }),
+                    ),
+                    params,
+                    Engine::Parallel,
+                )
+                .unwrap();
+            t.cancel();
+            (i, t)
+        })
+        .collect();
+    for i in 0..4 {
+        let err = service
+            .submit_volume_streamed(
+                StreamVolumeJob {
+                    input: big_path.clone(),
+                    mask: None,
+                    output: dir.join(format!("big{i}.rvol")),
+                    tile_slices: 16,
+                    prefetch: false,
+                    fault: None,
+                },
+                params,
+                Engine::Parallel,
+            )
+            .unwrap_err();
+        assert!(
+            err.downcast_ref::<Rejected>().is_some(),
+            "over-budget job {i} must be the typed Rejected, got: {err:#}"
+        );
+    }
+
+    // Drain. Good jobs succeed and report exactly the estimated peak
+    // (the quantity their admission charged).
+    for (i, t) in good {
+        let r = t.wait().unwrap_or_else(|e| panic!("good job {i}: {e:#}"));
+        let want = if i % 2 == 0 { par_est } else { hist_est };
+        assert_eq!(r.peak_resident_bytes, Some(want), "good job {i}");
+    }
+    for (i, t) in healing {
+        t.wait().unwrap_or_else(|e| panic!("healing job {i}: {e:#}"));
+    }
+    for (i, t) in doomed {
+        let err = t.wait().expect_err("permanent fault must exhaust retries");
+        assert!(
+            err.downcast_ref::<Interrupted>().is_none(),
+            "doomed job {i} must fail with the I/O error, not cancellation: {err:#}"
+        );
+        assert!(!dir.join(format!("doom{i}.rvol")).exists());
+        assert!(!dir.join(format!("doom{i}.rvol.tmp")).exists());
+    }
+    for (i, t) in cancelled {
+        let err = t.wait().expect_err("cancelled job must not complete");
+        assert!(
+            matches!(err.downcast_ref::<Interrupted>(), Some(Interrupted::Cancelled)),
+            "cancelled job {i}: {err:#}"
+        );
+        assert!(!dir.join(format!("cancel{i}.rvol")).exists());
+    }
+
+    // Byte-identity: every healed output equals the clean Parallel run.
+    let reference = std::fs::read(dir.join("good0.rvol")).unwrap();
+    for i in 0..8 {
+        assert_eq!(
+            std::fs::read(dir.join(format!("heal{i}.rvol"))).unwrap(),
+            reference,
+            "healed job {i} diverged from the first-try run"
+        );
+    }
+
+    let snap = service.shutdown();
+    assert_eq!(snap.submitted, 64);
+    assert_eq!(snap.completed, 48);
+    assert_eq!(snap.failed, 8);
+    assert_eq!(snap.cancelled, 8);
+    assert_eq!(snap.rejected, 4);
+    // 8 healing jobs x 1 retry + 8 permanent jobs x max_retries.
+    assert_eq!(snap.retried, 8 + 16);
+    assert_eq!(snap.submitted, snap.completed + snap.failed + snap.cancelled);
+    assert_eq!(snap.streamed_runs, 48);
+    assert_eq!(admission.in_flight(), 0, "drained service holds no admission bytes");
+    assert!(admission.peak() > 0);
+    assert!(admission.peak() <= budget, "admission never oversubscribed");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

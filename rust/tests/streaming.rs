@@ -366,6 +366,7 @@ fn service_streams_pgm_stack_jobs_with_prefetch() {
                 output: output.clone(),
                 tile_slices: 3,
                 prefetch: true,
+                fault: None,
             },
             params,
             Engine::Parallel,
@@ -388,6 +389,7 @@ fn service_streams_pgm_stack_jobs_with_prefetch() {
                 output: dir.join("never.rvol"),
                 tile_slices: 3,
                 prefetch: false,
+                fault: None,
             },
             params,
             Engine::Parallel,
@@ -425,6 +427,7 @@ fn service_stream_metrics_track_high_water_across_concurrent_jobs() {
             output: dir.join(format!("seg{i}.rvol")),
             tile_slices: tile,
             prefetch: i % 2 == 0,
+            fault: None,
         })
         .collect();
     let tickets: Vec<_> = specs
@@ -449,6 +452,7 @@ fn service_stream_metrics_track_high_water_across_concurrent_jobs() {
                 output: dir.join("never.rvol"),
                 tile_slices: 2,
                 prefetch: true,
+                fault: None,
             },
             params,
             Engine::Histogram,
@@ -491,6 +495,7 @@ fn service_streamed_volume_jobs_end_to_end() {
                     output: output.clone(),
                     tile_slices: 4,
                     prefetch: i % 2 == 0,
+                    fault: None,
                 },
                 params,
                 engine,
@@ -523,6 +528,7 @@ fn service_streamed_volume_jobs_end_to_end() {
             output: dir.join("never.rvol"),
             tile_slices: 4,
             prefetch: true,
+            fault: None,
         },
         params,
         Engine::Histogram,
