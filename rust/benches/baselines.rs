@@ -11,6 +11,13 @@
 //! Results are written to BENCH_PR1.json at the repo root (mean/p95 per
 //! size, speedups vs sequential) so the numbers are tracked in-repo.
 //!
+//! PR 7 adds the fused-kernel A/B: the same engines with the explicit-
+//! SIMD kernel forced off, then on (`fused::set_simd`), sizes as above,
+//! plus a byte-identity gate across engines x thread counts — the
+//! toggle is result-neutral by contract, so the sweep measures time
+//! only. That section goes to BENCH_PR7.json (shared with the
+//! streaming bench's u16 section).
+//!
 //!   cargo bench --bench baselines
 //!   REPRO_BENCH_QUICK=1 cargo bench --bench baselines   # CI smoke
 //!
@@ -170,7 +177,141 @@ fn main() -> anyhow::Result<()> {
         if deterministic { "PASS" } else { "FAIL" }
     );
 
+    // PR 7 — fused kernel A/B: scalar vs explicit-SIMD. Byte identity
+    // first (engines x thread counts, shared u0 — the result-neutral
+    // contract), then the timing sweep over the same sizes.
+    println!(
+        "\n== fused kernel: scalar vs SIMD (lane width {}) ==\n",
+        engine::fused::simd_width()
+    );
+    let mut simd_identical = true;
+    {
+        let u0s = repro::fcm::init_membership(c, det_fv.x.len(), 3);
+        for backend in [Backend::Parallel, Backend::Histogram] {
+            for t in [1usize, 2, 8] {
+                let o = EngineOpts {
+                    backend,
+                    threads: t,
+                    chunk: 4096,
+                };
+                engine::fused::set_simd(false);
+                let a = engine::run_from(&det_fv.x, &det_fv.w, u0s.clone(), &params, &o);
+                engine::fused::set_simd(true);
+                let b = engine::run_from(&det_fv.x, &det_fv.w, u0s.clone(), &params, &o);
+                simd_identical &= a.u == b.u
+                    && a.centers == b.centers
+                    && a.labels == b.labels
+                    && a.iterations == b.iterations;
+            }
+        }
+    }
+    let mut st = Table::new([
+        "size", "par scalar", "par simd", "par x", "hist scalar", "hist simd", "hist x",
+    ]);
+    let mut simd_rows = Vec::new();
+    for &bytes in &sizes {
+        let kb = bytes / 1024;
+        let data = sized_dataset(bytes, cfg.fcm.seed);
+        let fv = FeatureVector::from_image(&data.image);
+        let time = |label: &str, backend: Backend, simd: bool| {
+            engine::fused::set_simd(simd);
+            bench(&format!("{label}-{kb}KB"), &opts, || {
+                let o = EngineOpts::with_backend(backend);
+                let _ = engine::run(&fv.x, &fv.w, &params, &o);
+            })
+        };
+        let par_scalar = time("par-scalar", Backend::Parallel, false);
+        let par_simd = time("par-simd", Backend::Parallel, true);
+        let hist_scalar = time("hist-scalar", Backend::Histogram, false);
+        let hist_simd = time("hist-simd", Backend::Histogram, true);
+        st.row([
+            format!("{kb}KB"),
+            fmt_secs(par_scalar.mean()),
+            fmt_secs(par_simd.mean()),
+            fmt_x(par_scalar.mean() / par_simd.mean()),
+            fmt_secs(hist_scalar.mean()),
+            fmt_secs(hist_simd.mean()),
+            fmt_x(hist_scalar.mean() / hist_simd.mean()),
+        ]);
+        simd_rows.push((bytes, par_scalar, par_simd, hist_scalar, hist_simd));
+    }
+    st.print();
+    println!(
+        "\nGATE simd byte-identical to scalar (engines x threads): {}",
+        if simd_identical { "PASS" } else { "FAIL" }
+    );
+    // Hand the toggle back to the env-resolved default.
+    engine::fused::set_simd(match std::env::var("REPRO_SIMD") {
+        Ok(v) => !(v == "0" || v.eq_ignore_ascii_case("false") || v.eq_ignore_ascii_case("off")),
+        Err(_) => true,
+    });
+
     write_json(&rows, threads, gate, deterministic, quick)?;
+    write_pr7_fused(&simd_rows, simd_identical, quick)?;
+    if !simd_identical {
+        anyhow::bail!("simd byte-identity gate failed");
+    }
+    Ok(())
+}
+
+/// The scalar-vs-SIMD section of BENCH_PR7.json (shared with the
+/// streaming bench's `histogram_u16` section — see
+/// [`write_pr7_section`]).
+fn write_pr7_fused(
+    rows: &[(usize, BenchResult, BenchResult, BenchResult, BenchResult)],
+    identical: bool,
+    quick: bool,
+) -> anyhow::Result<()> {
+    let mut sizes = String::new();
+    for (i, (bytes, ps, pv, hs, hv)) in rows.iter().enumerate() {
+        sizes.push_str(&format!(
+            "{{\"bytes\": {bytes}, \"parallel_scalar_s\": {:.6}, \"parallel_simd_s\": {:.6}, \
+             \"parallel_speedup\": {:.3}, \"histogram_scalar_s\": {:.6}, \
+             \"histogram_simd_s\": {:.6}, \"histogram_speedup\": {:.3}}}{}",
+            ps.mean(),
+            pv.mean(),
+            ps.mean() / pv.mean(),
+            hs.mean(),
+            hv.mean(),
+            hs.mean() / hv.mean(),
+            if i + 1 == rows.len() { "" } else { ", " }
+        ));
+    }
+    let section = format!(
+        "{{\"status\": \"measured\", \"quick\": {quick}, \"lane_width\": {}, \
+         \"gate_byte_identical\": {identical}, \"sizes\": [{sizes}]}}",
+        engine::fused::simd_width()
+    );
+    write_pr7_section("fused_simd", section)
+}
+
+/// Rewrite BENCH_PR7.json with our section replaced and the other
+/// bench's section (one line per section, by construction) carried over
+/// verbatim — the two PR-7 benches share the file without serde. A twin
+/// of this helper lives in benches/streaming.rs.
+fn write_pr7_section(section: &str, value: String) -> anyhow::Result<()> {
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::Path::new(&dir).join("../BENCH_PR7.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_PR7.json"),
+    };
+    let old = std::fs::read_to_string(&path).unwrap_or_default();
+    let mut kept = Vec::new();
+    for name in ["fused_simd", "histogram_u16"] {
+        kept.push(if name == section {
+            format!("  \"{name}\": {value}")
+        } else {
+            old.lines()
+                .find(|l| l.trim_start().starts_with(&format!("\"{name}\":")))
+                .map(|l| l.trim_end().trim_end_matches(',').to_string())
+                .unwrap_or_else(|| format!("  \"{name}\": \"pending\""))
+        });
+    }
+    let s = format!(
+        "{{\n  \"pr\": 7,\n  \"bench\": \"fused-simd + histogram-u16\",\n{},\n{}\n}}\n",
+        kept[0], kept[1]
+    );
+    std::fs::write(&path, &s)?;
+    println!("wrote {} ({section})", path.display());
     Ok(())
 }
 

@@ -20,6 +20,12 @@
 //! Results (mean/p95, per-voxel throughput, peak resident bytes,
 //! prefetch on/off) go to BENCH_PR5.json at the repo root.
 //!
+//! PR 7 adds the 16-bit raster sweep: stream-hist on a genuinely wide
+//! volume runs the 65 536-bin axis (per-iteration work a constant,
+//! independent of voxel count — the brFCM scaling argument at 16 bits)
+//! against stream-slab's per-voxel work. That section goes to
+//! BENCH_PR7.json (shared with the baselines bench's SIMD section).
+//!
 //!   cargo bench --bench streaming
 //!   REPRO_BENCH_QUICK=1 cargo bench --bench streaming   # CI smoke
 //!
@@ -283,11 +289,175 @@ fn main() -> anyhow::Result<()> {
         if bounded { "PASS" } else { "FAIL" }
     );
 
+    // PR 7 — the 16-bit raster: the 65 536-bin histogram path vs the
+    // slab path on genuinely wide volumes (the 8-bit phantom spread
+    // over the full u16 range with per-voxel jitter, thousands of
+    // occupied levels). The gate is on the work counter: bins for the
+    // histogram path at EVERY size, voxels for the slab path.
+    println!("\n== 16-bit raster: stream-hist (65 536 bins) vs stream-slab ==\n");
+    let sizes16: Vec<(usize, usize, usize)> = if quick {
+        vec![(91, 109, 6), (91, 109, 18)]
+    } else {
+        vec![(91, 109, 6), (91, 109, 18), (181, 217, 24)]
+    };
+    let mut t16 = Table::new([
+        "volume", "voxels", "s-hist16", "s-slab16", "hist work", "slab work", "hist KB",
+        "slab KB", "agree",
+    ]);
+    let mut rows16 = Vec::new();
+    for &(w, h, d) in &sizes16 {
+        let path = make_rvol16(&dir, w, h, d);
+        let name = format!("{w}x{h}x{d}");
+        let (hl, hr) = stream_once(&path, &params, Backend::Histogram, tile, false);
+        let (sl, sr) = stream_once(&path, &params, Backend::Parallel, tile, false);
+        let agreement = hl.iter().zip(&sl).filter(|(a, b)| a == b).count() as f64 / hl.len() as f64;
+        let hist = bench(&format!("stream-hist16-{name}"), &opts, || {
+            let _ = stream_once(&path, &params, Backend::Histogram, tile, false);
+        });
+        let slab = bench(&format!("stream-slab16-{name}"), &opts, || {
+            let _ = stream_once(&path, &params, Backend::Parallel, tile, false);
+        });
+        t16.row([
+            name,
+            hr.voxels.to_string(),
+            fmt_secs(hist.mean()),
+            fmt_secs(slab.mean()),
+            hr.work_per_iter.to_string(),
+            sr.work_per_iter.to_string(),
+            (hr.peak_resident_bytes / 1024).to_string(),
+            (sr.peak_resident_bytes / 1024).to_string(),
+            format!("{agreement:.4}"),
+        ]);
+        rows16.push(U16Row {
+            width: w,
+            height: h,
+            depth: d,
+            voxels: hr.voxels,
+            hist,
+            slab,
+            hist_work: hr.work_per_iter,
+            slab_work: sr.work_per_iter,
+            hist_peak: hr.peak_resident_bytes,
+            slab_peak: sr.peak_resident_bytes,
+            agreement,
+        });
+    }
+    t16.print();
+    let work_ok = rows16
+        .iter()
+        .all(|r| r.hist_work == 1 << 16 && r.slab_work == r.voxels);
+    println!(
+        "\nGATE u16 histogram work level-proportional (65 536 bins at every size): {}",
+        if work_ok { "PASS" } else { "FAIL" }
+    );
+
     write_json(&rows, identical, bounded, quick)?;
+    write_pr7_u16(&rows16, work_ok, quick)?;
     std::fs::remove_dir_all(&dir).ok();
-    if !(identical && bounded) {
+    if !(identical && bounded && work_ok) {
         anyhow::bail!("streaming gates failed");
     }
+    Ok(())
+}
+
+struct U16Row {
+    width: usize,
+    height: usize,
+    depth: usize,
+    voxels: usize,
+    hist: BenchResult,
+    slab: BenchResult,
+    hist_work: usize,
+    slab_work: usize,
+    hist_peak: usize,
+    slab_peak: usize,
+    agreement: f64,
+}
+
+/// A genuinely 16-bit phantom RVOL: the 8-bit field spread across the
+/// full range (x256) with a deterministic sub-level jitter, so
+/// thousands of distinct levels are occupied.
+fn make_rvol16(dir: &Path, width: usize, height: usize, depth: usize) -> PathBuf {
+    let start = 90usize.min(181 - depth);
+    let vol = generate_volume(
+        &PhantomConfig {
+            width,
+            height,
+            ..PhantomConfig::default()
+        },
+        start,
+        start + depth,
+        1,
+    )
+    .to_voxel_volume();
+    let wide: Vec<u16> = vol
+        .voxels
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v as u16 * 256 + (i % 251) as u16)
+        .collect();
+    let path = dir.join(format!("bench16_{width}x{height}x{depth}.rvol"));
+    volume::save_raw_u16(vol.width, vol.height, vol.depth, &wide, &path).unwrap();
+    path
+}
+
+/// The u16-histogram section of BENCH_PR7.json (shared with the
+/// baselines bench's `fused_simd` section — see [`write_pr7_section`]).
+fn write_pr7_u16(rows: &[U16Row], work_ok: bool, quick: bool) -> anyhow::Result<()> {
+    let mut sizes = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        sizes.push_str(&format!(
+            "{{\"shape\": [{}, {}, {}], \"voxels\": {}, \"stream_hist_s\": {:.6}, \
+             \"stream_slab_s\": {:.6}, \"hist_work_per_iter\": {}, \"slab_work_per_iter\": {}, \
+             \"hist_peak_bytes\": {}, \"slab_peak_bytes\": {}, \"label_agreement\": {:.4}}}{}",
+            r.width,
+            r.height,
+            r.depth,
+            r.voxels,
+            r.hist.mean(),
+            r.slab.mean(),
+            r.hist_work,
+            r.slab_work,
+            r.hist_peak,
+            r.slab_peak,
+            r.agreement,
+            if i + 1 == rows.len() { "" } else { ", " }
+        ));
+    }
+    let section = format!(
+        "{{\"status\": \"measured\", \"quick\": {quick}, \
+         \"gate_work_level_proportional\": {work_ok}, \"sizes\": [{sizes}]}}"
+    );
+    write_pr7_section("histogram_u16", section)
+}
+
+/// Rewrite BENCH_PR7.json with our section replaced and the other
+/// bench's section (one line per section, by construction) carried over
+/// verbatim — the two PR-7 benches share the file without serde. A twin
+/// of this helper lives in benches/baselines.rs.
+fn write_pr7_section(section: &str, value: String) -> anyhow::Result<()> {
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => std::path::Path::new(&dir).join("../BENCH_PR7.json"),
+        Err(_) => std::path::PathBuf::from("BENCH_PR7.json"),
+    };
+    let old = std::fs::read_to_string(&path).unwrap_or_default();
+    let mut kept = Vec::new();
+    for name in ["fused_simd", "histogram_u16"] {
+        kept.push(if name == section {
+            format!("  \"{name}\": {value}")
+        } else {
+            old.lines()
+                .find(|l| l.trim_start().starts_with(&format!("\"{name}\":")))
+                .map(|l| l.trim_end().trim_end_matches(',').to_string())
+                .unwrap_or_else(|| format!("  \"{name}\": \"pending\""))
+        });
+    }
+    let s = format!(
+        "{{\n  \"pr\": 7,\n  \"bench\": \"fused-simd + histogram-u16\",\n{},\n{}\n}}\n",
+        kept[0], kept[1]
+    );
+    std::fs::write(&path, &s)?;
+    println!("wrote {} ({section})", path.display());
     Ok(())
 }
 

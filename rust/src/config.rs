@@ -76,6 +76,12 @@ pub struct EngineConfig {
     /// tile k (`image::volume::stream::TilePrefetcher`). Reorders I/O
     /// only — results are identical either way.
     pub prefetch: bool,
+    /// Explicit-SIMD fused kernel (`fcm::engine::fused`). `None` leaves
+    /// the process-wide default alone (env `REPRO_SIMD`, on by default);
+    /// `Some(v)` pins it. Results are bit-identical either way — the
+    /// lane-major reduction order is fixed independently of the kernel
+    /// (see DESIGN.md), so this is a performance knob only.
+    pub simd: Option<bool>,
 }
 
 impl Default for EngineConfig {
@@ -86,6 +92,7 @@ impl Default for EngineConfig {
             chunk: 4096,
             tile_slices: 8,
             prefetch: true,
+            simd: None,
         }
     }
 }
@@ -179,6 +186,7 @@ pub const KEYS: &[&str] = &[
     "engine_chunk",
     "tile_slices",
     "prefetch",
+    "simd",
     "workers",
     "max_batch",
     "queue_depth",
@@ -244,6 +252,7 @@ impl Config {
             "engine_chunk" => self.engine.chunk = parse(key, v)?,
             "tile_slices" => self.engine.tile_slices = parse(key, v)?,
             "prefetch" => self.engine.prefetch = parse(key, v)?,
+            "simd" => self.engine.simd = Some(parse(key, v)?),
             "workers" => self.service.workers = parse(key, v)?,
             "max_batch" => self.service.max_batch = parse(key, v)?,
             "queue_depth" => self.service.queue_depth = parse(key, v)?,
@@ -355,6 +364,11 @@ mod tests {
         assert!(Config::new().engine.prefetch);
         assert!(!Config::from_str("prefetch = false\n").unwrap().engine.prefetch);
         assert!(Config::from_str("prefetch = maybe\n").is_err());
+        // SIMD: unset by default (env decides), tri-state when given.
+        assert_eq!(Config::new().engine.simd, None);
+        assert_eq!(Config::from_str("simd = false\n").unwrap().engine.simd, Some(false));
+        assert_eq!(Config::from_str("simd = true\n").unwrap().engine.simd, Some(true));
+        assert!(Config::from_str("simd = wide\n").is_err());
         // Default: parallel, auto threads.
         let d = Config::new();
         assert_eq!(d.engine.backend, crate::fcm::Backend::Parallel);
@@ -404,7 +418,7 @@ mod tests {
                 "backend" => "parallel",
                 "artifacts_dir" => "x",
                 "m" | "epsilon" => "2.0",
-                "batch_execute" | "prefetch" => "true",
+                "batch_execute" | "prefetch" | "simd" => "true",
                 _ => "3",
             };
             c.set(key, probe).unwrap_or_else(|e| panic!("key {key}: {e}"));

@@ -41,7 +41,7 @@ use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
 use crate::fcm::engine::stream::{
-    estimated_peak_resident_bytes, estimated_peak_resident_bytes_spatial, StreamOpts,
+    estimated_peak_resident_bytes_spatial_wide, estimated_peak_resident_bytes_wide, StreamOpts,
 };
 use crate::fcm::{spatial, Backend, EngineOpts, FcmParams};
 use crate::image::volume::stream::{
@@ -323,29 +323,29 @@ struct WorkerCfg {
     retry: RetryPolicy,
 }
 
-/// Read just the source header of a streamed job: shape, and nothing
-/// else resident.
-fn probe_stream_dims(spec: &StreamVolumeJob) -> Result<(usize, usize, usize)> {
+/// Read just the source header of a streamed job: shape plus bytes per
+/// voxel (16-bit RVOL streams 2), and nothing else resident.
+fn probe_stream_dims(spec: &StreamVolumeJob) -> Result<(usize, usize, usize, usize)> {
     if spec.input.is_dir() {
         let src = PgmStackSource::open(&spec.input)?;
-        Ok((src.width(), src.height(), VoxelSource::depth(&src)))
+        Ok((src.width(), src.height(), VoxelSource::depth(&src), 1))
     } else {
         let src = RvolReader::open(&spec.input)?;
-        Ok((src.width(), src.height(), src.depth()))
+        Ok((src.width(), src.height(), src.depth(), src.bytes_per_voxel()))
     }
 }
 
 /// Estimate the peak resident tile bytes a streamed job will hold, from
 /// its source header alone — the admission-control side of the exact
 /// allocation mirrors in `fcm::engine::stream`
-/// ([`estimated_peak_resident_bytes`]). `None` when the header cannot
-/// be read (admission defers to the serve-time failure).
+/// ([`estimated_peak_resident_bytes_wide`]). `None` when the header
+/// cannot be read (admission defers to the serve-time failure).
 fn estimated_stream_job_bytes(
     spec: &StreamVolumeJob,
     params: &FcmParams,
     engine: Engine,
 ) -> Option<usize> {
-    let (w, h, d) = probe_stream_dims(spec).ok()?;
+    let (w, h, d, bpv) = probe_stream_dims(spec).ok()?;
     let area = w * h;
     let opts = |backend| StreamOpts {
         backend,
@@ -353,16 +353,25 @@ fn estimated_stream_job_bytes(
         tile_slices: spec.tile_slices,
     };
     Some(match engine {
-        Engine::Parallel => {
-            estimated_peak_resident_bytes(area, d, params.clusters, &opts(Backend::Parallel))
-        }
-        Engine::Histogram => {
-            estimated_peak_resident_bytes(area, d, params.clusters, &opts(Backend::Histogram))
-        }
-        Engine::Spatial => estimated_peak_resident_bytes_spatial(
+        Engine::Parallel => estimated_peak_resident_bytes_wide(
             area,
             d,
             params.clusters,
+            bpv,
+            &opts(Backend::Parallel),
+        ),
+        Engine::Histogram => estimated_peak_resident_bytes_wide(
+            area,
+            d,
+            params.clusters,
+            bpv,
+            &opts(Backend::Histogram),
+        ),
+        Engine::Spatial => estimated_peak_resident_bytes_spatial_wide(
+            area,
+            d,
+            params.clusters,
+            bpv,
             &spatial::SpatialParams::default(),
             &opts(Backend::Parallel),
         ),

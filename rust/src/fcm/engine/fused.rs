@@ -13,12 +13,249 @@
 //!
 //! Numerical contract: per-pixel arithmetic is **identical** to the
 //! sequential baseline (same f64 intermediates, same f32 rounding of the
-//! stored membership, same ZERO_TOL singularity split), so the only
-//! divergence from `sequential::run_from` is the summation order of the
-//! sigma reductions — bounded by f64 accumulation error over a chunk.
+//! stored membership, same ZERO_TOL singularity split). The sigma
+//! reductions accumulate **lane-major**: pixel `k` of a chunk feeds
+//! logical lane `k % LANES`, each lane sums serially in f64, and the
+//! lane partials fold in fixed lane order at chunk end — on every
+//! platform and for both kernels below, so the vectorized and scalar
+//! paths are bit-identical (DESIGN.md, "SIMD lanes & reduction
+//! determinism").
+//!
+//! Two kernels implement the pass behind one [`simd_width`] seam:
+//!
+//! * a portable scalar kernel walking one pixel (= one lane slot) at a
+//!   time;
+//! * an AVX kernel (`x86_64`, runtime-detected, `REPRO_SIMD`/config
+//!   `simd` togglable) processing [`LANES`] pixels per step with
+//!   `core::arch` intrinsics. Every vector op it uses (`vsubpd`,
+//!   `vmulpd`, `vdivpd`, `vaddpd`, the f32<->f64 converts) is an exact
+//!   IEEE-754 round-to-nearest op, lane-wise identical to its scalar
+//!   twin; `powf` and the singularity split are not vectorizable
+//!   bit-exactly, so those run scalar per lane slot inside the vector
+//!   loop.
+//!
+//! On top of either kernel, [`FusedCtx`] precomputes per-iteration
+//! distance/membership tables for integer-valued inputs (the u8/u16
+//! domains: 256 or 65 536 levels x c entries), turning the per-pixel
+//! divides and `powf` calls into table lookups. The tables are built by
+//! the *same* per-value scalar routine the direct path runs, so the LUT
+//! path is bit-identical to the direct path by construction (property
+//! tested) — callers may mix them freely.
 
 use super::reduce::{chunk_ranges, tree_reduce};
 use crate::fcm::{DEN_EPS, ZERO_TOL};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Fixed number of logical accumulation lanes. This is a *numerical*
+/// constant, not a hardware one: the scalar kernel uses the same four
+/// lanes, so results never depend on which kernel ran.
+pub const LANES: usize = 4;
+
+// ------------------------------------------------------------------------
+// SIMD toggle: process-global, default on, overridable by the REPRO_SIMD
+// env var and the `simd` config key (main.rs applies it via set_simd).
+// Because the kernels are bit-identical, flipping it mid-process is
+// always safe — it is an A/B performance lever, never a results lever.
+
+const SIMD_UNSET: u8 = 0;
+const SIMD_ON: u8 = 1;
+const SIMD_OFF: u8 = 2;
+
+static SIMD_MODE: AtomicU8 = AtomicU8::new(SIMD_UNSET);
+
+/// Force the vectorized kernel on or off (config key `simd`).
+pub fn set_simd(on: bool) {
+    SIMD_MODE.store(if on { SIMD_ON } else { SIMD_OFF }, Ordering::Relaxed);
+}
+
+/// Is the vectorized kernel requested? Resolves `REPRO_SIMD` (default
+/// on; `0`/`false`/`off` disable) on first query unless [`set_simd`]
+/// already decided.
+pub fn simd_enabled() -> bool {
+    match SIMD_MODE.load(Ordering::Relaxed) {
+        SIMD_ON => true,
+        SIMD_OFF => false,
+        _ => {
+            let on = match std::env::var("REPRO_SIMD") {
+                Ok(v) => !(v == "0" || v.eq_ignore_ascii_case("false") || v.eq_ignore_ascii_case("off")),
+                Err(_) => true,
+            };
+            SIMD_MODE.store(if on { SIMD_ON } else { SIMD_OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// The dispatch seam: how many pixels the active kernel advances per
+/// step. [`LANES`] when the vector kernel is enabled *and* the CPU has
+/// AVX, else 1 (the scalar kernel — which still accumulates into the
+/// same [`LANES`] logical lanes, so the answer is identical).
+pub fn simd_width() -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_enabled() && is_x86_feature_detected!("avx") {
+            return LANES;
+        }
+    }
+    1
+}
+
+// ------------------------------------------------------------------------
+// Integer intensity domains and the per-iteration lookup tables.
+
+/// Classification of a feature vector's value domain, deciding whether
+/// the per-iteration [`FusedCtx`] tables (and the wide histogram path)
+/// apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntensityDomain {
+    /// Every value is an integer in `[0, 255]` — 8-bit raster data.
+    U8,
+    /// Every value is an integer in `[0, 65535]` — 16-bit raster data.
+    U16,
+    /// Anything else: run the direct (tableless) path.
+    Direct,
+}
+
+impl IntensityDomain {
+    /// Number of representable levels, 0 for [`IntensityDomain::Direct`].
+    pub fn levels(self) -> usize {
+        match self {
+            IntensityDomain::U8 => 256,
+            IntensityDomain::U16 => 1 << 16,
+            IntensityDomain::Direct => 0,
+        }
+    }
+}
+
+/// One O(n) scan deciding the domain of a feature vector.
+pub fn classify_domain(x: &[f32]) -> IntensityDomain {
+    let mut max = 0.0f32;
+    for &v in x {
+        if !(v.is_finite() && v >= 0.0 && v.fract() == 0.0) {
+            return IntensityDomain::Direct;
+        }
+        if v > max {
+            max = v;
+        }
+    }
+    if max <= 255.0 {
+        IntensityDomain::U8
+    } else if max <= 65535.0 {
+        IntensityDomain::U16
+    } else {
+        IntensityDomain::Direct
+    }
+}
+
+/// Per-iteration lookup tables for an integer domain: for every grey
+/// level `v` and cluster `j`, the unit-weight membership `val` the
+/// direct path would store, its `m`-power `um` (computed from the
+/// *stored f32* value, exactly like the direct path), and the squared
+/// distance `d2`. Built by [`level_row`] — the same routine the scalar
+/// kernel runs per pixel — so lookups reproduce the direct arithmetic
+/// bit-for-bit, including the singularity split.
+pub struct FusedCtx {
+    levels: usize,
+    c: usize,
+    val: Vec<f32>,
+    um: Vec<f64>,
+    d2: Vec<f64>,
+}
+
+impl FusedCtx {
+    /// Build the tables for one iteration's centers, or `None` when the
+    /// domain is [`IntensityDomain::Direct`] or the workload is too
+    /// small for the table build to pay for itself (`n < levels`). The
+    /// gate is performance-only: LUT and direct results are identical.
+    pub fn build(domain: IntensityDomain, centers: &[f32], m: f64, n: usize) -> Option<FusedCtx> {
+        let levels = domain.levels();
+        if levels == 0 || n < levels {
+            return None;
+        }
+        let c = centers.len();
+        let p = 1.0 / (m - 1.0);
+        let fast_m2 = m == 2.0;
+        let mut val = vec![0f32; levels * c];
+        let mut um = vec![0f64; levels * c];
+        let mut d2 = vec![0f64; levels * c];
+        let mut d2row = vec![0f64; c];
+        let mut invrow = vec![0f64; c];
+        let mut valrow = vec![0f32; c];
+        for v in 0..levels {
+            level_row(v as f64, centers, m, p, fast_m2, &mut d2row, &mut invrow, &mut valrow);
+            for j in 0..c {
+                val[v * c + j] = valrow[j];
+                let vf = valrow[j] as f64;
+                um[v * c + j] = if fast_m2 { vf * vf } else { vf.powf(m) };
+                d2[v * c + j] = d2row[j];
+            }
+        }
+        Some(FusedCtx { levels, c, val, um, d2 })
+    }
+
+    /// Levels covered by the tables (256 or 65 536).
+    pub fn levels(&self) -> usize {
+        self.levels
+    }
+}
+
+/// Unit-weight membership row for one value: Equation 4 with w_i = 1,
+/// plus the squared distances. This IS the direct path's per-pixel
+/// arithmetic (the caller multiplies by the 0/1 pixel weight `wi`
+/// afterwards — exact, since x*1.0 == x and x*0.0 == +0.0 for the
+/// non-negative finite values produced here); it doubles as the
+/// [`FusedCtx`] table builder, which is what makes LUT == direct hold
+/// bitwise by construction.
+#[inline]
+fn level_row(
+    xi: f64,
+    centers: &[f32],
+    m: f64,
+    p: f64,
+    fast_m2: bool,
+    d2: &mut [f64],
+    inv: &mut [f64],
+    vals: &mut [f32],
+) {
+    let c = centers.len();
+    let mut n_zero = 0usize;
+    for j in 0..c {
+        let d = xi - centers[j] as f64;
+        d2[j] = d * d;
+        if d2[j] <= ZERO_TOL {
+            n_zero += 1;
+        }
+    }
+    if n_zero > 0 {
+        // Singularity: split membership among zero-distance clusters
+        // (same rule as sequential::update_memberships).
+        for j in 0..c {
+            vals[j] = if d2[j] <= ZERO_TOL {
+                1.0f32 / n_zero as f32
+            } else {
+                0.0
+            };
+        }
+        return;
+    }
+    let mut sum_inv = 0f64;
+    if fast_m2 {
+        for j in 0..c {
+            inv[j] = 1.0 / d2[j];
+            sum_inv += inv[j];
+        }
+    } else {
+        for j in 0..c {
+            // d^(-2/(m-1)) on squared distances = d2^(-1/(m-1)).
+            inv[j] = d2[j].powf(-p);
+            sum_inv += inv[j];
+        }
+    }
+    let _ = m;
+    for j in 0..c {
+        vals[j] = (inv[j] / sum_inv) as f32;
+    }
+}
 
 /// Partial sums produced by one fused pass over one chunk of pixels.
 #[derive(Clone, Debug)]
@@ -62,16 +299,153 @@ impl PassPartial {
     }
 }
 
-/// One fused pass over pixels `[start, start+rows[0].len())`.
-///
-/// * `u_old` is the full c*n membership matrix (read-only, strided access
-///   at `j*n + i`);
-/// * `rows[j]` is this chunk's slice of cluster j's row of `u_new`
-///   (disjoint across chunks, which is how the parallel driver shares the
-///   output matrix across threads without locks);
-/// * returns the chunk's [`PassPartial`] for the fixed-order reduction.
+/// Per-lane f64 accumulators for one chunk: `num`/`den` are laid out
+/// `j * LANES + lane`, `jm` is one slot per lane. Both kernels write
+/// these identically; [`LaneAcc::fold`] collapses them in fixed lane
+/// order (0..LANES, each starting from the +0.0 the accumulators were
+/// born with), which is the whole determinism argument.
+struct LaneAcc {
+    num: Vec<f64>,
+    den: Vec<f64>,
+    jm: [f64; LANES],
+    delta: f32,
+}
+
+impl LaneAcc {
+    fn zero(c: usize) -> LaneAcc {
+        LaneAcc {
+            num: vec![0.0; c * LANES],
+            den: vec![0.0; c * LANES],
+            jm: [0.0; LANES],
+            delta: 0.0,
+        }
+    }
+
+    fn fold(&self, c: usize) -> PassPartial {
+        let mut part = PassPartial::zero(c);
+        for j in 0..c {
+            let mut num = 0f64;
+            let mut den = 0f64;
+            for l in 0..LANES {
+                num += self.num[j * LANES + l];
+                den += self.den[j * LANES + l];
+            }
+            part.num[j] = num;
+            part.den[j] = den;
+        }
+        let mut jm = 0f64;
+        for l in 0..LANES {
+            jm += self.jm[l];
+        }
+        part.jm = jm;
+        part.delta = self.delta;
+        part
+    }
+}
+
+/// Scratch rows shared by the scalar kernels (one allocation per chunk
+/// call, like the d2/inv vecs the pre-SIMD kernel carried).
+struct RowScratch {
+    d2: Vec<f64>,
+    inv: Vec<f64>,
+    vals: Vec<f32>,
+}
+
+impl RowScratch {
+    fn new(c: usize) -> RowScratch {
+        RowScratch {
+            d2: vec![0f64; c],
+            inv: vec![0f64; c],
+            vals: vec![0f32; c],
+        }
+    }
+}
+
+/// One pixel of the direct path into lane slot `lane`: computes the
+/// membership row, stores it, and accumulates delta/num/den/jm. Used by
+/// the scalar kernel for every pixel and by the AVX kernel for ragged
+/// tails and singular groups — single source of truth for the scalar
+/// arithmetic.
 #[allow(clippy::too_many_arguments)]
-pub fn fused_chunk(
+#[inline]
+fn scalar_pixel(
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    p: f64,
+    fast_m2: bool,
+    i: usize,
+    k: usize,
+    lane: usize,
+    scratch: &mut RowScratch,
+    rows: &mut [&mut [f32]],
+    acc: &mut LaneAcc,
+) {
+    let c = centers.len();
+    let xi = x[i] as f64;
+    level_row(xi, centers, m, p, fast_m2, &mut scratch.d2, &mut scratch.inv, &mut scratch.vals);
+    let wi = if w[i] > 0.0 { 1.0f32 } else { 0.0 };
+    let w64 = w[i] as f64;
+    for j in 0..c {
+        let val = scratch.vals[j] * wi;
+        acc.delta = acc.delta.max((val - u_old[j * n + i]).abs());
+        rows[j][k] = val;
+        // Accumulate from the *stored f32* value, exactly like the
+        // sequential path re-reading the matrix next iteration.
+        let vf = val as f64;
+        let um = if fast_m2 { vf * vf } else { vf.powf(m) };
+        let wu = w64 * um;
+        acc.num[j * LANES + lane] += wu * xi;
+        acc.den[j * LANES + lane] += wu;
+        acc.jm[lane] += wu * scratch.d2[j];
+    }
+}
+
+/// One pixel of the LUT path into lane slot `lane`. The table rows hold
+/// the unit-weight values [`level_row`] produced for this pixel's grey
+/// level, so every operation below matches [`scalar_pixel`] bit-for-bit
+/// (`val = table * wi` is the same multiply; `wu = w * um_table` equals
+/// the direct `wu` because w > 0 implies wi == 1 and w == 0 makes the
+/// product +0.0 either way).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn scalar_pixel_ctx(
+    ctx: &FusedCtx,
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    i: usize,
+    k: usize,
+    lane: usize,
+    rows: &mut [&mut [f32]],
+    acc: &mut LaneAcc,
+) {
+    let c = ctx.c;
+    let xi = x[i] as f64;
+    let v = x[i] as usize;
+    let vals = &ctx.val[v * c..v * c + c];
+    let ums = &ctx.um[v * c..v * c + c];
+    let d2s = &ctx.d2[v * c..v * c + c];
+    let wi = if w[i] > 0.0 { 1.0f32 } else { 0.0 };
+    let w64 = w[i] as f64;
+    for j in 0..c {
+        let val = vals[j] * wi;
+        acc.delta = acc.delta.max((val - u_old[j * n + i]).abs());
+        rows[j][k] = val;
+        let wu = w64 * ums[j];
+        acc.num[j * LANES + lane] += wu * xi;
+        acc.den[j * LANES + lane] += wu;
+        acc.jm[lane] += wu * d2s[j];
+    }
+}
+
+/// The portable scalar kernel: one pixel per step, lane slot `k % LANES`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_chunk_scalar(
     x: &[f32],
     w: &[f32],
     u_old: &[f32],
@@ -85,75 +459,344 @@ pub fn fused_chunk(
     let len = rows[0].len();
     let p = 1.0 / (m - 1.0);
     let fast_m2 = m == 2.0;
-    let mut part = PassPartial::zero(c);
-    let mut d2 = vec![0f64; c];
-    let mut inv = vec![0f64; c];
-
+    let mut acc = LaneAcc::zero(c);
+    let mut scratch = RowScratch::new(c);
     for k in 0..len {
-        let i = start + k;
-        let xi = x[i] as f64;
-        let mut n_zero = 0usize;
-        for j in 0..c {
-            let d = xi - centers[j] as f64;
-            d2[j] = d * d;
-            if d2[j] <= ZERO_TOL {
-                n_zero += 1;
-            }
-        }
-        let wi = if w[i] > 0.0 { 1.0f32 } else { 0.0 };
-
-        if n_zero > 0 {
-            // Singularity: split membership among zero-distance clusters
-            // (same rule as sequential::update_memberships).
-            for j in 0..c {
-                let val = if d2[j] <= ZERO_TOL {
-                    wi / n_zero as f32
-                } else {
-                    0.0
-                };
-                part.delta = part.delta.max((val - u_old[j * n + i]).abs());
-                rows[j][k] = val;
-                // Center/objective sums: d2 <= ZERO_TOL for the clusters
-                // holding membership, so jm's contribution is ~0 but kept
-                // exact for parity with objective().
-                let vf = val as f64;
-                let um = if fast_m2 { vf * vf } else { vf.powf(m) };
-                let wu = w[i] as f64 * um;
-                part.num[j] += wu * xi;
-                part.den[j] += wu;
-                part.jm += wu * d2[j];
-            }
-            continue;
-        }
-
-        let mut sum_inv = 0f64;
-        if fast_m2 {
-            for j in 0..c {
-                inv[j] = 1.0 / d2[j];
-                sum_inv += inv[j];
-            }
-        } else {
-            for j in 0..c {
-                // d^(-2/(m-1)) on squared distances = d2^(-1/(m-1)).
-                inv[j] = d2[j].powf(-p);
-                sum_inv += inv[j];
-            }
-        }
-        for j in 0..c {
-            let val = (inv[j] / sum_inv) as f32 * wi;
-            part.delta = part.delta.max((val - u_old[j * n + i]).abs());
-            rows[j][k] = val;
-            // Accumulate from the *stored f32* value, exactly like the
-            // sequential path re-reading the matrix next iteration.
-            let vf = val as f64;
-            let um = if fast_m2 { vf * vf } else { vf.powf(m) };
-            let wu = w[i] as f64 * um;
-            part.num[j] += wu * xi;
-            part.den[j] += wu;
-            part.jm += wu * d2[j];
-        }
+        scalar_pixel(
+            x, w, u_old, n, centers, m, p, fast_m2, start + k, k, k % LANES, &mut scratch, rows,
+            &mut acc,
+        );
     }
-    part
+    acc.fold(c)
+}
+
+/// The scalar kernel over precomputed tables.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_chunk_scalar_ctx(
+    ctx: &FusedCtx,
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    start: usize,
+    rows: &mut [&mut [f32]],
+) -> PassPartial {
+    let c = ctx.c;
+    let len = rows[0].len();
+    let mut acc = LaneAcc::zero(c);
+    for k in 0..len {
+        scalar_pixel_ctx(ctx, x, w, u_old, n, start + k, k, k % LANES, rows, &mut acc);
+    }
+    acc.fold(c)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    //! AVX kernels: LANES pixels per step. Groups of four pixels map to
+    //! lane slots 0..4 in order, so lane `l`'s accumulator sees pixels
+    //! `l, l+4, l+8, ...` serially — the exact order the scalar kernel
+    //! gives it. Accumulators live in the same `LaneAcc` arrays and are
+    //! round-tripped through registers with unaligned load/stores (an
+    //! exact operation), so the only arithmetic differences possible are
+    //! the vector ops themselves — all of which are IEEE-exact
+    //! equivalents of their scalar twins. `powf` and the ZERO_TOL
+    //! singularity split have no exact vector form; groups touching them
+    //! fall back to [`scalar_pixel`] per lane slot.
+
+    use super::*;
+    use core::arch::x86_64::*;
+
+    #[inline]
+    fn hmax(delta4: __m128) -> f32 {
+        let mut out = [0f32; 4];
+        unsafe { _mm_storeu_ps(out.as_mut_ptr(), delta4) };
+        out.iter().fold(0f32, |a, &b| a.max(b))
+    }
+
+    #[target_feature(enable = "avx")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn fused_chunk_avx(
+        x: &[f32],
+        w: &[f32],
+        u_old: &[f32],
+        n: usize,
+        centers: &[f32],
+        m: f64,
+        start: usize,
+        rows: &mut [&mut [f32]],
+    ) -> PassPartial {
+        let c = centers.len();
+        let len = rows[0].len();
+        let p = 1.0 / (m - 1.0);
+        let fast_m2 = m == 2.0;
+        let mut acc = LaneAcc::zero(c);
+        let mut scratch = RowScratch::new(c);
+        // Per-group scratch, laid out j * LANES + lane.
+        let mut d2g = vec![0f64; c * LANES];
+        let mut invg = vec![0f64; c * LANES];
+        let mut umg = [0f64; LANES];
+        let mut valg = [0f32; LANES];
+        let zero_tol = _mm256_set1_pd(ZERO_TOL);
+        let one_pd = _mm256_set1_pd(1.0);
+        let one_ps = _mm_set1_ps(1.0);
+        let zero_ps = _mm_setzero_ps();
+        let abs_mask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+        let mut delta4 = _mm_setzero_ps();
+
+        let groups = len / LANES;
+        for g in 0..groups {
+            let k = g * LANES;
+            let i = start + k;
+            let x4 = _mm_loadu_ps(x.as_ptr().add(i));
+            let xi4 = _mm256_cvtps_pd(x4);
+            // Squared distances for all lanes + singularity scan.
+            let mut singular = 0i32;
+            for j in 0..c {
+                let d = _mm256_sub_pd(xi4, _mm256_set1_pd(centers[j] as f64));
+                let dd = _mm256_mul_pd(d, d);
+                _mm256_storeu_pd(d2g.as_mut_ptr().add(j * LANES), dd);
+                singular |= _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_LE_OQ>(dd, zero_tol));
+            }
+            if singular != 0 {
+                // A zero-distance lane: run this group through the exact
+                // scalar path, lane slot by lane slot.
+                for l in 0..LANES {
+                    scalar_pixel(
+                        x, w, u_old, n, centers, m, p, fast_m2, i + l, k + l, l, &mut scratch,
+                        rows, &mut acc,
+                    );
+                }
+                continue;
+            }
+            let w4 = _mm_loadu_ps(w.as_ptr().add(i));
+            let wi4 = _mm_and_ps(_mm_cmpgt_ps(w4, zero_ps), one_ps);
+            let w64 = _mm256_cvtps_pd(w4);
+            // Inverse distances, summed in cluster order per lane —
+            // the same chain each scalar pixel builds.
+            let mut sum_inv = _mm256_setzero_pd();
+            if fast_m2 {
+                for j in 0..c {
+                    let iv = _mm256_div_pd(one_pd, _mm256_loadu_pd(d2g.as_ptr().add(j * LANES)));
+                    _mm256_storeu_pd(invg.as_mut_ptr().add(j * LANES), iv);
+                    sum_inv = _mm256_add_pd(sum_inv, iv);
+                }
+            } else {
+                for e in 0..c * LANES {
+                    invg[e] = d2g[e].powf(-p);
+                }
+                for j in 0..c {
+                    sum_inv = _mm256_add_pd(sum_inv, _mm256_loadu_pd(invg.as_ptr().add(j * LANES)));
+                }
+            }
+            for j in 0..c {
+                let iv = _mm256_loadu_pd(invg.as_ptr().add(j * LANES));
+                let unit = _mm256_cvtpd_ps(_mm256_div_pd(iv, sum_inv));
+                let val = _mm_mul_ps(unit, wi4);
+                let uo = _mm_loadu_ps(u_old.as_ptr().add(j * n + i));
+                delta4 = _mm_max_ps(delta4, _mm_and_ps(_mm_sub_ps(val, uo), abs_mask));
+                _mm_storeu_ps(rows[j].as_mut_ptr().add(k), val);
+                let vf = _mm256_cvtps_pd(val);
+                let um = if fast_m2 {
+                    _mm256_mul_pd(vf, vf)
+                } else {
+                    _mm_storeu_ps(valg.as_mut_ptr(), val);
+                    for (slot, &v) in umg.iter_mut().zip(valg.iter()) {
+                        *slot = (v as f64).powf(m);
+                    }
+                    _mm256_loadu_pd(umg.as_ptr())
+                };
+                let wu = _mm256_mul_pd(w64, um);
+                let np = acc.num.as_mut_ptr().add(j * LANES);
+                _mm256_storeu_pd(np, _mm256_add_pd(_mm256_loadu_pd(np), _mm256_mul_pd(wu, xi4)));
+                let dp = acc.den.as_mut_ptr().add(j * LANES);
+                _mm256_storeu_pd(dp, _mm256_add_pd(_mm256_loadu_pd(dp), wu));
+                let dd = _mm256_loadu_pd(d2g.as_ptr().add(j * LANES));
+                let jp = acc.jm.as_mut_ptr();
+                _mm256_storeu_pd(jp, _mm256_add_pd(_mm256_loadu_pd(jp), _mm256_mul_pd(wu, dd)));
+            }
+        }
+        acc.delta = acc.delta.max(hmax(delta4));
+        for k in groups * LANES..len {
+            scalar_pixel(
+                x, w, u_old, n, centers, m, p, fast_m2, start + k, k, k % LANES, &mut scratch,
+                rows, &mut acc,
+            );
+        }
+        acc.fold(c)
+    }
+
+    #[target_feature(enable = "avx")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn fused_chunk_avx_ctx(
+        ctx: &FusedCtx,
+        x: &[f32],
+        w: &[f32],
+        u_old: &[f32],
+        n: usize,
+        start: usize,
+        rows: &mut [&mut [f32]],
+    ) -> PassPartial {
+        let c = ctx.c;
+        let len = rows[0].len();
+        let mut acc = LaneAcc::zero(c);
+        let mut vg = [0usize; LANES];
+        let mut valb = [0f32; LANES];
+        let mut umb = [0f64; LANES];
+        let mut d2b = [0f64; LANES];
+        let one_ps = _mm_set1_ps(1.0);
+        let zero_ps = _mm_setzero_ps();
+        let abs_mask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+        let mut delta4 = _mm_setzero_ps();
+
+        let groups = len / LANES;
+        for g in 0..groups {
+            let k = g * LANES;
+            let i = start + k;
+            let x4 = _mm_loadu_ps(x.as_ptr().add(i));
+            let xi4 = _mm256_cvtps_pd(x4);
+            let w4 = _mm_loadu_ps(w.as_ptr().add(i));
+            let wi4 = _mm_and_ps(_mm_cmpgt_ps(w4, zero_ps), one_ps);
+            let w64 = _mm256_cvtps_pd(w4);
+            for (l, slot) in vg.iter_mut().enumerate() {
+                *slot = x[i + l] as usize;
+            }
+            for j in 0..c {
+                for l in 0..LANES {
+                    let e = vg[l] * c + j;
+                    valb[l] = ctx.val[e];
+                    umb[l] = ctx.um[e];
+                    d2b[l] = ctx.d2[e];
+                }
+                let val = _mm_mul_ps(_mm_loadu_ps(valb.as_ptr()), wi4);
+                let uo = _mm_loadu_ps(u_old.as_ptr().add(j * n + i));
+                delta4 = _mm_max_ps(delta4, _mm_and_ps(_mm_sub_ps(val, uo), abs_mask));
+                _mm_storeu_ps(rows[j].as_mut_ptr().add(k), val);
+                let wu = _mm256_mul_pd(w64, _mm256_loadu_pd(umb.as_ptr()));
+                let np = acc.num.as_mut_ptr().add(j * LANES);
+                _mm256_storeu_pd(np, _mm256_add_pd(_mm256_loadu_pd(np), _mm256_mul_pd(wu, xi4)));
+                let dp = acc.den.as_mut_ptr().add(j * LANES);
+                _mm256_storeu_pd(dp, _mm256_add_pd(_mm256_loadu_pd(dp), wu));
+                let jp = acc.jm.as_mut_ptr();
+                _mm256_storeu_pd(
+                    jp,
+                    _mm256_add_pd(_mm256_loadu_pd(jp), _mm256_mul_pd(wu, _mm256_loadu_pd(d2b.as_ptr()))),
+                );
+            }
+        }
+        acc.delta = acc.delta.max(hmax(delta4));
+        for k in groups * LANES..len {
+            scalar_pixel_ctx(ctx, x, w, u_old, n, start + k, k, k % LANES, rows, &mut acc);
+        }
+        acc.fold(c)
+    }
+}
+
+/// One fused pass over pixels `[start, start+rows[0].len())`.
+///
+/// * `u_old` is the full c*n membership matrix (read-only, strided access
+///   at `j*n + i`);
+/// * `rows[j]` is this chunk's slice of cluster j's row of `u_new`
+///   (disjoint across chunks, which is how the parallel driver shares the
+///   output matrix across threads without locks);
+/// * returns the chunk's [`PassPartial`] for the fixed-order reduction.
+///
+/// Dispatches to the AVX kernel behind [`simd_width`]; both kernels are
+/// bit-identical, so the toggle never changes results.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_chunk(
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    start: usize,
+    rows: &mut [&mut [f32]],
+) -> PassPartial {
+    #[cfg(target_arch = "x86_64")]
+    if simd_width() > 1 {
+        // SAFETY: simd_width() > 1 only after runtime AVX detection.
+        return unsafe { avx::fused_chunk_avx(x, w, u_old, n, centers, m, start, rows) };
+    }
+    fused_chunk_scalar(x, w, u_old, n, centers, m, start, rows)
+}
+
+/// [`fused_chunk`] through optional per-iteration tables: with
+/// `Some(ctx)` the per-pixel divides/`powf` become lookups (u8/u16
+/// domains); with `None` it is the direct pass. Identical results
+/// either way — callers plumb the ctx only where it pays.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_chunk_ctx(
+    ctx: Option<&FusedCtx>,
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    start: usize,
+    rows: &mut [&mut [f32]],
+) -> PassPartial {
+    match ctx {
+        Some(ctx) => {
+            #[cfg(target_arch = "x86_64")]
+            if simd_width() > 1 {
+                // SAFETY: simd_width() > 1 only after runtime AVX detection.
+                return unsafe { avx::fused_chunk_avx_ctx(ctx, x, w, u_old, n, start, rows) };
+            }
+            fused_chunk_scalar_ctx(ctx, x, w, u_old, n, start, rows)
+        }
+        None => fused_chunk(x, w, u_old, n, centers, m, start, rows),
+    }
+}
+
+/// The vector kernel regardless of the toggle, or `None` when the CPU
+/// lacks AVX (or off x86_64) — lets tests and benches pin
+/// scalar == SIMD without touching process-global state.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_chunk_simd(
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    centers: &[f32],
+    m: f64,
+    start: usize,
+    rows: &mut [&mut [f32]],
+) -> Option<PassPartial> {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx") {
+        // SAFETY: AVX presence just checked.
+        return Some(unsafe { avx::fused_chunk_avx(x, w, u_old, n, centers, m, start, rows) });
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (x, w, u_old, n, centers, m, start, rows);
+    }
+    None
+}
+
+/// LUT twin of [`fused_chunk_simd`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_chunk_simd_ctx(
+    ctx: &FusedCtx,
+    x: &[f32],
+    w: &[f32],
+    u_old: &[f32],
+    n: usize,
+    start: usize,
+    rows: &mut [&mut [f32]],
+) -> Option<PassPartial> {
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx") {
+        // SAFETY: AVX presence just checked.
+        return Some(unsafe { avx::fused_chunk_avx_ctx(ctx, x, w, u_old, n, start, rows) });
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (ctx, x, w, u_old, n, start, rows);
+    }
+    None
 }
 
 /// Recompute the membership values a fused pass at `centers` would
@@ -173,10 +816,23 @@ pub fn recompute_memberships(
     zeros: &[f32],
     rows: &mut [&mut [f32]],
 ) {
+    recompute_memberships_ctx(None, x, w, centers, m, zeros, rows);
+}
+
+/// [`recompute_memberships`] through optional per-iteration tables.
+pub fn recompute_memberships_ctx(
+    ctx: Option<&FusedCtx>,
+    x: &[f32],
+    w: &[f32],
+    centers: &[f32],
+    m: f64,
+    zeros: &[f32],
+    rows: &mut [&mut [f32]],
+) {
     let len = rows[0].len();
     debug_assert!(zeros.len() >= centers.len() * len, "zero scratch too small");
     debug_assert!(zeros.iter().all(|&z| z == 0.0), "scratch must stay zero");
-    let _ = fused_chunk(x, w, &zeros[..centers.len() * len], len, centers, m, 0, rows);
+    let _ = fused_chunk_ctx(ctx, x, w, &zeros[..centers.len() * len], len, centers, m, 0, rows);
 }
 
 /// Sigma sums of Equation 3 over one chunk of an existing membership
@@ -260,6 +916,36 @@ mod tests {
         (x, vec![1.0; n])
     }
 
+    /// Integer-valued two-mode data (u8 domain) for the LUT paths.
+    fn two_mode_u8(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let (x, w) = two_mode(n, seed);
+        (x.into_iter().map(|v| v.round().clamp(0.0, 255.0)).collect(), w)
+    }
+
+    fn run_chunk(
+        kernel: impl FnOnce(&mut [&mut [f32]]) -> PassPartial,
+        c: usize,
+        n: usize,
+    ) -> (Vec<f32>, PassPartial) {
+        let mut u = vec![0f32; c * n];
+        let part = {
+            let mut rows: Vec<&mut [f32]> = u.chunks_mut(n).collect();
+            kernel(&mut rows)
+        };
+        (u, part)
+    }
+
+    fn bits64(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn assert_parts_identical(a: &PassPartial, b: &PassPartial, what: &str) {
+        assert_eq!(bits64(&a.num), bits64(&b.num), "{what}: num bits");
+        assert_eq!(bits64(&a.den), bits64(&b.den), "{what}: den bits");
+        assert_eq!(a.jm.to_bits(), b.jm.to_bits(), "{what}: jm bits");
+        assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{what}: delta bits");
+    }
+
     #[test]
     fn initial_centers_match_sequential_update() {
         let (x, w) = two_mode(3000, 1);
@@ -287,10 +973,11 @@ mod tests {
         let delta_seq = sequential::update_memberships(&x, &w, &centers, 2.0, &u_old, &mut u_seq);
 
         // Fused over the whole range as one chunk.
-        let mut u_fused = vec![0f32; c * n];
-        let (row0, row1) = u_fused.split_at_mut(n);
-        let mut rows: Vec<&mut [f32]> = vec![row0, row1];
-        let part = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
+        let (u_fused, part) = run_chunk(
+            |rows| fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, rows),
+            c,
+            n,
+        );
 
         assert_eq!(u_fused, u_seq, "fused memberships differ from Eq.4");
         assert_eq!(part.delta, delta_seq);
@@ -309,10 +996,11 @@ mod tests {
         let centers = vec![100.0f32, 100.0];
         let mut u_seq = vec![0f32; c * n];
         let d_seq = sequential::update_memberships(&x, &w, &centers, 2.0, &u_old, &mut u_seq);
-        let mut u_fused = vec![0f32; c * n];
-        let (r0, r1) = u_fused.split_at_mut(n);
-        let mut rows: Vec<&mut [f32]> = vec![r0, r1];
-        let part = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
+        let (u_fused, part) = run_chunk(
+            |rows| fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, rows),
+            c,
+            n,
+        );
         assert_eq!(u_fused, u_seq);
         assert_eq!(part.delta, d_seq);
         assert!(u_fused.iter().all(|v| v.is_finite()));
@@ -328,10 +1016,11 @@ mod tests {
         let c = 2;
         let u_old = crate::fcm::init_membership_masked(c, &w, 5);
         let centers = vec![40.0f32, 60.0];
-        let mut u_new = vec![0f32; c * n];
-        let (r0, r1) = u_new.split_at_mut(n);
-        let mut rows: Vec<&mut [f32]> = vec![r0, r1];
-        let _ = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
+        let (u_new, _) = run_chunk(
+            |rows| fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, rows),
+            c,
+            n,
+        );
         for j in 0..c {
             for i in 64..n {
                 assert_eq!(u_new[j * n + i], 0.0, "padding gained membership");
@@ -347,11 +1036,11 @@ mod tests {
         let u_old = init_membership(c, n, 6);
         let mut centers = vec![0f32; c];
         sequential::update_centers(&x, &w, &u_old, c, 2.0, &mut centers);
-        let mut u_fused = vec![0f32; c * n];
-        {
-            let mut rows: Vec<&mut [f32]> = u_fused.chunks_mut(n).collect();
-            let _ = fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows);
-        }
+        let (u_fused, _) = run_chunk(
+            |rows| fused_chunk(&x, &w, &u_old, n, &centers, 2.0, 0, rows),
+            c,
+            n,
+        );
         let zeros = vec![0f32; c * n];
         let mut u_re = vec![0f32; c * n];
         {
@@ -372,11 +1061,130 @@ mod tests {
         sequential::update_centers(&x, &w, &u_old, c, m, &mut centers);
         let mut u_seq = vec![0f32; c * n];
         let d_seq = sequential::update_memberships(&x, &w, &centers, m, &u_old, &mut u_seq);
-        let mut u_fused = vec![0f32; c * n];
-        let (r0, r1) = u_fused.split_at_mut(n);
-        let mut rows: Vec<&mut [f32]> = vec![r0, r1];
-        let part = fused_chunk(&x, &w, &u_old, n, &centers, m, 0, &mut rows);
+        let (u_fused, part) = run_chunk(
+            |rows| fused_chunk(&x, &w, &u_old, n, &centers, m, 0, rows),
+            c,
+            n,
+        );
         assert_eq!(u_fused, u_seq);
         assert_eq!(part.delta, d_seq);
+    }
+
+    #[test]
+    fn domain_classification() {
+        assert_eq!(classify_domain(&[0.0, 17.0, 255.0]), IntensityDomain::U8);
+        assert_eq!(classify_domain(&[0.0, 256.0, 65535.0]), IntensityDomain::U16);
+        assert_eq!(classify_domain(&[0.5, 1.0]), IntensityDomain::Direct);
+        assert_eq!(classify_domain(&[-1.0, 2.0]), IntensityDomain::Direct);
+        assert_eq!(classify_domain(&[65536.0]), IntensityDomain::Direct);
+        assert_eq!(classify_domain(&[]), IntensityDomain::U8);
+        // The workload gate: tiny chunks never pay for a table build.
+        assert!(FusedCtx::build(IntensityDomain::U8, &[1.0, 2.0], 2.0, 100).is_none());
+        assert!(FusedCtx::build(IntensityDomain::Direct, &[1.0, 2.0], 2.0, 1 << 20).is_none());
+        assert!(FusedCtx::build(IntensityDomain::U8, &[1.0, 2.0], 2.0, 256).is_some());
+    }
+
+    #[test]
+    fn lut_path_is_bit_identical_to_direct_scalar() {
+        for m in [2.0f64, 2.5] {
+            let (x, mut w) = two_mode_u8(1000, 21);
+            // Mix in masked pixels and an exact center collision.
+            for i in (0..w.len()).step_by(9) {
+                w[i] = 0.0;
+            }
+            let n = x.len();
+            let c = 3;
+            let u_old = crate::fcm::init_membership_masked(c, &w, 4);
+            let centers = vec![60.0f32, 190.0, x[5]];
+            let ctx = FusedCtx::build(IntensityDomain::U8, &centers, m, n).expect("ctx");
+            let (u_direct, p_direct) = run_chunk(
+                |rows| fused_chunk_scalar(&x, &w, &u_old, n, &centers, m, 0, rows),
+                c,
+                n,
+            );
+            let (u_lut, p_lut) = run_chunk(
+                |rows| fused_chunk_scalar_ctx(&ctx, &x, &w, &u_old, n, 0, rows),
+                c,
+                n,
+            );
+            assert_eq!(u_lut, u_direct, "m={m}: LUT memberships drifted");
+            assert_parts_identical(&p_lut, &p_direct, &format!("m={m} lut-vs-direct"));
+        }
+    }
+
+    #[test]
+    fn simd_kernel_is_bit_identical_to_scalar_including_ragged_tails() {
+        // n = 1021 is not a multiple of LANES: the tail must land in the
+        // same lane slots the scalar kernel uses.
+        for m in [2.0f64, 2.5] {
+            let (x, w) = two_mode(1021, 33);
+            let n = x.len();
+            let c = 3;
+            let u_old = init_membership(c, n, 8);
+            let centers = vec![58.0f32, 120.0, 191.0];
+            let (u_s, p_s) = run_chunk(
+                |rows| fused_chunk_scalar(&x, &w, &u_old, n, &centers, m, 0, rows),
+                c,
+                n,
+            );
+            let mut u_v = vec![0f32; c * n];
+            let p_v = {
+                let mut rows: Vec<&mut [f32]> = u_v.chunks_mut(n).collect();
+                fused_chunk_simd(&x, &w, &u_old, n, &centers, m, 0, &mut rows)
+            };
+            let Some(p_v) = p_v else {
+                return; // no AVX on this machine: nothing to compare
+            };
+            assert_eq!(u_v, u_s, "m={m}: SIMD memberships drifted");
+            assert_parts_identical(&p_v, &p_s, &format!("m={m} simd-vs-scalar"));
+        }
+    }
+
+    #[test]
+    fn simd_kernel_handles_singular_groups_like_scalar() {
+        let mut x = vec![100.0f32; 37];
+        // Lane 2 of group 3 collides with a center; the rest do not.
+        x[14] = 55.0;
+        let w = vec![1.0f32; 37];
+        let n = 37;
+        let c = 2;
+        let u_old = init_membership(c, n, 2);
+        let centers = vec![55.0f32, 150.0];
+        let (u_s, p_s) = run_chunk(
+            |rows| fused_chunk_scalar(&x, &w, &u_old, n, &centers, 2.0, 0, rows),
+            c,
+            n,
+        );
+        let mut u_v = vec![0f32; c * n];
+        let p_v = {
+            let mut rows: Vec<&mut [f32]> = u_v.chunks_mut(n).collect();
+            fused_chunk_simd(&x, &w, &u_old, n, &centers, 2.0, 0, &mut rows)
+        };
+        let Some(p_v) = p_v else { return };
+        assert_eq!(u_v, u_s);
+        assert_parts_identical(&p_v, &p_s, "singular simd-vs-scalar");
+    }
+
+    #[test]
+    fn simd_lut_kernel_matches_scalar_lut() {
+        let (x, w) = two_mode_u8(1023, 44);
+        let n = x.len();
+        let c = 4;
+        let u_old = init_membership(c, n, 14);
+        let centers = vec![30.0f32, 90.0, 150.0, 220.0];
+        let ctx = FusedCtx::build(IntensityDomain::U8, &centers, 2.0, n).expect("ctx");
+        let (u_s, p_s) = run_chunk(
+            |rows| fused_chunk_scalar_ctx(&ctx, &x, &w, &u_old, n, 0, rows),
+            c,
+            n,
+        );
+        let mut u_v = vec![0f32; c * n];
+        let p_v = {
+            let mut rows: Vec<&mut [f32]> = u_v.chunks_mut(n).collect();
+            fused_chunk_simd_ctx(&ctx, &x, &w, &u_old, n, 0, &mut rows)
+        };
+        let Some(p_v) = p_v else { return };
+        assert_eq!(u_v, u_s);
+        assert_parts_identical(&p_v, &p_s, "lut simd-vs-scalar");
     }
 }

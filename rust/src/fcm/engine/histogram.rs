@@ -18,28 +18,45 @@
 //! u_0 (subsequent deltas are identical, since memberships collapse onto
 //! bins after one update).
 //!
-//! Inputs that are not 8-bit-integral fall back to the parallel engine.
+//! The same collapse works for any small integer domain: 16-bit inputs
+//! get 65 536 bins — still tiny next to the voxel counts that justify
+//! the path, and enough for real scanner dynamic range. Inputs that are
+//! not integral (or exceed 16 bits) fall back to the parallel engine.
 
-use super::fused::{fused_chunk, initial_centers};
+use super::fused::{initial_centers, IntensityDomain};
 use super::{parallel, EngineOpts};
 use crate::fcm::{defuzzify, FcmParams, FcmRun};
 
-/// Number of grey levels on the fast path (u8 range).
+/// Number of grey levels on the 8-bit fast path.
 pub const BINS: usize = 256;
 
-/// Map a feature value to its grey-level bin, if it is 8-bit-integral.
-fn quantize(v: f32) -> Option<usize> {
-    if (0.0..=255.0).contains(&v) && v.fract() == 0.0 {
-        Some(v as usize)
-    } else {
-        None
+/// Classify the *real* (w>0) features: integral values in [0, 255] run
+/// the 256-bin path, integral values in [0, 65535] the 65 536-bin path,
+/// anything else is inapplicable ([`IntensityDomain::Direct`] — the
+/// caller falls back to the parallel engine). Padding (w = 0) may hold
+/// anything. This replaces the old boolean `applicable`, which
+/// hard-rejected values >= 256 and silently dropped 16-bit volumes onto
+/// the slab path.
+pub fn domain(x: &[f32], w: &[f32]) -> IntensityDomain {
+    let mut max = 0.0f32;
+    for (&xi, &wi) in x.iter().zip(w) {
+        if wi <= 0.0 {
+            continue;
+        }
+        if !(xi.is_finite() && xi >= 0.0 && xi.fract() == 0.0) {
+            return IntensityDomain::Direct;
+        }
+        if xi > max {
+            max = xi;
+        }
     }
-}
-
-/// Whether the fast path applies: every *real* (w>0) feature is an
-/// integral grey level in [0, 255].
-pub fn applicable(x: &[f32], w: &[f32]) -> bool {
-    x.iter().zip(w).all(|(&xi, &wi)| wi <= 0.0 || quantize(xi).is_some())
+    if max <= 255.0 {
+        IntensityDomain::U8
+    } else if max <= 65535.0 {
+        IntensityDomain::U16
+    } else {
+        IntensityDomain::Direct
+    }
 }
 
 /// Run histogram FCM from a fresh (seeded, masked) membership init.
@@ -49,7 +66,7 @@ pub fn run(x: &[f32], w: &[f32], params: &FcmParams, opts: &EngineOpts) -> FcmRu
 }
 
 /// Run histogram FCM from a caller-supplied u_0 (falls back to the
-/// parallel engine when the input is not 8-bit grayscale).
+/// parallel engine when the input is neither 8- nor 16-bit grayscale).
 pub fn run_from(
     x: &[f32],
     w: &[f32],
@@ -57,7 +74,8 @@ pub fn run_from(
     params: &FcmParams,
     opts: &EngineOpts,
 ) -> FcmRun {
-    if x.is_empty() || !applicable(x, w) {
+    let bins = domain(x, w).levels();
+    if x.is_empty() || bins == 0 {
         return parallel::run_from(x, w, u0, params, opts);
     }
     let n = x.len();
@@ -72,15 +90,17 @@ pub fn run_from(
     // num/den ratio (it is an extra rounding source on top of
     // summation order, covered by the 1e-3 equivalence tolerance).
     let mut bin_of = vec![0usize; n];
-    let mut wb64 = [0f64; BINS];
+    let mut wb64 = vec![0f64; bins];
     for i in 0..n {
         if w[i] > 0.0 {
-            let b = quantize(x[i]).expect("applicable() checked");
+            // In range by classification: w>0 features are integral in
+            // [0, bins).
+            let b = x[i] as usize;
             bin_of[i] = b;
             wb64[b] += w[i] as f64;
         }
     }
-    let xb: Vec<f32> = (0..BINS).map(|v| v as f32).collect();
+    let xb: Vec<f32> = (0..bins).map(|v| v as f32).collect();
     let wb: Vec<f32> = wb64.iter().map(|&v| v as f32).collect();
 
     // centers_1 from the full pixel-level u_0 (trajectory parity).
@@ -88,49 +108,27 @@ pub fn run_from(
 
     // Bin-level u_0: weight-averaged membership per grey level — only the
     // first delta reads it; empty bins stay all-zero (w=0 masking).
-    let mut u_bin = vec![0f32; c * BINS];
+    let mut u_bin = vec![0f32; c * bins];
     for j in 0..c {
-        let mut sums = [0f64; BINS];
+        let mut sums = vec![0f64; bins];
         for i in 0..n {
             if w[i] > 0.0 {
                 sums[bin_of[i]] += w[i] as f64 * u0[j * n + i] as f64;
             }
         }
-        for b in 0..BINS {
+        for b in 0..bins {
             if wb64[b] > 0.0 {
-                u_bin[j * BINS + b] = (sums[b] / wb64[b]) as f32;
+                u_bin[j * bins + b] = (sums[b] / wb64[b]) as f32;
             }
         }
     }
 
-    // Iterate at bin granularity: one fused chunk of 256 "pixels".
-    let mut u_bin_new = vec![0f32; c * BINS];
-    let mut jm_history = Vec::new();
-    let mut final_delta = f32::INFINITY;
-    let mut iterations = 0;
-    let mut converged = false;
-    for it in 0..params.max_iters {
-        iterations += 1;
-        let part = {
-            let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(BINS).collect();
-            fused_chunk(&xb, &wb, &u_bin, BINS, &centers, m, 0, &mut rows)
-        };
-        std::mem::swap(&mut u_bin, &mut u_bin_new);
-        jm_history.push(part.jm);
-        final_delta = part.delta;
-        if part.delta < params.epsilon {
-            converged = true;
-            break;
-        }
-        // Skip the center update on the final capped iteration (parity
-        // with sequential::run_from; see parallel.rs).
-        if it + 1 < params.max_iters {
-            part.centers(&mut centers);
-        }
-    }
+    // Iterate at bin granularity: one fused chunk of `bins` "pixels"
+    // per iteration (shared loop; see volume::bin_iterations).
+    let it = super::volume::bin_iterations(&xb, &wb, &mut u_bin, &mut centers, params, m);
 
     // Expand bins back to pixels: O(1) LUT per pixel.
-    let bin_labels = defuzzify(&u_bin, c, BINS);
+    let bin_labels = defuzzify(&u_bin, c, bins);
     let mut labels = vec![0u8; n];
     let mut u = vec![0f32; c * n];
     for i in 0..n {
@@ -138,7 +136,7 @@ pub fn run_from(
             let b = bin_of[i];
             labels[i] = bin_labels[b];
             for j in 0..c {
-                u[j * n + i] = u_bin[j * BINS + b];
+                u[j * n + i] = u_bin[j * bins + b];
             }
         }
     }
@@ -147,10 +145,10 @@ pub fn run_from(
         centers,
         u,
         labels,
-        iterations,
-        final_delta,
-        jm_history,
-        converged,
+        iterations: it.iterations,
+        final_delta: it.final_delta,
+        jm_history: it.jm_history,
+        converged: it.converged,
     }
 }
 
@@ -180,12 +178,50 @@ mod tests {
 
     #[test]
     fn applicability_detection() {
-        assert!(applicable(&[0.0, 128.0, 255.0], &[1.0, 1.0, 1.0]));
-        assert!(!applicable(&[0.5], &[1.0]));
-        assert!(!applicable(&[-1.0], &[1.0]));
-        assert!(!applicable(&[256.0], &[1.0]));
+        let w3 = [1.0f32, 1.0, 1.0];
+        assert_eq!(domain(&[0.0, 128.0, 255.0], &w3), IntensityDomain::U8);
+        // Values >= 256 are no longer rejected: they route to the
+        // 65 536-bin path instead of silently falling back to the slab
+        // engine.
+        assert_eq!(domain(&[0.0, 256.0, 65535.0], &w3), IntensityDomain::U16);
+        assert_eq!(domain(&[0.5], &[1.0]), IntensityDomain::Direct);
+        assert_eq!(domain(&[-1.0], &[1.0]), IntensityDomain::Direct);
+        assert_eq!(domain(&[65536.0], &[1.0]), IntensityDomain::Direct);
         // Padding (w=0) may hold anything.
-        assert!(applicable(&[777.5], &[0.0]));
+        assert_eq!(domain(&[777.5, 3.0], &[0.0, 1.0]), IntensityDomain::U8);
+    }
+
+    #[test]
+    fn u16_inputs_run_the_wide_bin_path() {
+        // 8-bit data scaled by 257 is 16-bit-integral with the same
+        // cluster structure; the wide path must agree with the parallel
+        // engine on it (it must NOT fall back — fallback would make
+        // centers match parallel bitwise, scaled centers prove the bin
+        // collapse actually ran).
+        let x: Vec<f32> = synth_u8(20_000, 8).iter().map(|&v| v * 257.0).collect();
+        let w = vec![1.0; x.len()];
+        assert_eq!(domain(&x, &w), IntensityDomain::U16);
+        let params = FcmParams::default();
+        let u0 = init_membership(params.clusters, x.len(), 13);
+        let mut hist = run_from(&x, &w, u0.clone(), &params, &opts());
+        let mut par = super::parallel::run_from(&x, &w, u0, &params, &opts());
+        // Memberships collapse onto grey levels — the wide-path signature.
+        let n = x.len();
+        for i in 1..n {
+            if x[i] == x[0] {
+                for j in 0..params.clusters {
+                    assert_eq!(hist.u[j * n + i], hist.u[j * n], "pixel {i}");
+                }
+            }
+        }
+        canonical_relabel(&mut hist);
+        canonical_relabel(&mut par);
+        for (a, b) in hist.centers.iter().zip(&par.centers) {
+            // u16 dynamic range: scale the 2-D engines' 1e-3 tolerance.
+            assert!((a - b).abs() < 0.257, "{:?} vs {:?}", hist.centers, par.centers);
+        }
+        let agree = hist.labels.iter().zip(&par.labels).filter(|(a, b)| a == b).count();
+        assert!(agree as f64 / n as f64 > 0.995, "agreement only {agree}/{n}");
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! lanes never share a mutable byte.
 
 use super::cancel::{CancelToken, Interrupted};
-use super::fused::{fused_chunk, initial_centers, PassPartial};
+use super::fused::{classify_domain, fused_chunk_ctx, initial_centers, FusedCtx, PassPartial};
 use super::pool::Pool;
 use super::reduce::{chunk_ranges, tree_reduce};
 use super::EngineOpts;
@@ -118,6 +118,11 @@ pub fn run_from_on_cancellable(
     // the next centers' sigma sums for free).
     let mut centers = initial_centers(x, w, &u, c, m, chunk);
 
+    // Integer-domain inputs get per-iteration lookup tables (one scan
+    // here, one table build per iteration). Results are bit-identical
+    // with or without the tables — this is purely a throughput lever.
+    let domain = classify_domain(x);
+
     let ranges = chunk_ranges(n, chunk);
     let mut u_new = vec![0f32; c * n];
     let mut jm_history = Vec::new();
@@ -128,7 +133,8 @@ pub fn run_from_on_cancellable(
     for it in 0..params.max_iters {
         cancel.checkpoint()?;
         iterations += 1;
-        let total = fused_pass(pool, x, w, &u, n, &centers, m, &ranges, &mut u_new);
+        let ctx = FusedCtx::build(domain, &centers, m, n);
+        let total = fused_pass(pool, ctx.as_ref(), x, w, &u, n, &centers, m, &ranges, &mut u_new);
         std::mem::swap(&mut u, &mut u_new);
         jm_history.push(total.jm);
         final_delta = total.delta;
@@ -188,6 +194,7 @@ pub(super) fn split_chunk_rows<'a>(
 #[allow(clippy::too_many_arguments)]
 fn fused_pass(
     pool: &Pool,
+    ctx: Option<&FusedCtx>,
     x: &[f32],
     w: &[f32],
     u_old: &[f32],
@@ -223,7 +230,7 @@ fn fused_pass(
         let mut slot = slots[lane].lock().unwrap();
         let (tasks, out) = &mut *slot;
         for (k, start, rows) in tasks.iter_mut() {
-            out.push((*k, fused_chunk(x, w, u_old, n, centers, m, *start, rows)));
+            out.push((*k, fused_chunk_ctx(ctx, x, w, u_old, n, centers, m, *start, rows)));
         }
     });
 

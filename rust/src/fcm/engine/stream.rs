@@ -10,13 +10,14 @@
 //! size and thread count (pinned by `tests/streaming.rs`):
 //!
 //! * **Histogram (truly out-of-core).** One streaming sweep builds the
-//!   exact integer 256-bin histogram, the per-slice centers_1 leaves,
-//!   and the bin-level u_0 sums; iterations then run at O(256·c²) on
-//!   the resident bin table (`volume::bin_iterations` — the same loop
-//!   body as the in-memory path, shared so the two cannot drift); a
-//!   second sweep expands canonical labels through a 256-entry LUT
-//!   into the sink. Resident memory: one tile plus O(c·256) tables,
-//!   independent of depth.
+//!   exact integer histogram — 256 bins for 8-bit sources, 65 536 for
+//!   16-bit ones (`VoxelSource::sample_bits`) — the per-slice centers_1
+//!   leaves, and the bin-level u_0 sums; iterations then run at
+//!   O(bins·c²) on the resident bin table (`volume::bin_iterations` —
+//!   the same loop body as the in-memory path, shared so the two cannot
+//!   drift); a second sweep expands canonical labels through a per-bin
+//!   LUT into the sink. Resident memory: one tile plus O(c·bins)
+//!   tables, independent of depth.
 //! * **Tile-recompute slab path.** FCM memberships are a pure function
 //!   of (x, w, centers), so the previous iteration's c·n matrix never
 //!   needs to stay resident: each iteration re-reads the tiles and
@@ -35,6 +36,10 @@
 //!   haloed tile with absolute-z clamping — bit-identical to the
 //!   in-memory `spatial::run_volume` for every tile size, thread
 //!   count, and q (see its docs for the two-pass-per-iteration shape).
+//!   Within each halo tile the phase-2 sweeps (membership recompute,
+//!   the three filter passes, the modulation) are slice-dispatched onto
+//!   the pool — `spatial::pool_slices` and its multi-row sibling
+//!   [`pool_slice_rows`], same position-keyed bit-identity argument.
 //!
 //! Why results cannot depend on the tile size: tiles change only how
 //! much of the field is resident. The partial grid stays the axial
@@ -51,12 +56,15 @@
 //! likewise ascending.
 
 use super::cancel::CancelToken;
-use super::fused::{centers_chunk, fused_chunk, recompute_memberships, PassPartial};
+use super::fused::{
+    centers_chunk, fused_chunk_ctx, recompute_memberships_ctx, FusedCtx, IntensityDomain,
+    PassPartial,
+};
 use super::pool::Pool;
 use super::reduce::tree_reduce;
-use super::volume::{bin_iterations, BINS};
+use super::volume::bin_iterations;
 use super::Backend;
-use crate::fcm::spatial::{pw, SpatialParams};
+use crate::fcm::spatial::{pool_slices, pw, SpatialParams};
 use crate::fcm::{canonical_order, defuzzify, init_membership_tile, FcmParams, DEN_EPS};
 use crate::image::volume::stream::{halo_range, tile_ranges, LabelSink, VoxelSource};
 use crate::util::Rng64;
@@ -101,8 +109,9 @@ pub struct StreamRun {
     pub final_delta: f32,
     /// J_m per iteration — identical to the in-memory run's history.
     pub jm_history: Vec<f64>,
-    /// Elements the fused update touches per iteration ([`BINS`] on the
-    /// histogram path, the voxel count on the tile path).
+    /// Elements the fused update touches per iteration (the bin count —
+    /// 256 or 65 536 by sample width — on the histogram path, the voxel
+    /// count on the tile path).
     pub work_per_iter: usize,
     /// Voxels processed (the source's full extent).
     pub voxels: usize,
@@ -127,19 +136,37 @@ pub fn estimated_peak_resident_bytes(
     clusters: usize,
     opts: &StreamOpts,
 ) -> usize {
+    estimated_peak_resident_bytes_wide(area, depth, clusters, 1, opts)
+}
+
+/// [`estimated_peak_resident_bytes`] for a source with
+/// `bytes_per_voxel`-byte raster samples (16-bit RVOL streams 2): only
+/// the raw tile scales with the sample width — the mask/label tiles
+/// stay one byte per voxel and every f32 mirror is width-independent.
+/// O(c·bins) bin tables remain bookkeeping outside this metric, like
+/// the per-iteration intensity LUTs (both are level-proportional, not
+/// voxel-proportional).
+pub fn estimated_peak_resident_bytes_wide(
+    area: usize,
+    depth: usize,
+    clusters: usize,
+    bytes_per_voxel: usize,
+    opts: &StreamOpts,
+) -> usize {
     if area == 0 || depth == 0 {
         return 0;
     }
     let c = clusters;
+    let bpv = bytes_per_voxel.max(1);
     let t = opts.tile_slices.max(1).min(depth);
     let ta = t * area;
     match opts.backend {
         // raw + mask + label tiles, one slice's f32 mirror + u_0 rows.
-        Backend::Histogram => 3 * ta + 4 * (2 * area + c * area),
+        Backend::Histogram => (2 + bpv) * ta + 4 * (2 * area + c * area),
         // raw + mask + label tiles, f32 tile mirrors, two membership
         // tiles, the recompute zero scratch.
         Backend::Parallel | Backend::Sequential => {
-            3 * ta + 4 * (2 * ta + 2 * c * ta + c * area)
+            (2 + bpv) * ta + 4 * (2 * ta + 2 * c * ta + c * area)
         }
     }
 }
@@ -155,14 +182,28 @@ pub fn estimated_peak_resident_bytes_spatial(
     sp: &SpatialParams,
     opts: &StreamOpts,
 ) -> usize {
+    estimated_peak_resident_bytes_spatial_wide(area, depth, clusters, 1, sp, opts)
+}
+
+/// [`estimated_peak_resident_bytes_spatial`] for `bytes_per_voxel`-byte
+/// raster samples (see [`estimated_peak_resident_bytes_wide`]).
+pub fn estimated_peak_resident_bytes_spatial_wide(
+    area: usize,
+    depth: usize,
+    clusters: usize,
+    bytes_per_voxel: usize,
+    sp: &SpatialParams,
+    opts: &StreamOpts,
+) -> usize {
     if area == 0 || depth == 0 {
         return 0;
     }
+    let bpv = bytes_per_voxel.max(1);
     let plain_opts = StreamOpts {
         backend: Backend::Parallel,
         ..*opts
     };
-    let plain = estimated_peak_resident_bytes(area, depth, clusters, &plain_opts);
+    let plain = estimated_peak_resident_bytes_wide(area, depth, clusters, bpv, &plain_opts);
     if sp.q == 0.0 {
         return plain;
     }
@@ -173,7 +214,7 @@ pub fn estimated_peak_resident_bytes_spatial(
     let phase1 = plain - t * area;
     // Phase 2: raw/mask halo tiles + label tile + f32 halo mirrors,
     // u_raw, two filter scratches, u_a/u_b, zero scratch.
-    let phase2 = 2 * ht * area
+    let phase2 = (1 + bpv) * ht * area
         + t * area
         + 4 * (2 * ht * area + c * ht * area + 2 * ht * area + 2 * c * t * area + c * area);
     phase1.max(phase2)
@@ -222,8 +263,32 @@ pub fn run_streamed_cancellable(
     }
 }
 
+/// Decode voxel `i` of a raw slab: one byte per voxel, or a big-endian
+/// byte pair for 16-bit sources.
+#[inline]
+fn sample_at(raw: &[u8], i: usize, bpv: usize) -> usize {
+    if bpv == 2 {
+        u16::from_be_bytes([raw[2 * i], raw[2 * i + 1]]) as usize
+    } else {
+        raw[i] as usize
+    }
+}
+
+/// Intensity domain implied by a source's sample width — streamed
+/// voxels are integral in `[0, 2^bits)` by construction, no data scan
+/// needed (the in-memory engines' `classify_domain` counterpart).
+fn domain_for_bits(bits: u32) -> IntensityDomain {
+    if bits == 16 {
+        IntensityDomain::U16
+    } else {
+        IntensityDomain::U8
+    }
+}
+
 /// Read slices `[z0, z0+nz)` plus their mask and mirror them into the
-/// f32 feature/weight buffers the fused kernels consume.
+/// f32 feature/weight buffers the fused kernels consume. `raw` must
+/// hold `nz * area * bytes_per_voxel` bytes; 16-bit samples decode
+/// exactly (every value < 2^24 is representable in f32).
 #[allow(clippy::too_many_arguments)]
 fn load_tile(
     src: &mut dyn VoxelSource,
@@ -236,16 +301,18 @@ fn load_tile(
     w: &mut [f32],
 ) -> Result<()> {
     let k = nz * area;
-    src.read_slab(z0, nz, &mut raw[..k])?;
+    let bpv = src.bytes_per_voxel();
+    src.read_slab(z0, nz, &mut raw[..k * bpv])?;
     src.read_mask_slab(z0, nz, &mut mraw[..k])?;
     for i in 0..k {
-        x[i] = raw[i] as f32;
+        x[i] = sample_at(raw, i, bpv) as f32;
         w[i] = if mraw[i] > 0 { 1.0 } else { 0.0 };
     }
     Ok(())
 }
 
-/// The truly out-of-core 3-D histogram path (module docs).
+/// The truly out-of-core 3-D histogram path (module docs). Bin count
+/// follows the sample width: 256 for 8-bit sources, 65 536 for 16-bit.
 fn hist_streamed(
     src: &mut dyn VoxelSource,
     sink: &mut dyn LabelSink,
@@ -260,10 +327,13 @@ fn hist_streamed(
     let m = params.m as f64;
     let t = opts.tile_slices.max(1).min(depth);
     let tiles = tile_ranges(depth, t);
+    let bpv = src.bytes_per_voxel();
+    let bins = 1usize << src.sample_bits();
 
     // The resident set: one raw/mask/label tile plus one slice's f32
-    // mirror and u_0 replay rows.
-    let mut raw = vec![0u8; t * area];
+    // mirror and u_0 replay rows. (The O(c·bins) tables below are
+    // bookkeeping outside the voxel-proportional metric.)
+    let mut raw = vec![0u8; t * area * bpv];
     let mut mraw = vec![0u8; t * area];
     let mut labels = vec![0u8; t * area];
     let mut xs = vec![0f32; area];
@@ -276,36 +346,38 @@ fn hist_streamed(
     // counts, the per-slice centers_1 leaves, and the bin-level u_0
     // sums. Each accumulator sees its additions in the same order as
     // the in-memory path, so all three are bit-identical to it.
-    let mut counts = [0u64; BINS];
-    let mut bin_sums = vec![0f64; c * BINS];
+    let mut counts = vec![0u64; bins];
+    let mut bin_sums = vec![0f64; c * bins];
     let mut leaves: Vec<PassPartial> = Vec::with_capacity(depth);
     let mut rng = Rng64::new(params.seed);
     for &(z0, nz) in &tiles {
         cancel.checkpoint()?;
-        src.read_slab(z0, nz, &mut raw[..nz * area])?;
+        src.read_slab(z0, nz, &mut raw[..nz * area * bpv])?;
         src.read_mask_slab(z0, nz, &mut mraw[..nz * area])?;
         for s in 0..nz {
-            let rb = &raw[s * area..(s + 1) * area];
+            let rb = &raw[s * area * bpv..(s + 1) * area * bpv];
             let mb = &mraw[s * area..(s + 1) * area];
             for i in 0..area {
-                xs[i] = rb[i] as f32;
+                xs[i] = sample_at(rb, i, bpv) as f32;
                 ws[i] = if mb[i] > 0 { 1.0 } else { 0.0 };
             }
             {
                 let mut rows: Vec<&mut [f32]> = u0.chunks_mut(area).collect();
                 init_membership_tile(&mut rng, &ws, &mut rows);
             }
-            for (&v, &wi) in rb.iter().zip(&ws) {
+            // xs mirrors the integer value exactly, so it doubles as
+            // the bin index for any sample width.
+            for (&xv, &wi) in xs.iter().zip(&ws) {
                 if wi > 0.0 {
-                    counts[v as usize] += 1;
+                    counts[xv as usize] += 1;
                 }
             }
             // No mask guard, matching the in-memory sums: masked rows
             // of u_0 are all-zero, and x + 0.0 == x.
             for j in 0..c {
                 let row = &u0[j * area..(j + 1) * area];
-                for (&v, &ui) in rb.iter().zip(row) {
-                    bin_sums[j * BINS + v as usize] += ui as f64;
+                for (&xv, &ui) in xs.iter().zip(row) {
+                    bin_sums[j * bins + xv as usize] += ui as f64;
                 }
             }
             leaves.push(centers_chunk(&xs, &ws, &u0, area, c, m, 0, area));
@@ -315,15 +387,15 @@ fn hist_streamed(
     let mut centers = vec![0f32; c];
     total.centers(&mut centers);
 
-    // Bin-level state (O(c·256), resident by design) + the shared
+    // Bin-level state (O(c·bins), resident by design) + the shared
     // iteration loop.
-    let xb: Vec<f32> = (0..BINS).map(|v| v as f32).collect();
+    let xb: Vec<f32> = (0..bins).map(|v| v as f32).collect();
     let wb: Vec<f32> = counts.iter().map(|&v| v as f32).collect();
-    let mut u_bin = vec![0f32; c * BINS];
+    let mut u_bin = vec![0f32; c * bins];
     for j in 0..c {
-        for b in 0..BINS {
+        for b in 0..bins {
             if counts[b] > 0 {
-                u_bin[j * BINS + b] = (bin_sums[j * BINS + b] / counts[b] as f64) as f32;
+                u_bin[j * bins + b] = (bin_sums[j * bins + b] / counts[b] as f64) as f32;
             }
         }
     }
@@ -331,20 +403,20 @@ fn hist_streamed(
     let it = bin_iterations(&xb, &wb, &mut u_bin, &mut centers, params, m);
     cancel.checkpoint()?;
 
-    // Pass B — canonical labels through one 256-entry LUT.
-    let bin_labels = defuzzify(&u_bin, c, BINS);
+    // Pass B — canonical labels through one per-bin LUT.
+    let bin_labels = defuzzify(&u_bin, c, bins);
     let (order, rank) = canonical_order(&centers);
-    let mut lut = [0u8; BINS];
+    let mut lut = vec![0u8; bins];
     for (b, l) in lut.iter_mut().enumerate() {
         *l = rank[bin_labels[b] as usize];
     }
     for &(z0, nz) in &tiles {
         cancel.checkpoint()?;
         let k = nz * area;
-        src.read_slab(z0, nz, &mut raw[..k])?;
+        src.read_slab(z0, nz, &mut raw[..k * bpv])?;
         src.read_mask_slab(z0, nz, &mut mraw[..k])?;
         for i in 0..k {
-            labels[i] = if mraw[i] > 0 { lut[raw[i] as usize] } else { 0 };
+            labels[i] = if mraw[i] > 0 { lut[sample_at(&raw, i, bpv)] } else { 0 };
         }
         sink.write_slab(&labels[..k])?;
     }
@@ -355,7 +427,7 @@ fn hist_streamed(
         converged: it.converged,
         final_delta: it.final_delta,
         jm_history: it.jm_history,
-        work_per_iter: BINS,
+        work_per_iter: bins,
         voxels: n,
         peak_resident_bytes,
     })
@@ -369,9 +441,14 @@ type SliceTask<'a> = (usize, usize, &'a mut [f32], &'a mut [f32]);
 /// One fused pass over a tile's slices, dispatched onto the pool.
 /// Partials come back keyed by absolute slice index; the caller sorts
 /// and tree-reduces across all tiles, so scheduling never shows.
+/// `ctx_prev`/`ctx` are the optional per-iteration intensity LUTs for
+/// `prev_centers`/`centers` (built once per iteration, shared by every
+/// tile and lane — result-neutral, see [`FusedCtx`]).
 #[allow(clippy::too_many_arguments)]
 fn tile_pass(
     pool: &Pool,
+    ctx_prev: Option<&FusedCtx>,
+    ctx: Option<&FusedCtx>,
     z0: usize,
     nz: usize,
     area: usize,
@@ -408,11 +485,11 @@ fn tile_pass(
             let ws = &w[*s * area..(*s + 1) * area];
             if recompute_prev {
                 let mut rows: Vec<&mut [f32]> = prev.chunks_mut(area).collect();
-                recompute_memberships(xs, ws, prev_centers, m, zeros, &mut rows);
+                recompute_memberships_ctx(ctx_prev, xs, ws, prev_centers, m, zeros, &mut rows);
             }
             let part = {
                 let mut rows: Vec<&mut [f32]> = new.chunks_mut(area).collect();
-                fused_chunk(xs, ws, &**prev, area, centers, m, 0, &mut rows)
+                fused_chunk_ctx(ctx, xs, ws, &**prev, area, centers, m, 0, &mut rows)
             };
             out.push((*z, part));
         }
@@ -452,10 +529,13 @@ fn tiles_iterate(
 ) -> Result<TilesIterated> {
     let area = src.slice_area();
     let depth = src.depth();
+    let n = area * depth;
     let c = params.clusters;
     let m = params.m as f64;
     let t = opts.tile_slices.max(1).min(depth);
     let tiles = tile_ranges(depth, t);
+    let bpv = src.bytes_per_voxel();
+    let domain = domain_for_bits(src.sample_bits());
     let threads = if opts.backend == Backend::Sequential {
         1
     } else {
@@ -465,7 +545,7 @@ fn tiles_iterate(
 
     // The resident set: one raw/mask tile, its f32 mirror, two
     // per-slice-major membership tiles, and the recompute zero scratch.
-    let mut raw = vec![0u8; t * area];
+    let mut raw = vec![0u8; t * area * bpv];
     let mut mraw = vec![0u8; t * area];
     let mut x = vec![0f32; t * area];
     let mut w = vec![0f32; t * area];
@@ -511,6 +591,14 @@ fn tiles_iterate(
     for it in 0..params.max_iters {
         iterations += 1;
         let mut parts: Vec<(usize, PassPartial)> = Vec::with_capacity(depth);
+        // Per-iteration intensity LUTs, one table per center vector for
+        // every tile and lane of this iteration (result-neutral).
+        let ctx_prev = if it > 0 {
+            FusedCtx::build(domain, &prev_centers, m, n)
+        } else {
+            None
+        };
+        let ctx = FusedCtx::build(domain, &centers, m, n);
         // Iteration 1's u_old is u_0: replay the serial seeded stream
         // (tiles arrive in z order, so one pass reproduces it exactly).
         let mut rng = Rng64::new(params.seed);
@@ -527,6 +615,8 @@ fn tiles_iterate(
             }
             parts.extend(tile_pass(
                 &pool,
+                ctx_prev.as_ref(),
+                ctx.as_ref(),
                 z0,
                 nz,
                 area,
@@ -595,13 +685,14 @@ fn tiles_streamed(
     // Labeling pass: the final memberships are a pure function of the
     // final centers — recompute per tile, defuzzify, canonicalize, pin
     // the masked sentinel, stream out.
-    let mut raw = vec![0u8; t * area];
+    let mut raw = vec![0u8; t * area * src.bytes_per_voxel()];
     let mut mraw = vec![0u8; t * area];
     let mut labels = vec![0u8; t * area];
     let mut x = vec![0f32; t * area];
     let mut w = vec![0f32; t * area];
     let mut u_new = vec![0f32; c * t * area];
     let zeros = vec![0f32; c * area];
+    let ctx = FusedCtx::build(domain_for_bits(src.sample_bits()), &centers, m, n);
     let (order, rank) = canonical_order(&centers);
     for &(z0, nz) in &tiles {
         cancel.checkpoint()?;
@@ -612,7 +703,7 @@ fn tiles_streamed(
             let chunk = &mut u_new[s * c * area..(s + 1) * c * area];
             {
                 let mut rows: Vec<&mut [f32]> = chunk.chunks_mut(area).collect();
-                recompute_memberships(xs, ws, &centers, m, &zeros, &mut rows);
+                recompute_memberships_ctx(ctx.as_ref(), xs, ws, &centers, m, &zeros, &mut rows);
             }
             let raw_labels = defuzzify(chunk, c, area);
             let lt = &mut labels[s * area..(s + 1) * area];
@@ -638,14 +729,66 @@ fn tiles_streamed(
     })
 }
 
+/// Dispatch per-slice tasks that each write one disjoint **row set** —
+/// slice s of every cluster row — onto the pool (slice s → lane
+/// s mod lanes): the multi-row sibling of [`pool_slices`] for
+/// cluster-major buffers. The same position-keyed bit-identity argument
+/// applies: every output value is a pure function of shared immutable
+/// input and its own slice's prior contents, there are no cross-slice
+/// reductions, so the result cannot depend on the lane count.
+fn pool_slice_rows<F>(pool: &Pool, tasks: Vec<(usize, Vec<&mut [f32]>)>, f: F)
+where
+    F: Fn(usize, &mut [&mut [f32]]) + Sync,
+{
+    if tasks.is_empty() {
+        return;
+    }
+    let lanes = pool.lanes().min(tasks.len()).max(1);
+    let mut per_lane: Vec<Vec<(usize, Vec<&mut [f32]>)>> = (0..lanes).map(|_| Vec::new()).collect();
+    for task in tasks {
+        per_lane[task.0 % lanes].push(task);
+    }
+    let slots: Vec<Mutex<Vec<(usize, Vec<&mut [f32]>)>>> =
+        per_lane.into_iter().map(Mutex::new).collect();
+    pool.run(|lane| {
+        if lane >= slots.len() {
+            return;
+        }
+        let mut tasks = slots[lane].lock().unwrap();
+        for (s, rows) in tasks.iter_mut() {
+            f(*s, rows);
+        }
+    });
+}
+
+/// Split the first `nslices` slices of a cluster-major buffer (row
+/// stride `stride`) into per-slice row sets for [`pool_slice_rows`].
+fn rows_by_slice(
+    buf: &mut [f32],
+    stride: usize,
+    nslices: usize,
+    area: usize,
+) -> Vec<(usize, Vec<&mut [f32]>)> {
+    let mut by_slice: Vec<(usize, Vec<&mut [f32]>)> =
+        (0..nslices).map(|s| (s, Vec::new())).collect();
+    for row in buf.chunks_mut(stride) {
+        for (s, sl) in row[..nslices * area].chunks_mut(area).enumerate() {
+            by_slice[s].1.push(sl);
+        }
+    }
+    by_slice
+}
+
 /// Recompute the **unmodulated** memberships (a pure function of the
 /// centers) for slices `[0, hnz)` of the loaded halo into `u_raw`
-/// (cluster-major, row stride `raw_stride`). Per-slice
-/// [`recompute_memberships`] calls — per-voxel arithmetic identical to
-/// `sequential::update_memberships`, which is what the in-memory
-/// phase 2 runs.
+/// (cluster-major, row stride `raw_stride`). Slice-dispatched
+/// [`recompute_memberships_ctx`] calls — per-voxel arithmetic identical
+/// to `sequential::update_memberships`, which is what the in-memory
+/// phase 2 runs; `ctx` is the optional intensity LUT for `centers`.
 #[allow(clippy::too_many_arguments)]
 fn raw_memberships_halo(
+    pool: &Pool,
+    ctx: Option<&FusedCtx>,
     x: &[f32],
     wts: &[f32],
     hnz: usize,
@@ -656,15 +799,12 @@ fn raw_memberships_halo(
     u_raw: &mut [f32],
     raw_stride: usize,
 ) {
-    for s in 0..hnz {
+    let tasks = rows_by_slice(u_raw, raw_stride, hnz, area);
+    pool_slice_rows(pool, tasks, |s, rows| {
         let xs = &x[s * area..(s + 1) * area];
         let ws = &wts[s * area..(s + 1) * area];
-        let mut rows: Vec<&mut [f32]> = u_raw
-            .chunks_mut(raw_stride)
-            .map(|r| &mut r[s * area..(s + 1) * area])
-            .collect();
-        recompute_memberships(xs, ws, centers, m, zeros, &mut rows);
-    }
+        recompute_memberships_ctx(ctx, xs, ws, centers, m, zeros, rows);
+    });
 }
 
 /// Recompute the **modulated** phase-2 memberships of tile
@@ -675,9 +815,13 @@ fn raw_memberships_halo(
 /// modulation on the interior — per-voxel arithmetic identical to
 /// `spatial::spatial_iterations` + `spatial_function_3d`. Results land
 /// in `dst` (cluster-major, row stride `row_stride`, first `nz·area`
-/// of each row valid).
+/// of each row valid). Every sweep is slice-dispatched onto the pool
+/// ([`pool_slices`] / [`pool_slice_rows`]) — pure position-keyed
+/// outputs, so the dispatch is invisible in the result.
 #[allow(clippy::too_many_arguments)]
 fn spatial_recompute_tile(
+    pool: &Pool,
+    ctx: Option<&FusedCtx>,
     x: &[f32],
     wts: &[f32],
     geom: (usize, usize, usize),
@@ -698,16 +842,17 @@ fn spatial_recompute_tile(
     let area = gw * gh;
     let c = centers.len();
     let radius = sp.radius;
-    raw_memberships_halo(x, wts, hnz, area, centers, m, zeros, u_raw, raw_stride);
+    raw_memberships_halo(pool, ctx, x, wts, hnz, area, centers, m, zeros, u_raw, raw_stride);
 
     let interior = (z0 - hz0) * area;
     // Filter each cluster's halo field; tmp1/tmp2 are reused across
     // clusters, with the filtered interior parked in `dst` until the
-    // per-voxel modulation below combines all clusters.
+    // per-voxel modulation below combines all clusters. The cluster
+    // loop stays serial — each pass inside it is the parallel unit.
     for j in 0..c {
         let row = &u_raw[j * raw_stride..j * raw_stride + hnz * area];
         // Pass 1: along x (slice-local, whole halo).
-        for s in 0..hnz {
+        pool_slices(pool, &mut tmp1[..hnz * area], area, |s, slice| {
             for r in 0..gh {
                 let base = s * area + r * gw;
                 for col in 0..gw {
@@ -717,58 +862,69 @@ fn spatial_recompute_tile(
                     for cc in lo..=hi {
                         acc += row[base + cc];
                     }
-                    tmp1[base + col] = acc;
+                    slice[r * gw + col] = acc;
                 }
             }
-        }
+        });
         // Pass 2: along y (slice-local, whole halo).
-        for s in 0..hnz {
-            for r in 0..gh {
-                let lo = r.saturating_sub(radius);
-                let hi = (r + radius).min(gh - 1);
-                for col in 0..gw {
-                    let mut acc = 0f32;
-                    for rr in lo..=hi {
-                        acc += tmp1[s * area + rr * gw + col];
+        {
+            let tmp1 = &tmp1[..hnz * area];
+            pool_slices(pool, &mut tmp2[..hnz * area], area, |s, slice| {
+                for r in 0..gh {
+                    let lo = r.saturating_sub(radius);
+                    let hi = (r + radius).min(gh - 1);
+                    for col in 0..gw {
+                        let mut acc = 0f32;
+                        for rr in lo..=hi {
+                            acc += tmp1[s * area + rr * gw + col];
+                        }
+                        slice[r * gw + col] = acc;
                     }
-                    tmp2[s * area + r * gw + col] = acc;
                 }
-            }
+            });
         }
         // Pass 3: along z, interior slices only, clamped against the
         // VOLUME bounds (the halo covers every clamped index by
         // construction of `halo_range`).
-        let hrow = &mut dst[j * row_stride..j * row_stride + nz * area];
-        for s in 0..nz {
-            let z = z0 + s;
-            let lo = z.saturating_sub(radius);
-            let hi = (z + radius).min(depth - 1);
-            for (i, v) in hrow[s * area..(s + 1) * area].iter_mut().enumerate() {
-                let mut acc = 0f32;
-                for zz in lo..=hi {
-                    acc += tmp2[(zz - hz0) * area + i];
+        {
+            let tmp2 = &tmp2[..hnz * area];
+            let hrow = &mut dst[j * row_stride..j * row_stride + nz * area];
+            pool_slices(pool, hrow, area, |s, slice| {
+                let z = z0 + s;
+                let lo = z.saturating_sub(radius);
+                let hi = (z + radius).min(depth - 1);
+                for (i, v) in slice.iter_mut().enumerate() {
+                    let mut acc = 0f32;
+                    for zz in lo..=hi {
+                        acc += tmp2[(zz - hz0) * area + i];
+                    }
+                    *v = acc;
                 }
-                *v = acc;
-            }
+            });
         }
     }
     // Modulation: v = u^p · h^q, row-normalized — dst currently holds h
     // per cluster; combine with the raw interior memberships in place,
-    // in exactly `spatial_iterations`' per-voxel order.
-    for i in 0..nz * area {
-        let mut sum = 0f32;
-        for j in 0..c {
-            let v =
-                pw(u_raw[j * raw_stride + interior + i], sp.p) * pw(dst[j * row_stride + i], sp.q);
-            dst[j * row_stride + i] = v;
-            sum += v;
-        }
-        if sum > 0.0 {
-            for j in 0..c {
-                dst[j * row_stride + i] /= sum;
+    // in exactly `spatial_iterations`' per-voxel order (j ascending
+    // within each voxel; the slice dispatch only partitions voxels).
+    let u_raw = &u_raw[..];
+    let tasks = rows_by_slice(dst, row_stride, nz, area);
+    pool_slice_rows(pool, tasks, |s, rows| {
+        let off = interior + s * area;
+        for i in 0..area {
+            let mut sum = 0f32;
+            for (j, row) in rows.iter_mut().enumerate() {
+                let v = pw(u_raw[j * raw_stride + off + i], sp.p) * pw(row[i], sp.q);
+                row[i] = v;
+                sum += v;
+            }
+            if sum > 0.0 {
+                for row in rows.iter_mut() {
+                    row[i] /= sum;
+                }
             }
         }
-    }
+    });
 }
 
 /// Streamed spatial 3-D FCM — the out-of-core counterpart of
@@ -854,6 +1010,9 @@ pub fn run_streamed_spatial_cancellable(
     let t = opts.tile_slices.max(1).min(depth);
     let tiles = tile_ranges(depth, t);
     let radius = sp.radius;
+    let bpv = src.bytes_per_voxel();
+    let domain = domain_for_bits(src.sample_bits());
+    let pool = super::pool::global(opts.threads);
 
     // Phase 1: plain volumetric FCM to convergence, out of core.
     let plain = tiles_iterate(src, params, &plain_opts, cancel)?;
@@ -863,7 +1022,7 @@ pub fn run_streamed_spatial_cancellable(
     let ht = (t + 2 * radius).min(depth);
     let raw_stride = ht * area;
     let row_stride = t * area;
-    let mut raw = vec![0u8; raw_stride];
+    let mut raw = vec![0u8; raw_stride * bpv];
     let mut mraw = vec![0u8; raw_stride];
     let mut x = vec![0f32; raw_stride];
     let mut wts = vec![0f32; raw_stride];
@@ -899,23 +1058,24 @@ pub fn run_streamed_spatial_cancellable(
     let mut converged = false;
 
     // u_k for the current tile into `u_a`, from the phase-2 state.
+    // `ctx_prev` is the iteration's intensity LUT for `prev_centers`.
     macro_rules! recompute_u_k {
-        ($z0:expr, $nz:expr, $hz0:expr, $hnz:expr) => {{
+        ($z0:expr, $nz:expr, $hz0:expr, $hnz:expr, $ctx_prev:expr) => {{
             if prev_is_plain {
                 // The plain matrix carries no modulation: recompute the
-                // interior slices directly (no halo dependence).
+                // interior slices directly (no halo dependence),
+                // slice-dispatched like every other phase-2 sweep.
                 let off = ($z0 - $hz0) * area;
-                for s in 0..$nz {
+                let tasks = rows_by_slice(&mut u_a, row_stride, $nz, area);
+                pool_slice_rows(&pool, tasks, |s, rows| {
                     let xs = &x[off + s * area..off + (s + 1) * area];
                     let ws = &wts[off + s * area..off + (s + 1) * area];
-                    let mut rows: Vec<&mut [f32]> = u_a
-                        .chunks_mut(row_stride)
-                        .map(|r| &mut r[s * area..(s + 1) * area])
-                        .collect();
-                    recompute_memberships(xs, ws, &prev_centers, m, &zeros, &mut rows);
-                }
+                    recompute_memberships_ctx($ctx_prev, xs, ws, &prev_centers, m, &zeros, rows);
+                });
             } else {
                 spatial_recompute_tile(
+                    &pool,
+                    $ctx_prev,
                     &x,
                     &wts,
                     (gw, gh, depth),
@@ -938,6 +1098,9 @@ pub fn run_streamed_spatial_cancellable(
 
     for _ in 0..params.max_iters {
         iterations += 1;
+        // One intensity LUT per center vector per pass, shared by every
+        // halo tile and lane (result-neutral).
+        let ctx_prev = FusedCtx::build(domain, &prev_centers, m, n);
 
         // Pass A: new centers from u_k — per-cluster sigma sums in
         // voxel order (`sequential::update_centers`' accumulation).
@@ -947,7 +1110,7 @@ pub fn run_streamed_spatial_cancellable(
             cancel.checkpoint()?;
             let (hz0, hnz) = halo_range(z0, nz, depth, radius);
             load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
-            recompute_u_k!(z0, nz, hz0, hnz);
+            recompute_u_k!(z0, nz, hz0, hnz, ctx_prev.as_ref());
             let off = (z0 - hz0) * area;
             let len = nz * area;
             for j in 0..c {
@@ -974,14 +1137,17 @@ pub fn run_streamed_spatial_cancellable(
 
         // Pass B: u_{k+1} from the new centers; delta vs u_k and the
         // per-cluster J_m partials, accumulated tile by tile.
+        let ctx_cur = FusedCtx::build(domain, &centers, m, n);
         let mut delta = 0f32;
         let mut jm = vec![0f64; c];
         for &(z0, nz) in &tiles {
             cancel.checkpoint()?;
             let (hz0, hnz) = halo_range(z0, nz, depth, radius);
             load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
-            recompute_u_k!(z0, nz, hz0, hnz);
+            recompute_u_k!(z0, nz, hz0, hnz, ctx_prev.as_ref());
             spatial_recompute_tile(
+                &pool,
+                ctx_cur.as_ref(),
                 &x,
                 &wts,
                 (gw, gh, depth),
@@ -1035,12 +1201,15 @@ pub fn run_streamed_spatial_cancellable(
     // Labeling pass: u is a pure function of the final centers —
     // recompute per halo-tile, defuzzify, canonicalize, pin the masked
     // sentinel, stream out.
+    let ctx_fin = FusedCtx::build(domain, &centers, m, n);
     let (order, rank) = canonical_order(&centers);
     for &(z0, nz) in &tiles {
         cancel.checkpoint()?;
         let (hz0, hnz) = halo_range(z0, nz, depth, radius);
         load_tile(src, hz0, hnz, area, &mut raw, &mut mraw, &mut x, &mut wts)?;
         spatial_recompute_tile(
+            &pool,
+            ctx_fin.as_ref(),
             &x,
             &wts,
             (gw, gh, depth),

@@ -35,7 +35,7 @@
 //! function of grey level; labels are expanded through a 256-entry LUT.
 
 use super::cancel::{CancelToken, Interrupted};
-use super::fused::{fused_chunk, initial_centers, PassPartial};
+use super::fused::{fused_chunk, fused_chunk_ctx, initial_centers, FusedCtx, IntensityDomain, PassPartial};
 use super::pool::Pool;
 use super::reduce::{chunk_ranges, tree_reduce};
 use super::Backend;
@@ -233,8 +233,12 @@ fn run_slab_cancellable(
     for it in 0..params.max_iters {
         cancel.checkpoint()?;
         iterations += 1;
+        // Voxels are u8 by construction: the per-iteration LUT always
+        // applies (and is bit-neutral; see fused.rs).
+        let ctx = FusedCtx::build(IntensityDomain::U8, &centers, m, n);
         let total = slab_pass(
             &pool,
+            ctx.as_ref(),
             &x,
             &w,
             &u,
@@ -282,6 +286,7 @@ type SliceTask<'a> = (usize, usize, Vec<&'a mut [f32]>);
 #[allow(clippy::too_many_arguments)]
 fn slab_pass(
     pool: &Pool,
+    ctx: Option<&FusedCtx>,
     x: &[f32],
     w: &[f32],
     u_old: &[f32],
@@ -316,7 +321,7 @@ fn slab_pass(
         let mut slot = slots[lane].lock().unwrap();
         let (tasks, out) = &mut *slot;
         for (z, start, rows) in tasks.iter_mut() {
-            out.push((*z, fused_chunk(x, w, u_old, n, centers, m, *start, rows)));
+            out.push((*z, fused_chunk_ctx(ctx, x, w, u_old, n, centers, m, *start, rows)));
         }
     });
 
@@ -339,12 +344,14 @@ pub(crate) struct BinIterations {
 }
 
 /// The bin-granularity iteration loop shared by the in-memory and
-/// out-of-core 3-D histogram paths (`super::stream`): one fused chunk
-/// of [`BINS`] weighted "voxels" per iteration. `u_bin` holds the
-/// bin-level u_0 on entry and the final bin memberships on exit;
-/// `centers` is updated in place (and, as everywhere, not updated on
-/// the final capped iteration). One body, so the two paths cannot
-/// drift.
+/// out-of-core histogram paths (`super::stream`): one fused chunk of
+/// `xb.len()` weighted "voxels" per iteration — 256 bins for u8 data,
+/// 65 536 for the 16-bit streamed path. `u_bin` holds the bin-level
+/// u_0 on entry and the final bin memberships on exit; `centers` is
+/// updated in place (and, as everywhere, not updated on the final
+/// capped iteration). One body, so the paths cannot drift. (The direct
+/// kernel, not the LUT: at bin granularity every grey level occurs
+/// exactly once, so a table would be the pass itself.)
 pub(crate) fn bin_iterations(
     xb: &[f32],
     wb: &[f32],
@@ -353,6 +360,7 @@ pub(crate) fn bin_iterations(
     params: &FcmParams,
     m: f64,
 ) -> BinIterations {
+    let bins = xb.len();
     let mut u_bin_new = vec![0f32; u_bin.len()];
     let mut jm_history = Vec::new();
     let mut final_delta = f32::INFINITY;
@@ -361,8 +369,8 @@ pub(crate) fn bin_iterations(
     for it in 0..params.max_iters {
         iterations += 1;
         let part = {
-            let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(BINS).collect();
-            fused_chunk(xb, wb, u_bin.as_slice(), BINS, centers, m, 0, &mut rows)
+            let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(bins).collect();
+            fused_chunk(xb, wb, u_bin.as_slice(), bins, centers, m, 0, &mut rows)
         };
         std::mem::swap(u_bin, &mut u_bin_new);
         jm_history.push(part.jm);

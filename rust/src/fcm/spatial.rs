@@ -291,8 +291,10 @@ fn spatial_function(u: &[f32], w: usize, hgt: usize, c: usize, radius: usize, ou
 /// it reading whatever shared input it closes over. Every output value
 /// is a pure position-keyed function of the input — no reductions — so
 /// the result is bit-identical to the serial loop for any lane count
-/// (the "fixed z-order join" is the pass barrier itself).
-fn pool_slices<F>(pool: &Pool, out: &mut [f32], area: usize, f: F)
+/// (the "fixed z-order join" is the pass barrier itself). Crate-visible
+/// so the halo-streamed phase 2 (`engine::stream`) runs its filter
+/// sweeps through the same dispatcher.
+pub(crate) fn pool_slices<F>(pool: &Pool, out: &mut [f32], area: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {

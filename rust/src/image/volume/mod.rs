@@ -306,19 +306,53 @@ pub fn load_raw(path: &Path) -> Result<VoxelVolume> {
     parse_raw(&buf).with_context(|| format!("parsing {}", path.display()))
 }
 
-/// A parsed RVOL header: shape, voxel count, and where the raster
-/// starts. One parser serves both the in-memory loader ([`parse_raw`])
-/// and the streaming reader (`stream::RvolReader`), so the format's
-/// framing rules have a single body.
+/// Write a 16-bit RVOL: `maxval 65535`, raster as big-endian u16
+/// (network order, like 16-bit P5 PGM). Only the streaming layer reads
+/// these — [`parse_raw`] stays 8-bit-only because [`VoxelVolume`] is a
+/// u8 field; the engines consume 16-bit data tile-by-tile through
+/// `stream::VoxelSource`.
+pub fn save_raw_u16(
+    width: usize,
+    height: usize,
+    depth: usize,
+    voxels: &[u16],
+    path: &Path,
+) -> Result<()> {
+    assert_eq!(voxels.len(), width * height * depth, "voxel buffer size mismatch");
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write!(f, "RVOL\n{width} {height} {depth}\n65535\n")?;
+    let mut raster = Vec::with_capacity(voxels.len() * 2);
+    for &v in voxels {
+        raster.extend_from_slice(&v.to_be_bytes());
+    }
+    f.write_all(&raster)?;
+    Ok(())
+}
+
+/// A parsed RVOL header: shape, voxel count, sample width, and where
+/// the raster starts. One parser serves both the in-memory loader
+/// ([`parse_raw`]) and the streaming reader (`stream::RvolReader`), so
+/// the format's framing rules have a single body.
 pub(crate) struct RvolHeader {
     pub width: usize,
     pub height: usize,
     pub depth: usize,
     /// width * height * depth (overflow-checked).
     pub voxels: usize,
+    /// Bits per voxel: 8 (`maxval 255`, one byte each) or 16 (`maxval
+    /// 65535`, big-endian pairs).
+    pub sample_bits: u32,
     /// Byte offset of the raster: exactly one whitespace byte separates
     /// the header from the data, same framing rule as P5 PGM.
     pub data_start: usize,
+}
+
+impl RvolHeader {
+    /// Raster bytes per voxel.
+    pub fn bytes_per_voxel(&self) -> usize {
+        (self.sample_bits / 8) as usize
+    }
 }
 
 pub(crate) fn parse_raw_header(buf: &[u8]) -> Result<RvolHeader> {
@@ -337,9 +371,11 @@ pub(crate) fn parse_raw_header(buf: &[u8]) -> Result<RvolHeader> {
     let height = dim("height", &mut pos)?;
     let depth = dim("depth", &mut pos)?;
     let maxval: usize = dim("maxval", &mut pos)?;
-    if maxval != 255 {
-        bail!("only 8-bit RVOL supported (maxval {maxval})");
-    }
+    let sample_bits = match maxval {
+        255 => 8,
+        65535 => 16,
+        _ => bail!("only 8- or 16-bit RVOL supported (maxval {maxval})"),
+    };
     let voxels = width
         .checked_mul(height)
         .and_then(|a| a.checked_mul(depth))
@@ -349,12 +385,18 @@ pub(crate) fn parse_raw_header(buf: &[u8]) -> Result<RvolHeader> {
         height,
         depth,
         voxels,
+        sample_bits,
         data_start: pos + 1,
     })
 }
 
 pub fn parse_raw(buf: &[u8]) -> Result<VoxelVolume> {
     let h = parse_raw_header(buf)?;
+    if h.sample_bits != 8 {
+        // VoxelVolume is a u8 field; 16-bit rasters are streaming-only
+        // (stream::RvolReader decodes them tile by tile).
+        bail!("only 8-bit RVOL supported in memory (maxval 65535 is streaming-only)");
+    }
     // `get` (not slicing) so a buffer that ends at the header is a
     // parse error, not a panic.
     let data = buf.get(h.data_start..).unwrap_or(&[]);

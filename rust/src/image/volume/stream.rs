@@ -84,9 +84,23 @@ pub trait VoxelSource {
     fn height(&self) -> usize;
     fn depth(&self) -> usize;
 
+    /// Bits per voxel sample: 8 (one raster byte per voxel) or 16
+    /// (big-endian byte pairs, the RVOL `maxval 65535` variant). The
+    /// tile consumer (`fcm::engine::stream::load_tile`) decodes;
+    /// everything below the trait moves raw bytes.
+    fn sample_bits(&self) -> u32 {
+        8
+    }
+
+    /// Raster bytes per voxel (`sample_bits / 8`).
+    fn bytes_per_voxel(&self) -> usize {
+        (self.sample_bits() / 8) as usize
+    }
+
     /// Copy slices `[z0, z0 + nz)` into `out` (z-major, each slice
-    /// row-major — the exact `VoxelVolume` layout). `out` must hold
-    /// exactly `nz * width * height` bytes.
+    /// row-major — the exact `VoxelVolume` layout; 16-bit sources fill
+    /// big-endian byte pairs per voxel). `out` must hold exactly
+    /// `nz * width * height * bytes_per_voxel()` bytes.
     fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()>;
 
     /// Whether this source carries an inclusion mask.
@@ -204,8 +218,16 @@ impl VoxelSource for GrayImage {
 
 /// Materialize any source as an in-memory [`VoxelVolume`] (mask
 /// included) — the adapter the non-streaming engines use to serve
-/// file-backed jobs they have no out-of-core path for.
+/// file-backed jobs they have no out-of-core path for. 8-bit sources
+/// only: [`VoxelVolume`] is a u8 field, so 16-bit data flows
+/// exclusively through the streamed engines.
 pub fn materialize(src: &mut dyn VoxelSource) -> Result<VoxelVolume> {
+    if src.sample_bits() != 8 {
+        bail!(
+            "cannot materialize a {}-bit source: 16-bit volumes are streaming-only",
+            src.sample_bits()
+        );
+    }
     let (w, h, d) = (src.width(), src.height(), src.depth());
     let mut voxels = vec![0u8; w * h * d];
     if d > 0 && w * h > 0 {
@@ -223,11 +245,11 @@ pub fn materialize(src: &mut dyn VoxelSource) -> Result<VoxelVolume> {
 }
 
 /// Parse an RVOL header from the front of a file without reading the
-/// raster: returns (file, width, height, depth, raster offset). The
-/// framing rules live in one place (`volume::parse_raw_header`, shared
-/// with the in-memory loader), so the streamed and materialized readers
-/// cannot drift apart on what counts as a valid file.
-fn open_rvol(path: &Path) -> Result<(File, usize, usize, usize, u64)> {
+/// raster: returns the file plus its parsed header. The framing rules
+/// live in one place (`volume::parse_raw_header`, shared with the
+/// in-memory loader), so the streamed and materialized readers cannot
+/// drift apart on what counts as a valid file.
+fn open_rvol(path: &Path) -> Result<(File, super::RvolHeader)> {
     let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
     // The header is a handful of ASCII tokens; 128 bytes is generous.
     let mut head = [0u8; 128];
@@ -241,62 +263,73 @@ fn open_rvol(path: &Path) -> Result<(File, usize, usize, usize, u64)> {
     }
     let h = super::parse_raw_header(&head[..got])
         .with_context(|| format!("parsing {}", path.display()))?;
-    let data_start = h.data_start as u64;
+    let raster_bytes = h.voxels * h.bytes_per_voxel();
     let file_len = file.metadata()?.len();
-    if file_len < data_start + h.voxels as u64 {
+    if file_len < h.data_start as u64 + raster_bytes as u64 {
         return Err(anyhow::Error::new(TruncatedRaster {
-            needed: h.voxels,
-            have: file_len.saturating_sub(data_start) as usize,
+            needed: raster_bytes,
+            have: file_len.saturating_sub(h.data_start as u64) as usize,
         })
         .context(format!("reading {}", path.display())));
     }
-    Ok((file, h.width, h.height, h.depth, data_start))
+    Ok((file, h))
 }
 
-/// Streams slabs out of an RVOL file: the whole volume is never
-/// resident. Optionally paired with a same-shape mask RVOL.
+/// Streams slabs out of an RVOL file (8-bit, or big-endian 16-bit —
+/// `maxval 65535`): the whole volume is never resident. Optionally
+/// paired with a same-shape 8-bit mask RVOL.
 pub struct RvolReader {
     file: File,
     width: usize,
     height: usize,
     depth: usize,
+    sample_bits: u32,
     data_start: u64,
     mask: Option<(File, u64)>,
 }
 
 impl RvolReader {
     pub fn open(path: &Path) -> Result<RvolReader> {
-        let (file, width, height, depth, data_start) = open_rvol(path)?;
+        let (file, h) = open_rvol(path)?;
         Ok(RvolReader {
             file,
-            width,
-            height,
-            depth,
-            data_start,
+            width: h.width,
+            height: h.height,
+            depth: h.depth,
+            sample_bits: h.sample_bits,
+            data_start: h.data_start as u64,
             mask: None,
         })
     }
 
     /// Open a voxel RVOL plus a sibling mask RVOL (0 = excluded voxel);
-    /// the shapes must match.
+    /// the shapes must match and the mask must be 8-bit.
     pub fn with_mask(path: &Path, mask_path: &Path) -> Result<RvolReader> {
         let mut r = RvolReader::open(path)?;
-        let (file, w, h, d, start) = open_rvol(mask_path)?;
-        if (w, h, d) != (r.width, r.height, r.depth) {
+        let (file, h) = open_rvol(mask_path)?;
+        if (h.width, h.height, h.depth) != (r.width, r.height, r.depth) {
             bail!(
-                "mask {} is {w}x{h}x{d}, volume is {}x{}x{}",
+                "mask {} is {}x{}x{}, volume is {}x{}x{}",
                 mask_path.display(),
+                h.width,
+                h.height,
+                h.depth,
                 r.width,
                 r.height,
                 r.depth
             );
         }
-        r.mask = Some((file, start));
+        if h.sample_bits != 8 {
+            bail!("mask {} must be 8-bit (0 = excluded)", mask_path.display());
+        }
+        r.mask = Some((file, h.data_start as u64));
         Ok(r)
     }
 
-    fn read_at(file: &mut File, start: u64, z0: usize, area: usize, out: &mut [u8]) -> Result<()> {
-        file.seek(SeekFrom::Start(start + (z0 * area) as u64))?;
+    /// Read raster bytes for slices `[z0, ...)`; `bps` = bytes per
+    /// slice (slice area × bytes per voxel).
+    fn read_at(file: &mut File, start: u64, z0: usize, bps: usize, out: &mut [u8]) -> Result<()> {
+        file.seek(SeekFrom::Start(start + (z0 * bps) as u64))?;
         match file.read_exact(out) {
             Ok(()) => Ok(()),
             // The file passed the open-time length check but shrank
@@ -305,7 +338,7 @@ impl RvolReader {
             Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
                 let have = file.metadata().map(|m| m.len().saturating_sub(start)).unwrap_or(0);
                 Err(anyhow::Error::new(TruncatedRaster {
-                    needed: z0 * area + out.len(),
+                    needed: z0 * bps + out.len(),
                     have: have as usize,
                 }))
             }
@@ -327,11 +360,15 @@ impl VoxelSource for RvolReader {
         self.depth
     }
 
+    fn sample_bits(&self) -> u32 {
+        self.sample_bits
+    }
+
     fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
-        let a = self.width * self.height;
+        let bps = self.width * self.height * self.bytes_per_voxel();
         ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
-        ensure!(out.len() == nz * a, "slab buffer size mismatch");
-        RvolReader::read_at(&mut self.file, self.data_start, z0, a, out)
+        ensure!(out.len() == nz * bps, "slab buffer size mismatch");
+        RvolReader::read_at(&mut self.file, self.data_start, z0, bps, out)
     }
 
     fn has_mask(&self) -> bool {
@@ -462,6 +499,7 @@ pub struct TilePrefetcher {
     width: usize,
     height: usize,
     depth: usize,
+    sample_bits: u32,
     has_mask: bool,
     current: Option<PrefetchTile>,
 }
@@ -469,15 +507,19 @@ pub struct TilePrefetcher {
 impl TilePrefetcher {
     pub fn new(inner: Box<dyn VoxelSource + Send>) -> TilePrefetcher {
         let (width, height, depth) = (inner.width(), inner.height(), inner.depth());
+        let sample_bits = inner.sample_bits();
         let has_mask = inner.has_mask();
-        let area = width * height;
+        // Voxel buffers are sized in raster bytes; masks stay one byte
+        // per voxel regardless of the sample width.
+        let vox_bps = width * height * inner.bytes_per_voxel();
+        let mask_bps = width * height;
         let (req_tx, req_rx) = std::sync::mpsc::channel::<(usize, usize)>();
         let (resp_tx, resp_rx) = std::sync::mpsc::channel::<PrefetchTile>();
         let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<PrefetchTile>();
         let handle = std::thread::Builder::new()
             .name("tile-prefetch".to_string())
             .spawn(move || {
-                prefetch_loop(inner, area, depth, has_mask, req_rx, resp_tx, recycle_rx)
+                prefetch_loop(inner, vox_bps, mask_bps, depth, has_mask, req_rx, resp_tx, recycle_rx)
             })
             .expect("spawning prefetch thread");
         TilePrefetcher {
@@ -488,6 +530,7 @@ impl TilePrefetcher {
             width,
             height,
             depth,
+            sample_bits,
             has_mask,
             current: None,
         }
@@ -548,14 +591,18 @@ impl VoxelSource for TilePrefetcher {
         self.depth
     }
 
+    fn sample_bits(&self) -> u32 {
+        self.sample_bits
+    }
+
     fn has_mask(&self) -> bool {
         self.has_mask
     }
 
     fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
-        let a = self.width * self.height;
+        let bps = self.width * self.height * self.bytes_per_voxel();
         ensure!(z0 + nz <= self.depth, "slab [{z0}, {}) out of range", z0 + nz);
-        ensure!(out.len() == nz * a, "slab buffer size mismatch");
+        ensure!(out.len() == nz * bps, "slab buffer size mismatch");
         out.copy_from_slice(&self.fetch(z0, nz)?.vox);
         Ok(())
     }
@@ -578,7 +625,8 @@ impl VoxelSource for TilePrefetcher {
 /// before blocking on the next request.
 fn prefetch_loop(
     mut inner: Box<dyn VoxelSource + Send>,
-    area: usize,
+    vox_bps: usize,
+    mask_bps: usize,
     depth: usize,
     has_mask: bool,
     req_rx: std::sync::mpsc::Receiver<(usize, usize)>,
@@ -595,7 +643,7 @@ fn prefetch_loop(
             missed => {
                 // Miss: read on demand, recycling whichever buffer is free.
                 let buf = missed.or_else(|| recycle_rx.try_recv().ok());
-                fill_tile(&mut *inner, z0, nz, area, has_mask, buf)
+                fill_tile(&mut *inner, z0, nz, vox_bps, mask_bps, has_mask, buf)
             }
         };
         if resp_tx.send(tile).is_err() {
@@ -620,7 +668,7 @@ fn prefetch_loop(
         };
         if let Some((pz0, pnz)) = pred {
             let buf = recycle_rx.try_recv().ok();
-            prefetched = Some(fill_tile(&mut *inner, pz0, pnz, area, has_mask, buf));
+            prefetched = Some(fill_tile(&mut *inner, pz0, pnz, vox_bps, mask_bps, has_mask, buf));
         }
     }
 }
@@ -630,7 +678,8 @@ fn fill_tile(
     inner: &mut dyn VoxelSource,
     z0: usize,
     nz: usize,
-    area: usize,
+    vox_bps: usize,
+    mask_bps: usize,
     has_mask: bool,
     buf: Option<PrefetchTile>,
 ) -> PrefetchTile {
@@ -638,10 +687,10 @@ fn fill_tile(
     t.z0 = z0;
     t.nz = nz;
     t.err = None;
-    t.vox.resize(nz * area, 0);
+    t.vox.resize(nz * vox_bps, 0);
     let mut res = inner.read_slab(z0, nz, &mut t.vox);
     if res.is_ok() && has_mask {
-        t.mask.resize(nz * area, 0);
+        t.mask.resize(nz * mask_bps, 0);
         res = inner.read_mask_slab(z0, nz, &mut t.mask);
     }
     t.err = res.err();
@@ -760,6 +809,10 @@ impl VoxelSource for FaultySource {
 
     fn depth(&self) -> usize {
         self.inner.depth()
+    }
+
+    fn sample_bits(&self) -> u32 {
+        self.inner.sample_bits()
     }
 
     fn has_mask(&self) -> bool {
@@ -1146,6 +1199,54 @@ mod tests {
         }
         // Materializing through the trait is the identity.
         assert_eq!(materialize(&mut r).unwrap(), v);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sixteen_bit_rvol_streams_as_big_endian_byte_pairs() {
+        let dir = std::env::temp_dir().join(format!("rvol_u16_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vox: Vec<u16> = (0..18).map(|i| (i * 3001) as u16).collect();
+        let path = dir.join("v16.rvol");
+        super::super::save_raw_u16(3, 2, 3, &vox, &path).unwrap();
+        let mut r = RvolReader::open(&path).unwrap();
+        assert_eq!((r.width(), r.height(), r.depth()), (3, 2, 3));
+        assert_eq!(VoxelSource::sample_bits(&r), 16);
+        assert_eq!(r.bytes_per_voxel(), 2);
+        let expect: Vec<u8> = vox.iter().flat_map(|v| v.to_be_bytes()).collect();
+        let bps = 6 * 2; // slice area x bytes per voxel
+        // Every tile size reproduces the exact big-endian byte stream.
+        for t in [1usize, 2, 5] {
+            let mut got = vec![0u8; expect.len()];
+            for (z0, nz) in tile_ranges(3, t) {
+                r.read_slab(z0, nz, &mut got[z0 * bps..(z0 + nz) * bps]).unwrap();
+            }
+            assert_eq!(got, expect, "tile {t}");
+        }
+        // The prefetcher sizes its buffers in raster bytes and stays
+        // transparent at two bytes per voxel.
+        let mut pf = TilePrefetcher::new(Box::new(RvolReader::open(&path).unwrap()));
+        assert_eq!(VoxelSource::sample_bits(&pf), 16);
+        for _ in 0..2 {
+            let mut got = vec![0u8; expect.len()];
+            for (z0, nz) in tile_ranges(3, 2) {
+                pf.read_slab(z0, nz, &mut got[z0 * bps..(z0 + nz) * bps]).unwrap();
+            }
+            assert_eq!(got, expect);
+        }
+        // A voxel-count-sized buffer is a size mismatch, not a partial read.
+        let mut short = vec![0u8; 6];
+        assert!(r.read_slab(0, 1, &mut short).is_err());
+        // VoxelVolume is a u8 field: 16-bit data never materializes.
+        let err = materialize(&mut r).unwrap_err();
+        assert!(err.to_string().contains("streaming-only"), "{err}");
+        // The open-time length check counts raster bytes, not voxels.
+        let trunc = dir.join("t16.rvol");
+        std::fs::write(&trunc, b"RVOL\n3 2 3\n65535\nshort").unwrap();
+        let err = RvolReader::open(&trunc).unwrap_err();
+        assert_eq!(err.downcast_ref::<TruncatedRaster>().unwrap().needed, 36);
+        // Masks carry 0/1 bytes: a 16-bit mask file is rejected.
+        assert!(RvolReader::with_mask(&path, &path).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -68,6 +68,12 @@ fn load_config(args: &Args) -> Result<Config> {
         cfg.set(&k, &v)?;
     }
     cfg.validate()?;
+    // The SIMD toggle is process-wide (the kernels are dispatched below
+    // the EngineOpts seam); only an explicit key overrides the
+    // REPRO_SIMD env default. Result-neutral either way.
+    if let Some(v) = cfg.engine.simd {
+        repro::fcm::engine::fused::set_simd(v);
+    }
     Ok(cfg)
 }
 
@@ -728,6 +734,8 @@ COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         --seed N --workers N --artifacts_dir DIR --set k=v,k=v
         --backend sequential|parallel|histogram  --engine_threads N
         --engine_chunk N --tile_slices N --prefetch true|false
+        --simd true|false (explicit-SIMD fused kernel; default on via
+        REPRO_SIMD env; results bit-identical either way)
         --batch_execute true|false
         --job-timeout MS (deadline per job; 0 = none)
         --max-retries N --resident-budget BYTES (admission budget;

@@ -88,6 +88,34 @@ fn parallel_bit_identical_for_1_2_8_workers() {
 }
 
 #[test]
+fn histogram_engine_matches_parallel_on_u16_features() {
+    // 16-bit intensities through the flat in-memory API: `domain`
+    // classifies the feature vector as U16 and the histogram engine
+    // runs 65 536 bins. From a shared u0, on well-separated integer
+    // data (band gaps ~15k, jitter < 900) it must land on exactly the
+    // slab engine's canonical labels, with centers tight on the
+    // 0..65535 scale.
+    let bands = [5000.0f32, 21000.0, 40000.0, 58000.0];
+    let x: Vec<f32> = (0..4096u64)
+        .map(|i| bands[(i % 4) as usize] + ((i * 2654435761) % 900) as f32)
+        .collect();
+    let w = vec![1.0f32; x.len()];
+    let params = FcmParams::default();
+    let u0 = init_membership(params.clusters, x.len(), params.seed);
+    let mut par = engine::run_from(&x, &w, u0.clone(), &params, &opts(Backend::Parallel, 2));
+    let mut hist = engine::run_from(&x, &w, u0, &params, &opts(Backend::Histogram, 1));
+    canonical_relabel(&mut par);
+    canonical_relabel(&mut hist);
+    assert!(par.converged && hist.converged);
+    assert_eq!(hist.labels, par.labels, "u16 labels diverged from the slab engine");
+    for (a, b) in hist.centers.iter().zip(&par.centers) {
+        // ~2e-5 of the intensity range: binning is exact on integer
+        // data, only the bin-averaged u0 perturbs the trajectory.
+        assert!((a - b).abs() < 1.5, "{:?} vs {:?}", hist.centers, par.centers);
+    }
+}
+
+#[test]
 fn chunk_size_changes_stay_within_tolerance() {
     // Chunking changes summation order (fp rounding), not semantics.
     let fv = slice_features(4);

@@ -9,9 +9,12 @@ derived from the engines' defined arithmetic, not from whatever binary
 happened to be lying around. Every operation below reproduces the Rust
 code's IEEE semantics exactly: f32 storage rounding (np.float32), f64
 accumulators (python floats), the xoshiro256++ init stream, the fixed
-per-slice partial grid + pairwise z-order tree reduction, and the m=2 /
-p=q=1 fast paths (no libm powf anywhere on the default-parameter
-paths). On top of bit-exactness, generation asserts wide safety margins
+per-slice partial grid + pairwise z-order tree reduction, the
+lane-major fused sigma accumulation (pixel k of a chunk feeds logical
+lane k % LANES; lane partials fold in fixed lane order at chunk end —
+fcm::engine::fused's SIMD-era contract), and the m=2 / p=q=1 fast
+paths (no libm powf anywhere on the default-parameter paths). On top
+of bit-exactness, generation asserts wide safety margins
 (distance to the ZERO_TOL singularity, to the epsilon convergence
 boundary, and argmax label margins), so the committed labels are stable
 far beyond last-ulp concerns.
@@ -29,6 +32,9 @@ f32 = np.float32
 M64 = (1 << 64) - 1
 ZERO_TOL = 1e-12
 DEN_EPS = 1e-12
+# fused::LANES — the fixed logical accumulation lane count (a numerical
+# constant shared by the scalar and AVX kernels, not a hardware width).
+LANES = 4
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 
@@ -151,15 +157,38 @@ def membership_row(xi, w_i, centers, c):
     return vals, d2
 
 
+def fold_lanes(num, den, jm, delta, c):
+    """fused::LaneAcc::fold — collapse the per-lane f64 partials in
+    fixed lane order 0..LANES (each sum a left fold from +0.0)."""
+    out_num = []
+    out_den = []
+    for j in range(c):
+        nj = 0.0
+        dj = 0.0
+        for l in range(LANES):
+            nj += num[j][l]
+            dj += den[j][l]
+        out_num.append(nj)
+        out_den.append(dj)
+    jt = 0.0
+    for l in range(LANES):
+        jt += jm[l]
+    return {"num": out_num, "den": out_den, "jm": jt, "delta": delta}
+
+
 def fused_slice(x64, w, u_old, centers, u_new, start, length, c):
-    """fused::fused_chunk over [start, start+length): writes u_new
-    columns, returns PassPartial (num, den, jm, delta)."""
-    num = [0.0] * c
-    den = [0.0] * c
-    jm = 0.0
+    """fused::fused_chunk over [start, start+length): lane-major sigma
+    accumulation (pixel k -> lane k % LANES, serial f64 per lane, fixed
+    lane-order fold at chunk end — identical for the scalar and AVX
+    kernels). Writes u_new columns, returns PassPartial
+    (num, den, jm, delta)."""
+    num = [[0.0] * LANES for _ in range(c)]
+    den = [[0.0] * LANES for _ in range(c)]
+    jm = [0.0] * LANES
     delta = f32(0.0)
     for k in range(length):
         i = start + k
+        lane = k % LANES
         vals, d2 = membership_row(x64[i], w[i], centers, c)
         for j in range(c):
             val = vals[j]
@@ -170,10 +199,10 @@ def fused_slice(x64, w, u_old, centers, u_new, start, length, c):
             vf = float(val)
             um = vf * vf
             wu = float(w[i]) * um
-            num[j] += wu * x64[i]
-            den[j] += wu
-            jm += wu * d2[j]
-    return {"num": num, "den": den, "jm": jm, "delta": delta}
+            num[j][lane] += wu * x64[i]
+            den[j][lane] += wu
+            jm[lane] += wu * d2[j]
+    return fold_lanes(num, den, jm, delta, c)
 
 
 def centers_slice(x64, w, u, start, length, c):
@@ -326,34 +355,67 @@ def update_centers(x64, w, u, centers, c):
         centers[j] = f32(num / max(den, DEN_EPS))
 
 
-def run_histogram_volume(vox, w, area, params):
-    """engine::volume::run_histogram: exact integer counts, centers_1
-    from the full voxel-level u_0, bin-level iterations."""
+def fused_bins(xb64, wb, u_bin, centers, u_new, occupied, c):
+    """fused::fused_chunk over one whole bin axis (the bin_iterations
+    call: start 0, length = levels), restricted to occupied bins. Bin b
+    keeps lane slot b % LANES — its chunk position — and every empty
+    bin is an exact no-op (wi = 0 makes its stored value +0.0, its
+    delta 0, and its wu terms +0.0, which add exactly nothing to the
+    non-negative lane accumulators), so skipping them is bit-neutral.
+    This is what makes the 65 536-bin mirror tractable in Python."""
+    num = [[0.0] * LANES for _ in range(c)]
+    den = [[0.0] * LANES for _ in range(c)]
+    jm = [0.0] * LANES
+    delta = f32(0.0)
+    for b in occupied:
+        lane = b % LANES
+        vals, d2 = membership_row(xb64[b], wb[b], centers, c)
+        for j in range(c):
+            val = vals[j]
+            diff = abs(val - u_bin[j, b])
+            if diff > delta:
+                delta = diff
+            u_new[j, b] = val
+            vf = float(val)
+            um = vf * vf
+            wu = float(wb[b]) * um
+            num[j][lane] += wu * xb64[b]
+            den[j][lane] += wu
+            jm[lane] += wu * d2[j]
+    return fold_lanes(num, den, jm, delta, c)
+
+
+def run_histogram_volume(vox, w, area, params, levels=256):
+    """engine::volume::run_histogram (and its streamed twin): exact
+    integer counts, centers_1 from the full voxel-level u_0, bin-level
+    iterations. `levels` is 256 for 8-bit rasters, 65536 for the 16-bit
+    RVOL path (engine::stream::hist_streamed sizes bins from
+    VoxelSource::sample_bits)."""
     c, eps, max_iters, seed = params["c"], params["eps"], params["max_iters"], params["seed"]
     n = len(vox)
     x64 = [float(v) for v in vox]
     u0 = init_membership_masked(c, w, seed)
-    counts = [0] * 256
+    counts = [0] * levels
     for i, v in enumerate(vox):
         if w[i] > 0.0:
             counts[v] += 1
-    xb64 = [float(b) for b in range(256)]
+    occ = [b for b in range(levels) if counts[b] > 0]
+    xb64 = [float(b) for b in range(levels)]
     wb = np.array([f32(cnt) for cnt in counts], dtype=np.float32)
     slices = [(s, area) for s in range(0, n, area)]
     parts = [centers_slice(x64, w, u0, s, l, c) for s, l in slices]
     centers = part_centers(tree_reduce(parts), c)
-    u_bin = np.zeros((c, 256), dtype=np.float32)
+    u_bin = np.zeros((c, levels), dtype=np.float32)
     for j in range(c):
-        sums = [0.0] * 256
+        sums = [0.0] * levels
         for i, v in enumerate(vox):
             sums[v] += float(u0[j, i])
-        for b in range(256):
-            if counts[b] > 0:
-                u_bin[j, b] = f32(sums[b] / counts[b])
+        for b in occ:
+            u_bin[j, b] = f32(sums[b] / counts[b])
     u_new = np.zeros_like(u_bin)
     converged = False
     for it in range(max_iters):
-        part = fused_slice(xb64, wb, u_bin, centers, u_new, 0, 256, c)
+        part = fused_bins(xb64, wb, u_bin, centers, u_new, occ, c)
         u_bin, u_new = u_new, u_bin
         track_delta(part["delta"], eps)
         if part["delta"] < f32(eps):
@@ -362,13 +424,12 @@ def run_histogram_volume(vox, w, area, params):
         if it + 1 < max_iters:
             centers = part_centers(part, c)
     assert converged, "histogram mirror did not converge"
-    bin_labels = defuzzify(u_bin, c, 256)
+    bin_labels = defuzzify(u_bin, c, levels)
     _, rank = canonical_rank(centers)
     labels = np.zeros(n, dtype=np.uint8)
     for i, v in enumerate(vox):
         labels[i] = rank[bin_labels[v]] if w[i] > 0.0 else 0
     # Label margins at bin level, occupied bins only.
-    occ = [b for b in range(256) if counts[b] > 0]
     track_labels(u_bin[:, occ])
     return labels
 
@@ -472,6 +533,21 @@ def fixture_volume(gw, gh, d):
     return vox
 
 
+def fixture_volume16(gw, gh, d):
+    """16-bit sibling of fixture_volume: four bands deep in the u16
+    range (gaps ~15k >> jitter <900) so every engine lands on the same
+    labels and all margin gates hold with room to spare."""
+    base = [5000, 21000, 40000, 58000]
+    vox = []
+    for z in range(d):
+        for y in range(gh):
+            for x in range(gw):
+                cls = ((x // 2) + (y // 2) + z) % 4
+                jit = (311 * x + 521 * y + 737 * z) % 900
+                vox.append(base[cls] + jit)
+    return vox
+
+
 def fixture_mask(gw, gh, d):
     mask = []
     for z in range(d):
@@ -520,6 +596,14 @@ def write_rvol(path, gw, gh, d, data):
     with open(path, "wb") as f:
         f.write(f"RVOL\n{gw} {gh} {d}\n255\n".encode())
         f.write(bytes(data))
+
+
+def write_rvol16(path, gw, gh, d, data):
+    """16-bit RVOL: maxval 65535, big-endian two-byte raster samples
+    (image::volume::save_raw_u16 / RvolReader's streaming-only path)."""
+    with open(path, "wb") as f:
+        f.write(f"RVOL\n{gw} {gh} {d}\n65535\n".encode())
+        f.write(b"".join(int(v).to_bytes(2, "big") for v in data))
 
 
 def write_pgm(path, gw, gh, data):
@@ -573,6 +657,17 @@ def main():
         "stack_parallel.labels",
         volume_labels(run_parallel_volume, stack_vox, [1] * len(stack_vox), gw, gh, 3, params),
     )
+
+    print("16-bit volume (streaming-only engines):")
+    vox16 = fixture_volume16(gw, gh, d)
+    write_rvol16(os.path.join(HERE, "vol16.rvol"), gw, gh, d, vox16)
+    p16 = volume_labels(run_parallel_volume, vox16, all_real, gw, gh, d, params)
+    h16 = run_histogram_volume(vox16, weights(all_real), area, params, levels=65536)
+    write_labels("parallel_u16.labels", p16)
+    write_labels("histogram_u16.labels", h16)
+    # The wide-bin histogram engine must land on the slab engine's
+    # segmentation (a streaming.rs gate on this same fixture).
+    assert np.array_equal(p16, h16), "u16 histogram labels diverge from the slab engine"
 
     print(f"margins: {MARGINS}")
     # The singularity branch triggers at d2 <= 1e-12, i.e. |d| <= 1e-6.

@@ -20,7 +20,7 @@ mod common;
 
 use repro::coordinator::{backend_for, Engine};
 use repro::fcm::{EngineOpts, FcmParams};
-use repro::image::volume::stream::{PgmStackSource, RvolReader, TilePrefetcher};
+use repro::image::volume::stream::{PgmStackSource, RvolReader, TilePrefetcher, VoxelSource};
 use repro::image::{volume, VoxelVolume};
 use std::path::{Path, PathBuf};
 
@@ -151,6 +151,73 @@ fn golden_file_backed_stream_matches_fixtures() {
             "{engine:?} file-backed prefetched stream"
         );
     }
+}
+
+#[test]
+fn golden_u16_streamed_engines_match_fixtures() {
+    // The 16-bit RVOL is streaming-only (parse_raw rejects it in
+    // memory): the slab and wide-bin (65 536) histogram engines read it
+    // through RvolReader and must land on the mirror's committed
+    // labels, for any tile size, with and without the prefetcher.
+    if blessing() {
+        return;
+    }
+    let params = FcmParams::default();
+    let vp = fixtures().join("vol16.rvol");
+    for (engine, name) in [
+        (Engine::Parallel, "parallel_u16.labels"),
+        (Engine::Histogram, "histogram_u16.labels"),
+    ] {
+        let backend = backend_for(engine, None, &opts()).unwrap();
+        let want = expected(name);
+        for tile in [1usize, 2, 6] {
+            let mut src: Box<dyn VoxelSource + Send> = if tile % 2 == 0 {
+                Box::new(TilePrefetcher::wrap(RvolReader::open(&vp).unwrap()))
+            } else {
+                Box::new(RvolReader::open(&vp).unwrap())
+            };
+            let mut sink = Vec::new();
+            backend
+                .segment_volume_streamed(&mut *src, &mut sink, &params, tile)
+                .unwrap();
+            assert_eq!(sink, want, "{engine:?} u16 tile {tile}");
+        }
+    }
+}
+
+#[test]
+fn golden_simd_toggle_is_result_neutral() {
+    // The scalar and vector kernels are bit-identical by contract;
+    // prove it end-to-end by running the whole engine set against the
+    // fixtures with the vector kernel forced off, then forced on. The
+    // toggle is process-global but result-neutral, so flipping it here
+    // cannot perturb concurrently running tests.
+    if blessing() {
+        return;
+    }
+    let params = FcmParams::default();
+    for simd in [false, true] {
+        repro::fcm::engine::fused::set_simd(simd);
+        for masked in [false, true] {
+            let vol = fixture_volume(masked);
+            for (engine, name) in ENGINES {
+                let backend = backend_for(engine, None, &opts()).unwrap();
+                let out = backend.segment_volume(&vol, &params).unwrap();
+                assert_eq!(
+                    out.labels,
+                    expected(&label_file(name, masked)),
+                    "{engine:?} masked {masked} simd {simd}"
+                );
+            }
+        }
+    }
+    // Hand the process back to the env-resolved default (the CI
+    // simd-matrix leg pins REPRO_SIMD for the whole test binary).
+    let default_on = match std::env::var("REPRO_SIMD") {
+        Ok(v) => !(v == "0" || v.eq_ignore_ascii_case("false") || v.eq_ignore_ascii_case("off")),
+        Err(_) => true,
+    };
+    repro::fcm::engine::fused::set_simd(default_on);
 }
 
 #[test]

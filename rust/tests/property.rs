@@ -413,6 +413,97 @@ fn prop_rvol_parser_rejects_corruption_cleanly() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+fn assert_partial_bits(a: &repro::fcm::engine::fused::PassPartial, b: &repro::fcm::engine::fused::PassPartial, what: &str) {
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.num), bits(&b.num), "{what}: num bits");
+    assert_eq!(bits(&a.den), bits(&b.den), "{what}: den bits");
+    assert_eq!(a.jm.to_bits(), b.jm.to_bits(), "{what}: jm bits");
+    assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "{what}: delta bits");
+}
+
+/// The per-iteration LUT path stores and accumulates exactly what the
+/// direct path would, on both integer domains, for the m=2 fast path
+/// and the powf path — including masked pixels and an exact
+/// center-collision singularity.
+#[test]
+fn prop_fused_lut_is_bit_identical_to_direct() {
+    use repro::fcm::engine::fused::{
+        fused_chunk_scalar, fused_chunk_scalar_ctx, FusedCtx, IntensityDomain,
+    };
+    for_all_seeds(5, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x1007);
+        for (domain, levels) in [(IntensityDomain::U8, 256usize), (IntensityDomain::U16, 1 << 16)]
+        {
+            for m in [2.0f64, 2.5] {
+                let n = 300 + rng.below(1200) as usize;
+                let c = 2 + rng.below(4) as usize;
+                let x: Vec<f32> = (0..n).map(|_| rng.below(levels as u64) as f32).collect();
+                let w: Vec<f32> = (0..n)
+                    .map(|_| if rng.below(8) == 0 { 0.0 } else { 1.0 })
+                    .collect();
+                let u_old = repro::fcm::init_membership_masked(c, &w, seed);
+                let mut centers: Vec<f32> =
+                    (0..c).map(|_| rng.uniform(0.0, (levels - 1) as f32)).collect();
+                centers[0] = x[0]; // exact collision: the singularity split
+                // Pass `levels` as the workload so the build gate opens
+                // (the gate is performance-only; results are identical).
+                let ctx = FusedCtx::build(domain, &centers, m, levels).expect("ctx");
+                let mut u_direct = vec![0f32; c * n];
+                let p_direct = {
+                    let mut rows: Vec<&mut [f32]> = u_direct.chunks_mut(n).collect();
+                    fused_chunk_scalar(&x, &w, &u_old, n, &centers, m, 0, &mut rows)
+                };
+                let mut u_lut = vec![0f32; c * n];
+                let p_lut = {
+                    let mut rows: Vec<&mut [f32]> = u_lut.chunks_mut(n).collect();
+                    fused_chunk_scalar_ctx(&ctx, &x, &w, &u_old, n, 0, &mut rows)
+                };
+                assert_eq!(u_lut, u_direct, "{domain:?} m={m}: LUT memberships drifted");
+                assert_partial_bits(&p_lut, &p_direct, &format!("{domain:?} m={m}"));
+            }
+        }
+    });
+}
+
+/// The vector kernel equals the scalar kernel bit-for-bit for every
+/// chunk length and offset — ragged tails land in the same lane slots
+/// the scalar kernel uses, so the lane fold sees identical addends.
+#[test]
+fn prop_simd_ragged_tails_reduce_identically_to_scalar() {
+    use repro::fcm::engine::fused::{fused_chunk_scalar, fused_chunk_simd};
+    for_all_seeds(12, |seed| {
+        let mut rng = Rng64::new(seed ^ 0x51D3);
+        let n = 2 + rng.below(530) as usize;
+        let c = 2 + rng.below(4) as usize;
+        let x = random_intensities(&mut rng, n);
+        let w: Vec<f32> = (0..n)
+            .map(|_| if rng.below(6) == 0 { 0.0 } else { 1.0 })
+            .collect();
+        let u_old = repro::fcm::init_membership_masked(c, &w, seed);
+        let centers: Vec<f32> = (0..c).map(|_| rng.uniform(5.0, 250.0)).collect();
+        let start = rng.below(n as u64) as usize;
+        for m in [2.0f64, 2.5] {
+            let mut u_s = vec![0f32; c * n];
+            let p_s = {
+                let mut rows: Vec<&mut [f32]> =
+                    u_s.chunks_mut(n).map(|r| &mut r[start..]).collect();
+                fused_chunk_scalar(&x, &w, &u_old, n, &centers, m, start, &mut rows)
+            };
+            let mut u_v = vec![0f32; c * n];
+            let p_v = {
+                let mut rows: Vec<&mut [f32]> =
+                    u_v.chunks_mut(n).map(|r| &mut r[start..]).collect();
+                fused_chunk_simd(&x, &w, &u_old, n, &centers, m, start, &mut rows)
+            };
+            let Some(p_v) = p_v else {
+                return; // no AVX on this host: nothing to compare
+            };
+            assert_eq!(u_v, u_s, "m={m} start={start}: SIMD memberships drifted");
+            assert_partial_bits(&p_v, &p_s, &format!("m={m} start={start} len={}", n - start));
+        }
+    });
+}
+
 #[test]
 fn prop_skullstrip_mask_is_subset_of_threshold() {
     for_all_seeds(6, |seed| {

@@ -14,6 +14,9 @@
 //! * masked (skull-stripped) volumes through the paired-file reader;
 //! * [`TilePrefetcher`] transparency (prefetch reorders I/O only) and
 //!   [`PgmStackSource`] streaming through the same seam;
+//! * the 16-bit RVOL raster (PR 7): u8-valued wide files bit-identical
+//!   to the u8 files, 65 536-bin work/memory accounting, the wide
+//!   tile/thread matrix, and masked u16 sentinels;
 //! * streamed volume jobs end-to-end through the service, including
 //!   concurrent-job high-water metrics and error propagation.
 
@@ -21,8 +24,9 @@ mod common;
 
 use repro::config::Config;
 use repro::coordinator::{backend_for, Engine, Service, StreamVolumeJob};
+use repro::fcm::engine::stream::{estimated_peak_resident_bytes_wide, run_streamed, StreamOpts};
 use repro::fcm::spatial::SpatialParams;
-use repro::fcm::{EngineOpts, FcmParams};
+use repro::fcm::{Backend, EngineOpts, FcmParams};
 use repro::image::volume::stream::{
     materialize, LabelScaler, PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
 };
@@ -217,6 +221,190 @@ fn masked_rvol_streams_through_the_paired_reader() {
                 assert_eq!(l, 0, "{engine:?}: masked voxel {i} lost the sentinel");
             }
         }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Spread an 8-bit phantom across the full 16-bit range with a small
+/// deterministic per-voxel jitter, so thousands of distinct levels are
+/// genuinely occupied — a real wide-histogram workload, not 256 levels
+/// renamed.
+fn wide_voxels(vol: &VoxelVolume) -> Vec<u16> {
+    vol.voxels
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v as u16 * 256 + (i % 251) as u16)
+        .collect()
+}
+
+#[test]
+fn u16_rvol_with_u8_values_streams_bit_identical_to_the_u8_file() {
+    // Decode/equivalence gate for the 16-bit raster: a wide file whose
+    // samples all fit in 8 bits must land on exactly the u8 file's
+    // bytes for both wide paths — the tile engines see the identical
+    // f32 mirror, and the 65 536-bin histogram's extra bins carry zero
+    // weight (exact no-ops in the fused pass, see DESIGN.md). Only the
+    // histogram work counter may differ: the bin axis widens to 65 536.
+    let vol = phantom_rvol(29, 31, 9);
+    let dir = tmp_dir("u16_narrow");
+    let p8 = dir.join("v8.rvol");
+    let p16 = dir.join("v16.rvol");
+    volume::save_raw(&vol, &p8).unwrap();
+    let as_u16: Vec<u16> = vol.voxels.iter().map(|&v| v as u16).collect();
+    volume::save_raw_u16(vol.width, vol.height, vol.depth, &as_u16, &p16).unwrap();
+    let params = FcmParams::default();
+    for backend in [Backend::Parallel, Backend::Histogram] {
+        let opts = StreamOpts {
+            backend,
+            threads: 2,
+            tile_slices: 3,
+        };
+        let mut sink8 = Vec::new();
+        let out8 =
+            run_streamed(&mut RvolReader::open(&p8).unwrap(), &mut sink8, &params, &opts).unwrap();
+        let mut sink16 = Vec::new();
+        let out16 = run_streamed(&mut RvolReader::open(&p16).unwrap(), &mut sink16, &params, &opts)
+            .unwrap();
+        assert_eq!(sink16, sink8, "{backend:?}: labels diverged across sample widths");
+        assert_eq!(out16.centers, out8.centers, "{backend:?}");
+        assert_eq!(out16.iterations, out8.iterations, "{backend:?}");
+        assert_eq!(out16.jm_history, out8.jm_history, "{backend:?}");
+        if matches!(backend, Backend::Histogram) {
+            assert_eq!(out8.work_per_iter, 256);
+            assert_eq!(out16.work_per_iter, 1 << 16);
+        } else {
+            assert_eq!(out8.work_per_iter, vol.len());
+            assert_eq!(out16.work_per_iter, vol.len());
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn wide_histogram_work_and_memory_are_level_and_tile_bounded() {
+    // Genuinely 16-bit volumes (thousands of occupied levels) at two
+    // depths: the histogram path's per-iteration work is the 65 536-bin
+    // axis for both — independent of voxel count — and for both wide
+    // paths the measured peak resident bytes equal the 2-byte-raster
+    // estimator exactly and depend on the tile, not the depth.
+    let dir = tmp_dir("u16_work");
+    let params = FcmParams::default();
+    for backend in [Backend::Histogram, Backend::Parallel] {
+        let opts = StreamOpts {
+            backend,
+            threads: 0,
+            tile_slices: 4,
+        };
+        let mut peaks = Vec::new();
+        for depth in [6usize, 18] {
+            let vol = phantom_rvol(27, 29, depth);
+            let path = dir.join(format!("v{depth}_{backend:?}.rvol"));
+            volume::save_raw_u16(vol.width, vol.height, vol.depth, &wide_voxels(&vol), &path)
+                .unwrap();
+            let mut src = RvolReader::open(&path).unwrap();
+            assert_eq!(src.sample_bits(), 16);
+            let mut sink = Vec::new();
+            let out = run_streamed(&mut src, &mut sink, &params, &opts).unwrap();
+            assert_eq!(sink.len(), vol.len());
+            assert_eq!(out.voxels, vol.len());
+            if matches!(backend, Backend::Histogram) {
+                assert_eq!(out.work_per_iter, 1 << 16, "work must track levels, not voxels");
+            } else {
+                assert_eq!(out.work_per_iter, vol.len());
+            }
+            assert_eq!(
+                out.peak_resident_bytes,
+                estimated_peak_resident_bytes_wide(
+                    vol.width * vol.height,
+                    depth,
+                    params.clusters,
+                    2,
+                    &opts
+                ),
+                "{backend:?} depth {depth}: estimator drifted from the measured peak"
+            );
+            peaks.push(out.peak_resident_bytes);
+        }
+        assert_eq!(peaks[0], peaks[1], "{backend:?}: peak must depend on the tile, not depth");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn wide_u16_stream_bit_identical_across_tiles_and_threads() {
+    // The thread/tile matrix for the wide raster: each engine must be
+    // bit-identical to itself across tile sizes {1, 3, 17} x threads
+    // {1, 2, 8} — the fixed lane-major reduction order, exactly as for
+    // u8. There is no in-memory u16 reference (the raster is
+    // streaming-only), so the pin is this self-consistency matrix plus
+    // the golden u16 fixtures.
+    let vol = phantom_rvol(25, 27, 10);
+    let dir = tmp_dir("u16_matrix");
+    let path = dir.join("v.rvol");
+    volume::save_raw_u16(vol.width, vol.height, vol.depth, &wide_voxels(&vol), &path).unwrap();
+    let params = FcmParams::default();
+    for backend in [Backend::Parallel, Backend::Histogram] {
+        let mut reference: Option<(Vec<u8>, Vec<f32>, usize)> = None;
+        for threads in [1usize, 2, 8] {
+            for tile in [1usize, 3, 17] {
+                let opts = StreamOpts {
+                    backend,
+                    threads,
+                    tile_slices: tile,
+                };
+                let mut src = RvolReader::open(&path).unwrap();
+                let mut sink = Vec::new();
+                let out = run_streamed(&mut src, &mut sink, &params, &opts).unwrap();
+                match &reference {
+                    None => reference = Some((sink, out.centers, out.iterations)),
+                    Some((labels, centers, iterations)) => {
+                        assert_eq!(&sink, labels, "{backend:?} t={threads} tile={tile}");
+                        assert_eq!(&out.centers, centers, "{backend:?} t={threads} tile={tile}");
+                        assert_eq!(out.iterations, *iterations, "{backend:?} t={threads}");
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn masked_u16_stream_pins_the_sentinel() {
+    // A 16-bit volume paired with an 8-bit mask RVOL: excluded voxels
+    // come out as the 0 sentinel for both wide paths.
+    let vol = phantom_rvol(23, 25, 6);
+    let mut mask = vec![1u8; vol.len()];
+    for i in (0..mask.len()).step_by(5) {
+        mask[i] = 0;
+    }
+    let dir = tmp_dir("u16_mask");
+    let vp = dir.join("v.rvol");
+    let mp = dir.join("m.rvol");
+    volume::save_raw_u16(vol.width, vol.height, vol.depth, &wide_voxels(&vol), &vp).unwrap();
+    volume::save_raw(
+        &VoxelVolume::from_voxels(vol.width, vol.height, vol.depth, mask.clone()),
+        &mp,
+    )
+    .unwrap();
+    let params = FcmParams::default();
+    for backend in [Backend::Parallel, Backend::Histogram] {
+        let mut src = RvolReader::with_mask(&vp, &mp).unwrap();
+        assert_eq!(src.bytes_per_voxel(), 2);
+        assert!(src.has_mask());
+        let mut sink = Vec::new();
+        let opts = StreamOpts {
+            backend,
+            ..StreamOpts::default()
+        };
+        run_streamed(&mut src, &mut sink, &params, &opts).unwrap();
+        assert_eq!(sink.len(), vol.len());
+        for (i, (&l, &mk)) in sink.iter().zip(&mask).enumerate() {
+            if mk == 0 {
+                assert_eq!(l, 0, "{backend:?}: masked voxel {i} lost the sentinel");
+            }
+        }
+        assert!(sink.iter().any(|&l| l > 0), "{backend:?}: all labels zero");
     }
     std::fs::remove_dir_all(&dir).unwrap();
 }
