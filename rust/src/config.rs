@@ -140,6 +140,11 @@ pub struct ServiceConfig {
     /// submissions wait briefly for capacity, then come back as typed
     /// `Rejected` errors.
     pub resident_budget_bytes: usize,
+    /// Period (ms) between metrics expositions while `serve` runs: each
+    /// tick dumps the Prometheus text form of the current
+    /// [`crate::coordinator::Snapshot`] to stderr. 0 (default) disables
+    /// the periodic dump (the shutdown dump always runs).
+    pub metrics_interval_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -156,6 +161,7 @@ impl Default for ServiceConfig {
             max_retries: 2,
             retry_backoff_ms: 50,
             resident_budget_bytes: 0,
+            metrics_interval_ms: 0,
         }
     }
 }
@@ -195,6 +201,7 @@ pub const KEYS: &[&str] = &[
     "max_retries",
     "retry_backoff_ms",
     "resident_budget_bytes",
+    "metrics_interval_ms",
     "artifacts_dir",
 ];
 
@@ -261,6 +268,7 @@ impl Config {
             "max_retries" => self.service.max_retries = parse(key, v)?,
             "retry_backoff_ms" => self.service.retry_backoff_ms = parse(key, v)?,
             "resident_budget_bytes" => self.service.resident_budget_bytes = parse(key, v)?,
+            "metrics_interval_ms" => self.service.metrics_interval_ms = parse(key, v)?,
             "artifacts_dir" => self.artifacts_dir = v.trim_matches('"').to_string(),
             _ => bail!("unknown config key {key:?}"),
         }
@@ -399,6 +407,11 @@ mod tests {
         assert_eq!(d.service.job_timeout_ms, 0);
         assert_eq!(d.service.max_retries, 2);
         assert_eq!(d.service.resident_budget_bytes, 0);
+        // Metrics exposition: off by default, plain u64 period.
+        assert_eq!(d.service.metrics_interval_ms, 0);
+        let e = Config::from_str("metrics_interval_ms = 250\n").unwrap();
+        assert_eq!(e.service.metrics_interval_ms, 250);
+        assert!(Config::from_str("metrics_interval_ms = fast\n").is_err());
         // Nonsense values: negative timeouts/budgets fail the unsigned
         // parse; a zero backoff with retries enabled fails validation.
         assert!(Config::from_str("job_timeout_ms = -5\n").is_err());

@@ -3,8 +3,10 @@
 use super::fault::{AdmissionPermit, CancelToken};
 use crate::fcm::FcmParams;
 use crate::image::{FaultPlan, FeatureVector};
+use crate::obs::TraceLog;
 use crate::runtime::DeviceStats;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Engine used to serve a job.
@@ -147,6 +149,10 @@ pub struct SegmentJob {
     /// dropping the job (after serving, or on shutdown) releases its
     /// resident-byte reservation.
     pub permit: Option<AdmissionPermit>,
+    /// Per-job trace: the submitter, the worker, and the ticket holder
+    /// all record/read through this shared bounded log (the ticket keeps
+    /// a clone, so the trace outlives the job).
+    pub trace: Arc<TraceLog>,
     pub respond: mpsc::Sender<anyhow::Result<JobResult>>,
 }
 
@@ -205,6 +211,7 @@ mod tests {
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,
+            trace: Arc::new(TraceLog::new(1, 8)),
             respond: tx,
         }
     }

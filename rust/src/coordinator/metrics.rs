@@ -1,18 +1,42 @@
-//! Service metrics: lock-free counters + time accumulators.
+//! Service metrics: lock-free counters, nanosecond-exact accumulators,
+//! and log-bucketed latency histograms with exact p50/p95/p99/max.
+//!
+//! Everything on the recording side is relaxed atomics (see
+//! [`crate::obs::hist::LatencyHist`]) — safe to call from workers and
+//! submitters without coordination. Time is accumulated in integer
+//! nanoseconds taken from [`std::time::Duration`], never via float
+//! microsecond truncation (a `(secs * 1e6) as u64` round-trip loses
+//! sub-µs accumulation on fast histogram-path batches; pinned by
+//! `mean_batch_latency_is_nanosecond_exact` below).
 
 use super::job::Engine;
+use crate::obs::span::{EngineProfile, Stage};
+use crate::obs::{Exposition, LatencyHist, LatencyStats};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+fn dur_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
 
 /// Per-engine batch accounting (one slot per [`Engine::ALL`] entry).
 #[derive(Debug, Default)]
 struct EngineCounters {
     batches: AtomicU64,
     jobs: AtomicU64,
-    /// Batch wall-time accumulator (microseconds).
-    batch_us: AtomicU64,
+    /// Batch wall-time accumulator (exact nanoseconds).
+    batch_ns: AtomicU64,
 }
 
-/// Shared metrics; all methods are thread-safe.
+/// Exact per-stage aggregate (one slot per [`Stage::ALL`] entry).
+#[derive(Debug, Default)]
+struct StageAgg {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+/// Shared metrics; all methods are thread-safe and lock-free.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
@@ -30,15 +54,26 @@ pub struct Metrics {
     /// succeeds on its 3rd attempt adds 2 here and 1 to `completed`).
     pub retried: AtomicU64,
     pub batches: AtomicU64,
-    /// Microsecond accumulators (atomics hold integers).
-    queue_wait_us: AtomicU64,
-    service_us: AtomicU64,
+    /// Completed-job iteration accumulator.
     iterations: AtomicU64,
     /// Streamed (out-of-core) volume runs served.
     streamed_runs: AtomicU64,
     /// High-water mark of peak-resident-tile-bytes across streamed runs
     /// — the serving layer's bounded-memory evidence.
     stream_peak_bytes: AtomicU64,
+    /// High-water mark of admission-controller in-flight bytes.
+    admission_peak_bytes: AtomicU64,
+    /// Prefetcher outcomes across all profiled runs.
+    prefetch_hits: AtomicU64,
+    prefetch_misses: AtomicU64,
+    /// Latency distributions (count/sum are the exact accumulators the
+    /// means are derived from — there is no separate float path).
+    queue_wait: LatencyHist,
+    service: LatencyHist,
+    /// Per-engine-iteration wall time, fed from [`EngineProfile`]s.
+    iteration: LatencyHist,
+    /// Exact per-stage span rollup (count / total / max ns).
+    stages: [StageAgg; Stage::COUNT],
     per_engine: [EngineCounters; Engine::ALL.len()],
 }
 
@@ -51,8 +86,18 @@ pub struct EngineBatchStats {
     pub jobs: u64,
     /// Jobs per executed batch for this engine.
     pub mean_batch_size: f64,
-    /// Mean wall time of one batch execution (s).
+    /// Mean wall time of one batch execution (s), nanosecond-exact.
     pub mean_batch_latency_s: f64,
+}
+
+/// One stage's span rollup, from a [`Snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageStats {
+    /// [`Stage::name`] of the stage the row describes.
+    pub stage: &'static str,
+    pub count: u64,
+    pub total_s: f64,
+    pub max_s: f64,
 }
 
 /// A point-in-time copy for reporting.
@@ -79,6 +124,19 @@ pub struct Snapshot {
     pub streamed_runs: u64,
     /// Largest peak-resident-tile-bytes any streamed run reported.
     pub stream_peak_resident_bytes: u64,
+    /// Admission-controller in-flight-bytes high-water mark.
+    pub admission_peak_bytes: u64,
+    /// Prefetcher fetches served without blocking / with blocking.
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    /// Queue-wait latency distribution (count == completed jobs).
+    pub queue_wait: LatencyStats,
+    /// Service (execution) latency distribution.
+    pub service: LatencyStats,
+    /// Per-engine-iteration wall-time distribution (profiled runs).
+    pub iteration: LatencyStats,
+    /// Span rollup for every stage that recorded at least once.
+    pub stages: Vec<StageStats>,
     /// Per-engine batch size/latency (engines that served >= 1 batch).
     pub per_engine: Vec<EngineBatchStats>,
 }
@@ -88,6 +146,70 @@ impl Snapshot {
     pub fn engine_stats(&self, engine: Engine) -> Option<&EngineBatchStats> {
         self.per_engine.iter().find(|s| s.engine == engine.name())
     }
+
+    /// Span rollup for one stage, if it recorded any spans.
+    pub fn stage_stats(&self, stage: Stage) -> Option<&StageStats> {
+        self.stages.iter().find(|s| s.stage == stage.name())
+    }
+
+    /// Every field of the snapshot as named metric samples — the single
+    /// source both exporters render (tested field-for-field).
+    pub fn exposition(&self) -> Exposition {
+        let mut e = Exposition::new();
+        e.push("repro_jobs_submitted_total", self.submitted as f64);
+        e.push("repro_jobs_completed_total", self.completed as f64);
+        e.push("repro_jobs_failed_total", self.failed as f64);
+        e.push("repro_jobs_rejected_total", self.rejected as f64);
+        e.push("repro_jobs_cancelled_total", self.cancelled as f64);
+        e.push("repro_jobs_retried_total", self.retried as f64);
+        e.push("repro_batches_total", self.batches as f64);
+        e.push("repro_mean_queue_wait_seconds", self.mean_queue_wait_s);
+        e.push("repro_mean_service_seconds", self.mean_service_s);
+        e.push("repro_mean_iterations", self.mean_iterations);
+        e.push("repro_mean_batch_size", self.mean_batch_size);
+        e.push("repro_streamed_runs_total", self.streamed_runs as f64);
+        e.push("repro_stream_peak_resident_bytes", self.stream_peak_resident_bytes as f64);
+        e.push("repro_admission_peak_bytes", self.admission_peak_bytes as f64);
+        e.push("repro_prefetch_hits_total", self.prefetch_hits as f64);
+        e.push("repro_prefetch_misses_total", self.prefetch_misses as f64);
+        for (name, l) in [
+            ("repro_queue_wait", &self.queue_wait),
+            ("repro_service", &self.service),
+            ("repro_iteration", &self.iteration),
+        ] {
+            e.push(&format!("{name}_samples_total"), l.count as f64);
+            e.push_labeled(&format!("{name}_seconds"), &[("stat", "mean")], l.mean_s());
+            e.push_labeled(&format!("{name}_seconds"), &[("stat", "p50")], l.p50_s());
+            e.push_labeled(&format!("{name}_seconds"), &[("stat", "p95")], l.p95_s());
+            e.push_labeled(&format!("{name}_seconds"), &[("stat", "p99")], l.p99_s());
+            e.push_labeled(&format!("{name}_seconds"), &[("stat", "max")], l.max_s());
+        }
+        for s in &self.stages {
+            let l = [("stage", s.stage)];
+            e.push_labeled("repro_stage_spans_total", &l, s.count as f64);
+            e.push_labeled("repro_stage_seconds_total", &l, s.total_s);
+            e.push_labeled("repro_stage_max_seconds", &l, s.max_s);
+        }
+        for eng in &self.per_engine {
+            let l = [("engine", eng.engine)];
+            e.push_labeled("repro_engine_batches_total", &l, eng.batches as f64);
+            e.push_labeled("repro_engine_jobs_total", &l, eng.jobs as f64);
+            e.push_labeled("repro_engine_mean_batch_size", &l, eng.mean_batch_size);
+            e.push_labeled("repro_engine_mean_batch_latency_seconds", &l, eng.mean_batch_latency_s);
+        }
+        e
+    }
+
+    /// Prometheus text exposition of the whole snapshot.
+    pub fn to_prometheus(&self) -> String {
+        self.exposition().to_prometheus()
+    }
+
+    /// Single-line JSON dump of the whole snapshot (the shape ROADMAP
+    /// item 5's bench harness merges).
+    pub fn to_json_line(&self) -> String {
+        self.exposition().to_json_line()
+    }
 }
 
 impl Metrics {
@@ -95,14 +217,17 @@ impl Metrics {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn job_completed(&self, queue_wait_s: f64, service_s: f64, iterations: usize) {
+    /// Record a completed job with its exact queue-wait and service
+    /// durations (accumulated in integer nanoseconds).
+    pub fn job_completed(&self, queue_wait: Duration, service: Duration, iterations: usize) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.queue_wait_us
-            .fetch_add((queue_wait_s * 1e6) as u64, Ordering::Relaxed);
-        self.service_us
-            .fetch_add((service_s * 1e6) as u64, Ordering::Relaxed);
-        self.iterations
-            .fetch_add(iterations as u64, Ordering::Relaxed);
+        let qw = dur_ns(queue_wait);
+        let sv = dur_ns(service);
+        self.queue_wait.record(qw);
+        self.service.record(sv);
+        self.record_stage(Stage::Queue, qw);
+        self.record_stage(Stage::Execute, sv);
+        self.iterations.fetch_add(iterations as u64, Ordering::Relaxed);
     }
 
     pub fn job_failed(&self) {
@@ -131,18 +256,58 @@ impl Metrics {
     /// Record one streamed volume run and its peak resident tile bytes.
     pub fn stream_run(&self, peak_resident_bytes: usize) {
         self.streamed_runs.fetch_add(1, Ordering::Relaxed);
-        self.stream_peak_bytes
-            .fetch_max(peak_resident_bytes as u64, Ordering::Relaxed);
+        self.stream_peak_bytes.fetch_max(peak_resident_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record the admission controller's in-flight bytes after an admit
+    /// (high-water via `fetch_max`).
+    pub fn admission_level(&self, in_flight_bytes: usize) {
+        self.admission_peak_bytes.fetch_max(in_flight_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record one span of `stage` lasting `ns` (exact rollup only; the
+    /// per-job event goes to that job's `TraceLog`).
+    pub fn record_stage(&self, stage: Stage, ns: u64) {
+        let s = &self.stages[stage.index()];
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.total_ns.fetch_add(ns, Ordering::Relaxed);
+        s.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Fold one engine run's profile in: per-iteration samples feed the
+    /// iteration histogram, tile/prefetch aggregates feed the stage
+    /// rollup and prefetch counters.
+    pub fn record_profile(&self, p: &EngineProfile) {
+        for s in &p.iters {
+            self.iteration.record(s.wall_ns);
+            self.record_stage(Stage::Iteration, s.wall_ns);
+        }
+        let agg = [
+            (Stage::TileRead, p.tile_reads, p.tile_read_ns),
+            (Stage::TileCompute, p.tile_computes, p.tile_compute_ns),
+            (Stage::TileWrite, p.tile_writes, p.tile_write_ns),
+            (Stage::PrefetchWait, p.prefetch_hits + p.prefetch_misses, p.prefetch_wait_ns),
+        ];
+        for (stage, count, total_ns) in agg {
+            if count == 0 {
+                continue;
+            }
+            let s = &self.stages[stage.index()];
+            s.count.fetch_add(count, Ordering::Relaxed);
+            s.total_ns.fetch_add(total_ns, Ordering::Relaxed);
+            s.max_ns.fetch_max(total_ns, Ordering::Relaxed);
+        }
+        self.prefetch_hits.fetch_add(p.prefetch_hits, Ordering::Relaxed);
+        self.prefetch_misses.fetch_add(p.prefetch_misses, Ordering::Relaxed);
     }
 
     /// Record one executed batch: which engine served it, how many jobs
-    /// it carried, and its wall time.
-    pub fn batch_served(&self, engine: Engine, jobs: usize, batch_s: f64) {
+    /// it carried, and its exact wall time.
+    pub fn batch_served(&self, engine: Engine, jobs: usize, wall: Duration) {
         let e = &self.per_engine[engine.index()];
         e.batches.fetch_add(1, Ordering::Relaxed);
         e.jobs.fetch_add(jobs as u64, Ordering::Relaxed);
-        e.batch_us
-            .fetch_add((batch_s * 1e6) as u64, Ordering::Relaxed);
+        e.batch_ns.fetch_add(dur_ns(wall), Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -162,9 +327,25 @@ impl Metrics {
                     batches: b,
                     jobs: e.jobs.load(Ordering::Relaxed),
                     mean_batch_size: e.jobs.load(Ordering::Relaxed) as f64 / b as f64,
-                    mean_batch_latency_s: e.batch_us.load(Ordering::Relaxed) as f64
-                        / 1e6
+                    mean_batch_latency_s: e.batch_ns.load(Ordering::Relaxed) as f64
+                        / 1e9
                         / b as f64,
+                })
+            })
+            .collect();
+        let stages = Stage::ALL
+            .iter()
+            .filter_map(|&stage| {
+                let s = &self.stages[stage.index()];
+                let count = s.count.load(Ordering::Relaxed);
+                if count == 0 {
+                    return None;
+                }
+                Some(StageStats {
+                    stage: stage.name(),
+                    count,
+                    total_s: s.total_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                    max_s: s.max_ns.load(Ordering::Relaxed) as f64 / 1e9,
                 })
             })
             .collect();
@@ -176,12 +357,22 @@ impl Metrics {
             cancelled: self.cancelled.load(Ordering::Relaxed),
             retried: self.retried.load(Ordering::Relaxed),
             batches,
-            mean_queue_wait_s: self.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
-            mean_service_s: self.service_us.load(Ordering::Relaxed) as f64 / 1e6 / denom,
+            // Means derive from the histograms' exact ns sums — the
+            // histogram IS the accumulator, so exporter and snapshot
+            // can never disagree.
+            mean_queue_wait_s: self.queue_wait.sum_ns() as f64 / 1e9 / denom,
+            mean_service_s: self.service.sum_ns() as f64 / 1e9 / denom,
             mean_iterations: self.iterations.load(Ordering::Relaxed) as f64 / denom,
             mean_batch_size: completed as f64 / batches.max(1) as f64,
             streamed_runs: self.streamed_runs.load(Ordering::Relaxed),
             stream_peak_resident_bytes: self.stream_peak_bytes.load(Ordering::Relaxed),
+            admission_peak_bytes: self.admission_peak_bytes.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
+            queue_wait: self.queue_wait.stats(),
+            service: self.service.stats(),
+            iteration: self.iteration.stats(),
+            stages,
             per_engine,
         }
     }
@@ -191,23 +382,34 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    fn secs(s: f64) -> Duration {
+        Duration::from_secs_f64(s)
+    }
+
     #[test]
     fn counters_accumulate() {
         let m = Metrics::default();
         m.job_submitted();
         m.job_submitted();
         m.batch_formed();
-        m.job_completed(0.5, 1.0, 10);
-        m.job_completed(1.5, 3.0, 20);
+        m.job_completed(secs(0.5), secs(1.0), 10);
+        m.job_completed(secs(1.5), secs(3.0), 20);
         m.job_failed();
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.completed, 2);
         assert_eq!(s.failed, 1);
-        assert!((s.mean_queue_wait_s - 1.0).abs() < 1e-3);
-        assert!((s.mean_service_s - 2.0).abs() < 1e-3);
+        assert!((s.mean_queue_wait_s - 1.0).abs() < 1e-9);
+        assert!((s.mean_service_s - 2.0).abs() < 1e-9);
         assert!((s.mean_iterations - 15.0).abs() < 1e-9);
         assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+        // Latency distributions carry exact counts and maxima.
+        assert_eq!(s.queue_wait.count, 2);
+        assert_eq!(s.service.count, 2);
+        assert_eq!(s.service.max_ns, 3_000_000_000);
+        // Queue/Execute stage rollups mirror the job accounting.
+        assert_eq!(s.stage_stats(Stage::Queue).unwrap().count, 2);
+        assert!((s.stage_stats(Stage::Execute).unwrap().total_s - 4.0).abs() < 1e-9);
     }
 
     #[test]
@@ -216,11 +418,14 @@ mod tests {
         assert_eq!(s.mean_service_s, 0.0);
         assert_eq!(s.mean_batch_size, 0.0);
         assert!(s.per_engine.is_empty());
+        assert!(s.stages.is_empty());
         assert_eq!(s.streamed_runs, 0);
         assert_eq!(s.stream_peak_resident_bytes, 0);
+        assert_eq!(s.admission_peak_bytes, 0);
         assert_eq!(s.rejected, 0);
         assert_eq!(s.cancelled, 0);
         assert_eq!(s.retried, 0);
+        assert_eq!(s.queue_wait, LatencyStats::default());
     }
 
     #[test]
@@ -233,11 +438,11 @@ mod tests {
         for _ in 0..6 {
             m.job_submitted();
         }
-        m.job_completed(0.0, 0.1, 5);
+        m.job_completed(secs(0.0), secs(0.1), 5);
         for _ in 0..3 {
             m.job_retried();
         }
-        m.job_completed(0.0, 0.2, 7);
+        m.job_completed(secs(0.0), secs(0.2), 7);
         m.job_failed();
         for _ in 0..3 {
             m.job_cancelled();
@@ -294,19 +499,174 @@ mod tests {
     #[test]
     fn per_engine_batch_stats() {
         let m = Metrics::default();
-        m.batch_served(Engine::Parallel, 4, 0.2);
-        m.batch_served(Engine::Parallel, 2, 0.4);
-        m.batch_served(Engine::Histogram, 1, 0.1);
+        m.batch_served(Engine::Parallel, 4, secs(0.2));
+        m.batch_served(Engine::Parallel, 2, secs(0.4));
+        m.batch_served(Engine::Histogram, 1, secs(0.1));
         let s = m.snapshot();
         assert_eq!(s.per_engine.len(), 2);
         let par = s.engine_stats(Engine::Parallel).unwrap();
         assert_eq!(par.batches, 2);
         assert_eq!(par.jobs, 6);
         assert!((par.mean_batch_size - 3.0).abs() < 1e-9);
-        assert!((par.mean_batch_latency_s - 0.3).abs() < 1e-3);
+        assert!((par.mean_batch_latency_s - 0.3).abs() < 1e-9);
         let hist = s.engine_stats(Engine::Histogram).unwrap();
         assert_eq!(hist.jobs, 1);
         assert!(s.engine_stats(Engine::Device).is_none());
+    }
+
+    #[test]
+    fn mean_batch_latency_is_nanosecond_exact() {
+        // Regression for the µs-truncation bug: two 1500 ns batches used
+        // to accumulate as 1 µs each ((1.5e-6 * 1e6) as u64 == 1), so
+        // the mean came out 1.0 µs. With integer-ns accumulation the
+        // mean is exactly 1500 ns.
+        let m = Metrics::default();
+        m.batch_served(Engine::Histogram, 1, Duration::from_nanos(1500));
+        m.batch_served(Engine::Histogram, 1, Duration::from_nanos(1500));
+        let s = m.snapshot();
+        let h = s.engine_stats(Engine::Histogram).unwrap();
+        assert_eq!(h.mean_batch_latency_s, 1500.0 / 1e9);
+        // Same for job-level accumulators: 3 sub-µs queue waits survive.
+        m.job_completed(Duration::from_nanos(300), Duration::from_nanos(700), 1);
+        m.job_completed(Duration::from_nanos(300), Duration::from_nanos(700), 1);
+        m.job_completed(Duration::from_nanos(300), Duration::from_nanos(700), 1);
+        let s = m.snapshot();
+        // 3 × 300 ns = 900 ns total; the µs path would have stored 0.
+        assert_eq!(s.mean_queue_wait_s, 900.0 / 1e9 / 3.0);
+        assert_eq!(s.mean_service_s, 2100.0 / 1e9 / 3.0);
+    }
+
+    #[test]
+    fn profile_feeds_iteration_hist_and_stage_rollup() {
+        use crate::obs::span::IterSample;
+        let m = Metrics::default();
+        let p = EngineProfile {
+            iters: vec![
+                IterSample { iter: 0, wall_ns: 1000, delta: 0.5, jm: 2.0 },
+                IterSample { iter: 1, wall_ns: 3000, delta: 0.1, jm: 1.0 },
+            ],
+            tile_reads: 4,
+            tile_read_ns: 400,
+            tile_computes: 4,
+            tile_compute_ns: 4000,
+            prefetch_hits: 3,
+            prefetch_misses: 1,
+            prefetch_wait_ns: 50,
+            ..Default::default()
+        };
+        m.record_profile(&p);
+        let s = m.snapshot();
+        assert_eq!(s.iteration.count, 2);
+        assert_eq!(s.iteration.max_ns, 3000);
+        assert_eq!(s.prefetch_hits, 3);
+        assert_eq!(s.prefetch_misses, 1);
+        let tr = s.stage_stats(Stage::TileRead).unwrap();
+        assert_eq!(tr.count, 4);
+        assert!((tr.total_s - 400e-9).abs() < 1e-15);
+        let pw = s.stage_stats(Stage::PrefetchWait).unwrap();
+        assert_eq!(pw.count, 4);
+        assert!(s.stage_stats(Stage::TileWrite).is_none());
+    }
+
+    #[test]
+    fn exporters_match_snapshot_field_for_field() {
+        // Build a snapshot with every field nonzero, then require both
+        // exporters to reproduce each field exactly.
+        let m = Metrics::default();
+        for _ in 0..5 {
+            m.job_submitted();
+        }
+        m.batch_formed();
+        m.job_completed(secs(0.001), secs(0.002), 10);
+        m.job_completed(secs(0.003), secs(0.004), 20);
+        m.job_failed();
+        m.job_cancelled();
+        m.job_rejected();
+        m.job_retried();
+        m.stream_run(4096);
+        m.admission_level(8192);
+        m.batch_served(Engine::Parallel, 2, secs(0.005));
+        m.record_profile(&EngineProfile {
+            iters: vec![crate::obs::span::IterSample {
+                iter: 0,
+                wall_ns: 500,
+                delta: 0.1,
+                jm: 1.0,
+            }],
+            tile_reads: 1,
+            tile_read_ns: 100,
+            tile_writes: 1,
+            tile_write_ns: 200,
+            prefetch_hits: 1,
+            prefetch_misses: 1,
+            prefetch_wait_ns: 9,
+            ..Default::default()
+        });
+        let s = m.snapshot();
+        let e = s.exposition();
+
+        let get = |name: &str| e.get(name, &[]).unwrap_or_else(|| panic!("missing {name}"));
+        assert_eq!(get("repro_jobs_submitted_total"), s.submitted as f64);
+        assert_eq!(get("repro_jobs_completed_total"), s.completed as f64);
+        assert_eq!(get("repro_jobs_failed_total"), s.failed as f64);
+        assert_eq!(get("repro_jobs_rejected_total"), s.rejected as f64);
+        assert_eq!(get("repro_jobs_cancelled_total"), s.cancelled as f64);
+        assert_eq!(get("repro_jobs_retried_total"), s.retried as f64);
+        assert_eq!(get("repro_batches_total"), s.batches as f64);
+        assert_eq!(get("repro_mean_queue_wait_seconds"), s.mean_queue_wait_s);
+        assert_eq!(get("repro_mean_service_seconds"), s.mean_service_s);
+        assert_eq!(get("repro_mean_iterations"), s.mean_iterations);
+        assert_eq!(get("repro_mean_batch_size"), s.mean_batch_size);
+        assert_eq!(get("repro_streamed_runs_total"), s.streamed_runs as f64);
+        assert_eq!(
+            get("repro_stream_peak_resident_bytes"),
+            s.stream_peak_resident_bytes as f64
+        );
+        assert_eq!(get("repro_admission_peak_bytes"), s.admission_peak_bytes as f64);
+        assert_eq!(get("repro_prefetch_hits_total"), s.prefetch_hits as f64);
+        assert_eq!(get("repro_prefetch_misses_total"), s.prefetch_misses as f64);
+        for (name, l) in [
+            ("repro_queue_wait", &s.queue_wait),
+            ("repro_service", &s.service),
+            ("repro_iteration", &s.iteration),
+        ] {
+            let stat = |st: &str| {
+                e.get(&format!("{name}_seconds"), &[("stat", st)])
+                    .unwrap_or_else(|| panic!("missing {name} {st}"))
+            };
+            assert_eq!(get(&format!("{name}_samples_total")), l.count as f64);
+            assert_eq!(stat("mean"), l.mean_s());
+            assert_eq!(stat("p50"), l.p50_s());
+            assert_eq!(stat("p95"), l.p95_s());
+            assert_eq!(stat("p99"), l.p99_s());
+            assert_eq!(stat("max"), l.max_s());
+        }
+        for st in &s.stages {
+            let l = [("stage", st.stage)];
+            assert_eq!(e.get("repro_stage_spans_total", &l), Some(st.count as f64));
+            assert_eq!(e.get("repro_stage_seconds_total", &l), Some(st.total_s));
+            assert_eq!(e.get("repro_stage_max_seconds", &l), Some(st.max_s));
+        }
+        for eng in &s.per_engine {
+            let l = [("engine", eng.engine)];
+            assert_eq!(e.get("repro_engine_batches_total", &l), Some(eng.batches as f64));
+            assert_eq!(e.get("repro_engine_jobs_total", &l), Some(eng.jobs as f64));
+            assert_eq!(e.get("repro_engine_mean_batch_size", &l), Some(eng.mean_batch_size));
+            assert_eq!(
+                e.get("repro_engine_mean_batch_latency_seconds", &l),
+                Some(eng.mean_batch_latency_s)
+            );
+        }
+
+        // Both renderings are well-formed and carry the same values.
+        for line in s.to_prometheus().lines() {
+            assert_eq!(crate::obs::export::check_exposition_line(line), None, "{line:?}");
+        }
+        let json = crate::obs::Json::parse(&s.to_json_line()).unwrap();
+        assert_eq!(
+            json.get("repro_jobs_completed_total").and_then(|v| v.as_f64()),
+            Some(s.completed as f64)
+        );
     }
 
     #[test]
@@ -318,8 +678,8 @@ mod tests {
                 std::thread::spawn(move || {
                     for _ in 0..1000 {
                         m.job_submitted();
-                        m.job_completed(0.001, 0.002, 5);
-                        m.batch_served(Engine::Sequential, 1, 0.001);
+                        m.job_completed(secs(0.001), secs(0.002), 5);
+                        m.batch_served(Engine::Sequential, 1, secs(0.001));
                     }
                 })
             })
@@ -332,5 +692,7 @@ mod tests {
         assert_eq!(s.completed, 8000);
         assert!((s.mean_iterations - 5.0).abs() < 1e-9);
         assert_eq!(s.engine_stats(Engine::Sequential).unwrap().jobs, 8000);
+        assert_eq!(s.queue_wait.count, 8000);
+        assert_eq!(s.service.count, 8000);
     }
 }

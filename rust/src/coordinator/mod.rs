@@ -16,6 +16,6 @@ pub use fault::{
     CancelToken, Interrupted, JobFailed, Rejected, RetryPolicy,
 };
 pub use job::{Engine, JobResult, SegmentJob, StreamVolumeJob};
-pub use metrics::{EngineBatchStats, Metrics, Snapshot};
+pub use metrics::{EngineBatchStats, Metrics, Snapshot, StageStats};
 pub use queue::Queue;
 pub use service::{Service, Ticket};

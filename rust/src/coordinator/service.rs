@@ -48,6 +48,7 @@ use crate::image::volume::stream::{
     FaultySource, PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
 };
 use crate::image::{FeatureVector, GrayImage, VoxelVolume};
+use crate::obs::{now_ns, prof, trace, Stage, TraceLog};
 use crate::runtime::Registry;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -74,6 +75,7 @@ pub struct Ticket {
     pub id: u64,
     rx: mpsc::Receiver<Result<JobResult>>,
     cancel: CancelToken,
+    trace: Arc<TraceLog>,
 }
 
 impl Ticket {
@@ -97,6 +99,23 @@ impl Ticket {
     pub fn cancel_token(&self) -> CancelToken {
         self.cancel.clone()
     }
+
+    /// The job's trace log. Valid for reading once the job has resolved
+    /// (after [`Ticket::wait`] returns — clone the `Arc` first, `wait`
+    /// consumes the ticket).
+    pub fn trace(&self) -> Arc<TraceLog> {
+        Arc::clone(&self.trace)
+    }
+}
+
+/// Close a span: record the event on the job's trace AND roll it into
+/// the service-wide per-stage metrics. (Queue/Execute are exempt — the
+/// metrics side of those comes from `Metrics::job_completed`, so they
+/// are recorded on the trace only.)
+fn close_span(metrics: &Metrics, trace_log: &TraceLog, stage: Stage, start_ns: u64, arg: u64) {
+    let dur = now_ns().saturating_sub(start_ns);
+    trace_log.record(stage, start_ns, dur, arg);
+    metrics.record_stage(stage, dur);
 }
 
 impl Service {
@@ -180,9 +199,11 @@ impl Service {
         params: FcmParams,
         engine: Engine,
     ) -> Result<Ticket> {
+        let submit_start = now_ns();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let cancel = self.new_token();
+        let trace_log = Arc::new(TraceLog::new(id, trace::DEFAULT_CAPACITY));
         let job = SegmentJob {
             id,
             features,
@@ -193,13 +214,15 @@ impl Service {
             submitted: Instant::now(),
             cancel: cancel.clone(),
             permit: None,
+            trace: Arc::clone(&trace_log),
             respond: tx,
         };
         self.metrics.job_submitted();
         self.queue
             .push(job)
             .map_err(|_| anyhow!("service is shut down"))?;
-        Ok(Ticket { id, rx, cancel })
+        close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
+        Ok(Ticket { id, rx, cancel, trace: trace_log })
     }
 
     /// Convenience: submit an 8-bit image.
@@ -221,9 +244,11 @@ impl Service {
         params: FcmParams,
         engine: Engine,
     ) -> Result<Ticket> {
+        let submit_start = now_ns();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let cancel = self.new_token();
+        let trace_log = Arc::new(TraceLog::new(id, trace::DEFAULT_CAPACITY));
         let job = SegmentJob {
             id,
             features: FeatureVector::from_values(Vec::new()),
@@ -234,13 +259,15 @@ impl Service {
             submitted: Instant::now(),
             cancel: cancel.clone(),
             permit: None,
+            trace: Arc::clone(&trace_log),
             respond: tx,
         };
         self.metrics.job_submitted();
         self.queue
             .push(job)
             .map_err(|_| anyhow!("service is shut down"))?;
-        Ok(Ticket { id, rx, cancel })
+        close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
+        Ok(Ticket { id, rx, cancel, trace: trace_log })
     }
 
     /// Submit a **file-backed** volume for out-of-core segmentation:
@@ -265,22 +292,39 @@ impl Service {
         params: FcmParams,
         engine: Engine,
     ) -> Result<Ticket> {
+        let submit_start = now_ns();
         // An unreadable header skips admission on purpose: the job is
         // admitted and fails at serve time, where the open error is
         // counted as a failed job (not a rejected one).
+        let admission_start = now_ns();
         let permit = match estimated_stream_job_bytes(&spec, &params, engine) {
             Some(bytes) => match self.admission.admit(bytes) {
-                Ok(permit) => Some(permit),
+                Ok(permit) => {
+                    self.metrics.admission_level(self.admission.in_flight());
+                    Some(permit)
+                }
                 Err(rejected) => {
                     self.metrics.job_rejected();
+                    self.metrics
+                        .record_stage(Stage::Admission, now_ns().saturating_sub(admission_start));
                     return Err(anyhow::Error::new(rejected));
                 }
             },
             None => None,
         };
+        let admission_end = now_ns();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let cancel = self.new_token();
+        let trace_log = Arc::new(TraceLog::new(id, trace::DEFAULT_CAPACITY));
+        trace_log.record(
+            Stage::Admission,
+            admission_start,
+            admission_end.saturating_sub(admission_start),
+            0,
+        );
+        self.metrics
+            .record_stage(Stage::Admission, admission_end.saturating_sub(admission_start));
         let job = SegmentJob {
             id,
             features: FeatureVector::from_values(Vec::new()),
@@ -291,13 +335,15 @@ impl Service {
             submitted: Instant::now(),
             cancel: cancel.clone(),
             permit,
+            trace: Arc::clone(&trace_log),
             respond: tx,
         };
         self.metrics.job_submitted();
         self.queue
             .push(job)
             .map_err(|_| anyhow!("service is shut down"))?;
-        Ok(Ticket { id, rx, cancel })
+        close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
+        Ok(Ticket { id, rx, cancel, trace: trace_log })
     }
 
     /// Graceful shutdown: drain the queue, join workers, return metrics.
@@ -490,19 +536,25 @@ fn serve_volume_job(
     batch_id: u64,
 ) {
     let vol = job.volume.as_ref().expect("volume job");
-    let queue_wait_s = job.submitted.elapsed().as_secs_f64();
+    let queue_wait = job.submitted.elapsed();
+    record_queue_span(&job, queue_wait);
     let outcome = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
+        let exec_start = now_ns();
         let t0 = Instant::now();
+        prof::begin(job.params.max_iters);
         let out = catch_job(worker_id, || {
             backend.segment_volume_cancellable(vol, &job.params, &job.cancel)
-        })?;
-        let wall = t0.elapsed().as_secs_f64();
+        });
+        take_profile_into(&job, metrics);
+        let out = out?;
+        let wall = t0.elapsed();
+        job.trace.record(Stage::Execute, exec_start, now_ns().saturating_sub(exec_start), 0);
         metrics.batch_served(job.engine, 1, wall);
         Ok((out, wall))
     });
     match outcome {
-        Ok((out, service_s)) => {
-            metrics.job_completed(queue_wait_s, service_s, out.iterations);
+        Ok((out, service)) => {
+            metrics.job_completed(queue_wait, service, out.iterations);
             let result = JobResult {
                 id: job.id,
                 labels: out.labels,
@@ -510,16 +562,36 @@ fn serve_volume_job(
                 iterations: out.iterations,
                 converged: out.converged,
                 engine: job.engine,
-                queue_wait_s,
-                service_s,
+                queue_wait_s: queue_wait.as_secs_f64(),
+                service_s: service.as_secs_f64(),
                 device: None,
                 worker: worker_id,
                 batch_id,
                 peak_resident_bytes: None,
             };
+            let finish_start = now_ns();
             let _ = job.respond.send(Ok(result));
+            close_span(metrics, &job.trace, Stage::Finish, finish_start, 0);
         }
         Err(e) => respond_failure(job, e, metrics),
+    }
+}
+
+/// Record the queue-wait span on the job's trace (the metrics side comes
+/// from [`Metrics::job_completed`]). The span is backdated so its start
+/// lines up with the end of the submit span on the shared clock.
+fn record_queue_span(job: &SegmentJob, queue_wait: Duration) {
+    let wait_ns = u64::try_from(queue_wait.as_nanos()).unwrap_or(u64::MAX);
+    job.trace
+        .record(Stage::Queue, now_ns().saturating_sub(wait_ns), wait_ns, 0);
+}
+
+/// Disarm the worker's thread-local profiler and fold whatever the
+/// engine recorded into the job's trace and the service metrics.
+fn take_profile_into(job: &SegmentJob, metrics: &Metrics) {
+    if let Some(p) = prof::take() {
+        job.trace.absorb_profile(&p);
+        metrics.record_profile(&p);
     }
 }
 
@@ -579,11 +651,14 @@ fn serve_stream_job(
     batch_id: u64,
 ) {
     let spec = job.stream.clone().expect("stream job");
-    let queue_wait_s = job.submitted.elapsed().as_secs_f64();
+    let queue_wait = job.submitted.elapsed();
+    record_queue_span(&job, queue_wait);
     let mut attempt: u32 = 0;
     let outcome = loop {
         let attempt_run = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
-            catch_job(worker_id, || {
+            let exec_start = now_ns();
+            prof::begin(job.params.max_iters);
+            let run = catch_job(worker_id, || {
                 job.cancel.checkpoint()?;
                 let mut src = open_stream_source(&spec, attempt)?;
                 let (w, h, d) = (src.width(), src.height(), src.depth());
@@ -597,8 +672,14 @@ fn serve_stream_job(
                     &job.cancel,
                 )?;
                 sink.finish()?;
-                Ok((out, t0.elapsed().as_secs_f64()))
-            })
+                Ok((out, t0.elapsed()))
+            });
+            take_profile_into(&job, metrics);
+            if run.is_ok() {
+                job.trace
+                    .record(Stage::Execute, exec_start, now_ns().saturating_sub(exec_start), 0);
+            }
+            run
         });
         match attempt_run {
             Ok(v) => break Ok(v),
@@ -608,17 +689,19 @@ fn serve_stream_job(
                     && job.cancel.state().is_none() =>
             {
                 metrics.job_retried();
+                let backoff_start = now_ns();
                 std::thread::sleep(backoff_delay(retry.backoff, attempt, job.id));
+                close_span(metrics, &job.trace, Stage::Backoff, backoff_start, attempt as u64);
                 attempt += 1;
             }
             Err(e) => break Err(e),
         }
     };
     match outcome {
-        Ok((out, service_s)) => {
-            metrics.batch_served(job.engine, 1, service_s);
+        Ok((out, service)) => {
+            metrics.batch_served(job.engine, 1, service);
             metrics.stream_run(out.peak_resident_bytes);
-            metrics.job_completed(queue_wait_s, service_s, out.iterations);
+            metrics.job_completed(queue_wait, service, out.iterations);
             let result = JobResult {
                 id: job.id,
                 labels: Vec::new(),
@@ -626,14 +709,16 @@ fn serve_stream_job(
                 iterations: out.iterations,
                 converged: out.converged,
                 engine: job.engine,
-                queue_wait_s,
-                service_s,
+                queue_wait_s: queue_wait.as_secs_f64(),
+                service_s: service.as_secs_f64(),
                 device: None,
                 worker: worker_id,
                 batch_id,
                 peak_resident_bytes: Some(out.peak_resident_bytes),
             };
+            let finish_start = now_ns();
             let _ = job.respond.send(Ok(result));
+            close_span(metrics, &job.trace, Stage::Finish, finish_start, 0);
         }
         Err(e) => respond_failure(job, e, metrics),
     }
@@ -712,8 +797,12 @@ fn worker_loop(
         // the batch wall time is shared evenly; the per-job loop keeps
         // the old accounting (a job's wait runs until ITS serve starts,
         // so time spent behind batchmates stays queue wait, not a gap).
-        let wait_of = |j: &SegmentJob| j.submitted.elapsed().as_secs_f64();
-        let served: Vec<(Result<BackendRun>, f64, f64)> =
+        let wait_of = |j: &SegmentJob| {
+            let wait = j.submitted.elapsed();
+            record_queue_span(j, wait);
+            wait
+        };
+        let served: Vec<(Result<BackendRun>, Duration, Duration)> =
             match backend_for(engine, registry.as_ref(), &engine_opts) {
                 Err(e) => {
                     // No backend (device job, no artifacts): fail each
@@ -721,30 +810,39 @@ fn worker_loop(
                     let msg = format!("{e:#}");
                     batch
                         .iter()
-                        .map(|j| (Err(anyhow!(msg.clone())), 0.0, wait_of(j)))
+                        .map(|j| (Err(anyhow!(msg.clone())), Duration::ZERO, wait_of(j)))
                         .collect()
                 }
                 Ok(backend) => {
                     if batch_execute && batch.len() > 1 {
-                        let waits: Vec<f64> = batch.iter().map(&wait_of).collect();
+                        let waits: Vec<Duration> = batch.iter().map(&wait_of).collect();
                         let features: Vec<&FeatureVector> =
                             batch.iter().map(|j| &j.features).collect();
+                        let exec_start = now_ns();
                         let t0 = Instant::now();
+                        prof::begin(params.max_iters);
                         // One engine invocation serves the whole batch,
                         // so per-job tokens cannot interrupt it mid-run
                         // (they were checked above; a batch is one
                         // bounded unit of work). The panic boundary
                         // fails every batchmate as a typed JobFailed.
-                        match catch_job(worker_id, || Ok(backend.segment_batch(&features, &params)))
-                        {
+                        let caught =
+                            catch_job(worker_id, || Ok(backend.segment_batch(&features, &params)));
+                        // The profile spans the whole batch: roll it
+                        // into the metrics, and pin the execute span on
+                        // every batchmate's trace (they share it).
+                        if let Some(p) = prof::take() {
+                            metrics.record_profile(&p);
+                        }
+                        match caught {
                             Ok(outs) => {
-                                let share =
-                                    t0.elapsed().as_secs_f64() / outs.len().max(1) as f64;
-                                metrics.batch_served(
-                                    engine,
-                                    batch.len(),
-                                    t0.elapsed().as_secs_f64(),
-                                );
+                                let wall = t0.elapsed();
+                                let share = wall.div_f64(outs.len().max(1) as f64);
+                                let exec_ns = now_ns().saturating_sub(exec_start);
+                                for j in &batch {
+                                    j.trace.record(Stage::Execute, exec_start, exec_ns, 0);
+                                }
+                                metrics.batch_served(engine, batch.len(), wall);
                                 outs.into_iter()
                                     .zip(waits)
                                     .map(|(o, wait)| (o, share, wait))
@@ -759,34 +857,47 @@ fn worker_loop(
                                     .iter()
                                     .zip(waits)
                                     .map(|(_, wait)| {
-                                        (Err(anyhow::Error::new(failed.clone())), 0.0, wait)
+                                        (
+                                            Err(anyhow::Error::new(failed.clone())),
+                                            Duration::ZERO,
+                                            wait,
+                                        )
                                     })
                                     .collect()
                             }
                         }
                     } else {
                         let t0 = Instant::now();
-                        let outs: Vec<(Result<BackendRun>, f64, f64)> = batch
+                        let outs: Vec<(Result<BackendRun>, Duration, Duration)> = batch
                             .iter()
                             .map(|j| {
                                 let wait = wait_of(j);
+                                let exec_start = now_ns();
                                 let t1 = Instant::now();
+                                prof::begin(params.max_iters);
                                 let o = catch_job(worker_id, || {
                                     backend.segment_cancellable(&j.features, &params, &j.cancel)
                                 });
-                                (o, t1.elapsed().as_secs_f64(), wait)
+                                take_profile_into(j, &metrics);
+                                j.trace.record(
+                                    Stage::Execute,
+                                    exec_start,
+                                    now_ns().saturating_sub(exec_start),
+                                    0,
+                                );
+                                (o, t1.elapsed(), wait)
                             })
                             .collect();
-                        metrics.batch_served(engine, batch.len(), t0.elapsed().as_secs_f64());
+                        metrics.batch_served(engine, batch.len(), t0.elapsed());
                         outs
                     }
                 }
             };
 
-        for (job, (outcome, service_s, queue_wait_s)) in batch.into_iter().zip(served) {
+        for (job, (outcome, service, queue_wait)) in batch.into_iter().zip(served) {
             match outcome {
                 Ok(BackendRun { run, device }) => {
-                    metrics.job_completed(queue_wait_s, service_s, run.iterations);
+                    metrics.job_completed(queue_wait, service, run.iterations);
                     let result = JobResult {
                         id: job.id,
                         labels: run.labels,
@@ -794,14 +905,16 @@ fn worker_loop(
                         iterations: run.iterations,
                         converged: run.converged,
                         engine: job.engine,
-                        queue_wait_s,
-                        service_s,
+                        queue_wait_s: queue_wait.as_secs_f64(),
+                        service_s: service.as_secs_f64(),
                         device,
                         worker: worker_id,
                         batch_id,
                         peak_resident_bytes: None,
                     };
+                    let finish_start = now_ns();
                     let _ = job.respond.send(Ok(result));
+                    close_span(&metrics, &job.trace, Stage::Finish, finish_start, 0);
                 }
                 Err(e) => respond_failure(job, e, &metrics),
             }
@@ -825,6 +938,7 @@ mod tests {
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,
+            trace: Arc::new(TraceLog::new(0, 8)),
             respond: tx,
         }
     }
@@ -841,6 +955,7 @@ mod tests {
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,
+            trace: Arc::new(TraceLog::new(0, 8)),
             respond: tx,
         }
     }
@@ -864,6 +979,7 @@ mod tests {
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,
+            trace: Arc::new(TraceLog::new(0, 8)),
             respond: tx,
         }
     }

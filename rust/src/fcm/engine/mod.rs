@@ -141,6 +141,7 @@ pub fn run_batch(
     params: &FcmParams,
     opts: &EngineOpts,
 ) -> Vec<FcmRun> {
+    crate::obs::prof::reserve_iters(params.max_iters);
     match opts.backend {
         Backend::Parallel => batch::run_batch(inputs, params, opts),
         Backend::Sequential | Backend::Histogram => inputs
@@ -158,6 +159,7 @@ pub fn run_from(
     params: &FcmParams,
     opts: &EngineOpts,
 ) -> FcmRun {
+    crate::obs::prof::reserve_iters(params.max_iters);
     match opts.backend {
         Backend::Sequential => crate::fcm::sequential::run_from(x, w, u0, params),
         Backend::Parallel => parallel::run_from(x, w, u0, params, opts),
@@ -191,6 +193,7 @@ pub fn run_from_cancellable(
     opts: &EngineOpts,
     cancel: &CancelToken,
 ) -> Result<FcmRun, Interrupted> {
+    crate::obs::prof::reserve_iters(params.max_iters);
     cancel.checkpoint()?;
     let run = match opts.backend {
         Backend::Parallel => parallel::run_from_cancellable(x, w, u0, params, opts, cancel)?,

@@ -130,12 +130,18 @@ pub fn run_from_on_cancellable(
     let mut iterations = 0;
     let mut converged = false;
 
+    let profiling = crate::obs::prof::active();
     for it in 0..params.max_iters {
         cancel.checkpoint()?;
         iterations += 1;
+        let iter_start = if profiling { crate::obs::now_ns() } else { 0 };
         let ctx = FusedCtx::build(domain, &centers, m, n);
         let total = fused_pass(pool, ctx.as_ref(), x, w, &u, n, &centers, m, &ranges, &mut u_new);
         std::mem::swap(&mut u, &mut u_new);
+        if profiling {
+            let wall = crate::obs::now_ns().saturating_sub(iter_start);
+            crate::obs::prof::iter(it as u32, wall, total.delta, total.jm);
+        }
         jm_history.push(total.jm);
         final_delta = total.delta;
         if total.delta < params.epsilon {

@@ -35,6 +35,14 @@
 //! zero thread spawns after pool construction — is pinned by a test in
 //! `tests/engine_batch.rs` that runs the parallel engine repeatedly and
 //! asserts the counter never moves.
+//!
+//! Observability: the engine profiler (`crate::obs::prof`) is
+//! **thread-local to the caller**, so its hooks must never be called
+//! from inside a [`Pool::run`] task closure — lanes 1.. run on pool
+//! threads where no profile is armed and the record would be silently
+//! lost (and lane 0 would double-count). Engines therefore time whole
+//! passes from the dispatching thread (iteration/tile boundaries), in
+//! line with the no-allocation, no-hot-path rule in `obs`'s docs.
 
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;

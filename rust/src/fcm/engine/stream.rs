@@ -257,6 +257,7 @@ pub fn run_streamed_cancellable(
         });
     }
     assert!(params.max_iters >= 1, "max_iters must be >= 1");
+    crate::obs::prof::reserve_iters(params.max_iters);
     match opts.backend {
         Backend::Histogram => hist_streamed(src, sink, params, opts, cancel),
         Backend::Parallel | Backend::Sequential => tiles_streamed(src, sink, params, opts, cancel),
@@ -300,6 +301,8 @@ fn load_tile(
     x: &mut [f32],
     w: &mut [f32],
 ) -> Result<()> {
+    let profiling = crate::obs::prof::active();
+    let t0 = if profiling { crate::obs::now_ns() } else { 0 };
     let k = nz * area;
     let bpv = src.bytes_per_voxel();
     src.read_slab(z0, nz, &mut raw[..k * bpv])?;
@@ -307,6 +310,9 @@ fn load_tile(
     for i in 0..k {
         x[i] = sample_at(raw, i, bpv) as f32;
         w[i] = if mraw[i] > 0 { 1.0 } else { 0.0 };
+    }
+    if profiling {
+        crate::obs::prof::tile_read(crate::obs::now_ns().saturating_sub(t0));
     }
     Ok(())
 }
@@ -350,10 +356,15 @@ fn hist_streamed(
     let mut bin_sums = vec![0f64; c * bins];
     let mut leaves: Vec<PassPartial> = Vec::with_capacity(depth);
     let mut rng = Rng64::new(params.seed);
+    let profiling = crate::obs::prof::active();
     for &(z0, nz) in &tiles {
         cancel.checkpoint()?;
+        let read_start = if profiling { crate::obs::now_ns() } else { 0 };
         src.read_slab(z0, nz, &mut raw[..nz * area * bpv])?;
         src.read_mask_slab(z0, nz, &mut mraw[..nz * area])?;
+        if profiling {
+            crate::obs::prof::tile_read(crate::obs::now_ns().saturating_sub(read_start));
+        }
         for s in 0..nz {
             let rb = &raw[s * area * bpv..(s + 1) * area * bpv];
             let mb = &mraw[s * area..(s + 1) * area];
@@ -413,12 +424,20 @@ fn hist_streamed(
     for &(z0, nz) in &tiles {
         cancel.checkpoint()?;
         let k = nz * area;
+        let read_start = if profiling { crate::obs::now_ns() } else { 0 };
         src.read_slab(z0, nz, &mut raw[..k * bpv])?;
         src.read_mask_slab(z0, nz, &mut mraw[..k])?;
+        if profiling {
+            crate::obs::prof::tile_read(crate::obs::now_ns().saturating_sub(read_start));
+        }
         for i in 0..k {
             labels[i] = if mraw[i] > 0 { lut[sample_at(&raw, i, bpv)] } else { 0 };
         }
+        let write_start = if profiling { crate::obs::now_ns() } else { 0 };
         sink.write_slab(&labels[..k])?;
+        if profiling {
+            crate::obs::prof::tile_write(crate::obs::now_ns().saturating_sub(write_start));
+        }
     }
 
     Ok(StreamRun {
@@ -588,8 +607,10 @@ fn tiles_iterate(
     let mut iterations = 0;
     let mut converged = false;
 
+    let profiling = crate::obs::prof::active();
     for it in 0..params.max_iters {
         iterations += 1;
+        let iter_start = if profiling { crate::obs::now_ns() } else { 0 };
         let mut parts: Vec<(usize, PassPartial)> = Vec::with_capacity(depth);
         // Per-iteration intensity LUTs, one table per center vector for
         // every tile and lane of this iteration (result-neutral).
@@ -613,6 +634,7 @@ fn tiles_iterate(
                     init_membership_tile(&mut rng, ws, &mut rows);
                 }
             }
+            let pass_start = if profiling { crate::obs::now_ns() } else { 0 };
             parts.extend(tile_pass(
                 &pool,
                 ctx_prev.as_ref(),
@@ -631,12 +653,19 @@ fn tiles_iterate(
                 &prev_centers,
                 &centers,
             ));
+            if profiling {
+                crate::obs::prof::tile_compute(crate::obs::now_ns().saturating_sub(pass_start));
+            }
         }
         // Fixed z-order reduction across every tile's slices.
         parts.sort_by_key(|&(z, _)| z);
         let ordered: Vec<PassPartial> = parts.into_iter().map(|(_, p)| p).collect();
         let total =
             tree_reduce(&ordered, PassPartial::combine).unwrap_or_else(|| PassPartial::zero(c));
+        if profiling {
+            let wall = crate::obs::now_ns().saturating_sub(iter_start);
+            crate::obs::prof::iter(it as u32, wall, total.delta, total.jm);
+        }
         jm_history.push(total.jm);
         final_delta = total.delta;
         if total.delta < params.epsilon {
@@ -694,6 +723,7 @@ fn tiles_streamed(
     let zeros = vec![0f32; c * area];
     let ctx = FusedCtx::build(domain_for_bits(src.sample_bits()), &centers, m, n);
     let (order, rank) = canonical_order(&centers);
+    let profiling = crate::obs::prof::active();
     for &(z0, nz) in &tiles {
         cancel.checkpoint()?;
         load_tile(src, z0, nz, area, &mut raw, &mut mraw, &mut x, &mut w)?;
@@ -711,7 +741,11 @@ fn tiles_streamed(
                 *l = if wi > 0.0 { rank[rl as usize] } else { 0 };
             }
         }
+        let write_start = if profiling { crate::obs::now_ns() } else { 0 };
         sink.write_slab(&labels[..nz * area])?;
+        if profiling {
+            crate::obs::prof::tile_write(crate::obs::now_ns().saturating_sub(write_start));
+        }
     }
 
     Ok(StreamRun {
@@ -992,6 +1026,7 @@ pub fn run_streamed_spatial_cancellable(
         });
     }
     assert!(params.max_iters >= 1, "max_iters must be >= 1");
+    crate::obs::prof::reserve_iters(2 * params.max_iters);
     let plain_opts = StreamOpts {
         backend: Backend::Parallel,
         ..*opts
@@ -1096,8 +1131,10 @@ pub fn run_streamed_spatial_cancellable(
         }};
     }
 
+    let profiling = crate::obs::prof::active();
     for _ in 0..params.max_iters {
         iterations += 1;
+        let iter_start = if profiling { crate::obs::now_ns() } else { 0 };
         // One intensity LUT per center vector per pass, shared by every
         // halo tile and lane (result-neutral).
         let ctx_prev = FusedCtx::build(domain, &prev_centers, m, n);
@@ -1188,7 +1225,14 @@ pub fn run_streamed_spatial_cancellable(
                 }
             }
         }
-        jm_history.push(jm.iter().sum());
+        let jm_total: f64 = jm.iter().sum();
+        if profiling {
+            // Continue phase 1's numbering: the profile sees one
+            // monotone iteration axis across both phases.
+            let wall = crate::obs::now_ns().saturating_sub(iter_start);
+            crate::obs::prof::iter((iterations - 1) as u32, wall, delta, jm_total);
+        }
+        jm_history.push(jm_total);
         final_delta = delta;
         prev_centers.copy_from_slice(&centers);
         prev_is_plain = false;
@@ -1241,7 +1285,11 @@ pub fn run_streamed_spatial_cancellable(
             }
             *l = if wts[off + i] > 0.0 { rank[best] } else { 0 };
         }
+        let write_start = if profiling { crate::obs::now_ns() } else { 0 };
         sink.write_slab(&labels[..len])?;
+        if profiling {
+            crate::obs::prof::tile_write(crate::obs::now_ns().saturating_sub(write_start));
+        }
     }
 
     Ok(StreamRun {

@@ -133,6 +133,7 @@ pub fn run_volume_from_cancellable(
     opts: &VolumeOpts,
     cancel: &CancelToken,
 ) -> Result<VolumeRun, Interrupted> {
+    crate::obs::prof::reserve_iters(params.max_iters);
     cancel.checkpoint()?;
     let run = match opts.backend {
         Backend::Parallel if vol.len() > 0 => run_slab_cancellable(vol, u0, params, opts, cancel)?,
@@ -164,6 +165,7 @@ pub fn run_volume_from(
     params: &FcmParams,
     opts: &VolumeOpts,
 ) -> VolumeRun {
+    crate::obs::prof::reserve_iters(params.max_iters);
     let n = vol.len();
     let c = params.clusters;
     assert_eq!(u0.len(), c * n, "membership length mismatch");
@@ -230,9 +232,11 @@ fn run_slab_cancellable(
     let mut iterations = 0;
     let mut converged = false;
 
+    let profiling = crate::obs::prof::active();
     for it in 0..params.max_iters {
         cancel.checkpoint()?;
         iterations += 1;
+        let iter_start = if profiling { crate::obs::now_ns() } else { 0 };
         // Voxels are u8 by construction: the per-iteration LUT always
         // applies (and is bit-neutral; see fused.rs).
         let ctx = FusedCtx::build(IntensityDomain::U8, &centers, m, n);
@@ -250,6 +254,10 @@ fn run_slab_cancellable(
             &mut u_new,
         );
         std::mem::swap(&mut u, &mut u_new);
+        if profiling {
+            let wall = crate::obs::now_ns().saturating_sub(iter_start);
+            crate::obs::prof::iter(it as u32, wall, total.delta, total.jm);
+        }
         jm_history.push(total.jm);
         final_delta = total.delta;
         if total.delta < params.epsilon {
@@ -366,13 +374,19 @@ pub(crate) fn bin_iterations(
     let mut final_delta = f32::INFINITY;
     let mut iterations = 0;
     let mut converged = false;
+    let profiling = crate::obs::prof::active();
     for it in 0..params.max_iters {
         iterations += 1;
+        let iter_start = if profiling { crate::obs::now_ns() } else { 0 };
         let part = {
             let mut rows: Vec<&mut [f32]> = u_bin_new.chunks_mut(bins).collect();
             fused_chunk(xb, wb, u_bin.as_slice(), bins, centers, m, 0, &mut rows)
         };
         std::mem::swap(u_bin, &mut u_bin_new);
+        if profiling {
+            let wall = crate::obs::now_ns().saturating_sub(iter_start);
+            crate::obs::prof::iter(it as u32, wall, part.delta, part.jm);
+        }
         jm_history.push(part.jm);
         final_delta = part.delta;
         if part.delta < params.epsilon {

@@ -36,12 +36,19 @@ pub fn run_from(x: &[f32], w: &[f32], mut u: Vec<f32>, params: &FcmParams) -> Fc
     let mut converged = false;
 
     let mut u_new = vec![0f32; c * n];
-    for _ in 0..params.max_iters {
+    let profiling = crate::obs::prof::active();
+    for it in 0..params.max_iters {
         iterations += 1;
+        let iter_start = if profiling { crate::obs::now_ns() } else { 0 };
         update_centers(x, w, &u, c, m, &mut centers);
         let delta = update_memberships(x, w, &centers, m, &u, &mut u_new);
         std::mem::swap(&mut u, &mut u_new);
-        jm_history.push(objective(x, w, &u, &centers, params.m));
+        let jm = objective(x, w, &u, &centers, params.m);
+        if profiling {
+            let wall = crate::obs::now_ns().saturating_sub(iter_start);
+            crate::obs::prof::iter(it as u32, wall, delta, jm);
+        }
+        jm_history.push(jm);
         final_delta = delta;
         if delta < params.epsilon {
             converged = true;

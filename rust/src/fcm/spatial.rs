@@ -201,8 +201,10 @@ where
     let mut iterations = plain.iterations;
     let mut converged = false;
 
+    let profiling = crate::obs::prof::active();
     for _ in 0..params.max_iters {
         iterations += 1;
+        let iter_start = if profiling { crate::obs::now_ns() } else { 0 };
         super::sequential::update_centers(x, w, &u, c, m, &mut centers);
         super::sequential::update_memberships(x, w, &centers, m, &u, &mut u_new);
         spatial_fn(&u_new, c, &mut h);
@@ -227,11 +229,16 @@ where
         // Per-cluster partials folded in ascending j — the same total
         // the streamed spatial engine reproduces from tile-accumulated
         // partials (objective_by_cluster docs).
-        jm_history.push(
-            super::objective_by_cluster(x, w, &u, &centers, params.m)
-                .iter()
-                .sum(),
-        );
+        let jm_total: f64 = super::objective_by_cluster(x, w, &u, &centers, params.m)
+            .iter()
+            .sum();
+        if profiling {
+            // Phase-2 samples continue the plain run's numbering (the
+            // inner loops already recorded 0..plain.iterations).
+            let wall = crate::obs::now_ns().saturating_sub(iter_start);
+            crate::obs::prof::iter((iterations - 1) as u32, wall, delta, jm_total);
+        }
+        jm_history.push(jm_total);
         final_delta = delta;
         if delta < params.epsilon {
             converged = true;

@@ -542,18 +542,29 @@ impl TilePrefetcher {
     }
 
     /// Make `[z0, z0+nz)` the resident tile (served from the prefetch
-    /// buffer on a hit, read on demand on a miss).
+    /// buffer on a hit, read on demand on a miss). Each fetch reports a
+    /// hit/miss (and the blocked wait on a miss) to the thread-local
+    /// profiler — the consumer calls from the engine thread, so the
+    /// observation lands in that run's profile.
     fn fetch(&mut self, z0: usize, nz: usize) -> Result<&PrefetchTile> {
+        let profiling = crate::obs::prof::active();
         let hit = matches!(&self.current, Some(t) if t.z0 == z0 && t.nz == nz);
         if !hit {
             let tx = self.req_tx.as_ref().expect("prefetcher running");
             if tx.send((z0, nz)).is_err() {
                 bail!("prefetch thread terminated");
             }
+            let wait_start = if profiling { crate::obs::now_ns() } else { 0 };
             let mut tile = self
                 .resp_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("prefetch thread terminated"))?;
+            if profiling {
+                crate::obs::prof::prefetch_fetch(
+                    false,
+                    crate::obs::now_ns().saturating_sub(wait_start),
+                );
+            }
             if let Some(err) = tile.err.take() {
                 let _ = self.recycle_tx.send(tile);
                 return Err(err);
@@ -562,6 +573,8 @@ impl TilePrefetcher {
                 let _ = self.recycle_tx.send(old);
             }
             self.current = Some(tile);
+        } else if profiling {
+            crate::obs::prof::prefetch_fetch(true, 0);
         }
         Ok(self.current.as_ref().expect("tile just stored"))
     }

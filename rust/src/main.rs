@@ -20,6 +20,8 @@ use repro::config::Config;
 use repro::coordinator::{Engine, Service};
 use repro::fcm::FcmParams;
 use repro::image::{pgm, volume, FeatureVector, LabelMap, VoxelVolume};
+use repro::obs::export::{self as obs_export, RunMeta};
+use repro::obs::prof;
 use repro::phantom::{self, PhantomConfig};
 use repro::report::experiments as exp;
 use repro::runtime::Registry;
@@ -117,6 +119,7 @@ fn run(args: &Args) -> Result<()> {
         "segment-volume" => segment_volume(args),
         "phantom" => phantom_cmd(args),
         "serve" => serve(args),
+        "metrics" => metrics_cmd(args),
         "bench-table1" => {
             let cfg = load_config(args)?;
             let runs = args.get_usize("runs", 5)?;
@@ -190,6 +193,42 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
+/// `REPRO_RUN_LOG=path` — every run appends one single-line JSON record
+/// there (id, cmd, engine, shape, iterations, stage timings, peak
+/// resident bytes). The bench-harness-friendly sibling of `--trace-out`.
+fn run_log_path() -> Option<String> {
+    std::env::var("REPRO_RUN_LOG").ok().filter(|p| !p.is_empty())
+}
+
+/// Whether this invocation wants an engine profile collected (either
+/// output sink is enough; `REPRO_TRACE=1` arms independently inside the
+/// engines for the result-neutrality CI leg).
+fn profile_wanted(args: &Args) -> bool {
+    args.get("trace-out").is_some() || run_log_path().is_some()
+}
+
+/// Emit the per-run records: `--trace-out FILE` gets the full document
+/// (with the per-iteration wall/delta/J_m array), `REPRO_RUN_LOG` gets
+/// the one-line summary appended.
+fn emit_run_records(
+    args: &Args,
+    meta: &RunMeta<'_>,
+    profile: Option<&repro::obs::EngineProfile>,
+) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        let doc = obs_export::run_record(meta, profile, true);
+        std::fs::write(path, format!("{doc}\n"))?;
+        println!("trace written to {path}");
+    }
+    if let Some(path) = run_log_path() {
+        use std::io::Write as _;
+        let line = obs_export::run_record(meta, profile, false);
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
+}
+
 /// `repro segment [--input x.pgm | --slice 96] [--engine device|seq|brfcm]`
 fn segment(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
@@ -237,9 +276,14 @@ fn segment(args: &Args) -> Result<()> {
     };
     let opts = repro::fcm::EngineOpts::from(&cfg.engine);
     let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
+    let profiled = profile_wanted(args);
+    if profiled {
+        prof::begin(params.max_iters);
+    }
     let t0 = std::time::Instant::now();
     let repro::coordinator::BackendRun { run, device: stats } = backend.segment(&fv, &params)?;
     let wall = t0.elapsed().as_secs_f64();
+    let profile = if profiled { prof::take() } else { None };
 
     println!(
         "engine={engine:?} pixels={} iters={} converged={} delta={:.5} wall={wall:.3}s",
@@ -264,6 +308,21 @@ fn segment(args: &Args) -> Result<()> {
         pgm::write(&lm.to_image(params.clusters as u8), Path::new(out))?;
         println!("segmentation written to {out}");
     }
+    let engine_name = format!("{engine:?}");
+    emit_run_records(
+        args,
+        &RunMeta {
+            id: 0,
+            cmd: "segment",
+            engine: &engine_name,
+            shape: vec![img.width, img.height],
+            iterations: run.iterations as u64,
+            converged: run.converged,
+            wall_s: wall,
+            peak_resident_bytes: None,
+        },
+        profile.as_ref(),
+    )?;
     Ok(())
 }
 
@@ -369,9 +428,16 @@ fn segment_volume(args: &Args) -> Result<()> {
     };
     let opts = repro::fcm::EngineOpts::from(&cfg.engine);
     let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
+    let profiled = profile_wanted(args);
+    if profiled {
+        // Per-slice fallbacks and two-phase spatial runs grow capacity
+        // themselves via `prof::reserve_iters` at each engine entry.
+        prof::begin(params.max_iters);
+    }
     let t0 = std::time::Instant::now();
     let out = backend.segment_volume(&vol, &params)?;
     let wall = t0.elapsed().as_secs_f64();
+    let profile = if profiled { prof::take() } else { None };
 
     println!(
         "engine={engine:?} path={} work/iter={} iters={} converged={} wall={wall:.3}s ({:.0} kvox/s)",
@@ -406,6 +472,21 @@ fn segment_volume(args: &Args) -> Result<()> {
         let paths = volume::save_pgm_stack(&seg(), Path::new(d))?;
         println!("segmentation written to {d} ({} slices)", paths.len());
     }
+    let engine_name = format!("{engine:?}");
+    emit_run_records(
+        args,
+        &RunMeta {
+            id: 0,
+            cmd: "segment-volume",
+            engine: &engine_name,
+            shape: vec![vol.width, vol.height, vol.depth],
+            iterations: out.iterations as u64,
+            converged: out.converged,
+            wall_s: wall,
+            peak_resident_bytes: None,
+        },
+        profile.as_ref(),
+    )?;
     Ok(())
 }
 
@@ -506,12 +587,20 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
         0 => CancelToken::never(),
         ms => CancelToken::with_timeout(std::time::Duration::from_millis(ms)),
     };
+    let profiled = profile_wanted(args);
     let t0 = std::time::Instant::now();
     let mut attempt = 0u32;
+    let mut dims = (0usize, 0usize, 0usize);
     let res = loop {
+        if profiled {
+            // Fresh profile per attempt: a retried run's record reflects
+            // the attempt that produced the output, not the failures.
+            prof::begin(params.max_iters);
+        }
         let run = (|| {
             let mut src = open_cli_stream_source(args, cfg, fault, attempt)?;
             let (w, h, d) = (src.width(), src.height(), src.depth());
+            dims = (w, h, d);
             if attempt == 0 {
                 println!(
                     "volume {w}x{h}x{d} = {} voxels ({} KB), streaming in {tile_slices}-slice \
@@ -559,6 +648,7 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
         }
     };
     let wall = t0.elapsed().as_secs_f64();
+    let profile = if profiled { prof::take() } else { None };
 
     println!(
         "engine={engine:?} path={} work/iter={} iters={} converged={} wall={wall:.3}s ({:.0} kvox/s)",
@@ -576,6 +666,21 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
     );
     println!("centers (ascending): {:?}", res.centers);
     println!("segmentation written to {out}");
+    let engine_name = format!("{engine:?}");
+    emit_run_records(
+        args,
+        &RunMeta {
+            id: 0,
+            cmd: "segment-volume-stream",
+            engine: &engine_name,
+            shape: vec![dims.0, dims.1, dims.2],
+            iterations: res.iterations as u64,
+            converged: res.converged,
+            wall_s: wall,
+            peak_resident_bytes: Some(res.peak_resident_bytes as u64),
+        },
+        profile.as_ref(),
+    )?;
     Ok(())
 }
 
@@ -623,6 +728,12 @@ fn phantom_cmd(args: &Args) -> Result<()> {
 /// `repro serve --jobs 32 [--engine device] --workers N`
 /// Drives the batching service with a synthetic multi-slice workload and
 /// prints the service metrics (the paper's pipeline as a server).
+///
+/// Exposition: the shutdown snapshot always dumps in both formats
+/// (Prometheus text, then one JSON line); `metrics_interval_ms > 0`
+/// additionally dumps the live Prometheus text to stderr on that period
+/// while the service runs. `REPRO_RUN_LOG=path` appends one JSON record
+/// per job, built from that job's trace.
 fn serve(args: &Args) -> Result<()> {
     let mut cfg = load_config(args)?;
     // `--batch false` disables the one-invocation batched execution
@@ -636,6 +747,29 @@ fn serve(args: &Args) -> Result<()> {
         cfg.service.workers, cfg.service.max_batch, cfg.service.batch_execute
     );
     let service = Service::start(&cfg)?;
+
+    // Periodic exporter: a sampler thread dumps the live snapshot as
+    // Prometheus text to stderr every `metrics_interval_ms` (0 = off).
+    let dumper = (cfg.service.metrics_interval_ms > 0).then(|| {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let metrics = std::sync::Arc::clone(&service.metrics);
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let flag = std::sync::Arc::clone(&stop);
+        let period = std::time::Duration::from_millis(cfg.service.metrics_interval_ms);
+        let handle = std::thread::spawn(move || {
+            let tick = period.min(std::time::Duration::from_millis(20));
+            let mut next = std::time::Instant::now() + period;
+            while !flag.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                if std::time::Instant::now() >= next {
+                    eprint!("{}", metrics.snapshot().to_prometheus());
+                    next = std::time::Instant::now() + period;
+                }
+            }
+        });
+        (stop, handle)
+    });
+
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = (0..jobs)
         .map(|i| {
@@ -644,16 +778,49 @@ fn serve(args: &Args) -> Result<()> {
                 seed: cfg.fcm.seed.wrapping_add(i as u64),
                 ..PhantomConfig::default()
             });
-            service.submit_image(&s.image, params, engine)
+            let shape = vec![s.image.width, s.image.height];
+            service.submit_image(&s.image, params, engine).map(|t| (t, shape))
         })
         .collect::<Result<_>>()?;
+    let run_log = run_log_path();
+    let mut job_records = Vec::new();
     let mut total_iters = 0usize;
-    for t in tickets {
+    for (t, shape) in tickets {
+        let (id, trace) = (t.id, t.trace());
         let r = t.wait()?;
         total_iters += r.iterations;
+        if run_log.is_some() {
+            let summary = trace.summary();
+            let engine_name = format!("{:?}", r.engine);
+            let wall_s = summary.stage(repro::obs::Stage::Execute).total_ns as f64 / 1e9;
+            job_records.push(obs_export::run_record_with_summary(
+                &RunMeta {
+                    id,
+                    cmd: "serve",
+                    engine: &engine_name,
+                    shape,
+                    iterations: r.iterations as u64,
+                    converged: r.converged,
+                    wall_s,
+                    peak_resident_bytes: None,
+                },
+                &summary,
+            ));
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = service.shutdown();
+    if let Some((stop, handle)) = dumper {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = handle.join();
+    }
+    if let Some(path) = run_log {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        for rec in &job_records {
+            writeln!(f, "{rec}")?;
+        }
+    }
     println!(
         "done in {wall:.2}s  throughput {:.2} jobs/s  total iterations {total_iters}",
         jobs as f64 / wall
@@ -664,7 +831,59 @@ fn serve(args: &Args) -> Result<()> {
             e.engine, e.batches, e.mean_batch_size, e.mean_batch_latency_s
         );
     }
-    println!("{snap:#?}");
+    // Shutdown dump, both exporters (the obs-smoke CI leg parses these).
+    print!("{}", snap.to_prometheus());
+    println!("{}", snap.to_json_line());
+    Ok(())
+}
+
+/// `repro metrics [--jobs 4] [--engine ...] [--check]`
+/// Runs a small synthetic workload through the service and dumps the
+/// final metrics snapshot in both exposition formats: Prometheus text,
+/// then one JSON line. `--check` self-validates every exposition line
+/// and the JSON round-trip first (the CI obs-smoke leg runs this).
+fn metrics_cmd(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let jobs = args.get_usize("jobs", 4)?;
+    let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
+    let params = FcmParams::from(&cfg.fcm);
+    let service = Service::start(&cfg)?;
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let s = phantom::generate_slice(&PhantomConfig {
+                slice: 80 + (i * 7) % 40,
+                seed: cfg.fcm.seed.wrapping_add(i as u64),
+                ..PhantomConfig::default()
+            });
+            service.submit_image(&s.image, params, engine)
+        })
+        .collect::<Result<_>>()?;
+    for t in tickets {
+        t.wait()?;
+    }
+    let snap = service.shutdown();
+    let prom = snap.to_prometheus();
+    let json = snap.to_json_line();
+    if args.flag("check") {
+        for line in prom.lines() {
+            if let Some(err) = obs_export::check_exposition_line(line) {
+                bail!("malformed exposition line {line:?}: {err}");
+            }
+        }
+        let parsed = repro::obs::Json::parse(&json)
+            .map_err(|e| anyhow::anyhow!("metrics JSON does not parse: {e}"))?;
+        let again = repro::obs::Json::parse(&parsed.to_string())
+            .map_err(|e| anyhow::anyhow!("metrics JSON does not re-parse: {e}"))?;
+        if again != parsed {
+            bail!("metrics JSON does not round-trip");
+        }
+        eprintln!(
+            "[metrics] {} exposition lines OK, JSON round-trips",
+            prom.lines().count()
+        );
+    }
+    print!("{prom}");
+    println!("{json}");
     Ok(())
 }
 
@@ -708,18 +927,26 @@ USAGE: repro <subcommand> [options]
 
   segment        --input x.pgm | --slice 96
                  [--engine auto|device|device-ref|seq|parallel|histogram|brfcm|spatial]
-                 [--skull-strip] [--out seg.pgm] [--trace]
+                 [--skull-strip] [--out seg.pgm] [--trace] [--trace-out t.json]
   segment-volume --input-raw v.rvol | --input-dir slices/ |
                  --slices 41 --start 80 --step 1 --noise 4  (phantom volume)
                  [--engine auto|parallel|histogram|spatial|seq|...]
                  [--mask-raw m.rvol] [--out-raw seg.rvol] [--out-dir segdir]
                  [--stream --tile-slices 8 --prefetch true|false]
+                 [--trace-out t.json]
                  (out-of-core: RVOL file or PGM-stack dir in, RVOL out,
                  volume never materialized; double-buffered prefetch)
   phantom        --slice 96 [--ground-truth] [--with-skull] [--out dir]
                  --volume --slices 24 --start 80 --out-raw v.rvol  (RVOL gen)
   serve          --jobs 32 [--engine auto|device|seq|parallel|histogram|brfcm|spatial]
                  [--workers N] [--batch true|false]
+                 [--metrics_interval_ms 250]  (periodic Prometheus dump
+                 to stderr while serving; shutdown always dumps both
+                 Prometheus text and a single JSON line)
+  metrics        [--jobs 4] [--engine ...] [--check]  (run a small
+                 synthetic workload, dump the metrics snapshot as
+                 Prometheus text + one JSON line; --check self-validates
+                 both renderings — the CI obs-smoke leg)
   bench-table1   [--runs 5]
   bench-table3   [--quick] [--sizes 20KB,100KB,1MB] [--runs 5]
   bench-fig5     [--out out/fig5]
@@ -742,6 +969,14 @@ COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         omit for unlimited — 0 is rejected)
         (host-engine + service + fault-tolerance knobs; see README
         'Architecture' and 'Fault tolerance')
+
+Observability: segment / segment-volume take --trace-out trace.json
+(per-run JSON trace: stage timings + per-iteration wall/delta/J_m;
+result-neutral — outputs are bit-identical with tracing on or off).
+REPRO_RUN_LOG=path appends one single-line JSON record per run (or per
+serve job): id, cmd, engine, shape, iterations, stage timings, peak
+resident bytes. REPRO_TRACE=1 arms the engine profiler everywhere (the
+CI result-neutrality leg). See README 'Observability'.
 
 Fault tolerance: streamed jobs retry transient I/O failures with
 deterministic seeded backoff (safe: engines are bit-identical across

@@ -1,0 +1,775 @@
+//! Exporters: Prometheus-style text exposition and a minimal JSON value
+//! (writer *and* parser — the offline build has no serde_json, so the
+//! round-trip reader lives here too; it is what the CI `obs-smoke` job
+//! and the bench harness of ROADMAP item 5 parse).
+
+use std::fmt::Write as _;
+
+/// One metric sample: `name{labels} value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    /// Label pairs, rendered in order (empty → no `{}` block).
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// An ordered set of metric samples, renderable as Prometheus text
+/// exposition or as one JSON object line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Exposition {
+    pub metrics: Vec<Metric>,
+}
+
+impl Exposition {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an unlabeled metric.
+    pub fn push(&mut self, name: &str, value: f64) {
+        self.push_labeled(name, &[], value);
+    }
+
+    /// Append a labeled metric.
+    pub fn push_labeled(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        debug_assert!(is_metric_name(name), "bad metric name {name:?}");
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            value,
+        });
+    }
+
+    /// Find a metric by name and exact label set.
+    pub fn get(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.metrics
+            .iter()
+            .find(|m| {
+                m.name == name
+                    && m.labels.len() == labels.len()
+                    && m.labels
+                        .iter()
+                        .zip(labels.iter())
+                        .all(|((ak, av), (bk, bv))| ak == bk && av == bv)
+            })
+            .map(|m| m.value)
+    }
+
+    /// Prometheus text exposition: one `name{k="v",...} value` line per
+    /// metric, newline-terminated.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for m in &self.metrics {
+            out.push_str(&m.name);
+            if !m.labels.is_empty() {
+                out.push('{');
+                for (i, (k, v)) in m.labels.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "{}=\"{}\"", k, escape_label(v));
+                }
+                out.push('}');
+            }
+            let _ = writeln!(out, " {}", fmt_value(m.value));
+        }
+        out
+    }
+
+    /// Single-line JSON object. Unlabeled metrics become top-level keys;
+    /// labeled metrics become arrays of `{labels..., "value": v}` rows
+    /// keyed by metric name (order preserved).
+    pub fn to_json(&self) -> Json {
+        let mut obj: Vec<(String, Json)> = Vec::new();
+        for m in &self.metrics {
+            if m.labels.is_empty() {
+                obj.push((m.name.clone(), Json::Num(m.value)));
+                continue;
+            }
+            let mut row: Vec<(String, Json)> =
+                m.labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+            row.push(("value".to_string(), Json::Num(m.value)));
+            match obj.iter_mut().find(|(k, _)| *k == m.name) {
+                Some((_, Json::Arr(rows))) => rows.push(Json::Obj(row)),
+                Some(_) => unreachable!("metric name collides with scalar key"),
+                None => obj.push((m.name.clone(), Json::Arr(vec![Json::Obj(row)]))),
+            }
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn to_json_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*` — the Prometheus metric-name grammar.
+pub fn is_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a value: integral f64s print without a fraction so counters
+/// stay integer-shaped; everything else uses shortest-round-trip float
+/// formatting.
+pub fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Validate one exposition line as `name{labels} value`. Returns a
+/// description of the problem, or `None` if the line is well-formed.
+/// (Used by tests and the `metrics --check` self-validation.)
+pub fn check_exposition_line(line: &str) -> Option<String> {
+    let (head, value) = match line.rsplit_once(' ') {
+        Some(x) => x,
+        None => return Some("no space before value".into()),
+    };
+    if value.parse::<f64>().is_err() {
+        return Some(format!("unparseable value {value:?}"));
+    }
+    let name = match head.split_once('{') {
+        None => head,
+        Some((name, rest)) => {
+            let Some(body) = rest.strip_suffix('}') else {
+                return Some("unterminated label block".into());
+            };
+            for pair in split_labels(body) {
+                let Some((k, v)) = pair.split_once('=') else {
+                    return Some(format!("label {pair:?} missing '='"));
+                };
+                if !is_metric_name(k) {
+                    return Some(format!("bad label name {k:?}"));
+                }
+                if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+                    return Some(format!("label value {v:?} not quoted"));
+                }
+            }
+            name
+        }
+    };
+    if !is_metric_name(name) {
+        return Some(format!("bad metric name {name:?}"));
+    }
+    None
+}
+
+/// Split a label body on commas that are not inside quotes.
+fn split_labels(body: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut start, mut in_str, mut esc) = (0usize, false, false);
+    for (i, c) in body.char_indices() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < body.len() {
+        out.push(&body[start..]);
+    }
+    out
+}
+
+/// Identity and outcome of one run, for [`run_record`]. CLI runs use
+/// `id` 0; service jobs use their ticket id.
+pub struct RunMeta<'a> {
+    pub id: u64,
+    /// Subcommand that produced the run (`segment`, `serve`, ...).
+    pub cmd: &'a str,
+    pub engine: &'a str,
+    /// Input dimensions: `[w, h]` for images, `[w, h, d]` for volumes.
+    pub shape: Vec<usize>,
+    pub iterations: u64,
+    pub converged: bool,
+    pub wall_s: f64,
+    /// Streamed runs report their bounded-memory evidence.
+    pub peak_resident_bytes: Option<u64>,
+}
+
+fn agg_json(count: u64, total_ns: u64) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(count as f64)),
+        ("total_ns", Json::Num(total_ns as f64)),
+    ])
+}
+
+/// Engine-side stage aggregates of one profile as a JSON object keyed by
+/// [`super::span::Stage::name`]-style keys.
+pub fn profile_stages_json(p: &super::span::EngineProfile) -> Json {
+    Json::obj(vec![
+        ("iteration", agg_json(p.iters.len() as u64 + p.dropped_iters, p.iter_total_ns())),
+        ("tile_read", agg_json(p.tile_reads, p.tile_read_ns)),
+        ("tile_compute", agg_json(p.tile_computes, p.tile_compute_ns)),
+        ("tile_write", agg_json(p.tile_writes, p.tile_write_ns)),
+        ("prefetch_wait", agg_json(p.prefetch_hits + p.prefetch_misses, p.prefetch_wait_ns)),
+    ])
+}
+
+/// Per-stage totals of one trace as a JSON object (nonzero stages only).
+pub fn summary_stages_json(s: &super::trace::TraceSummary) -> Json {
+    Json::Obj(
+        s.nonzero()
+            .map(|(stage, t)| {
+                (
+                    stage.name().to_string(),
+                    Json::obj(vec![
+                        ("count", Json::Num(t.count as f64)),
+                        ("total_ns", Json::Num(t.total_ns as f64)),
+                        ("max_ns", Json::Num(t.max_ns as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn run_record_header(meta: &RunMeta<'_>) -> Vec<(String, Json)> {
+    let mut pairs = vec![
+        ("id".to_string(), Json::Num(meta.id as f64)),
+        ("cmd".to_string(), Json::Str(meta.cmd.to_string())),
+        ("engine".to_string(), Json::Str(meta.engine.to_string())),
+        (
+            "shape".to_string(),
+            Json::Arr(meta.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        ("iterations".to_string(), Json::Num(meta.iterations as f64)),
+        ("converged".to_string(), Json::Bool(meta.converged)),
+        ("wall_s".to_string(), Json::Num(meta.wall_s)),
+    ];
+    if let Some(b) = meta.peak_resident_bytes {
+        pairs.push(("peak_resident_bytes".to_string(), Json::Num(b as f64)));
+    }
+    pairs
+}
+
+/// The per-run JSON record: the single `REPRO_RUN_LOG` line, and (with
+/// `with_iters`) the full `--trace-out` document including the
+/// per-iteration wall/delta/J_m array.
+pub fn run_record(
+    meta: &RunMeta<'_>,
+    profile: Option<&super::span::EngineProfile>,
+    with_iters: bool,
+) -> Json {
+    let mut pairs = run_record_header(meta);
+    if let Some(p) = profile {
+        pairs.push(("stages".to_string(), profile_stages_json(p)));
+        pairs.push((
+            "prefetch".to_string(),
+            Json::obj(vec![
+                ("hits", Json::Num(p.prefetch_hits as f64)),
+                ("misses", Json::Num(p.prefetch_misses as f64)),
+                ("wait_ns", Json::Num(p.prefetch_wait_ns as f64)),
+            ]),
+        ));
+        if with_iters {
+            pairs.push(("dropped_iters".to_string(), Json::Num(p.dropped_iters as f64)));
+            pairs.push((
+                "iters".to_string(),
+                Json::Arr(
+                    p.iters
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("iter", Json::Num(s.iter as f64)),
+                                ("wall_ns", Json::Num(s.wall_ns as f64)),
+                                ("delta", Json::Num(s.delta as f64)),
+                                ("jm", Json::Num(s.jm)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+    }
+    Json::Obj(pairs)
+}
+
+/// The per-job JSON record for service jobs: same header, but stages
+/// come from the job's [`super::trace::TraceSummary`] (which folds the
+/// coordinator-side spans in alongside the engine profile).
+pub fn run_record_with_summary(
+    meta: &RunMeta<'_>,
+    summary: &super::trace::TraceSummary,
+) -> Json {
+    let mut pairs = run_record_header(meta);
+    pairs.push(("dropped_events".to_string(), Json::Num(summary.dropped_events as f64)));
+    pairs.push(("stages".to_string(), summary_stages_json(summary)));
+    Json::Obj(pairs)
+}
+
+/// Minimal JSON value. Objects preserve insertion order (`Vec` of pairs)
+/// so written output is deterministic and round-trips structurally.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Member lookup on objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document. Rejects trailing garbage.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        Ok(v)
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    f.write_str(&fmt_value(*n))
+                } else {
+                    f.write_str("null") // JSON has no Inf/NaN
+                }
+            }
+            Json::Str(s) => write_json_string(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{it}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(pairs) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_json_string(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_json_string(f: &mut std::fmt::Formatter<'_>, s: &str) -> std::fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => f.write_char(c)?,
+        }
+    }
+    f.write_str("\"")
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {:?} at offset {}", other.map(|c| c as char), self.i)),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at offset {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        fn numeric(c: u8) -> bool {
+            c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        }
+        while matches!(self.peek(), Some(c) if numeric(c)) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number {text:?} at offset {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err("short \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        other => return Err(format!("bad escape {other:?}")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str, so
+                    // slicing on char boundaries is safe).
+                    let rest = std::str::from_utf8(&self.b[self.i..]).map_err(|e| e.to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at offset {}", self.i)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_renders_and_validates() {
+        let mut e = Exposition::new();
+        e.push("repro_jobs_submitted_total", 5.0);
+        e.push_labeled("repro_engine_batches_total", &[("engine", "parallel")], 2.0);
+        e.push("repro_service_p99_seconds", 0.001523);
+        let text = e.to_prometheus();
+        assert_eq!(
+            text,
+            "repro_jobs_submitted_total 5\n\
+             repro_engine_batches_total{engine=\"parallel\"} 2\n\
+             repro_service_p99_seconds 0.001523\n"
+        );
+        for line in text.lines() {
+            assert_eq!(check_exposition_line(line), None, "line {line:?}");
+        }
+        assert_eq!(e.get("repro_jobs_submitted_total", &[]), Some(5.0));
+        assert_eq!(e.get("repro_engine_batches_total", &[("engine", "parallel")]), Some(2.0));
+        assert_eq!(e.get("repro_engine_batches_total", &[("engine", "spatial")]), None);
+    }
+
+    #[test]
+    fn malformed_exposition_lines_are_rejected() {
+        assert!(check_exposition_line("no_value").is_some());
+        assert!(check_exposition_line("name notanumber").is_some());
+        assert!(check_exposition_line("9bad_name 1").is_some());
+        assert!(check_exposition_line("name{unterminated 1").is_some());
+        assert!(check_exposition_line("name{k=unquoted} 1").is_some());
+        assert!(check_exposition_line("name{k=\"v\"} 1").is_none());
+        assert!(check_exposition_line("name{k=\"a,b\",j=\"c\"} 1.5e-3").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let v = Json::obj(vec![
+            ("id", Json::Num(42.0)),
+            ("engine", Json::Str("parallel".into())),
+            ("wall_s", Json::Num(0.1)),
+            ("neg", Json::Num(-1.5e-9)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("shape", Json::Arr(vec![Json::Num(8.0), Json::Num(8.0), Json::Num(6.0)])),
+            ("weird key \"quoted\"\n", Json::Str("tab\there".into())),
+        ]);
+        let text = v.to_string();
+        assert!(!text.contains('\n'), "single line: {text:?}");
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v);
+        // And a second trip is byte-stable.
+        assert_eq!(back.to_string(), text);
+    }
+
+    #[test]
+    fn json_parser_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} trailing").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn exposition_json_groups_labeled_rows() {
+        let mut e = Exposition::new();
+        e.push("total", 3.0);
+        e.push_labeled("per_engine", &[("engine", "a")], 1.0);
+        e.push_labeled("per_engine", &[("engine", "b")], 2.0);
+        let j = e.to_json();
+        assert_eq!(j.get("total").and_then(Json::as_f64), Some(3.0));
+        let rows = j.get("per_engine").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("engine").and_then(Json::as_str), Some("b"));
+        assert_eq!(rows[1].get("value").and_then(Json::as_f64), Some(2.0));
+        let back = Json::parse(&e.to_json_line()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn run_record_roundtrips_with_and_without_iters() {
+        use crate::obs::span::{EngineProfile, IterSample};
+        let p = EngineProfile {
+            iters: vec![
+                IterSample { iter: 0, wall_ns: 1000, delta: 0.5, jm: 4.0 },
+                IterSample { iter: 1, wall_ns: 1200, delta: 0.125, jm: 2.0 },
+            ],
+            tile_reads: 6,
+            tile_read_ns: 900,
+            tile_writes: 6,
+            tile_write_ns: 300,
+            prefetch_hits: 5,
+            prefetch_misses: 1,
+            prefetch_wait_ns: 40,
+            ..Default::default()
+        };
+        let meta = RunMeta {
+            id: 0,
+            cmd: "segment-volume-stream",
+            engine: "Histogram",
+            shape: vec![8, 8, 6],
+            iterations: 2,
+            converged: true,
+            wall_s: 0.25,
+            peak_resident_bytes: Some(4096),
+        };
+        // The run-log line: header + stage aggregates, no iters array.
+        let line = run_record(&meta, Some(&p), false);
+        let text = line.to_string();
+        assert!(!text.contains('\n'));
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, line);
+        assert_eq!(back.get("peak_resident_bytes").and_then(Json::as_f64), Some(4096.0));
+        let stages = back.get("stages").unwrap();
+        assert_eq!(
+            stages.get("tile_read").and_then(|t| t.get("total_ns")).and_then(Json::as_f64),
+            Some(900.0)
+        );
+        assert!(back.get("iters").is_none());
+
+        // The trace-out document adds the per-iteration array.
+        let doc = run_record(&meta, Some(&p), true);
+        let iters = doc.get("iters").and_then(Json::as_arr).unwrap();
+        assert_eq!(iters.len(), 2);
+        assert_eq!(iters[1].get("wall_ns").and_then(Json::as_f64), Some(1200.0));
+        assert_eq!(iters[1].get("jm").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc);
+
+        // Without a profile, only the header is present.
+        let bare = run_record(&meta, None, true);
+        assert!(bare.get("stages").is_none());
+        assert_eq!(bare.get("cmd").and_then(Json::as_str), Some("segment-volume-stream"));
+    }
+
+    #[test]
+    fn run_record_with_summary_uses_exact_stage_totals() {
+        use crate::obs::span::Stage;
+        use crate::obs::trace::TraceLog;
+        let log = TraceLog::new(42, 16);
+        log.record(Stage::Queue, 0, 500, 0);
+        log.record(Stage::Execute, 500, 2000, 0);
+        log.record(Stage::Execute, 2500, 1000, 0);
+        let meta = RunMeta {
+            id: 42,
+            cmd: "serve",
+            engine: "Parallel",
+            shape: vec![181, 217],
+            iterations: 9,
+            converged: true,
+            wall_s: 0.003,
+            peak_resident_bytes: None,
+        };
+        let rec = run_record_with_summary(&meta, &log.summary());
+        assert_eq!(rec.get("id").and_then(Json::as_f64), Some(42.0));
+        assert!(rec.get("peak_resident_bytes").is_none());
+        let ex = rec.get("stages").and_then(|s| s.get("execute")).unwrap();
+        assert_eq!(ex.get("count").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(ex.get("total_ns").and_then(Json::as_f64), Some(3000.0));
+        assert_eq!(ex.get("max_ns").and_then(Json::as_f64), Some(2000.0));
+        // Stages that never recorded are absent, not zero-filled.
+        assert!(rec.get("stages").and_then(|s| s.get("tile_read")).is_none());
+        assert_eq!(Json::parse(&rec.to_string()).unwrap(), rec);
+    }
+
+    #[test]
+    fn fmt_value_shapes() {
+        assert_eq!(fmt_value(5.0), "5");
+        assert_eq!(fmt_value(-3.0), "-3");
+        assert_eq!(fmt_value(0.5), "0.5");
+        assert_eq!(fmt_value(1.5e-9), "0.0000000015");
+        let parsed: f64 = fmt_value(0.1).parse().unwrap();
+        assert_eq!(parsed, 0.1);
+    }
+}

@@ -1,0 +1,354 @@
+//! HDR-style log-bucketed latency histogram.
+//!
+//! Values are u64 nanoseconds. Buckets are power-of-2 *groups* split into
+//! `SUB = 32` linear sub-buckets each, so relative bucket width is at
+//! most 1/32 (~3.1%) everywhere while the whole u64 range fits in 1920
+//! buckets. Values below 32 ns get exact single-value buckets.
+//!
+//! Everything is a relaxed atomic: recording is lock-free and
+//! allocation-free (the bucket array is allocated at construction), so
+//! the histogram is safe to feed from the service hot path. Count, sum,
+//! min and max are tracked exactly in separate atomics; quantiles are
+//! *sample-exact up to bucketization*: `quantile(q)` returns
+//! `bucket_floor(s)` where `s` is the true rank-`ceil(q*n)` order
+//! statistic of everything recorded — a testable exactness contract
+//! (see `rust/tests/obs.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the sub-bucket count per power-of-2 group.
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per group (values below `SUB` are bucketed exactly).
+const SUB: u64 = 1 << SUB_BITS;
+/// Total bucket count: index of `u64::MAX` is `58*32 + 63 = 1919`.
+pub const BUCKETS: usize = 1920;
+
+/// Bucket index for a value. Monotone non-decreasing in `v`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let top = 63 - v.leading_zeros(); // position of highest set bit, >= SUB_BITS
+    let shift = top - SUB_BITS;
+    (shift as usize) * SUB as usize + (v >> shift) as usize
+}
+
+/// Smallest value that lands in the same bucket as `v` (the bucket's low
+/// bound). This is the canonical "bucketized value" quantiles return.
+#[inline]
+pub fn bucket_floor(v: u64) -> u64 {
+    if v < SUB {
+        return v;
+    }
+    let top = 63 - v.leading_zeros();
+    let shift = top - SUB_BITS;
+    (v >> shift) << shift
+}
+
+/// `[low, high]` value range of bucket `i` (inverse of [`bucket_index`]).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB as usize {
+        return (i as u64, i as u64);
+    }
+    let shift = (i / SUB as usize - 1) as u32;
+    let m = (i - (shift as usize) * SUB as usize) as u64; // in [SUB, 2*SUB)
+    let low = m << shift;
+    (low, low + (1u64 << shift) - 1)
+}
+
+/// Lock-free log-bucketed histogram over u64 nanosecond samples.
+pub struct LatencyHist {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        // Box<[AtomicU64; BUCKETS]> without a large stack temporary.
+        let v: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let boxed: Box<[AtomicU64; BUCKETS]> =
+            v.into_boxed_slice().try_into().unwrap_or_else(|_| unreachable!());
+        LatencyHist {
+            buckets: boxed,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Record one sample. Four relaxed RMWs; never blocks or allocates.
+    pub fn record(&self, v_ns: u64) {
+        self.buckets[bucket_index(v_ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v_ns, Ordering::Relaxed);
+        self.max.fetch_max(v_ns, Ordering::Relaxed);
+        self.min.fetch_min(v_ns, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] (saturating at u64::MAX ns).
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of all recorded samples, in ns.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max_ns(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.max.load(Ordering::Relaxed)
+        }
+    }
+
+    /// Exact minimum recorded sample (0 when empty).
+    pub fn min_ns(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.min.load(Ordering::Relaxed)
+        }
+    }
+
+    /// Exact mean in ns (0.0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns() as f64 / n as f64
+        }
+    }
+
+    /// Quantile `q in [0,1]`: the bucket floor of the true rank-
+    /// `clamp(ceil(q*n), 1, n)` order statistic. Monotone in `q`; exact
+    /// with respect to the recorded samples up to bucketization.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_bounds(i).0;
+            }
+        }
+        // Racing recorders can make `count` visible before the bucket
+        // increment; fall back to the max we have seen.
+        self.max_ns()
+    }
+
+    /// Fold another histogram into this one (bucket-wise add; exact
+    /// count/sum add; min/max fold). The result is indistinguishable
+    /// from having recorded the concatenation of both sample streams.
+    pub fn merge(&self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = b.load(Ordering::Relaxed);
+            if v != 0 {
+                a.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy for comparison and export.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let nonzero: Vec<(usize, u64)> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let v = b.load(Ordering::Relaxed);
+                (v != 0).then_some((i, v))
+            })
+            .collect();
+        HistSnapshot {
+            count: self.count(),
+            sum_ns: self.sum_ns(),
+            min_ns: self.min_ns(),
+            max_ns: self.max_ns(),
+            nonzero,
+        }
+    }
+
+    /// Summary statistics for `Snapshot` / exporters.
+    pub fn stats(&self) -> LatencyStats {
+        LatencyStats {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.quantile(0.50),
+            p95_ns: self.quantile(0.95),
+            p99_ns: self.quantile(0.99),
+            max_ns: self.max_ns(),
+        }
+    }
+}
+
+impl std::fmt::Debug for LatencyHist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHist")
+            .field("count", &self.count())
+            .field("sum_ns", &self.sum_ns())
+            .field("max_ns", &self.max_ns())
+            .finish()
+    }
+}
+
+/// Immutable copy of a histogram's contents (only non-empty buckets).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    /// `(bucket_index, count)` for every non-empty bucket, ascending.
+    pub nonzero: Vec<(usize, u64)>,
+}
+
+/// Latency summary in exact ns, as exported in `Snapshot`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencyStats {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+    pub fn p50_s(&self) -> f64 {
+        self.p50_ns as f64 / 1e9
+    }
+    pub fn p95_s(&self) -> f64 {
+        self.p95_ns as f64 / 1e9
+    }
+    pub fn p99_s(&self) -> f64 {
+        self.p99_ns as f64 / 1e9
+    }
+    pub fn max_s(&self) -> f64 {
+        self.max_ns as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference bucketing: scan `bucket_bounds` directly.
+    fn index_by_scan(v: u64) -> usize {
+        (0..BUCKETS)
+            .find(|&i| {
+                let (lo, hi) = bucket_bounds(i);
+                lo <= v && v <= hi
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn index_matches_bounds_scan_on_edges() {
+        for &v in &[
+            0u64,
+            1,
+            31,
+            32,
+            33,
+            63,
+            64,
+            65,
+            999,
+            1_000,
+            1_001,
+            999_999,
+            1_000_000,
+            1_000_001,
+            999_999_999,
+            1_000_000_000,
+            1_000_000_001,
+            u64::MAX,
+        ] {
+            assert_eq!(bucket_index(v), index_by_scan(v), "v={v}");
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && v <= hi, "v={v} not within its bucket [{lo},{hi}]");
+            assert_eq!(bucket_floor(v), lo, "v={v}");
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_exact_below_sub() {
+        let mut prev = 0usize;
+        for v in 0..4096u64 {
+            let i = bucket_index(v);
+            assert!(i >= prev);
+            prev = i;
+            if v < SUB {
+                assert_eq!(i, v as usize);
+                assert_eq!(bucket_floor(v), v);
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_bucket_width_bound() {
+        for &v in &[100u64, 1_000, 1_000_000, 1_000_000_000, 123_456_789_012] {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            // Width is at most lo/32, i.e. ~3.1% relative error.
+            assert!(hi - lo <= lo / SUB + 1, "v={v} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn exact_stats_small_values() {
+        let h = LatencyHist::new();
+        for v in [3u64, 1, 4, 1, 5] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_ns(), 14);
+        assert_eq!(h.min_ns(), 1);
+        assert_eq!(h.max_ns(), 5);
+        // Values < 32 bucket exactly, so quantiles are exact too.
+        assert_eq!(h.quantile(0.5), 3);
+        assert_eq!(h.quantile(1.0), 5);
+        assert_eq!(h.quantile(0.0), 1);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.stats(), LatencyStats::default());
+    }
+}

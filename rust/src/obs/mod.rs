@@ -1,0 +1,40 @@
+//! Observability substrate: spans, histograms, traces, and exporters.
+//!
+//! This module is dependency-free (std only) and sits *below* every other
+//! layer — the coordinator, the engines, and the image layer all record
+//! into it, and `main.rs` / the service read back out of it. Three rules
+//! govern everything here (see DESIGN.md "Observability"):
+//!
+//! 1. **Result-neutral.** Nothing in this module may influence engine
+//!    output. Hooks observe; they never steer. The golden-fixture and
+//!    bit-identity suites run with tracing on and off and must agree.
+//! 2. **Lock-free on the hot path.** Recording a sample or a span is a
+//!    handful of relaxed atomic RMWs ([`hist::LatencyHist::record`],
+//!    [`trace::TraceLog::record`]) or a thread-local push into
+//!    preallocated capacity ([`span::prof`]). No mutexes, no channels.
+//! 3. **No allocation inside engine loops.** Spans sit at iteration and
+//!    tile boundaries — exactly where [`crate::fcm::engine::cancel`]
+//!    checkpoints already live — and never inside `fused` kernels.
+//!    Per-iteration sample storage is reserved up front
+//!    ([`span::prof::reserve_iters`]); pushes past capacity are counted
+//!    and dropped, never reallocated.
+//!
+//! Layout:
+//! * [`span`] — stage taxonomy, the monotonic clock, and the thread-local
+//!   engine profiler (`prof`).
+//! * [`hist`] — HDR-style log-bucketed latency histogram with exact
+//!   count/sum/min/max and sample-exact quantiles.
+//! * [`trace`] — bounded lock-free per-job `TraceLog` (event ring +
+//!   exact per-stage totals).
+//! * [`export`] — Prometheus-style text exposition, a minimal JSON
+//!   value/writer/parser, and the `--trace-out` / run-log record shapes.
+
+pub mod export;
+pub mod hist;
+pub mod span;
+pub mod trace;
+
+pub use export::{Exposition, Json};
+pub use hist::{HistSnapshot, LatencyHist, LatencyStats};
+pub use span::{now_ns, prof, EngineProfile, IterSample, Stage};
+pub use trace::{StageTotal, TraceEvent, TraceLog, TraceSummary};

@@ -1,0 +1,392 @@
+//! Stage taxonomy, the process-monotonic clock, and the thread-local
+//! engine profiler.
+//!
+//! A *stage* names one phase of a job's life. The service records the
+//! coordinator-side stages (submit/queue/admission/backoff/execute/finish)
+//! into the job's [`crate::obs::TraceLog`]; the engines record the
+//! engine-side stages (iteration, tile read/compute/write, prefetch wait)
+//! through the thread-local profiler in [`prof`], which works because
+//! every engine iteration loop runs on the *caller's* thread — the pool
+//! only executes chunk tasks, never the loop itself.
+
+use std::time::Instant;
+
+/// One phase of a job's life. Discriminants are stable and used as array
+/// indices (`Stage::COUNT`-sized tables) and in trace slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    /// Ticket creation up to the job entering the queue.
+    Submit = 0,
+    /// Time spent queued before a worker picked the job up.
+    Queue = 1,
+    /// Admission-control wait for streamed jobs (budget Condvar).
+    Admission = 2,
+    /// Backoff sleep between transient-failure retry attempts.
+    Backoff = 3,
+    /// Backend execution (the whole engine run, worker-side).
+    Execute = 4,
+    /// One engine iteration (fused pass + reduce + center update).
+    Iteration = 5,
+    /// Reading one tile (slab + mask + f32 mirror) from the source.
+    TileRead = 6,
+    /// Computing over one resident tile.
+    TileCompute = 7,
+    /// Writing one tile of labels to the sink.
+    TileWrite = 8,
+    /// Blocking on the prefetch thread for a tile that was not ready.
+    PrefetchWait = 9,
+    /// Result delivery back to the ticket holder.
+    Finish = 10,
+}
+
+impl Stage {
+    /// Number of stages (size for per-stage tables).
+    pub const COUNT: usize = 11;
+
+    /// Every stage, in discriminant order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Submit,
+        Stage::Queue,
+        Stage::Admission,
+        Stage::Backoff,
+        Stage::Execute,
+        Stage::Iteration,
+        Stage::TileRead,
+        Stage::TileCompute,
+        Stage::TileWrite,
+        Stage::PrefetchWait,
+        Stage::Finish,
+    ];
+
+    /// Stable snake_case name, used as the metric label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Queue => "queue",
+            Stage::Admission => "admission",
+            Stage::Backoff => "backoff",
+            Stage::Execute => "execute",
+            Stage::Iteration => "iteration",
+            Stage::TileRead => "tile_read",
+            Stage::TileCompute => "tile_compute",
+            Stage::TileWrite => "tile_write",
+            Stage::PrefetchWait => "prefetch_wait",
+            Stage::Finish => "finish",
+        }
+    }
+
+    /// Inverse of the discriminant; `None` for out-of-range values
+    /// (trace slots that were claimed but not yet committed decode here).
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.get(v as usize).copied()
+    }
+
+    /// Array index (== discriminant).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Nanoseconds since the first observability call in this process.
+///
+/// Monotonic (backed by [`Instant`]); all span start/duration fields use
+/// this clock so events from different threads order consistently.
+pub fn now_ns() -> u64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One per-iteration convergence sample recorded by an engine loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterSample {
+    /// Iteration index within the run (0-based; for the 2-D slice loop
+    /// this restarts per slice — consumers treat samples as a sequence).
+    pub iter: u32,
+    /// Wall time of the iteration in nanoseconds.
+    pub wall_ns: u64,
+    /// Max center movement after the iteration (the convergence test).
+    pub delta: f32,
+    /// Objective J_m after the iteration (0.0 when not computed).
+    pub jm: f64,
+}
+
+/// Everything one engine run recorded: the structured convergence trace
+/// plus tile I/O-vs-compute and prefetch aggregates.
+///
+/// Allocated once in [`prof::begin`] / [`prof::reserve_iters`]; engine
+/// loops only push into reserved capacity or bump plain integers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineProfile {
+    /// Per-iteration wall/delta/J_m samples (bounded; see `dropped_iters`).
+    pub iters: Vec<IterSample>,
+    /// Samples that arrived after `iters` was full (never reallocated).
+    pub dropped_iters: u64,
+    /// Total ns spent reading tiles, and the number of tile reads.
+    pub tile_read_ns: u64,
+    pub tile_reads: u64,
+    /// Total ns computing over resident tiles, and the tile count.
+    pub tile_compute_ns: u64,
+    pub tile_computes: u64,
+    /// Total ns writing label tiles, and the tile count.
+    pub tile_write_ns: u64,
+    pub tile_writes: u64,
+    /// Prefetcher outcomes: requests served from the ready buffer vs
+    /// requests that had to block, and the total blocked wait.
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub prefetch_wait_ns: u64,
+}
+
+impl EngineProfile {
+    /// Total wall ns across recorded iterations.
+    pub fn iter_total_ns(&self) -> u64 {
+        self.iters.iter().map(|s| s.wall_ns).sum()
+    }
+
+    /// Fold another profile into this one (tile/prefetch aggregates add;
+    /// iteration samples append up to capacity).
+    pub fn absorb(&mut self, other: &EngineProfile) {
+        for s in &other.iters {
+            if self.iters.len() < self.iters.capacity() {
+                self.iters.push(*s);
+            } else {
+                self.dropped_iters += 1;
+            }
+        }
+        self.dropped_iters += other.dropped_iters;
+        self.tile_read_ns += other.tile_read_ns;
+        self.tile_reads += other.tile_reads;
+        self.tile_compute_ns += other.tile_compute_ns;
+        self.tile_computes += other.tile_computes;
+        self.tile_write_ns += other.tile_write_ns;
+        self.tile_writes += other.tile_writes;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_misses += other.prefetch_misses;
+        self.prefetch_wait_ns += other.prefetch_wait_ns;
+    }
+}
+
+/// Thread-local engine profiler.
+///
+/// The owner of a run (a service worker or the CLI) calls [`prof::begin`]
+/// before invoking the backend and [`prof::take`] after it returns; the
+/// engine loops in between call the record hooks, which are no-ops unless
+/// a profile is armed on the current thread. This needs no signature
+/// changes anywhere because iteration and tile boundaries always execute
+/// on the caller's thread.
+///
+/// `REPRO_TRACE=1` arms a profile automatically at the first
+/// [`prof::reserve_iters`] on each thread — the CI result-neutrality leg
+/// re-runs the golden suite under this to prove recording never perturbs
+/// output.
+pub mod prof {
+    use super::{EngineProfile, IterSample};
+    use std::cell::{Cell, RefCell};
+    use std::sync::OnceLock;
+
+    thread_local! {
+        static ACTIVE: Cell<bool> = const { Cell::new(false) };
+        static PROFILE: RefCell<Option<EngineProfile>> = const { RefCell::new(None) };
+    }
+
+    /// Hard cap on retained per-iteration samples, so a pathological
+    /// `max_iters` cannot make `reserve_iters` allocate without bound.
+    pub const MAX_ITER_SAMPLES: usize = 65_536;
+
+    fn env_armed() -> bool {
+        static ARMED: OnceLock<bool> = OnceLock::new();
+        *ARMED.get_or_init(|| {
+            std::env::var("REPRO_TRACE").map(|v| v == "1").unwrap_or(false)
+        })
+    }
+
+    /// Arm a fresh profile on this thread with capacity for `iter_cap`
+    /// per-iteration samples. Replaces any profile already armed.
+    pub fn begin(iter_cap: usize) {
+        let cap = iter_cap.min(MAX_ITER_SAMPLES);
+        PROFILE.with(|p| {
+            *p.borrow_mut() = Some(EngineProfile {
+                iters: Vec::with_capacity(cap),
+                ..EngineProfile::default()
+            });
+        });
+        ACTIVE.with(|a| a.set(true));
+    }
+
+    /// Disarm and return this thread's profile, if one was armed.
+    pub fn take() -> Option<EngineProfile> {
+        ACTIVE.with(|a| a.set(false));
+        PROFILE.with(|p| p.borrow_mut().take())
+    }
+
+    /// Whether a profile is armed on this thread (one `Cell` read — this
+    /// is the only cost the hooks pay when profiling is off).
+    pub fn active() -> bool {
+        ACTIVE.with(|a| a.get())
+    }
+
+    /// Engine entry point: make sure at least `n` more iteration samples
+    /// fit without reallocating inside the loop. Arms a profile first if
+    /// `REPRO_TRACE=1` and none is active. Called once per run, before
+    /// the iteration loop — never inside it.
+    pub fn reserve_iters(n: usize) {
+        if !active() {
+            if env_armed() {
+                begin(n);
+            }
+            return;
+        }
+        PROFILE.with(|p| {
+            if let Some(prof) = p.borrow_mut().as_mut() {
+                let want = prof.iters.len().saturating_add(n).min(MAX_ITER_SAMPLES);
+                if want > prof.iters.capacity() {
+                    prof.iters.reserve_exact(want - prof.iters.len());
+                }
+            }
+        });
+    }
+
+    /// Record one iteration sample (no-op when off; drop-counted when
+    /// the reserved capacity is exhausted — never reallocates).
+    pub fn iter(iter: u32, wall_ns: u64, delta: f32, jm: f64) {
+        if !active() {
+            return;
+        }
+        PROFILE.with(|p| {
+            if let Some(prof) = p.borrow_mut().as_mut() {
+                if prof.iters.len() < prof.iters.capacity() {
+                    prof.iters.push(IterSample { iter, wall_ns, delta, jm });
+                } else {
+                    prof.dropped_iters += 1;
+                }
+            }
+        });
+    }
+
+    fn with<F: FnOnce(&mut EngineProfile)>(f: F) {
+        if !active() {
+            return;
+        }
+        PROFILE.with(|p| {
+            if let Some(prof) = p.borrow_mut().as_mut() {
+                f(prof);
+            }
+        });
+    }
+
+    /// Record one tile read of `ns` nanoseconds.
+    pub fn tile_read(ns: u64) {
+        with(|p| {
+            p.tile_read_ns += ns;
+            p.tile_reads += 1;
+        });
+    }
+
+    /// Record one tile compute phase of `ns` nanoseconds.
+    pub fn tile_compute(ns: u64) {
+        with(|p| {
+            p.tile_compute_ns += ns;
+            p.tile_computes += 1;
+        });
+    }
+
+    /// Record one tile write of `ns` nanoseconds.
+    pub fn tile_write(ns: u64) {
+        with(|p| {
+            p.tile_write_ns += ns;
+            p.tile_writes += 1;
+        });
+    }
+
+    /// Record one prefetcher fetch: whether the tile was already
+    /// resident (`hit`) and how long the consumer blocked for it.
+    pub fn prefetch_fetch(hit: bool, wait_ns: u64) {
+        with(|p| {
+            if hit {
+                p.prefetch_hits += 1;
+            } else {
+                p.prefetch_misses += 1;
+            }
+            p.prefetch_wait_ns += wait_ns;
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_roundtrip_and_names_unique() {
+        use std::collections::HashSet;
+        let mut names = HashSet::new();
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(Stage::from_u8(i as u8), Some(*s));
+            assert!(names.insert(s.name()), "duplicate stage name {}", s.name());
+        }
+        assert_eq!(Stage::from_u8(Stage::COUNT as u8), None);
+    }
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn prof_records_only_when_armed() {
+        // Not armed: hooks are no-ops.
+        prof::iter(0, 10, 0.5, 1.0);
+        prof::tile_read(5);
+        assert!(prof::take().is_none());
+
+        prof::begin(4);
+        assert!(prof::active());
+        prof::iter(0, 10, 0.5, 1.0);
+        prof::tile_read(5);
+        prof::tile_compute(7);
+        prof::tile_write(3);
+        prof::prefetch_fetch(true, 0);
+        prof::prefetch_fetch(false, 11);
+        let p = prof::take().unwrap();
+        assert!(!prof::active());
+        assert_eq!(p.iters, vec![IterSample { iter: 0, wall_ns: 10, delta: 0.5, jm: 1.0 }]);
+        assert_eq!((p.tile_read_ns, p.tile_reads), (5, 1));
+        assert_eq!((p.tile_compute_ns, p.tile_computes), (7, 1));
+        assert_eq!((p.tile_write_ns, p.tile_writes), (3, 1));
+        assert_eq!((p.prefetch_hits, p.prefetch_misses, p.prefetch_wait_ns), (1, 1, 11));
+    }
+
+    #[test]
+    fn prof_capacity_is_a_hard_bound() {
+        prof::begin(2);
+        for i in 0..5 {
+            prof::iter(i, 1, 0.0, 0.0);
+        }
+        let p = prof::take().unwrap();
+        assert_eq!(p.iters.len(), 2);
+        assert_eq!(p.dropped_iters, 3);
+    }
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut a = EngineProfile { iters: Vec::with_capacity(8), ..Default::default() };
+        a.tile_read_ns = 10;
+        a.tile_reads = 1;
+        let b = EngineProfile {
+            iters: vec![IterSample { iter: 0, wall_ns: 3, delta: 0.1, jm: 2.0 }],
+            tile_read_ns: 5,
+            tile_reads: 2,
+            prefetch_hits: 4,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.iters.len(), 1);
+        assert_eq!((a.tile_read_ns, a.tile_reads), (15, 3));
+        assert_eq!(a.prefetch_hits, 4);
+    }
+}

@@ -1,0 +1,298 @@
+//! Bounded lock-free per-job trace log.
+//!
+//! A [`TraceLog`] is created per job at submit time and shared (via
+//! `Arc`) between the submitting thread, the worker, and the ticket
+//! holder. Recording claims a slot with one `fetch_add` and writes four
+//! relaxed atomics — no locks, no allocation (the slot array is sized at
+//! construction). Events past capacity are counted and dropped, but the
+//! per-stage *totals* table is unconditional, so stage breakdowns stay
+//! exact no matter how many events overflowed the ring.
+//!
+//! Reads (`events()`, `summary()`) happen after the job result has been
+//! delivered over a channel, which gives the reader a happens-before
+//! edge over every record; relaxed slot stores are therefore sufficient.
+
+use super::span::Stage;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Default event capacity for service jobs.
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+struct Slot {
+    /// Stage discriminant + 1; 0 means "claimed but not committed".
+    stage: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    arg: AtomicU64,
+}
+
+/// One recorded span, decoded from a slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub stage: Stage,
+    /// Start on the [`super::now_ns`] process clock.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Stage-specific payload (retry attempt, iteration index, bytes…).
+    pub arg: u64,
+}
+
+/// Exact per-stage aggregate, independent of the bounded event ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StageTotal {
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+struct StageCell {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+/// Bounded lock-free trace log for one job.
+pub struct TraceLog {
+    id: u64,
+    slots: Box<[Slot]>,
+    /// Total record attempts; `min(next, slots.len())` slots are used.
+    next: AtomicUsize,
+    totals: Box<[StageCell]>,
+}
+
+impl TraceLog {
+    pub fn new(id: u64, capacity: usize) -> Self {
+        let slots = (0..capacity)
+            .map(|_| Slot {
+                stage: AtomicU64::new(0),
+                start_ns: AtomicU64::new(0),
+                dur_ns: AtomicU64::new(0),
+                arg: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        let totals = (0..Stage::COUNT)
+            .map(|_| StageCell {
+                count: AtomicU64::new(0),
+                total_ns: AtomicU64::new(0),
+                max_ns: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        TraceLog { id, slots, next: AtomicUsize::new(0), totals }
+    }
+
+    /// The job/trace id this log belongs to.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one span. Lock-free; drops (and counts) the event if the
+    /// ring is full, but always updates the exact per-stage totals.
+    pub fn record(&self, stage: Stage, start_ns: u64, dur_ns: u64, arg: u64) {
+        let t = &self.totals[stage.index()];
+        t.count.fetch_add(1, Ordering::Relaxed);
+        t.total_ns.fetch_add(dur_ns, Ordering::Relaxed);
+        t.max_ns.fetch_max(dur_ns, Ordering::Relaxed);
+
+        let idx = self.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= self.slots.len() {
+            return;
+        }
+        let s = &self.slots[idx];
+        s.start_ns.store(start_ns, Ordering::Relaxed);
+        s.dur_ns.store(dur_ns, Ordering::Relaxed);
+        s.arg.store(arg, Ordering::Relaxed);
+        s.stage.store(stage.index() as u64 + 1, Ordering::Release);
+    }
+
+    /// Fold an engine profile's aggregates into the per-stage totals and
+    /// append its iteration samples as events (bounded by the ring).
+    pub fn absorb_profile(&self, p: &super::span::EngineProfile) {
+        for s in &p.iters {
+            self.record(Stage::Iteration, 0, s.wall_ns, s.iter as u64);
+        }
+        let agg = [
+            (Stage::TileRead, p.tile_reads, p.tile_read_ns),
+            (Stage::TileCompute, p.tile_computes, p.tile_compute_ns),
+            (Stage::TileWrite, p.tile_writes, p.tile_write_ns),
+            (Stage::PrefetchWait, p.prefetch_hits + p.prefetch_misses, p.prefetch_wait_ns),
+        ];
+        for (stage, count, total_ns) in agg {
+            if count == 0 {
+                continue;
+            }
+            let t = &self.totals[stage.index()];
+            t.count.fetch_add(count, Ordering::Relaxed);
+            t.total_ns.fetch_add(total_ns, Ordering::Relaxed);
+            t.max_ns.fetch_max(total_ns, Ordering::Relaxed);
+        }
+    }
+
+    /// Events that were dropped because the ring was full.
+    pub fn dropped(&self) -> usize {
+        self.next.load(Ordering::Relaxed).saturating_sub(self.slots.len())
+    }
+
+    /// Decode every committed event, in record order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let used = self.next.load(Ordering::Acquire).min(self.slots.len());
+        let mut out = Vec::with_capacity(used);
+        for s in &self.slots[..used] {
+            let tag = s.stage.load(Ordering::Acquire);
+            if tag == 0 {
+                continue; // claimed but never committed (racing writer)
+            }
+            let Some(stage) = Stage::from_u8((tag - 1) as u8) else {
+                continue;
+            };
+            out.push(TraceEvent {
+                stage,
+                start_ns: s.start_ns.load(Ordering::Relaxed),
+                dur_ns: s.dur_ns.load(Ordering::Relaxed),
+                arg: s.arg.load(Ordering::Relaxed),
+            });
+        }
+        out
+    }
+
+    /// Exact per-stage totals (never affected by ring overflow).
+    pub fn summary(&self) -> TraceSummary {
+        let stages = Stage::ALL
+            .iter()
+            .map(|s| {
+                let t = &self.totals[s.index()];
+                (
+                    *s,
+                    StageTotal {
+                        count: t.count.load(Ordering::Relaxed),
+                        total_ns: t.total_ns.load(Ordering::Relaxed),
+                        max_ns: t.max_ns.load(Ordering::Relaxed),
+                    },
+                )
+            })
+            .collect();
+        TraceSummary { id: self.id, dropped_events: self.dropped() as u64, stages }
+    }
+}
+
+impl std::fmt::Debug for TraceLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceLog")
+            .field("id", &self.id)
+            .field("capacity", &self.capacity())
+            .field("recorded", &self.next.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+/// Exact per-stage rollup of one trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub id: u64,
+    pub dropped_events: u64,
+    /// `(stage, totals)` for every stage, in discriminant order.
+    pub stages: Vec<(Stage, StageTotal)>,
+}
+
+impl TraceSummary {
+    /// Totals for one stage (zero if never recorded).
+    pub fn stage(&self, s: Stage) -> StageTotal {
+        self.stages[s.index()].1
+    }
+
+    /// Stages with at least one recorded span.
+    pub fn nonzero(&self) -> impl Iterator<Item = (Stage, StageTotal)> + '_ {
+        self.stages.iter().copied().filter(|(_, t)| t.count > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_decode() {
+        let log = TraceLog::new(7, 8);
+        log.record(Stage::Queue, 100, 50, 0);
+        log.record(Stage::Execute, 150, 1000, 3);
+        let ev = log.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0], TraceEvent { stage: Stage::Queue, start_ns: 100, dur_ns: 50, arg: 0 });
+        assert_eq!(ev[1].stage, Stage::Execute);
+        assert_eq!(log.dropped(), 0);
+        let sum = log.summary();
+        assert_eq!(sum.id, 7);
+        assert_eq!(sum.stage(Stage::Queue), StageTotal { count: 1, total_ns: 50, max_ns: 50 });
+        assert_eq!(sum.stage(Stage::Submit), StageTotal::default());
+    }
+
+    #[test]
+    fn overflow_drops_events_but_totals_stay_exact() {
+        let log = TraceLog::new(1, 2);
+        for i in 0..5 {
+            log.record(Stage::Iteration, i, 10, i);
+        }
+        assert_eq!(log.events().len(), 2);
+        assert_eq!(log.dropped(), 3);
+        let t = log.summary().stage(Stage::Iteration);
+        assert_eq!(t, StageTotal { count: 5, total_ns: 50, max_ns: 10 });
+        assert_eq!(log.summary().dropped_events, 3);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_no_totals() {
+        use std::sync::Arc;
+        let log = Arc::new(TraceLog::new(9, 64));
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let log = Arc::clone(&log);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        log.record(Stage::Execute, 0, 3, 0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let tot = log.summary().stage(Stage::Execute);
+        assert_eq!(tot.count, 8000);
+        assert_eq!(tot.total_ns, 24000);
+        assert_eq!(log.events().len(), 64);
+        assert_eq!(log.dropped(), 8000 - 64);
+    }
+
+    #[test]
+    fn absorb_profile_maps_to_stages() {
+        use crate::obs::span::{EngineProfile, IterSample};
+        let log = TraceLog::new(2, 16);
+        let p = EngineProfile {
+            iters: vec![
+                IterSample { iter: 0, wall_ns: 7, delta: 0.1, jm: 1.0 },
+                IterSample { iter: 1, wall_ns: 9, delta: 0.05, jm: 0.9 },
+            ],
+            tile_reads: 3,
+            tile_read_ns: 30,
+            prefetch_hits: 2,
+            prefetch_misses: 1,
+            prefetch_wait_ns: 12,
+            ..Default::default()
+        };
+        log.absorb_profile(&p);
+        let s = log.summary();
+        assert_eq!(s.stage(Stage::Iteration), StageTotal { count: 2, total_ns: 16, max_ns: 9 });
+        assert_eq!(s.stage(Stage::TileRead), StageTotal { count: 3, total_ns: 30, max_ns: 30 });
+        assert_eq!(
+            s.stage(Stage::PrefetchWait),
+            StageTotal { count: 3, total_ns: 12, max_ns: 12 }
+        );
+        // Iteration samples became events too.
+        assert_eq!(log.events().iter().filter(|e| e.stage == Stage::Iteration).count(), 2);
+    }
+}

@@ -244,3 +244,45 @@ fn golden_pgm_stack_in_memory_and_streamed() {
         assert_eq!(sink, want, "PGM stack streamed, tile {tile}");
     }
 }
+
+#[test]
+fn golden_tracing_is_result_neutral() {
+    // The observability acceptance gate against committed bytes: every
+    // engine, in-memory and streamed, with the thread-local profiler
+    // armed, must land on exactly the golden fixtures. (The CI
+    // REPRO_TRACE=1 leg re-runs the whole suite auto-armed; this test
+    // pins the property even in an untraced run.)
+    if blessing() {
+        return;
+    }
+    let params = FcmParams::default();
+    for masked in [false, true] {
+        let vol = fixture_volume(masked);
+        for (engine, name) in ENGINES {
+            let backend = backend_for(engine, None, &opts()).unwrap();
+
+            repro::obs::prof::begin(2 * params.max_iters);
+            let out = backend.segment_volume(&vol, &params).unwrap();
+            let profile = repro::obs::prof::take().expect("profile armed");
+            assert_eq!(
+                out.labels,
+                expected(&label_file(name, masked)),
+                "{engine:?} masked {masked} drifted under tracing (in-memory)"
+            );
+            assert!(!profile.iters.is_empty(), "{engine:?} recorded no iterations");
+
+            repro::obs::prof::begin(2 * params.max_iters);
+            let mut src = vol.clone();
+            let mut sink = Vec::new();
+            backend
+                .segment_volume_streamed(&mut src, &mut sink, &params, 2)
+                .unwrap();
+            repro::obs::prof::take().expect("profile armed");
+            assert_eq!(
+                sink,
+                expected(&label_file(name, masked)),
+                "{engine:?} masked {masked} drifted under tracing (streamed)"
+            );
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! Observability integration suite: histogram exactness contracts, the
+//! exporter-vs-samples acceptance gate, result-neutrality of the engine
+//! profiler, and the end-to-end job trace lifecycle.
+//!
+//! The central contract under test: every percentile the exporters
+//! publish equals `bucket_floor(true order statistic)` of the exact
+//! sample stream that was recorded — quantiles are sample-exact up to
+//! bucketization, never estimated.
+
+mod common;
+
+use repro::coordinator::{backend_for, Engine, Metrics, Service};
+use repro::fcm::{EngineOpts, FcmParams};
+use repro::image::FeatureVector;
+use repro::obs::hist::{bucket_floor, LatencyHist};
+use repro::obs::{prof, Json, Stage};
+use repro::phantom::{generate_slice, PhantomConfig};
+use std::time::Duration;
+
+/// Deterministic pseudo-random u64 stream (no rand crate offline).
+struct Lcg(u64);
+
+impl Lcg {
+    fn step(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005);
+        self.0 = self.0.wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// A latency-shaped sample: mixes ns, µs, ms, and s magnitudes.
+    fn sample(&mut self) -> u64 {
+        let r = self.step();
+        let magnitude = [1u64, 1_000, 1_000_000, 1_000_000_000][(r % 4) as usize];
+        magnitude + self.step() % (magnitude * 9)
+    }
+}
+
+/// The reference quantile the histogram contract promises: bucket floor
+/// of the rank-`clamp(ceil(q*n),1,n)` order statistic.
+fn reference_quantile(sorted: &[u64], q: f64) -> u64 {
+    let n = sorted.len() as u64;
+    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+    bucket_floor(sorted[(rank - 1) as usize])
+}
+
+#[test]
+fn quantiles_are_exact_order_statistics_up_to_bucketization() {
+    let mut rng = Lcg(7);
+    let samples: Vec<u64> = (0..5000).map(|_| rng.sample()).collect();
+    let h = LatencyHist::new();
+    for &s in &samples {
+        h.record(s);
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_unstable();
+    for i in 0..=100 {
+        let q = i as f64 / 100.0;
+        assert_eq!(h.quantile(q), reference_quantile(&sorted, q), "q={q}");
+    }
+    // count/sum/min/max are exact, not bucketized.
+    assert_eq!(h.count(), samples.len() as u64);
+    assert_eq!(h.sum_ns(), samples.iter().sum::<u64>());
+    assert_eq!(h.min_ns(), sorted[0]);
+    assert_eq!(h.max_ns(), *sorted.last().unwrap());
+}
+
+#[test]
+fn quantiles_are_monotone_in_q() {
+    let mut rng = Lcg(99);
+    let h = LatencyHist::new();
+    for _ in 0..2000 {
+        h.record(rng.sample());
+    }
+    let mut prev = 0u64;
+    for i in 0..=1000 {
+        let v = h.quantile(i as f64 / 1000.0);
+        assert!(v >= prev, "quantile not monotone at q={}", i as f64 / 1000.0);
+        prev = v;
+    }
+}
+
+#[test]
+fn merge_is_indistinguishable_from_concatenation() {
+    let mut rng = Lcg(1234);
+    let a: Vec<u64> = (0..1500).map(|_| rng.sample()).collect();
+    let b: Vec<u64> = (0..700).map(|_| rng.sample()).collect();
+
+    let ha = LatencyHist::new();
+    let hb = LatencyHist::new();
+    let hc = LatencyHist::new();
+    for &v in &a {
+        ha.record(v);
+        hc.record(v);
+    }
+    for &v in &b {
+        hb.record(v);
+        hc.record(v);
+    }
+    ha.merge(&hb);
+    assert_eq!(ha.snapshot(), hc.snapshot());
+    assert_eq!(ha.stats(), hc.stats());
+}
+
+#[test]
+fn concurrent_recording_loses_no_samples() {
+    use std::sync::Arc;
+    let h = Arc::new(LatencyHist::new());
+    let per_thread = 10_000u64;
+    let threads: Vec<_> = (0..8u64)
+        .map(|t| {
+            let h = Arc::clone(&h);
+            std::thread::spawn(move || {
+                let mut rng = Lcg(t + 1);
+                let mut sum = 0u64;
+                for _ in 0..per_thread {
+                    let v = rng.sample();
+                    sum += v;
+                    h.record(v);
+                }
+                sum
+            })
+        })
+        .collect();
+    let expected_sum: u64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    assert_eq!(h.count(), 8 * per_thread);
+    assert_eq!(h.sum_ns(), expected_sum);
+    // Bucket counts account for every sample too.
+    let total: u64 = h.snapshot().nonzero.iter().map(|&(_, c)| c).sum();
+    assert_eq!(total, 8 * per_thread);
+}
+
+/// The acceptance gate: exported p50/p95/p99 and stage breakdowns are
+/// exact with respect to the recorded samples — computed independently
+/// here from the raw durations and compared against both the snapshot
+/// and the exposition the exporters render.
+#[test]
+fn exported_percentiles_and_stages_are_exact_for_recorded_samples() {
+    let metrics = Metrics::default();
+    let mut rng = Lcg(42);
+    let mut queue_ns: Vec<u64> = Vec::new();
+    let mut service_ns: Vec<u64> = Vec::new();
+    for _ in 0..257 {
+        metrics.job_submitted();
+        let q = rng.sample();
+        let s = rng.sample();
+        queue_ns.push(q);
+        service_ns.push(s);
+        metrics.job_completed(Duration::from_nanos(q), Duration::from_nanos(s), 3);
+    }
+    queue_ns.sort_unstable();
+    service_ns.sort_unstable();
+
+    let snap = metrics.snapshot();
+    for (dist, sorted) in [(&snap.queue_wait, &queue_ns), (&snap.service, &service_ns)] {
+        assert_eq!(dist.count, 257);
+        assert_eq!(dist.p50_ns, reference_quantile(sorted, 0.50));
+        assert_eq!(dist.p95_ns, reference_quantile(sorted, 0.95));
+        assert_eq!(dist.p99_ns, reference_quantile(sorted, 0.99));
+        assert_eq!(dist.max_ns, *sorted.last().unwrap());
+        assert_eq!(dist.mean_ns, sorted.iter().sum::<u64>() as f64 / 257.0);
+    }
+
+    // Stage breakdowns carry the exact totals of the same samples.
+    let qs = snap.stage_stats(Stage::Queue).unwrap();
+    assert_eq!(qs.count, 257);
+    assert_eq!(qs.total_s, queue_ns.iter().sum::<u64>() as f64 / 1e9);
+    assert_eq!(qs.max_s, *queue_ns.last().unwrap() as f64 / 1e9);
+    let es = snap.stage_stats(Stage::Execute).unwrap();
+    assert_eq!(es.total_s, service_ns.iter().sum::<u64>() as f64 / 1e9);
+
+    // Both exporters publish those exact values, not re-derivations.
+    let e = snap.exposition();
+    for (name, sorted) in [("repro_queue_wait", &queue_ns), ("repro_service", &service_ns)] {
+        for (stat, q) in [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)] {
+            assert_eq!(
+                e.get(&format!("{name}_seconds"), &[("stat", stat)]),
+                Some(reference_quantile(sorted, q) as f64 / 1e9),
+                "{name} {stat}"
+            );
+        }
+        assert_eq!(
+            e.get(&format!("{name}_seconds"), &[("stat", "max")]),
+            Some(*sorted.last().unwrap() as f64 / 1e9)
+        );
+    }
+    let labels = [("stage", "queue")];
+    assert_eq!(e.get("repro_stage_spans_total", &labels), Some(257.0));
+    assert_eq!(
+        e.get("repro_stage_seconds_total", &labels),
+        Some(queue_ns.iter().sum::<u64>() as f64 / 1e9)
+    );
+    // And the JSON exporter renders from the same Exposition, so one
+    // spot-check of structural agreement suffices.
+    let json = Json::parse(&snap.to_json_line()).unwrap();
+    assert_eq!(
+        json.get("repro_jobs_completed_total").and_then(Json::as_f64),
+        Some(257.0)
+    );
+}
+
+fn small_image() -> FeatureVector {
+    let s = generate_slice(&PhantomConfig {
+        seed: 11,
+        ..PhantomConfig::default()
+    });
+    FeatureVector::from_image(&s.image)
+}
+
+fn opts() -> EngineOpts {
+    EngineOpts {
+        threads: common::engine_threads(),
+        ..EngineOpts::default()
+    }
+}
+
+/// Tracing must be result-neutral: the same engine run with the
+/// profiler armed and disarmed produces bit-identical output, and the
+/// profile reflects the run (one sample per iteration).
+#[test]
+fn engine_profiling_is_result_neutral() {
+    let params = FcmParams::default();
+    let fv = small_image();
+    for engine in [Engine::Sequential, Engine::Parallel, Engine::Histogram, Engine::Spatial] {
+        let backend = backend_for(engine, None, &opts()).unwrap();
+        let plain = backend.segment(&fv, &params).unwrap().run;
+
+        prof::begin(params.max_iters * 2);
+        let traced = backend.segment(&fv, &params).unwrap().run;
+        let profile = prof::take().expect("profile armed");
+
+        assert_eq!(plain.labels, traced.labels, "{engine:?} labels drifted under tracing");
+        assert_eq!(plain.centers, traced.centers, "{engine:?} centers drifted");
+        assert_eq!(plain.iterations, traced.iterations, "{engine:?} iterations drifted");
+        assert!(
+            !profile.iters.is_empty(),
+            "{engine:?} recorded no iteration samples"
+        );
+        assert_eq!(profile.dropped_iters, 0, "{engine:?}");
+        assert!(
+            profile.iters.iter().all(|s| s.wall_ns > 0),
+            "{engine:?} zero-width iteration sample"
+        );
+    }
+}
+
+/// Streamed runs profile tile I/O and stay result-neutral too.
+#[test]
+fn streamed_profiling_is_result_neutral_and_counts_tiles() {
+    let params = FcmParams::default();
+    let vol = {
+        // An 8x8x6 synthetic ramp volume, deterministic.
+        let voxels: Vec<u8> = (0..8 * 8 * 6).map(|i| (i * 7 % 251) as u8).collect();
+        repro::image::VoxelVolume::from_voxels(8, 8, 6, voxels)
+    };
+    let backend = backend_for(Engine::Histogram, None, &opts()).unwrap();
+
+    let mut src = vol.clone();
+    let mut plain_sink: Vec<u8> = Vec::new();
+    backend
+        .segment_volume_streamed(&mut src, &mut plain_sink, &params, 2)
+        .unwrap();
+
+    prof::begin(params.max_iters);
+    let mut src = vol.clone();
+    let mut traced_sink: Vec<u8> = Vec::new();
+    backend
+        .segment_volume_streamed(&mut src, &mut traced_sink, &params, 2)
+        .unwrap();
+    let profile = prof::take().expect("profile armed");
+
+    assert_eq!(plain_sink, traced_sink, "streamed output drifted under tracing");
+    assert!(profile.tile_reads > 0, "no tile reads recorded");
+    assert!(profile.tile_writes > 0, "no tile writes recorded");
+    assert!(!profile.iters.is_empty(), "no iteration samples recorded");
+}
+
+/// End-to-end job trace: a service job's TraceLog carries the full
+/// lifecycle (submit -> queue -> execute -> finish) plus the absorbed
+/// engine profile, with exact per-stage totals.
+#[test]
+fn service_job_trace_records_the_lifecycle() {
+    let mut cfg = repro::config::Config::new();
+    cfg.service.workers = 1;
+    let service = Service::start(&cfg).unwrap();
+    let t = service
+        .submit(small_image(), FcmParams::default(), Engine::Parallel)
+        .unwrap();
+    let trace = t.trace();
+    let id = t.id;
+    let r = t.wait().unwrap();
+    let snap = service.shutdown();
+
+    let summary = trace.summary();
+    assert_eq!(summary.id, id);
+    for stage in [Stage::Submit, Stage::Queue, Stage::Execute, Stage::Finish] {
+        assert_eq!(summary.stage(stage).count, 1, "{stage:?}");
+    }
+    // The engine profile was absorbed: one iteration event per engine
+    // iteration, and the iteration total is bounded by execute wall.
+    let iters = summary.stage(Stage::Iteration);
+    assert_eq!(iters.count, r.iterations as u64);
+    assert!(iters.total_ns > 0);
+    assert!(iters.total_ns <= summary.stage(Stage::Execute).total_ns);
+    // Queue span is consistent with the result's own reading (same
+    // measurement, one trip through f64 seconds).
+    let queue = summary.stage(Stage::Queue);
+    assert!((queue.total_ns as f64 / 1e9 - r.queue_wait_s).abs() < 1e-6);
+
+    // The service metrics saw the same job: iteration histogram fed,
+    // stage rollups present in the exposition.
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.iteration.count, r.iterations as u64);
+    let e = snap.exposition();
+    assert_eq!(
+        e.get("repro_stage_spans_total", &[("stage", "iteration")]),
+        Some(r.iterations as f64)
+    );
+    for line in snap.to_prometheus().lines() {
+        assert_eq!(repro::obs::export::check_exposition_line(line), None, "{line:?}");
+    }
+}
+
+/// The per-job run record built from a real service trace parses and
+/// carries the stage the trace recorded.
+#[test]
+fn run_record_from_service_trace_roundtrips() {
+    let mut cfg = repro::config::Config::new();
+    cfg.service.workers = 1;
+    let service = Service::start(&cfg).unwrap();
+    let t = service
+        .submit(small_image(), FcmParams::default(), Engine::Sequential)
+        .unwrap();
+    let trace = t.trace();
+    let id = t.id;
+    let r = t.wait().unwrap();
+    service.shutdown();
+
+    let summary = trace.summary();
+    let rec = repro::obs::export::run_record_with_summary(
+        &repro::obs::export::RunMeta {
+            id,
+            cmd: "serve",
+            engine: "Sequential",
+            shape: vec![181, 217],
+            iterations: r.iterations as u64,
+            converged: r.converged,
+            wall_s: r.service_s,
+            peak_resident_bytes: None,
+        },
+        &summary,
+    );
+    let text = rec.to_string();
+    assert!(!text.contains('\n'));
+    let back = Json::parse(&text).unwrap();
+    assert_eq!(back.get("id").and_then(Json::as_f64), Some(id as f64));
+    let exec = back.get("stages").and_then(|s| s.get("execute")).unwrap();
+    assert_eq!(exec.get("count").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(
+        back.get("stages")
+            .and_then(|s| s.get("iteration"))
+            .and_then(|i| i.get("count"))
+            .and_then(Json::as_f64),
+        Some(r.iterations as f64)
+    );
+}
