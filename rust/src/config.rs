@@ -178,6 +178,48 @@ impl ServiceConfig {
     }
 }
 
+/// Result-cache parameters (`coordinator::cache`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    /// Content-addressed result cache. Sound because every engine is
+    /// bit-deterministic: result bytes are a pure function of (input
+    /// bytes, mask bytes, engine, params, output kind). `--no-cache`
+    /// flips this off per run.
+    pub enabled: bool,
+    /// In-memory LRU budget over cached label bytes. Must be >= 1 when
+    /// the cache is enabled — a zero budget silently caches nothing,
+    /// which should be spelled `cache = false` instead.
+    pub capacity_bytes: usize,
+    /// Optional directory for the file-backed store (`*.rcache` files,
+    /// written `.tmp`-then-rename, digest-verified on load). Unset =
+    /// memory-only.
+    pub dir: Option<String>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: true,
+            capacity_bytes: crate::coordinator::cache::DEFAULT_CACHE_CAPACITY,
+            dir: None,
+        }
+    }
+}
+
+impl CacheConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && self.capacity_bytes == 0 {
+            bail!("cache_capacity_bytes must be >= 1 when the cache is enabled (use cache = false to disable)");
+        }
+        if let Some(d) = &self.dir {
+            if d.is_empty() {
+                bail!("cache_dir must not be empty when set");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Every key `Config::set` accepts — the CLI forwards matching `--key
 /// value` arguments through this list, so adding a knob here is all
 /// the wiring a new config field needs.
@@ -202,6 +244,9 @@ pub const KEYS: &[&str] = &[
     "retry_backoff_ms",
     "resident_budget_bytes",
     "metrics_interval_ms",
+    "cache",
+    "cache_capacity_bytes",
+    "cache_dir",
     "artifacts_dir",
 ];
 
@@ -211,6 +256,7 @@ pub struct Config {
     pub fcm: FcmConfig,
     pub engine: EngineConfig,
     pub service: ServiceConfig,
+    pub cache: CacheConfig,
     /// Directory holding AOT artifacts + manifest.tsv.
     pub artifacts_dir: String,
 }
@@ -221,6 +267,7 @@ impl Config {
             fcm: FcmConfig::default(),
             engine: EngineConfig::default(),
             service: ServiceConfig::default(),
+            cache: CacheConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -269,6 +316,9 @@ impl Config {
             "retry_backoff_ms" => self.service.retry_backoff_ms = parse(key, v)?,
             "resident_budget_bytes" => self.service.resident_budget_bytes = parse(key, v)?,
             "metrics_interval_ms" => self.service.metrics_interval_ms = parse(key, v)?,
+            "cache" => self.cache.enabled = parse(key, v)?,
+            "cache_capacity_bytes" => self.cache.capacity_bytes = parse(key, v)?,
+            "cache_dir" => self.cache.dir = Some(v.trim_matches('"').to_string()),
             "artifacts_dir" => self.artifacts_dir = v.trim_matches('"').to_string(),
             _ => bail!("unknown config key {key:?}"),
         }
@@ -278,7 +328,8 @@ impl Config {
     pub fn validate(&self) -> Result<()> {
         self.fcm.validate()?;
         self.engine.validate()?;
-        self.service.validate()
+        self.service.validate()?;
+        self.cache.validate()
     }
 }
 
@@ -429,13 +480,35 @@ mod tests {
         for key in KEYS {
             let probe = match *key {
                 "backend" => "parallel",
-                "artifacts_dir" => "x",
+                "artifacts_dir" | "cache_dir" => "x",
                 "m" | "epsilon" => "2.0",
-                "batch_execute" | "prefetch" | "simd" => "true",
+                "batch_execute" | "prefetch" | "simd" | "cache" => "true",
                 _ => "3",
             };
             c.set(key, probe).unwrap_or_else(|e| panic!("key {key}: {e}"));
         }
+    }
+
+    #[test]
+    fn cache_keys_parse_and_validate() {
+        // Defaults: on, 256 MiB budget, memory-only.
+        let d = Config::new();
+        assert!(d.cache.enabled);
+        assert_eq!(d.cache.capacity_bytes, 256 << 20);
+        assert_eq!(d.cache.dir, None);
+        let c = Config::from_str(
+            "cache = true\ncache_capacity_bytes = 4096\ncache_dir = \"/tmp/rc\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.cache.capacity_bytes, 4096);
+        assert_eq!(c.cache.dir.as_deref(), Some("/tmp/rc"));
+        // Disabled cache needs no budget; an enabled zero budget is a
+        // config error, not a silent no-op.
+        assert!(Config::from_str("cache = false\ncache_capacity_bytes = 0\n").is_ok());
+        assert!(Config::from_str("cache_capacity_bytes = 0\n").is_err());
+        assert!(Config::from_str("cache = maybe\n").is_err());
+        assert!(Config::from_str("cache_capacity_bytes = lots\n").is_err());
+        assert!(Config::from_str("cache_dir = \"\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,976 @@
+//! Content-addressed result cache with single-flight execution.
+//!
+//! PRs 1–7 built a determinism ledger: every host engine is bit-identical
+//! across thread counts, tile sizes, SIMD kernel choices, prefetching,
+//! and the in-memory/streamed split (see DESIGN.md, "Determinism as a
+//! cache key"). That contract has a direct serving consequence — the
+//! result bytes of a job are a *pure function* of
+//!
+//! ```text
+//! (input raster bytes, mask raster bytes, engine, canonical params, output kind)
+//! ```
+//!
+//! and nothing else. This module exploits it three ways:
+//!
+//! 1. **Content addressing.** [`CacheKey`] hashes exactly the function
+//!    inputs above ([`crate::util::Digest64`] over the rasters,
+//!    [`CacheKey::canonical_params`] over the parameter struct — the
+//!    seed rides inside). Execution knobs (thread count, tile size,
+//!    SIMD toggle, prefetch, priority) are deliberately *excluded*:
+//!    they cannot change the bytes, so keying on them would only shred
+//!    the hit rate.
+//! 2. **Zero extra I/O for streamed jobs.** The input digest of a
+//!    file-backed job folds in during the run's existing first sweep
+//!    ([`crate::image::volume::stream::DigestSource`]); the resulting
+//!    `(path, stat) -> digest` memo is kept here (and persisted to
+//!    `memo.jsonl` under the cache dir) so the *next* submission of the
+//!    same file derives its key at submit time without reading a byte.
+//! 3. **Single-flight execution.** Concurrent equal-key submissions
+//!    coalesce: the first becomes the flight leader (a real job); the
+//!    rest enroll as [`Waiter`]s and receive the leader's bytes when it
+//!    [`complete`](ResultCache::complete)s. Cancelling a waiter never
+//!    cancels the leader — other waiters still want the result.
+//!
+//! Storage is a byte-budgeted in-memory LRU over label bytes plus an
+//! optional file-backed store under the cache dir (`<keydigest>.rcache`,
+//! written `.tmp`-then-rename like every artifact in this repo, and
+//! re-verified against the embedded label digest on load — a flipped
+//! bit is detected and treated as a miss, and the corrupt file is
+//! removed).
+
+use super::fault::CancelToken;
+use super::job::{Engine, JobResult};
+use super::metrics::Metrics;
+use crate::fcm::FcmParams;
+use crate::obs::{Json, TraceLog};
+use crate::util::digest_bytes;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default in-memory budget over cached label bytes (256 MiB).
+pub const DEFAULT_CACHE_CAPACITY: usize = 256 << 20;
+
+/// What the cached bytes *are*: an in-memory volume's label buffer, or
+/// a streamed run's canonical label stream (replayed to the waiter's
+/// output file on a hit). The two kinds never share entries even for
+/// identical input bytes — their result metadata differs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OutputKind {
+    Volume,
+    Stream,
+}
+
+impl OutputKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OutputKind::Volume => "volume",
+            OutputKind::Stream => "stream",
+        }
+    }
+}
+
+/// Content address of one segmentation result. Equal keys ⟹ equal
+/// result bytes, by the determinism contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// [`Digest64`](crate::util::Digest64) of the voxel raster with its
+    /// geometry header (`w h d sample_bits`) folded in first — same
+    /// bytes under a different shape never collide.
+    pub input_digest: u64,
+    /// Digest of the mask raster (`None` = maskless; distinct from an
+    /// all-ones mask, which is semantically identical but hashes as its
+    /// own key — a harmless split, never a false hit).
+    pub mask_digest: Option<u64>,
+    pub engine: Engine,
+    /// [`CacheKey::canonical_params`] encoding of the run parameters.
+    pub params: [u8; 32],
+    pub kind: OutputKind,
+}
+
+impl CacheKey {
+    pub fn new(
+        input_digest: u64,
+        mask_digest: Option<u64>,
+        engine: Engine,
+        params: &FcmParams,
+        kind: OutputKind,
+    ) -> CacheKey {
+        CacheKey {
+            input_digest,
+            mask_digest,
+            engine,
+            params: CacheKey::canonical_params(params),
+            kind,
+        }
+    }
+
+    /// Canonical byte encoding of [`FcmParams`]: little-endian
+    /// `clusters:u64 | m:f32 bits | epsilon:f32 bits | max_iters:u64 |
+    /// seed:u64`. Bit-exact on the floats — `m = 2.0` and `m = 2.0 +
+    /// 1 ulp` are different runs and different keys.
+    pub fn canonical_params(p: &FcmParams) -> [u8; 32] {
+        let mut b = [0u8; 32];
+        b[0..8].copy_from_slice(&(p.clusters as u64).to_le_bytes());
+        b[8..12].copy_from_slice(&p.m.to_bits().to_le_bytes());
+        b[12..16].copy_from_slice(&p.epsilon.to_bits().to_le_bytes());
+        b[16..24].copy_from_slice(&(p.max_iters as u64).to_le_bytes());
+        b[24..32].copy_from_slice(&p.seed.to_le_bytes());
+        b
+    }
+
+    /// One-line canonical rendering — embedded in `.rcache` files and
+    /// re-checked on load, so a digest collision between two keys'
+    /// *file names* can never serve wrong bytes.
+    pub fn canonical_line(&self) -> String {
+        let mask = match self.mask_digest {
+            Some(d) => format!("{d:016x}"),
+            None => "-".to_string(),
+        };
+        let params: String = self.params.iter().map(|b| format!("{b:02x}")).collect();
+        format!(
+            "rcache1 {} {} {:016x} {} {}",
+            self.kind.name(),
+            self.engine.name(),
+            self.input_digest,
+            mask,
+            params
+        )
+    }
+
+    /// Digest of the canonical line — the file-store name.
+    pub fn file_digest(&self) -> u64 {
+        digest_bytes(self.canonical_line().as_bytes())
+    }
+}
+
+/// One cached result: the canonical label bytes plus enough metadata to
+/// reconstruct either a `VolumeOutcome`-shaped or `StreamOutcome`-shaped
+/// response without rerunning anything. Labels sit behind an `Arc` so N
+/// coalesced waiters share one buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedResult {
+    pub labels: Arc<Vec<u8>>,
+    pub centers: Vec<f32>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// `(width, height, depth)` — a streamed hit needs the geometry to
+    /// replay the labels into a fresh RVOL at the waiter's output path.
+    pub shape: (usize, usize, usize),
+    /// Volume kind: the outcome's `true_3d`. Stream kind: `streamed`.
+    pub true_3d: bool,
+    pub work_per_iter: usize,
+    /// Stream kind only (0 for volume results).
+    pub voxels: usize,
+    /// Stream kind only (0 for volume results).
+    pub peak_resident_bytes: usize,
+}
+
+impl CachedResult {
+    /// Byte cost charged against the LRU budget.
+    pub fn cost(&self) -> usize {
+        self.labels.len() + self.centers.len() * 4 + 96
+    }
+}
+
+/// A submission that coalesced onto another key-equal submission's
+/// in-flight computation. Holds everything the completing worker needs
+/// to answer it: the response channel, its own cancel token (checked at
+/// fan-out — a waiter whose deadline fired while coalesced is answered
+/// with the interruption, not with stale silence), and, for streamed
+/// waiters, the output path the cached labels are replayed to.
+pub struct Waiter {
+    pub id: u64,
+    pub engine: Engine,
+    pub respond: mpsc::Sender<anyhow::Result<JobResult>>,
+    pub cancel: CancelToken,
+    pub submitted: Instant,
+    pub trace: Arc<TraceLog>,
+    /// Streamed waiters: RVOL path to replay the cached labels to.
+    pub output: Option<PathBuf>,
+}
+
+/// Outcome of [`ResultCache::probe`].
+pub enum Probe {
+    /// Stored result — respond immediately, skip admission and queue.
+    Hit(CachedResult),
+    /// Nothing stored, no flight in progress: the caller's job is now
+    /// the flight leader and *must* eventually resolve the flight via
+    /// [`complete`](ResultCache::complete) or
+    /// [`fail`](ResultCache::fail) on every terminal path, else later
+    /// equal-key waiters hang until service shutdown.
+    Lead,
+    /// The waiter was enrolled on an existing flight; the caller is
+    /// done — the leader's worker will answer it.
+    Coalesced,
+}
+
+struct Slot {
+    result: CachedResult,
+    cost: usize,
+    last_used: u64,
+}
+
+#[derive(Clone, PartialEq, Eq)]
+struct FileStamp {
+    len: u64,
+    mtime_ns: u128,
+}
+
+#[derive(Clone)]
+struct MemoSlot {
+    input: FileStamp,
+    mask: Option<FileStamp>,
+    digest: u64,
+    mask_digest: Option<u64>,
+}
+
+type MemoKey = (PathBuf, Option<PathBuf>);
+
+struct State {
+    entries: HashMap<CacheKey, Slot>,
+    bytes: usize,
+    tick: u64,
+    flights: HashMap<CacheKey, Vec<Waiter>>,
+    memo: HashMap<MemoKey, MemoSlot>,
+}
+
+/// The cache. One instance per [`Service`](super::Service) (workers
+/// share it through an `Arc`); the CLI builds a standalone instance
+/// around a cache dir for cross-process hits.
+pub struct ResultCache {
+    enabled: bool,
+    capacity: usize,
+    dir: Option<PathBuf>,
+    metrics: Arc<Metrics>,
+    state: Mutex<State>,
+}
+
+impl ResultCache {
+    pub fn new(
+        enabled: bool,
+        capacity: usize,
+        dir: Option<PathBuf>,
+        metrics: Arc<Metrics>,
+    ) -> ResultCache {
+        let memo = match (enabled, dir.as_deref()) {
+            (true, Some(d)) => load_memo(d),
+            _ => HashMap::new(),
+        };
+        ResultCache {
+            enabled,
+            capacity,
+            dir,
+            metrics,
+            state: Mutex::new(State {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+                flights: HashMap::new(),
+                memo,
+            }),
+        }
+    }
+
+    /// A no-op cache (`--no-cache`): never hits, never stores, callers
+    /// short-circuit on [`enabled`](ResultCache::enabled).
+    pub fn disabled() -> ResultCache {
+        ResultCache::new(false, 0, None, Arc::new(Metrics::default()))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Atomic hit / lead / coalesce decision. The store check, the
+    /// flight check, and the flight registration happen under one lock,
+    /// so two equal-key submissions can never both lead and a waiter
+    /// can never enroll on a flight that already drained. Counts
+    /// exactly one of `cache_hits` / `cache_misses` /
+    /// `coalesced_waiters` per call. On `Hit` and `Lead` the waiter is
+    /// dropped unused (the caller answers / runs the job itself).
+    pub fn probe(&self, key: &CacheKey, waiter: Waiter) -> Probe {
+        if !self.enabled {
+            return Probe::Lead;
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(result) = self.lookup_locked(&mut st, key) {
+            self.metrics.cache_hit();
+            return Probe::Hit(result);
+        }
+        if let Some(waiters) = st.flights.get_mut(key) {
+            waiters.push(waiter);
+            self.metrics.coalesced_waiter();
+            return Probe::Coalesced;
+        }
+        st.flights.insert(*key, Vec::new());
+        self.metrics.cache_miss();
+        Probe::Lead
+    }
+
+    /// Store-only lookup (no flight bookkeeping, no metrics) — the
+    /// CLI's one-shot path.
+    pub fn lookup(&self, key: &CacheKey) -> Option<CachedResult> {
+        if !self.enabled {
+            return None;
+        }
+        let mut st = self.state.lock().unwrap();
+        self.lookup_locked(&mut st, key)
+    }
+
+    /// Store a result without flight bookkeeping (CLI, tests).
+    pub fn insert(&self, key: &CacheKey, result: CachedResult) {
+        if !self.enabled {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        self.insert_locked(&mut st, key, result);
+    }
+
+    /// Flight leader succeeded: store the result and hand back every
+    /// coalesced waiter for fan-out (the worker answers them — cache
+    /// code never touches response channels).
+    pub fn complete(&self, key: &CacheKey, result: CachedResult) -> Vec<Waiter> {
+        if !self.enabled {
+            return Vec::new();
+        }
+        let mut st = self.state.lock().unwrap();
+        self.insert_locked(&mut st, key, result);
+        st.flights.remove(key).unwrap_or_default()
+    }
+
+    /// Flight leader failed or was cancelled: nothing is stored; hand
+    /// back the waiters so the worker can answer them with the failure.
+    /// The *next* equal-key submission leads a fresh flight.
+    pub fn fail(&self, key: &CacheKey) -> Vec<Waiter> {
+        if !self.enabled {
+            return Vec::new();
+        }
+        let mut st = self.state.lock().unwrap();
+        st.flights.remove(key).unwrap_or_default()
+    }
+
+    /// Submit-time digests for a file-backed job, if the `(path, stat)`
+    /// memo still matches the files on disk — zero I/O beyond two
+    /// `stat` calls. `None` = first contact (or the file changed): the
+    /// caller runs with a [`DigestSource`]
+    /// (crate::image::volume::stream::DigestSource) wrap and calls
+    /// [`remember_stream_digests`](ResultCache::remember_stream_digests)
+    /// afterwards.
+    pub fn stream_digests(&self, input: &Path, mask: Option<&Path>) -> Option<(u64, Option<u64>)> {
+        if !self.enabled {
+            return None;
+        }
+        let memo_key = (input.to_path_buf(), mask.map(Path::to_path_buf));
+        let mut st = self.state.lock().unwrap();
+        let slot = st.memo.get(&memo_key)?.clone();
+        let fresh = stamp(input).is_some_and(|s| s == slot.input)
+            && match (&slot.mask, mask) {
+                (Some(want), Some(path)) => stamp(path).is_some_and(|s| s == *want),
+                (None, None) => true,
+                _ => false,
+            };
+        if !fresh {
+            st.memo.remove(&memo_key);
+            return None;
+        }
+        Some((slot.digest, slot.mask_digest))
+    }
+
+    /// Record the digests a finished run folded for its file inputs,
+    /// stamped against the files' current `(len, mtime)`. Appended to
+    /// `memo.jsonl` under the cache dir (last line wins on reload) so a
+    /// later *process* also gets submit-time keys.
+    pub fn remember_stream_digests(
+        &self,
+        input: &Path,
+        mask: Option<&Path>,
+        digest: u64,
+        mask_digest: Option<u64>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let Some(input_stamp) = stamp(input) else { return };
+        let mask_stamp = match mask {
+            Some(path) => match stamp(path) {
+                Some(s) => Some(s),
+                None => return,
+            },
+            None => None,
+        };
+        let slot = MemoSlot {
+            input: input_stamp,
+            mask: mask_stamp,
+            digest,
+            mask_digest,
+        };
+        let mut st = self.state.lock().unwrap();
+        // Appends serialize under the state lock.
+        if let Some(d) = self.dir.as_deref() {
+            append_memo_line(d, input, mask, &slot);
+        }
+        st.memo
+            .insert((input.to_path_buf(), mask.map(Path::to_path_buf)), slot);
+    }
+
+    fn lookup_locked(&self, st: &mut State, key: &CacheKey) -> Option<CachedResult> {
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(slot) = st.entries.get_mut(key) {
+            slot.last_used = tick;
+            return Some(slot.result.clone());
+        }
+        // File store: a hit promotes into memory (LRU-fresh).
+        let result = self.load_file(key)?;
+        self.insert_memory_locked(st, key, result.clone());
+        Some(result)
+    }
+
+    fn insert_locked(&self, st: &mut State, key: &CacheKey, result: CachedResult) {
+        self.save_file(key, &result);
+        self.insert_memory_locked(st, key, result);
+    }
+
+    fn insert_memory_locked(&self, st: &mut State, key: &CacheKey, result: CachedResult) {
+        if let Some(old) = st.entries.remove(key) {
+            st.bytes -= old.cost;
+        }
+        let cost = result.cost();
+        if cost > self.capacity {
+            // Larger than the whole budget: memory never holds it (the
+            // file store still does).
+            self.metrics.cache_level(st.bytes);
+            return;
+        }
+        let mut evicted = 0usize;
+        while st.bytes + cost > self.capacity {
+            let Some(lru) = st
+                .entries
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| *k)
+            else {
+                break;
+            };
+            let slot = st.entries.remove(&lru).expect("key just observed");
+            st.bytes -= slot.cost;
+            evicted += 1;
+        }
+        st.tick += 1;
+        let tick = st.tick;
+        st.entries.insert(
+            *key,
+            Slot {
+                result,
+                cost,
+                last_used: tick,
+            },
+        );
+        st.bytes += cost;
+        if evicted > 0 {
+            self.metrics.cache_evicted(evicted);
+        }
+        self.metrics.cache_level(st.bytes);
+    }
+
+    fn file_path(&self, key: &CacheKey) -> Option<PathBuf> {
+        self.dir
+            .as_deref()
+            .map(|d| d.join(format!("{:016x}.rcache", key.file_digest())))
+    }
+
+    fn save_file(&self, key: &CacheKey, result: &CachedResult) {
+        let Some(path) = self.file_path(key) else { return };
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        let wrote = (|| -> std::io::Result<()> {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(b"RCACHE1\n")?;
+            f.write_all(key.canonical_line().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.write_all(meta_json(result).to_string().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.write_all(&result.labels)?;
+            drop(f);
+            std::fs::rename(&tmp, &path)
+        })();
+        if wrote.is_err() {
+            // Best-effort store; a failed write must not leave a
+            // partial sibling behind.
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    fn load_file(&self, key: &CacheKey) -> Option<CachedResult> {
+        let path = self.file_path(key)?;
+        let buf = std::fs::read(&path).ok()?;
+        match parse_rcache(&buf, key) {
+            Some(result) => Some(result),
+            None => {
+                // Corrupt (or foreign) bytes under our name: purge and
+                // miss — the job reruns and overwrites it.
+                let _ = std::fs::remove_file(&path);
+                None
+            }
+        }
+    }
+}
+
+fn stamp(path: &Path) -> Option<FileStamp> {
+    let md = std::fs::metadata(path).ok()?;
+    if !md.is_file() {
+        // A directory's mtime does not change when an entry's *content*
+        // does — memoizing PGM-stack dirs could serve a stale digest.
+        // Dir inputs simply re-fold their digest on every run.
+        return None;
+    }
+    let mtime_ns = md
+        .modified()
+        .ok()?
+        .duration_since(std::time::UNIX_EPOCH)
+        .ok()?
+        .as_nanos();
+    Some(FileStamp {
+        len: md.len(),
+        mtime_ns,
+    })
+}
+
+fn meta_json(result: &CachedResult) -> Json {
+    let (w, h, d) = result.shape;
+    Json::obj(vec![
+        ("labels_len", Json::Num(result.labels.len() as f64)),
+        (
+            "labels_digest",
+            Json::Str(format!("{:016x}", digest_bytes(&result.labels))),
+        ),
+        (
+            "centers",
+            Json::Arr(result.centers.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        ("iterations", Json::Num(result.iterations as f64)),
+        ("converged", Json::Bool(result.converged)),
+        (
+            "shape",
+            Json::Arr(vec![
+                Json::Num(w as f64),
+                Json::Num(h as f64),
+                Json::Num(d as f64),
+            ]),
+        ),
+        ("true_3d", Json::Bool(result.true_3d)),
+        ("work_per_iter", Json::Num(result.work_per_iter as f64)),
+        ("voxels", Json::Num(result.voxels as f64)),
+        (
+            "peak_resident_bytes",
+            Json::Num(result.peak_resident_bytes as f64),
+        ),
+    ])
+}
+
+fn json_usize(j: &Json, key: &str) -> Option<usize> {
+    let v = j.get(key)?.as_f64()?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return None;
+    }
+    Some(v as usize)
+}
+
+fn json_bool(j: &Json, key: &str) -> Option<bool> {
+    match j.get(key)? {
+        Json::Bool(b) => Some(*b),
+        _ => None,
+    }
+}
+
+fn json_hex(j: &Json, key: &str) -> Option<u64> {
+    u64::from_str_radix(j.get(key)?.as_str()?, 16).ok()
+}
+
+fn take_line(buf: &[u8], from: usize) -> Option<(&str, usize)> {
+    let end = from + buf.get(from..)?.iter().position(|&b| b == b'\n')?;
+    Some((std::str::from_utf8(&buf[from..end]).ok()?, end + 1))
+}
+
+fn parse_rcache(buf: &[u8], key: &CacheKey) -> Option<CachedResult> {
+    let (magic, i) = take_line(buf, 0)?;
+    if magic != "RCACHE1" {
+        return None;
+    }
+    let (key_line, i) = take_line(buf, i)?;
+    if key_line != key.canonical_line() {
+        return None;
+    }
+    let (meta_line, i) = take_line(buf, i)?;
+    let meta = Json::parse(meta_line).ok()?;
+    let labels = buf.get(i..)?;
+    if labels.len() != json_usize(&meta, "labels_len")? {
+        return None;
+    }
+    if digest_bytes(labels) != json_hex(&meta, "labels_digest")? {
+        return None;
+    }
+    let centers = meta
+        .get("centers")?
+        .as_arr()?
+        .iter()
+        .map(|c| c.as_f64().map(|v| v as f32))
+        .collect::<Option<Vec<f32>>>()?;
+    let shape = meta.get("shape")?.as_arr()?;
+    if shape.len() != 3 {
+        return None;
+    }
+    let dim = |k: usize| -> Option<usize> {
+        let v = shape[k].as_f64()?;
+        (v >= 0.0 && v.fract() == 0.0).then_some(v as usize)
+    };
+    Some(CachedResult {
+        labels: Arc::new(labels.to_vec()),
+        centers,
+        iterations: json_usize(&meta, "iterations")?,
+        converged: json_bool(&meta, "converged")?,
+        shape: (dim(0)?, dim(1)?, dim(2)?),
+        true_3d: json_bool(&meta, "true_3d")?,
+        work_per_iter: json_usize(&meta, "work_per_iter")?,
+        voxels: json_usize(&meta, "voxels")?,
+        peak_resident_bytes: json_usize(&meta, "peak_resident_bytes")?,
+    })
+}
+
+fn opt_path_json(p: Option<&Path>) -> Json {
+    match p {
+        Some(p) => Json::Str(p.display().to_string()),
+        None => Json::Null,
+    }
+}
+
+fn append_memo_line(dir: &Path, input: &Path, mask: Option<&Path>, slot: &MemoSlot) {
+    let line = Json::obj(vec![
+        ("input", Json::Str(input.display().to_string())),
+        ("input_len", Json::Num(slot.input.len as f64)),
+        (
+            "input_mtime_ns",
+            Json::Str(slot.input.mtime_ns.to_string()),
+        ),
+        ("mask", opt_path_json(mask)),
+        (
+            "mask_len",
+            match &slot.mask {
+                Some(s) => Json::Num(s.len as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "mask_mtime_ns",
+            match &slot.mask {
+                Some(s) => Json::Str(s.mtime_ns.to_string()),
+                None => Json::Null,
+            },
+        ),
+        ("digest", Json::Str(format!("{:016x}", slot.digest))),
+        (
+            "mask_digest",
+            match slot.mask_digest {
+                Some(d) => Json::Str(format!("{d:016x}")),
+                None => Json::Null,
+            },
+        ),
+    ]);
+    let _ = (|| -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join("memo.jsonl"))?;
+        writeln!(f, "{line}")
+    })();
+}
+
+fn load_memo(dir: &Path) -> HashMap<MemoKey, MemoSlot> {
+    let mut memo = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(dir.join("memo.jsonl")) else {
+        return memo;
+    };
+    for line in text.lines() {
+        let Ok(j) = Json::parse(line) else { continue };
+        let Some(entry) = parse_memo_line(&j) else { continue };
+        memo.insert(entry.0, entry.1); // last line wins
+    }
+    memo
+}
+
+fn parse_memo_line(j: &Json) -> Option<(MemoKey, MemoSlot)> {
+    let input = PathBuf::from(j.get("input")?.as_str()?);
+    let mask = match j.get("mask")? {
+        Json::Str(s) => Some(PathBuf::from(s)),
+        Json::Null => None,
+        _ => return None,
+    };
+    let input_stamp = FileStamp {
+        len: json_usize(j, "input_len")? as u64,
+        mtime_ns: j.get("input_mtime_ns")?.as_str()?.parse().ok()?,
+    };
+    let mask_stamp = if mask.is_some() {
+        Some(FileStamp {
+            len: json_usize(j, "mask_len")? as u64,
+            mtime_ns: j.get("mask_mtime_ns")?.as_str()?.parse().ok()?,
+        })
+    } else {
+        None
+    };
+    let mask_digest = match j.get("mask_digest")? {
+        Json::Str(s) => Some(u64::from_str_radix(s, 16).ok()?),
+        Json::Null => None,
+        _ => return None,
+    };
+    Some((
+        (input, mask),
+        MemoSlot {
+            input: input_stamp,
+            mask: mask_stamp,
+            digest: json_hex(j, "digest")?,
+            mask_digest,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
+    }
+
+    fn key(seed: u64) -> CacheKey {
+        CacheKey::new(
+            0xABCD,
+            None,
+            Engine::Parallel,
+            &FcmParams {
+                seed,
+                ..FcmParams::default()
+            },
+            OutputKind::Volume,
+        )
+    }
+
+    fn result(fill: u8, n: usize) -> CachedResult {
+        CachedResult {
+            labels: Arc::new(vec![fill; n]),
+            centers: vec![10.0, 200.0],
+            iterations: 7,
+            converged: true,
+            shape: (n, 1, 1),
+            true_3d: true,
+            work_per_iter: n,
+            voxels: 0,
+            peak_resident_bytes: 0,
+        }
+    }
+
+    fn waiter() -> Waiter {
+        let (tx, _rx) = mpsc::channel();
+        Waiter {
+            id: 1,
+            engine: Engine::Parallel,
+            respond: tx,
+            cancel: CancelToken::never(),
+            submitted: Instant::now(),
+            trace: Arc::new(TraceLog::new(1, 8)),
+            output: None,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rcache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn canonical_key_separates_every_component() {
+        let base = key(1);
+        let mut lines = vec![base.canonical_line()];
+        lines.push(key(2).canonical_line()); // seed -> params bytes
+        lines.push(
+            CacheKey {
+                mask_digest: Some(7),
+                ..base
+            }
+            .canonical_line(),
+        );
+        lines.push(
+            CacheKey {
+                engine: Engine::Histogram,
+                ..base
+            }
+            .canonical_line(),
+        );
+        lines.push(
+            CacheKey {
+                kind: OutputKind::Stream,
+                ..base
+            }
+            .canonical_line(),
+        );
+        lines.push(
+            CacheKey {
+                input_digest: 0xABCE,
+                ..base
+            }
+            .canonical_line(),
+        );
+        let mut unique = lines.clone();
+        unique.sort();
+        unique.dedup();
+        assert_eq!(unique.len(), lines.len(), "{lines:?}");
+        // An epsilon nudged by one ulp is a different run.
+        let mut p = FcmParams::default();
+        p.epsilon = f32::from_bits(p.epsilon.to_bits() + 1);
+        assert_ne!(
+            CacheKey::canonical_params(&p),
+            CacheKey::canonical_params(&FcmParams::default())
+        );
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_byte_budget() {
+        let m = metrics();
+        // Each entry costs 1000 + 8 + 96 = 1104 bytes; budget fits two.
+        let cache = ResultCache::new(true, 2300, None, m.clone());
+        cache.insert(&key(1), result(1, 1000));
+        cache.insert(&key(2), result(2, 1000));
+        assert!(cache.lookup(&key(1)).is_some(), "touch 1 -> 2 is LRU");
+        cache.insert(&key(3), result(3, 1000));
+        assert!(cache.lookup(&key(2)).is_none(), "2 evicted");
+        assert!(cache.lookup(&key(1)).is_some());
+        assert!(cache.lookup(&key(3)).is_some());
+        let snap = m.snapshot();
+        assert_eq!(snap.cache_evictions, 1);
+        assert_eq!(snap.cache_bytes, 2 * 1104);
+        assert_eq!(snap.cache_bytes_peak, 2 * 1104);
+        // An entry larger than the whole budget never displaces the
+        // working set.
+        cache.insert(&key(4), result(4, 100_000));
+        assert!(cache.lookup(&key(1)).is_some());
+        assert!(cache.lookup(&key(4)).is_none());
+    }
+
+    #[test]
+    fn file_store_roundtrips_and_detects_corruption() {
+        let dir = tmp_dir("file");
+        let k = key(9);
+        let stored = result(5, 64);
+        {
+            let cache = ResultCache::new(true, 1 << 20, Some(dir.clone()), metrics());
+            cache.insert(&k, stored.clone());
+        }
+        // A fresh instance (fresh process, conceptually) hits from disk.
+        let cache = ResultCache::new(true, 1 << 20, Some(dir.clone()), metrics());
+        assert_eq!(cache.lookup(&k), Some(stored.clone()));
+        // Wrong key under the right file name is refused.
+        assert_eq!(cache.lookup(&key(10)), None);
+        // Flip one label bit on disk: detected, treated as a miss, and
+        // the corrupt file is purged.
+        let path = dir.join(format!("{:016x}.rcache", k.file_digest()));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let cold = ResultCache::new(true, 1 << 20, Some(dir.clone()), metrics());
+        assert_eq!(cold.lookup(&k), None, "bit flip is a miss");
+        assert!(!path.exists(), "corrupt entry purged");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn single_flight_probe_leads_coalesces_and_drains() {
+        let m = metrics();
+        let cache = ResultCache::new(true, 1 << 20, None, m.clone());
+        let k = key(3);
+        assert!(matches!(cache.probe(&k, waiter()), Probe::Lead));
+        assert!(matches!(cache.probe(&k, waiter()), Probe::Coalesced));
+        assert!(matches!(cache.probe(&k, waiter()), Probe::Coalesced));
+        // A different key leads its own flight.
+        assert!(matches!(cache.probe(&key(4), waiter()), Probe::Lead));
+        let drained = cache.complete(&k, result(1, 16));
+        assert_eq!(drained.len(), 2);
+        // After completion the key hits; no new flight.
+        assert!(matches!(cache.probe(&k, waiter()), Probe::Hit(_)));
+        // A failed flight stores nothing and the next probe re-leads.
+        let k2 = key(4);
+        assert_eq!(cache.fail(&k2).len(), 0);
+        assert!(matches!(cache.probe(&k2, waiter()), Probe::Lead));
+        let snap = m.snapshot();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 3, "two leads + one re-lead");
+        assert_eq!(snap.coalesced_waiters, 2);
+    }
+
+    #[test]
+    fn memo_validates_stat_and_survives_reload() {
+        let dir = tmp_dir("memo");
+        let input = dir.join("vol.rvol");
+        std::fs::write(&input, b"RVOL pretend bytes").unwrap();
+        {
+            let cache = ResultCache::new(true, 1 << 20, Some(dir.clone()), metrics());
+            assert_eq!(cache.stream_digests(&input, None), None, "first contact");
+            cache.remember_stream_digests(&input, None, 0xFEED, None);
+            assert_eq!(cache.stream_digests(&input, None), Some((0xFEED, None)));
+        }
+        // Reload from memo.jsonl in a fresh instance.
+        let cache = ResultCache::new(true, 1 << 20, Some(dir.clone()), metrics());
+        assert_eq!(cache.stream_digests(&input, None), Some((0xFEED, None)));
+        // Rewriting the file (different length) invalidates the memo.
+        std::fs::write(&input, b"RVOL different contents now").unwrap();
+        assert_eq!(cache.stream_digests(&input, None), None, "stale stamp");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let cache = ResultCache::disabled();
+        assert!(!cache.enabled());
+        cache.insert(&key(1), result(1, 8));
+        assert_eq!(cache.lookup(&key(1)), None);
+        assert!(matches!(cache.probe(&key(1), waiter()), Probe::Lead));
+        assert!(matches!(cache.probe(&key(1), waiter()), Probe::Lead));
+        assert_eq!(cache.complete(&key(1), result(1, 8)).len(), 0);
+    }
+
+    #[test]
+    fn rcache_meta_roundtrips_stream_fields() {
+        let stored = CachedResult {
+            labels: Arc::new(vec![2, 0, 1, 1]),
+            centers: vec![1.5, 77.25, 201.0],
+            iterations: 41,
+            converged: false,
+            shape: (2, 2, 1),
+            true_3d: true,
+            work_per_iter: 256,
+            voxels: 4,
+            peak_resident_bytes: 1234,
+        };
+        let k = CacheKey::new(1, Some(2), Engine::Spatial, &FcmParams::default(), OutputKind::Stream);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"RCACHE1\n");
+        buf.extend_from_slice(k.canonical_line().as_bytes());
+        buf.push(b'\n');
+        buf.extend_from_slice(meta_json(&stored).to_string().as_bytes());
+        buf.push(b'\n');
+        buf.extend_from_slice(&stored.labels);
+        assert_eq!(parse_rcache(&buf, &k), Some(stored));
+    }
+}

@@ -9,8 +9,32 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Scheduling class of a submitted job. Workers drain the queue in
+/// priority-then-FIFO order: all queued `High` jobs before any `Normal`,
+/// all `Normal` before any `Low`, submission order within a class
+/// (`Queue::pop_by_key`). Priority affects *ordering only* — never the
+/// result bytes — so it is excluded from the result-cache key.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Drain rank: lower drains first (`High` = 0).
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
 /// Engine used to serve a job.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Engine {
     /// AOT Pallas artifact on the PJRT runtime (the paper's parallel FCM).
     Device,
@@ -139,6 +163,15 @@ pub struct SegmentJob {
     pub stream: Option<StreamVolumeJob>,
     pub params: FcmParams,
     pub engine: Engine,
+    /// Scheduling class — workers drain priority-then-FIFO.
+    pub priority: Priority,
+    /// Result-cache key, when the submitter could derive it up front
+    /// (in-memory inputs, or file inputs with a memoized digest). The
+    /// worker populates the cache — and releases any coalesced waiters
+    /// — under this key after `finish`. `None` = first contact with a
+    /// file input: the worker folds the digest during the run's first
+    /// sweep and derives the key itself.
+    pub cache_key: Option<super::cache::CacheKey>,
     pub submitted: Instant,
     /// Cooperative cancellation handle (deadline and/or explicit
     /// cancel); [`CancelToken::never`] when neither applies. Workers
@@ -193,6 +226,11 @@ pub struct JobResult {
     /// Streamed volume jobs only: peak resident tile bytes of the run
     /// (labels live in the job's output file, so `labels` is empty).
     pub peak_resident_bytes: Option<usize>,
+    /// Served from the result cache (hit or coalesced onto another
+    /// submission's computation) — no engine work ran for this job.
+    /// The bytes are identical to a cold run's by the determinism
+    /// contract (DESIGN.md, "Determinism as a cache key").
+    pub cached: bool,
 }
 
 #[cfg(test)]
@@ -208,12 +246,21 @@ mod tests {
             stream: None,
             params: FcmParams::default(),
             engine: Engine::Device,
+            priority: Priority::Normal,
+            cache_key: None,
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,
             trace: Arc::new(TraceLog::new(1, 8)),
             respond: tx,
         }
+    }
+
+    #[test]
+    fn priority_ranks_drain_high_first() {
+        assert!(Priority::High.rank() < Priority::Normal.rank());
+        assert!(Priority::Normal.rank() < Priority::Low.rank());
+        assert_eq!(Priority::default(), Priority::Normal);
     }
 
     #[test]

@@ -66,6 +66,18 @@ pub struct Metrics {
     /// Prefetcher outcomes across all profiled runs.
     prefetch_hits: AtomicU64,
     prefetch_misses: AtomicU64,
+    /// Result-cache outcomes: jobs answered from the cache, jobs that
+    /// led an execution (miss), and submissions coalesced onto another
+    /// job's in-flight computation (neither hit nor miss).
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    /// Entries evicted by the byte-budgeted LRU.
+    cache_evictions: AtomicU64,
+    /// Resident cache bytes now / high-water (set + fetch_max, like the
+    /// admission level).
+    cache_bytes: AtomicU64,
+    cache_bytes_peak: AtomicU64,
+    coalesced_waiters: AtomicU64,
     /// Latency distributions (count/sum are the exact accumulators the
     /// means are derived from — there is no separate float path).
     queue_wait: LatencyHist,
@@ -129,6 +141,19 @@ pub struct Snapshot {
     /// Prefetcher fetches served without blocking / with blocking.
     pub prefetch_hits: u64,
     pub prefetch_misses: u64,
+    /// Jobs answered straight from the result cache (no engine work,
+    /// no admission, no queue).
+    pub cache_hits: u64,
+    /// Jobs that missed the cache and led an execution.
+    pub cache_misses: u64,
+    /// Entries evicted by the byte-budgeted LRU.
+    pub cache_evictions: u64,
+    /// Resident cache bytes at snapshot time / high-water mark.
+    pub cache_bytes: u64,
+    pub cache_bytes_peak: u64,
+    /// Submissions coalesced onto an equal-key in-flight computation
+    /// (single-flight; disjoint from both hits and misses).
+    pub coalesced_waiters: u64,
     /// Queue-wait latency distribution (count == completed jobs).
     pub queue_wait: LatencyStats,
     /// Service (execution) latency distribution.
@@ -172,6 +197,12 @@ impl Snapshot {
         e.push("repro_admission_peak_bytes", self.admission_peak_bytes as f64);
         e.push("repro_prefetch_hits_total", self.prefetch_hits as f64);
         e.push("repro_prefetch_misses_total", self.prefetch_misses as f64);
+        e.push("repro_cache_hits_total", self.cache_hits as f64);
+        e.push("repro_cache_misses_total", self.cache_misses as f64);
+        e.push("repro_cache_evictions_total", self.cache_evictions as f64);
+        e.push("repro_cache_bytes", self.cache_bytes as f64);
+        e.push("repro_cache_bytes_peak", self.cache_bytes_peak as f64);
+        e.push("repro_coalesced_waiters_total", self.coalesced_waiters as f64);
         for (name, l) in [
             ("repro_queue_wait", &self.queue_wait),
             ("repro_service", &self.service),
@@ -263,6 +294,33 @@ impl Metrics {
     /// (high-water via `fetch_max`).
     pub fn admission_level(&self, in_flight_bytes: usize) {
         self.admission_peak_bytes.fetch_max(in_flight_bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Count a job answered straight from the result cache.
+    pub fn cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a job that missed the cache (and will execute).
+    pub fn cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count entries evicted by the LRU.
+    pub fn cache_evicted(&self, n: usize) {
+        self.cache_evictions.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record the cache's resident bytes after an insert/evict (current
+    /// level + high-water via `fetch_max`).
+    pub fn cache_level(&self, bytes: usize) {
+        self.cache_bytes.store(bytes as u64, Ordering::Relaxed);
+        self.cache_bytes_peak.fetch_max(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Count a submission coalesced onto an in-flight equal-key job.
+    pub fn coalesced_waiter(&self) {
+        self.coalesced_waiters.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one span of `stage` lasting `ns` (exact rollup only; the
@@ -369,6 +427,12 @@ impl Metrics {
             admission_peak_bytes: self.admission_peak_bytes.load(Ordering::Relaxed),
             prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
             prefetch_misses: self.prefetch_misses.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_bytes: self.cache_bytes.load(Ordering::Relaxed),
+            cache_bytes_peak: self.cache_bytes_peak.load(Ordering::Relaxed),
+            coalesced_waiters: self.coalesced_waiters.load(Ordering::Relaxed),
             queue_wait: self.queue_wait.stats(),
             service: self.service.stats(),
             iteration: self.iteration.stats(),
@@ -425,7 +489,33 @@ mod tests {
         assert_eq!(s.rejected, 0);
         assert_eq!(s.cancelled, 0);
         assert_eq!(s.retried, 0);
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.cache_misses, 0);
+        assert_eq!(s.cache_evictions, 0);
+        assert_eq!(s.cache_bytes, 0);
+        assert_eq!(s.cache_bytes_peak, 0);
+        assert_eq!(s.coalesced_waiters, 0);
         assert_eq!(s.queue_wait, LatencyStats::default());
+    }
+
+    #[test]
+    fn cache_counters_track_level_and_high_water() {
+        let m = Metrics::default();
+        m.cache_miss();
+        m.cache_level(4096);
+        m.cache_hit();
+        m.cache_hit();
+        m.coalesced_waiter();
+        m.cache_level(8192);
+        m.cache_evicted(2);
+        m.cache_level(1024); // eviction shrank the resident set
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_evictions, 2);
+        assert_eq!(s.coalesced_waiters, 1);
+        assert_eq!(s.cache_bytes, 1024, "current level follows the last set");
+        assert_eq!(s.cache_bytes_peak, 8192, "peak is the high-water mark");
     }
 
     #[test]
@@ -585,6 +675,11 @@ mod tests {
         m.job_retried();
         m.stream_run(4096);
         m.admission_level(8192);
+        m.cache_hit();
+        m.cache_miss();
+        m.cache_evicted(1);
+        m.cache_level(2048);
+        m.coalesced_waiter();
         m.batch_served(Engine::Parallel, 2, secs(0.005));
         m.record_profile(&EngineProfile {
             iters: vec![crate::obs::span::IterSample {
@@ -625,6 +720,16 @@ mod tests {
         assert_eq!(get("repro_admission_peak_bytes"), s.admission_peak_bytes as f64);
         assert_eq!(get("repro_prefetch_hits_total"), s.prefetch_hits as f64);
         assert_eq!(get("repro_prefetch_misses_total"), s.prefetch_misses as f64);
+        assert_eq!(get("repro_cache_hits_total"), s.cache_hits as f64);
+        assert_eq!(get("repro_cache_misses_total"), s.cache_misses as f64);
+        assert_eq!(get("repro_cache_evictions_total"), s.cache_evictions as f64);
+        assert_eq!(get("repro_cache_bytes"), s.cache_bytes as f64);
+        assert_eq!(get("repro_cache_bytes_peak"), s.cache_bytes_peak as f64);
+        assert_eq!(get("repro_coalesced_waiters_total"), s.coalesced_waiters as f64);
+        // The workload above drove every cache counter nonzero, so the
+        // equalities are not vacuous.
+        assert!(s.cache_hits > 0 && s.cache_misses > 0 && s.cache_evictions > 0);
+        assert!(s.cache_bytes > 0 && s.cache_bytes_peak > 0 && s.coalesced_waiters > 0);
         for (name, l) in [
             ("repro_queue_wait", &s.queue_wait),
             ("repro_service", &s.service),

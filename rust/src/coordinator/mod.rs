@@ -4,6 +4,7 @@
 //! See DESIGN.md section 1 (L3) and S12.
 
 pub mod backend;
+pub mod cache;
 pub mod fault;
 pub mod job;
 pub mod metrics;
@@ -11,11 +12,12 @@ pub mod queue;
 pub mod service;
 
 pub use backend::{backend_for, BackendRun, FcmBackend, StreamOutcome, VolumeOutcome};
+pub use cache::{CacheKey, CachedResult, OutputKind, Probe, ResultCache, Waiter};
 pub use fault::{
     backoff_delay, backoff_schedule, is_transient_io, AdmissionController, AdmissionPermit,
     CancelToken, Interrupted, JobFailed, Rejected, RetryPolicy,
 };
-pub use job::{Engine, JobResult, SegmentJob, StreamVolumeJob};
+pub use job::{Engine, JobResult, Priority, SegmentJob, StreamVolumeJob};
 pub use metrics::{EngineBatchStats, Metrics, Snapshot, StageStats};
 pub use queue::Queue;
 pub use service::{Service, Ticket};

@@ -75,6 +75,34 @@ impl<T> Queue<T> {
         }
     }
 
+    /// Blocking pop of the item with the **smallest** `key`, FIFO among
+    /// equals — the worker loop's priority-then-FIFO drain
+    /// (`key = job.priority.rank()`). With a constant key this is
+    /// exactly [`pop`](Queue::pop). None when closed AND drained. The
+    /// scan is O(len) under the lock; the queue is bounded by
+    /// `queue_depth`, so the scan is bounded too.
+    pub fn pop_by_key<K: Ord, F: Fn(&T) -> K>(&self, key: F) -> Option<T> {
+        let (m, not_empty, not_full) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            let best = g
+                .q
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, item)| key(item))
+                .map(|(i, _)| i);
+            if let Some(i) = best {
+                let item = g.q.remove(i).expect("index in range under the lock");
+                not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = not_empty.wait(g).unwrap();
+        }
+    }
+
     /// Opportunistically pop another item matching `pred` (batch forming:
     /// a worker groups same-bucket jobs without blocking).
     pub fn try_pop_matching<F: Fn(&T) -> bool>(&self, pred: F) -> Option<T> {
@@ -158,6 +186,32 @@ mod tests {
         })
         .collect();
         assert_eq!(rest, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn pop_by_key_is_priority_then_fifo() {
+        // (priority, seq): lower priority value drains first, FIFO within.
+        let q = Queue::bounded(8);
+        for item in [(1, 0), (1, 1), (2, 2), (0, 3), (1, 4), (0, 5)] {
+            q.push(item).unwrap();
+        }
+        q.close();
+        let order: Vec<(i32, i32)> = std::iter::from_fn(|| q.pop_by_key(|&(p, _)| p)).collect();
+        assert_eq!(order, vec![(0, 3), (0, 5), (1, 0), (1, 1), (1, 4), (2, 2)]);
+    }
+
+    #[test]
+    fn pop_by_key_blocks_and_drains_on_close() {
+        let q = Queue::bounded(4);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_by_key(|&x: &i32| x));
+        std::thread::sleep(Duration::from_millis(30));
+        q.push(9).unwrap();
+        assert_eq!(h.join().unwrap(), Some(9));
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.pop_by_key(|&x| x), Some(1), "drains after close");
+        assert_eq!(q.pop_by_key(|&x| x), None);
     }
 
     #[test]

@@ -31,12 +31,13 @@
 //! jobs), so one engine invocation is always semantically valid for the
 //! whole batch.
 
-use super::backend::{backend_for, BackendRun};
+use super::backend::{backend_for, BackendRun, StreamOutcome};
+use super::cache::{CacheKey, CachedResult, OutputKind, Probe, ResultCache, Waiter};
 use super::fault::{
     backoff_delay, is_transient_io, AdmissionController, CancelToken, Interrupted, JobFailed,
     RetryPolicy,
 };
-use super::job::{Engine, JobResult, SegmentJob, StreamVolumeJob};
+use super::job::{Engine, JobResult, Priority, SegmentJob, StreamVolumeJob};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::Queue;
 use crate::config::Config;
@@ -45,7 +46,8 @@ use crate::fcm::engine::stream::{
 };
 use crate::fcm::{spatial, Backend, EngineOpts, FcmParams};
 use crate::image::volume::stream::{
-    FaultySource, PgmStackSource, RvolReader, RvolWriter, TilePrefetcher, VoxelSource,
+    raster_digest, DigestSource, FaultySource, LabelSink, PgmStackSource, RvolReader, RvolWriter,
+    TilePrefetcher, VoxelSource,
 };
 use crate::image::{FeatureVector, GrayImage, VoxelVolume};
 use crate::obs::{now_ns, prof, trace, Stage, TraceLog};
@@ -67,6 +69,7 @@ pub struct Service {
     next_id: AtomicU64,
     admission: Arc<AdmissionController>,
     job_timeout: Option<Duration>,
+    cache: Arc<ResultCache>,
 }
 
 /// Ticket for an in-flight job — the caller's handle for waiting on and
@@ -137,6 +140,12 @@ impl Service {
         let queue: Queue<SegmentJob> = Queue::bounded(cfg.service.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let batch_ids = Arc::new(AtomicU64::new(0));
+        let cache = Arc::new(ResultCache::new(
+            cfg.cache.enabled,
+            cfg.cache.capacity_bytes,
+            cfg.cache.dir.clone().map(std::path::PathBuf::from),
+            Arc::clone(&metrics),
+        ));
         let worker_cfg = WorkerCfg {
             max_batch: cfg.service.max_batch,
             batch_execute: cfg.service.batch_execute,
@@ -145,6 +154,7 @@ impl Service {
                 max_retries: cfg.service.max_retries,
                 backoff: Duration::from_millis(cfg.service.retry_backoff_ms),
             },
+            cache: Arc::clone(&cache),
         };
         let mut workers = Vec::new();
         for w in 0..cfg.service.workers {
@@ -173,12 +183,18 @@ impl Service {
             ),
             job_timeout: (cfg.service.job_timeout_ms > 0)
                 .then(|| Duration::from_millis(cfg.service.job_timeout_ms)),
+            cache,
         })
     }
 
     /// The admission controller (budget/in-flight observability).
     pub fn admission(&self) -> &Arc<AdmissionController> {
         &self.admission
+    }
+
+    /// The result cache (hit/level observability, tests).
+    pub fn cache(&self) -> &Arc<ResultCache> {
+        &self.cache
     }
 
     /// Fresh cancel token for a new job: deadline-armed when the
@@ -199,6 +215,21 @@ impl Service {
         params: FcmParams,
         engine: Engine,
     ) -> Result<Ticket> {
+        self.submit_with_priority(features, params, engine, Priority::Normal)
+    }
+
+    /// [`Service::submit`] with an explicit scheduling class: workers
+    /// drain the queue priority-then-FIFO, so a `High` job submitted
+    /// late overtakes every queued `Normal`/`Low` job (never a job
+    /// already executing — priorities reorder the queue, they do not
+    /// preempt).
+    pub fn submit_with_priority(
+        &self,
+        features: FeatureVector,
+        params: FcmParams,
+        engine: Engine,
+        priority: Priority,
+    ) -> Result<Ticket> {
         let submit_start = now_ns();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -211,6 +242,8 @@ impl Service {
             stream: None,
             params,
             engine,
+            priority,
+            cache_key: None,
             submitted: Instant::now(),
             cancel: cancel.clone(),
             permit: None,
@@ -238,17 +271,74 @@ impl Service {
     /// Submit a voxel volume for 3-D segmentation. The result's `labels`
     /// cover every voxel, z-major. Served as a singleton batch through
     /// `FcmBackend::segment_volume` (see module docs).
+    ///
+    /// Volume submissions are **content-cached**: the key digests the
+    /// voxel raster (and mask), the engine, and the canonical params. A
+    /// hit responds at submit time with byte-identical labels — no
+    /// queue slot, no engine run; an equal-key submission racing an
+    /// in-flight computation coalesces onto it (single-flight) and is
+    /// answered when the leader finishes.
     pub fn submit_volume(
         &self,
         vol: VoxelVolume,
         params: FcmParams,
         engine: Engine,
     ) -> Result<Ticket> {
+        self.submit_volume_with_priority(vol, params, engine, Priority::Normal)
+    }
+
+    /// [`Service::submit_volume`] with an explicit scheduling class.
+    pub fn submit_volume_with_priority(
+        &self,
+        vol: VoxelVolume,
+        params: FcmParams,
+        engine: Engine,
+        priority: Priority,
+    ) -> Result<Ticket> {
         let submit_start = now_ns();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let cancel = self.new_token();
         let trace_log = Arc::new(TraceLog::new(id, trace::DEFAULT_CAPACITY));
+        let cache_key = self.cache.enabled().then(|| {
+            let digest = raster_digest(vol.width, vol.height, vol.depth, 8, &vol.voxels);
+            let mask_digest = vol
+                .mask
+                .as_ref()
+                .map(|m| raster_digest(vol.width, vol.height, vol.depth, 8, m));
+            CacheKey::new(digest, mask_digest, engine, &params, OutputKind::Volume)
+        });
+        if let Some(key) = &cache_key {
+            let waiter = Waiter {
+                id,
+                engine,
+                respond: tx.clone(),
+                cancel: cancel.clone(),
+                submitted: Instant::now(),
+                trace: Arc::clone(&trace_log),
+                output: None,
+            };
+            match self.cache.probe(key, waiter) {
+                Probe::Hit(cached) => {
+                    // Hit: respond at submit time. No queue slot, no
+                    // engine run, no admission.
+                    self.metrics.job_submitted();
+                    self.metrics
+                        .job_completed(Duration::ZERO, Duration::ZERO, cached.iterations);
+                    let _ = tx.send(cached_result_response(id, engine, &cached, Duration::ZERO, None));
+                    close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
+                    return Ok(Ticket { id, rx, cancel, trace: trace_log });
+                }
+                Probe::Coalesced => {
+                    // Enrolled on the in-flight equal-key computation;
+                    // its worker answers this ticket at completion.
+                    self.metrics.job_submitted();
+                    close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
+                    return Ok(Ticket { id, rx, cancel, trace: trace_log });
+                }
+                Probe::Lead => {}
+            }
+        }
         let job = SegmentJob {
             id,
             features: FeatureVector::from_values(Vec::new()),
@@ -256,6 +346,8 @@ impl Service {
             stream: None,
             params,
             engine,
+            priority,
+            cache_key,
             submitted: Instant::now(),
             cancel: cancel.clone(),
             permit: None,
@@ -263,9 +355,14 @@ impl Service {
             respond: tx,
         };
         self.metrics.job_submitted();
-        self.queue
-            .push(job)
-            .map_err(|_| anyhow!("service is shut down"))?;
+        if let Err(job) = self.queue.push(job) {
+            // A lead job that never queued must resolve its flight, or
+            // later equal-key submissions would coalesce forever.
+            if let Some(key) = &job.cache_key {
+                drop(self.cache.fail(key));
+            }
+            return Err(anyhow!("service is shut down"));
+        }
         close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
         Ok(Ticket { id, rx, cancel, trace: trace_log })
     }
@@ -292,7 +389,79 @@ impl Service {
         params: FcmParams,
         engine: Engine,
     ) -> Result<Ticket> {
+        self.submit_volume_streamed_with_priority(spec, params, engine, Priority::Normal)
+    }
+
+    /// [`Service::submit_volume_streamed`] with an explicit scheduling
+    /// class.
+    ///
+    /// Streamed submissions consult the result cache **before**
+    /// admission: when the input file's digest is memoized (a prior run
+    /// folded it — see [`ResultCache::stream_digests`]) and the key
+    /// hits, the cached labels are replayed to `spec.output` at submit
+    /// time and the job never consumes resident-byte budget, never
+    /// takes a queue slot, and never counts as a streamed run. A
+    /// first-contact file (no memo) is served normally; the worker
+    /// folds the digest during the run's existing first sweep (zero
+    /// extra I/O) and populates the cache after `finish`.
+    pub fn submit_volume_streamed_with_priority(
+        &self,
+        spec: StreamVolumeJob,
+        params: FcmParams,
+        engine: Engine,
+        priority: Priority,
+    ) -> Result<Ticket> {
         let submit_start = now_ns();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let cancel = self.new_token();
+        let trace_log = Arc::new(TraceLog::new(id, trace::DEFAULT_CAPACITY));
+        // Submit-time key: only available when the (path, stat) memo is
+        // fresh — two stat calls, zero reads. Fault-injected jobs are
+        // never cache-keyed at submit: they exist to exercise the
+        // failure path, and a hit would bypass it.
+        let cache_key = if self.cache.enabled() && spec.fault.is_none() {
+            self.cache
+                .stream_digests(&spec.input, spec.mask.as_deref())
+                .map(|(digest, mask_digest)| {
+                    CacheKey::new(digest, mask_digest, engine, &params, OutputKind::Stream)
+                })
+        } else {
+            None
+        };
+        if let Some(key) = &cache_key {
+            let waiter = Waiter {
+                id,
+                engine,
+                respond: tx.clone(),
+                cancel: cancel.clone(),
+                submitted: Instant::now(),
+                trace: Arc::clone(&trace_log),
+                output: Some(spec.output.clone()),
+            };
+            match self.cache.probe(key, waiter) {
+                Probe::Hit(cached) => {
+                    self.metrics.job_submitted();
+                    let response =
+                        cached_result_response(id, engine, &cached, Duration::ZERO, Some(&spec.output));
+                    match &response {
+                        Ok(_) => self
+                            .metrics
+                            .job_completed(Duration::ZERO, Duration::ZERO, cached.iterations),
+                        Err(_) => self.metrics.job_failed(),
+                    }
+                    let _ = tx.send(response);
+                    close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
+                    return Ok(Ticket { id, rx, cancel, trace: trace_log });
+                }
+                Probe::Coalesced => {
+                    self.metrics.job_submitted();
+                    close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
+                    return Ok(Ticket { id, rx, cancel, trace: trace_log });
+                }
+                Probe::Lead => {}
+            }
+        }
         // An unreadable header skips admission on purpose: the job is
         // admitted and fails at serve time, where the open error is
         // counted as a failed job (not a rejected one).
@@ -307,16 +476,16 @@ impl Service {
                     self.metrics.job_rejected();
                     self.metrics
                         .record_stage(Stage::Admission, now_ns().saturating_sub(admission_start));
+                    // A rejected lead must resolve its flight.
+                    if let Some(key) = &cache_key {
+                        drop(self.cache.fail(key));
+                    }
                     return Err(anyhow::Error::new(rejected));
                 }
             },
             None => None,
         };
         let admission_end = now_ns();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
-        let cancel = self.new_token();
-        let trace_log = Arc::new(TraceLog::new(id, trace::DEFAULT_CAPACITY));
         trace_log.record(
             Stage::Admission,
             admission_start,
@@ -332,6 +501,8 @@ impl Service {
             stream: Some(spec),
             params,
             engine,
+            priority,
+            cache_key,
             submitted: Instant::now(),
             cancel: cancel.clone(),
             permit,
@@ -339,9 +510,12 @@ impl Service {
             respond: tx,
         };
         self.metrics.job_submitted();
-        self.queue
-            .push(job)
-            .map_err(|_| anyhow!("service is shut down"))?;
+        if let Err(job) = self.queue.push(job) {
+            if let Some(key) = &job.cache_key {
+                drop(self.cache.fail(key));
+            }
+            return Err(anyhow!("service is shut down"));
+        }
         close_span(&self.metrics, &trace_log, Stage::Submit, submit_start, 0);
         Ok(Ticket { id, rx, cancel, trace: trace_log })
     }
@@ -367,6 +541,116 @@ struct WorkerCfg {
     batch_execute: bool,
     engine_opts: EngineOpts,
     retry: RetryPolicy,
+    cache: Arc<ResultCache>,
+}
+
+/// Write cached stream labels to `path` as a fresh RVOL — the same
+/// writer (and therefore the same bytes) a cold run's sink produces,
+/// including the `.tmp`-then-rename publish.
+fn write_cached_rvol(path: &std::path::Path, cached: &CachedResult) -> Result<()> {
+    let (w, h, d) = cached.shape;
+    let mut sink = RvolWriter::create(path, w, h, d)?;
+    sink.write_slab(&cached.labels)?;
+    sink.finish()?;
+    Ok(())
+}
+
+/// Build the response for a job served from the cache. Volume kind
+/// (`output` None): the labels ride the result. Stream kind: the labels
+/// are replayed to `output` first — a failed replay fails the job, the
+/// cache entry stays. `peak_resident_bytes` reports 0 for a cached
+/// stream response: result metadata (centers, iterations, convergence)
+/// describes the cached *result*; run metadata describes *this* serve,
+/// which held no tiles.
+fn cached_result_response(
+    id: u64,
+    engine: Engine,
+    cached: &CachedResult,
+    queue_wait: Duration,
+    output: Option<&std::path::Path>,
+) -> Result<JobResult> {
+    let (labels, peak) = match output {
+        Some(path) => {
+            write_cached_rvol(path, cached)?;
+            (Vec::new(), Some(0))
+        }
+        None => (cached.labels.as_ref().clone(), None),
+    };
+    Ok(JobResult {
+        id,
+        labels,
+        centers: cached.centers.clone(),
+        iterations: cached.iterations,
+        converged: cached.converged,
+        engine,
+        queue_wait_s: queue_wait.as_secs_f64(),
+        service_s: 0.0,
+        device: None,
+        worker: 0,
+        batch_id: 0,
+        peak_resident_bytes: peak,
+        cached: true,
+    })
+}
+
+/// Answer every waiter that coalesced onto a finished flight. Each
+/// waiter is checked against its **own** cancel token first — a waiter
+/// whose deadline or cancel fired while coalesced gets its typed
+/// [`Interrupted`], never a result it no longer wants (and, dually,
+/// cancelling a waiter never cancels the flight leader — the other
+/// waiters still want the bytes). Leader success answers waiters with
+/// the cached bytes (streamed waiters get a replay to their own output
+/// path); leader failure fails them with the leader's reason.
+fn fan_out_waiters(
+    waiters: Vec<Waiter>,
+    flight: Result<&CachedResult, &str>,
+    metrics: &Metrics,
+) {
+    for w in waiters {
+        let finish_start = now_ns();
+        if let Some(why) = w.cancel.state() {
+            metrics.job_cancelled();
+            let _ = w.respond.send(Err(anyhow::Error::new(why)));
+            close_span(metrics, &w.trace, Stage::Finish, finish_start, 0);
+            continue;
+        }
+        match flight {
+            Ok(cached) => {
+                let response = cached_result_response(
+                    w.id,
+                    w.engine,
+                    cached,
+                    w.submitted.elapsed(),
+                    w.output.as_deref(),
+                );
+                match &response {
+                    Ok(_) => {
+                        metrics.job_completed(w.submitted.elapsed(), Duration::ZERO, cached.iterations)
+                    }
+                    Err(_) => metrics.job_failed(),
+                }
+                let _ = w.respond.send(response);
+            }
+            Err(reason) => {
+                metrics.job_failed();
+                let _ = w
+                    .respond
+                    .send(Err(anyhow!("coalesced onto a failed run: {reason}")));
+            }
+        }
+        close_span(metrics, &w.trace, Stage::Finish, finish_start, 0);
+    }
+}
+
+/// Resolve a leader job's flight as failed and answer its waiters.
+/// Called on **every** terminal failure path of a keyed job (serve
+/// error, cancellation, queued fast-fail) — an unresolved flight would
+/// strand later equal-key submissions.
+fn resolve_flight_failure(cache: &ResultCache, job: &SegmentJob, reason: &str, metrics: &Metrics) {
+    if let Some(key) = &job.cache_key {
+        let waiters = cache.fail(key);
+        fan_out_waiters(waiters, Err(reason), metrics);
+    }
 }
 
 /// Read just the source header of a streamed job: shape plus bytes per
@@ -526,16 +810,20 @@ fn form_batch(
     batch
 }
 
-/// Serve one volume job through `FcmBackend::segment_volume`.
+/// Serve one volume job through `FcmBackend::segment_volume`. A keyed
+/// job (flight leader) populates the cache on success and answers its
+/// coalesced waiters; every terminal path resolves the flight.
 fn serve_volume_job(
     worker_id: usize,
     job: SegmentJob,
     registry: Option<&Registry>,
     engine_opts: &EngineOpts,
+    cache: &ResultCache,
     metrics: &Metrics,
     batch_id: u64,
 ) {
     let vol = job.volume.as_ref().expect("volume job");
+    let shape = (vol.width, vol.height, vol.depth);
     let queue_wait = job.submitted.elapsed();
     record_queue_span(&job, queue_wait);
     let outcome = backend_for(job.engine, registry, engine_opts).and_then(|backend| {
@@ -555,6 +843,21 @@ fn serve_volume_job(
     match outcome {
         Ok((out, service)) => {
             metrics.job_completed(queue_wait, service, out.iterations);
+            if let Some(key) = &job.cache_key {
+                let cached = CachedResult {
+                    labels: Arc::new(out.labels.clone()),
+                    centers: out.centers.clone(),
+                    iterations: out.iterations,
+                    converged: out.converged,
+                    shape,
+                    true_3d: out.true_3d,
+                    work_per_iter: out.work_per_iter,
+                    voxels: 0,
+                    peak_resident_bytes: 0,
+                };
+                let waiters = cache.complete(key, cached.clone());
+                fan_out_waiters(waiters, Ok(&cached), metrics);
+            }
             let result = JobResult {
                 id: job.id,
                 labels: out.labels,
@@ -568,12 +871,16 @@ fn serve_volume_job(
                 worker: worker_id,
                 batch_id,
                 peak_resident_bytes: None,
+                cached: false,
             };
             let finish_start = now_ns();
             let _ = job.respond.send(Ok(result));
             close_span(metrics, &job.trace, Stage::Finish, finish_start, 0);
         }
-        Err(e) => respond_failure(job, e, metrics),
+        Err(e) => {
+            resolve_flight_failure(cache, &job, &format!("{e:#}"), metrics);
+            respond_failure(job, e, metrics);
+        }
     }
 }
 
@@ -641,16 +948,48 @@ fn open_stream_source(
 /// deterministic and the sink only publishes output on a successful
 /// `finish` (the `.tmp` rename). Panics and typed errors (rejection,
 /// cancellation, bad parameters) never retry.
+/// One streamed serve's full yield: the engine outcome plus what the
+/// cache layer needs — geometry, the digests folded during the run's
+/// first sweep, and the tee-captured label stream.
+struct StreamServe {
+    out: StreamOutcome,
+    service: Duration,
+    shape: (usize, usize, usize),
+    digests: (Option<u64>, Option<u64>),
+    captured: Option<Vec<u8>>,
+}
+
+/// Sink adapter for cache population: forward every slab to the real
+/// sink AND keep a copy. With the cache enabled, a streamed run
+/// transiently holds its label stream (1 byte/voxel) in memory for
+/// population — `--no-cache` restores strictly out-of-core serving.
+struct TeeSink<'a> {
+    inner: &'a mut RvolWriter,
+    copy: &'a mut Vec<u8>,
+}
+
+impl LabelSink for TeeSink<'_> {
+    fn write_slab(&mut self, labels: &[u8]) -> Result<()> {
+        self.inner.write_slab(labels)?;
+        self.copy.extend_from_slice(labels);
+        Ok(())
+    }
+}
+
 fn serve_stream_job(
     worker_id: usize,
     job: SegmentJob,
     registry: Option<&Registry>,
     engine_opts: &EngineOpts,
     retry: RetryPolicy,
+    cache: &ResultCache,
     metrics: &Metrics,
     batch_id: u64,
 ) {
     let spec = job.stream.clone().expect("stream job");
+    // Fault-injected jobs exist to exercise the failure machinery; they
+    // are never cached (and never cache-keyed at submit).
+    let cacheable = cache.enabled() && spec.fault.is_none();
     let queue_wait = job.submitted.elapsed();
     record_queue_span(&job, queue_wait);
     let mut attempt: u32 = 0;
@@ -662,17 +1001,43 @@ fn serve_stream_job(
                 job.cancel.checkpoint()?;
                 let mut src = open_stream_source(&spec, attempt)?;
                 let (w, h, d) = (src.width(), src.height(), src.depth());
-                let mut sink = RvolWriter::create(&spec.output, w, h, d)?;
+                let mut writer = RvolWriter::create(&spec.output, w, h, d)?;
                 let t0 = Instant::now();
-                let out = backend.segment_volume_streamed_cancellable(
-                    &mut *src,
-                    &mut sink,
-                    &job.params,
-                    spec.tile_slices,
-                    &job.cancel,
-                )?;
-                sink.finish()?;
-                Ok((out, t0.elapsed()))
+                let (out, digests, captured) = if cacheable {
+                    // The digest folds during the sweep the engine
+                    // already performs — zero extra reads (pinned by
+                    // `digest_source_adds_no_reads` and the cache
+                    // suite's read-count test).
+                    let mut dsrc = DigestSource::new(src);
+                    let mut copy = Vec::with_capacity(w * h * d);
+                    let mut tee = TeeSink { inner: &mut writer, copy: &mut copy };
+                    let out = backend.segment_volume_streamed_cancellable(
+                        &mut dsrc,
+                        &mut tee,
+                        &job.params,
+                        spec.tile_slices,
+                        &job.cancel,
+                    )?;
+                    let digests = (dsrc.digest(), dsrc.mask_digest());
+                    (out, digests, Some(copy))
+                } else {
+                    let out = backend.segment_volume_streamed_cancellable(
+                        &mut *src,
+                        &mut writer,
+                        &job.params,
+                        spec.tile_slices,
+                        &job.cancel,
+                    )?;
+                    (out, (None, None), None)
+                };
+                writer.finish()?;
+                Ok(StreamServe {
+                    out,
+                    service: t0.elapsed(),
+                    shape: (w, h, d),
+                    digests,
+                    captured,
+                })
             });
             take_profile_into(&job, metrics);
             if run.is_ok() {
@@ -698,10 +1063,52 @@ fn serve_stream_job(
         }
     };
     match outcome {
-        Ok((out, service)) => {
+        Ok(StreamServe {
+            out,
+            service,
+            shape,
+            digests: (dv, dm),
+            captured,
+        }) => {
             metrics.batch_served(job.engine, 1, service);
             metrics.stream_run(out.peak_resident_bytes);
             metrics.job_completed(queue_wait, service, out.iterations);
+            if cacheable {
+                // A mask that was present but never fully swept cannot
+                // key safely (its bytes might matter) — skip caching.
+                let mask_unswept = spec.mask.is_some() && dm.is_none();
+                if job.cache_key.is_none() && !mask_unswept {
+                    if let Some(dv) = dv {
+                        cache.remember_stream_digests(&spec.input, spec.mask.as_deref(), dv, dm);
+                    }
+                }
+                let key = job.cache_key.or_else(|| {
+                    (!mask_unswept).then_some(())?;
+                    Some(CacheKey::new(dv?, dm, job.engine, &job.params, OutputKind::Stream))
+                });
+                match (key, captured) {
+                    (Some(key), Some(labels)) => {
+                        let cached = CachedResult {
+                            labels: Arc::new(labels),
+                            centers: out.centers.clone(),
+                            iterations: out.iterations,
+                            converged: out.converged,
+                            shape,
+                            true_3d: out.streamed,
+                            work_per_iter: out.work_per_iter,
+                            voxels: out.voxels,
+                            peak_resident_bytes: out.peak_resident_bytes,
+                        };
+                        let waiters = cache.complete(&key, cached.clone());
+                        fan_out_waiters(waiters, Ok(&cached), metrics);
+                    }
+                    (_, _) => {
+                        // A keyed run that somehow yielded no cacheable
+                        // bytes still resolves its flight.
+                        resolve_flight_failure(cache, &job, "no cached bytes captured", metrics);
+                    }
+                }
+            }
             let result = JobResult {
                 id: job.id,
                 labels: Vec::new(),
@@ -715,12 +1122,16 @@ fn serve_stream_job(
                 worker: worker_id,
                 batch_id,
                 peak_resident_bytes: Some(out.peak_resident_bytes),
+                cached: false,
             };
             let finish_start = now_ns();
             let _ = job.respond.send(Ok(result));
             close_span(metrics, &job.trace, Stage::Finish, finish_start, 0);
         }
-        Err(e) => respond_failure(job, e, metrics),
+        Err(e) => {
+            resolve_flight_failure(cache, &job, &format!("{e:#}"), metrics);
+            respond_failure(job, e, metrics);
+        }
     }
 }
 
@@ -737,12 +1148,15 @@ fn worker_loop(
         batch_execute,
         engine_opts,
         retry,
+        cache,
     } = cfg;
     // Per-thread PJRT client + executable cache. If artifacts are missing
     // the worker still serves CPU-only engines.
     let registry = Registry::open(std::path::Path::new(artifacts_dir)).ok();
 
-    while let Some(first) = queue.pop() {
+    // Priority-then-FIFO drain: all queued High jobs before any Normal,
+    // all Normal before any Low, submission order within a class.
+    while let Some(first) = queue.pop_by_key(|j| j.priority.rank()) {
         let batch = form_batch(&queue, first, max_batch, registry.as_ref());
         let engine = batch[0].engine;
         let params = batch[0].params;
@@ -751,11 +1165,15 @@ fn worker_loop(
 
         // Fast-fail jobs whose token fired while they were queued
         // (explicit cancel or deadline): they never reach an engine,
-        // and are counted cancelled — not failed.
+        // and are counted cancelled — not failed. A keyed leader also
+        // resolves its flight so coalesced waiters are answered.
         let mut live = Vec::with_capacity(batch.len());
         for job in batch {
             match job.cancel.state() {
-                Some(why) => respond_failure(job, anyhow::Error::new(why), &metrics),
+                Some(why) => {
+                    resolve_flight_failure(&cache, &job, &why.to_string(), &metrics);
+                    respond_failure(job, anyhow::Error::new(why), &metrics);
+                }
                 None => live.push(job),
             }
         }
@@ -772,6 +1190,7 @@ fn worker_loop(
                 job,
                 registry.as_ref(),
                 &engine_opts,
+                &cache,
                 &metrics,
                 batch_id,
             );
@@ -786,6 +1205,7 @@ fn worker_loop(
                 registry.as_ref(),
                 &engine_opts,
                 retry,
+                &cache,
                 &metrics,
                 batch_id,
             );
@@ -911,6 +1331,7 @@ fn worker_loop(
                         worker: worker_id,
                         batch_id,
                         peak_resident_bytes: None,
+                        cached: false,
                     };
                     let finish_start = now_ns();
                     let _ = job.respond.send(Ok(result));
@@ -935,6 +1356,8 @@ mod tests {
             stream: None,
             params,
             engine,
+            priority: Priority::Normal,
+            cache_key: None,
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,
@@ -952,6 +1375,8 @@ mod tests {
             stream: None,
             params,
             engine,
+            priority: Priority::Normal,
+            cache_key: None,
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,
@@ -976,6 +1401,8 @@ mod tests {
             }),
             params,
             engine,
+            priority: Priority::Normal,
+            cache_key: None,
             submitted: Instant::now(),
             cancel: CancelToken::never(),
             permit: None,

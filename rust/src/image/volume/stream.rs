@@ -131,6 +131,57 @@ pub trait VoxelSource {
     }
 }
 
+/// Boxed sources are sources (the service carries `Box<dyn VoxelSource
+/// + Send>`; adapters like [`DigestSource`] can then wrap the box
+/// without knowing the concrete type). Every method — including the
+/// defaulted ones — delegates, so a concrete override is never shadowed
+/// by a trait default.
+impl<S: VoxelSource + ?Sized> VoxelSource for Box<S> {
+    fn width(&self) -> usize {
+        (**self).width()
+    }
+
+    fn height(&self) -> usize {
+        (**self).height()
+    }
+
+    fn depth(&self) -> usize {
+        (**self).depth()
+    }
+
+    fn sample_bits(&self) -> u32 {
+        (**self).sample_bits()
+    }
+
+    fn bytes_per_voxel(&self) -> usize {
+        (**self).bytes_per_voxel()
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        (**self).read_slab(z0, nz, out)
+    }
+
+    fn has_mask(&self) -> bool {
+        (**self).has_mask()
+    }
+
+    fn read_mask_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        (**self).read_mask_slab(z0, nz, out)
+    }
+
+    fn slice_area(&self) -> usize {
+        (**self).slice_area()
+    }
+
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+
+    fn is_empty(&self) -> bool {
+        (**self).is_empty()
+    }
+}
+
 /// Tile grid: (first slice, slice count) pairs covering `depth` in
 /// groups of `tile_slices` — a pure function of its inputs, like the
 /// engines' chunk grids (`tile_slices` 0 is clamped to 1).
@@ -844,6 +895,137 @@ impl VoxelSource for FaultySource {
     }
 }
 
+/// Content-digest fold over a [`VoxelSource`]: computes the streaming
+/// [`Digest64`](crate::util::Digest64) of the full voxel (and mask)
+/// rasters **during the reads the engine already performs** — streamed
+/// jobs pay zero extra I/O pass for cache keying.
+///
+/// The fold rule makes "each byte exactly once, in z order" hold under
+/// every engine's sweep structure (multi-sweep histogram/slab loops,
+/// ±1-slice halo re-reads of the spatial phase 2, prefetcher
+/// read-ahead): a slab read folds only the portion at or past the
+/// current frontier `next_z`, and only when the slab *reaches* the
+/// frontier (`z0 ≤ next_z < z0 + nz`). The first full-coverage sweep —
+/// which every streamed engine performs — advances the frontier to
+/// `depth`, at which point the digest is sealed and later sweeps fold
+/// nothing. Reads that fail fold nothing, so a retried attempt starts a
+/// fresh wrapper cleanly.
+///
+/// The volume header (`w h d sample_bits`) is folded in first, so two
+/// byte-identical rasters with different geometry never collide.
+pub struct DigestSource<S: VoxelSource> {
+    inner: S,
+    voxels: DigestFold,
+    mask: DigestFold,
+}
+
+/// One frontier-folded digest lane (voxels and mask fold separately).
+struct DigestFold {
+    state: Option<crate::util::Digest64>,
+    next_z: usize,
+    depth: usize,
+    value: Option<u64>,
+}
+
+impl DigestFold {
+    fn new(w: usize, h: usize, depth: usize, bits: u32) -> DigestFold {
+        let mut state = crate::util::Digest64::new();
+        state.update(format!("{w} {h} {depth} {bits}").as_bytes());
+        if depth == 0 {
+            // Degenerate empty field: the header alone is the content.
+            return DigestFold { state: None, next_z: 0, depth, value: Some(state.finalize()) };
+        }
+        DigestFold { state: Some(state), next_z: 0, depth, value: None }
+    }
+
+    fn fold(&mut self, z0: usize, nz: usize, slab_bytes: &[u8]) {
+        let Some(state) = self.state.as_mut() else { return };
+        if nz == 0 || z0 > self.next_z || z0 + nz <= self.next_z {
+            return; // behind the frontier, or a gap — nothing new in order
+        }
+        let stride = slab_bytes.len() / nz;
+        state.update(&slab_bytes[(self.next_z - z0) * stride..]);
+        self.next_z = z0 + nz;
+        if self.next_z == self.depth {
+            self.value = Some(self.state.take().expect("state present").finalize());
+        }
+    }
+}
+
+impl<S: VoxelSource> DigestSource<S> {
+    pub fn new(inner: S) -> DigestSource<S> {
+        let (w, h, d) = (inner.width(), inner.height(), inner.depth());
+        let bits = inner.sample_bits();
+        DigestSource {
+            voxels: DigestFold::new(w, h, d, bits),
+            mask: DigestFold::new(w, h, d, 8),
+            inner,
+        }
+    }
+
+    /// The voxel-raster digest — `Some` once a full in-order sweep has
+    /// been observed.
+    pub fn digest(&self) -> Option<u64> {
+        self.voxels.value
+    }
+
+    /// The mask-raster digest — `Some` once the mask has been swept
+    /// (always `None` for maskless sources, which are never asked).
+    pub fn mask_digest(&self) -> Option<u64> {
+        self.mask.value
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: VoxelSource> VoxelSource for DigestSource<S> {
+    fn width(&self) -> usize {
+        self.inner.width()
+    }
+
+    fn height(&self) -> usize {
+        self.inner.height()
+    }
+
+    fn depth(&self) -> usize {
+        self.inner.depth()
+    }
+
+    fn sample_bits(&self) -> u32 {
+        self.inner.sample_bits()
+    }
+
+    fn has_mask(&self) -> bool {
+        self.inner.has_mask()
+    }
+
+    fn read_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        self.inner.read_slab(z0, nz, out)?;
+        self.voxels.fold(z0, nz, out);
+        Ok(())
+    }
+
+    fn read_mask_slab(&mut self, z0: usize, nz: usize, out: &mut [u8]) -> Result<()> {
+        self.inner.read_mask_slab(z0, nz, out)?;
+        self.mask.fold(z0, nz, out);
+        Ok(())
+    }
+}
+
+/// One-shot digest of an in-memory raster — bit-identical to what
+/// [`DigestSource`] folds over a full streamed sweep of the same
+/// content, so an in-memory job and a streamed job over the same bytes
+/// derive the same content digest (the cache key still separates them
+/// by output kind).
+pub fn raster_digest(w: usize, h: usize, depth: usize, bits: u32, data: &[u8]) -> u64 {
+    let mut d = crate::util::Digest64::new();
+    d.update(format!("{w} {h} {depth} {bits}").as_bytes());
+    d.update(data);
+    d.finalize()
+}
+
 /// The output side of the tile path: consumers hand finished label (or
 /// voxel) slabs over in z order.
 pub trait LabelSink {
@@ -1100,6 +1282,75 @@ mod tests {
         // And the prefetcher still serves valid requests afterwards.
         pf.read_slab(2, 1, &mut buf).unwrap();
         assert_eq!(buf[..], v.voxels[12..18]);
+    }
+
+    #[test]
+    fn digest_source_folds_once_in_any_sweep_structure() {
+        let mut mask = vec![1u8; 84];
+        mask[40] = 0;
+        let v = VoxelVolume::from_voxels(4, 3, 7, (0..84).map(|i| (i * 5) as u8).collect())
+            .with_mask(mask);
+        let area = 12;
+        // Reference: one contiguous in-order sweep.
+        let mut reference = DigestSource::new(v.clone());
+        let mut buf = vec![0u8; v.len()];
+        reference.read_slab(0, 7, &mut buf).unwrap();
+        let mut mbuf = vec![0u8; v.len()];
+        reference.read_mask_slab(0, 7, &mut mbuf).unwrap();
+        let (dv, dm) = (reference.digest().unwrap(), reference.mask_digest().unwrap());
+        assert_ne!(dv, dm, "voxel and mask rasters differ");
+        assert_eq!(
+            raster_digest(4, 3, 7, 8, &v.voxels),
+            dv,
+            "in-memory one-shot digest matches the streamed fold"
+        );
+
+        for t in [1usize, 2, 3, 7, 9] {
+            let mut src = DigestSource::new(v.clone());
+            assert_eq!(src.digest(), None, "no sweep yet");
+            // Sweep 1: haloed tiles (overlapping re-reads), like the
+            // streamed spatial phase 2.
+            for (z0, nz) in tile_ranges(7, t) {
+                let (hz0, hnz) = halo_range(z0, nz, 7, 1);
+                let mut b = vec![0u8; hnz * area];
+                src.read_slab(hz0, hnz, &mut b).unwrap();
+                src.read_mask_slab(hz0, hnz, &mut b.clone()).unwrap();
+            }
+            assert_eq!(src.digest(), Some(dv), "tile {t}");
+            assert_eq!(src.mask_digest(), Some(dm), "tile {t}");
+            // Sweep 2 (engines re-read per iteration): digest is sealed.
+            for (z0, nz) in tile_ranges(7, t) {
+                let mut b = vec![0u8; nz * area];
+                src.read_slab(z0, nz, &mut b).unwrap();
+            }
+            assert_eq!(src.digest(), Some(dv), "later sweeps fold nothing");
+        }
+
+        // Different content, geometry, or sample width changes the digest.
+        let mut v2 = v.clone();
+        v2.voxels[50] ^= 1;
+        let mut other = DigestSource::new(v2);
+        other.read_slab(0, 7, &mut buf).unwrap();
+        assert_ne!(other.digest(), Some(dv));
+        let flat = VoxelVolume::from_voxels(4, 7, 3, v.voxels.clone());
+        let mut flat_src = DigestSource::new(flat);
+        let mut fbuf = vec![0u8; 84];
+        flat_src.read_slab(0, 3, &mut fbuf).unwrap();
+        assert_ne!(flat_src.digest(), Some(dv), "geometry is part of the digest");
+    }
+
+    #[test]
+    fn digest_source_adds_no_reads() {
+        let v = sample();
+        let plan = FaultPlan::default();
+        let bare = FaultySource::new(Box::new(v.clone()), plan, 0);
+        let mut src = DigestSource::new(bare);
+        let mut buf = vec![0u8; 6];
+        for z in 0..3 {
+            src.read_slab(z, 1, &mut buf).unwrap();
+        }
+        assert!(src.digest().is_some());
+        assert_eq!(src.into_inner().reads(), 3, "the fold adds zero I/O");
     }
 
     #[test]

@@ -53,11 +53,13 @@ fn load_config(args: &Args) -> Result<Config> {
             cfg.set(key, v)?;
         }
     }
-    // Friendly fault-tolerance aliases (README names; same keys).
+    // Friendly fault-tolerance + cache aliases (README names; same keys).
     for (flag, key) in [
         ("job-timeout", "job_timeout_ms"),
         ("max-retries", "max_retries"),
         ("resident-budget", "resident_budget_bytes"),
+        ("cache-dir", "cache_dir"),
+        ("cache-capacity", "cache_capacity_bytes"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, v).map_err(|e| anyhow::anyhow!("--{flag}: {e}"))?;
@@ -68,6 +70,13 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     for (k, v) in args.set_overrides() {
         cfg.set(&k, &v)?;
+    }
+    // `--no-cache` is the per-run kill switch for the result cache
+    // (equivalent to `cache = false`) — it also restores strictly
+    // out-of-core streamed runs, since a cacheable streamed run
+    // transiently holds its label bytes for cache population.
+    if args.flag("no-cache") {
+        cfg.cache.enabled = false;
     }
     cfg.validate()?;
     // The SIMD toggle is process-wide (the kernels are dispatched below
@@ -320,10 +329,24 @@ fn segment(args: &Args) -> Result<()> {
             converged: run.converged,
             wall_s: wall,
             peak_resident_bytes: None,
+            cache_hit: None,
         },
         profile.as_ref(),
     )?;
     Ok(())
+}
+
+/// Standalone result cache for one-shot CLI runs, built from the
+/// config's cache knobs. Cross-*process* hits need `cache_dir` (or
+/// `--cache-dir`): the in-memory LRU dies with the process, the file
+/// store persists.
+fn open_result_cache(cfg: &Config) -> repro::coordinator::ResultCache {
+    repro::coordinator::ResultCache::new(
+        cfg.cache.enabled,
+        cfg.cache.capacity_bytes,
+        cfg.cache.dir.clone().map(std::path::PathBuf::from),
+        std::sync::Arc::new(repro::coordinator::Metrics::default()),
+    )
 }
 
 /// Build the phantom volume described by `--start/--slices/--step/
@@ -422,22 +445,74 @@ fn segment_volume(args: &Args) -> Result<()> {
         vol.size_bytes() / 1024
     );
 
-    let registry = match engine {
-        Engine::Device | Engine::DeviceRef => Some(Registry::open(Path::new(&cfg.artifacts_dir))?),
-        _ => None,
-    };
-    let opts = repro::fcm::EngineOpts::from(&cfg.engine);
-    let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
+    // Content-addressed result cache: key = digests of the voxel (and
+    // mask) rasters + engine + canonical params. Sound because every
+    // engine is bit-deterministic — see DESIGN.md "Determinism as a
+    // cache key". A hit bypasses the engine entirely.
+    use repro::coordinator::{CacheKey, CachedResult, OutputKind};
+    use repro::image::volume::stream::raster_digest;
+    let cache = open_result_cache(&cfg);
+    let cache_key = cache.enabled().then(|| {
+        let dv = raster_digest(vol.width, vol.height, vol.depth, 8, &vol.voxels);
+        let dm = vol
+            .mask
+            .as_ref()
+            .map(|m| raster_digest(vol.width, vol.height, vol.depth, 8, m));
+        CacheKey::new(dv, dm, engine, &params, OutputKind::Volume)
+    });
+
     let profiled = profile_wanted(args);
-    if profiled {
-        // Per-slice fallbacks and two-phase spatial runs grow capacity
-        // themselves via `prof::reserve_iters` at each engine entry.
-        prof::begin(params.max_iters);
-    }
     let t0 = std::time::Instant::now();
-    let out = backend.segment_volume(&vol, &params)?;
+    let (out, cache_hit) = match cache_key.as_ref().and_then(|k| cache.lookup(k)) {
+        Some(c) => {
+            println!("result cache: hit ({} label bytes)", c.labels.len());
+            let out = repro::coordinator::VolumeOutcome {
+                labels: (*c.labels).clone(),
+                centers: c.centers.clone(),
+                iterations: c.iterations,
+                converged: c.converged,
+                true_3d: c.true_3d,
+                work_per_iter: c.work_per_iter,
+            };
+            (out, true)
+        }
+        None => {
+            let registry = match engine {
+                Engine::Device | Engine::DeviceRef => {
+                    Some(Registry::open(Path::new(&cfg.artifacts_dir))?)
+                }
+                _ => None,
+            };
+            let opts = repro::fcm::EngineOpts::from(&cfg.engine);
+            let backend = repro::coordinator::backend_for(engine, registry.as_ref(), &opts)?;
+            if profiled {
+                // Per-slice fallbacks and two-phase spatial runs grow
+                // capacity themselves via `prof::reserve_iters` at each
+                // engine entry.
+                prof::begin(params.max_iters);
+            }
+            let out = backend.segment_volume(&vol, &params)?;
+            if let Some(k) = &cache_key {
+                cache.insert(
+                    k,
+                    CachedResult {
+                        labels: std::sync::Arc::new(out.labels.clone()),
+                        centers: out.centers.clone(),
+                        iterations: out.iterations,
+                        converged: out.converged,
+                        shape: (vol.width, vol.height, vol.depth),
+                        true_3d: out.true_3d,
+                        work_per_iter: out.work_per_iter,
+                        voxels: 0,
+                        peak_resident_bytes: 0,
+                    },
+                );
+            }
+            (out, false)
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
-    let profile = if profiled { prof::take() } else { None };
+    let profile = if profiled && !cache_hit { prof::take() } else { None };
 
     println!(
         "engine={engine:?} path={} work/iter={} iters={} converged={} wall={wall:.3}s ({:.0} kvox/s)",
@@ -484,6 +559,7 @@ fn segment_volume(args: &Args) -> Result<()> {
             converged: out.converged,
             wall_s: wall,
             peak_resident_bytes: None,
+            cache_hit: cache.enabled().then_some(cache_hit),
         },
         profile.as_ref(),
     )?;
@@ -545,8 +621,31 @@ fn open_cli_stream_source(
 }
 
 fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<()> {
-    use repro::coordinator::{backoff_delay, is_transient_io, CancelToken, RetryPolicy};
-    use repro::image::volume::stream::{FaultPlan, LabelScaler, RvolWriter};
+    use repro::coordinator::{
+        backoff_delay, is_transient_io, CacheKey, CachedResult, CancelToken, OutputKind,
+        RetryPolicy,
+    };
+    use repro::image::volume::stream::{
+        DigestSource, FaultPlan, LabelScaler, LabelSink, RvolWriter, VoxelSource,
+    };
+
+    /// Forwards label slabs to the output RVOL, keeping a copy for
+    /// cache population when asked — the streamed-path mirror of the
+    /// service's tee. With `copy: None` (`--no-cache`, fault runs) it
+    /// is a plain forwarder and the run stays strictly out-of-core.
+    struct TeeWriter<'a> {
+        inner: &'a mut RvolWriter,
+        copy: Option<&'a mut Vec<u8>>,
+    }
+
+    impl LabelSink for TeeWriter<'_> {
+        fn write_slab(&mut self, labels: &[u8]) -> Result<()> {
+            if let Some(c) = self.copy.as_deref_mut() {
+                c.extend_from_slice(labels);
+            }
+            self.inner.write_slab(labels)
+        }
+    }
 
     let params = FcmParams::from(&cfg.fcm);
     let out = args
@@ -573,6 +672,61 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
         Err(_) => None,
     };
 
+    // Result cache, streamed flavor. Fault-injected runs are never
+    // keyed or cached — they exist to exercise the failure machinery.
+    // A submit-time key needs the path->digest memo (two stat calls, no
+    // I/O pass); first contact with a file folds digests during the
+    // run's existing tile sweep via DigestSource and remembers them.
+    let cache = open_result_cache(cfg);
+    let cacheable = cache.enabled() && fault.is_none();
+    let input_path = args.get("input-raw").map(Path::new);
+    let mask_path = args.get("mask-raw").map(Path::new);
+    let submit_key = if cacheable {
+        input_path
+            .and_then(|p| cache.stream_digests(p, mask_path))
+            .map(|(dv, dm)| CacheKey::new(dv, dm, engine, &params, OutputKind::Stream))
+    } else {
+        None
+    };
+    if let Some(cached) = submit_key.as_ref().and_then(|k| cache.lookup(k)) {
+        // Hit: replay the cached label bytes into a fresh RVOL at the
+        // requested output — byte-identical to a cold run (same writer,
+        // same bytes; the CI cache-smoke job `cmp`s them).
+        let (w, h, d) = cached.shape;
+        println!(
+            "volume {w}x{h}x{d} = {} voxels ({} KB), result cache: hit",
+            w * h * d,
+            w * h * d / 1024
+        );
+        let mut wtr = RvolWriter::create(Path::new(out), w, h, d)?;
+        wtr.write_slab(&cached.labels)?;
+        wtr.finish()?;
+        println!(
+            "engine={engine:?} path=cached work/iter={} iters={} converged={} (no engine run)",
+            cached.work_per_iter, cached.iterations, cached.converged
+        );
+        println!("peak resident tile bytes: 0 (cached; this run held no tiles)");
+        println!("centers (ascending): {:?}", cached.centers);
+        println!("segmentation written to {out}");
+        let engine_name = format!("{engine:?}");
+        emit_run_records(
+            args,
+            &RunMeta {
+                id: 0,
+                cmd: "segment-volume-stream",
+                engine: &engine_name,
+                shape: vec![w, h, d],
+                iterations: cached.iterations as u64,
+                converged: cached.converged,
+                wall_s: 0.0,
+                peak_resident_bytes: Some(0),
+                cache_hit: Some(true),
+            },
+            None,
+        )?;
+        return Ok(());
+    }
+
     let registry = match engine {
         Engine::Device | Engine::DeviceRef => Some(Registry::open(Path::new(&cfg.artifacts_dir))?),
         _ => None,
@@ -591,6 +745,8 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
     let t0 = std::time::Instant::now();
     let mut attempt = 0u32;
     let mut dims = (0usize, 0usize, 0usize);
+    let mut digests: (Option<u64>, Option<u64>) = (None, None);
+    let mut captured: Option<Vec<u8>> = None;
     let res = loop {
         if profiled {
             // Fresh profile per attempt: a retried run's record reflects
@@ -598,7 +754,7 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
             prof::begin(params.max_iters);
         }
         let run = (|| {
-            let mut src = open_cli_stream_source(args, cfg, fault, attempt)?;
+            let src = open_cli_stream_source(args, cfg, fault, attempt)?;
             let (w, h, d) = (src.width(), src.height(), src.depth());
             dims = (w, h, d);
             if attempt == 0 {
@@ -610,22 +766,41 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
                     if cfg.engine.prefetch { "on" } else { "off" }
                 );
             }
+            // Cacheable runs fold the input digests during the run's own
+            // tile reads (DigestSource adds no read calls) and tee the
+            // output bytes aside for cache population.
+            let mut digest_src = None;
+            let mut plain_src = None;
+            let src_dyn: &mut dyn VoxelSource = if cacheable {
+                digest_src = Some(DigestSource::new(src));
+                digest_src.as_mut().unwrap()
+            } else {
+                plain_src = Some(src);
+                plain_src.as_mut().unwrap()
+            };
             // Labels render to grey levels en route, so the output file
             // is byte-identical to the in-memory path's `--out-raw`.
             // RvolWriter stages into a .tmp sibling, so a failed attempt
             // never leaves a partial output behind.
+            let mut wtr = RvolWriter::create(Path::new(out), w, h, d)?;
+            let mut copy = cacheable.then(|| Vec::with_capacity(w * h * d));
             let mut sink = LabelScaler::new(
-                RvolWriter::create(Path::new(out), w, h, d)?,
+                TeeWriter { inner: &mut wtr, copy: copy.as_mut() },
                 params.clusters as u8,
             );
             let res = backend.segment_volume_streamed_cancellable(
-                &mut *src,
+                src_dyn,
                 &mut sink,
                 &params,
                 tile_slices,
                 &cancel,
             )?;
-            sink.into_inner().finish()?;
+            drop(sink);
+            if let Some(ds) = digest_src.as_ref() {
+                digests = (ds.digest(), ds.mask_digest());
+            }
+            captured = copy;
+            wtr.finish()?;
             Ok::<_, anyhow::Error>(res)
         })();
         match run {
@@ -649,6 +824,37 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
     };
     let wall = t0.elapsed().as_secs_f64();
     let profile = if profiled { prof::take() } else { None };
+
+    // Populate the cache: remember the path->digest memo (next process
+    // gets a submit-time key from two stat calls) and store the result
+    // under its content key. A mask that was present but never swept
+    // leaves the run unkeyable — its bytes might have mattered.
+    if cacheable {
+        let (dv, dm) = digests;
+        let mask_unswept = mask_path.is_some() && dm.is_none();
+        if let (Some(dv), false) = (dv, mask_unswept) {
+            if let Some(input) = input_path {
+                cache.remember_stream_digests(input, mask_path, dv, dm);
+            }
+            if let Some(labels) = captured.take() {
+                let key = CacheKey::new(dv, dm, engine, &params, OutputKind::Stream);
+                cache.insert(
+                    &key,
+                    CachedResult {
+                        labels: std::sync::Arc::new(labels),
+                        centers: res.centers.clone(),
+                        iterations: res.iterations,
+                        converged: res.converged,
+                        shape: dims,
+                        true_3d: res.streamed,
+                        work_per_iter: res.work_per_iter,
+                        voxels: res.voxels,
+                        peak_resident_bytes: res.peak_resident_bytes,
+                    },
+                );
+            }
+        }
+    }
 
     println!(
         "engine={engine:?} path={} work/iter={} iters={} converged={} wall={wall:.3}s ({:.0} kvox/s)",
@@ -678,6 +884,7 @@ fn segment_volume_streamed(args: &Args, cfg: &Config, engine: Engine) -> Result<
             converged: res.converged,
             wall_s: wall,
             peak_resident_bytes: Some(res.peak_resident_bytes as u64),
+            cache_hit: cache.enabled().then_some(false),
         },
         profile.as_ref(),
     )?;
@@ -803,6 +1010,7 @@ fn serve(args: &Args) -> Result<()> {
                     converged: r.converged,
                     wall_s,
                     peak_resident_bytes: None,
+                    cache_hit: cfg.cache.enabled.then_some(r.cached),
                 },
                 &summary,
             ));
@@ -967,8 +1175,11 @@ COMMON: --config repro.toml  --clusters N --m F --epsilon F --max_iters N
         --job-timeout MS (deadline per job; 0 = none)
         --max-retries N --resident-budget BYTES (admission budget;
         omit for unlimited — 0 is rejected)
-        (host-engine + service + fault-tolerance knobs; see README
-        'Architecture' and 'Fault tolerance')
+        --no-cache (disable the result cache for this run)
+        --cache-dir DIR (persist results + digest memo across runs)
+        --cache-capacity BYTES (in-memory LRU budget; default 256 MiB)
+        (host-engine + service + fault-tolerance + cache knobs; see
+        README 'Architecture', 'Fault tolerance', 'Result cache')
 
 Observability: segment / segment-volume take --trace-out trace.json
 (per-run JSON trace: stage timings + per-iteration wall/delta/J_m;
@@ -977,6 +1188,17 @@ REPRO_RUN_LOG=path appends one single-line JSON record per run (or per
 serve job): id, cmd, engine, shape, iterations, stage timings, peak
 resident bytes. REPRO_TRACE=1 arms the engine profiler everywhere (the
 CI result-neutrality leg). See README 'Observability'.
+
+Result cache: segment-volume (in-memory and --stream) and service
+volume/stream jobs are served from a content-addressed cache keyed by
+(input digest, mask digest, engine, params, output kind) — sound
+because every engine is bit-deterministic, so thread count, tile size,
+SIMD, and prefetch are excluded from the key. Streamed runs fold their
+input digest during the existing tile sweep (no extra I/O pass) and a
+hit replays byte-identical output with zero engine work. --cache-dir
+persists results across processes (the CI cache-smoke leg); --no-cache
+disables caching and restores strictly out-of-core streamed runs.
+Run records report cache_hit true/false when the cache is on.
 
 Fault tolerance: streamed jobs retry transient I/O failures with
 deterministic seeded backoff (safe: engines are bit-identical across

