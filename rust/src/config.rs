@@ -145,6 +145,13 @@ pub struct ServiceConfig {
     /// [`crate::coordinator::Snapshot`] to stderr. 0 (default) disables
     /// the periodic dump (the shutdown dump always runs).
     pub metrics_interval_ms: u64,
+    /// TCP listen address for the networked front door (`serve --listen`
+    /// uses this when no `--listen` argument is given). Unset = serve
+    /// runs the in-process synthetic workload only.
+    pub listen_addr: Option<String>,
+    /// Max simultaneous client connections the TCP server accepts;
+    /// further connects get a typed `TooManyConnections` error reply.
+    pub max_connections: usize,
 }
 
 impl Default for ServiceConfig {
@@ -162,6 +169,8 @@ impl Default for ServiceConfig {
             retry_backoff_ms: 50,
             resident_budget_bytes: 0,
             metrics_interval_ms: 0,
+            listen_addr: None,
+            max_connections: 64,
         }
     }
 }
@@ -173,6 +182,14 @@ impl ServiceConfig {
         }
         if self.max_retries > 0 && self.retry_backoff_ms == 0 {
             bail!("retry_backoff_ms must be >= 1 when max_retries > 0 (zero backoff spins hot)");
+        }
+        if self.max_connections == 0 {
+            bail!("max_connections must be >= 1");
+        }
+        if let Some(a) = &self.listen_addr {
+            if a.is_empty() {
+                bail!("listen_addr must not be empty when set");
+            }
         }
         Ok(())
     }
@@ -244,6 +261,8 @@ pub const KEYS: &[&str] = &[
     "retry_backoff_ms",
     "resident_budget_bytes",
     "metrics_interval_ms",
+    "listen_addr",
+    "max_connections",
     "cache",
     "cache_capacity_bytes",
     "cache_dir",
@@ -316,6 +335,8 @@ impl Config {
             "retry_backoff_ms" => self.service.retry_backoff_ms = parse(key, v)?,
             "resident_budget_bytes" => self.service.resident_budget_bytes = parse(key, v)?,
             "metrics_interval_ms" => self.service.metrics_interval_ms = parse(key, v)?,
+            "listen_addr" => self.service.listen_addr = Some(v.trim_matches('"').to_string()),
+            "max_connections" => self.service.max_connections = parse(key, v)?,
             "cache" => self.cache.enabled = parse(key, v)?,
             "cache_capacity_bytes" => self.cache.capacity_bytes = parse(key, v)?,
             "cache_dir" => self.cache.dir = Some(v.trim_matches('"').to_string()),
@@ -338,11 +359,24 @@ fn parse<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
         .map_err(|_| anyhow::anyhow!("config key {key:?}: cannot parse {v:?}"))
 }
 
+/// Strip a trailing `# comment` from one config line. A `#` only starts
+/// a comment at the beginning of the line or after whitespace — a `#`
+/// embedded in a value (`cache_dir = /data/run#3`) is part of the value.
+fn strip_comment(raw: &str) -> &str {
+    let bytes = raw.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'#' && (i == 0 || bytes[i - 1].is_ascii_whitespace()) {
+            return &raw[..i];
+        }
+    }
+    raw
+}
+
 /// `key = value` lines; `#` comments; blank lines ignored.
 fn parse_flat(text: &str) -> Result<Vec<(String, String)>> {
     let mut out = Vec::new();
     for (i, raw) in text.lines().enumerate() {
-        let line = raw.split('#').next().unwrap_or("").trim();
+        let line = strip_comment(raw).trim();
         if line.is_empty() {
             continue;
         }
@@ -378,6 +412,23 @@ mod tests {
     fn comments_and_blanks_ok() {
         let c = Config::from_str("# top\n\nseed = 7 # trailing\n").unwrap();
         assert_eq!(c.fcm.seed, 7);
+    }
+
+    #[test]
+    fn hash_inside_value_is_not_a_comment() {
+        // Regression: the old parser split every line at the first `#`,
+        // silently truncating `#`-bearing values into a different config.
+        let c = Config::from_str("cache_dir = /data/run#3\n").unwrap();
+        assert_eq!(c.cache.dir.as_deref(), Some("/data/run#3"));
+        // Whitespace before `#` still starts a comment on the same line.
+        let c = Config::from_str("cache_dir = /data/run#3 # trailing note\n").unwrap();
+        assert_eq!(c.cache.dir.as_deref(), Some("/data/run#3"));
+        // Indented full-line comments stay comments.
+        let c = Config::from_str("  # indented comment\nseed = 9\n").unwrap();
+        assert_eq!(c.fcm.seed, 9);
+        // A key=value line where the whole value is a `#`-word.
+        let c = Config::from_str("artifacts_dir = a#b#c\n").unwrap();
+        assert_eq!(c.artifacts_dir, "a#b#c");
     }
 
     #[test]
@@ -481,6 +532,7 @@ mod tests {
             let probe = match *key {
                 "backend" => "parallel",
                 "artifacts_dir" | "cache_dir" => "x",
+                "listen_addr" => "127.0.0.1:7070",
                 "m" | "epsilon" => "2.0",
                 "batch_execute" | "prefetch" | "simd" | "cache" => "true",
                 _ => "3",
@@ -509,6 +561,23 @@ mod tests {
         assert!(Config::from_str("cache = maybe\n").is_err());
         assert!(Config::from_str("cache_capacity_bytes = lots\n").is_err());
         assert!(Config::from_str("cache_dir = \"\"\n").is_err());
+    }
+
+    #[test]
+    fn net_keys_parse_and_validate() {
+        // Defaults: no listen address (in-process serve), 64 connections.
+        let d = Config::new();
+        assert_eq!(d.service.listen_addr, None);
+        assert_eq!(d.service.max_connections, 64);
+        let c = Config::from_str("listen_addr = 127.0.0.1:7070\nmax_connections = 8\n").unwrap();
+        assert_eq!(c.service.listen_addr.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(c.service.max_connections, 8);
+        // Quoted form also accepted, like the other string keys.
+        let q = Config::from_str("listen_addr = \"0.0.0.0:9000\"\n").unwrap();
+        assert_eq!(q.service.listen_addr.as_deref(), Some("0.0.0.0:9000"));
+        assert!(Config::from_str("max_connections = 0\n").is_err());
+        assert!(Config::from_str("max_connections = lots\n").is_err());
+        assert!(Config::from_str("listen_addr = \"\"\n").is_err());
     }
 
     #[test]

@@ -78,6 +78,14 @@ pub struct Metrics {
     cache_bytes: AtomicU64,
     cache_bytes_peak: AtomicU64,
     coalesced_waiters: AtomicU64,
+    /// Networked front door (`net::Server`): connections accepted,
+    /// payload bytes in/out, frames decoded+encoded, and protocol-level
+    /// errors (malformed frames, unknown tags, error replies sent).
+    net_connections: AtomicU64,
+    net_bytes_in: AtomicU64,
+    net_bytes_out: AtomicU64,
+    net_frames: AtomicU64,
+    net_errors: AtomicU64,
     /// Latency distributions (count/sum are the exact accumulators the
     /// means are derived from — there is no separate float path).
     queue_wait: LatencyHist,
@@ -154,6 +162,16 @@ pub struct Snapshot {
     /// Submissions coalesced onto an equal-key in-flight computation
     /// (single-flight; disjoint from both hits and misses).
     pub coalesced_waiters: u64,
+    /// TCP front-door connections accepted.
+    pub net_connections: u64,
+    /// Frame payload bytes received from / sent to remote clients.
+    pub net_bytes_in: u64,
+    pub net_bytes_out: u64,
+    /// Frames decoded + encoded across all connections.
+    pub net_frames: u64,
+    /// Protocol-level errors (malformed frames, unknown tags, typed
+    /// error replies sent).
+    pub net_errors: u64,
     /// Queue-wait latency distribution (count == completed jobs).
     pub queue_wait: LatencyStats,
     /// Service (execution) latency distribution.
@@ -203,6 +221,11 @@ impl Snapshot {
         e.push("repro_cache_bytes", self.cache_bytes as f64);
         e.push("repro_cache_bytes_peak", self.cache_bytes_peak as f64);
         e.push("repro_coalesced_waiters_total", self.coalesced_waiters as f64);
+        e.push("repro_net_connections_total", self.net_connections as f64);
+        e.push("repro_net_bytes_in_total", self.net_bytes_in as f64);
+        e.push("repro_net_bytes_out_total", self.net_bytes_out as f64);
+        e.push("repro_net_frames_total", self.net_frames as f64);
+        e.push("repro_net_errors_total", self.net_errors as f64);
         for (name, l) in [
             ("repro_queue_wait", &self.queue_wait),
             ("repro_service", &self.service),
@@ -323,6 +346,29 @@ impl Metrics {
         self.coalesced_waiters.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one accepted TCP connection.
+    pub fn net_connection(&self) {
+        self.net_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one inbound frame and its on-wire bytes.
+    pub fn net_frame_in(&self, bytes: u64) {
+        self.net_frames.fetch_add(1, Ordering::Relaxed);
+        self.net_bytes_in.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count one outbound frame and its on-wire bytes.
+    pub fn net_frame_out(&self, bytes: u64) {
+        self.net_frames.fetch_add(1, Ordering::Relaxed);
+        self.net_bytes_out.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count one protocol-level error (malformed frame, unknown tag, or
+    /// a typed error reply sent to a client).
+    pub fn net_error(&self) {
+        self.net_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one span of `stage` lasting `ns` (exact rollup only; the
     /// per-job event goes to that job's `TraceLog`).
     pub fn record_stage(&self, stage: Stage, ns: u64) {
@@ -433,6 +479,11 @@ impl Metrics {
             cache_bytes: self.cache_bytes.load(Ordering::Relaxed),
             cache_bytes_peak: self.cache_bytes_peak.load(Ordering::Relaxed),
             coalesced_waiters: self.coalesced_waiters.load(Ordering::Relaxed),
+            net_connections: self.net_connections.load(Ordering::Relaxed),
+            net_bytes_in: self.net_bytes_in.load(Ordering::Relaxed),
+            net_bytes_out: self.net_bytes_out.load(Ordering::Relaxed),
+            net_frames: self.net_frames.load(Ordering::Relaxed),
+            net_errors: self.net_errors.load(Ordering::Relaxed),
             queue_wait: self.queue_wait.stats(),
             service: self.service.stats(),
             iteration: self.iteration.stats(),
@@ -495,7 +546,29 @@ mod tests {
         assert_eq!(s.cache_bytes, 0);
         assert_eq!(s.cache_bytes_peak, 0);
         assert_eq!(s.coalesced_waiters, 0);
+        assert_eq!(s.net_connections, 0);
+        assert_eq!(s.net_bytes_in, 0);
+        assert_eq!(s.net_bytes_out, 0);
+        assert_eq!(s.net_frames, 0);
+        assert_eq!(s.net_errors, 0);
         assert_eq!(s.queue_wait, LatencyStats::default());
+    }
+
+    #[test]
+    fn net_counters_accumulate() {
+        let m = Metrics::default();
+        m.net_connection();
+        m.net_connection();
+        m.net_frame_in(100);
+        m.net_frame_in(24);
+        m.net_frame_out(4096);
+        m.net_error();
+        let s = m.snapshot();
+        assert_eq!(s.net_connections, 2);
+        assert_eq!(s.net_bytes_in, 124);
+        assert_eq!(s.net_bytes_out, 4096);
+        assert_eq!(s.net_frames, 3, "frames counts both directions");
+        assert_eq!(s.net_errors, 1);
     }
 
     #[test]
@@ -680,6 +753,10 @@ mod tests {
         m.cache_evicted(1);
         m.cache_level(2048);
         m.coalesced_waiter();
+        m.net_connection();
+        m.net_frame_in(64);
+        m.net_frame_out(128);
+        m.net_error();
         m.batch_served(Engine::Parallel, 2, secs(0.005));
         m.record_profile(&EngineProfile {
             iters: vec![crate::obs::span::IterSample {
@@ -726,10 +803,17 @@ mod tests {
         assert_eq!(get("repro_cache_bytes"), s.cache_bytes as f64);
         assert_eq!(get("repro_cache_bytes_peak"), s.cache_bytes_peak as f64);
         assert_eq!(get("repro_coalesced_waiters_total"), s.coalesced_waiters as f64);
-        // The workload above drove every cache counter nonzero, so the
-        // equalities are not vacuous.
+        assert_eq!(get("repro_net_connections_total"), s.net_connections as f64);
+        assert_eq!(get("repro_net_bytes_in_total"), s.net_bytes_in as f64);
+        assert_eq!(get("repro_net_bytes_out_total"), s.net_bytes_out as f64);
+        assert_eq!(get("repro_net_frames_total"), s.net_frames as f64);
+        assert_eq!(get("repro_net_errors_total"), s.net_errors as f64);
+        // The workload above drove every cache and net counter nonzero,
+        // so the equalities are not vacuous.
         assert!(s.cache_hits > 0 && s.cache_misses > 0 && s.cache_evictions > 0);
         assert!(s.cache_bytes > 0 && s.cache_bytes_peak > 0 && s.coalesced_waiters > 0);
+        assert!(s.net_connections > 0 && s.net_bytes_in > 0 && s.net_bytes_out > 0);
+        assert!(s.net_frames > 0 && s.net_errors > 0);
         for (name, l) in [
             ("repro_queue_wait", &s.queue_wait),
             ("repro_service", &s.service),

@@ -65,7 +65,14 @@ impl<T> Queue<T> {
         let mut g = m.lock().unwrap();
         loop {
             if let Some(item) = g.q.pop_front() {
-                not_full.notify_one();
+                // notify_all, not notify_one: consumers may remove several
+                // items between pusher wake-ups (batch forming via
+                // `try_pop_matching` drains under the same contention), and
+                // a single wake can land on a pusher that re-fills the one
+                // freed slot while other pushers sleep forever. Waking all
+                // blocked pushers lets each re-check capacity; the spurious
+                // wakers go back to sleep.
+                not_full.notify_all();
                 return Some(item);
             }
             if g.closed {
@@ -93,7 +100,7 @@ impl<T> Queue<T> {
                 .map(|(i, _)| i);
             if let Some(i) = best {
                 let item = g.q.remove(i).expect("index in range under the lock");
-                not_full.notify_one();
+                not_full.notify_all(); // see `pop`: single-wake starves pushers
                 return Some(item);
             }
             if g.closed {
@@ -110,7 +117,7 @@ impl<T> Queue<T> {
         let mut g = m.lock().unwrap();
         let pos = g.q.iter().position(|x| pred(x))?;
         let item = g.q.remove(pos);
-        not_full.notify_one();
+        not_full.notify_all(); // see `pop`: single-wake starves pushers
         item
     }
 
@@ -212,6 +219,58 @@ mod tests {
         q.close();
         assert_eq!(q.pop_by_key(|&x| x), Some(1), "drains after close");
         assert_eq!(q.pop_by_key(|&x| x), None);
+    }
+
+    #[test]
+    fn bursty_drains_leave_no_pusher_blocked() {
+        // Regression for the notify discipline: the removal paths used
+        // `not_full.notify_one()`, so a multi-item drain (batch forming
+        // through `try_pop_matching`, priority drains through
+        // `pop_by_key`) could free several slots while waking only one of
+        // many blocked pushers — the rest slept until the next removal,
+        // or forever once the consumer stopped. With `notify_all` every
+        // blocked pusher re-checks capacity after each drain; this stress
+        // run deadlocks (and times out) under the old discipline.
+        let q = Queue::bounded(2);
+        let pushers: Vec<_> = (0..8)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push((p, i)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut got = 0usize;
+                while got < 8 * 50 {
+                    // Bursty multi-item drain: grab everything visible via
+                    // the matching/keyed paths, then stall so pushers must
+                    // ride the wakeups from this burst alone.
+                    let mut burst = 0;
+                    while q.try_pop_matching(|_| true).is_some() {
+                        burst += 1;
+                    }
+                    if burst == 0 && q.pop_by_key(|&(p, _): &(i32, i32)| p).is_some() {
+                        burst = 1;
+                    }
+                    got += burst;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                got
+            })
+        };
+        for p in pushers {
+            p.join().unwrap(); // deadlocks here under notify_one
+        }
+        assert_eq!(consumer.join().unwrap(), 8 * 50);
+        // Close + drain under contention: late pushers see Err, pops None.
+        q.close();
+        assert!(q.push((9, 9)).is_err());
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

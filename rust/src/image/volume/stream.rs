@@ -1040,11 +1040,22 @@ impl LabelSink for Vec<u8> {
     }
 }
 
-/// The `.tmp` sibling an [`RvolWriter`] streams into before the
-/// finish-time rename (`out.rvol` → `out.rvol.tmp`).
+/// The temp sibling an [`RvolWriter`] streams into before the
+/// finish-time rename (`out.rvol` → `out.rvol.<pid>.<seq>.tmp`).
+///
+/// The name is unique per writer (pid + process-wide monotonic counter),
+/// not a fixed `.tmp`: with a fixed name, two concurrent jobs — or a
+/// retry racing a slow prior attempt — targeting the same output path
+/// would stream into the *same* temp file, clobbering each other's
+/// partial bytes, and one finish would rename the other's bytes into
+/// place. Unique names keep every in-flight stream private; only the
+/// atomic rename onto the final path is last-writer-wins.
 fn tmp_sibling(path: &Path) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
     let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
-    name.push(".tmp");
+    name.push(format!(".{}.{}.tmp", std::process::id(), seq));
     path.with_file_name(name)
 }
 
@@ -1579,6 +1590,23 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
+    /// Any leftover `*.tmp` files in `dir` — temp names are unique per
+    /// writer now, so debris checks scan the directory instead of
+    /// probing one fixed sibling name.
+    fn tmp_debris(dir: &Path) -> Vec<PathBuf> {
+        let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(".tmp"))
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
     #[test]
     fn failed_stream_leaves_no_output_file() {
         let dir = std::env::temp_dir().join(format!("rvol_atomic_{}", std::process::id()));
@@ -1591,11 +1619,11 @@ mod tests {
             w.write_slab(&[1, 2, 3, 4]).unwrap();
         }
         assert!(!path.exists(), "partial stream must not appear at the output path");
-        assert!(!tmp_sibling(&path).exists(), "partial .tmp must be cleaned up");
+        assert!(tmp_debris(&dir).is_empty(), "partial .tmp must be cleaned up");
         // A failed finish (short stream) likewise.
         let w = RvolWriter::create(&path, 2, 2, 2).unwrap();
         assert!(w.finish().is_err());
-        assert!(!path.exists() && !tmp_sibling(&path).exists());
+        assert!(!path.exists() && tmp_debris(&dir).is_empty());
         // And a mid-stream failure never clobbers a previous good output.
         let mut w = RvolWriter::create(&path, 1, 1, 2).unwrap();
         w.write_slab(&[7, 9]).unwrap();
@@ -1606,6 +1634,48 @@ mod tests {
             w.write_slab(&[0]).unwrap();
         }
         assert_eq!(std::fs::read(&path).unwrap(), good, "previous output survives");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn concurrent_writers_same_path_do_not_collide() {
+        // Regression: with the old fixed `.tmp` sibling name, writer B's
+        // `create` truncated writer A's in-flight temp file, and A's
+        // `finish` then renamed B's partial bytes into place. Unique
+        // per-writer temp names keep the streams private.
+        let dir = std::env::temp_dir().join(format!("rvol_collide_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.rvol");
+        let mut a = RvolWriter::create(&path, 1, 1, 2).unwrap();
+        let mut b = RvolWriter::create(&path, 1, 1, 2).unwrap();
+        a.write_slab(&[1, 2]).unwrap();
+        b.write_slab(&[3, 4]).unwrap();
+        a.finish().unwrap();
+        let after_a = std::fs::read(&path).unwrap();
+        assert_eq!(&after_a[after_a.len() - 2..], &[1, 2], "A ships A's bytes");
+        b.finish().unwrap();
+        let after_b = std::fs::read(&path).unwrap();
+        assert_eq!(&after_b[after_b.len() - 2..], &[3, 4], "B ships B's bytes");
+        // Interleaved from threads too: every writer completes, the
+        // final file is one writer's complete output, and no temp
+        // debris survives.
+        let winners: Vec<_> = (0..4u8)
+            .map(|k| {
+                let path = path.clone();
+                std::thread::spawn(move || {
+                    let mut w = RvolWriter::create(&path, 1, 1, 2).unwrap();
+                    w.write_slab(&[k, k]).unwrap();
+                    w.finish().unwrap();
+                })
+            })
+            .collect();
+        for h in winners {
+            h.join().unwrap();
+        }
+        let last = std::fs::read(&path).unwrap();
+        let body = &last[last.len() - 2..];
+        assert!(body[0] == body[1] && body[0] < 4, "file is one complete stream");
+        assert!(tmp_debris(&dir).is_empty(), "no temp debris after the race");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -20,6 +20,7 @@ pub mod fcm;
 pub mod gpu_sim;
 pub mod harness;
 pub mod image;
+pub mod net;
 pub mod obs;
 pub mod phantom;
 pub mod report;

@@ -4,7 +4,10 @@
 //!   segment         segment a PGM image (or a generated phantom slice)
 //!   segment-volume  segment a voxel volume (RVOL / PGM stack / phantom)
 //!   phantom         generate phantom slices / ground truth (Fig. 6)
-//!   serve           run the batching service on a synthetic workload
+//!   serve           run the batching service on a synthetic workload,
+//!                   or as a TCP server (`--listen ADDR`)
+//!   client          talk to a `serve --listen` server over the framed
+//!                   binary protocol (submit/status/fetch/metrics/ping)
 //!   bench-table1    related-work comparison frame (E1)
 //!   bench-table3    Table 3 execution times (E8)
 //!   bench-fig5      qualitative slices as PGMs (E5)
@@ -128,6 +131,7 @@ fn run(args: &Args) -> Result<()> {
         "segment-volume" => segment_volume(args),
         "phantom" => phantom_cmd(args),
         "serve" => serve(args),
+        "client" => client_cmd(args),
         "metrics" => metrics_cmd(args),
         "bench-table1" => {
             let cfg = load_config(args)?;
@@ -946,6 +950,16 @@ fn serve(args: &Args) -> Result<()> {
     // `--batch false` disables the one-invocation batched execution
     // (shorthand for `batch_execute = false`; the A/B lever).
     cfg.service.batch_execute = args.get_bool("batch", cfg.service.batch_execute)?;
+    // `--listen ADDR` (or `listen_addr` in the config) switches serve
+    // into the networked front door: a TCP server over the same
+    // Service, fed by `repro client` instead of a synthetic workload.
+    let listen = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(|| cfg.service.listen_addr.clone());
+    if let Some(addr) = listen {
+        return serve_net(&cfg, &addr);
+    }
     let jobs = args.get_usize("jobs", 16)?;
     let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
     let params = FcmParams::from(&cfg.fcm);
@@ -1042,6 +1056,249 @@ fn serve(args: &Args) -> Result<()> {
     // Shutdown dump, both exporters (the obs-smoke CI leg parses these).
     print!("{}", snap.to_prometheus());
     println!("{}", snap.to_json_line());
+    Ok(())
+}
+
+/// `repro serve --listen 127.0.0.1:7070` — the networked front door.
+/// Binds the TCP server over a fresh [`Service`] and parks until some
+/// client sends the wire `Shutdown` request, then drains gracefully:
+/// stop accepting, finish in-flight requests and jobs, shut the service
+/// down, and dump the final snapshot in both exposition formats — the
+/// same tail every serve run prints. Port 0 binds an ephemeral port;
+/// the `listening on ADDR` line reports the resolved address (the CI
+/// net-smoke job parses it).
+fn serve_net(cfg: &Config, addr: &str) -> Result<()> {
+    use repro::net::Server;
+    let service = std::sync::Arc::new(Service::start(cfg)?);
+    let metrics = std::sync::Arc::clone(&service.metrics);
+    let server = Server::bind(service, addr, cfg.service.max_connections)?;
+    println!("listening on {}", server.local_addr());
+    println!(
+        "serving {} workers, {} max connections (shut down with: repro client shutdown --addr {})",
+        cfg.service.workers,
+        cfg.service.max_connections,
+        server.local_addr()
+    );
+    // Same periodic Prometheus dumper the synthetic serve mode runs.
+    let dumper = (cfg.service.metrics_interval_ms > 0).then(|| {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let flag = std::sync::Arc::clone(&stop);
+        let period = std::time::Duration::from_millis(cfg.service.metrics_interval_ms);
+        let handle = std::thread::spawn(move || {
+            let tick = period.min(std::time::Duration::from_millis(20));
+            let mut next = std::time::Instant::now() + period;
+            while !flag.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                if std::time::Instant::now() >= next {
+                    eprint!("{}", metrics.snapshot().to_prometheus());
+                    next = std::time::Instant::now() + period;
+                }
+            }
+        });
+        (stop, handle)
+    });
+    server.wait_for_shutdown_request();
+    println!("shutdown requested; draining connections and in-flight jobs");
+    let snap = server.shutdown()?;
+    if let Some((stop, handle)) = dumper {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = handle.join();
+    }
+    for e in &snap.per_engine {
+        println!(
+            "engine {:10} batches {:3}  mean batch size {:.2}  mean batch latency {:.3}s",
+            e.engine, e.batches, e.mean_batch_size, e.mean_batch_latency_s
+        );
+    }
+    // Shutdown dump, both exporters — unchanged from the in-process
+    // serve mode (the net-smoke CI leg parses these too).
+    print!("{}", snap.to_prometheus());
+    println!("{}", snap.to_json_line());
+    Ok(())
+}
+
+/// `repro client <ping|submit|status|fetch|metrics|shutdown> --addr H:P`
+///
+///   ping                      liveness round trip
+///   submit                    submit a job; prints `submitted job N`
+///     --input x.pgm           8-bit image payload, or
+///     --input-raw v.rvol      voxel-volume payload (bytes on the wire), or
+///     --slice 96              a generated phantom slice, or
+///     --stream --input-raw IN --out-raw OUT [--mask-raw M]
+///                             file-backed streamed job: the frame
+///                             carries server-side PATHS, not voxels
+///     [--priority high|normal|low] [--engine ...] [--wait [--out-raw R]]
+///   status <id>               Pending | Done | Failed
+///   fetch  <id> [--out-raw seg.rvol | --out seg.pgm]
+///                             fetch + render labels exactly as the
+///                             in-process CLI does (byte-identical RVOL)
+///   metrics                   print the server's Prometheus exposition
+///   shutdown                  ask the server to drain and exit
+fn client_cmd(args: &Args) -> Result<()> {
+    use repro::net::Client;
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!(
+            "client needs an action: ping|submit|status|fetch|metrics|shutdown"
+        ))?;
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let mut client = Client::connect(addr)?;
+    match action {
+        "ping" => {
+            client.ping()?;
+            println!("pong from {addr}");
+            Ok(())
+        }
+        "submit" => client_submit(args, &mut client),
+        "status" => {
+            let id = client_job_id(args)?;
+            println!("job {id}: {:?}", client.status(id)?);
+            Ok(())
+        }
+        "fetch" => {
+            let id = client_job_id(args)?;
+            let res = client.fetch(id)?;
+            client_render_result(args, &res)
+        }
+        "metrics" => {
+            print!("{}", client.metrics()?);
+            Ok(())
+        }
+        "shutdown" => {
+            client.shutdown_server()?;
+            println!("server acknowledged shutdown");
+            Ok(())
+        }
+        other => bail!("unknown client action {other:?} (ping|submit|status|fetch|metrics|shutdown)"),
+    }
+}
+
+/// Job id for `client status`/`client fetch`: the second positional
+/// token (`repro client status 3`) or `--id 3`.
+fn client_job_id(args: &Args) -> Result<u64> {
+    let raw = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("id"))
+        .ok_or_else(|| anyhow::anyhow!("need a job id (positional or --id)"))?;
+    raw.parse()
+        .map_err(|_| anyhow::anyhow!("bad job id {raw:?}"))
+}
+
+fn client_submit(args: &Args, client: &mut repro::net::Client) -> Result<()> {
+    use repro::net::{SubmitJob, SubmitPayload};
+    let cfg = load_config(args)?;
+    let params = FcmParams::from(&cfg.fcm);
+    let engine = resolve_engine(args.get_or("engine", "auto"), &cfg)?;
+    let priority = match args.get_or("priority", "normal") {
+        "high" => repro::coordinator::Priority::High,
+        "normal" => repro::coordinator::Priority::Normal,
+        "low" => repro::coordinator::Priority::Low,
+        p => bail!("--priority: expected high|normal|low, got {p:?}"),
+    };
+    let payload = if args.flag("stream") {
+        // Streamed submits ship paths, not bytes — input/output name
+        // files on the SERVER's filesystem.
+        let input = args
+            .get("input-raw")
+            .ok_or_else(|| anyhow::anyhow!("--stream needs --input-raw (a server-side RVOL)"))?;
+        let output = args
+            .get("out-raw")
+            .ok_or_else(|| anyhow::anyhow!("--stream needs --out-raw (a server-side path)"))?;
+        SubmitPayload::Stream {
+            input: input.to_string(),
+            mask: args.get("mask-raw").map(str::to_string),
+            output: output.to_string(),
+            tile_slices: args.get_usize("tile-slices", cfg.engine.tile_slices)?.max(1) as u32,
+            prefetch: cfg.engine.prefetch,
+        }
+    } else if let Some(p) = args.get("input-raw") {
+        let vol = volume::load_raw(Path::new(p))?;
+        SubmitPayload::Volume {
+            width: vol.width as u32,
+            height: vol.height as u32,
+            depth: vol.depth as u32,
+            voxels: vol.voxels,
+        }
+    } else {
+        let img = match args.get("input") {
+            Some(p) => pgm::read(Path::new(p))?,
+            None => {
+                let slice = args.get_usize("slice", 96)?;
+                phantom::generate_slice(&PhantomConfig {
+                    slice,
+                    seed: cfg.fcm.seed,
+                    ..PhantomConfig::default()
+                })
+                .image
+            }
+        };
+        SubmitPayload::Image {
+            width: img.width as u32,
+            height: img.height as u32,
+            pixels: img.pixels,
+        }
+    };
+    let id = client.submit(SubmitJob { engine, priority, params, payload })?;
+    println!("submitted job {id}");
+    if args.flag("wait") {
+        let poll = std::time::Duration::from_millis(args.get_usize("poll-ms", 50)? as u64);
+        let timeout =
+            std::time::Duration::from_millis(args.get_usize("timeout-ms", 300_000)? as u64);
+        let res = client.wait(id, poll, timeout)?;
+        client_render_result(args, &res)?;
+    }
+    Ok(())
+}
+
+/// Print a fetched result and render its labels to `--out-raw` (RVOL)
+/// or `--out` (PGM). The RVOL path goes through the SAME calls the
+/// in-process `segment-volume --out-raw` uses —
+/// `VoxelVolume::from_labels` then `volume::save_raw` — so the file is
+/// byte-identical to an in-process run of the same job (pinned by
+/// tests/net.rs and the CI net-smoke job). Streamed jobs carry no
+/// labels (their output is a server-side file); rendering one is an
+/// error, not an empty file.
+fn client_render_result(args: &Args, res: &repro::net::WireResult) -> Result<()> {
+    println!(
+        "job {}: engine={:?} iters={} converged={} cached={} shape={}x{}x{} \
+         queue_wait={:.3}s service={:.3}s",
+        res.id,
+        res.engine,
+        res.iterations,
+        res.converged,
+        res.cached,
+        res.shape.0,
+        res.shape.1,
+        res.shape.2,
+        res.queue_wait_s,
+        res.service_s
+    );
+    println!("centers (ascending): {:?}", res.centers);
+    let (w, h, d) = (res.shape.0 as usize, res.shape.1 as usize, res.shape.2 as usize);
+    if let Some(p) = args.get("out-raw") {
+        if res.labels.is_empty() {
+            bail!(
+                "job {} carries no labels (streamed jobs write their output on the server)",
+                res.id
+            );
+        }
+        let seg = VoxelVolume::from_labels(w, h, d, &res.labels, res.clusters as u8);
+        volume::save_raw(&seg, Path::new(p))?;
+        println!("segmentation written to {p}");
+    }
+    if let Some(p) = args.get("out") {
+        if res.labels.is_empty() || d != 1 {
+            bail!("--out writes a PGM; need a completed image job with labels");
+        }
+        let lm = LabelMap::from_labels(w, h, res.labels.clone());
+        pgm::write(&lm.to_image(res.clusters as u8), Path::new(p))?;
+        println!("segmentation written to {p}");
+    }
     Ok(())
 }
 
@@ -1151,6 +1408,21 @@ USAGE: repro <subcommand> [options]
                  [--metrics_interval_ms 250]  (periodic Prometheus dump
                  to stderr while serving; shutdown always dumps both
                  Prometheus text and a single JSON line)
+                 --listen 127.0.0.1:7070  (networked front door: TCP
+                 server over the same service; port 0 = ephemeral, the
+                 resolved address prints as 'listening on ADDR'; jobs
+                 arrive via `repro client`; `--max_connections N` caps
+                 simultaneous clients; graceful drain + the same
+                 shutdown metrics dump on `repro client shutdown`)
+  client         <ping|submit|status|fetch|metrics|shutdown>
+                 --addr 127.0.0.1:7070
+                 submit: --input x.pgm | --input-raw v.rvol | --slice 96
+                 | --stream --input-raw IN --out-raw OUT (server paths)
+                 [--engine ...] [--priority high|normal|low]
+                 [--wait [--poll-ms 50] [--timeout-ms 300000]]
+                 status|fetch: <id> [--out-raw seg.rvol | --out seg.pgm]
+                 (fetch renders labels via the same code path as
+                 segment-volume --out-raw: byte-identical RVOL)
   metrics        [--jobs 4] [--engine ...] [--check]  (run a small
                  synthetic workload, dump the metrics snapshot as
                  Prometheus text + one JSON line; --check self-validates

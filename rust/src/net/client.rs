@@ -1,0 +1,124 @@
+//! Blocking TCP client for the serving front door.
+//!
+//! Thin by design: every byte it writes or reads goes through the same
+//! [`super::protocol`] codec the server uses, so the two ends cannot
+//! drift. One request is in flight per connection at a time (matching
+//! the server's one-request-per-handler discipline); a submit that hits
+//! a full service queue simply blocks here until the queue drains —
+//! remote backpressure, not an error.
+
+use super::protocol::{
+    decode_reply, encode_request, read_frame, write_frame, ErrorCode, JobState, Reply, Request,
+    SubmitJob, WireResult,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// A typed server-side failure, reconstructed from a wire error reply.
+/// Downcast from `anyhow::Error` to branch on the code — the remote
+/// analogue of downcasting `Rejected`/`Interrupted` in-process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RemoteError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error ({:?}): {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
+/// Blocking connection to a [`super::server::Server`].
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        Ok(Client { stream })
+    }
+
+    /// One round trip: write the request frame, read the reply frame.
+    /// A server [`Reply::Error`] comes back as a typed [`RemoteError`].
+    fn call(&mut self, req: &Request) -> Result<Reply> {
+        write_frame(&mut self.stream, &encode_request(req))?;
+        let payload = read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        let reply = decode_reply(&payload)?;
+        if let Reply::Error { code, message } = reply {
+            return Err(anyhow::Error::new(RemoteError { code, message }));
+        }
+        Ok(reply)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&Request::Ping)? {
+            Reply::Pong => Ok(()),
+            r => bail!("unexpected reply to ping: {r:?}"),
+        }
+    }
+
+    /// Submit a job; returns the server-assigned job id.
+    pub fn submit(&mut self, job: SubmitJob) -> Result<u64> {
+        match self.call(&Request::Submit(job))? {
+            Reply::Submitted { id } => Ok(id),
+            r => bail!("unexpected reply to submit: {r:?}"),
+        }
+    }
+
+    pub fn status(&mut self, id: u64) -> Result<JobState> {
+        match self.call(&Request::Status { id })? {
+            Reply::Status { state, .. } => Ok(state),
+            r => bail!("unexpected reply to status: {r:?}"),
+        }
+    }
+
+    /// Fetch a completed job's result. A still-pending job comes back
+    /// as [`ErrorCode::NotReady`]; a failed job replays its typed
+    /// failure code.
+    pub fn fetch(&mut self, id: u64) -> Result<WireResult> {
+        match self.call(&Request::Fetch { id })? {
+            Reply::Result(r) => Ok(*r),
+            r => bail!("unexpected reply to fetch: {r:?}"),
+        }
+    }
+
+    /// The server's Prometheus metrics exposition.
+    pub fn metrics(&mut self) -> Result<String> {
+        match self.call(&Request::Metrics)? {
+            Reply::Metrics { prometheus } => Ok(prometheus),
+            r => bail!("unexpected reply to metrics: {r:?}"),
+        }
+    }
+
+    /// Ask the server to drain and shut down gracefully.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Reply::ShutdownAck => Ok(()),
+            r => bail!("unexpected reply to shutdown: {r:?}"),
+        }
+    }
+
+    /// Poll until the job reaches a terminal state, then fetch it. A
+    /// failed job's typed [`RemoteError`] propagates from the fetch.
+    pub fn wait(&mut self, id: u64, poll: Duration, timeout: Duration) -> Result<WireResult> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.status(id)? {
+                JobState::Pending => {
+                    if Instant::now() >= deadline {
+                        bail!("timed out after {timeout:?} waiting for job {id}");
+                    }
+                    std::thread::sleep(poll);
+                }
+                JobState::Done | JobState::Failed => return self.fetch(id),
+            }
+        }
+    }
+}

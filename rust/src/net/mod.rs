@@ -1,0 +1,29 @@
+//! Networked serving front door (DESIGN.md "Wire protocol & connection
+//! backpressure"): a dependency-free TCP layer over the in-process
+//! [`crate::coordinator::Service`].
+//!
+//! * [`protocol`] — the framed binary codec (u32-LE length + tagged
+//!   payload), shared verbatim by both ends.
+//! * [`server`] — accept loop, thread-per-connection handlers, and the
+//!   TTL'd result-retention store behind fetch-after-completion.
+//! * [`client`] — blocking connector with typed [`client::RemoteError`]
+//!   failures mirroring the in-process error taxonomy.
+//!
+//! The design goal is that a remote caller is indistinguishable from an
+//! in-process one: same submit surface, same typed errors (admission
+//! rejection, cancellation, deadline, refused queue round-trip as
+//! distinct [`protocol::ErrorCode`]s), same backpressure (a full queue
+//! blocks the connection handler, and TCP flow control carries the wait
+//! to the client), and byte-identical results (`tests/net.rs` pins a
+//! remote fetch against the in-process CLI output).
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{Client, RemoteError};
+pub use protocol::{
+    ErrorCode, JobState, Reply, Request, SubmitJob, SubmitPayload, WireError, WireResult,
+    MAX_FRAME,
+};
+pub use server::{Server, DEFAULT_RESULT_TTL};

@@ -1,0 +1,873 @@
+//! Wire protocol for the networked serving front door.
+//!
+//! One frame = a `u32` little-endian payload length, then the payload:
+//! a `u8` message tag followed by the tag's fixed header and body. Both
+//! the server and the client encode/decode through THIS module's
+//! [`encode_request`]/[`decode_request`]/[`encode_reply`]/[`decode_reply`]
+//! — one codec, so the two sides cannot drift.
+//!
+//! Everything is explicit little-endian integers and length-prefixed
+//! byte strings; no serde, no external crates (the offline build rule).
+//! Decoding is total: any malformed input comes back as a typed
+//! [`WireError`], never a panic — the server's fuzz-shaped rejection
+//! sweep (`tests/net.rs`) rides on that.
+//!
+//! The error taxonomy of the in-process service round-trips as distinct
+//! [`ErrorCode`]s: admission rejection, cancellation, deadline expiry,
+//! and a queue that refuses work are all distinguishable to a remote
+//! client, exactly as they are to an in-process caller.
+
+use crate::coordinator::{Engine, Priority};
+use crate::fcm::FcmParams;
+
+/// Hard ceiling on one frame's declared payload length (64 MiB — a
+/// 2048³ label volume streams through files, not frames). A declared
+/// length beyond this is rejected before any allocation, so a hostile
+/// header cannot balloon server memory.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Typed decode failure. Every way a frame can be malformed maps here;
+/// the server answers with [`ErrorCode::BadRequest`] (or drops the
+/// connection) instead of panicking.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The payload ended before a field's declared extent.
+    Truncated { needed: usize, have: usize },
+    /// The frame header declared a payload larger than [`MAX_FRAME`].
+    Oversized { declared: u32 },
+    /// The payload's leading message tag names no known message.
+    UnknownTag(u8),
+    /// A field held an out-of-domain value (bad enum byte, non-UTF-8
+    /// string, shape/byte-count mismatch).
+    BadValue(&'static str),
+    /// Bytes left over after a complete message was decoded.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { needed, have } => {
+                write!(f, "truncated frame: needed {needed} bytes, have {have}")
+            }
+            WireError::Oversized { declared } => {
+                write!(f, "oversized frame: declared {declared} bytes (max {MAX_FRAME})")
+            }
+            WireError::UnknownTag(t) => write!(f, "unknown message tag {t:#04x}"),
+            WireError::BadValue(what) => write!(f, "bad field value: {what}"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Typed error surface of the serving path, as carried by an
+/// [`Reply::Error`] frame. The four service outcomes a caller must be
+/// able to tell apart — admission rejection, cancellation, deadline,
+/// refused queue — are distinct codes, mirroring the in-process
+/// taxonomy (`Rejected`, `Interrupted::{Cancelled, DeadlineExceeded}`,
+/// the queue-closed submit error).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Admission control refused the job (`coordinator::Rejected`).
+    AdmissionRejected,
+    /// The job was cancelled (`Interrupted::Cancelled`).
+    Cancelled,
+    /// The job's deadline expired (`Interrupted::DeadlineExceeded`).
+    DeadlineExceeded,
+    /// The queue refused the submission — the service is draining for
+    /// shutdown. (A merely *full* queue never errors: the connection
+    /// handler blocks on the bounded queue exactly like an in-process
+    /// caller; see DESIGN.md "Wire protocol & connection backpressure".)
+    QueueRefused,
+    /// No job with the requested id (never submitted, or its retained
+    /// result aged out of the retention window).
+    NotFound,
+    /// The job exists but has not completed yet (poll again).
+    NotReady,
+    /// The request was malformed (decode failure or out-of-domain
+    /// field).
+    BadRequest,
+    /// The server is at its connection limit.
+    TooManyConnections,
+    /// Anything else (engine failure, I/O error, panic-contained job).
+    Internal,
+}
+
+impl ErrorCode {
+    /// All codes, for sweep tests.
+    pub const ALL: [ErrorCode; 9] = [
+        ErrorCode::AdmissionRejected,
+        ErrorCode::Cancelled,
+        ErrorCode::DeadlineExceeded,
+        ErrorCode::QueueRefused,
+        ErrorCode::NotFound,
+        ErrorCode::NotReady,
+        ErrorCode::BadRequest,
+        ErrorCode::TooManyConnections,
+        ErrorCode::Internal,
+    ];
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::AdmissionRejected => 1,
+            ErrorCode::Cancelled => 2,
+            ErrorCode::DeadlineExceeded => 3,
+            ErrorCode::QueueRefused => 4,
+            ErrorCode::NotFound => 5,
+            ErrorCode::NotReady => 6,
+            ErrorCode::BadRequest => 7,
+            ErrorCode::TooManyConnections => 8,
+            ErrorCode::Internal => 9,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Result<ErrorCode, WireError> {
+        Ok(match b {
+            1 => ErrorCode::AdmissionRejected,
+            2 => ErrorCode::Cancelled,
+            3 => ErrorCode::DeadlineExceeded,
+            4 => ErrorCode::QueueRefused,
+            5 => ErrorCode::NotFound,
+            6 => ErrorCode::NotReady,
+            7 => ErrorCode::BadRequest,
+            8 => ErrorCode::TooManyConnections,
+            9 => ErrorCode::Internal,
+            _ => return Err(WireError::BadValue("error code")),
+        })
+    }
+}
+
+/// Classify a serving-path error into its wire code. The queue-closed
+/// submit failure is an `anyhow!` string in the existing taxonomy, so
+/// it is matched on the exact message the service raises.
+pub fn error_code_for(e: &anyhow::Error) -> ErrorCode {
+    use crate::coordinator::{Interrupted, Rejected};
+    if e.downcast_ref::<Rejected>().is_some() {
+        return ErrorCode::AdmissionRejected;
+    }
+    if let Some(i) = e.downcast_ref::<Interrupted>() {
+        return match i {
+            Interrupted::Cancelled => ErrorCode::Cancelled,
+            Interrupted::DeadlineExceeded => ErrorCode::DeadlineExceeded,
+        };
+    }
+    if e.to_string() == "service is shut down" {
+        return ErrorCode::QueueRefused;
+    }
+    ErrorCode::Internal
+}
+
+/// Canonical FCM parameters on the wire (fixed header of a submit).
+/// `usize` fields travel as `u32` — a cluster count or iteration cap
+/// beyond 2³² is not a real configuration.
+fn put_params(w: &mut Vec<u8>, p: &FcmParams) {
+    put_u32(w, p.clusters as u32);
+    put_f32(w, p.m);
+    put_f32(w, p.epsilon);
+    put_u32(w, p.max_iters as u32);
+    put_u64(w, p.seed);
+}
+
+fn get_params(r: &mut Reader<'_>) -> Result<FcmParams, WireError> {
+    Ok(FcmParams {
+        clusters: r.u32()? as usize,
+        m: r.f32()?,
+        epsilon: r.f32()?,
+        max_iters: r.u32()? as usize,
+        seed: r.u64()?,
+    })
+}
+
+/// The input a submit carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitPayload {
+    /// 8-bit grayscale image, row-major.
+    Image { width: u32, height: u32, pixels: Vec<u8> },
+    /// 8-bit voxel volume, z-major.
+    Volume { width: u32, height: u32, depth: u32, voxels: Vec<u8> },
+    /// File-backed streamed volume: the frame carries **paths, not
+    /// voxels** — server-side shared storage does the byte transport,
+    /// which is what lets a volume larger than any frame (or any RAM)
+    /// ride a 100-byte submit.
+    Stream {
+        input: String,
+        mask: Option<String>,
+        output: String,
+        tile_slices: u32,
+        prefetch: bool,
+    },
+}
+
+/// A segmentation job as submitted over the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitJob {
+    pub engine: Engine,
+    pub priority: Priority,
+    pub params: FcmParams,
+    pub payload: SubmitPayload,
+}
+
+/// Client → server messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// Submit a job; answered with [`Reply::Submitted`] (or an error).
+    Submit(SubmitJob),
+    /// Poll a job's state.
+    Status { id: u64 },
+    /// Fetch a completed job's result.
+    Fetch { id: u64 },
+    /// Fetch the service metrics exposition.
+    Metrics,
+    /// Ask the server to drain and shut down gracefully.
+    Shutdown,
+}
+
+/// Lifecycle state carried by a [`Reply::Status`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Queued or executing.
+    Pending,
+    /// Completed; the result is retained for fetching.
+    Done,
+    /// Failed; fetching yields the typed error.
+    Failed,
+}
+
+impl JobState {
+    fn as_u8(self) -> u8 {
+        match self {
+            JobState::Pending => 0,
+            JobState::Done => 1,
+            JobState::Failed => 2,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<JobState, WireError> {
+        Ok(match b {
+            0 => JobState::Pending,
+            1 => JobState::Done,
+            2 => JobState::Failed,
+            _ => return Err(WireError::BadValue("job state")),
+        })
+    }
+}
+
+/// A completed job's result on the wire. `shape` carries the submitted
+/// raster's dimensions (width, height, depth — depth 1 for images, all
+/// zero when unknown) so a fetching client can render labels to the
+/// same RVOL bytes the in-process CLI writes; streamed jobs ship empty
+/// `labels` (the bytes live in the job's server-side output file).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResult {
+    pub id: u64,
+    pub labels: Vec<u8>,
+    pub centers: Vec<f32>,
+    pub iterations: u32,
+    pub converged: bool,
+    pub engine: Engine,
+    pub cached: bool,
+    pub shape: (u32, u32, u32),
+    pub clusters: u32,
+    pub queue_wait_s: f64,
+    pub service_s: f64,
+}
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Pong,
+    Submitted { id: u64 },
+    Status { id: u64, state: JobState },
+    Result(Box<WireResult>),
+    Metrics { prometheus: String },
+    ShutdownAck,
+    /// Typed failure; `code` round-trips the service taxonomy.
+    Error { code: ErrorCode, message: String },
+}
+
+// ---- request/reply message tags ----
+
+const TAG_PING: u8 = 0x01;
+const TAG_SUBMIT: u8 = 0x02;
+const TAG_STATUS: u8 = 0x03;
+const TAG_FETCH: u8 = 0x04;
+const TAG_METRICS: u8 = 0x05;
+const TAG_SHUTDOWN: u8 = 0x06;
+
+const TAG_PONG: u8 = 0x81;
+const TAG_SUBMITTED: u8 = 0x82;
+const TAG_STATUS_REPLY: u8 = 0x83;
+const TAG_RESULT: u8 = 0x84;
+const TAG_METRICS_REPLY: u8 = 0x85;
+const TAG_SHUTDOWN_ACK: u8 = 0x86;
+const TAG_ERROR: u8 = 0xFF;
+
+// ---- submit payload kinds ----
+
+const KIND_IMAGE: u8 = 0;
+const KIND_VOLUME: u8 = 1;
+const KIND_STREAM: u8 = 2;
+
+// ---- primitive put/get ----
+
+fn put_u8(w: &mut Vec<u8>, v: u8) {
+    w.push(v);
+}
+
+fn put_u32(w: &mut Vec<u8>, v: u32) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(w: &mut Vec<u8>, v: u64) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(w: &mut Vec<u8>, v: f32) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(w: &mut Vec<u8>, v: f64) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(w: &mut Vec<u8>, b: &[u8]) {
+    put_u32(w, b.len() as u32);
+    w.extend_from_slice(b);
+}
+
+fn put_str(w: &mut Vec<u8>, s: &str) {
+    put_bytes(w, s.as_bytes());
+}
+
+/// Bounds-checked cursor over one frame's payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::BadValue("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated { needed: end, have: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        String::from_utf8(self.bytes()?).map_err(|_| WireError::BadValue("non-UTF-8 string"))
+    }
+
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::TrailingBytes(self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+fn engine_from_u8(b: u8) -> Result<Engine, WireError> {
+    Engine::ALL
+        .get(b as usize)
+        .copied()
+        .ok_or(WireError::BadValue("engine"))
+}
+
+fn priority_from_u8(b: u8) -> Result<Priority, WireError> {
+    Ok(match b {
+        0 => Priority::High,
+        1 => Priority::Normal,
+        2 => Priority::Low,
+        _ => return Err(WireError::BadValue("priority")),
+    })
+}
+
+// ---- message codec ----
+
+/// Encode a request into one frame payload (tag + body).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut w = Vec::new();
+    match req {
+        Request::Ping => put_u8(&mut w, TAG_PING),
+        Request::Submit(job) => {
+            put_u8(&mut w, TAG_SUBMIT);
+            let kind = match &job.payload {
+                SubmitPayload::Image { .. } => KIND_IMAGE,
+                SubmitPayload::Volume { .. } => KIND_VOLUME,
+                SubmitPayload::Stream { .. } => KIND_STREAM,
+            };
+            put_u8(&mut w, kind);
+            put_u8(&mut w, job.engine.index() as u8);
+            put_u8(&mut w, job.priority.rank());
+            put_params(&mut w, &job.params);
+            match &job.payload {
+                SubmitPayload::Image { width, height, pixels } => {
+                    put_u32(&mut w, *width);
+                    put_u32(&mut w, *height);
+                    put_bytes(&mut w, pixels);
+                }
+                SubmitPayload::Volume { width, height, depth, voxels } => {
+                    put_u32(&mut w, *width);
+                    put_u32(&mut w, *height);
+                    put_u32(&mut w, *depth);
+                    put_bytes(&mut w, voxels);
+                }
+                SubmitPayload::Stream { input, mask, output, tile_slices, prefetch } => {
+                    put_str(&mut w, input);
+                    match mask {
+                        Some(m) => {
+                            put_u8(&mut w, 1);
+                            put_str(&mut w, m);
+                        }
+                        None => put_u8(&mut w, 0),
+                    }
+                    put_str(&mut w, output);
+                    put_u32(&mut w, *tile_slices);
+                    put_u8(&mut w, u8::from(*prefetch));
+                }
+            }
+        }
+        Request::Status { id } => {
+            put_u8(&mut w, TAG_STATUS);
+            put_u64(&mut w, *id);
+        }
+        Request::Fetch { id } => {
+            put_u8(&mut w, TAG_FETCH);
+            put_u64(&mut w, *id);
+        }
+        Request::Metrics => put_u8(&mut w, TAG_METRICS),
+        Request::Shutdown => put_u8(&mut w, TAG_SHUTDOWN),
+    }
+    w
+}
+
+/// Decode one frame payload into a request. Total: every malformed
+/// input is a typed [`WireError`].
+pub fn decode_request(buf: &[u8]) -> Result<Request, WireError> {
+    let mut r = Reader::new(buf);
+    let req = match r.u8()? {
+        TAG_PING => Request::Ping,
+        TAG_SUBMIT => {
+            let kind = r.u8()?;
+            let engine = engine_from_u8(r.u8()?)?;
+            let priority = priority_from_u8(r.u8()?)?;
+            let params = get_params(&mut r)?;
+            let payload = match kind {
+                KIND_IMAGE => {
+                    let width = r.u32()?;
+                    let height = r.u32()?;
+                    let pixels = r.bytes()?;
+                    if pixels.len() as u64 != u64::from(width) * u64::from(height) {
+                        return Err(WireError::BadValue("image pixel count"));
+                    }
+                    SubmitPayload::Image { width, height, pixels }
+                }
+                KIND_VOLUME => {
+                    let width = r.u32()?;
+                    let height = r.u32()?;
+                    let depth = r.u32()?;
+                    let voxels = r.bytes()?;
+                    let expect = u64::from(width) * u64::from(height) * u64::from(depth);
+                    if voxels.len() as u64 != expect {
+                        return Err(WireError::BadValue("volume voxel count"));
+                    }
+                    SubmitPayload::Volume { width, height, depth, voxels }
+                }
+                KIND_STREAM => {
+                    let input = r.string()?;
+                    let mask = match r.u8()? {
+                        0 => None,
+                        1 => Some(r.string()?),
+                        _ => return Err(WireError::BadValue("mask flag")),
+                    };
+                    let output = r.string()?;
+                    let tile_slices = r.u32()?;
+                    let prefetch = match r.u8()? {
+                        0 => false,
+                        1 => true,
+                        _ => return Err(WireError::BadValue("prefetch flag")),
+                    };
+                    SubmitPayload::Stream { input, mask, output, tile_slices, prefetch }
+                }
+                _ => return Err(WireError::BadValue("submit kind")),
+            };
+            Request::Submit(SubmitJob { engine, priority, params, payload })
+        }
+        TAG_STATUS => Request::Status { id: r.u64()? },
+        TAG_FETCH => Request::Fetch { id: r.u64()? },
+        TAG_METRICS => Request::Metrics,
+        TAG_SHUTDOWN => Request::Shutdown,
+        t => return Err(WireError::UnknownTag(t)),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+/// Encode a reply into one frame payload (tag + body).
+pub fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let mut w = Vec::new();
+    match reply {
+        Reply::Pong => put_u8(&mut w, TAG_PONG),
+        Reply::Submitted { id } => {
+            put_u8(&mut w, TAG_SUBMITTED);
+            put_u64(&mut w, *id);
+        }
+        Reply::Status { id, state } => {
+            put_u8(&mut w, TAG_STATUS_REPLY);
+            put_u64(&mut w, *id);
+            put_u8(&mut w, state.as_u8());
+        }
+        Reply::Result(res) => {
+            put_u8(&mut w, TAG_RESULT);
+            put_u64(&mut w, res.id);
+            put_bytes(&mut w, &res.labels);
+            put_u32(&mut w, res.centers.len() as u32);
+            for c in &res.centers {
+                put_f32(&mut w, *c);
+            }
+            put_u32(&mut w, res.iterations);
+            put_u8(&mut w, u8::from(res.converged));
+            put_u8(&mut w, res.engine.index() as u8);
+            put_u8(&mut w, u8::from(res.cached));
+            put_u32(&mut w, res.shape.0);
+            put_u32(&mut w, res.shape.1);
+            put_u32(&mut w, res.shape.2);
+            put_u32(&mut w, res.clusters);
+            put_f64(&mut w, res.queue_wait_s);
+            put_f64(&mut w, res.service_s);
+        }
+        Reply::Metrics { prometheus } => {
+            put_u8(&mut w, TAG_METRICS_REPLY);
+            put_str(&mut w, prometheus);
+        }
+        Reply::ShutdownAck => put_u8(&mut w, TAG_SHUTDOWN_ACK),
+        Reply::Error { code, message } => {
+            put_u8(&mut w, TAG_ERROR);
+            put_u8(&mut w, code.as_u8());
+            put_str(&mut w, message);
+        }
+    }
+    w
+}
+
+/// Decode one frame payload into a reply.
+pub fn decode_reply(buf: &[u8]) -> Result<Reply, WireError> {
+    let mut r = Reader::new(buf);
+    let reply = match r.u8()? {
+        TAG_PONG => Reply::Pong,
+        TAG_SUBMITTED => Reply::Submitted { id: r.u64()? },
+        TAG_STATUS_REPLY => Reply::Status {
+            id: r.u64()?,
+            state: JobState::from_u8(r.u8()?)?,
+        },
+        TAG_RESULT => {
+            let id = r.u64()?;
+            let labels = r.bytes()?;
+            let n = r.u32()? as usize;
+            // Bounds-check before reserving: a hostile count cannot
+            // allocate past the frame it arrived in.
+            if n > buf.len() / 4 {
+                return Err(WireError::BadValue("center count"));
+            }
+            let mut centers = Vec::with_capacity(n);
+            for _ in 0..n {
+                centers.push(r.f32()?);
+            }
+            Reply::Result(Box::new(WireResult {
+                id,
+                labels,
+                centers,
+                iterations: r.u32()?,
+                converged: r.u8()? != 0,
+                engine: engine_from_u8(r.u8()?)?,
+                cached: r.u8()? != 0,
+                shape: (r.u32()?, r.u32()?, r.u32()?),
+                clusters: r.u32()?,
+                queue_wait_s: r.f64()?,
+                service_s: r.f64()?,
+            }))
+        }
+        TAG_METRICS_REPLY => Reply::Metrics { prometheus: r.string()? },
+        TAG_SHUTDOWN_ACK => Reply::ShutdownAck,
+        TAG_ERROR => Reply::Error {
+            code: ErrorCode::from_u8(r.u8()?)?,
+            message: r.string()?,
+        },
+        t => return Err(WireError::UnknownTag(t)),
+    };
+    r.finish()?;
+    Ok(reply)
+}
+
+// ---- frame I/O ----
+
+/// Write one frame (length prefix + payload). Returns the total bytes
+/// put on the wire.
+pub fn write_frame(w: &mut impl std::io::Write, payload: &[u8]) -> std::io::Result<u64> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, WireError::Oversized {
+            declared: u32::MAX,
+        })
+    })?;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            WireError::Oversized { declared: len },
+        ));
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(4 + payload.len() as u64)
+}
+
+/// Read one frame's payload. `Ok(None)` on a clean EOF at a frame
+/// boundary (the peer closed between requests); an EOF *inside* a frame
+/// — mid-length or mid-payload — is an `UnexpectedEof` error, and a
+/// declared length beyond [`MAX_FRAME`] is rejected (`InvalidData`
+/// wrapping [`WireError::Oversized`]) before any allocation.
+pub fn read_frame(r: &mut impl std::io::Read) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    // First byte distinguishes clean close from mid-frame disconnect.
+    match r.read(&mut len_buf[..1])? {
+        0 => return Ok(None),
+        _ => r.read_exact(&mut len_buf[1..])?,
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            WireError::Oversized { declared: len },
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let enc = encode_request(&req);
+        assert_eq!(decode_request(&enc).unwrap(), req, "request round-trip");
+    }
+
+    fn roundtrip_reply(reply: Reply) {
+        let enc = encode_reply(&reply);
+        assert_eq!(decode_reply(&enc).unwrap(), reply, "reply round-trip");
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_request(Request::Ping);
+        roundtrip_request(Request::Status { id: 42 });
+        roundtrip_request(Request::Fetch { id: u64::MAX });
+        roundtrip_request(Request::Metrics);
+        roundtrip_request(Request::Shutdown);
+        roundtrip_request(Request::Submit(SubmitJob {
+            engine: Engine::Histogram,
+            priority: Priority::High,
+            params: FcmParams { clusters: 3, m: 2.5, epsilon: 1e-3, max_iters: 77, seed: 9 },
+            payload: SubmitPayload::Image { width: 2, height: 3, pixels: vec![1, 2, 3, 4, 5, 6] },
+        }));
+        roundtrip_request(Request::Submit(SubmitJob {
+            engine: Engine::Parallel,
+            priority: Priority::Low,
+            params: FcmParams::default(),
+            payload: SubmitPayload::Volume {
+                width: 2,
+                height: 2,
+                depth: 2,
+                voxels: vec![0; 8],
+            },
+        }));
+        roundtrip_request(Request::Submit(SubmitJob {
+            engine: Engine::Spatial,
+            priority: Priority::Normal,
+            params: FcmParams::default(),
+            payload: SubmitPayload::Stream {
+                input: "/data/in#3.rvol".into(),
+                mask: Some("/data/mask.rvol".into()),
+                output: "/data/out.rvol".into(),
+                tile_slices: 8,
+                prefetch: true,
+            },
+        }));
+        // Maskless stream too (exercises the 0 flag).
+        roundtrip_request(Request::Submit(SubmitJob {
+            engine: Engine::Sequential,
+            priority: Priority::Normal,
+            params: FcmParams::default(),
+            payload: SubmitPayload::Stream {
+                input: "in.rvol".into(),
+                mask: None,
+                output: "out.rvol".into(),
+                tile_slices: 1,
+                prefetch: false,
+            },
+        }));
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        roundtrip_reply(Reply::Pong);
+        roundtrip_reply(Reply::Submitted { id: 7 });
+        for state in [JobState::Pending, JobState::Done, JobState::Failed] {
+            roundtrip_reply(Reply::Status { id: 1, state });
+        }
+        roundtrip_reply(Reply::Result(Box::new(WireResult {
+            id: 3,
+            labels: vec![0, 1, 2, 1],
+            centers: vec![10.0, 100.0, 200.0],
+            iterations: 25,
+            converged: true,
+            engine: Engine::Histogram,
+            cached: false,
+            shape: (2, 2, 1),
+            clusters: 3,
+            queue_wait_s: 0.125,
+            service_s: 1.5,
+        })));
+        roundtrip_reply(Reply::Metrics { prometheus: "repro_x 1\n".into() });
+        roundtrip_reply(Reply::ShutdownAck);
+        for code in ErrorCode::ALL {
+            roundtrip_reply(Reply::Error { code, message: format!("why {code:?}") });
+        }
+    }
+
+    #[test]
+    fn error_codes_are_distinct_and_roundtrip() {
+        let mut seen = std::collections::HashSet::new();
+        for code in ErrorCode::ALL {
+            assert!(seen.insert(code.as_u8()), "duplicate wire byte for {code:?}");
+            assert_eq!(ErrorCode::from_u8(code.as_u8()).unwrap(), code);
+        }
+        assert!(ErrorCode::from_u8(0).is_err());
+        assert!(ErrorCode::from_u8(200).is_err());
+    }
+
+    #[test]
+    fn taxonomy_maps_to_distinct_codes() {
+        use crate::coordinator::{Interrupted, Rejected};
+        let rejected = anyhow::Error::new(Rejected { would_exceed: 2, budget: 1 });
+        let cancelled = anyhow::Error::new(Interrupted::Cancelled);
+        let deadline = anyhow::Error::new(Interrupted::DeadlineExceeded);
+        let closed = anyhow::anyhow!("service is shut down");
+        let other = anyhow::anyhow!("disk on fire");
+        assert_eq!(error_code_for(&rejected), ErrorCode::AdmissionRejected);
+        assert_eq!(error_code_for(&cancelled), ErrorCode::Cancelled);
+        assert_eq!(error_code_for(&deadline), ErrorCode::DeadlineExceeded);
+        assert_eq!(error_code_for(&closed), ErrorCode::QueueRefused);
+        assert_eq!(error_code_for(&other), ErrorCode::Internal);
+        // Context-wrapped taxonomy errors still classify (downcast walks
+        // the chain).
+        let wrapped = anyhow::Error::new(Interrupted::DeadlineExceeded).context("while serving");
+        assert_eq!(error_code_for(&wrapped), ErrorCode::DeadlineExceeded);
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_errors() {
+        // Empty payload: no tag.
+        assert!(matches!(decode_request(&[]), Err(WireError::Truncated { .. })));
+        // Unknown tags, both directions.
+        assert_eq!(decode_request(&[0x70]), Err(WireError::UnknownTag(0x70)));
+        assert_eq!(decode_reply(&[0x02]), Err(WireError::UnknownTag(0x02)));
+        // Truncated fixed header (status id cut short).
+        let mut enc = encode_request(&Request::Status { id: 77 });
+        enc.truncate(5);
+        assert!(matches!(decode_request(&enc), Err(WireError::Truncated { .. })));
+        // Trailing garbage after a complete message.
+        let mut enc = encode_request(&Request::Ping);
+        enc.push(0xAB);
+        assert_eq!(decode_request(&enc), Err(WireError::TrailingBytes(1)));
+        // Bad enum bytes.
+        let mut enc = encode_request(&Request::Submit(SubmitJob {
+            engine: Engine::Parallel,
+            priority: Priority::Normal,
+            params: FcmParams::default(),
+            payload: SubmitPayload::Image { width: 1, height: 1, pixels: vec![0] },
+        }));
+        enc[2] = 99; // engine byte
+        assert_eq!(decode_request(&enc), Err(WireError::BadValue("engine")));
+        // Shape/byte-count mismatch.
+        let mut w = Vec::new();
+        w.push(0x02); // submit
+        w.push(0); // image
+        w.push(Engine::Parallel.index() as u8);
+        w.push(Priority::Normal.rank());
+        put_params(&mut w, &FcmParams::default());
+        put_u32(&mut w, 4); // width
+        put_u32(&mut w, 4); // height
+        put_bytes(&mut w, &[0u8; 3]); // but only 3 pixels
+        assert_eq!(decode_request(&w), Err(WireError::BadValue("image pixel count")));
+        // A declared byte-string length far past the payload end.
+        let mut w = Vec::new();
+        w.push(0x85); // metrics reply
+        put_u32(&mut w, u32::MAX); // string "length"
+        assert!(matches!(decode_reply(&w), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn frame_io_roundtrips_and_rejects_oversize() {
+        let payload = encode_request(&Request::Status { id: 5 });
+        let mut wire = Vec::new();
+        let n = write_frame(&mut wire, &payload).unwrap();
+        assert_eq!(n as usize, wire.len());
+        assert_eq!(&wire[..4], &(payload.len() as u32).to_le_bytes());
+        let mut cursor = &wire[..];
+        let got = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(got, payload);
+        // Clean EOF at a boundary is None, not an error.
+        assert_eq!(read_frame(&mut cursor).unwrap(), None);
+        // Oversized declared length is rejected before allocation.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let err = read_frame(&mut &bad[..]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // Mid-frame EOF (truncated length, truncated payload) errors.
+        let err = read_frame(&mut &wire[..2]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        let err = read_frame(&mut &wire[..6]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        // Writing an oversized payload is refused up front.
+        let huge = vec![0u8; MAX_FRAME as usize + 1];
+        assert!(write_frame(&mut Vec::new(), &huge).is_err());
+    }
+}

@@ -1,0 +1,549 @@
+//! TCP front door: accept loop, per-connection handlers, and the
+//! retained-result store that makes fetch-after-completion work.
+//!
+//! Threading shape (DESIGN.md "Wire protocol & connection backpressure"):
+//! one acceptor thread, one handler thread per connection, one collector
+//! thread per submitted job. A handler processes exactly one request at
+//! a time; a submit that lands on a full service queue **blocks the
+//! handler** inside [`crate::coordinator::Service`]'s bounded-queue
+//! push — that block is the remote client's backpressure, byte-for-byte
+//! the same mechanism an in-process caller gets. No frames are buffered
+//! ahead of the service: a blocked handler simply stops reading its
+//! socket, and TCP flow control pushes the wait back to the client.
+//!
+//! Graceful shutdown (triggered by a wire `Shutdown` request or by the
+//! host calling [`Server::shutdown`]): stop accepting, nudge every
+//! open connection's read side closed so handlers finish their
+//! in-flight request and exit on EOF, join handlers, let the collectors
+//! drain (workers keep serving until the service itself shuts down),
+//! then run [`crate::coordinator::Service::shutdown`] and hand the
+//! final [`Snapshot`] back for the usual metrics exposition.
+
+use super::protocol::{
+    decode_request, encode_reply, error_code_for, read_frame, write_frame, ErrorCode, JobState,
+    Reply, Request, SubmitJob, SubmitPayload, WireResult,
+};
+use crate::coordinator::{JobResult, Service, Snapshot, Ticket};
+use crate::fcm::FcmParams;
+use crate::image::{FeatureVector, GrayImage, VoxelVolume};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a completed job's result stays fetchable. Completed entries
+/// past this age are purged opportunistically (on every store touch), so
+/// a fire-and-forget submitter cannot grow the map without bound.
+pub const DEFAULT_RESULT_TTL: Duration = Duration::from_secs(600);
+
+/// Lifecycle of one retained job entry.
+enum EntryState {
+    Pending,
+    Done(Box<WireResult>),
+    Failed { code: ErrorCode, message: String },
+}
+
+struct Entry {
+    state: EntryState,
+    /// When the job reached a terminal state — the TTL clock. `None`
+    /// while pending (pending entries never age out; their collector
+    /// always resolves them).
+    done_at: Option<Instant>,
+    /// Raster dimensions captured at submit time. [`JobResult`] carries
+    /// no shape, but a fetching client needs one to render labels to
+    /// the same RVOL bytes the in-process CLI writes.
+    shape: (u32, u32, u32),
+    clusters: u32,
+}
+
+/// What a fetch/status lookup found.
+enum Fetched {
+    Missing,
+    Pending,
+    Done(Box<WireResult>),
+    Failed { code: ErrorCode, message: String },
+}
+
+/// Retained results keyed by job id, with a TTL on terminal entries.
+struct ResultStore {
+    entries: Mutex<HashMap<u64, Entry>>,
+    ttl: Duration,
+}
+
+impl ResultStore {
+    fn new(ttl: Duration) -> ResultStore {
+        ResultStore { entries: Mutex::new(HashMap::new()), ttl }
+    }
+
+    /// Drop terminal entries older than the TTL. Called under the lock
+    /// on every touch — the map is bounded by in-flight jobs plus one
+    /// TTL window of completions, so the sweep stays cheap.
+    fn purge(&self, entries: &mut HashMap<u64, Entry>, now: Instant) {
+        entries.retain(|_, e| match e.done_at {
+            Some(at) => now.duration_since(at) < self.ttl,
+            None => true,
+        });
+    }
+
+    fn insert_pending(&self, id: u64, shape: (u32, u32, u32), clusters: u32) {
+        let mut g = self.entries.lock().unwrap();
+        let now = Instant::now();
+        self.purge(&mut g, now);
+        g.insert(id, Entry { state: EntryState::Pending, done_at: None, shape, clusters });
+    }
+
+    fn complete(&self, id: u64, res: JobResult) {
+        let mut g = self.entries.lock().unwrap();
+        let Some(e) = g.get_mut(&id) else { return };
+        let wire = WireResult {
+            id,
+            labels: res.labels,
+            centers: res.centers,
+            iterations: res.iterations as u32,
+            converged: res.converged,
+            engine: res.engine,
+            cached: res.cached,
+            shape: e.shape,
+            clusters: e.clusters,
+            queue_wait_s: res.queue_wait_s,
+            service_s: res.service_s,
+        };
+        e.state = EntryState::Done(Box::new(wire));
+        e.done_at = Some(Instant::now());
+    }
+
+    fn fail(&self, id: u64, code: ErrorCode, message: String) {
+        let mut g = self.entries.lock().unwrap();
+        let Some(e) = g.get_mut(&id) else { return };
+        e.state = EntryState::Failed { code, message };
+        e.done_at = Some(Instant::now());
+    }
+
+    /// Look up an entry. Done results are **cloned out and retained**
+    /// (until the TTL), so a fetch can be repeated — a dropped reply
+    /// frame does not orphan the result.
+    fn get(&self, id: u64) -> Fetched {
+        let mut g = self.entries.lock().unwrap();
+        let now = Instant::now();
+        self.purge(&mut g, now);
+        match g.get(&id) {
+            None => Fetched::Missing,
+            Some(e) => match &e.state {
+                EntryState::Pending => Fetched::Pending,
+                EntryState::Done(r) => Fetched::Done(r.clone()),
+                EntryState::Failed { code, message } => {
+                    Fetched::Failed { code: *code, message: message.clone() }
+                }
+            },
+        }
+    }
+}
+
+/// State shared by the acceptor, every handler, and every collector.
+struct Shared {
+    service: Arc<Service>,
+    store: ResultStore,
+    /// Read-side clones of every live connection, for the shutdown
+    /// nudge. Keyed by a per-connection id so handlers deregister
+    /// exactly their own entry.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    collectors: Mutex<Vec<JoinHandle<()>>>,
+    stopping: AtomicBool,
+    /// Set by a wire `Shutdown` request; the host blocks on this in
+    /// [`Server::wait_for_shutdown_request`].
+    shutdown_requested: (Mutex<bool>, Condvar),
+    max_connections: usize,
+}
+
+impl Shared {
+    fn metrics(&self) -> &crate::coordinator::Metrics {
+        &self.service.metrics
+    }
+
+    /// Spawn the collector that parks on the ticket and records the
+    /// job's terminal state in the store.
+    fn spawn_collector(self: &Arc<Self>, id: u64, ticket: Ticket) {
+        let shared = Arc::clone(self);
+        let h = std::thread::Builder::new()
+            .name(format!("net-collect-{id}"))
+            .spawn(move || match ticket.wait() {
+                Ok(res) => shared.store.complete(id, res),
+                Err(e) => shared.store.fail(id, error_code_for(&e), format!("{e:#}")),
+            })
+            .expect("spawning collector");
+        self.collectors.lock().unwrap().push(h);
+    }
+
+    /// Serve one decoded non-submit request. Infallible by
+    /// construction: every failure becomes a typed [`Reply::Error`].
+    /// (Submits go through [`Shared::submit_and_collect`] in the
+    /// handler loop, which also spawns the job's collector.)
+    fn process(self: &Arc<Self>, req: Request) -> Reply {
+        match req {
+            Request::Ping => Reply::Pong,
+            Request::Submit(_) => Reply::Error {
+                code: ErrorCode::Internal,
+                message: "submit routed past the collector path".into(),
+            },
+            Request::Status { id } => match self.store.get(id) {
+                Fetched::Missing => Reply::Error {
+                    code: ErrorCode::NotFound,
+                    message: format!("no job {id} (never submitted, or its result aged out)"),
+                },
+                Fetched::Pending => Reply::Status { id, state: JobState::Pending },
+                Fetched::Done(_) => Reply::Status { id, state: JobState::Done },
+                Fetched::Failed { .. } => Reply::Status { id, state: JobState::Failed },
+            },
+            Request::Fetch { id } => match self.store.get(id) {
+                Fetched::Missing => Reply::Error {
+                    code: ErrorCode::NotFound,
+                    message: format!("no job {id} (never submitted, or its result aged out)"),
+                },
+                Fetched::Pending => Reply::Error {
+                    code: ErrorCode::NotReady,
+                    message: format!("job {id} is still pending; poll status"),
+                },
+                Fetched::Done(r) => Reply::Result(r),
+                Fetched::Failed { code, message } => Reply::Error { code, message },
+            },
+            Request::Metrics => Reply::Metrics {
+                prometheus: self.service.metrics.snapshot().to_prometheus(),
+            },
+            Request::Shutdown => {
+                let (flag, cv) = &self.shutdown_requested;
+                *flag.lock().unwrap() = true;
+                cv.notify_all();
+                Reply::ShutdownAck
+            }
+        }
+    }
+}
+
+impl Shared {
+    /// Submit one wire job onto the service, retain a pending store
+    /// entry for it (shape + clusters captured here — [`JobResult`]
+    /// carries neither), and spawn its collector. The `submit_*` call
+    /// is where a full service queue blocks — the handler, and through
+    /// TCP flow control the remote client, waits right here.
+    fn submit_and_collect(self: &Arc<Self>, job: SubmitJob) -> Result<u64> {
+        let SubmitJob { engine, priority, params, payload } = job;
+        let clusters = params.clusters as u32;
+        let (ticket, shape) = match payload {
+            SubmitPayload::Image { width, height, pixels } => {
+                let img = GrayImage::from_pixels(width as usize, height as usize, pixels);
+                let t = self.service.submit_with_priority(
+                    FeatureVector::from_image(&img),
+                    params,
+                    engine,
+                    priority,
+                )?;
+                (t, (width, height, 1))
+            }
+            SubmitPayload::Volume { width, height, depth, voxels } => {
+                let vol = VoxelVolume::from_voxels(
+                    width as usize,
+                    height as usize,
+                    depth as usize,
+                    voxels,
+                );
+                let t = self.service.submit_volume_with_priority(vol, params, engine, priority)?;
+                (t, (width, height, depth))
+            }
+            SubmitPayload::Stream { input, mask, output, tile_slices, prefetch } => {
+                let spec = crate::coordinator::StreamVolumeJob {
+                    input: input.into(),
+                    mask: mask.map(Into::into),
+                    output: output.into(),
+                    tile_slices: tile_slices as usize,
+                    prefetch,
+                    fault: None,
+                };
+                let t = self.service.submit_volume_streamed_with_priority(
+                    spec, params, engine, priority,
+                )?;
+                (t, (0, 0, 0))
+            }
+        };
+        let id = ticket.id;
+        self.store.insert_pending(id, shape, clusters);
+        self.spawn_collector(id, ticket);
+        Ok(id)
+    }
+}
+
+/// One connection's serve loop: read frame → decode → process → reply,
+/// strictly one request in flight. Exits on clean EOF, on any socket
+/// error, or when shutdown closes the read side under it.
+fn handle_conn(shared: Arc<Shared>, mut stream: TcpStream, conn_id: u64) {
+    shared.metrics().net_connection();
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => break, // clean close at a frame boundary
+            Err(_) => {
+                // Mid-frame disconnect, oversized declared length, or
+                // the shutdown nudge. Count it as a wire error unless
+                // we are the ones tearing the connection down.
+                if !shared.stopping.load(Ordering::SeqCst) {
+                    shared.metrics().net_error();
+                }
+                break;
+            }
+        };
+        shared.metrics().net_frame_in(4 + payload.len() as u64);
+        let reply = match decode_request(&payload) {
+            Ok(Request::Submit(job)) => match shared.submit_and_collect(job) {
+                Ok(id) => Reply::Submitted { id },
+                Err(e) => {
+                    shared.metrics().net_error();
+                    Reply::Error { code: error_code_for(&e), message: format!("{e:#}") }
+                }
+            },
+            Ok(req) => shared.process(req),
+            Err(e) => {
+                shared.metrics().net_error();
+                Reply::Error { code: ErrorCode::BadRequest, message: e.to_string() }
+            }
+        };
+        let shutting_down = matches!(reply, Reply::ShutdownAck);
+        match write_frame(&mut stream, &encode_reply(&reply)) {
+            Ok(n) => shared.metrics().net_frame_out(n),
+            Err(_) => {
+                shared.metrics().net_error();
+                break;
+            }
+        }
+        if shutting_down {
+            break;
+        }
+    }
+    shared.conns.lock().unwrap().remove(&conn_id);
+}
+
+/// The running TCP server. Construct with [`Server::bind`]; tear down
+/// with [`Server::shutdown`], which drains everything and returns the
+/// service's final metrics snapshot.
+pub struct Server {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port — read it back via
+    /// [`Server::local_addr`]) and start accepting, serving jobs on
+    /// `service`. Results are retained for [`DEFAULT_RESULT_TTL`].
+    pub fn bind(service: Arc<Service>, addr: &str, max_connections: usize) -> Result<Server> {
+        Server::bind_with_retention(service, addr, max_connections, DEFAULT_RESULT_TTL)
+    }
+
+    /// [`Server::bind`] with an explicit result-retention TTL (tests
+    /// shrink it to observe expiry).
+    pub fn bind_with_retention(
+        service: Arc<Service>,
+        addr: &str,
+        max_connections: usize,
+        ttl: Duration,
+    ) -> Result<Server> {
+        anyhow::ensure!(max_connections >= 1, "max_connections must be >= 1");
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            service,
+            store: ResultStore::new(ttl),
+            conns: Mutex::new(HashMap::new()),
+            collectors: Mutex::new(Vec::new()),
+            stopping: AtomicBool::new(false),
+            shutdown_requested: (Mutex::new(false), Condvar::new()),
+            max_connections,
+        });
+        let handlers = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            let handlers = Arc::clone(&handlers);
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, shared, handlers))
+                .expect("spawning acceptor")
+        };
+        Ok(Server { shared, local_addr, acceptor: Some(acceptor), handlers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Block until some client sends a wire `Shutdown` request. The
+    /// serve CLI parks here, then runs [`Server::shutdown`].
+    pub fn wait_for_shutdown_request(&self) {
+        let (flag, cv) = &self.shared.shutdown_requested;
+        let mut g = flag.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    /// Has a wire `Shutdown` request arrived? (Non-blocking peek, for
+    /// hosts that interleave the wait with periodic work.)
+    pub fn shutdown_requested(&self) -> bool {
+        *self.shared.shutdown_requested.0.lock().unwrap()
+    }
+
+    /// Graceful teardown: stop accepting, nudge open connections closed
+    /// (handlers finish their in-flight request — a reply mid-write is
+    /// never cut), join handlers, drain the per-job collectors, then
+    /// shut the service itself down and return its final snapshot.
+    pub fn shutdown(mut self) -> Result<Snapshot> {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway self-connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.acceptor.take() {
+            a.join().map_err(|_| anyhow!("acceptor panicked"))?;
+        }
+        // Close the read side of every live connection: each handler
+        // finishes the request it is processing, writes its reply, then
+        // sees EOF and exits.
+        for (_, conn) in self.shared.conns.lock().unwrap().iter() {
+            let _ = conn.shutdown(Shutdown::Read);
+        }
+        let handlers = std::mem::take(&mut *self.handlers.lock().unwrap());
+        for h in handlers {
+            let _ = h.join();
+        }
+        // Collectors resolve as the still-running workers finish each
+        // submitted job; joining them is the in-flight drain.
+        let collectors = std::mem::take(&mut *self.shared.collectors.lock().unwrap());
+        for c in collectors {
+            let _ = c.join();
+        }
+        let Server { shared, .. } = self;
+        let shared = Arc::try_unwrap(shared)
+            .map_err(|_| anyhow!("connection state still referenced after drain"))?;
+        let service = Arc::try_unwrap(shared.service)
+            .map_err(|_| anyhow!("service still referenced after drain"))?;
+        Ok(service.shutdown())
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut next_conn_id: u64 = 0;
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(_) => {
+                if shared.stopping.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.stopping.load(Ordering::SeqCst) {
+            break; // the self-connect wake (or a late client) — drop it
+        }
+        // Connection cap: answer with a typed error and close, rather
+        // than silently dropping (a client can tell limit from outage).
+        if shared.conns.lock().unwrap().len() >= shared.max_connections {
+            shared.metrics().net_error();
+            let reply = Reply::Error {
+                code: ErrorCode::TooManyConnections,
+                message: format!("server is at its {}-connection limit", shared.max_connections),
+            };
+            let mut stream = stream;
+            if let Ok(n) = write_frame(&mut stream, &encode_reply(&reply)) {
+                shared.metrics().net_frame_out(n);
+            }
+            continue;
+        }
+        let conn_id = next_conn_id;
+        next_conn_id += 1;
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().unwrap().insert(conn_id, clone);
+        }
+        let shared2 = Arc::clone(&shared);
+        let h = std::thread::Builder::new()
+            .name(format!("net-conn-{conn_id}"))
+            .spawn(move || handle_conn(shared2, stream, conn_id))
+            .expect("spawning connection handler");
+        handlers.lock().unwrap().push(h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Engine;
+
+    fn done_result(id: u64) -> JobResult {
+        JobResult {
+            id,
+            labels: vec![0, 1],
+            centers: vec![1.0, 2.0],
+            iterations: 3,
+            converged: true,
+            engine: Engine::Parallel,
+            queue_wait_s: 0.0,
+            service_s: 0.1,
+            device: None,
+            worker: 0,
+            batch_id: 0,
+            peak_resident_bytes: None,
+            cached: false,
+        }
+    }
+
+    #[test]
+    fn store_lifecycle_pending_done_fetchable_repeatedly() {
+        let store = ResultStore::new(Duration::from_secs(60));
+        assert!(matches!(store.get(7), Fetched::Missing));
+        store.insert_pending(7, (2, 1, 1), 2);
+        assert!(matches!(store.get(7), Fetched::Pending));
+        store.complete(7, done_result(7));
+        // Fetch twice: the entry is retained, not consumed.
+        for _ in 0..2 {
+            match store.get(7) {
+                Fetched::Done(r) => {
+                    assert_eq!(r.shape, (2, 1, 1));
+                    assert_eq!(r.clusters, 2);
+                    assert_eq!(r.labels, vec![0, 1]);
+                }
+                _ => panic!("expected Done"),
+            }
+        }
+    }
+
+    #[test]
+    fn store_records_failures_with_their_code() {
+        let store = ResultStore::new(Duration::from_secs(60));
+        store.insert_pending(1, (0, 0, 0), 2);
+        store.fail(1, ErrorCode::DeadlineExceeded, "job deadline exceeded".into());
+        match store.get(1) {
+            Fetched::Failed { code, message } => {
+                assert_eq!(code, ErrorCode::DeadlineExceeded);
+                assert!(message.contains("deadline"));
+            }
+            _ => panic!("expected Failed"),
+        }
+    }
+
+    #[test]
+    fn store_ttl_purges_terminal_entries_only() {
+        let store = ResultStore::new(Duration::from_millis(30));
+        store.insert_pending(1, (2, 1, 1), 2);
+        store.insert_pending(2, (2, 1, 1), 2);
+        store.complete(1, done_result(1));
+        std::thread::sleep(Duration::from_millis(60));
+        // The done entry aged out; the pending one never does.
+        assert!(matches!(store.get(1), Fetched::Missing));
+        assert!(matches!(store.get(2), Fetched::Pending));
+    }
+}

@@ -1,0 +1,498 @@
+//! Integration tests for the networked serving front door: protocol
+//! robustness (fuzz-shaped malformed-frame sweep), end-to-end byte
+//! identity with the in-process path, typed error-code round-trips,
+//! connection backpressure, result retention, and the drained
+//! accounting identity with remote submitters.
+
+use repro::config::Config;
+use repro::coordinator::{Engine, Service};
+use repro::fcm::FcmParams;
+use repro::image::{volume, VoxelVolume};
+use repro::net::protocol::{
+    decode_reply, encode_request, read_frame, write_frame, MAX_FRAME,
+};
+use repro::net::{Client, ErrorCode, JobState, RemoteError, Reply, Request, Server, SubmitJob, SubmitPayload};
+use repro::phantom::{generate_slice, generate_volume, PhantomConfig};
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("net_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg(workers: usize, queue_depth: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.service.workers = workers;
+    cfg.service.queue_depth = queue_depth;
+    cfg
+}
+
+/// Bind a server over a fresh service on an ephemeral port.
+fn start_server(cfg: &Config, max_connections: usize) -> (Server, String) {
+    let service = Arc::new(Service::start(cfg).unwrap());
+    let server = Server::bind(service, "127.0.0.1:0", max_connections).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn phantom_image_payload(seed: u64) -> SubmitPayload {
+    let s = generate_slice(&PhantomConfig { seed, ..PhantomConfig::default() });
+    SubmitPayload::Image {
+        width: s.image.width as u32,
+        height: s.image.height as u32,
+        pixels: s.image.pixels,
+    }
+}
+
+fn submit_job(engine: Engine, params: FcmParams, payload: SubmitPayload) -> SubmitJob {
+    SubmitJob { engine, priority: Default::default(), params, payload }
+}
+
+/// Quick params: converge fast on phantom data.
+fn quick_params() -> FcmParams {
+    FcmParams { clusters: 3, max_iters: 30, ..FcmParams::default() }
+}
+
+/// Slow params: epsilon 0 never converges, so the job runs its full
+/// iteration budget — the worker-occupying blocker.
+fn slow_params(iters: usize) -> FcmParams {
+    FcmParams { clusters: 3, epsilon: 0.0, max_iters: iters, ..FcmParams::default() }
+}
+
+#[test]
+fn ping_submit_status_fetch_roundtrip() {
+    let (server, addr) = start_server(&cfg(1, 8), 8);
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    let id = c
+        .submit(submit_job(Engine::Histogram, quick_params(), phantom_image_payload(1)))
+        .unwrap();
+    let res = c.wait(id, Duration::from_millis(20), Duration::from_secs(60)).unwrap();
+    assert_eq!(res.id, id);
+    assert_eq!(res.shape.2, 1, "image jobs report depth 1");
+    assert_eq!(res.clusters, 3);
+    assert_eq!(
+        res.labels.len(),
+        res.shape.0 as usize * res.shape.1 as usize,
+        "one label per pixel"
+    );
+    assert!(res.iterations > 0);
+    // Status after completion still answers (result retained).
+    assert_eq!(c.status(id).unwrap(), JobState::Done);
+    // Metrics exposition is fetchable over the wire and mentions the
+    // net counters.
+    let prom = c.metrics().unwrap();
+    assert!(prom.contains("repro_net_connections_total"));
+    assert!(prom.contains("repro_jobs_submitted_total"));
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.submitted, snap.completed + snap.failed + snap.cancelled);
+    assert!(snap.net_connections >= 1);
+    assert!(snap.net_frames > 0);
+    assert!(snap.net_bytes_in > 0 && snap.net_bytes_out > 0);
+}
+
+/// The acceptance pin: a volume submitted over TCP, fetched, and
+/// rendered client-side is byte-identical to the same job run fully
+/// in-process (same engine, same params, same rendering calls).
+#[test]
+fn remote_fetch_is_byte_identical_to_in_process() {
+    let dir = tmp_dir("identity");
+    let params = quick_params();
+    let pv = generate_volume(&PhantomConfig::default(), 88, 96, 1);
+    let vol = pv.to_voxel_volume();
+
+    // In-process run, rendered exactly as `segment-volume --out-raw`.
+    let local = dir.join("local.rvol");
+    {
+        let service = Service::start(&cfg(1, 8)).unwrap();
+        let t = service.submit_volume(vol.clone(), params, Engine::Histogram).unwrap();
+        let r = t.wait().unwrap();
+        let seg = VoxelVolume::from_labels(
+            vol.width,
+            vol.height,
+            vol.depth,
+            &r.labels,
+            params.clusters as u8,
+        );
+        volume::save_raw(&seg, &local).unwrap();
+        service.shutdown();
+    }
+
+    // Remote run: submit the same voxels over the wire, poll, fetch,
+    // render through the same calls.
+    let remote = dir.join("remote.rvol");
+    let (server, addr) = start_server(&cfg(1, 8), 8);
+    let mut c = Client::connect(&addr).unwrap();
+    let payload = SubmitPayload::Volume {
+        width: vol.width as u32,
+        height: vol.height as u32,
+        depth: vol.depth as u32,
+        voxels: vol.voxels.clone(),
+    };
+    let id = c.submit(submit_job(Engine::Histogram, params, payload)).unwrap();
+    let res = c.wait(id, Duration::from_millis(20), Duration::from_secs(120)).unwrap();
+    assert_eq!(
+        (res.shape.0 as usize, res.shape.1 as usize, res.shape.2 as usize),
+        (vol.width, vol.height, vol.depth)
+    );
+    let seg = VoxelVolume::from_labels(
+        vol.width,
+        vol.height,
+        vol.depth,
+        &res.labels,
+        res.clusters as u8,
+    );
+    volume::save_raw(&seg, &remote).unwrap();
+    server.shutdown().unwrap();
+
+    let a = std::fs::read(&local).unwrap();
+    let b = std::fs::read(&remote).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "remote fetch must render byte-identical output");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fuzz-shaped rejection sweep: truncated frames, oversized declared
+/// lengths, unknown tags, bad field values, trailing bytes, and
+/// mid-frame disconnects. The server must answer with typed errors or
+/// drop the one connection — and keep serving everyone else. No worker
+/// panics: a clean graceful shutdown still works afterwards.
+#[test]
+fn malformed_frames_never_take_the_server_down() {
+    let (server, addr) = start_server(&cfg(1, 8), 16);
+
+    // 1. Unknown tag: typed BadRequest reply on the same connection.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        write_frame(&mut s, &[0x42]).unwrap();
+        let payload = read_frame(&mut s).unwrap().unwrap();
+        match decode_reply(&payload).unwrap() {
+            Reply::Error { code, message } => {
+                assert_eq!(code, ErrorCode::BadRequest);
+                assert!(message.contains("unknown message tag"), "{message}");
+            }
+            r => panic!("expected error reply, got {r:?}"),
+        }
+    }
+
+    // 2. Trailing bytes after a complete message: typed BadRequest.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut payload = encode_request(&Request::Ping);
+        payload.extend_from_slice(&[1, 2, 3]);
+        write_frame(&mut s, &payload).unwrap();
+        let reply = decode_reply(&read_frame(&mut s).unwrap().unwrap()).unwrap();
+        assert!(matches!(reply, Reply::Error { code: ErrorCode::BadRequest, .. }));
+    }
+
+    // 3. Truncated body: tag says status but the id is cut short.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut enc = encode_request(&Request::Status { id: 1 });
+        enc.truncate(4);
+        write_frame(&mut s, &enc).unwrap();
+        let reply = decode_reply(&read_frame(&mut s).unwrap().unwrap()).unwrap();
+        assert!(matches!(reply, Reply::Error { code: ErrorCode::BadRequest, .. }));
+    }
+
+    // 4. Oversized declared length: the server refuses to allocate and
+    // drops the connection (read returns EOF/reset, not a 2 GiB buffer).
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&(MAX_FRAME + 1).to_le_bytes()).unwrap();
+        s.flush().unwrap();
+        assert!(
+            matches!(read_frame(&mut s), Ok(None) | Err(_)),
+            "connection should be dropped, not served"
+        );
+    }
+
+    // 5. Mid-frame disconnect: declare 100 bytes, send 10, hang up.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&100u32.to_le_bytes()).unwrap();
+        s.write_all(&[0u8; 10]).unwrap();
+        s.flush().unwrap();
+        drop(s);
+    }
+
+    // 6. Disconnect inside the length prefix itself.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&[7u8, 0]).unwrap();
+        s.flush().unwrap();
+        drop(s);
+    }
+
+    // 7. Bad field value inside a structurally-valid submit (engine
+    // byte out of range).
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut enc = encode_request(&Request::Submit(submit_job(
+            Engine::Parallel,
+            quick_params(),
+            SubmitPayload::Image { width: 1, height: 1, pixels: vec![7] },
+        )));
+        enc[2] = 250; // engine byte
+        write_frame(&mut s, &enc).unwrap();
+        let reply = decode_reply(&read_frame(&mut s).unwrap().unwrap()).unwrap();
+        assert!(matches!(reply, Reply::Error { code: ErrorCode::BadRequest, .. }));
+    }
+
+    // After the whole sweep the server still serves real work…
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    let id = c
+        .submit(submit_job(Engine::Parallel, quick_params(), phantom_image_payload(3)))
+        .unwrap();
+    c.wait(id, Duration::from_millis(20), Duration::from_secs(60)).unwrap();
+    // …and still shuts down gracefully (no worker died mid-sweep).
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.submitted, snap.completed + snap.failed + snap.cancelled);
+    assert_eq!(snap.completed, 1);
+    assert!(snap.net_errors > 0, "the sweep must have counted wire errors");
+}
+
+/// A client that submits into a full queue observes **backpressure**:
+/// the submit blocks until a slot frees, then succeeds. It never gets
+/// an error, and the server never buffers unboundedly.
+#[test]
+fn full_queue_blocks_the_submitter_instead_of_failing() {
+    // One worker, one queue slot: blocker executes, filler waits in the
+    // queue, the third submit must block inside the server handler.
+    let (server, addr) = start_server(&cfg(1, 1), 8);
+    let mut c = Client::connect(&addr).unwrap();
+    let blocker = c
+        .submit(submit_job(Engine::Sequential, slow_params(400), phantom_image_payload(10)))
+        .unwrap();
+    let filler = c
+        .submit(submit_job(Engine::Sequential, slow_params(400), phantom_image_payload(11)))
+        .unwrap();
+    let addr2 = addr.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        let mut c2 = Client::connect(&addr2).unwrap();
+        let r = c2.submit(submit_job(
+            Engine::Sequential,
+            slow_params(400),
+            phantom_image_payload(12),
+        ));
+        let _ = tx.send(());
+        r
+    });
+    // While the blocker occupies the worker and the filler the queue
+    // slot, the third submit must still be waiting — blocked, not
+    // bounced with an error.
+    assert!(
+        rx.recv_timeout(Duration::from_millis(120)).is_err(),
+        "submit into a full queue should block (backpressure), not return"
+    );
+    // It resolves once capacity frees up — successfully.
+    let third = h.join().unwrap().expect("blocked submit must eventually succeed");
+    let mut ids = vec![blocker, filler, third];
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 3, "three distinct job ids");
+    for id in ids {
+        c.wait(id, Duration::from_millis(20), Duration::from_secs(120)).unwrap();
+    }
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.submitted, snap.completed + snap.failed + snap.cancelled);
+}
+
+/// The serving-path error taxonomy round-trips as distinct codes.
+#[test]
+fn error_codes_roundtrip_distinctly() {
+    let dir = tmp_dir("codes");
+
+    // NotFound / NotReady.
+    {
+        let (server, addr) = start_server(&cfg(1, 8), 8);
+        let mut c = Client::connect(&addr).unwrap();
+        let e = c.fetch(99_999).unwrap_err();
+        assert_eq!(e.downcast_ref::<RemoteError>().unwrap().code, ErrorCode::NotFound);
+        let e = c.status(99_999).unwrap_err();
+        assert_eq!(e.downcast_ref::<RemoteError>().unwrap().code, ErrorCode::NotFound);
+        let id = c
+            .submit(submit_job(Engine::Sequential, slow_params(300), phantom_image_payload(20)))
+            .unwrap();
+        let e = c.fetch(id).unwrap_err();
+        assert_eq!(e.downcast_ref::<RemoteError>().unwrap().code, ErrorCode::NotReady);
+        c.wait(id, Duration::from_millis(20), Duration::from_secs(120)).unwrap();
+        server.shutdown().unwrap();
+    }
+
+    // AdmissionRejected: a streamed submit against a 1-byte resident
+    // budget is rejected with the typed code.
+    {
+        let input = dir.join("in.rvol");
+        let pv = generate_volume(&PhantomConfig::default(), 88, 92, 1);
+        volume::save_raw(&pv.to_voxel_volume(), &input).unwrap();
+        let mut c1 = cfg(1, 8);
+        c1.service.resident_budget_bytes = 1;
+        let (server, addr) = start_server(&c1, 8);
+        let mut c = Client::connect(&addr).unwrap();
+        let out = dir.join("out.rvol");
+        let e = c
+            .submit(submit_job(
+                Engine::Histogram,
+                quick_params(),
+                SubmitPayload::Stream {
+                    input: input.display().to_string(),
+                    mask: None,
+                    output: out.display().to_string(),
+                    tile_slices: 2,
+                    prefetch: false,
+                },
+            ))
+            .unwrap_err();
+        let remote = e.downcast_ref::<RemoteError>().unwrap();
+        assert_eq!(remote.code, ErrorCode::AdmissionRejected);
+        assert!(remote.message.contains("budget"), "{}", remote.message);
+        server.shutdown().unwrap();
+    }
+
+    // DeadlineExceeded: a 1 ms job timeout fires mid-run; the stored
+    // failure replays its typed code on fetch.
+    {
+        let mut c1 = cfg(1, 8);
+        c1.service.job_timeout_ms = 1;
+        let (server, addr) = start_server(&c1, 8);
+        let mut c = Client::connect(&addr).unwrap();
+        let id = c
+            .submit(submit_job(Engine::Sequential, slow_params(5_000), phantom_image_payload(21)))
+            .unwrap();
+        let e = c
+            .wait(id, Duration::from_millis(20), Duration::from_secs(120))
+            .unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<RemoteError>().unwrap().code,
+            ErrorCode::DeadlineExceeded
+        );
+        assert_eq!(c.status(id).unwrap(), JobState::Failed);
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.cancelled, 1, "deadline counts as cancelled, not failed");
+        assert_eq!(snap.submitted, snap.completed + snap.failed + snap.cancelled);
+    }
+
+    // TooManyConnections: past the cap, the server answers with the
+    // typed code and closes.
+    {
+        let (server, addr) = start_server(&cfg(1, 8), 1);
+        let mut first = Client::connect(&addr).unwrap();
+        first.ping().unwrap();
+        // Past the cap the server volunteers the error frame and closes;
+        // read it raw rather than racing a request against the close.
+        let mut second = TcpStream::connect(&addr).unwrap();
+        let payload = read_frame(&mut second).unwrap().expect("error frame before close");
+        match decode_reply(&payload).unwrap() {
+            Reply::Error { code, .. } => assert_eq!(code, ErrorCode::TooManyConnections),
+            r => panic!("expected error reply, got {r:?}"),
+        }
+        // The first connection is unaffected.
+        first.ping().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Completed results are retained for repeat fetches, and age out after
+/// the retention TTL.
+#[test]
+fn results_are_retained_then_expire() {
+    let service = Arc::new(Service::start(&cfg(1, 8)).unwrap());
+    let server = Server::bind_with_retention(
+        service,
+        "127.0.0.1:0",
+        8,
+        Duration::from_millis(150),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let id = c
+        .submit(submit_job(Engine::Histogram, quick_params(), phantom_image_payload(30)))
+        .unwrap();
+    let first = c.wait(id, Duration::from_millis(20), Duration::from_secs(60)).unwrap();
+    // Repeat fetch: identical bytes (retained, not consumed).
+    let second = c.fetch(id).unwrap();
+    assert_eq!(first.labels, second.labels);
+    assert_eq!(first.centers, second.centers);
+    std::thread::sleep(Duration::from_millis(300));
+    let e = c.fetch(id).unwrap_err();
+    assert_eq!(e.downcast_ref::<RemoteError>().unwrap().code, ErrorCode::NotFound);
+    server.shutdown().unwrap();
+}
+
+/// Soak: concurrent remote submitters (plus an in-process one sharing
+/// the same service) all complete, and the drained snapshot preserves
+/// the accounting identity `submitted == completed + failed +
+/// cancelled` with the net counters consistent.
+#[test]
+fn soak_accounting_identity_with_remote_submitters() {
+    const CLIENTS: usize = 4;
+    const JOBS_PER_CLIENT: usize = 6;
+    let service = Arc::new(Service::start(&cfg(2, 8)).unwrap());
+    let inproc = Arc::clone(&service);
+    let server = Server::bind(service, "127.0.0.1:0", 16).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let engines = [Engine::Sequential, Engine::Parallel, Engine::Histogram];
+    let threads: Vec<_> = (0..CLIENTS)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let mut done = 0usize;
+                for j in 0..JOBS_PER_CLIENT {
+                    let engine = engines[(t + j) % engines.len()];
+                    let id = c
+                        .submit(submit_job(
+                            engine,
+                            quick_params(),
+                            phantom_image_payload((t * 100 + j) as u64),
+                        ))
+                        .unwrap();
+                    let res =
+                        c.wait(id, Duration::from_millis(10), Duration::from_secs(120)).unwrap();
+                    assert!(!res.labels.is_empty());
+                    done += 1;
+                }
+                done
+            })
+        })
+        .collect();
+    // In-process submissions share the queue with the remote ones.
+    let mut local_done = 0usize;
+    for j in 0..JOBS_PER_CLIENT {
+        let s = generate_slice(&PhantomConfig { seed: 900 + j as u64, ..PhantomConfig::default() });
+        let t = inproc.submit_image(&s.image, quick_params(), Engine::Parallel).unwrap();
+        t.wait().unwrap();
+        local_done += 1;
+    }
+    drop(inproc); // the server must be the last Service holder at shutdown
+    let remote_done: usize = threads.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(remote_done, CLIENTS * JOBS_PER_CLIENT);
+
+    let snap = server.shutdown().unwrap();
+    assert_eq!(
+        snap.submitted,
+        snap.completed + snap.failed + snap.cancelled,
+        "drained accounting identity"
+    );
+    assert_eq!(snap.completed as usize, remote_done + local_done);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.net_connections >= CLIENTS as u64);
+    // Every request frame got exactly one reply frame, so the frame
+    // count is even and split across both directions.
+    assert!(snap.net_bytes_in > 0 && snap.net_bytes_out > 0);
+    assert_eq!(snap.net_errors, 0, "clean soak: no wire errors");
+}
